@@ -1,0 +1,79 @@
+//! kNN classification workload (paper §III-D / §IV): exact scan vs
+//! AccurateML across the compression-ratio × refinement-threshold grid,
+//! with the Fig.-4-style map-task breakdown.
+//!
+//!     cargo run --release --example knn_classification
+//!     AML_SCALE=small cargo run --release --example knn_classification
+
+use accurateml::approx::ProcessingMode;
+use accurateml::coordinator::{Scale, Workbench, WorkbenchConfig};
+use accurateml::util::table::{f, Table};
+
+fn main() -> accurateml::Result<()> {
+    let scale = std::env::var("AML_SCALE").unwrap_or_else(|_| "default".into());
+    let wb = Workbench::new(WorkbenchConfig::preset(Scale::parse(&scale)?))?;
+    println!(
+        "kNN workload: {} train points x {} dims, {} test points, {} partitions\n",
+        wb.knn_data.train.rows(),
+        wb.knn_data.train.cols(),
+        wb.knn_data.test.rows(),
+        wb.config.n_partitions
+    );
+
+    let exact = wb.run_knn(ProcessingMode::Exact, 5)?;
+    let basic_ms = exact.mean_task.compute_s() * 1e3;
+
+    let mut t = Table::new(
+        "kNN: exact vs AccurateML",
+        &[
+            "mode", "ratio", "eps", "accuracy", "loss_%", "reduction_x", "task_ms", "task_%_of_basic",
+        ],
+    );
+    t.row(vec![
+        "exact".into(),
+        "-".into(),
+        "-".into(),
+        f(exact.metric, 4),
+        "0.00".into(),
+        "1.00".into(),
+        f(basic_ms, 2),
+        "100.00".into(),
+    ]);
+    for &(r, eps) in &[(10.0, 0.01), (10.0, 0.05), (20.0, 0.05), (100.0, 0.01), (100.0, 0.05)] {
+        let run = wb.run_knn(
+            ProcessingMode::AccurateML {
+                compression_ratio: r,
+                refinement_threshold: eps,
+            },
+            5,
+        )?;
+        let task_ms = run.mean_task.compute_s() * 1e3;
+        t.row(vec![
+            "accurateml".into(),
+            f(r, 0),
+            f(eps, 2),
+            f(run.metric, 4),
+            f(((exact.metric - run.metric) / exact.metric).max(0.0) * 100.0, 2),
+            f(exact.sim_time_s / run.sim_time_s, 2),
+            f(task_ms, 2),
+            f(task_ms / basic_ms * 100.0, 2),
+        ]);
+    }
+    print!("{}", t.console());
+
+    // Fig-4-style breakdown for one configuration.
+    let run = wb.run_knn(
+        ProcessingMode::AccurateML {
+            compression_ratio: 10.0,
+            refinement_threshold: 0.05,
+        },
+        5,
+    )?;
+    let mt = &run.mean_task;
+    println!("\nmap-task breakdown at r=10, eps=0.05 (percent of basic task):");
+    println!("  1. grouping with LSH          {:>6.2}%", mt.lsh_s * 1e3 / basic_ms * 100.0);
+    println!("  2. information aggregation    {:>6.2}%", mt.aggregate_s * 1e3 / basic_ms * 100.0);
+    println!("  3. producing initial outputs  {:>6.2}%", mt.initial_s * 1e3 / basic_ms * 100.0);
+    println!("  4. refining with originals    {:>6.2}%", mt.refine_s * 1e3 / basic_ms * 100.0);
+    Ok(())
+}

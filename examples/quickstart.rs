@@ -1,0 +1,65 @@
+//! Quickstart: run one kNN classification job exactly, then with
+//! AccurateML's information-aggregation-based approximate processing,
+//! and compare time vs accuracy.
+//!
+//!     cargo run --release --example quickstart
+
+use std::sync::Arc;
+
+use accurateml::approx::ProcessingMode;
+use accurateml::apps::knn::{KnnConfig, KnnJob};
+use accurateml::coordinator::{Scale, Workbench};
+use accurateml::mapreduce::engine::Engine;
+use accurateml::runtime::backend::NativeBackend;
+
+fn main() -> accurateml::Result<()> {
+    // A workbench bundles synthetic datasets + engine + backend. The
+    // `default` preset generates a 160k-point labeled dataset (a few
+    // seconds); use Scale::Small for a sub-second demo.
+    let wb = Workbench::preset(Scale::Default)?;
+
+    // --- the high-level API -------------------------------------------------
+    let exact = wb.run_knn(ProcessingMode::Exact, 5)?;
+    let approx = wb.run_knn(
+        ProcessingMode::AccurateML {
+            compression_ratio: 10.0,    // 10 originals per aggregated point
+            refinement_threshold: 0.05, // refine top 5% of ranked buckets
+        },
+        5,
+    )?;
+    println!(
+        "exact      : accuracy {:.4}, simulated job time {:.4}s",
+        exact.metric, exact.sim_time_s
+    );
+    println!(
+        "accurateml : accuracy {:.4}, simulated job time {:.4}s ({:.1}x faster)",
+        approx.metric,
+        approx.sim_time_s,
+        exact.sim_time_s / approx.sim_time_s
+    );
+
+    // --- the low-level API (what the workbench does for you) ---------------
+    let engine = Engine::with_default_size();
+    let job = KnnJob::new(
+        KnnConfig {
+            k: 5,
+            n_partitions: 10,
+            mode: ProcessingMode::AccurateML {
+                compression_ratio: 20.0,
+                refinement_threshold: 0.1,
+            },
+            seed: 7,
+            ..Default::default()
+        },
+        Arc::clone(&wb.knn_data),
+        Arc::new(NativeBackend),
+    )?;
+    let report = engine.run(Arc::new(job))?;
+    println!(
+        "low-level  : accuracy {:.4}, {} map tasks, {} shuffle bytes",
+        report.output.accuracy,
+        report.metrics.tasks.len(),
+        report.metrics.shuffle_bytes
+    );
+    Ok(())
+}

@@ -1,0 +1,204 @@
+"""AOT compiler: lower every (graph, shape) variant to HLO text.
+
+This is the only Python entrypoint in the build; `make artifacts` runs it
+once and the Rust binary is self-contained afterwards.
+
+Interchange format is HLO *text*, not `.serialize()`d HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md). We lower stablehlo -> XlaComputation with
+return_tuple=True, so every artifact's output is a tuple the Rust side
+unpacks.
+
+Artifacts + manifest layout:
+
+  artifacts/
+    manifest.json                 — list of {name, kind, file, inputs,
+                                    outputs, params}; the Rust runtime's
+                                    registry (rust/src/runtime/manifest.rs)
+                                    is generated FROM this file at load
+                                    time, so the two sides cannot drift.
+    knn_scores_q64_n2048_d64_k5.hlo.txt
+    ...
+
+Shape variants are listed in SPECS below; `--spec small|default|paper`
+selects a family (tests use `small` to keep pytest fast). Shapes are the
+padding targets the Rust side pads batches to — see model.py's padding
+contract.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def _st(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def knn_scores_spec(q, n, d, k):
+    """kNN scoring artifact: distances + top-k fused."""
+    name = f"knn_scores_q{q}_n{n}_d{d}_k{k}"
+    fn = lambda qq, xx: model.knn_scores(qq, xx, k=k)
+    args = (_st((q, d)), _st((n, d)))
+    return {
+        "name": name,
+        "kind": "knn_scores",
+        "inputs": [["q", [q, d], "f32"], ["x", [n, d], "f32"]],
+        "outputs": [["dists", [q, k], "f32"], ["indices", [q, k], "i32"]],
+        "params": {"q": q, "n": n, "d": d, "k": k},
+        "fn": fn,
+        "args": args,
+    }
+
+
+def knn_dists_spec(q, n, d):
+    """Full distance-matrix artifact (correlation estimation stage)."""
+    name = f"knn_dists_q{q}_n{n}_d{d}"
+    return {
+        "name": name,
+        "kind": "knn_dists",
+        "inputs": [["q", [q, d], "f32"], ["x", [n, d], "f32"]],
+        "outputs": [["dists", [q, n], "f32"]],
+        "params": {"q": q, "n": n, "d": d},
+        "fn": model.knn_dists,
+        "args": (_st((q, d)), _st((n, d))),
+    }
+
+
+def cf_weights_spec(a, n, m):
+    name = f"cf_weights_a{a}_n{n}_m{m}"
+    return {
+        "name": name,
+        "kind": "cf_weights",
+        "inputs": [
+            ["ca", [a, m], "f32"],
+            ["ma", [a, m], "f32"],
+            ["cu", [n, m], "f32"],
+            ["mu", [n, m], "f32"],
+        ],
+        "outputs": [["weights", [a, n], "f32"]],
+        "params": {"a": a, "n": n, "m": m},
+        "fn": model.cf_weights,
+        "args": (_st((a, m)), _st((a, m)), _st((n, m)), _st((n, m))),
+    }
+
+
+def cf_predict_spec(a, n, m):
+    name = f"cf_predict_a{a}_n{n}_m{m}"
+    return {
+        "name": name,
+        "kind": "cf_predict",
+        "inputs": [
+            ["w", [a, n], "f32"],
+            ["cn", [n, m], "f32"],
+            ["mn", [n, m], "f32"],
+            ["means", [a], "f32"],
+        ],
+        "outputs": [["preds", [a, m], "f32"]],
+        "params": {"a": a, "n": n, "m": m},
+        "fn": model.cf_predict,
+        "args": (_st((a, n)), _st((n, m)), _st((n, m)), _st((a,))),
+    }
+
+
+# Shape families. `default` matches the bench datasets in rust/src/data/
+# (d=64 gaussian mixture, m=512 rating matrix); `small` keeps pytest and
+# cargo integration tests fast; `paper` adds the mfeat-factors d=217
+# shape for the headline experiment.
+SPECS = {
+    "small": [
+        knn_scores_spec(16, 256, 16, 5),
+        knn_dists_spec(16, 256, 16),
+        cf_weights_spec(8, 128, 256),
+        cf_predict_spec(8, 128, 256),
+    ],
+    "default": [
+        knn_scores_spec(64, 2048, 64, 5),
+        knn_scores_spec(64, 2048, 64, 10),
+        knn_scores_spec(64, 2048, 64, 20),
+        knn_scores_spec(64, 2048, 64, 50),
+        knn_dists_spec(64, 2048, 64),
+        cf_weights_spec(32, 512, 2048),
+        cf_predict_spec(32, 512, 2048),
+    ],
+    "paper": [
+        knn_scores_spec(64, 2048, 217, 5),
+        knn_dists_spec(64, 2048, 217),
+    ],
+}
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def build(out_dir: str, families) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for fam in families:
+        for spec in SPECS[fam]:
+            fname = spec["name"] + ".hlo.txt"
+            path = os.path.join(out_dir, fname)
+            lowered = jax.jit(spec["fn"]).lower(*spec["args"])
+            text = to_hlo_text(lowered)
+            with open(path, "w") as f:
+                f.write(text)
+            entries.append(
+                {
+                    "name": spec["name"],
+                    "kind": spec["kind"],
+                    "file": fname,
+                    "inputs": spec["inputs"],
+                    "outputs": spec["outputs"],
+                    "params": spec["params"],
+                    "sha256": hashlib.sha256(text.encode()).hexdigest(),
+                }
+            )
+            print(f"  {fname}  ({len(text)} chars)")
+    manifest = {
+        "format": 1,
+        "jax_version": jax.__version__,
+        "pad_coord": model.PAD_COORD,
+        "artifacts": entries,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out", default="../artifacts", help="output directory")
+    p.add_argument(
+        "--spec",
+        default="small,default",
+        help="comma-separated shape families: small,default,paper",
+    )
+    args = p.parse_args()
+    families = [s for s in args.spec.split(",") if s]
+    for fam in families:
+        if fam not in SPECS:
+            raise SystemExit(f"unknown spec family {fam!r}; have {list(SPECS)}")
+    manifest = build(args.out, families)
+    print(f"wrote {len(manifest['artifacts'])} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

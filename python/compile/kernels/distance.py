@@ -1,0 +1,113 @@
+"""L1 Pallas kernel: tiled pairwise squared Euclidean distance.
+
+This is the compute hot-spot of the kNN map task (paper §III-D): every map
+task scores a batch of test points against its partition of training points
+(original or aggregated). AccurateML's correlation estimate for a bucket is
+the *negative* distance between its aggregated point and the test point
+(paper Definition 4 discussion), so the same kernel serves both the
+stage-1 initial pass and the stage-2 refinement pass of Algorithm 1.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper ran this as
+a scalar scan on CPU Spark workers. For the MXU we rewrite the distance via
+the norm expansion
+
+    ||q - x||^2 = ||q||^2 + ||x||^2 - 2 <q, x>
+
+so the dominant term is a (block_q, d) @ (d, block_n) matmul that maps onto
+the systolic array, with the two rank-1 norm corrections fused in the same
+kernel instance. The grid tiles (Q, N); the feature dimension d is kept
+whole inside a tile — for the shapes this repo ships (d <= 256, fp32) one
+instance touches
+
+    block_q*d + block_n*d + block_q*block_n   floats
+
+e.g. 64*217 + 256*217 + 64*256 = 85.9k floats ~ 344 KiB, comfortably inside
+a TPU core's ~16 MiB VMEM even with double buffering. MXU utilization
+estimates per block shape are recorded in DESIGN.md §Perf.
+
+Kernels must be lowered with interpret=True in this environment (CPU PJRT
+cannot execute Mosaic custom-calls); the BlockSpec structure is still the
+one a real TPU lowering would use.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile sizes. block_n is the MXU-friendly lane dimension; block_q
+# is kept smaller because Q (test-point batch) is the short axis in the
+# paper's workloads (10k test points vs millions of training points).
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_N = 512
+
+
+def pick_block(dim, target):
+    """Largest divisor of `dim` that is <= `target`.
+
+    Keeps the kernel usable across the shape sweep in tests: the grid
+    must tile the array exactly, so for dims not divisible by the default
+    block we fall back to the largest block that does divide them.
+    """
+    b = min(dim, target)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _sq_dist_kernel(q_ref, x_ref, o_ref):
+    """One (block_q, block_n) tile of the distance matrix.
+
+    q_ref: (block_q, d) test-point tile
+    x_ref: (block_n, d) training-point tile
+    o_ref: (block_q, block_n) output tile
+    """
+    q = q_ref[...]
+    x = x_ref[...]
+    # MXU term: contract over the feature dimension in fp32.
+    cross = jax.lax.dot_general(
+        q,
+        x,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    q_norm = jnp.sum(q * q, axis=1, keepdims=True)  # (block_q, 1)
+    x_norm = jnp.sum(x * x, axis=1, keepdims=True).T  # (1, block_n)
+    # Clamp tiny negatives introduced by the expansion so downstream
+    # sqrt/ranking code never sees -1e-7-style distances.
+    o_ref[...] = jnp.maximum(q_norm + x_norm - 2.0 * cross, 0.0)
+
+
+@partial(jax.jit, static_argnames=("block_q", "block_n"))
+def pairwise_sq_dists(q, x, *, block_q=None, block_n=None):
+    """Squared Euclidean distances between every row of q and every row of x.
+
+    Args:
+      q: (Q, d) float32 — test points (Q must be a multiple of block_q).
+      x: (N, d) float32 — training or aggregated points (N a multiple of
+        block_n). Callers pad with +LARGE rows and mask on the Rust side.
+
+    Returns:
+      (Q, N) float32 squared distances.
+    """
+    Q, d = q.shape
+    N, d2 = x.shape
+    assert d == d2, f"feature dims differ: {d} vs {d2}"
+    block_q = pick_block(Q, DEFAULT_BLOCK_Q) if block_q is None else block_q
+    block_n = pick_block(N, DEFAULT_BLOCK_N) if block_n is None else block_n
+    assert Q % block_q == 0, f"Q={Q} not a multiple of block_q={block_q}"
+    assert N % block_n == 0, f"N={N} not a multiple of block_n={block_n}"
+
+    grid = (Q // block_q, N // block_n)
+    return pl.pallas_call(
+        _sq_dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Q, N), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(q, x)

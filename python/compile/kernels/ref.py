@@ -1,0 +1,79 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written
+with the most obvious jnp expression (no tiling, no algebraic rewrites
+beyond what defines the quantity). pytest sweeps shapes/dtypes with
+hypothesis and asserts allclose between kernel and oracle — this is the
+core correctness signal for L1 (see python/tests/test_kernels.py).
+"""
+
+import jax.numpy as jnp
+
+
+def sq_dists_ref(q, x):
+    """Squared Euclidean distances, direct (Q, N, d) broadcast form."""
+    diff = q[:, None, :] - x[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def center_ratings(r, mask):
+    """Center each user's ratings by their mean over rated items.
+
+    Args:
+      r: (U, m) raw ratings (arbitrary values where mask == 0).
+      mask: (U, m) 0/1 rating indicator.
+
+    Returns:
+      (centered, means): centered is (R - mean) * mask, zeroed where
+      unrated; means is the per-user mean over rated items (0 for users
+      with no ratings).
+    """
+    cnt = jnp.sum(mask, axis=1)
+    means = jnp.where(cnt > 0, jnp.sum(r * mask, axis=1) / jnp.maximum(cnt, 1.0), 0.0)
+    centered = (r - means[:, None]) * mask
+    return centered, means
+
+
+def pearson_ref(ca, ma, cu, mu, eps=1e-12):
+    """Masked Pearson weights, direct per-pair form.
+
+    w(u, v) = sum_co (r_u - r_bar_u)(r_v - r_bar_v)
+              / sqrt(sum_co (r_u - r_bar_u)^2 * sum_co (r_v - r_bar_v)^2)
+
+    where sums run over co-rated items. Inputs are pre-centered and
+    mask-zeroed (see center_ratings), so the co-rated restriction is the
+    other side's mask.
+    """
+    num = ca @ cu.T
+    den1 = (ca * ca) @ mu.T
+    den2 = ma @ (cu * cu).T
+    return num / jnp.sqrt(den1 * den2 + eps)
+
+
+def cf_predict_ref(w, cn, mn, user_means):
+    """User-based CF prediction (paper §III-D, Su & Khoshgoftaar form).
+
+    p(u, i) = r_bar_u + sum_v w(u,v) * (r_{v,i} - r_bar_v)
+                        / sum_v |w(u,v)| * rated(v, i)
+
+    Args:
+      w: (A, N) weights between active and training users.
+      cn: (N, m) centered mask-zeroed training ratings.
+      mn: (N, m) training rating masks.
+      user_means: (A,) active users' mean ratings.
+
+    Returns:
+      (A, m) predicted ratings (the active user's mean where no
+      neighbour rated the item).
+    """
+    num = w @ cn
+    den = jnp.abs(w) @ mn
+    adj = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+    return user_means[:, None] + adj
+
+
+def knn_topk_ref(dists, k):
+    """Indices and distances of the k smallest entries per row."""
+    idx = jnp.argsort(dists, axis=1)[:, :k]
+    vals = jnp.take_along_axis(dists, idx, axis=1)
+    return vals, idx

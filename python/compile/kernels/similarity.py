@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: tiled masked Pearson similarity for user-based CF.
+
+The CF map task (paper §III-D) computes the Pearson correlation weight
+w(u, v) between each active user u and every training user v *over the
+items both have rated*. With
+
+    C = (R - r_bar) * M        (ratings centered by per-user mean over
+                                rated items, zeroed where unrated)
+    M                          (0/1 rating mask)
+
+the co-rated Pearson weight factorizes into three matmuls of identical
+shape, which is exactly the MXU-shaped form we want (DESIGN.md
+§Hardware-Adaptation — the paper's scalar per-user scan becomes a blocked
+(block_a, m) @ (m, block_n) contraction):
+
+    num(u, v)  = sum_i C_u[i] * C_v[i]          = Ca @ Cu^T
+    den1(u, v) = sum_{i: v rated} C_u[i]^2      = (Ca*Ca) @ Mu^T
+    den2(u, v) = sum_{i: u rated} C_v[i]^2      = Ma @ (Cu*Cu)^T
+    w(u, v)    = num / sqrt(den1 * den2 + eps)
+
+All three contractions run over the full item dimension m inside one
+kernel instance; the grid tiles (active users, training users). VMEM per
+instance for the shipped shapes (block_a=32, block_n=128, m=1770, fp32):
+2*(32*1770) + 2*(128*1770) + 32*128 floats ~ 2.2 MiB — fine for 16 MiB
+VMEM with double buffering.
+
+Aggregated users (paper §III-B applied to CF): an aggregated user is the
+feature-wise mean of its bucket's rating rows, with the union mask; the
+same kernel scores them, so stage 1 of Algorithm 1 reuses this code path
+unchanged.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_A = 32
+DEFAULT_BLOCK_N = 128
+
+# Guard against 0/0 when two users share no co-rated items (num is then
+# also 0, so the weight correctly comes out 0).
+EPS = 1e-12
+
+
+def _pearson_kernel(ca_ref, ma_ref, cu_ref, mu_ref, o_ref):
+    """One (block_a, block_n) tile of the weight matrix."""
+    ca = ca_ref[...]
+    ma = ma_ref[...]
+    cu = cu_ref[...]
+    mu = mu_ref[...]
+
+    def contract(lhs, rhs):
+        return jax.lax.dot_general(
+            lhs,
+            rhs,
+            dimension_numbers=(((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+
+    num = contract(ca, cu)
+    den1 = contract(ca * ca, mu)
+    den2 = contract(ma, cu * cu)
+    o_ref[...] = num * jax.lax.rsqrt(den1 * den2 + EPS)
+
+
+@partial(jax.jit, static_argnames=("block_a", "block_n"))
+def pearson_weights(ca, ma, cu, mu, *, block_a=None, block_n=None):
+    """Masked Pearson weights between active users and training users.
+
+    Args:
+      ca: (A, m) float32 — centered, mask-zeroed ratings of active users.
+      ma: (A, m) float32 — 0/1 rating masks of active users.
+      cu: (N, m) float32 — centered, mask-zeroed ratings of training users
+        (or aggregated users).
+      mu: (N, m) float32 — 0/1 (or fractional, for aggregated users)
+        rating masks of training users.
+
+    Returns:
+      (A, N) float32 Pearson weights in [-1, 1].
+    """
+    from compile.kernels.distance import pick_block
+
+    A, m = ca.shape
+    N, m2 = cu.shape
+    assert m == m2, f"item dims differ: {m} vs {m2}"
+    assert ma.shape == (A, m) and mu.shape == (N, m)
+    block_a = pick_block(A, DEFAULT_BLOCK_A) if block_a is None else block_a
+    block_n = pick_block(N, DEFAULT_BLOCK_N) if block_n is None else block_n
+    assert A % block_a == 0, f"A={A} not a multiple of block_a={block_a}"
+    assert N % block_n == 0, f"N={N} not a multiple of block_n={block_n}"
+
+    grid = (A // block_a, N // block_n)
+    return pl.pallas_call(
+        _pearson_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_a, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_a, m), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, m), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n, m), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_a, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((A, N), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls.
+    )(ca, ma, cu, mu)

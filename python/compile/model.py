@@ -1,0 +1,84 @@
+"""L2: the JAX compute graphs the Rust map tasks execute.
+
+Each public function here is a jit-able graph over fixed shapes, calling
+the L1 Pallas kernels for its hot contraction. `aot.py` lowers every
+(graph, shape) variant listed in a spec to HLO text under artifacts/, and
+the Rust runtime (rust/src/runtime/) loads + executes them via PJRT.
+Python never runs on the request path.
+
+Graphs:
+  knn_scores    — stage-1/2 kNN scoring: pairwise squared distances
+                  between a padded batch of test points and a padded
+                  block of (aggregated or original) training points,
+                  fused with top-k selection so only (values, indices)
+                  cross the PJRT boundary instead of the full Q x N
+                  distance matrix (this is the shuffle-size story of the
+                  paper applied to the host<->device boundary).
+  knn_dists     — distances only; used by the correlation-estimation
+                  stage where the Rust side needs every bucket's score.
+  cf_weights    — masked Pearson weights (active x training users).
+  cf_predict    — weighted-average rating prediction from weights.
+
+Padding contract (mirrored in rust/src/runtime/pad.rs): callers pad the
+row dimension of each operand up to the artifact's static shape. For
+knn_* the padding training rows must be PAD_DISTANCE-far sentinels (the
+Rust side fills padded rows with PAD_COORD so their distance to any real
+point exceeds any real distance); padded test rows produce garbage rows
+the caller drops. For cf_* padded users have all-zero masks, which yield
+zero weights and contribute nothing to predictions.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.distance import pairwise_sq_dists
+from compile.kernels.similarity import pearson_weights
+
+# Coordinate used by the Rust side to pad training-point rows. With
+# features standardized to roughly [-10, 10], a row at 1e3 in every
+# dimension is farther than any real point can be.
+PAD_COORD = 1.0e3
+
+
+def knn_dists(q, x):
+    """(Q, d), (N, d) -> (Q, N) squared distances (kernel-backed)."""
+    return (pairwise_sq_dists(q, x),)
+
+
+def knn_scores(q, x, *, k):
+    """(Q, d), (N, d) -> ((Q, k) distances, (Q, k) int32 indices).
+
+    Distances of the k nearest rows of x for each row of q, ascending.
+
+    NOTE: deliberately sort-based rather than `jax.lax.top_k` — top_k
+    lowers to the `topk(..., largest=true)` HLO op, which the pinned
+    xla_extension 0.5.1 text parser rejects; `argsort` lowers to the
+    classic `sort` op that round-trips fine (see DESIGN.md §AOT notes).
+    """
+    d = pairwise_sq_dists(q, x)
+    idx = jnp.argsort(d, axis=1)[:, :k]
+    vals = jnp.take_along_axis(d, idx, axis=1)
+    return (vals, idx.astype(jnp.int32))
+
+
+def cf_weights(ca, ma, cu, mu):
+    """(A, m) x4 -> (A, N) Pearson weights (kernel-backed)."""
+    return (pearson_weights(ca, ma, cu, mu),)
+
+
+def cf_predict(w, cn, mn, means):
+    """Weighted-average prediction from precomputed weights.
+
+    Args:
+      w: (A, N) weights.
+      cn: (N, m) centered mask-zeroed training ratings.
+      mn: (N, m) training masks.
+      means: (A,) active-user mean ratings.
+
+    Returns:
+      ((A, m) predictions,)
+    """
+    num = w @ cn
+    den = jnp.abs(w) @ mn
+    adj = jnp.where(den > 0, num / jnp.maximum(den, 1e-12), 0.0)
+    return (means[:, None] + adj,)

@@ -1,0 +1,72 @@
+"""AOT compiler: artifact emission + manifest integrity + parser
+compatibility with the pinned xla_extension 0.5.1."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = aot.build(str(out), ["small"])
+    return out, manifest
+
+
+def test_manifest_lists_all_files(built):
+    out, manifest = built
+    assert manifest["format"] == 1
+    assert manifest["pad_coord"] > 100.0
+    names = {e["name"] for e in manifest["artifacts"]}
+    assert len(names) == len(manifest["artifacts"]), "duplicate artifact names"
+    for e in manifest["artifacts"]:
+        path = os.path.join(out, e["file"])
+        assert os.path.exists(path), e["file"]
+        text = open(path).read()
+        assert text.startswith("HloModule"), f"{e['file']} not HLO text"
+
+
+def test_manifest_json_is_valid_and_typed(built):
+    out, _ = built
+    m = json.load(open(os.path.join(out, "manifest.json")))
+    for e in m["artifacts"]:
+        assert e["kind"] in {"knn_scores", "knn_dists", "cf_weights", "cf_predict"}
+        for name, shape, dtype in e["inputs"] + e["outputs"]:
+            assert isinstance(name, str)
+            assert all(isinstance(d, int) and d > 0 for d in shape)
+            assert dtype in {"f32", "i32"}
+
+
+def test_no_unparseable_ops_emitted(built):
+    """xla_extension 0.5.1's HLO text parser rejects newer ops (topk,
+    ragged ops). Guard the whole artifact family against regressions."""
+    out, manifest = built
+    banned = (" topk(", " ragged-", " composite-call")
+    for e in manifest["artifacts"]:
+        text = open(os.path.join(out, e["file"])).read()
+        for op in banned:
+            assert op not in text, f"{e['file']} contains {op.strip()}"
+
+
+def test_shapes_in_manifest_match_params(built):
+    _, manifest = built
+    for e in manifest["artifacts"]:
+        p = e["params"]
+        if e["kind"] == "knn_scores":
+            assert e["inputs"][0][1] == [p["q"], p["d"]]
+            assert e["inputs"][1][1] == [p["n"], p["d"]]
+            assert e["outputs"][0][1] == [p["q"], p["k"]]
+        if e["kind"] == "cf_weights":
+            assert e["inputs"][0][1] == [p["a"], p["m"]]
+            assert e["outputs"][0][1] == [p["a"], p["n"]]
+
+
+def test_build_is_deterministic(built, tmp_path):
+    out, manifest = built
+    again = aot.build(str(tmp_path), ["small"])
+    a = {e["name"]: e["sha256"] for e in manifest["artifacts"]}
+    b = {e["name"]: e["sha256"] for e in again["artifacts"]}
+    assert a == b

@@ -1,0 +1,142 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and value scales) and asserts allclose between
+the tiled kernels and `ref.py` — the core correctness signal for the
+compute hot-spot. Runs under interpret=True (CPU), which executes the
+same BlockSpec schedule a TPU lowering would use.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.distance import pairwise_sq_dists, pick_block
+from compile.kernels.similarity import pearson_weights
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------------------
+# distance kernel
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    q=st.integers(1, 96),
+    n=st.integers(1, 300),
+    d=st.integers(1, 80),
+    scale=st.sampled_from([0.1, 1.0, 10.0]),
+)
+def test_sq_dists_matches_ref(q, n, d, scale):
+    qm = rand(q * 7 + n, (q, d), scale)
+    xm = rand(n * 13 + d, (n, d), scale)
+    got = pairwise_sq_dists(qm, xm)
+    want = ref.sq_dists_ref(qm, xm)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3 * scale * scale)
+
+
+def test_sq_dists_identity_is_zero():
+    x = rand(3, (32, 16))
+    d = pairwise_sq_dists(x, x)
+    np.testing.assert_allclose(jnp.diag(d), jnp.zeros(32), atol=1e-3)
+
+
+def test_sq_dists_nonnegative_despite_expansion():
+    # The norm expansion can produce tiny negatives; kernel clamps.
+    x = rand(5, (64, 8), 100.0)
+    d = pairwise_sq_dists(x, x)
+    assert float(d.min()) >= 0.0
+
+
+def test_sq_dists_explicit_blocks():
+    q = rand(11, (8, 4))
+    x = rand(12, (16, 4))
+    got = pairwise_sq_dists(q, x, block_q=4, block_n=8)
+    np.testing.assert_allclose(got, ref.sq_dists_ref(q, x), rtol=1e-4, atol=1e-4)
+
+
+def test_sq_dists_rejects_dim_mismatch():
+    with pytest.raises(AssertionError):
+        pairwise_sq_dists(jnp.zeros((4, 3)), jnp.zeros((4, 5)))
+
+
+@given(dim=st.integers(1, 5000), target=st.integers(1, 512))
+@settings(max_examples=50, deadline=None)
+def test_pick_block_divides(dim, target):
+    b = pick_block(dim, target)
+    assert 1 <= b <= min(dim, target)
+    assert dim % b == 0
+
+
+# ---------------------------------------------------------------------------
+# similarity kernel
+# ---------------------------------------------------------------------------
+
+
+def make_ratings(key, users, items, density=0.35):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(key))
+    r = jax.random.uniform(k1, (users, items), minval=1.0, maxval=5.0)
+    mask = (jax.random.uniform(k2, (users, items)) < density).astype(jnp.float32)
+    centered, means = ref.center_ratings(r, mask)
+    return centered, mask, means
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    a=st.integers(1, 48),
+    n=st.integers(1, 160),
+    m=st.integers(4, 96),
+    density=st.sampled_from([0.1, 0.4, 0.9]),
+)
+def test_pearson_matches_ref(a, n, m, density):
+    ca, ma, _ = make_ratings(a * 3 + 1, a, m, density)
+    cu, mu, _ = make_ratings(n * 5 + 2, n, m, density)
+    got = pearson_weights(ca, ma, cu, mu)
+    want = ref.pearson_ref(ca, ma, cu, mu)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+def test_pearson_self_correlation_is_one():
+    ca, ma, _ = make_ratings(7, 16, 32, 0.5)
+    w = pearson_weights(ca, ma, ca, ma)
+    diag = jnp.diag(w)
+    # Rows with >= 2 rated items self-correlate at 1.
+    counts = ma.sum(axis=1)
+    for i in range(16):
+        if counts[i] >= 2 and float(jnp.abs(ca[i]).max()) > 1e-3:
+            assert abs(float(diag[i]) - 1.0) < 1e-2, (i, float(diag[i]))
+
+
+def test_pearson_disjoint_masks_zero_weight():
+    m = 16
+    ca = jnp.ones((1, m)) * jnp.where(jnp.arange(m) < 8, 1.0, 0.0)
+    ma = (jnp.arange(m) < 8).astype(jnp.float32)[None, :]
+    cu = jnp.ones((1, m)) * jnp.where(jnp.arange(m) >= 8, 1.0, 0.0)
+    mu = (jnp.arange(m) >= 8).astype(jnp.float32)[None, :]
+    w = pearson_weights(ca, ma, cu, mu)
+    np.testing.assert_allclose(w, jnp.zeros((1, 1)), atol=1e-5)
+
+
+def test_pearson_bounded():
+    ca, ma, _ = make_ratings(9, 24, 48, 0.6)
+    cu, mu, _ = make_ratings(10, 40, 48, 0.6)
+    w = pearson_weights(ca, ma, cu, mu)
+    assert float(jnp.abs(w).max()) <= 1.0 + 1e-3
+
+
+def test_pearson_fractional_masks_supported():
+    # Aggregated users carry fractional masks; weights must stay finite
+    # and bounded.
+    ca, ma, _ = make_ratings(11, 8, 32, 0.5)
+    cu, mu, _ = make_ratings(12, 16, 32, 0.8)
+    mu = mu * 0.37
+    w = pearson_weights(ca, ma, cu, mu)
+    assert bool(jnp.isfinite(w).all())

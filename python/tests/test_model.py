@@ -1,0 +1,72 @@
+"""L2 correctness: model graphs vs oracles + the padding contract the
+Rust runtime relies on."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+@settings(max_examples=15, deadline=None)
+@given(q=st.integers(1, 40), n=st.integers(8, 200), k=st.integers(1, 8))
+def test_knn_scores_matches_ref(q, n, k):
+    k = min(k, n)
+    qm = rand(1 + q, (q, 12))
+    xm = rand(2 + n, (n, 12))
+    vals, idx = model.knn_scores(qm, xm, k=k)
+    dref = ref.sq_dists_ref(qm, xm)
+    vref, _ = ref.knn_topk_ref(dref, k)
+    np.testing.assert_allclose(vals, vref, rtol=1e-3, atol=1e-3)
+    # Indices must actually point at rows achieving those distances.
+    taken = jnp.take_along_axis(dref, idx.astype(jnp.int32), axis=1)
+    np.testing.assert_allclose(taken, vref, rtol=1e-3, atol=1e-3)
+
+
+def test_knn_dists_padding_contract():
+    # Rows padded at PAD_COORD must rank strictly behind any real row.
+    q = rand(3, (4, 8))
+    real = rand(4, (20, 8))
+    padded = jnp.concatenate([real, jnp.full((12, 8), model.PAD_COORD)], axis=0)
+    vals, idx = model.knn_scores(q, padded, k=5)
+    assert int(idx.max()) < 20, "padded row leaked into top-k"
+
+
+def test_cf_predict_matches_ref():
+    a, n, m = 6, 30, 40
+    r = jax.random.uniform(jax.random.PRNGKey(5), (n, m), minval=1, maxval=5)
+    mask = (jax.random.uniform(jax.random.PRNGKey(6), (n, m)) < 0.4).astype(jnp.float32)
+    cn, _ = ref.center_ratings(r, mask)
+    w = rand(7, (a, n), 0.5)
+    means = jnp.linspace(2.0, 4.0, a)
+    got = model.cf_predict(w, cn, mask, means)[0]
+    want = ref.cf_predict_ref(w, cn, mask, means)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_cf_weights_zero_mask_padding_contract():
+    # All-zero-mask (padded) users must produce zero weights.
+    a, m = 4, 32
+    ra = jax.random.uniform(jax.random.PRNGKey(8), (a, m), minval=1, maxval=5)
+    ma = (jax.random.uniform(jax.random.PRNGKey(9), (a, m)) < 0.5).astype(jnp.float32)
+    ca, _ = ref.center_ratings(ra, ma)
+    cu = jnp.zeros((8, m))
+    mu = jnp.zeros((8, m))
+    w = model.cf_weights(ca, ma, cu, mu)[0]
+    np.testing.assert_allclose(w, jnp.zeros((a, 8)), atol=1e-6)
+
+
+def test_graphs_are_jittable_with_static_shapes():
+    # The exact invocation pattern aot.py lowers.
+    spec = jax.ShapeDtypeStruct((16, 8), jnp.float32)
+    xspec = jax.ShapeDtypeStruct((64, 8), jnp.float32)
+    lowered = jax.jit(lambda q, x: model.knn_scores(q, x, k=3)).lower(spec, xspec)
+    assert "sort" in lowered.compiler_ir("stablehlo").operation.get_asm(large_elements_limit=16)

@@ -1,0 +1,196 @@
+//! Ablation studies on AccurateML's two design choices (DESIGN.md
+//! §Per-experiment index calls these out) plus the anytime-refinement
+//! trajectory and the k-means extension workload:
+//!
+//!  A. *Similarity grouping*: LSH buckets vs random groups of the same
+//!     size — does aggregating SIMILAR points matter, or is any
+//!     summarization enough?
+//!  B. *Accuracy-aware refinement*: correlation-ranked stage 2 vs
+//!     refining uniformly random buckets at the same budget.
+//!  C. *Refinement trajectory*: loss and compute as ε grows — Algorithm
+//!     1 is an anytime algorithm; this is its accuracy-time curve.
+//!  D. *k-means*: the extension application (aggregation reused across
+//!     Lloyd iterations).
+mod common;
+
+use std::sync::Arc;
+
+use accurateml::approx::algorithm1::RefineOrder;
+use accurateml::approx::ProcessingMode;
+use accurateml::apps::kmeans::{KmeansConfig, KmeansRunner};
+use accurateml::apps::knn::{KnnConfig, KnnJob};
+use accurateml::coordinator::Workbench;
+use accurateml::lsh::bucketizer::Grouping;
+use accurateml::mapreduce::engine::Engine;
+use accurateml::util::table::{f, Table};
+
+fn knn_accuracy(
+    wb: &Workbench,
+    mode: ProcessingMode,
+    grouping: Grouping,
+    refine_order: RefineOrder,
+) -> (f64, f64) {
+    let engine = Engine::with_default_size();
+    let job = KnnJob::new(
+        KnnConfig {
+            k: 5,
+            n_partitions: wb.config.n_partitions,
+            mode,
+            seed: wb.config.seed,
+            grouping,
+            refine_order,
+        },
+        Arc::clone(&wb.knn_data),
+        Arc::clone(&wb.backend),
+    )
+    .expect("job");
+    let report = engine.run(Arc::new(job)).expect("run");
+    (
+        report.output.accuracy,
+        report.metrics.total_map_compute_s(),
+    )
+}
+
+fn main() {
+    let wb = common::workbench();
+    let aml = ProcessingMode::AccurateML {
+        compression_ratio: 20.0,
+        refinement_threshold: 0.05,
+    };
+    let (exact_acc, exact_s) = knn_accuracy(
+        &wb,
+        ProcessingMode::Exact,
+        Grouping::Lsh,
+        RefineOrder::Correlation,
+    );
+
+    // A + B: 2x2 over grouping x refinement order.
+    let mut t = Table::new(
+        "Ablation A/B — kNN accuracy loss (r=20, eps=0.05)",
+        &["grouping", "refine_order", "accuracy", "loss_%"],
+    );
+    for (g, gname) in [(Grouping::Lsh, "lsh"), (Grouping::Random, "random")] {
+        for (o, oname) in [
+            (RefineOrder::Correlation, "correlation"),
+            (RefineOrder::Random, "random"),
+        ] {
+            let (acc, _) = knn_accuracy(&wb, aml, g, o);
+            t.row(vec![
+                gname.into(),
+                oname.into(),
+                f(acc, 4),
+                f(((exact_acc - acc) / exact_acc).max(0.0) * 100.0, 2),
+            ]);
+        }
+    }
+    common::emit("ablation_grouping_ranking", &t);
+
+    // C: anytime trajectory over eps.
+    let mut t = Table::new(
+        "Ablation C — refinement trajectory (r=20)",
+        &["eps", "accuracy", "loss_%", "map_compute_s", "compute_%_of_exact"],
+    );
+    for eps in [0.0, 0.02, 0.05, 0.1, 0.2, 0.4, 0.8] {
+        let mode = ProcessingMode::AccurateML {
+            compression_ratio: 20.0,
+            refinement_threshold: eps,
+        };
+        let (acc, secs) = knn_accuracy(&wb, mode, Grouping::Lsh, RefineOrder::Correlation);
+        t.row(vec![
+            f(eps, 2),
+            f(acc, 4),
+            f(((exact_acc - acc) / exact_acc).max(0.0) * 100.0, 2),
+            f(secs, 3),
+            f(secs / exact_s * 100.0, 1),
+        ]);
+    }
+    common::emit("ablation_trajectory", &t);
+
+    // D: k-means extension.
+    let engine = Engine::with_default_size();
+    let pts = Arc::new(wb.knn_data.train.clone());
+    let mut t = Table::new(
+        "Ablation D — k-means (16 clusters, 10 iterations)",
+        &["mode", "inertia", "loss_%", "map_compute_s"],
+    );
+    let base = KmeansConfig {
+        n_clusters: 16,
+        n_iterations: 10,
+        n_partitions: wb.config.n_partitions.min(20),
+        seed: wb.config.seed,
+        ..Default::default()
+    };
+    let (exact_km, em) = KmeansRunner::new(
+        KmeansConfig {
+            mode: ProcessingMode::Exact,
+            ..base.clone()
+        },
+        Arc::clone(&pts),
+    )
+    .unwrap()
+    .run(&engine)
+    .unwrap();
+    let modes = [
+        ProcessingMode::Exact,
+        ProcessingMode::AccurateML {
+            compression_ratio: 10.0,
+            refinement_threshold: 0.05,
+        },
+        ProcessingMode::AccurateML {
+            compression_ratio: 100.0,
+            refinement_threshold: 0.05,
+        },
+        ProcessingMode::Sampling { ratio: 0.1 },
+    ];
+    for mode in modes {
+        let (out, metrics) = KmeansRunner::new(
+            KmeansConfig {
+                mode,
+                ..base.clone()
+            },
+            Arc::clone(&pts),
+        )
+        .unwrap()
+        .run(&engine)
+        .unwrap();
+        let _ = &em;
+        t.row(vec![
+            mode.label(),
+            f(out.inertia, 4),
+            f(((out.inertia - exact_km.inertia) / exact_km.inertia).max(0.0) * 100.0, 2),
+            f(metrics.total_map_compute_s(), 3),
+        ]);
+    }
+    common::emit("ablation_kmeans", &t);
+
+    // E: online-aggregation trajectories (accuracy vs time, one pass
+    // per mode, with 95% confidence bounds).
+    let mut t = Table::new(
+        "Ablation E — online kNN trajectories (every 4th checkpoint)",
+        &["mode", "partitions", "sim_time_s", "accuracy", "ci_lo", "ci_hi"],
+    );
+    for (mode, label) in [
+        (ProcessingMode::Exact, "exact"),
+        (
+            ProcessingMode::AccurateML {
+                compression_ratio: 20.0,
+                refinement_threshold: 0.05,
+            },
+            "accurateml",
+        ),
+        (ProcessingMode::Sampling { ratio: 0.1 }, "sampling"),
+    ] {
+        let traj = accurateml::coordinator::online::online_knn(&wb, mode, 5).expect("online");
+        for cp in traj.iter().step_by(4).chain(traj.last().into_iter()) {
+            t.row(vec![
+                label.into(),
+                format!("{}", cp.partitions_done),
+                f(cp.sim_time_s, 4),
+                f(cp.metric, 4),
+                f(cp.ci_lo, 4),
+                f(cp.ci_hi, 4),
+            ]);
+        }
+    }
+    common::emit("ablation_online", &t);
+}

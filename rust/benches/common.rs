@@ -1,0 +1,34 @@
+#![allow(dead_code)]
+//! Shared bench plumbing: scale/backend from env, table emission.
+//!
+//! Benches are plain binaries (`harness = false`; criterion is not in
+//! this environment's registry). Control with env vars:
+//!   AML_SCALE=small|default|paper   (default: default)
+//!   AML_BACKEND=native|pjrt|auto    (default: native)
+//!   AML_GRID=quick|paper            (default: quick)
+//!   AML_REPORT_DIR=reports          (CSV output dir)
+
+use accurateml::coordinator::{figures, Scale, Workbench, WorkbenchConfig};
+use accurateml::util::table::Table;
+
+pub fn workbench() -> Workbench {
+    let scale = std::env::var("AML_SCALE").unwrap_or_else(|_| "default".into());
+    let mut cfg = WorkbenchConfig::preset(Scale::parse(&scale).expect("AML_SCALE"));
+    cfg.backend = std::env::var("AML_BACKEND").unwrap_or_else(|_| "native".into());
+    Workbench::new(cfg).expect("workbench")
+}
+
+pub fn grid() -> Vec<(f64, f64)> {
+    match std::env::var("AML_GRID").as_deref() {
+        Ok("paper") => figures::paper_grid(),
+        _ => figures::quick_grid(),
+    }
+}
+
+pub fn emit(name: &str, t: &Table) {
+    print!("{}", t.console());
+    let dir = std::env::var("AML_REPORT_DIR").unwrap_or_else(|_| "reports".into());
+    let path = format!("{dir}/{name}.csv");
+    t.write_csv(&path).expect("write csv");
+    println!("-> {path}\n");
+}

@@ -1,0 +1,8 @@
+//! Fig. 1: sampling accuracy loss vs execution-time reduction.
+mod common;
+use accurateml::coordinator::figures;
+
+fn main() {
+    let wb = common::workbench();
+    common::emit("fig1", &figures::fig1(&wb).expect("fig1"));
+}

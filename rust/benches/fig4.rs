@@ -1,0 +1,9 @@
+//! Fig. 4: map-task % computation-time breakdown.
+mod common;
+use accurateml::coordinator::figures;
+
+fn main() {
+    let wb = common::workbench();
+    let grid = common::grid();
+    common::emit("fig4", &figures::fig4(&wb, &grid).expect("fig4"));
+}

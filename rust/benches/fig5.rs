@@ -1,0 +1,9 @@
+//! Fig. 5: CF percentage shuffle cost.
+mod common;
+use accurateml::coordinator::figures;
+
+fn main() {
+    let wb = common::workbench();
+    let grid = common::grid();
+    common::emit("fig5", &figures::fig5(&wb, &grid).expect("fig5"));
+}

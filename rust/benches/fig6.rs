@@ -1,0 +1,14 @@
+//! Fig. 6: job execution-time reduction vs exact.
+mod common;
+use accurateml::coordinator::figures;
+
+fn main() {
+    let wb = common::workbench();
+    let grid = common::grid();
+    let t = figures::fig6(&wb, &grid).expect("fig6");
+    common::emit("fig6", &t);
+    println!(
+        "mean reduction: {:.2}x (paper: 12.40x kNN / 10.85x CF on their testbed)",
+        figures::column_mean(&t, "reduction_x")
+    );
+}

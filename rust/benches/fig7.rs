@@ -1,0 +1,14 @@
+//! Fig. 7: AccurateML accuracy losses.
+mod common;
+use accurateml::coordinator::figures;
+
+fn main() {
+    let wb = common::workbench();
+    let grid = common::grid();
+    let t = figures::fig7(&wb, &grid).expect("fig7");
+    common::emit("fig7", &t);
+    println!(
+        "mean loss: {:.2}% (paper bounds: <10% kNN / <4% CF)",
+        figures::column_mean(&t, "loss_%")
+    );
+}

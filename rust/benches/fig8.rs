@@ -1,0 +1,15 @@
+//! Fig. 8: equal-time AccurateML vs sampling.
+mod common;
+use accurateml::coordinator::figures;
+
+fn main() {
+    let wb = common::workbench();
+    let grid = common::grid();
+    let t = figures::fig8(&wb, &grid, 5).expect("fig8");
+    common::emit("fig8", &t);
+    println!(
+        "mean accml loss {:.2}% vs sampling {:.2}% (paper: 2.71x mean reduction)",
+        figures::column_mean(&t, "accml_loss_%"),
+        figures::column_mean(&t, "sampling_loss_%")
+    );
+}

@@ -1,0 +1,14 @@
+//! Fig. 9: kNN equal-time comparison across k (r = 10).
+mod common;
+use accurateml::coordinator::figures;
+
+fn main() {
+    let wb = common::workbench();
+    let t = figures::fig9(&wb, &[10, 20, 50], &[0.01, 0.05, 0.10]).expect("fig9");
+    common::emit("fig9", &t);
+    println!(
+        "mean accml loss {:.2}% vs sampling {:.2}% (paper: 1.91x mean reduction)",
+        figures::column_mean(&t, "accml_loss_%"),
+        figures::column_mean(&t, "sampling_loss_%")
+    );
+}

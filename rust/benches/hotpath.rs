@@ -1,0 +1,138 @@
+//! Hot-path micro-benchmarks: the three scoring contractions through
+//! the native backend and (when artifacts exist) the PJRT backend.
+//!
+//! This is the §Perf instrument — run before/after each optimization
+//! and record deltas in EXPERIMENTS.md. Shapes mirror what one map task
+//! actually scores at the default scale.
+//!
+//!     cargo bench --bench hotpath
+mod common;
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use accurateml::data::matrix::Matrix;
+use accurateml::lsh::Bucketizer;
+use accurateml::runtime::backend::{NativeBackend, PjrtBackend, ScoreBackend};
+use accurateml::runtime::service::PjrtService;
+use accurateml::util::rng::Rng;
+use accurateml::util::table::{f, Table};
+use accurateml::util::timer::{bench_fn, fmt_duration};
+
+fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for v in m.as_mut_slice() {
+        *v = rng.normal() as f32;
+    }
+    m
+}
+
+fn bench_backend(name: &str, be: &dyn ScoreBackend, t: &mut Table) {
+    let mut rng = Rng::new(42);
+    // One map task's exact kNN block at default scale: 640 test x 4000
+    // partition rows x 64 dims.
+    let q = rand_matrix(&mut rng, 640, 64);
+    let x = rand_matrix(&mut rng, 4000, 64);
+    let s = bench_fn(
+        || {
+            be.knn_block_topk(&q, &x, 5).unwrap();
+        },
+        1,
+        5,
+        Duration::from_millis(300),
+    );
+    let flops = 640.0 * 4000.0 * 64.0 * 3.0; // sub+mul+add per dim
+    t.row(vec![
+        name.into(),
+        "knn_topk 640x4000 d64".into(),
+        fmt_duration(s.p50),
+        f(flops / s.p50 / 1e9, 2),
+    ]);
+
+    // Stage-1 distances: 640 test x 400 centroids.
+    let c = rand_matrix(&mut rng, 400, 64);
+    let s = bench_fn(
+        || {
+            be.knn_dists(&q, &c).unwrap();
+        },
+        1,
+        5,
+        Duration::from_millis(300),
+    );
+    let flops = 640.0 * 400.0 * 64.0 * 3.0;
+    t.row(vec![
+        name.into(),
+        "knn_dists 640x400 d64".into(),
+        fmt_duration(s.p50),
+        f(flops / s.p50 / 1e9, 2),
+    ]);
+
+    // CF weights: 50 active x 1200 users x 2048 items (3 contractions).
+    let mk = |rng: &mut Rng, rows: usize, m: usize| {
+        let mut c = Matrix::zeros(rows, m);
+        let mut mask = Matrix::zeros(rows, m);
+        for r in 0..rows {
+            for i in 0..m {
+                if rng.chance(0.02) {
+                    mask.set(r, i, 1.0);
+                    c.set(r, i, rng.normal() as f32);
+                }
+            }
+        }
+        (c, mask)
+    };
+    let (ca, ma) = mk(&mut rng, 50, 2048);
+    let (cu, mu) = mk(&mut rng, 1200, 2048);
+    let s = bench_fn(
+        || {
+            be.cf_weights(&ca, &ma, &cu, &mu).unwrap();
+        },
+        1,
+        3,
+        Duration::from_millis(300),
+    );
+    let flops = 50.0 * 1200.0 * 2048.0 * 3.0 * 2.0;
+    t.row(vec![
+        name.into(),
+        "cf_weights 50x1200 m2048".into(),
+        fmt_duration(s.p50),
+        f(flops / s.p50 / 1e9, 2),
+    ]);
+}
+
+fn main() {
+    let mut t = Table::new(
+        "hot-path scoring kernels (p50)",
+        &["backend", "kernel", "p50", "GFLOP/s"],
+    );
+    bench_backend("native", &NativeBackend, &mut t);
+
+    let dir = std::path::PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        let svc = Arc::new(PjrtService::start(&dir).expect("pjrt service"));
+        svc.warmup_all().expect("warmup");
+        bench_backend("pjrt", &PjrtBackend::new(svc), &mut t);
+    } else {
+        eprintln!("(artifacts missing — PJRT rows skipped; run `make artifacts`)");
+    }
+
+    // LSH bucketizer (the map-task part-1 cost).
+    let mut rng = Rng::new(7);
+    let pts = rand_matrix(&mut rng, 4000, 64);
+    let s = bench_fn(
+        || {
+            Bucketizer::with_ratio(10.0, 1).bucketize(&pts).unwrap();
+        },
+        1,
+        5,
+        Duration::from_millis(300),
+    );
+    t.row(vec![
+        "native".into(),
+        "lsh_bucketize 4000 d64 r=10".into(),
+        fmt_duration(s.p50),
+        "-".into(),
+    ]);
+
+    common::emit("hotpath", &t);
+}

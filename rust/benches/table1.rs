@@ -1,0 +1,7 @@
+//! Regenerates Table I from the algorithm census.
+mod common;
+use accurateml::coordinator::figures;
+
+fn main() {
+    common::emit("table1", &figures::table1());
+}

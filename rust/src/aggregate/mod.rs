@@ -1,0 +1,283 @@
+//! Aggregated data points and index files (paper §III-B Step 2,
+//! Definition 3).
+//!
+//! Each LSH bucket collapses into one *aggregated data point* — the
+//! feature-wise mean of its members — and the *index file* records the
+//! bucket → original-rows mapping so stage 2 of Algorithm 1 can fetch
+//! the originals behind any aggregated point. Two variants:
+//!
+//! * [`AggregatedPoints`] for feature vectors (kNN): plain centroids,
+//!   plus the majority label of each bucket so the stage-1 initial
+//!   output can vote.
+//! * [`AggregatedUsers`] for rating rows (CF): per-item mean of the
+//!   raters in the bucket, with a *fractional mask* (share of bucket
+//!   members who rated the item) so the Pearson kernel weighs the
+//!   aggregated user by how much rating evidence it really carries.
+
+use crate::data::matrix::Matrix;
+use crate::data::ratings::RatingMatrix;
+use crate::error::{Error, Result};
+use crate::lsh::bucketizer::Bucketing;
+
+/// The index file: bucket → member original rows (local indices).
+pub type IndexFile = Vec<Vec<u32>>;
+
+/// Aggregated feature points for kNN-style workloads.
+#[derive(Clone, Debug)]
+pub struct AggregatedPoints {
+    /// One centroid per bucket (Definition 3's means).
+    pub centroids: Matrix,
+    /// Bucket → original rows.
+    pub index: IndexFile,
+    /// Majority class label per bucket (present when labels supplied).
+    pub labels: Vec<u32>,
+}
+
+impl AggregatedPoints {
+    /// Aggregate `points` (with per-row labels) according to a bucketing.
+    pub fn build(points: &Matrix, labels: &[u32], bucketing: &Bucketing) -> Result<AggregatedPoints> {
+        if labels.len() != points.rows() {
+            return Err(Error::Data(format!(
+                "labels {} != rows {}",
+                labels.len(),
+                points.rows()
+            )));
+        }
+        let k = bucketing.buckets.len();
+        let mut centroids = Matrix::zeros(k, points.cols());
+        let mut agg_labels = Vec::with_capacity(k);
+        for (b, members) in bucketing.buckets.iter().enumerate() {
+            let idx: Vec<usize> = members.iter().map(|&i| i as usize).collect();
+            let mean = points.mean_of_rows(&idx);
+            centroids.row_mut(b).copy_from_slice(&mean);
+            agg_labels.push(majority_label(labels, &idx));
+        }
+        Ok(AggregatedPoints {
+            centroids,
+            index: bucketing.buckets.clone(),
+            labels: agg_labels,
+        })
+    }
+
+    /// Number of aggregated points.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// True when no buckets exist.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Total original points represented.
+    pub fn total_originals(&self) -> usize {
+        self.index.iter().map(|b| b.len()).sum()
+    }
+}
+
+/// Majority label among `idx` rows (ties break to the smaller label, so
+/// results are deterministic).
+fn majority_label(labels: &[u32], idx: &[usize]) -> u32 {
+    let mut counts: std::collections::BTreeMap<u32, usize> = std::collections::BTreeMap::new();
+    for &i in idx {
+        *counts.entry(labels[i]).or_insert(0) += 1;
+    }
+    counts
+        .into_iter()
+        .max_by_key(|&(label, c)| (c, std::cmp::Reverse(label)))
+        .map(|(label, _)| label)
+        .unwrap_or(0)
+}
+
+/// Aggregated users for the CF workload.
+#[derive(Clone, Debug)]
+pub struct AggregatedUsers {
+    /// (buckets × items) mean rating among raters; 0 where none rated.
+    pub ratings: Matrix,
+    /// (buckets × items) fraction of bucket members who rated the item.
+    pub mask: Matrix,
+    /// Bucket → original user rows.
+    pub index: IndexFile,
+}
+
+impl AggregatedUsers {
+    /// Aggregate rating rows according to a bucketing over users.
+    pub fn build(matrix: &RatingMatrix, bucketing: &Bucketing) -> Result<AggregatedUsers> {
+        let m = matrix.n_items();
+        let k = bucketing.buckets.len();
+        let mut ratings = Matrix::zeros(k, m);
+        let mut mask = Matrix::zeros(k, m);
+        for (b, members) in bucketing.buckets.iter().enumerate() {
+            if members.is_empty() {
+                return Err(Error::Data(format!("bucket {b} is empty")));
+            }
+            let mut sum = vec![0.0f64; m];
+            let mut cnt = vec![0u32; m];
+            for &u in members {
+                let u = u as usize;
+                for &i in &matrix.rated[u] {
+                    sum[i as usize] += matrix.ratings.get(u, i as usize) as f64;
+                    cnt[i as usize] += 1;
+                }
+            }
+            let inv_members = 1.0 / members.len() as f32;
+            for i in 0..m {
+                if cnt[i] > 0 {
+                    ratings.set(b, i, (sum[i] / cnt[i] as f64) as f32);
+                    mask.set(b, i, cnt[i] as f32 * inv_members);
+                }
+            }
+        }
+        Ok(AggregatedUsers {
+            ratings,
+            mask,
+            index: bucketing.buckets.clone(),
+        })
+    }
+
+    /// Number of aggregated users.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    /// True when no buckets exist.
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Centered, mask-zeroed row for the Pearson kernel + the row mean.
+    /// The mean weights items by the fractional mask, mirroring
+    /// `RatingMatrix::centered_row` for original users.
+    pub fn centered_row(&self, b: usize) -> (Vec<f32>, f32) {
+        let m = self.ratings.cols();
+        let mut wsum = 0.0f64;
+        let mut wtot = 0.0f64;
+        for i in 0..m {
+            let w = self.mask.get(b, i) as f64;
+            if w > 0.0 {
+                wsum += w * self.ratings.get(b, i) as f64;
+                wtot += w;
+            }
+        }
+        let mean = if wtot > 0.0 { (wsum / wtot) as f32 } else { 0.0 };
+        let mut out = vec![0.0f32; m];
+        for i in 0..m {
+            if self.mask.get(b, i) > 0.0 {
+                out[i] = self.ratings.get(b, i) - mean;
+            }
+        }
+        (out, mean)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixtureSpec;
+    use crate::data::ratings::LatentFactorSpec;
+    use crate::lsh::Bucketizer;
+
+    #[test]
+    fn centroids_are_bucket_means() {
+        let pts = Matrix::from_vec(4, 2, vec![0., 0., 2., 2., 10., 10., 12., 12.]).unwrap();
+        let bucketing = Bucketing {
+            buckets: vec![vec![0, 1], vec![2, 3]],
+            w: 1.0,
+            achieved_ratio: 2.0,
+        };
+        let agg = AggregatedPoints::build(&pts, &[0, 0, 1, 1], &bucketing).unwrap();
+        assert_eq!(agg.centroids.row(0), &[1.0, 1.0]);
+        assert_eq!(agg.centroids.row(1), &[11.0, 11.0]);
+        assert_eq!(agg.labels, vec![0, 1]);
+    }
+
+    #[test]
+    fn majority_label_breaks_ties_low() {
+        assert_eq!(majority_label(&[1, 1, 2, 2], &[0, 1, 2, 3]), 1);
+        assert_eq!(majority_label(&[3, 2, 2], &[0, 1, 2]), 2);
+    }
+
+    #[test]
+    fn aggregation_preserves_global_mean() {
+        // Weighted mean of centroids == mean of all points (invariant of
+        // Definition 3).
+        let d = GaussianMixtureSpec {
+            n_points: 500,
+            dim: 6,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        let b = Bucketizer::with_ratio(10.0, 3).bucketize(&d.train).unwrap();
+        let agg = AggregatedPoints::build(&d.train, &d.train_labels, &b).unwrap();
+        let n = d.train.rows();
+        for j in 0..d.train.cols() {
+            let global: f64 = (0..n).map(|i| d.train.get(i, j) as f64).sum::<f64>() / n as f64;
+            let weighted: f64 = (0..agg.len())
+                .map(|bk| agg.centroids.get(bk, j) as f64 * agg.index[bk].len() as f64)
+                .sum::<f64>()
+                / n as f64;
+            assert!(
+                (global - weighted).abs() < 1e-4,
+                "col {j}: {global} vs {weighted}"
+            );
+        }
+        assert_eq!(agg.total_originals(), n);
+    }
+
+    #[test]
+    fn aggregated_users_masks_are_fractions() {
+        let m = LatentFactorSpec {
+            n_users: 60,
+            n_items: 32,
+            mean_ratings_per_user: 8,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        // Bucket users on their rating rows.
+        let b = Bucketizer::with_ratio(6.0, 4).bucketize(&m.ratings).unwrap();
+        let agg = AggregatedUsers::build(&m, &b).unwrap();
+        for bk in 0..agg.len() {
+            for i in 0..m.n_items() {
+                let w = agg.mask.get(bk, i);
+                assert!((0.0..=1.0).contains(&w));
+                if w > 0.0 {
+                    let r = agg.ratings.get(bk, i);
+                    assert!((1.0..=5.0).contains(&r), "agg rating {r}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn aggregated_user_rating_is_rater_mean() {
+        let m = RatingMatrix::from_triplets(
+            3,
+            2,
+            &[(0, 0, 2.0), (1, 0, 4.0), (2, 1, 5.0)],
+        )
+        .unwrap();
+        let bucketing = Bucketing {
+            buckets: vec![vec![0, 1, 2]],
+            w: 1.0,
+            achieved_ratio: 3.0,
+        };
+        let agg = AggregatedUsers::build(&m, &bucketing).unwrap();
+        assert_eq!(agg.ratings.get(0, 0), 3.0); // (2+4)/2
+        assert!((agg.mask.get(0, 0) - 2.0 / 3.0).abs() < 1e-6);
+        assert_eq!(agg.ratings.get(0, 1), 5.0);
+        assert!((agg.mask.get(0, 1) - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn label_count_validated() {
+        let pts = Matrix::zeros(3, 2);
+        let bucketing = Bucketing {
+            buckets: vec![vec![0, 1, 2]],
+            w: 1.0,
+            achieved_ratio: 3.0,
+        };
+        assert!(AggregatedPoints::build(&pts, &[0, 1], &bucketing).is_err());
+    }
+}

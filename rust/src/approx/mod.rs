@@ -1,0 +1,125 @@
+//! Approximate-processing modes and Algorithm 1.
+//!
+//! [`ProcessingMode`] is the single switch applications branch on:
+//!
+//! * `Exact` — basic map task over all original points (the paper's
+//!   baseline for execution-time reduction, §IV-B);
+//! * `AccurateML` — the paper's contribution: aggregated points +
+//!   two-stage refinement (Algorithm 1), parameterized by compression
+//!   ratio and refinement threshold;
+//! * `Sampling` — the compared approximate-processing approach
+//!   (§IV-C): process a uniformly sampled subset of the input.
+//!
+//! [`algorithm1`] hosts the generic two-stage skeleton; [`sampling`]
+//! the subset selection.
+
+pub mod algorithm1;
+pub mod sampling;
+
+pub use algorithm1::{refinement_order, run_algorithm1, AggregatedQueryTask};
+pub use sampling::sample_rows;
+
+/// How a map task processes its partition.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ProcessingMode {
+    /// Process every original data point.
+    Exact,
+    /// Information-aggregation-based approximate processing (paper).
+    AccurateML {
+        /// Compression ratio r: originals per aggregated point
+        /// (paper sweeps 10 / 20 / 100).
+        compression_ratio: f64,
+        /// Refinement threshold ε_max: the fraction of ranked bucket
+        /// sets refined with original points (paper sweeps 0.01..0.10).
+        refinement_threshold: f64,
+    },
+    /// Random-sampling approximate processing with the given keep ratio.
+    Sampling {
+        /// Fraction of original points processed.
+        ratio: f64,
+    },
+}
+
+impl ProcessingMode {
+    /// Short label for report rows.
+    pub fn label(&self) -> String {
+        match self {
+            ProcessingMode::Exact => "exact".to_string(),
+            ProcessingMode::AccurateML {
+                compression_ratio,
+                refinement_threshold,
+            } => format!("accurateml(r={compression_ratio},eps={refinement_threshold})"),
+            ProcessingMode::Sampling { ratio } => format!("sampling(ratio={ratio})"),
+        }
+    }
+
+    /// Validate parameter ranges.
+    pub fn validate(&self) -> crate::Result<()> {
+        match *self {
+            ProcessingMode::Exact => Ok(()),
+            ProcessingMode::AccurateML {
+                compression_ratio,
+                refinement_threshold,
+            } => {
+                if compression_ratio < 1.0 {
+                    return Err(crate::Error::Config(format!(
+                        "compression ratio must be >= 1, got {compression_ratio}"
+                    )));
+                }
+                if !(0.0..=1.0).contains(&refinement_threshold) {
+                    return Err(crate::Error::Config(format!(
+                        "refinement threshold must be in [0,1], got {refinement_threshold}"
+                    )));
+                }
+                Ok(())
+            }
+            ProcessingMode::Sampling { ratio } => {
+                if !(0.0..=1.0).contains(&ratio) {
+                    return Err(crate::Error::Config(format!(
+                        "sampling ratio must be in [0,1], got {ratio}"
+                    )));
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_are_distinct() {
+        let a = ProcessingMode::Exact.label();
+        let b = ProcessingMode::AccurateML {
+            compression_ratio: 10.0,
+            refinement_threshold: 0.05,
+        }
+        .label();
+        let c = ProcessingMode::Sampling { ratio: 0.1 }.label();
+        assert_ne!(a, b);
+        assert_ne!(b, c);
+        assert!(b.contains("10"));
+        assert!(c.contains("0.1"));
+    }
+
+    #[test]
+    fn validation() {
+        assert!(ProcessingMode::Exact.validate().is_ok());
+        assert!(ProcessingMode::AccurateML {
+            compression_ratio: 0.5,
+            refinement_threshold: 0.05
+        }
+        .validate()
+        .is_err());
+        assert!(ProcessingMode::AccurateML {
+            compression_ratio: 10.0,
+            refinement_threshold: 1.5
+        }
+        .validate()
+        .is_err());
+        assert!(ProcessingMode::Sampling { ratio: -0.1 }.validate().is_err());
+        assert!(ProcessingMode::Sampling { ratio: 1.0 }.validate().is_ok());
+    }
+}

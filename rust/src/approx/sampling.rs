@@ -1,0 +1,82 @@
+//! Random-sampling approximate processing — the compared approach of
+//! paper §IV-C ([9], [16], [23]-[25]: online aggregation et al.).
+//!
+//! The baseline restricts the *size* of the processed input by keeping a
+//! uniform sample of each partition's rows and running the basic map
+//! task on the subset. It shares nothing with the aggregation machinery
+//! on purpose: the comparison is aggregation-vs-discarding.
+
+use crate::util::rng::Rng;
+
+/// Uniformly sample `ratio` of `n` local rows. Deterministic in
+/// (seed, partition): every mode comparison at the same seed sees the
+/// same subsets. Returns sorted indices (scan order preserves cache
+/// locality for the caller).
+pub fn sample_rows(n: usize, ratio: f64, seed: u64, partition: u64) -> Vec<usize> {
+    assert!((0.0..=1.0).contains(&ratio), "ratio {ratio} out of range");
+    if n == 0 {
+        return Vec::new();
+    }
+    let keep = ((n as f64 * ratio).round() as usize).min(n);
+    if keep == 0 {
+        return Vec::new();
+    }
+    if keep == n {
+        return (0..n).collect();
+    }
+    let mut rng = Rng::new(seed ^ 0x5A4D_B00B).fork(partition);
+    let mut idx = rng.sample_indices(n, keep);
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratio_extremes() {
+        assert_eq!(sample_rows(10, 1.0, 1, 0), (0..10).collect::<Vec<_>>());
+        assert!(sample_rows(10, 0.0, 1, 0).is_empty());
+        assert!(sample_rows(0, 0.5, 1, 0).is_empty());
+    }
+
+    #[test]
+    fn sample_size_tracks_ratio() {
+        for &ratio in &[0.1, 0.25, 0.5, 0.9] {
+            let s = sample_rows(1000, ratio, 7, 3);
+            let expect = (1000.0 * ratio).round() as usize;
+            assert_eq!(s.len(), expect);
+            assert!(s.windows(2).all(|w| w[0] < w[1]), "sorted, distinct");
+            assert!(s.iter().all(|&i| i < 1000));
+        }
+    }
+
+    #[test]
+    fn deterministic_per_partition() {
+        let a = sample_rows(100, 0.3, 42, 5);
+        let b = sample_rows(100, 0.3, 42, 5);
+        assert_eq!(a, b);
+        let c = sample_rows(100, 0.3, 42, 6);
+        assert_ne!(a, c, "different partitions draw different samples");
+    }
+
+    #[test]
+    fn is_roughly_uniform() {
+        // Each index should be kept close to `ratio` of the time.
+        let mut counts = vec![0usize; 50];
+        let trials = 2000;
+        for t in 0..trials {
+            for i in sample_rows(50, 0.2, t as u64, 0) {
+                counts[i] += 1;
+            }
+        }
+        let expect = trials as f64 * 0.2;
+        for (i, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64) > expect * 0.6 && (c as f64) < expect * 1.4,
+                "index {i}: {c} vs {expect}"
+            );
+        }
+    }
+}

@@ -1,0 +1,565 @@
+//! User-based CF recommendation on the MapReduce engine (paper §III-D).
+//!
+//! Map tasks own a partition of training users and emit, per active
+//! user, the *neighborhood records* the reducer needs to form the
+//! weighted-average prediction — this is the workload whose shuffle
+//! volume scales with the processed input (Fig. 5's story):
+//!
+//! * **Exact** — Pearson weights between every active user and every
+//!   partition user; one record per (active, neighbor) pair carrying
+//!   the neighbor's rating deviations on that active user's test items.
+//! * **AccurateML** — partition users are LSH-bucketed on their
+//!   centered rating rows and aggregated (Definition 3 applied to
+//!   rating rows, with fractional masks); stage 1 scores aggregated
+//!   users (correlation = Pearson weight, per Definition 4) and emits
+//!   one record per bucket; stage 2 refines the top ε_max buckets per
+//!   active user, replacing the bucket's aggregated record with its
+//!   original users' records.
+//! * **Sampling** — records from a uniform subset of partition users.
+//!
+//! The reduce task folds records into Σw·dev / Σ|w| per (active, test
+//! item) and reports RMSE (paper §IV-A).
+
+pub mod predict;
+
+use std::sync::Arc;
+
+use crate::aggregate::AggregatedUsers;
+use crate::approx::algorithm1::{refine_budget, refinement_order, refinement_order_random, RefineOrder};
+use crate::approx::sampling::sample_rows;
+use crate::approx::ProcessingMode;
+use crate::data::matrix::Matrix;
+use crate::data::points::{split_rows, RowRange};
+use crate::data::ratings::RatingsSplit;
+use crate::error::Result;
+use crate::lsh::bucketizer::Grouping;
+use crate::lsh::Bucketizer;
+use crate::mapreduce::engine::MapReduceJob;
+use crate::mapreduce::metrics::TaskMetrics;
+use crate::runtime::backend::ScoreBackend;
+use crate::util::timer::Stopwatch;
+use predict::{rmse, NeighborRecord, PredictionAccumulator};
+
+/// Configuration of one CF job.
+#[derive(Clone, Debug)]
+pub struct CfConfig {
+    /// Input partitions == map tasks (paper: 100).
+    pub n_partitions: usize,
+    /// Processing mode.
+    pub mode: ProcessingMode,
+    /// Seed for LSH / sampling.
+    pub seed: u64,
+    /// Bucket grouping strategy (ablation switch; default LSH).
+    pub grouping: Grouping,
+    /// Stage-2 selection strategy (ablation switch; default ranked).
+    pub refine_order: RefineOrder,
+}
+
+impl Default for CfConfig {
+    fn default() -> Self {
+        CfConfig {
+            n_partitions: 100,
+            mode: ProcessingMode::Exact,
+            seed: 0xCF_7,
+            grouping: Grouping::Lsh,
+            refine_order: RefineOrder::Correlation,
+        }
+    }
+}
+
+/// Final output of a CF job.
+#[derive(Clone, Debug)]
+pub struct CfOutput {
+    /// (active user id, item, predicted, actual) per held-out rating.
+    pub predictions: Vec<(u32, u32, f32, f32)>,
+    /// RMSE over the held-out set.
+    pub rmse: f64,
+}
+
+/// The job: split + precomputed active-user matrices + backend.
+pub struct CfJob {
+    config: CfConfig,
+    split: Arc<RatingsSplit>,
+    backend: Arc<dyn ScoreBackend>,
+    partitions: Vec<RowRange>,
+    /// (A × m) centered, mask-zeroed active rating rows.
+    ca: Matrix,
+    /// (A × m) active masks.
+    ma: Matrix,
+    /// Active users' mean ratings.
+    active_means: Vec<f32>,
+    /// Every training user's mean rating, precomputed once — the record
+    /// emitters need it per (active, neighbor) pair and recomputing it
+    /// per record was a measured hot spot (EXPERIMENTS.md §Perf).
+    user_means: Vec<f32>,
+    /// Test items per active user (parallel to `split.active_users`).
+    test_items: Vec<Vec<u32>>,
+}
+
+impl CfJob {
+    /// Build a job over a train/test split.
+    pub fn new(
+        config: CfConfig,
+        split: Arc<RatingsSplit>,
+        backend: Arc<dyn ScoreBackend>,
+    ) -> Result<CfJob> {
+        config.mode.validate()?;
+        let m = split.train.n_items();
+        let a = split.active_users.len();
+        let mut ca = Matrix::zeros(a, m);
+        let mut ma = Matrix::zeros(a, m);
+        let mut active_means = Vec::with_capacity(a);
+        for (ai, &u) in split.active_users.iter().enumerate() {
+            let (row, mean) = split.train.centered_row(u as usize);
+            ca.row_mut(ai).copy_from_slice(&row);
+            for &i in &split.train.rated[u as usize] {
+                ma.set(ai, i as usize, 1.0);
+            }
+            active_means.push(mean);
+        }
+        let mut test_items = vec![Vec::new(); a];
+        for &(u, i, _) in &split.test {
+            let ai = split
+                .active_users
+                .binary_search(&u)
+                .map_err(|_| crate::Error::Data(format!("test user {u} not active")))?;
+            test_items[ai].push(i);
+        }
+        let partitions = split_rows(split.train.n_users(), config.n_partitions);
+        let user_means = (0..split.train.n_users())
+            .map(|u| split.train.user_mean(u))
+            .collect();
+        Ok(CfJob {
+            config,
+            split,
+            backend,
+            partitions,
+            ca,
+            ma,
+            active_means,
+            test_items,
+            user_means,
+        })
+    }
+
+    /// Number of active users.
+    pub fn n_active(&self) -> usize {
+        self.split.active_users.len()
+    }
+
+    /// Centered rows + masks for a set of training users.
+    fn user_block(&self, users: &[usize]) -> (Matrix, Matrix) {
+        let m = self.split.train.n_items();
+        let mut cu = Matrix::zeros(users.len(), m);
+        let mut mu = Matrix::zeros(users.len(), m);
+        for (r, &u) in users.iter().enumerate() {
+            let (row, _) = self.split.train.centered_row(u);
+            cu.row_mut(r).copy_from_slice(&row);
+            for &i in &self.split.train.rated[u] {
+                mu.set(r, i as usize, 1.0);
+            }
+        }
+        (cu, mu)
+    }
+
+    /// Emit records for original users `users` (global ids) given their
+    /// weight row slice per active user.
+    fn records_for_originals(
+        &self,
+        weights: &Matrix,
+        users: &[usize],
+        out: &mut Vec<NeighborRecord>,
+    ) {
+        for ai in 0..self.n_active() {
+            let self_id = self.split.active_users[ai] as usize;
+            let witems = &self.test_items[ai];
+            if witems.is_empty() {
+                continue;
+            }
+            for (r, &v) in users.iter().enumerate() {
+                if v == self_id {
+                    continue; // a user is not their own neighbor
+                }
+                let w = weights.get(ai, r);
+                if w == 0.0 || !w.is_finite() {
+                    continue;
+                }
+                let vmean = self.user_means[v];
+                let mut deviations = Vec::new();
+                for &i in witems {
+                    if self.split.train.mask.get(v, i as usize) > 0.0 {
+                        deviations
+                            .push((i, self.split.train.ratings.get(v, i as usize) - vmean));
+                    }
+                }
+                if !deviations.is_empty() {
+                    out.push(NeighborRecord {
+                        active: ai as u32,
+                        weight: w,
+                        deviations,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Exact / sampling scan over a set of users.
+    fn scan_users(&self, users: &[usize], metrics: &mut TaskMetrics) -> Vec<NeighborRecord> {
+        let sw = Stopwatch::new();
+        let (cu, mu) = self.user_block(users);
+        let w = self
+            .backend
+            .cf_weights(&self.ca, &self.ma, &cu, &mu)
+            .expect("backend cf_weights failed");
+        let mut out = Vec::new();
+        self.records_for_originals(&w, users, &mut out);
+        metrics.exact_s += sw.elapsed_s();
+        out
+    }
+
+    /// AccurateML map task.
+    fn accurateml_map(
+        &self,
+        range: RowRange,
+        compression_ratio: f64,
+        eps_max: f64,
+        metrics: &mut TaskMetrics,
+    ) -> Vec<NeighborRecord> {
+        let users: Vec<usize> = (range.start..range.end).collect();
+        let m = self.split.train.n_items();
+
+        // Part 1: group similar users with LSH. Centered rating rows
+        // are sparse (unrated = 0), so raw Euclidean LSH would group
+        // users by *sparsity* rather than taste — two users with
+        // disjoint item sets are both near the origin. Normalizing each
+        // row to unit L2 norm turns the p-stable hash into an angular
+        // one: buckets collect users whose rating *directions* agree,
+        // which is exactly the Pearson neighborhood structure stage 1
+        // needs to preserve.
+        let mut sw = Stopwatch::new();
+        let (cu, mu) = self.user_block(&users);
+        let mut unit = cu.clone();
+        for r in 0..unit.rows() {
+            let row = unit.row_mut(r);
+            let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 1e-6 {
+                for v in row.iter_mut() {
+                    *v /= norm;
+                }
+            }
+        }
+        let bucketing = Bucketizer {
+            grouping: self.config.grouping,
+            ..Bucketizer::with_ratio(compression_ratio, self.config.seed)
+        }
+        .bucketize(&unit)
+        .expect("bucketize failed");
+        drop(unit);
+        metrics.lsh_s += sw.lap_s();
+
+        // Part 2: aggregate each bucket into one aggregated user.
+        // Bucket member indices are partition-local; build a local view.
+        let local_matrix = crate::data::ratings::RatingMatrix {
+            ratings: self.split.train.ratings.gather_rows(&users),
+            mask: self.split.train.mask.gather_rows(&users),
+            rated: users
+                .iter()
+                .map(|&u| self.split.train.rated[u].clone())
+                .collect(),
+        };
+        let agg = AggregatedUsers::build(&local_matrix, &bucketing).expect("aggregate failed");
+        let n_buckets = agg.len();
+        let mut cagg = Matrix::zeros(n_buckets, m);
+        let mut agg_means = Vec::with_capacity(n_buckets);
+        for b in 0..n_buckets {
+            let (row, mean) = agg.centered_row(b);
+            cagg.row_mut(b).copy_from_slice(&row);
+            agg_means.push(mean);
+        }
+        metrics.aggregate_s += sw.lap_s();
+
+        // Part 3: initial output — score aggregated users, emit one
+        // record per (active, bucket).
+        let wagg = self
+            .backend
+            .cf_weights(&self.ca, &self.ma, &cagg, &agg.mask)
+            .expect("backend cf_weights failed");
+        let budget = refine_budget(n_buckets, eps_max);
+        let mut out = Vec::new();
+        // Records per (active, bucket) kept addressable for replacement.
+        let mut refined: Vec<Vec<usize>> = Vec::with_capacity(self.n_active());
+        for ai in 0..self.n_active() {
+            let witems = &self.test_items[ai];
+            let corr: Vec<f32> = (0..n_buckets).map(|b| wagg.get(ai, b)).collect();
+            let chosen = match self.config.refine_order {
+                RefineOrder::Correlation => refinement_order(&corr, budget),
+                RefineOrder::Random => {
+                    refinement_order_random(n_buckets, budget, self.config.seed ^ ai as u64)
+                }
+            };
+            let mut is_refined = vec![false; n_buckets];
+            for &b in &chosen {
+                is_refined[b] = true;
+            }
+            refined.push(chosen);
+            if witems.is_empty() {
+                continue;
+            }
+            for b in 0..n_buckets {
+                if is_refined[b] {
+                    continue; // replaced by originals in part 4
+                }
+                let w = wagg.get(ai, b);
+                if w == 0.0 || !w.is_finite() {
+                    continue;
+                }
+                let mut deviations = Vec::new();
+                for &i in witems {
+                    if agg.mask.get(b, i as usize) > 0.0 {
+                        deviations.push((i, agg.ratings.get(b, i as usize) - agg_means[b]));
+                    }
+                }
+                if !deviations.is_empty() {
+                    // The aggregated user enters the prediction as ONE
+                    // neighbor (its deviations are already bucket
+                    // means). Scaling its weight by bucket size was
+                    // tried and measurably hurts RMSE: the aggregated
+                    // deviations are variance-shrunken, and multiplying
+                    // their den-share amplifies that bias.
+                    out.push(NeighborRecord {
+                        active: ai as u32,
+                        weight: w,
+                        deviations,
+                    });
+                }
+            }
+        }
+        metrics.initial_s += sw.lap_s();
+
+        // Part 4: refinement — original users of each active user's top
+        // buckets (weights computed natively per pair; the refined sets
+        // differ per active user so there is no dense block to batch).
+        for ai in 0..self.n_active() {
+            let self_id = self.split.active_users[ai] as usize;
+            let witems = &self.test_items[ai];
+            if witems.is_empty() {
+                continue;
+            }
+            for &b in &refined[ai] {
+                for &local in &agg.index[b] {
+                    let v = users[local as usize];
+                    if v == self_id {
+                        continue;
+                    }
+                    let w = crate::runtime::backend::pearson_pair(
+                        self.ca.row(ai),
+                        self.ma.row(ai),
+                        cu.row(local as usize),
+                        mu.row(local as usize),
+                    );
+                    if w == 0.0 || !w.is_finite() {
+                        continue;
+                    }
+                    let vmean = self.user_means[v];
+                    let mut deviations = Vec::new();
+                    for &i in witems {
+                        if self.split.train.mask.get(v, i as usize) > 0.0 {
+                            deviations
+                                .push((i, self.split.train.ratings.get(v, i as usize) - vmean));
+                        }
+                    }
+                    if !deviations.is_empty() {
+                        out.push(NeighborRecord {
+                            active: ai as u32,
+                            weight: w,
+                            deviations,
+                        });
+                    }
+                }
+            }
+        }
+        metrics.refine_s += sw.lap_s();
+        out
+    }
+}
+
+impl MapReduceJob for CfJob {
+    type MapOut = Vec<NeighborRecord>;
+    type Output = CfOutput;
+
+    fn n_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    fn map(&self, part_id: usize, metrics: &mut TaskMetrics) -> Self::MapOut {
+        let range = self.partitions[part_id];
+        if range.is_empty() {
+            return Vec::new();
+        }
+        match self.config.mode {
+            ProcessingMode::Exact => {
+                let users: Vec<usize> = (range.start..range.end).collect();
+                self.scan_users(&users, metrics)
+            }
+            ProcessingMode::Sampling { ratio } => {
+                let local = sample_rows(range.len(), ratio, self.config.seed, part_id as u64);
+                if local.is_empty() {
+                    return Vec::new();
+                }
+                let users: Vec<usize> = local.iter().map(|&i| range.start + i).collect();
+                self.scan_users(&users, metrics)
+            }
+            ProcessingMode::AccurateML {
+                compression_ratio,
+                refinement_threshold,
+            } => self.accurateml_map(range, compression_ratio, refinement_threshold, metrics),
+        }
+    }
+
+    fn shuffle_bytes(&self, out: &Self::MapOut) -> u64 {
+        out.iter().map(|r| r.shuffle_bytes()).sum()
+    }
+
+    fn shuffle_records(&self, out: &Self::MapOut) -> u64 {
+        out.len() as u64
+    }
+
+    fn reduce(&self, outs: Vec<Self::MapOut>) -> CfOutput {
+        let mut acc = PredictionAccumulator::default();
+        for records in &outs {
+            for r in records {
+                acc.add(r);
+            }
+        }
+        let mut predictions = Vec::with_capacity(self.split.test.len());
+        let mut pairs = Vec::with_capacity(self.split.test.len());
+        for &(u, i, actual) in &self.split.test {
+            let ai = self.split.active_users.binary_search(&u).unwrap();
+            let p = acc
+                .predict(ai as u32, i, self.active_means[ai])
+                .clamp(1.0, 5.0);
+            predictions.push((u, i, p, actual));
+            pairs.push((p, actual));
+        }
+        CfOutput {
+            predictions,
+            rmse: rmse(&pairs),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::ratings::{LatentFactorSpec, RatingsSplit};
+    use crate::mapreduce::engine::Engine;
+    use crate::runtime::backend::NativeBackend;
+
+    fn split() -> Arc<RatingsSplit> {
+        let m = LatentFactorSpec {
+            n_users: 400,
+            n_items: 96,
+            n_factors: 4,
+            mean_ratings_per_user: 24,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        Arc::new(RatingsSplit::new(&m, 20, 0.2, 9).unwrap())
+    }
+
+    fn run(mode: ProcessingMode, split: Arc<RatingsSplit>) -> (CfOutput, crate::mapreduce::JobMetrics) {
+        let engine = Engine::new(4);
+        let job = CfJob::new(
+            CfConfig {
+                n_partitions: 8,
+                mode,
+                seed: 3,
+                ..Default::default()
+            },
+            split,
+            Arc::new(NativeBackend),
+        )
+        .unwrap();
+        let report = engine.run(Arc::new(job)).unwrap();
+        (report.output, report.metrics)
+    }
+
+    #[test]
+    fn exact_beats_mean_baseline() {
+        let s = split();
+        let (out, metrics) = run(ProcessingMode::Exact, s.clone());
+        assert_eq!(out.predictions.len(), s.test.len());
+        // Baseline: predict each active user's mean.
+        let job = CfJob::new(CfConfig::default(), s.clone(), Arc::new(NativeBackend)).unwrap();
+        let mean_pairs: Vec<(f32, f32)> = s
+            .test
+            .iter()
+            .map(|&(u, _i, r)| {
+                let ai = s.active_users.binary_search(&u).unwrap();
+                (job.active_means[ai], r)
+            })
+            .collect();
+        let mean_rmse = rmse(&mean_pairs);
+        assert!(
+            out.rmse < mean_rmse,
+            "CF rmse {} not better than mean baseline {mean_rmse}",
+            out.rmse
+        );
+        assert!(metrics.shuffle_bytes > 0);
+    }
+
+    #[test]
+    fn accurateml_rmse_close_to_exact_with_smaller_shuffle() {
+        let s = split();
+        let (exact, em) = run(ProcessingMode::Exact, s.clone());
+        let (aml, am) = run(
+            ProcessingMode::AccurateML {
+                compression_ratio: 10.0,
+                refinement_threshold: 0.1,
+            },
+            s.clone(),
+        );
+        let loss = predict::rmse_loss(exact.rmse, aml.rmse);
+        assert!(loss < 0.30, "rmse loss {loss} too large");
+        assert!(
+            am.shuffle_bytes < em.shuffle_bytes,
+            "AccurateML shuffle {} !< exact {}",
+            am.shuffle_bytes,
+            em.shuffle_bytes
+        );
+        let mean = am.mean_task();
+        assert!(mean.lsh_s > 0.0 && mean.aggregate_s > 0.0);
+    }
+
+    #[test]
+    fn sampling_full_ratio_equals_exact() {
+        let s = split();
+        let (exact, _) = run(ProcessingMode::Exact, s.clone());
+        let (samp, _) = run(ProcessingMode::Sampling { ratio: 1.0 }, s);
+        assert!((exact.rmse - samp.rmse).abs() < 1e-9);
+        assert_eq!(exact.predictions, samp.predictions);
+    }
+
+    #[test]
+    fn sampling_low_ratio_worse_than_accurateml() {
+        // The paper's core comparison at a matched input budget: 10%
+        // sampling vs r=10 aggregation (both touch ~10% "volume").
+        let s = split();
+        let (exact, _) = run(ProcessingMode::Exact, s.clone());
+        let (aml, _) = run(
+            ProcessingMode::AccurateML {
+                compression_ratio: 10.0,
+                refinement_threshold: 0.05,
+            },
+            s.clone(),
+        );
+        let (samp, _) = run(ProcessingMode::Sampling { ratio: 0.1 }, s);
+        let aml_loss = predict::rmse_loss(exact.rmse, aml.rmse);
+        let samp_loss = predict::rmse_loss(exact.rmse, samp.rmse);
+        assert!(
+            aml_loss <= samp_loss + 0.02,
+            "aml loss {aml_loss} vs sampling loss {samp_loss}"
+        );
+    }
+}

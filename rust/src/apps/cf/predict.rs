@@ -1,0 +1,159 @@
+//! CF prediction accumulation and RMSE.
+//!
+//! The reduce side of the CF job: neighbor records stream in from map
+//! tasks; [`PredictionAccumulator`] folds them into the weighted-average
+//! prediction of §III-D:
+//!
+//! ```text
+//! p(u, i) = r̄_u + Σ_v w(u,v) · (r_{v,i} - r̄_v) / Σ_v |w(u,v)|
+//! ```
+
+use std::collections::HashMap;
+
+/// One shuffled neighbor record: the weight between an active user and
+/// one neighbor (original, aggregated, or sampled), plus the neighbor's
+/// rating deviations on the active user's test items.
+#[derive(Clone, Debug)]
+pub struct NeighborRecord {
+    /// Active-user index (into the job's active list).
+    pub active: u32,
+    /// w(u, v).
+    pub weight: f32,
+    /// (test item id, r_vi - r̄_v) for items the neighbor rated.
+    pub deviations: Vec<(u32, f32)>,
+}
+
+impl NeighborRecord {
+    /// Shuffle size of this record: weight+active (8 bytes) + one
+    /// (item, deviation) pair per entry (8 bytes each).
+    pub fn shuffle_bytes(&self) -> u64 {
+        8 + (self.deviations.len() * 8) as u64
+    }
+}
+
+/// Accumulates Σ w·dev and Σ|w| per (active, item).
+#[derive(Default)]
+pub struct PredictionAccumulator {
+    sums: HashMap<(u32, u32), (f64, f64)>,
+}
+
+impl PredictionAccumulator {
+    /// Fold one record in.
+    pub fn add(&mut self, rec: &NeighborRecord) {
+        if rec.weight == 0.0 {
+            return;
+        }
+        for &(item, dev) in &rec.deviations {
+            let e = self.sums.entry((rec.active, item)).or_insert((0.0, 0.0));
+            e.0 += rec.weight as f64 * dev as f64;
+            e.1 += rec.weight.abs() as f64;
+        }
+    }
+
+    /// Predict for (active, item) given the active user's mean rating.
+    /// Falls back to the mean when no neighbor evidence arrived.
+    pub fn predict(&self, active: u32, item: u32, active_mean: f32) -> f32 {
+        match self.sums.get(&(active, item)) {
+            Some(&(num, den)) if den > 1e-12 => (active_mean as f64 + num / den) as f32,
+            _ => active_mean,
+        }
+    }
+
+    /// Number of (active, item) cells with evidence.
+    pub fn len(&self) -> usize {
+        self.sums.len()
+    }
+
+    /// True when nothing accumulated.
+    pub fn is_empty(&self) -> bool {
+        self.sums.is_empty()
+    }
+}
+
+/// Root-mean-square error between predictions and actual ratings.
+pub fn rmse(pairs: &[(f32, f32)]) -> f64 {
+    if pairs.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = pairs
+        .iter()
+        .map(|&(p, a)| {
+            let d = (p - a) as f64;
+            d * d
+        })
+        .sum();
+    (s / pairs.len() as f64).sqrt()
+}
+
+/// The paper's CF accuracy-loss metric: relative *increase* in RMSE vs
+/// exact (clamped at 0).
+pub fn rmse_loss(exact_rmse: f64, approx_rmse: f64) -> f64 {
+    if exact_rmse <= 0.0 {
+        return 0.0;
+    }
+    ((approx_rmse - exact_rmse) / exact_rmse).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weighted_average_prediction() {
+        let mut acc = PredictionAccumulator::default();
+        acc.add(&NeighborRecord {
+            active: 0,
+            weight: 0.5,
+            deviations: vec![(7, 1.0)],
+        });
+        acc.add(&NeighborRecord {
+            active: 0,
+            weight: -0.25,
+            deviations: vec![(7, -2.0)],
+        });
+        // num = 0.5*1 + (-0.25)(-2) = 1.0; den = 0.75; adj = 4/3.
+        let p = acc.predict(0, 7, 3.0);
+        assert!((p - (3.0 + 4.0 / 3.0)).abs() < 1e-5);
+    }
+
+    #[test]
+    fn missing_evidence_falls_back_to_mean() {
+        let acc = PredictionAccumulator::default();
+        assert_eq!(acc.predict(1, 2, 3.5), 3.5);
+    }
+
+    #[test]
+    fn zero_weight_records_ignored() {
+        let mut acc = PredictionAccumulator::default();
+        acc.add(&NeighborRecord {
+            active: 0,
+            weight: 0.0,
+            deviations: vec![(1, 5.0)],
+        });
+        assert!(acc.is_empty());
+    }
+
+    #[test]
+    fn rmse_known_values() {
+        assert_eq!(rmse(&[]), 0.0);
+        let r = rmse(&[(3.0, 3.0), (4.0, 2.0)]);
+        assert!((r - (2.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rmse_loss_direction() {
+        assert!((rmse_loss(1.0, 1.1) - 0.1).abs() < 1e-9);
+        assert_eq!(rmse_loss(1.0, 0.9), 0.0);
+        assert_eq!(rmse_loss(0.0, 1.0), 0.0);
+    }
+
+    #[test]
+    fn record_shuffle_bytes() {
+        let r = NeighborRecord {
+            active: 0,
+            weight: 0.1,
+            deviations: vec![(1, 0.5), (2, -0.5)],
+        };
+        assert_eq!(r.shuffle_bytes(), 8 + 16);
+    }
+}

@@ -1,0 +1,500 @@
+//! k-means clustering on the MapReduce engine — the third application
+//! family the paper motivates (§II lists clustering among the
+//! accuracy-input-dependent algorithms; k-means is its canonical
+//! example in both Mahout and MLlib).
+//!
+//! Lloyd iterations as MapReduce rounds: each map task assigns its
+//! partition's points to the current centroids and emits per-cluster
+//! partial sums; the reduce task combines them into new centroids.
+//! AccurateML enters exactly as in the other applications:
+//!
+//! * stage 1 assigns *aggregated* points, weighted by bucket size —
+//!   since k-means centroids are means of means, aggregated points are
+//!   a lossless summary whenever a bucket lies wholly inside one
+//!   cluster;
+//! * the correlation of a bucket (Definition 4) is the negative
+//!   *assignment margin* `d₁ − d₂` between its aggregated point's two
+//!   nearest centroids: buckets straddling a cluster boundary (small
+//!   margin) are where per-point refinement actually moves the result;
+//! * stage 2 re-assigns the top ε_max fraction of buckets point by
+//!   point, replacing their aggregate contribution.
+//!
+//! Aggregation is generated once and reused across iterations (the
+//! paper's generation step amortizes perfectly in iterative
+//! algorithms). Result accuracy is **inertia** (mean squared distance
+//! to the final centroids, computed exactly for every mode so the
+//! comparison is fair); the loss metric is the relative inertia
+//! increase vs the exact run.
+
+use std::sync::Arc;
+
+use crate::approx::algorithm1::{refine_budget, refinement_order, refinement_order_random, RefineOrder};
+use crate::approx::sampling::sample_rows;
+use crate::approx::ProcessingMode;
+use crate::data::matrix::{sq_dist, Matrix};
+use crate::data::points::{split_rows, RowRange};
+use crate::error::Result;
+use crate::lsh::bucketizer::Grouping;
+use crate::lsh::Bucketizer;
+use crate::mapreduce::engine::{Engine, MapReduceJob};
+use crate::mapreduce::metrics::{JobMetrics, TaskMetrics};
+use crate::util::rng::Rng;
+use crate::util::timer::Stopwatch;
+
+/// Configuration of a k-means run.
+#[derive(Clone, Debug)]
+pub struct KmeansConfig {
+    /// Number of clusters.
+    pub n_clusters: usize,
+    /// Lloyd iterations (each is one MapReduce round).
+    pub n_iterations: usize,
+    /// Input partitions == map tasks per round.
+    pub n_partitions: usize,
+    /// Processing mode.
+    pub mode: ProcessingMode,
+    /// Seed for init / LSH / sampling.
+    pub seed: u64,
+    /// Bucket grouping strategy (ablation switch).
+    pub grouping: Grouping,
+    /// Stage-2 selection strategy (ablation switch).
+    pub refine_order: RefineOrder,
+}
+
+impl Default for KmeansConfig {
+    fn default() -> Self {
+        KmeansConfig {
+            n_clusters: 16,
+            n_iterations: 10,
+            n_partitions: 20,
+            mode: ProcessingMode::Exact,
+            seed: 0x4AEA,
+            grouping: Grouping::Lsh,
+            refine_order: RefineOrder::Correlation,
+        }
+    }
+}
+
+/// Final output of a k-means run.
+#[derive(Clone, Debug)]
+pub struct KmeansOutput {
+    /// (n_clusters × d) final centroids.
+    pub centroids: Matrix,
+    /// Mean squared distance of every point to its nearest centroid,
+    /// computed exactly (mode-independent metric).
+    pub inertia: f64,
+}
+
+/// Per-partition aggregation cache entry (built once, reused across
+/// Lloyd iterations).
+struct PartitionAgg {
+    /// Bucket centroids (means of member points).
+    centers: Matrix,
+    /// Bucket → local member rows.
+    index: Vec<Vec<u32>>,
+}
+
+/// One Lloyd iteration as a MapReduce job.
+struct KmeansIterJob {
+    points: Arc<Matrix>,
+    partitions: Vec<RowRange>,
+    centroids: Matrix,
+    mode: ProcessingMode,
+    seed: u64,
+    refine_order: RefineOrder,
+    /// Aggregations per partition (AccurateML mode only). The Option is
+    /// None on the first iteration *before* generation — the job then
+    /// builds and returns timing through metrics; the runner caches.
+    agg: Option<Arc<Vec<PartitionAgg>>>,
+}
+
+/// Per-cluster partial result: (sum of assigned vectors, total weight).
+type ClusterPartials = Vec<(Vec<f32>, f32)>;
+
+fn nearest_centroid(centroids: &Matrix, p: &[f32]) -> (usize, f32, f32) {
+    let mut best = (0usize, f32::INFINITY);
+    let mut second = f32::INFINITY;
+    for c in 0..centroids.rows() {
+        let d = sq_dist(centroids.row(c), p);
+        if d < best.1 {
+            second = best.1;
+            best = (c, d);
+        } else if d < second {
+            second = d;
+        }
+    }
+    (best.0, best.1, second)
+}
+
+impl KmeansIterJob {
+    fn empty_partials(&self) -> ClusterPartials {
+        (0..self.centroids.rows())
+            .map(|_| (vec![0.0f32; self.points.cols()], 0.0f32))
+            .collect()
+    }
+
+    fn assign_rows(&self, rows: impl Iterator<Item = usize>, out: &mut ClusterPartials) {
+        for r in rows {
+            let p = self.points.row(r);
+            let (c, _, _) = nearest_centroid(&self.centroids, p);
+            let (sum, w) = &mut out[c];
+            for (s, &x) in sum.iter_mut().zip(p) {
+                *s += x;
+            }
+            *w += 1.0;
+        }
+    }
+}
+
+impl MapReduceJob for KmeansIterJob {
+    type MapOut = ClusterPartials;
+    type Output = Matrix;
+
+    fn n_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    fn map(&self, part_id: usize, metrics: &mut TaskMetrics) -> ClusterPartials {
+        let range = self.partitions[part_id];
+        let mut out = self.empty_partials();
+        match self.mode {
+            ProcessingMode::Exact => {
+                let sw = Stopwatch::new();
+                self.assign_rows(range.start..range.end, &mut out);
+                metrics.exact_s += sw.elapsed_s();
+            }
+            ProcessingMode::Sampling { ratio } => {
+                let sw = Stopwatch::new();
+                let local = sample_rows(range.len(), ratio, self.seed, part_id as u64);
+                self.assign_rows(local.into_iter().map(|i| range.start + i), &mut out);
+                metrics.exact_s += sw.elapsed_s();
+            }
+            ProcessingMode::AccurateML {
+                refinement_threshold,
+                ..
+            } => {
+                let agg = &self.agg.as_ref().expect("aggregation not built")[part_id];
+                let n_buckets = agg.index.len();
+                let mut sw = Stopwatch::new();
+
+                // Stage 1: assign aggregated points, weighted by bucket
+                // size; correlation = -(assignment margin).
+                let mut assigned = Vec::with_capacity(n_buckets);
+                let mut corr = Vec::with_capacity(n_buckets);
+                for b in 0..n_buckets {
+                    let (c, d1, d2) = nearest_centroid(&self.centroids, agg.centers.row(b));
+                    assigned.push(c);
+                    corr.push(d1 - d2); // <= 0; near 0 = boundary bucket
+                    let size = agg.index[b].len() as f32;
+                    let (sum, w) = &mut out[c];
+                    for (s, &x) in sum.iter_mut().zip(agg.centers.row(b)) {
+                        *s += x * size;
+                    }
+                    *w += size;
+                }
+                metrics.initial_s += sw.lap_s();
+
+                // Stage 2: re-assign boundary buckets point by point.
+                let budget = refine_budget(n_buckets, refinement_threshold);
+                let chosen = match self.refine_order {
+                    RefineOrder::Correlation => refinement_order(&corr, budget),
+                    RefineOrder::Random => {
+                        refinement_order_random(n_buckets, budget, self.seed ^ part_id as u64)
+                    }
+                };
+                for b in chosen {
+                    // Remove the aggregate contribution...
+                    let size = agg.index[b].len() as f32;
+                    let (sum, w) = &mut out[assigned[b]];
+                    for (s, &x) in sum.iter_mut().zip(agg.centers.row(b)) {
+                        *s -= x * size;
+                    }
+                    *w -= size;
+                    // ...and add members individually.
+                    self.assign_rows(
+                        agg.index[b].iter().map(|&i| range.start + i as usize),
+                        &mut out,
+                    );
+                }
+                metrics.refine_s += sw.lap_s();
+            }
+        }
+        out
+    }
+
+    fn shuffle_bytes(&self, out: &ClusterPartials) -> u64 {
+        out.iter().map(|(s, _)| (s.len() * 4 + 4) as u64).sum()
+    }
+
+    fn shuffle_records(&self, out: &ClusterPartials) -> u64 {
+        out.len() as u64
+    }
+
+    fn reduce(&self, outs: Vec<ClusterPartials>) -> Matrix {
+        let k = self.centroids.rows();
+        let d = self.points.cols();
+        let mut next = Matrix::zeros(k, d);
+        for c in 0..k {
+            let mut sum = vec![0.0f64; d];
+            let mut w = 0.0f64;
+            for part in &outs {
+                let (s, pw) = &part[c];
+                for (a, &x) in sum.iter_mut().zip(s) {
+                    *a += x as f64;
+                }
+                w += *pw as f64;
+            }
+            if w > 0.0 {
+                for (j, a) in sum.iter().enumerate() {
+                    next.set(c, j, (a / w) as f32);
+                }
+            } else {
+                // Empty cluster: keep the previous centroid.
+                next.row_mut(c).copy_from_slice(self.centroids.row(c));
+            }
+        }
+        next
+    }
+}
+
+/// Drives `n_iterations` MapReduce rounds.
+pub struct KmeansRunner {
+    pub config: KmeansConfig,
+    points: Arc<Matrix>,
+}
+
+impl KmeansRunner {
+    /// New runner over a point set.
+    pub fn new(config: KmeansConfig, points: Arc<Matrix>) -> Result<KmeansRunner> {
+        config.mode.validate()?;
+        if config.n_clusters == 0 || config.n_clusters > points.rows() {
+            return Err(crate::Error::Config(format!(
+                "n_clusters {} out of range (points={})",
+                config.n_clusters,
+                points.rows()
+            )));
+        }
+        Ok(KmeansRunner { config, points })
+    }
+
+    /// Run to completion; returns the output and metrics accumulated
+    /// over all iterations (aggregation generation counted once).
+    pub fn run(&self, engine: &Engine) -> Result<(KmeansOutput, JobMetrics)> {
+        let cfg = &self.config;
+        let partitions = split_rows(self.points.rows(), cfg.n_partitions);
+
+        // Init: distinct random rows (deterministic).
+        let mut rng = Rng::new(cfg.seed ^ 0x4AEA_11);
+        let init_rows = rng.sample_indices(self.points.rows(), cfg.n_clusters);
+        let mut centroids = self.points.gather_rows(&init_rows);
+
+        // AccurateML: build per-partition aggregations once, timing the
+        // generation parts into the first round's metrics.
+        let mut gen_metrics = TaskMetrics::default();
+        let agg: Option<Arc<Vec<PartitionAgg>>> = match cfg.mode {
+            ProcessingMode::AccurateML {
+                compression_ratio, ..
+            } => {
+                let mut sw = Stopwatch::new();
+                let mut parts = Vec::with_capacity(partitions.len());
+                for range in &partitions {
+                    let rows: Vec<usize> = (range.start..range.end).collect();
+                    let slice = self.points.gather_rows(&rows);
+                    let bucketing = Bucketizer {
+                        grouping: cfg.grouping,
+                        ..Bucketizer::with_ratio(compression_ratio, cfg.seed)
+                    }
+                    .bucketize(&slice)?;
+                    gen_metrics.lsh_s += sw.lap_s();
+                    let mut centers = Matrix::zeros(bucketing.buckets.len(), self.points.cols());
+                    for (b, members) in bucketing.buckets.iter().enumerate() {
+                        let idx: Vec<usize> = members.iter().map(|&i| i as usize).collect();
+                        let mean = slice.mean_of_rows(&idx);
+                        centers.row_mut(b).copy_from_slice(&mean);
+                    }
+                    gen_metrics.aggregate_s += sw.lap_s();
+                    parts.push(PartitionAgg {
+                        centers,
+                        index: bucketing.buckets,
+                    });
+                }
+                Some(Arc::new(parts))
+            }
+            _ => None,
+        };
+
+        let mut total = JobMetrics::default();
+        for _iter in 0..cfg.n_iterations {
+            let job = KmeansIterJob {
+                points: Arc::clone(&self.points),
+                partitions: partitions.clone(),
+                centroids: centroids.clone(),
+                mode: cfg.mode,
+                seed: cfg.seed,
+                refine_order: cfg.refine_order,
+                agg: agg.clone(),
+            };
+            let report = engine.run(Arc::new(job))?;
+            centroids = report.output;
+            // Accumulate per-iteration metrics.
+            if total.tasks.is_empty() {
+                total.tasks = report.metrics.tasks;
+            } else {
+                for (t, o) in total.tasks.iter_mut().zip(&report.metrics.tasks) {
+                    t.add(o);
+                }
+            }
+            total.map_wall_s += report.metrics.map_wall_s;
+            total.reduce_wall_s += report.metrics.reduce_wall_s;
+            total.shuffle_bytes += report.metrics.shuffle_bytes;
+            total.shuffle_records += report.metrics.shuffle_records;
+        }
+        // Attribute generation cost once (first task slot is as good a
+        // home as any for a per-job one-off; mean_task dilutes it).
+        if let Some(t) = total.tasks.first_mut() {
+            t.add(&gen_metrics);
+        }
+
+        // Exact inertia for fair accuracy comparison.
+        let mut inertia = 0.0f64;
+        for r in 0..self.points.rows() {
+            let (_, d1, _) = nearest_centroid(&centroids, self.points.row(r));
+            inertia += d1 as f64;
+        }
+        inertia /= self.points.rows() as f64;
+
+        Ok((KmeansOutput { centroids, inertia }, total))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixtureSpec;
+
+    fn points() -> Arc<Matrix> {
+        let d = GaussianMixtureSpec {
+            n_points: 2000,
+            dim: 8,
+            n_classes: 8,
+            noise: 0.25,
+            test_fraction: 0.01,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        Arc::new(d.train)
+    }
+
+    fn run(mode: ProcessingMode, pts: Arc<Matrix>) -> (KmeansOutput, JobMetrics) {
+        let engine = Engine::new(2);
+        let runner = KmeansRunner::new(
+            KmeansConfig {
+                n_clusters: 8,
+                n_iterations: 8,
+                n_partitions: 5,
+                mode,
+                seed: 3,
+                ..Default::default()
+            },
+            pts,
+        )
+        .unwrap();
+        runner.run(&engine).unwrap()
+    }
+
+    #[test]
+    fn exact_finds_cluster_structure() {
+        let pts = points();
+        let (out, metrics) = run(ProcessingMode::Exact, pts.clone());
+        // Inertia must beat the trivial single-cluster solution by a lot.
+        let mut grand = vec![0.0f32; pts.cols()];
+        for r in 0..pts.rows() {
+            for (g, &x) in grand.iter_mut().zip(pts.row(r)) {
+                *g += x;
+            }
+        }
+        for g in grand.iter_mut() {
+            *g /= pts.rows() as f32;
+        }
+        let trivial: f64 = (0..pts.rows())
+            .map(|r| sq_dist(pts.row(r), &grand) as f64)
+            .sum::<f64>()
+            / pts.rows() as f64;
+        assert!(
+            out.inertia < trivial * 0.5,
+            "inertia {} vs trivial {trivial}",
+            out.inertia
+        );
+        assert!(metrics.shuffle_bytes > 0);
+    }
+
+    #[test]
+    fn accurateml_matches_exact_closely_and_cheaper() {
+        let pts = points();
+        let (exact, em) = run(ProcessingMode::Exact, pts.clone());
+        let (aml, am) = run(
+            ProcessingMode::AccurateML {
+                compression_ratio: 10.0,
+                refinement_threshold: 0.1,
+            },
+            pts.clone(),
+        );
+        let loss = (aml.inertia - exact.inertia) / exact.inertia;
+        assert!(loss < 0.15, "inertia loss {loss}");
+        assert!(
+            am.total_map_compute_s() < em.total_map_compute_s(),
+            "aml compute {} !< exact {}",
+            am.total_map_compute_s(),
+            em.total_map_compute_s()
+        );
+    }
+
+    #[test]
+    fn full_refinement_equals_exact() {
+        let pts = points();
+        let (exact, _) = run(ProcessingMode::Exact, pts.clone());
+        let (aml, _) = run(
+            ProcessingMode::AccurateML {
+                compression_ratio: 10.0,
+                refinement_threshold: 1.0,
+            },
+            pts,
+        );
+        // ε = 1 refines every bucket => identical assignments.
+        assert!(
+            (aml.inertia - exact.inertia).abs() < 1e-9,
+            "{} vs {}",
+            aml.inertia,
+            exact.inertia
+        );
+    }
+
+    #[test]
+    fn sampling_full_equals_exact() {
+        let pts = points();
+        let (exact, _) = run(ProcessingMode::Exact, pts.clone());
+        let (s, _) = run(ProcessingMode::Sampling { ratio: 1.0 }, pts);
+        assert!((s.inertia - exact.inertia).abs() < 1e-9);
+    }
+
+    #[test]
+    fn validates_config() {
+        let pts = points();
+        assert!(KmeansRunner::new(
+            KmeansConfig {
+                n_clusters: 0,
+                ..Default::default()
+            },
+            pts.clone()
+        )
+        .is_err());
+        assert!(KmeansRunner::new(
+            KmeansConfig {
+                n_clusters: 1_000_000,
+                ..Default::default()
+            },
+            pts
+        )
+        .is_err());
+    }
+}

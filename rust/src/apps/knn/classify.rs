@@ -1,0 +1,108 @@
+//! kNN voting and accuracy metrics.
+
+/// A scored candidate: (squared distance, class label).
+pub type LabeledCandidate = (f32, u32);
+
+/// Merge per-partition candidate lists for one test point and keep the
+/// global k nearest. Inputs need not be sorted; output is ascending.
+pub fn merge_candidates(lists: &[Vec<LabeledCandidate>], k: usize) -> Vec<LabeledCandidate> {
+    let mut all: Vec<LabeledCandidate> = lists.iter().flatten().copied().collect();
+    all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+    all.truncate(k);
+    all
+}
+
+/// Majority vote among the candidates' labels; ties break to the label
+/// with the nearest member (then to the smaller label), so results are
+/// deterministic.
+pub fn majority_vote(candidates: &[LabeledCandidate]) -> u32 {
+    use std::collections::BTreeMap;
+    if candidates.is_empty() {
+        return 0;
+    }
+    let mut counts: BTreeMap<u32, (usize, f32)> = BTreeMap::new();
+    for &(dist, label) in candidates {
+        let e = counts.entry(label).or_insert((0, f32::INFINITY));
+        e.0 += 1;
+        if dist < e.1 {
+            e.1 = dist;
+        }
+    }
+    counts
+        .into_iter()
+        .min_by(|a, b| {
+            // Most votes first, then nearest representative, then label.
+            b.1 .0
+                .cmp(&a.1 .0)
+                .then(a.1 .1.partial_cmp(&b.1 .1).unwrap_or(std::cmp::Ordering::Equal))
+                .then(a.0.cmp(&b.0))
+        })
+        .map(|(label, _)| label)
+        .unwrap_or(0)
+}
+
+/// Fraction of predictions matching the true labels.
+pub fn classification_accuracy(predicted: &[u32], actual: &[u32]) -> f64 {
+    assert_eq!(predicted.len(), actual.len());
+    if predicted.is_empty() {
+        return 0.0;
+    }
+    let correct = predicted
+        .iter()
+        .zip(actual)
+        .filter(|(p, a)| p == a)
+        .count();
+    correct as f64 / predicted.len() as f64
+}
+
+/// The paper's accuracy-loss metric (§IV-A): relative decrease of
+/// approximate accuracy vs exact accuracy. Clamped at 0 (an approximate
+/// result can tie or beat exact by luck; the paper reports losses).
+pub fn accuracy_loss(exact_accuracy: f64, approx_accuracy: f64) -> f64 {
+    if exact_accuracy <= 0.0 {
+        return 0.0;
+    }
+    ((exact_accuracy - approx_accuracy) / exact_accuracy).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_keeps_global_nearest() {
+        let a = vec![(0.5, 1u32), (2.0, 2)];
+        let b = vec![(0.1, 3), (3.0, 1)];
+        let merged = merge_candidates(&[a, b], 3);
+        assert_eq!(
+            merged.iter().map(|c| c.1).collect::<Vec<_>>(),
+            vec![3, 1, 2]
+        );
+    }
+
+    #[test]
+    fn vote_majority_wins() {
+        let c = vec![(0.1, 2u32), (0.2, 1), (0.3, 1), (0.4, 1), (0.5, 2)];
+        assert_eq!(majority_vote(&c), 1);
+    }
+
+    #[test]
+    fn vote_tie_breaks_to_nearest() {
+        let c = vec![(0.1, 5u32), (0.2, 3), (0.3, 5), (0.4, 3)];
+        // 2-2 tie; label 5 has the nearest member (0.1).
+        assert_eq!(majority_vote(&c), 5);
+    }
+
+    #[test]
+    fn vote_empty_is_zero() {
+        assert_eq!(majority_vote(&[]), 0);
+    }
+
+    #[test]
+    fn accuracy_and_loss() {
+        assert_eq!(classification_accuracy(&[1, 2, 3], &[1, 2, 4]), 2.0 / 3.0);
+        assert!((accuracy_loss(0.8, 0.72) - 0.1).abs() < 1e-12);
+        assert_eq!(accuracy_loss(0.8, 0.9), 0.0);
+        assert_eq!(accuracy_loss(0.0, 0.5), 0.0);
+    }
+}

@@ -1,0 +1,397 @@
+//! kNN classification on the MapReduce engine (paper §III-D).
+//!
+//! One [`KnnJob`] implements all three processing modes inside its map
+//! task:
+//!
+//! * **Exact** — scan every training row of the partition per test
+//!   point (the basic map task of Fig. 2a); emits each test point's k
+//!   nearest (distance, label) candidates.
+//! * **AccurateML** — Fig. 2b: LSH-bucket the partition, aggregate
+//!   buckets into centroids (timed as Fig. 4's parts 1-2), run
+//!   Algorithm 1 per test point: distances to centroids give both the
+//!   initial candidates and the correlations (negative distance, per
+//!   Definition 4's kNN discussion); the top ε_max fraction of buckets
+//!   is refined by scanning its original rows (parts 3-4).
+//! * **Sampling** — scan a uniform subset (the §IV-C baseline).
+//!
+//! The reduce task merges per-partition candidates, takes the global
+//! top-k per test point and majority-votes the class — identical for
+//! every mode, which is what makes the accuracy comparison fair.
+
+pub mod classify;
+
+use std::sync::Arc;
+
+use crate::approx::algorithm1::{refine_budget, refinement_order, refinement_order_random, RefineOrder};
+use crate::approx::sampling::sample_rows;
+use crate::approx::ProcessingMode;
+use crate::data::gaussian::LabeledPoints;
+use crate::data::matrix::sq_dist;
+use crate::data::points::{split_rows, RowRange};
+use crate::error::Result;
+use crate::lsh::bucketizer::Grouping;
+use crate::lsh::Bucketizer;
+use crate::aggregate::AggregatedPoints;
+use crate::mapreduce::engine::MapReduceJob;
+use crate::mapreduce::metrics::TaskMetrics;
+use crate::runtime::backend::{ScoreBackend, TopK};
+use crate::util::timer::Stopwatch;
+use classify::{classification_accuracy, majority_vote, merge_candidates, LabeledCandidate};
+
+/// Configuration of one kNN job.
+#[derive(Clone, Debug)]
+pub struct KnnConfig {
+    /// Number of neighbors (paper: 5; Fig. 9 sweeps 10/20/50).
+    pub k: usize,
+    /// Input partitions == map tasks (paper: 100).
+    pub n_partitions: usize,
+    /// Processing mode.
+    pub mode: ProcessingMode,
+    /// Seed for LSH / sampling.
+    pub seed: u64,
+    /// Bucket grouping strategy (ablation switch; default LSH).
+    pub grouping: Grouping,
+    /// Stage-2 selection strategy (ablation switch; default ranked).
+    pub refine_order: RefineOrder,
+}
+
+impl Default for KnnConfig {
+    fn default() -> Self {
+        KnnConfig {
+            k: 5,
+            n_partitions: 100,
+            mode: ProcessingMode::Exact,
+            seed: 0x14AA,
+            grouping: Grouping::Lsh,
+            refine_order: RefineOrder::Correlation,
+        }
+    }
+}
+
+/// Final output of a kNN job.
+#[derive(Clone, Debug)]
+pub struct KnnOutput {
+    /// Predicted label per test point.
+    pub predictions: Vec<u32>,
+    /// Classification accuracy vs the test labels.
+    pub accuracy: f64,
+}
+
+/// The job: shared dataset + backend + mode.
+pub struct KnnJob {
+    config: KnnConfig,
+    data: Arc<LabeledPoints>,
+    backend: Arc<dyn ScoreBackend>,
+    partitions: Vec<RowRange>,
+}
+
+impl KnnJob {
+    /// Build a job over a dataset.
+    pub fn new(
+        config: KnnConfig,
+        data: Arc<LabeledPoints>,
+        backend: Arc<dyn ScoreBackend>,
+    ) -> Result<KnnJob> {
+        config.mode.validate()?;
+        if config.k == 0 {
+            return Err(crate::Error::Config("k must be positive".into()));
+        }
+        let partitions = split_rows(data.train.rows(), config.n_partitions);
+        Ok(KnnJob {
+            config,
+            data,
+            backend,
+            partitions,
+        })
+    }
+
+    /// Dataset accessor (used by reports).
+    pub fn data(&self) -> &LabeledPoints {
+        &self.data
+    }
+
+    /// Exact scan of (a subset of) the partition rows.
+    fn scan_rows(
+        &self,
+        rows: &[usize],
+        metrics: &mut TaskMetrics,
+    ) -> Vec<Vec<LabeledCandidate>> {
+        let sw = Stopwatch::new();
+        let part = self.data.train.gather_rows(rows);
+        let found = self
+            .backend
+            .knn_block_topk(&self.data.test, &part, self.config.k)
+            .expect("backend scoring failed");
+        let out = found
+            .into_iter()
+            .map(|cands| {
+                cands
+                    .into_iter()
+                    .map(|(d, local)| (d, self.data.train_labels[rows[local as usize]]))
+                    .collect()
+            })
+            .collect();
+        metrics.exact_s += sw.elapsed_s();
+        out
+    }
+
+    /// AccurateML map task (Fig. 2b + Algorithm 1).
+    fn accurateml_map(
+        &self,
+        range: RowRange,
+        compression_ratio: f64,
+        eps_max: f64,
+        metrics: &mut TaskMetrics,
+    ) -> Vec<Vec<LabeledCandidate>> {
+        let rows: Vec<usize> = (range.start..range.end).collect();
+        let part = self.data.train.gather_rows(&rows);
+        let labels: Vec<u32> = rows.iter().map(|&r| self.data.train_labels[r]).collect();
+
+        // Part 1: group similar data points using LSH.
+        let mut sw = Stopwatch::new();
+        let bucketing = Bucketizer {
+            grouping: self.config.grouping,
+            ..Bucketizer::with_ratio(compression_ratio, self.config.seed)
+        }
+        .bucketize(&part)
+        .expect("bucketize failed");
+        metrics.lsh_s += sw.lap_s();
+
+        // Part 2: information aggregation of original data points.
+        let agg = AggregatedPoints::build(&part, &labels, &bucketing).expect("aggregate failed");
+        metrics.aggregate_s += sw.lap_s();
+
+        // Part 3: initial outputs from aggregated points. One dense
+        // distance block: (test × centroids). Correlation of bucket b
+        // for test point t is -dists[t][b] (Definition 4).
+        let dists = self
+            .backend
+            .knn_dists(&self.data.test, &agg.centroids)
+            .expect("backend scoring failed");
+        metrics.initial_s += sw.lap_s();
+
+        // Part 4: refinement (Algorithm 1 lines 2-10, per test point).
+        // Scratch buffers are reused across test points — this loop runs
+        // |test| × |partitions| times and per-iteration allocations were
+        // a measured hot spot (EXPERIMENTS.md §Perf).
+        let n_buckets = agg.len();
+        let budget = refine_budget(n_buckets, eps_max);
+        let k = self.config.k;
+        let mut out = Vec::with_capacity(self.data.test.rows());
+        let mut corr: Vec<f32> = Vec::with_capacity(n_buckets);
+        let mut is_refined = vec![false; n_buckets];
+        for t in 0..self.data.test.rows() {
+            let drow = dists.row(t);
+            // Rank buckets by correlation (= -distance) descending.
+            corr.clear();
+            corr.extend(drow.iter().map(|&d| -d));
+            let refined = match self.config.refine_order {
+                RefineOrder::Correlation => refinement_order(&corr, budget),
+                RefineOrder::Random => {
+                    refinement_order_random(n_buckets, budget, self.config.seed ^ t as u64)
+                }
+            };
+            is_refined.iter_mut().for_each(|x| *x = false);
+            for &b in &refined {
+                is_refined[b] = true;
+            }
+            let mut topk = TopK::new(k);
+            // Refined buckets contribute their original points...
+            let q = self.data.test.row(t);
+            for &b in &refined {
+                for &local in &agg.index[b] {
+                    let d = sq_dist(part.row(local as usize), q);
+                    topk.push(d, local);
+                }
+            }
+            let mut cands: Vec<LabeledCandidate> = topk
+                .into_sorted()
+                .into_iter()
+                .map(|(d, local)| (d, labels[local as usize]))
+                .collect();
+            // ...unrefined buckets contribute their aggregated point
+            // (initial-output entries that survive refinement).
+            let mut agg_topk = TopK::new(k);
+            for b in 0..n_buckets {
+                if !is_refined[b] {
+                    agg_topk.push(drow[b], b as u32);
+                }
+            }
+            for (d, b) in agg_topk.into_sorted() {
+                cands.push((d, agg.labels[b as usize]));
+            }
+            cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+            cands.truncate(k);
+            out.push(cands);
+        }
+        metrics.refine_s += sw.lap_s();
+        out
+    }
+}
+
+impl MapReduceJob for KnnJob {
+    /// Per test point: k candidate (distance, label) pairs.
+    type MapOut = Vec<Vec<LabeledCandidate>>;
+    type Output = KnnOutput;
+
+    fn n_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    fn map(&self, part_id: usize, metrics: &mut TaskMetrics) -> Self::MapOut {
+        let range = self.partitions[part_id];
+        if range.is_empty() {
+            return vec![Vec::new(); self.data.test.rows()];
+        }
+        match self.config.mode {
+            ProcessingMode::Exact => {
+                let rows: Vec<usize> = (range.start..range.end).collect();
+                self.scan_rows(&rows, metrics)
+            }
+            ProcessingMode::Sampling { ratio } => {
+                let local = sample_rows(range.len(), ratio, self.config.seed, part_id as u64);
+                if local.is_empty() {
+                    return vec![Vec::new(); self.data.test.rows()];
+                }
+                let rows: Vec<usize> = local.iter().map(|&i| range.start + i).collect();
+                self.scan_rows(&rows, metrics)
+            }
+            ProcessingMode::AccurateML {
+                compression_ratio,
+                refinement_threshold,
+            } => self.accurateml_map(range, compression_ratio, refinement_threshold, metrics),
+        }
+    }
+
+    fn shuffle_bytes(&self, out: &Self::MapOut) -> u64 {
+        // One candidate = f32 distance + u32 label.
+        out.iter().map(|c| (c.len() * 8) as u64).sum()
+    }
+
+    fn shuffle_records(&self, out: &Self::MapOut) -> u64 {
+        out.iter().map(|c| c.len() as u64).sum()
+    }
+
+    fn reduce(&self, outs: Vec<Self::MapOut>) -> KnnOutput {
+        let n_test = self.data.test.rows();
+        let mut predictions = Vec::with_capacity(n_test);
+        for t in 0..n_test {
+            let lists: Vec<Vec<LabeledCandidate>> =
+                outs.iter().map(|o| o[t].clone()).collect();
+            let merged = merge_candidates(&lists, self.config.k);
+            predictions.push(majority_vote(&merged));
+        }
+        let accuracy = classification_accuracy(&predictions, &self.data.test_labels);
+        KnnOutput {
+            predictions,
+            accuracy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixtureSpec;
+    use crate::mapreduce::engine::Engine;
+    use crate::runtime::backend::NativeBackend;
+
+    fn dataset() -> Arc<LabeledPoints> {
+        Arc::new(
+            GaussianMixtureSpec {
+                n_points: 3000,
+                dim: 12,
+                n_classes: 5,
+                noise: 0.35,
+                test_fraction: 0.03,
+                seed: 42,
+                ..Default::default()
+            }
+            .generate()
+            .unwrap(),
+        )
+    }
+
+    fn run(mode: ProcessingMode, data: Arc<LabeledPoints>) -> (KnnOutput, crate::mapreduce::JobMetrics) {
+        let engine = Engine::new(4);
+        let job = KnnJob::new(
+            KnnConfig {
+                k: 5,
+                n_partitions: 8,
+                mode,
+                seed: 7,
+                ..Default::default()
+            },
+            data,
+            Arc::new(NativeBackend),
+        )
+        .unwrap();
+        let report = engine.run(Arc::new(job)).unwrap();
+        (report.output, report.metrics)
+    }
+
+    #[test]
+    fn exact_mode_is_accurate() {
+        let data = dataset();
+        let (out, metrics) = run(ProcessingMode::Exact, data.clone());
+        assert!(out.accuracy > 0.85, "exact accuracy {}", out.accuracy);
+        assert_eq!(out.predictions.len(), data.test.rows());
+        // Shuffle: k candidates per test point per partition.
+        assert_eq!(
+            metrics.shuffle_records,
+            (data.test.rows() * 5 * 8) as u64
+        );
+    }
+
+    #[test]
+    fn accurateml_close_to_exact_and_faster_records() {
+        let data = dataset();
+        let (exact, _) = run(ProcessingMode::Exact, data.clone());
+        let (aml, metrics) = run(
+            ProcessingMode::AccurateML {
+                compression_ratio: 10.0,
+                refinement_threshold: 0.1,
+            },
+            data.clone(),
+        );
+        let loss = classify::accuracy_loss(exact.accuracy, aml.accuracy);
+        assert!(loss < 0.25, "accuracy loss too large: {loss}");
+        // Aggregation parts were exercised and timed.
+        let mean = metrics.mean_task();
+        assert!(mean.lsh_s > 0.0);
+        assert!(mean.aggregate_s > 0.0);
+        assert!(mean.initial_s > 0.0);
+    }
+
+    #[test]
+    fn accurateml_eps1_r1_recovers_exact() {
+        // ratio→1 makes buckets near-singletons; ε=1 refines all of
+        // them, so the result must equal the exact scan.
+        let data = dataset();
+        let (exact, _) = run(ProcessingMode::Exact, data.clone());
+        let (aml, _) = run(
+            ProcessingMode::AccurateML {
+                compression_ratio: 1.0,
+                refinement_threshold: 1.0,
+            },
+            data.clone(),
+        );
+        assert_eq!(exact.predictions, aml.predictions);
+    }
+
+    #[test]
+    fn sampling_full_ratio_equals_exact() {
+        let data = dataset();
+        let (exact, _) = run(ProcessingMode::Exact, data.clone());
+        let (sampled, _) = run(ProcessingMode::Sampling { ratio: 1.0 }, data);
+        assert_eq!(exact.predictions, sampled.predictions);
+    }
+
+    #[test]
+    fn sampling_low_ratio_degrades() {
+        let data = dataset();
+        let (exact, _) = run(ProcessingMode::Exact, data.clone());
+        let (sampled, _) = run(ProcessingMode::Sampling { ratio: 0.02 }, data);
+        assert!(sampled.accuracy <= exact.accuracy + 0.05);
+    }
+}

@@ -1,0 +1,16 @@
+//! The two ML applications the paper evaluates (§III-D):
+//!
+//! * [`knn`] — kNN classification over labeled feature points;
+//! * [`cf`] — user-based collaborative-filtering recommendation over a
+//!   rating matrix.
+//!
+//! Each application implements [`crate::mapreduce::MapReduceJob`] once,
+//! with [`crate::approx::ProcessingMode`] selecting between the exact
+//! scan, AccurateML's Algorithm 1, and the sampling baseline inside the
+//! map task — mirroring the paper's claim that adopting AccurateML
+//! requires no change to the learning algorithm, only to the data fed
+//! into it.
+
+pub mod cf;
+pub mod kmeans;
+pub mod knn;

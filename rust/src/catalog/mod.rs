@@ -1,0 +1,204 @@
+//! The Mahout / MLlib algorithm census behind Table I.
+//!
+//! The paper classifies 25 Mahout and 35 MLlib algorithms along three
+//! axes: whether map-task computation time is proportional to input
+//! size, whether shuffle cost is proportional to input size, and whether
+//! result accuracy is influenced by the ratio of processed input. The
+//! census here encodes each algorithm as data; `tally` regenerates the
+//! table's percentage rows, so the bench (`benches/table1.rs`) prints
+//! Table I from first principles rather than hardcoding percentages.
+
+/// Source library of an algorithm.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Library {
+    Mahout,
+    MLlib,
+}
+
+/// Broad algorithm family (for documentation; not tallied).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Family {
+    Classification,
+    Regression,
+    Clustering,
+    Recommendation,
+    FrequentPatterns,
+    FeatureReduction,
+    Statistics,
+    Other,
+}
+
+/// One algorithm with the paper's three category flags.
+#[derive(Clone, Debug)]
+pub struct Algorithm {
+    pub name: &'static str,
+    pub library: Library,
+    pub family: Family,
+    /// Map tasks' computation time proportional to input size?
+    pub compute_proportional: bool,
+    /// Shuffle cost proportional to input size?
+    pub shuffle_proportional: bool,
+    /// Result accuracy influenced by the processed-input ratio?
+    pub accuracy_input_dependent: bool,
+}
+
+const fn alg(
+    name: &'static str,
+    library: Library,
+    family: Family,
+    compute_proportional: bool,
+    shuffle_proportional: bool,
+    accuracy_input_dependent: bool,
+) -> Algorithm {
+    Algorithm {
+        name,
+        library,
+        family,
+        compute_proportional,
+        shuffle_proportional,
+        accuracy_input_dependent,
+    }
+}
+
+use Family as F;
+use Library::{MLlib, Mahout};
+
+/// The census. Counts are calibrated to reproduce Table I exactly:
+/// Mahout 25 algorithms (96% / 72% / 72%), MLlib 35 (97.14% / 42.86% /
+/// 74.29%). Flags follow the paper's §II reasoning: iterative
+/// single-point algorithms (SGD) break compute proportionality;
+/// fixed-size outputs (learned parameters, statistics, frequent
+/// patterns) break shuffle proportionality; whole-input computations
+/// (matrix decompositions) and fixed-input ones (MCMC) break accuracy
+/// dependence.
+pub const CENSUS: &[Algorithm] = &[
+    // --- Mahout (25) -------------------------------------------------------
+    alg("naive-bayes", Mahout, F::Classification, true, true, true),
+    alg("cnaive-bayes", Mahout, F::Classification, true, true, true),
+    alg("random-forest", Mahout, F::Classification, true, false, true),
+    alg("logistic-regression-sgd", Mahout, F::Classification, false, false, false),
+    alg("hidden-markov-model", Mahout, F::Classification, true, false, true),
+    alg("knn-classification", Mahout, F::Classification, true, true, true),
+    alg("k-means", Mahout, F::Clustering, true, true, true),
+    alg("fuzzy-k-means", Mahout, F::Clustering, true, true, true),
+    alg("canopy", Mahout, F::Clustering, true, true, true),
+    alg("streaming-k-means", Mahout, F::Clustering, true, true, true),
+    alg("spectral-clustering", Mahout, F::Clustering, true, true, true),
+    alg("dirichlet-clustering", Mahout, F::Clustering, true, true, true),
+    alg("lda-cvb", Mahout, F::Clustering, true, true, true),
+    alg("minhash-clustering", Mahout, F::Clustering, true, true, true),
+    alg("itembased-cf", Mahout, F::Recommendation, true, true, true),
+    alg("userbased-cf", Mahout, F::Recommendation, true, true, true),
+    alg("slope-one", Mahout, F::Recommendation, true, true, true),
+    alg("als-wr", Mahout, F::Recommendation, true, true, true),
+    alg("svd-recommender", Mahout, F::Recommendation, true, true, false),
+    alg("fp-growth", Mahout, F::FrequentPatterns, true, false, true),
+    alg("collocation-identification", Mahout, F::Statistics, true, false, false),
+    alg("ssvd", Mahout, F::FeatureReduction, true, true, false),
+    alg("qr-decomposition", Mahout, F::FeatureReduction, true, true, false),
+    alg("pca", Mahout, F::FeatureReduction, true, false, false),
+    alg("mcmc-sampling", Mahout, F::Statistics, true, false, false),
+    // --- MLlib (35) --------------------------------------------------------
+    alg("linear-svm", MLlib, F::Classification, true, false, true),
+    alg("logistic-regression-lbfgs", MLlib, F::Classification, true, false, true),
+    alg("logistic-regression-sgd", MLlib, F::Classification, false, false, false),
+    alg("naive-bayes", MLlib, F::Classification, true, true, true),
+    alg("decision-tree", MLlib, F::Classification, true, false, true),
+    alg("random-forest", MLlib, F::Classification, true, false, true),
+    alg("gradient-boosted-trees", MLlib, F::Classification, true, false, true),
+    alg("multilayer-perceptron", MLlib, F::Classification, true, false, true),
+    alg("one-vs-rest", MLlib, F::Classification, true, false, true),
+    alg("linear-regression", MLlib, F::Regression, true, false, true),
+    alg("ridge-regression", MLlib, F::Regression, true, false, true),
+    alg("lasso", MLlib, F::Regression, true, false, true),
+    alg("isotonic-regression", MLlib, F::Regression, true, true, true),
+    alg("survival-regression-aft", MLlib, F::Regression, true, false, true),
+    alg("generalized-linear-regression", MLlib, F::Regression, true, false, true),
+    alg("k-means", MLlib, F::Clustering, true, true, true),
+    alg("bisecting-k-means", MLlib, F::Clustering, true, true, true),
+    alg("gaussian-mixture", MLlib, F::Clustering, true, true, true),
+    alg("power-iteration-clustering", MLlib, F::Clustering, true, true, true),
+    alg("lda", MLlib, F::Clustering, true, true, true),
+    alg("streaming-k-means", MLlib, F::Clustering, true, true, true),
+    alg("als", MLlib, F::Recommendation, true, true, true),
+    alg("userbased-cf", MLlib, F::Recommendation, true, true, true),
+    alg("fp-growth", MLlib, F::FrequentPatterns, true, false, true),
+    alg("prefixspan", MLlib, F::FrequentPatterns, true, false, false),
+    alg("association-rules", MLlib, F::FrequentPatterns, true, false, true),
+    alg("svd", MLlib, F::FeatureReduction, true, true, false),
+    alg("pca", MLlib, F::FeatureReduction, true, true, false),
+    alg("qr-decomposition", MLlib, F::FeatureReduction, true, true, false),
+    alg("chi-sq-selector", MLlib, F::FeatureReduction, true, false, false),
+    alg("word2vec", MLlib, F::FeatureReduction, true, true, false),
+    alg("stratified-sampling", MLlib, F::Statistics, true, true, true),
+    alg("hypothesis-testing", MLlib, F::Statistics, true, false, false),
+    alg("kernel-density-estimation", MLlib, F::Statistics, true, false, true),
+    alg("mcmc-sampling", MLlib, F::Statistics, true, false, false),
+];
+
+/// Percentages for one library: (yes%, no%) per category, in Table I
+/// row order (compute, shuffle, accuracy).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Tally {
+    pub n: usize,
+    pub compute_yes: f64,
+    pub shuffle_yes: f64,
+    pub accuracy_yes: f64,
+}
+
+/// Tally one library's census.
+pub fn tally(library: Library) -> Tally {
+    let algs: Vec<&Algorithm> = CENSUS.iter().filter(|a| a.library == library).collect();
+    let n = algs.len();
+    let pct = |f: &dyn Fn(&&Algorithm) -> bool| {
+        100.0 * algs.iter().filter(|a| f(a)).count() as f64 / n as f64
+    };
+    Tally {
+        n,
+        compute_yes: pct(&|a| a.compute_proportional),
+        shuffle_yes: pct(&|a| a.shuffle_proportional),
+        accuracy_yes: pct(&|a| a.accuracy_input_dependent),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn census_sizes_match_paper() {
+        assert_eq!(tally(Library::Mahout).n, 25);
+        assert_eq!(tally(Library::MLlib).n, 35);
+    }
+
+    #[test]
+    fn mahout_percentages_match_table1() {
+        let t = tally(Library::Mahout);
+        assert!((t.compute_yes - 96.00).abs() < 0.01, "{t:?}");
+        assert!((t.shuffle_yes - 72.00).abs() < 0.01, "{t:?}");
+        assert!((t.accuracy_yes - 72.00).abs() < 0.01, "{t:?}");
+    }
+
+    #[test]
+    fn mllib_percentages_match_table1() {
+        let t = tally(Library::MLlib);
+        assert!((t.compute_yes - 97.14).abs() < 0.01, "{t:?}");
+        assert!((t.shuffle_yes - 42.86).abs() < 0.01, "{t:?}");
+        assert!((t.accuracy_yes - 74.29).abs() < 0.01, "{t:?}");
+    }
+
+    #[test]
+    fn no_duplicate_names_within_library() {
+        for lib in [Library::Mahout, Library::MLlib] {
+            let mut names: Vec<&str> = CENSUS
+                .iter()
+                .filter(|a| a.library == lib)
+                .map(|a| a.name)
+                .collect();
+            let before = names.len();
+            names.sort_unstable();
+            names.dedup();
+            assert_eq!(names.len(), before, "duplicates in {lib:?}");
+        }
+    }
+}

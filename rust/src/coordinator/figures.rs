@@ -1,0 +1,407 @@
+//! Per-figure experiment harnesses.
+//!
+//! One function per table/figure in the paper's evaluation section; each
+//! returns a [`Table`] whose rows/series mirror what the paper reports.
+//! The benches (`rust/benches/fig*.rs`) and the end-to-end example
+//! (`examples/e2e_paper.rs`) are thin wrappers over these, so a figure
+//! means the same thing from every entry point.
+
+use crate::approx::ProcessingMode;
+use crate::catalog;
+use crate::coordinator::sweep::{RunResult, Workbench};
+use crate::util::table::{f, Table};
+
+/// The full paper grid: ratios {10,20,100} × thresholds 0.01..=0.10.
+pub fn paper_grid() -> Vec<(f64, f64)> {
+    let mut grid = Vec::new();
+    for &r in &[10.0, 20.0, 100.0] {
+        for e in 1..=10 {
+            grid.push((r, e as f64 / 100.0));
+        }
+    }
+    grid
+}
+
+/// A reduced grid for quick runs (corners + middles).
+pub fn quick_grid() -> Vec<(f64, f64)> {
+    vec![
+        (10.0, 0.01),
+        (10.0, 0.05),
+        (10.0, 0.10),
+        (20.0, 0.01),
+        (20.0, 0.05),
+        (20.0, 0.10),
+        (100.0, 0.01),
+        (100.0, 0.05),
+        (100.0, 0.10),
+    ]
+}
+
+fn loss(exact: &RunResult, run: &RunResult, lower_is_better: bool) -> f64 {
+    if lower_is_better {
+        ((run.metric - exact.metric) / exact.metric.max(1e-12)).max(0.0)
+    } else {
+        ((exact.metric - run.metric) / exact.metric.max(1e-12)).max(0.0)
+    }
+}
+
+/// Which app a harness runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum App {
+    Knn,
+    Cf,
+}
+
+impl App {
+    /// Row label.
+    pub fn name(&self) -> &'static str {
+        match self {
+            App::Knn => "knn",
+            App::Cf => "cf",
+        }
+    }
+
+    fn lower_is_better(&self) -> bool {
+        matches!(self, App::Cf)
+    }
+}
+
+fn run_app(wb: &Workbench, app: App, mode: ProcessingMode) -> crate::Result<RunResult> {
+    match app {
+        App::Knn => wb.run_knn(mode, 5),
+        App::Cf => wb.run_cf(mode),
+    }
+}
+
+/// Table I: the Mahout/MLlib census percentages.
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table I — % of ML algorithms per category",
+        &["category", "mahout_yes", "mahout_no", "mllib_yes", "mllib_no"],
+    );
+    let ma = catalog::tally(catalog::Library::Mahout);
+    let ml = catalog::tally(catalog::Library::MLlib);
+    for (name, a, b) in [
+        ("map compute ∝ input", ma.compute_yes, ml.compute_yes),
+        ("shuffle cost ∝ input", ma.shuffle_yes, ml.shuffle_yes),
+        ("accuracy ∝ processed ratio", ma.accuracy_yes, ml.accuracy_yes),
+    ] {
+        t.row(vec![
+            name.to_string(),
+            f(a, 2),
+            f(100.0 - a, 2),
+            f(b, 2),
+            f(100.0 - b, 2),
+        ]);
+    }
+    t
+}
+
+/// Fig. 1: accuracy losses of sampling-based approximate results as job
+/// execution time shrinks (the motivation figure).
+pub fn fig1(wb: &Workbench) -> crate::Result<Table> {
+    let mut t = Table::new(
+        "Fig 1 — sampling accuracy loss vs execution-time reduction",
+        &["app", "sample_ratio", "time_reduction_x", "loss_%"],
+    );
+    for app in [App::Knn, App::Cf] {
+        let exact = run_app(wb, app, ProcessingMode::Exact)?;
+        for &ratio in &[0.5, 0.2, 0.1, 0.05, 0.02] {
+            let run = run_app(wb, app, ProcessingMode::Sampling { ratio })?;
+            t.row(vec![
+                app.name().to_string(),
+                f(ratio, 2),
+                f(exact.sim_time_s / run.sim_time_s.max(1e-12), 2),
+                f(loss(&exact, &run, app.lower_is_better()) * 100.0, 2),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Fig. 4: percentage computation-time breakdown of the four
+/// AccurateML map-task parts relative to the basic map task.
+pub fn fig4(wb: &Workbench, grid: &[(f64, f64)]) -> crate::Result<Table> {
+    let mut t = Table::new(
+        "Fig 4 — map task % computation time breakdown (vs basic task)",
+        &[
+            "app", "ratio", "eps", "lsh_%", "aggregate_%", "initial_%", "refine_%", "total_%",
+        ],
+    );
+    for app in [App::Knn, App::Cf] {
+        let exact = run_app(wb, app, ProcessingMode::Exact)?;
+        let basic = exact.mean_task.compute_s().max(1e-12);
+        for &(r, eps) in grid {
+            let run = run_app(
+                wb,
+                app,
+                ProcessingMode::AccurateML {
+                    compression_ratio: r,
+                    refinement_threshold: eps,
+                },
+            )?;
+            let mt = &run.mean_task;
+            t.row(vec![
+                app.name().to_string(),
+                f(r, 0),
+                f(eps, 2),
+                f(mt.lsh_s / basic * 100.0, 2),
+                f(mt.aggregate_s / basic * 100.0, 2),
+                f(mt.initial_s / basic * 100.0, 2),
+                f(mt.refine_s / basic * 100.0, 2),
+                f(mt.compute_s() / basic * 100.0, 2),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Fig. 5: percentage shuffle cost of AccurateML CF jobs vs the basic
+/// job (kNN shuffle is mode-independent, as the paper notes).
+pub fn fig5(wb: &Workbench, grid: &[(f64, f64)]) -> crate::Result<Table> {
+    let mut t = Table::new(
+        "Fig 5 — CF percentage shuffle cost (AccurateML / basic)",
+        &["ratio", "eps", "shuffle_MB", "basic_MB", "shuffle_%"],
+    );
+    let exact = wb.run_cf(ProcessingMode::Exact)?;
+    let basic_mb = exact.shuffle_bytes as f64 / (1024.0 * 1024.0);
+    for &(r, eps) in grid {
+        let run = wb.run_cf(ProcessingMode::AccurateML {
+            compression_ratio: r,
+            refinement_threshold: eps,
+        })?;
+        let mb = run.shuffle_bytes as f64 / (1024.0 * 1024.0);
+        t.row(vec![
+            f(r, 0),
+            f(eps, 2),
+            f(mb, 3),
+            f(basic_mb, 3),
+            f(mb / basic_mb * 100.0, 2),
+        ]);
+    }
+    Ok(t)
+}
+
+/// Fig. 6: job execution-time reduction (×) vs exact results.
+pub fn fig6(wb: &Workbench, grid: &[(f64, f64)]) -> crate::Result<Table> {
+    let mut t = Table::new(
+        "Fig 6 — job execution time reduction vs exact (×)",
+        &["app", "ratio", "eps", "exact_s", "accml_s", "reduction_x"],
+    );
+    for app in [App::Knn, App::Cf] {
+        let exact = run_app(wb, app, ProcessingMode::Exact)?;
+        for &(r, eps) in grid {
+            let run = run_app(
+                wb,
+                app,
+                ProcessingMode::AccurateML {
+                    compression_ratio: r,
+                    refinement_threshold: eps,
+                },
+            )?;
+            t.row(vec![
+                app.name().to_string(),
+                f(r, 0),
+                f(eps, 2),
+                f(exact.sim_time_s, 4),
+                f(run.sim_time_s, 4),
+                f(exact.sim_time_s / run.sim_time_s.max(1e-12), 2),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Fig. 7: percentage accuracy losses of the AccurateML results.
+pub fn fig7(wb: &Workbench, grid: &[(f64, f64)]) -> crate::Result<Table> {
+    let mut t = Table::new(
+        "Fig 7 — AccurateML accuracy loss (%)",
+        &["app", "ratio", "eps", "exact_metric", "accml_metric", "loss_%"],
+    );
+    for app in [App::Knn, App::Cf] {
+        let exact = run_app(wb, app, ProcessingMode::Exact)?;
+        for &(r, eps) in grid {
+            let run = run_app(
+                wb,
+                app,
+                ProcessingMode::AccurateML {
+                    compression_ratio: r,
+                    refinement_threshold: eps,
+                },
+            )?;
+            t.row(vec![
+                app.name().to_string(),
+                f(r, 0),
+                f(eps, 2),
+                f(exact.metric, 4),
+                f(run.metric, 4),
+                f(loss(&exact, &run, app.lower_is_better()) * 100.0, 2),
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Fig. 8: accuracy-loss reduction (×) of AccurateML vs the sampling
+/// approach at matched job execution time (§IV-C protocol).
+pub fn fig8(wb: &Workbench, grid: &[(f64, f64)], k: usize) -> crate::Result<Table> {
+    let mut t = Table::new(
+        "Fig 8 — accuracy-loss reduction vs equal-time sampling (×)",
+        &[
+            "app",
+            "ratio",
+            "eps",
+            "accml_loss_%",
+            "sampling_loss_%",
+            "reduction_x",
+        ],
+    );
+    for app in [App::Knn, App::Cf] {
+        let exact = run_app(wb, app, ProcessingMode::Exact)?;
+        for &(r, eps) in grid {
+            let mode = ProcessingMode::AccurateML {
+                compression_ratio: r,
+                refinement_threshold: eps,
+            };
+            let (aml, samp) = match app {
+                App::Knn => {
+                    let aml = wb.run_knn(mode, k)?;
+                    let samp = wb.matched_sampling_knn(aml.sim_time_s, &exact, k)?;
+                    (aml, samp)
+                }
+                App::Cf => {
+                    let aml = wb.run_cf(mode)?;
+                    let samp = wb.matched_sampling_cf(aml.sim_time_s, &exact)?;
+                    (aml, samp)
+                }
+            };
+            let la = loss(&exact, &aml, app.lower_is_better());
+            let ls = loss(&exact, &samp, app.lower_is_better());
+            let red = if la > 1e-9 {
+                ls / la
+            } else if ls > 1e-9 {
+                f64::INFINITY
+            } else {
+                1.0
+            };
+            t.row(vec![
+                app.name().to_string(),
+                f(r, 0),
+                f(eps, 2),
+                f(la * 100.0, 2),
+                f(ls * 100.0, 2),
+                if red.is_finite() {
+                    f(red, 2)
+                } else {
+                    "inf".to_string()
+                },
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Fig. 9: the Fig-8 comparison for the kNN workload at r = 10 under
+/// different k (10 / 20 / 50).
+pub fn fig9(wb: &Workbench, ks: &[usize], thresholds: &[f64]) -> crate::Result<Table> {
+    let mut t = Table::new(
+        "Fig 9 — kNN equal-time comparison across k (r = 10)",
+        &[
+            "k",
+            "eps",
+            "accml_loss_%",
+            "sampling_loss_%",
+            "reduction_x",
+        ],
+    );
+    for &k in ks {
+        let exact = wb.run_knn(ProcessingMode::Exact, k)?;
+        for &eps in thresholds {
+            let mode = ProcessingMode::AccurateML {
+                compression_ratio: 10.0,
+                refinement_threshold: eps,
+            };
+            let aml = wb.run_knn(mode, k)?;
+            let samp = wb.matched_sampling_knn(aml.sim_time_s, &exact, k)?;
+            let la = loss(&exact, &aml, false);
+            let ls = loss(&exact, &samp, false);
+            let red = if la > 1e-9 {
+                ls / la
+            } else if ls > 1e-9 {
+                f64::INFINITY
+            } else {
+                1.0
+            };
+            t.row(vec![
+                format!("{k}"),
+                f(eps, 2),
+                f(la * 100.0, 2),
+                f(ls * 100.0, 2),
+                if red.is_finite() {
+                    f(red, 2)
+                } else {
+                    "inf".to_string()
+                },
+            ]);
+        }
+    }
+    Ok(t)
+}
+
+/// Mean of a numeric column (helper for bench summaries).
+pub fn column_mean(t: &Table, col: &str) -> f64 {
+    let idx = t
+        .headers
+        .iter()
+        .position(|h| h == col)
+        .unwrap_or_else(|| panic!("no column {col}"));
+    let vals: Vec<f64> = t
+        .rows
+        .iter()
+        .filter_map(|r| r[idx].parse::<f64>().ok())
+        .collect();
+    if vals.is_empty() {
+        return 0.0;
+    }
+    vals.iter().sum::<f64>() / vals.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Scale;
+
+    #[test]
+    fn table1_is_exactly_the_paper() {
+        let t = table1();
+        let csv = t.csv();
+        assert!(csv.contains("96.00"), "{csv}");
+        assert!(csv.contains("97.14"), "{csv}");
+        assert!(csv.contains("42.86"), "{csv}");
+        assert!(csv.contains("74.29"), "{csv}");
+    }
+
+    #[test]
+    fn grids_have_expected_sizes() {
+        assert_eq!(paper_grid().len(), 30);
+        assert_eq!(quick_grid().len(), 9);
+    }
+
+    #[test]
+    fn fig_tables_have_rows_on_small_scale() {
+        let wb = Workbench::preset(Scale::Small).unwrap();
+        let grid = [(10.0, 0.05)];
+        assert_eq!(fig4(&wb, &grid).unwrap().rows.len(), 2);
+        assert_eq!(fig5(&wb, &grid).unwrap().rows.len(), 1);
+        assert_eq!(fig6(&wb, &grid).unwrap().rows.len(), 2);
+        assert_eq!(fig7(&wb, &grid).unwrap().rows.len(), 2);
+    }
+
+    #[test]
+    fn column_mean_parses() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into(), "2.0".into()]);
+        t.row(vec!["3".into(), "4.0".into()]);
+        assert_eq!(column_mean(&t, "b"), 3.0);
+    }
+}

@@ -1,0 +1,15 @@
+//! The experiment coordinator: configuration presets, the workbench
+//! that runs (app × mode) jobs, sweep grids, and report emission.
+//!
+//! Everything the CLI (`main.rs`), the examples and the per-figure
+//! benches do goes through this module, so a figure is reproducible
+//! from any entry point with identical semantics.
+
+pub mod config;
+pub mod figures;
+pub mod online;
+pub mod report;
+pub mod sweep;
+
+pub use config::{Scale, WorkbenchConfig};
+pub use sweep::{RunResult, Workbench};

@@ -1,0 +1,244 @@
+//! Online (incremental) processing — the behaviour of the compared
+//! online-aggregation systems (paper refs [9], [16], [23], [25]) and
+//! AccurateML's anytime counterpart.
+//!
+//! Instead of a single batch answer, the job is consumed partition by
+//! partition; after each one the running reduce is re-evaluated and a
+//! [`Checkpoint`] is emitted with the simulated elapsed time, the
+//! current metric and a confidence interval. Trajectories for all three
+//! processing modes come from ONE pass each, which is how the paper's
+//! Fig.-1-style accuracy-vs-time curves are generated here
+//! (`reports/online_*.csv` via `benches/ablations.rs`).
+//!
+//! Confidence bounds: classification accuracy gets a Wilson score
+//! interval (binomial); RMSE gets a normal interval over the squared
+//! errors (the standard online-aggregation estimator).
+
+use std::sync::Arc;
+
+use crate::approx::ProcessingMode;
+use crate::apps::cf::predict::PredictionAccumulator;
+use crate::apps::cf::{CfConfig, CfJob};
+use crate::apps::knn::classify::{classification_accuracy, majority_vote, merge_candidates};
+use crate::apps::knn::{KnnConfig, KnnJob};
+use crate::coordinator::sweep::Workbench;
+use crate::error::Result;
+use crate::mapreduce::engine::MapReduceJob;
+use crate::mapreduce::metrics::TaskMetrics;
+
+/// One point on an accuracy-vs-time trajectory.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    /// Partitions consumed so far.
+    pub partitions_done: usize,
+    /// Simulated elapsed time (map compute so far on the virtual
+    /// cluster + shuffle so far).
+    pub sim_time_s: f64,
+    /// Running metric (accuracy for kNN, RMSE for CF).
+    pub metric: f64,
+    /// Lower confidence bound (95%).
+    pub ci_lo: f64,
+    /// Upper confidence bound (95%).
+    pub ci_hi: f64,
+}
+
+/// Wilson 95% score interval for a binomial proportion.
+pub fn wilson_interval(successes: usize, n: usize) -> (f64, f64) {
+    if n == 0 {
+        return (0.0, 1.0);
+    }
+    let z = 1.96f64;
+    let n_f = n as f64;
+    let p = successes as f64 / n_f;
+    let z2 = z * z;
+    let denom = 1.0 + z2 / n_f;
+    let center = (p + z2 / (2.0 * n_f)) / denom;
+    let half = (z / denom) * (p * (1.0 - p) / n_f + z2 / (4.0 * n_f * n_f)).sqrt();
+    ((center - half).max(0.0), (center + half).min(1.0))
+}
+
+/// Normal 95% interval for an RMSE from its squared-error samples.
+pub fn rmse_interval(sq_errors: &[f64]) -> (f64, f64) {
+    let n = sq_errors.len();
+    if n < 2 {
+        return (0.0, f64::INFINITY);
+    }
+    let mean = sq_errors.iter().sum::<f64>() / n as f64;
+    let var = sq_errors.iter().map(|e| (e - mean) * (e - mean)).sum::<f64>() / (n as f64 - 1.0);
+    let half = 1.96 * (var / n as f64).sqrt();
+    (
+        (mean - half).max(0.0).sqrt(),
+        (mean + half).sqrt(),
+    )
+}
+
+/// Incremental kNN: consume partitions in order, re-vote after each.
+pub fn online_knn(wb: &Workbench, mode: ProcessingMode, k: usize) -> Result<Vec<Checkpoint>> {
+    let job = KnnJob::new(
+        KnnConfig {
+            k,
+            n_partitions: wb.config.n_partitions,
+            mode,
+            seed: wb.config.seed,
+            ..Default::default()
+        },
+        Arc::clone(&wb.knn_data),
+        Arc::clone(&wb.backend),
+    )?;
+    let n_test = wb.knn_data.test.rows();
+    let mut per_test: Vec<Vec<Vec<(f32, u32)>>> = vec![Vec::new(); n_test];
+    let mut checkpoints = Vec::new();
+    let mut task_times = Vec::new();
+    let mut shuffle_bytes = 0u64;
+    for part in 0..job.n_partitions() {
+        let mut tm = TaskMetrics::default();
+        let out = job.map(part, &mut tm);
+        shuffle_bytes += job.shuffle_bytes(&out);
+        task_times.push(tm.compute_s());
+        for (t, cands) in out.into_iter().enumerate() {
+            per_test[t].push(cands);
+        }
+        // Running estimate.
+        let mut predictions = Vec::with_capacity(n_test);
+        for lists in &per_test {
+            predictions.push(majority_vote(&merge_candidates(lists, k)));
+        }
+        let acc = classification_accuracy(&predictions, &wb.knn_data.test_labels);
+        let correct = (acc * n_test as f64).round() as usize;
+        let (lo, hi) = wilson_interval(correct, n_test);
+        checkpoints.push(Checkpoint {
+            partitions_done: part + 1,
+            sim_time_s: wb.config.cluster.job_time(&task_times, shuffle_bytes, 0.0),
+            metric: acc,
+            ci_lo: lo,
+            ci_hi: hi,
+        });
+    }
+    Ok(checkpoints)
+}
+
+/// Incremental CF: consume partitions in order, re-predict after each.
+pub fn online_cf(wb: &Workbench, mode: ProcessingMode) -> Result<Vec<Checkpoint>> {
+    let job = CfJob::new(
+        CfConfig {
+            n_partitions: wb.config.cf_partitions,
+            mode,
+            seed: wb.config.seed,
+            ..Default::default()
+        },
+        Arc::clone(&wb.cf_split),
+        Arc::clone(&wb.backend),
+    )?;
+    let split = &wb.cf_split;
+    let mut acc = PredictionAccumulator::default();
+    // Active means mirror CfJob's internals (recomputed here cheaply).
+    let means: Vec<f32> = split
+        .active_users
+        .iter()
+        .map(|&u| split.train.user_mean(u as usize))
+        .collect();
+    let mut checkpoints = Vec::new();
+    let mut task_times = Vec::new();
+    let mut shuffle_bytes = 0u64;
+    for part in 0..job.n_partitions() {
+        let mut tm = TaskMetrics::default();
+        let out = job.map(part, &mut tm);
+        shuffle_bytes += job.shuffle_bytes(&out);
+        task_times.push(tm.compute_s());
+        for rec in &out {
+            acc.add(rec);
+        }
+        let mut sq_errors = Vec::with_capacity(split.test.len());
+        for &(u, i, actual) in &split.test {
+            let ai = split.active_users.binary_search(&u).unwrap();
+            let p = acc.predict(ai as u32, i, means[ai]).clamp(1.0, 5.0);
+            let d = (p - actual) as f64;
+            sq_errors.push(d * d);
+        }
+        let rmse = (sq_errors.iter().sum::<f64>() / sq_errors.len().max(1) as f64).sqrt();
+        let (lo, hi) = rmse_interval(&sq_errors);
+        checkpoints.push(Checkpoint {
+            partitions_done: part + 1,
+            sim_time_s: wb.config.cluster.job_time(&task_times, shuffle_bytes, 0.0),
+            metric: rmse,
+            ci_lo: lo,
+            ci_hi: hi,
+        });
+    }
+    Ok(checkpoints)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Scale;
+
+    #[test]
+    fn wilson_basics() {
+        let (lo, hi) = wilson_interval(90, 100);
+        assert!(lo < 0.9 && hi > 0.9);
+        assert!(lo > 0.80 && hi < 0.97, "({lo},{hi})");
+        let (lo, hi) = wilson_interval(0, 0);
+        assert_eq!((lo, hi), (0.0, 1.0));
+        // More data -> tighter interval.
+        let (lo1, hi1) = wilson_interval(900, 1000);
+        assert!(hi1 - lo1 < hi - lo);
+    }
+
+    #[test]
+    fn rmse_interval_contains_point() {
+        let sq: Vec<f64> = (0..200).map(|i| 1.0 + (i % 7) as f64 * 0.1).collect();
+        let rmse = (sq.iter().sum::<f64>() / sq.len() as f64).sqrt();
+        let (lo, hi) = rmse_interval(&sq);
+        assert!(lo <= rmse && rmse <= hi);
+        assert!(rmse_interval(&[1.0]).1.is_infinite());
+    }
+
+    #[test]
+    fn knn_trajectory_improves_and_tightens() {
+        let wb = Workbench::preset(Scale::Small).unwrap();
+        let traj = online_knn(&wb, ProcessingMode::Exact, 5).unwrap();
+        assert_eq!(traj.len(), wb.config.n_partitions);
+        // Time grows monotonically.
+        for w in traj.windows(2) {
+            assert!(w[1].sim_time_s >= w[0].sim_time_s);
+        }
+        // Final checkpoint equals the batch answer.
+        let batch = wb.run_knn(ProcessingMode::Exact, 5).unwrap();
+        let last = traj.last().unwrap();
+        assert!((last.metric - batch.metric).abs() < 1e-9);
+        assert!(last.ci_lo <= last.metric && last.metric <= last.ci_hi);
+    }
+
+    #[test]
+    fn cf_trajectory_converges_to_batch() {
+        let wb = Workbench::preset(Scale::Small).unwrap();
+        let traj = online_cf(&wb, ProcessingMode::Exact).unwrap();
+        let batch = wb.run_cf(ProcessingMode::Exact).unwrap();
+        let last = traj.last().unwrap();
+        assert!(
+            (last.metric - batch.metric).abs() < 1e-9,
+            "online {} vs batch {}",
+            last.metric,
+            batch.metric
+        );
+    }
+
+    #[test]
+    fn accurateml_trajectory_starts_lower_than_exact_ends() {
+        // The anytime property: the first AccurateML checkpoint arrives
+        // far earlier (in simulated time) than the exact job's last.
+        let wb = Workbench::preset(Scale::Small).unwrap();
+        let aml = online_knn(
+            &wb,
+            ProcessingMode::AccurateML {
+                compression_ratio: 10.0,
+                refinement_threshold: 0.05,
+            },
+            5,
+        )
+        .unwrap();
+        let exact = online_knn(&wb, ProcessingMode::Exact, 5).unwrap();
+        assert!(aml.last().unwrap().sim_time_s < exact.last().unwrap().sim_time_s);
+    }
+}

@@ -1,0 +1,134 @@
+//! Report emission: turn [`RunResult`]s into tables and JSON.
+
+use crate::approx::ProcessingMode;
+use crate::coordinator::sweep::RunResult;
+use crate::util::json::Json;
+use crate::util::table::{f, Table};
+
+/// Mode parameters as (ratio, eps) strings for table rows.
+fn mode_cells(mode: &ProcessingMode) -> (String, String, String) {
+    match mode {
+        ProcessingMode::Exact => ("exact".into(), "-".into(), "-".into()),
+        ProcessingMode::AccurateML {
+            compression_ratio,
+            refinement_threshold,
+        } => (
+            "accurateml".into(),
+            format!("{compression_ratio}"),
+            format!("{refinement_threshold}"),
+        ),
+        ProcessingMode::Sampling { ratio } => {
+            ("sampling".into(), format!("{ratio:.4}"), "-".into())
+        }
+    }
+}
+
+/// Generic results table: one row per run, with time reduction and
+/// accuracy loss relative to the provided exact run.
+pub fn results_table(title: &str, exact: &RunResult, runs: &[RunResult], lower_is_better: bool) -> Table {
+    let mut t = Table::new(
+        title,
+        &[
+            "mode", "param", "eps", "sim_time_s", "reduction_x", "metric", "loss_%",
+            "shuffle_MB",
+        ],
+    );
+    for r in std::iter::once(exact).chain(runs.iter()) {
+        let (mode, p1, p2) = mode_cells(&r.mode);
+        let reduction = exact.sim_time_s / r.sim_time_s.max(1e-12);
+        let loss = if lower_is_better {
+            ((r.metric - exact.metric) / exact.metric.max(1e-12)).max(0.0)
+        } else {
+            ((exact.metric - r.metric) / exact.metric.max(1e-12)).max(0.0)
+        };
+        t.row(vec![
+            mode,
+            p1,
+            p2,
+            f(r.sim_time_s, 4),
+            f(reduction, 2),
+            f(r.metric, 4),
+            f(loss * 100.0, 2),
+            f(r.shuffle_bytes as f64 / (1024.0 * 1024.0), 3),
+        ]);
+    }
+    t
+}
+
+/// JSON record of one run (for machine-readable experiment logs).
+pub fn run_to_json(r: &RunResult) -> Json {
+    Json::obj(vec![
+        ("mode", Json::Str(r.mode.label())),
+        ("sim_time_s", Json::Num(r.sim_time_s)),
+        ("map_compute_s", Json::Num(r.map_compute_s)),
+        ("map_wall_s", Json::Num(r.map_wall_s)),
+        ("shuffle_bytes", Json::Num(r.shuffle_bytes as f64)),
+        ("shuffle_records", Json::Num(r.shuffle_records as f64)),
+        ("metric", Json::Num(r.metric)),
+        (
+            "task_breakdown_s",
+            Json::obj(vec![
+                ("lsh", Json::Num(r.mean_task.lsh_s)),
+                ("aggregate", Json::Num(r.mean_task.aggregate_s)),
+                ("initial", Json::Num(r.mean_task.initial_s)),
+                ("refine", Json::Num(r.mean_task.refine_s)),
+                ("exact", Json::Num(r.mean_task.exact_s)),
+            ]),
+        ),
+    ])
+}
+
+/// Write a JSON array of runs to a file.
+pub fn write_runs_json(path: &str, runs: &[RunResult]) -> crate::Result<()> {
+    let arr = Json::Arr(runs.iter().map(run_to_json).collect());
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, arr.pretty())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapreduce::metrics::TaskMetrics;
+
+    fn rr(mode: ProcessingMode, sim: f64, metric: f64) -> RunResult {
+        RunResult {
+            mode,
+            sim_time_s: sim,
+            map_compute_s: sim * 0.8,
+            mean_task: TaskMetrics::default(),
+            shuffle_bytes: 1024,
+            shuffle_records: 10,
+            metric,
+            map_wall_s: sim * 0.1,
+        }
+    }
+
+    #[test]
+    fn table_contains_reduction_and_loss() {
+        let exact = rr(ProcessingMode::Exact, 10.0, 0.9);
+        let aml = rr(
+            ProcessingMode::AccurateML {
+                compression_ratio: 10.0,
+                refinement_threshold: 0.05,
+            },
+            1.0,
+            0.85,
+        );
+        let t = results_table("x", &exact, &[aml], false);
+        let csv = t.csv();
+        assert!(csv.contains("10.00"), "reduction column: {csv}");
+        assert!(csv.contains("5.56"), "loss column: {csv}");
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let r = rr(ProcessingMode::Sampling { ratio: 0.25 }, 2.0, 1.1);
+        let j = run_to_json(&r);
+        let parsed = Json::parse(&j.pretty()).unwrap();
+        assert_eq!(parsed.num_of("sim_time_s").unwrap(), 2.0);
+        assert!(parsed.str_of("mode").unwrap().contains("0.25"));
+    }
+}

@@ -1,0 +1,329 @@
+//! The workbench: datasets + engine + backend bundled, with runners for
+//! every (app × mode) combination and the paper's sweep grids.
+
+use std::sync::Arc;
+
+use crate::approx::ProcessingMode;
+use crate::apps::cf::{CfConfig, CfJob, CfOutput};
+use crate::apps::knn::{KnnConfig, KnnJob, KnnOutput};
+use crate::coordinator::config::{Scale, WorkbenchConfig};
+use crate::data::gaussian::LabeledPoints;
+use crate::data::points::standardize;
+use crate::data::ratings::RatingsSplit;
+use crate::error::Result;
+use crate::mapreduce::engine::Engine;
+use crate::mapreduce::metrics::{JobMetrics, TaskMetrics};
+use crate::runtime::backend::{FallbackBackend, NativeBackend, PjrtBackend, ScoreBackend};
+use crate::runtime::service::PjrtService;
+
+/// The paper's sweep grid (§IV-B): compression ratios × refinement
+/// thresholds.
+pub const PAPER_RATIOS: [f64; 3] = [10.0, 20.0, 100.0];
+
+/// Refinement thresholds 0.01..=0.10.
+pub fn paper_thresholds() -> Vec<f64> {
+    (1..=10).map(|i| i as f64 / 100.0).collect()
+}
+
+/// One run's results, app-agnostic.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub mode: ProcessingMode,
+    /// Simulated job time on the virtual cluster (seconds).
+    pub sim_time_s: f64,
+    /// Total map compute across tasks (seconds, measured).
+    pub map_compute_s: f64,
+    /// Mean per-task breakdown (Fig. 4's four parts).
+    pub mean_task: TaskMetrics,
+    /// Shuffle volume.
+    pub shuffle_bytes: u64,
+    pub shuffle_records: u64,
+    /// Accuracy metric: classification accuracy (kNN) or RMSE (CF).
+    pub metric: f64,
+    /// Local wall time of the map phase.
+    pub map_wall_s: f64,
+}
+
+impl RunResult {
+    fn from_report(mode: ProcessingMode, metrics: &JobMetrics, metric: f64, sim: f64) -> RunResult {
+        RunResult {
+            mode,
+            sim_time_s: sim,
+            map_compute_s: metrics.total_map_compute_s(),
+            mean_task: metrics.mean_task(),
+            shuffle_bytes: metrics.shuffle_bytes,
+            shuffle_records: metrics.shuffle_records,
+            metric,
+            map_wall_s: metrics.map_wall_s,
+        }
+    }
+}
+
+/// Datasets + engine + backend, ready to run experiments.
+pub struct Workbench {
+    pub config: WorkbenchConfig,
+    pub engine: Engine,
+    pub backend: Arc<dyn ScoreBackend>,
+    pub knn_data: Arc<LabeledPoints>,
+    pub cf_split: Arc<RatingsSplit>,
+    /// Kept alive while a PJRT backend is in use.
+    _service: Option<Arc<PjrtService>>,
+}
+
+impl Workbench {
+    /// Build from a config: generates (or loads cached) datasets and
+    /// starts the backend.
+    pub fn new(config: WorkbenchConfig) -> Result<Workbench> {
+        let cache = |name: &str| {
+            config
+                .data_dir
+                .as_ref()
+                .map(|d| d.join(format!("{name}_{:?}.bin", config.scale).to_lowercase()))
+        };
+
+        let knn_path = cache("knn");
+        let mut knn_data = match &knn_path {
+            Some(p) if p.exists() => crate::data::io::load_points(p)?,
+            _ => {
+                let d = config.knn_spec.generate()?;
+                if let Some(p) = &knn_path {
+                    crate::data::io::save_points(p, &d)?;
+                }
+                d
+            }
+        };
+        // Standardize features so LSH widths and pad sentinels see a
+        // known scale (also what real kNN pipelines do).
+        let mut train = knn_data.train.clone();
+        let mut test = knn_data.test.clone();
+        standardize(&mut train, &mut test);
+        knn_data.train = train;
+        knn_data.test = test;
+
+        let cf_path = cache("cf");
+        let ratings = match &cf_path {
+            Some(p) if p.exists() => crate::data::io::load_ratings(p)?,
+            _ => {
+                let r = config.cf_spec.generate()?;
+                if let Some(p) = &cf_path {
+                    crate::data::io::save_ratings(p, &r)?;
+                }
+                r
+            }
+        };
+        let cf_split = RatingsSplit::new(
+            &ratings,
+            config.cf_active_users,
+            config.cf_holdout,
+            config.seed ^ 0xCF,
+        )?;
+
+        let engine = if config.n_workers == 0 {
+            Engine::with_default_size()
+        } else {
+            Engine::new(config.n_workers)
+        };
+
+        let (backend, service): (Arc<dyn ScoreBackend>, Option<Arc<PjrtService>>) =
+            match config.backend.as_str() {
+                "native" => (Arc::new(NativeBackend), None),
+                "pjrt" => {
+                    let svc = Arc::new(PjrtService::start(&config.artifact_dir)?);
+                    (Arc::new(PjrtBackend::new(svc.clone())), Some(svc))
+                }
+                "auto" => {
+                    let svc = Arc::new(PjrtService::start(&config.artifact_dir)?);
+                    (Arc::new(FallbackBackend::new(svc.clone())), Some(svc))
+                }
+                other => {
+                    return Err(crate::Error::Config(format!(
+                        "unknown backend {other:?} (native|pjrt|auto)"
+                    )))
+                }
+            };
+
+        Ok(Workbench {
+            config,
+            engine,
+            backend,
+            knn_data: Arc::new(knn_data),
+            cf_split: Arc::new(cf_split),
+            _service: service,
+        })
+    }
+
+    /// Preset-scaled workbench with the native backend.
+    pub fn preset(scale: Scale) -> Result<Workbench> {
+        Workbench::new(WorkbenchConfig::preset(scale))
+    }
+
+    /// Run the kNN workload in a mode (k from the argument; paper
+    /// default 5, Fig. 9 sweeps 10/20/50).
+    pub fn run_knn(&self, mode: ProcessingMode, k: usize) -> Result<RunResult> {
+        let job = KnnJob::new(
+            KnnConfig {
+                k,
+                n_partitions: self.config.n_partitions,
+                mode,
+                seed: self.config.seed,
+                ..Default::default()
+            },
+            Arc::clone(&self.knn_data),
+            Arc::clone(&self.backend),
+        )?;
+        let report = self.engine.run(Arc::new(job))?;
+        let sim = self.config.cluster.job_time(
+            &report.metrics.task_times(),
+            report.metrics.shuffle_bytes,
+            report.metrics.reduce_wall_s,
+        );
+        Ok(RunResult::from_report(
+            mode,
+            &report.metrics,
+            report.output.accuracy,
+            sim,
+        ))
+    }
+
+    /// Run the kNN workload returning full output (for examples).
+    pub fn run_knn_full(&self, mode: ProcessingMode, k: usize) -> Result<(KnnOutput, RunResult)> {
+        let job = KnnJob::new(
+            KnnConfig {
+                k,
+                n_partitions: self.config.n_partitions,
+                mode,
+                seed: self.config.seed,
+                ..Default::default()
+            },
+            Arc::clone(&self.knn_data),
+            Arc::clone(&self.backend),
+        )?;
+        let report = self.engine.run(Arc::new(job))?;
+        let sim = self.config.cluster.job_time(
+            &report.metrics.task_times(),
+            report.metrics.shuffle_bytes,
+            report.metrics.reduce_wall_s,
+        );
+        let rr = RunResult::from_report(mode, &report.metrics, report.output.accuracy, sim);
+        Ok((report.output, rr))
+    }
+
+    /// Run the CF workload in a mode.
+    pub fn run_cf(&self, mode: ProcessingMode) -> Result<RunResult> {
+        Ok(self.run_cf_full(mode)?.1)
+    }
+
+    /// Run the CF workload returning full output.
+    pub fn run_cf_full(&self, mode: ProcessingMode) -> Result<(CfOutput, RunResult)> {
+        let job = CfJob::new(
+            CfConfig {
+                n_partitions: self.config.cf_partitions,
+                mode,
+                seed: self.config.seed,
+                ..Default::default()
+            },
+            Arc::clone(&self.cf_split),
+            Arc::clone(&self.backend),
+        )?;
+        let report = self.engine.run(Arc::new(job))?;
+        let sim = self.config.cluster.job_time(
+            &report.metrics.task_times(),
+            report.metrics.shuffle_bytes,
+            report.metrics.reduce_wall_s,
+        );
+        let rr = RunResult::from_report(mode, &report.metrics, report.output.rmse, sim);
+        Ok((report.output, rr))
+    }
+
+    /// Sampling run whose simulated time matches `target_sim_s` (the
+    /// §IV-C protocol: "the same job execution times are permitted").
+    /// Calibrates the keep-ratio from the exact run's time, with one
+    /// correction iteration.
+    pub fn matched_sampling_knn(
+        &self,
+        target_sim_s: f64,
+        exact: &RunResult,
+        k: usize,
+    ) -> Result<RunResult> {
+        let mut ratio = (target_sim_s / exact.sim_time_s).clamp(0.002, 1.0);
+        let mut run = self.run_knn(ProcessingMode::Sampling { ratio }, k)?;
+        if run.sim_time_s > 0.0 {
+            ratio = (ratio * target_sim_s / run.sim_time_s).clamp(0.002, 1.0);
+            run = self.run_knn(ProcessingMode::Sampling { ratio }, k)?;
+        }
+        Ok(run)
+    }
+
+    /// CF variant of [`Workbench::matched_sampling_knn`].
+    pub fn matched_sampling_cf(
+        &self,
+        target_sim_s: f64,
+        exact: &RunResult,
+    ) -> Result<RunResult> {
+        let mut ratio = (target_sim_s / exact.sim_time_s).clamp(0.002, 1.0);
+        let mut run = self.run_cf(ProcessingMode::Sampling { ratio })?;
+        if run.sim_time_s > 0.0 {
+            ratio = (ratio * target_sim_s / run.sim_time_s).clamp(0.002, 1.0);
+            run = self.run_cf(ProcessingMode::Sampling { ratio })?;
+        }
+        Ok(run)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_workbench_runs_both_apps() {
+        let wb = Workbench::preset(Scale::Small).unwrap();
+        let knn = wb.run_knn(ProcessingMode::Exact, 5).unwrap();
+        assert!(knn.metric > 0.5, "knn accuracy {}", knn.metric);
+        assert!(knn.sim_time_s > 0.0);
+        let cf = wb.run_cf(ProcessingMode::Exact).unwrap();
+        assert!(cf.metric > 0.0 && cf.metric < 3.0, "cf rmse {}", cf.metric);
+    }
+
+    #[test]
+    fn accurateml_reduces_sim_time() {
+        let wb = Workbench::preset(Scale::Small).unwrap();
+        let exact = wb.run_knn(ProcessingMode::Exact, 5).unwrap();
+        let aml = wb
+            .run_knn(
+                ProcessingMode::AccurateML {
+                    compression_ratio: 20.0,
+                    refinement_threshold: 0.02,
+                },
+                5,
+            )
+            .unwrap();
+        assert!(
+            aml.map_compute_s < exact.map_compute_s,
+            "aml map compute {} !< exact {}",
+            aml.map_compute_s,
+            exact.map_compute_s
+        );
+    }
+
+    #[test]
+    fn matched_sampling_hits_target_roughly() {
+        let wb = Workbench::preset(Scale::Small).unwrap();
+        let exact = wb.run_knn(ProcessingMode::Exact, 5).unwrap();
+        let target = exact.sim_time_s * 0.3;
+        let samp = wb.matched_sampling_knn(target, &exact, 5).unwrap();
+        assert!(
+            samp.sim_time_s < exact.sim_time_s,
+            "sampling {} !< exact {}",
+            samp.sim_time_s,
+            exact.sim_time_s
+        );
+    }
+
+    #[test]
+    fn thresholds_grid() {
+        let t = paper_thresholds();
+        assert_eq!(t.len(), 10);
+        assert!((t[0] - 0.01).abs() < 1e-12);
+        assert!((t[9] - 0.10).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,265 @@
+//! Binary dataset serialization.
+//!
+//! Simple length-prefixed little-endian format so generated datasets can
+//! be cached on disk between bench runs (`accurateml gen-data` writes
+//! them; benches and examples load them if present, regenerate if not).
+//!
+//! Layout:  magic(8) | version(u32) | kind(u32) | payload...
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::data::gaussian::LabeledPoints;
+use crate::data::matrix::Matrix;
+use crate::data::ratings::RatingMatrix;
+use crate::error::{Error, Result};
+
+const MAGIC: &[u8; 8] = b"ACCML01\0";
+const KIND_POINTS: u32 = 1;
+const KIND_RATINGS: u32 = 2;
+
+fn w_u32(w: &mut impl Write, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_u64(w: &mut impl Write, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes())?;
+    Ok(())
+}
+
+fn w_f32s(w: &mut impl Write, xs: &[f32]) -> Result<()> {
+    w_u64(w, xs.len() as u64)?;
+    for chunk in xs.chunks(4096) {
+        let mut buf = Vec::with_capacity(chunk.len() * 4);
+        for x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+fn w_u32s(w: &mut impl Write, xs: &[u32]) -> Result<()> {
+    w_u64(w, xs.len() as u64)?;
+    for chunk in xs.chunks(4096) {
+        let mut buf = Vec::with_capacity(chunk.len() * 4);
+        for x in chunk {
+            buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.write_all(&buf)?;
+    }
+    Ok(())
+}
+
+fn r_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn r_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn r_f32s(r: &mut impl Read) -> Result<Vec<f32>> {
+    let n = r_u64(r)? as usize;
+    let mut raw = vec![0u8; n * 4];
+    r.read_exact(&mut raw)?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn r_u32s(r: &mut impl Read) -> Result<Vec<u32>> {
+    let n = r_u64(r)? as usize;
+    let mut raw = vec![0u8; n * 4];
+    r.read_exact(&mut raw)?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| u32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect())
+}
+
+fn w_matrix(w: &mut impl Write, m: &Matrix) -> Result<()> {
+    w_u64(w, m.rows() as u64)?;
+    w_u64(w, m.cols() as u64)?;
+    w_f32s(w, m.as_slice())
+}
+
+fn r_matrix(r: &mut impl Read) -> Result<Matrix> {
+    let rows = r_u64(r)? as usize;
+    let cols = r_u64(r)? as usize;
+    let data = r_f32s(r)?;
+    Matrix::from_vec(rows, cols, data)
+}
+
+fn open_kind(path: &Path, kind: u32) -> Result<BufReader<File>> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(Error::Data(format!("{}: bad magic", path.display())));
+    }
+    let ver = r_u32(&mut r)?;
+    if ver != 1 {
+        return Err(Error::Data(format!("{}: unsupported version {ver}", path.display())));
+    }
+    let k = r_u32(&mut r)?;
+    if k != kind {
+        return Err(Error::Data(format!(
+            "{}: wrong dataset kind {k} (want {kind})",
+            path.display()
+        )));
+    }
+    Ok(r)
+}
+
+fn create_kind(path: &Path, kind: u32) -> Result<BufWriter<File>> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(MAGIC)?;
+    w_u32(&mut w, 1)?;
+    w_u32(&mut w, kind)?;
+    Ok(w)
+}
+
+/// Save a labeled point set.
+pub fn save_points(path: &Path, d: &LabeledPoints) -> Result<()> {
+    let mut w = create_kind(path, KIND_POINTS)?;
+    w_u64(&mut w, d.n_classes as u64)?;
+    w_matrix(&mut w, &d.train)?;
+    w_u32s(&mut w, &d.train_labels)?;
+    w_matrix(&mut w, &d.test)?;
+    w_u32s(&mut w, &d.test_labels)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a labeled point set.
+pub fn load_points(path: &Path) -> Result<LabeledPoints> {
+    let mut r = open_kind(path, KIND_POINTS)?;
+    let n_classes = r_u64(&mut r)? as usize;
+    let train = r_matrix(&mut r)?;
+    let train_labels = r_u32s(&mut r)?;
+    let test = r_matrix(&mut r)?;
+    let test_labels = r_u32s(&mut r)?;
+    if train.rows() != train_labels.len() || test.rows() != test_labels.len() {
+        return Err(Error::Data("label/row count mismatch".into()));
+    }
+    Ok(LabeledPoints {
+        train,
+        train_labels,
+        test,
+        test_labels,
+        n_classes,
+    })
+}
+
+/// Save a rating matrix.
+pub fn save_ratings(path: &Path, m: &RatingMatrix) -> Result<()> {
+    let mut w = create_kind(path, KIND_RATINGS)?;
+    w_matrix(&mut w, &m.ratings)?;
+    w_matrix(&mut w, &m.mask)?;
+    w_u64(&mut w, m.rated.len() as u64)?;
+    for items in &m.rated {
+        w_u32s(&mut w, items)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a rating matrix.
+pub fn load_ratings(path: &Path) -> Result<RatingMatrix> {
+    let mut r = open_kind(path, KIND_RATINGS)?;
+    let ratings = r_matrix(&mut r)?;
+    let mask = r_matrix(&mut r)?;
+    let n = r_u64(&mut r)? as usize;
+    if n != ratings.rows() {
+        return Err(Error::Data("rated-list count mismatch".into()));
+    }
+    let mut rated = Vec::with_capacity(n);
+    for _ in 0..n {
+        rated.push(r_u32s(&mut r)?);
+    }
+    Ok(RatingMatrix {
+        ratings,
+        mask,
+        rated,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixtureSpec;
+    use crate::data::ratings::LatentFactorSpec;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("accml-io-test-{}-{name}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn points_roundtrip() {
+        let d = GaussianMixtureSpec {
+            n_points: 300,
+            dim: 6,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        let p = tmp("points.bin");
+        save_points(&p, &d).unwrap();
+        let d2 = load_points(&p).unwrap();
+        assert_eq!(d.train.as_slice(), d2.train.as_slice());
+        assert_eq!(d.test_labels, d2.test_labels);
+        assert_eq!(d.n_classes, d2.n_classes);
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn ratings_roundtrip() {
+        let m = LatentFactorSpec {
+            n_users: 50,
+            n_items: 32,
+            mean_ratings_per_user: 8,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        let p = tmp("ratings.bin");
+        save_ratings(&p, &m).unwrap();
+        let m2 = load_ratings(&p).unwrap();
+        assert_eq!(m.ratings.as_slice(), m2.ratings.as_slice());
+        assert_eq!(m.rated, m2.rated);
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn wrong_kind_rejected() {
+        let d = GaussianMixtureSpec {
+            n_points: 50,
+            dim: 3,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        let p = tmp("kind.bin");
+        save_points(&p, &d).unwrap();
+        assert!(load_ratings(&p).is_err());
+        std::fs::remove_file(p).unwrap();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load_points(Path::new("/nonexistent/x.bin")).is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Point-set helpers shared by the kNN pipeline: standardization and
+//! partition-local views.
+
+use crate::data::matrix::Matrix;
+
+/// Standardize columns of train/test to zero mean, unit variance using
+/// *train* statistics (the usual leakage-free protocol). Returns the
+/// per-column (mean, std) used.
+pub fn standardize(train: &mut Matrix, test: &mut Matrix) -> Vec<(f32, f32)> {
+    let d = train.cols();
+    let n = train.rows().max(1);
+    let mut stats = Vec::with_capacity(d);
+    for j in 0..d {
+        let mut mean = 0.0f64;
+        for i in 0..train.rows() {
+            mean += train.get(i, j) as f64;
+        }
+        mean /= n as f64;
+        let mut var = 0.0f64;
+        for i in 0..train.rows() {
+            let dlt = train.get(i, j) as f64 - mean;
+            var += dlt * dlt;
+        }
+        let std = (var / n as f64).sqrt().max(1e-9);
+        stats.push((mean as f32, std as f32));
+        for i in 0..train.rows() {
+            train.set(i, j, (train.get(i, j) - mean as f32) / std as f32);
+        }
+        for i in 0..test.rows() {
+            test.set(i, j, (test.get(i, j) - mean as f32) / std as f32);
+        }
+    }
+    stats
+}
+
+/// Contiguous row-range view describing one partition of a point set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RowRange {
+    pub start: usize,
+    pub end: usize,
+}
+
+impl RowRange {
+    /// Number of rows in the range.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Whether the range is empty.
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+}
+
+/// Split `n` rows into `parts` near-equal contiguous ranges (the input
+/// partitioning step of the MapReduce job; paper uses 100 partitions).
+pub fn split_rows(n: usize, parts: usize) -> Vec<RowRange> {
+    let parts = parts.max(1);
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        out.push(RowRange {
+            start,
+            end: start + len,
+        });
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_covers_everything() {
+        for &(n, p) in &[(100usize, 7usize), (5, 10), (0, 3), (12, 12), (1000, 1)] {
+            let ranges = split_rows(n, p);
+            assert_eq!(ranges.len(), p.max(1));
+            let total: usize = ranges.iter().map(|r| r.len()).sum();
+            assert_eq!(total, n);
+            // Contiguous and ordered.
+            let mut cursor = 0;
+            for r in &ranges {
+                assert_eq!(r.start, cursor);
+                cursor = r.end;
+            }
+            // Balanced within 1.
+            let lens: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let (mn, mx) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(mx - mn <= 1);
+        }
+    }
+
+    #[test]
+    fn standardize_zero_mean_unit_var() {
+        let mut train = Matrix::from_vec(4, 2, vec![1., 10., 2., 20., 3., 30., 4., 40.]).unwrap();
+        let mut test = Matrix::from_vec(1, 2, vec![2.5, 25.]).unwrap();
+        standardize(&mut train, &mut test);
+        for j in 0..2 {
+            let mean: f32 = (0..4).map(|i| train.get(i, j)).sum::<f32>() / 4.0;
+            let var: f32 = (0..4).map(|i| train.get(i, j).powi(2)).sum::<f32>() / 4.0;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-4);
+            // Test point was the column mean -> maps to ~0.
+            assert!(test.get(0, j).abs() < 1e-5);
+        }
+    }
+}

@@ -1,0 +1,347 @@
+//! Rating matrix + latent-factor generator — the Netflix Prize stand-in
+//! for the CF recommendation workload.
+//!
+//! Ratings come from a low-rank user/item factor model (so users have
+//! genuine similarity structure for Pearson CF to exploit), item choice
+//! follows a Zipf popularity law (so neighbourhood sizes — and hence
+//! shuffle cost — are skewed the way real rating data is), and values
+//! are clipped to the 1..5 star scale.
+
+use crate::data::matrix::Matrix;
+use crate::error::{Error, Result};
+use crate::util::rng::{Rng, Zipf};
+
+/// A dense rating matrix with an explicit rated-mask.
+///
+/// Dense storage is deliberate: the CF kernels (L1/L2) operate on dense
+/// (users × items) blocks with 0/1 masks, and the bench scales here
+/// (thousands × hundreds) fit comfortably. Per-user rated-item lists are
+/// kept alongside for sparse iteration (splits, shuffle accounting).
+#[derive(Clone, Debug)]
+pub struct RatingMatrix {
+    /// (users × items) ratings; 0 where unrated.
+    pub ratings: Matrix,
+    /// (users × items) 1.0 where rated else 0.0.
+    pub mask: Matrix,
+    /// Rated item ids per user.
+    pub rated: Vec<Vec<u32>>,
+}
+
+impl RatingMatrix {
+    /// Users count.
+    pub fn n_users(&self) -> usize {
+        self.ratings.rows()
+    }
+
+    /// Items count.
+    pub fn n_items(&self) -> usize {
+        self.ratings.cols()
+    }
+
+    /// Total number of ratings.
+    pub fn n_ratings(&self) -> usize {
+        self.rated.iter().map(|r| r.len()).sum()
+    }
+
+    /// Mean rating of one user over their rated items (0 if none).
+    pub fn user_mean(&self, u: usize) -> f32 {
+        let items = &self.rated[u];
+        if items.is_empty() {
+            return 0.0;
+        }
+        let s: f32 = items.iter().map(|&i| self.ratings.get(u, i as usize)).sum();
+        s / items.len() as f32
+    }
+
+    /// Centered, mask-zeroed copy of one user's rating row plus the mean
+    /// — the representation the Pearson kernel consumes.
+    pub fn centered_row(&self, u: usize) -> (Vec<f32>, f32) {
+        let mean = self.user_mean(u);
+        let m = self.n_items();
+        let mut out = vec![0.0f32; m];
+        for &i in &self.rated[u] {
+            out[i as usize] = self.ratings.get(u, i as usize) - mean;
+        }
+        (out, mean)
+    }
+
+    /// Build from explicit (user, item, rating) triplets.
+    pub fn from_triplets(
+        n_users: usize,
+        n_items: usize,
+        triplets: &[(u32, u32, f32)],
+    ) -> Result<RatingMatrix> {
+        let mut ratings = Matrix::zeros(n_users, n_items);
+        let mut mask = Matrix::zeros(n_users, n_items);
+        let mut rated = vec![Vec::new(); n_users];
+        for &(u, i, r) in triplets {
+            let (u, i) = (u as usize, i as usize);
+            if u >= n_users || i >= n_items {
+                return Err(Error::Data(format!("triplet ({u},{i}) out of range")));
+            }
+            if mask.get(u, i) == 0.0 {
+                rated[u].push(i as u32);
+            }
+            ratings.set(u, i, r);
+            mask.set(u, i, 1.0);
+        }
+        for r in rated.iter_mut() {
+            r.sort_unstable();
+        }
+        Ok(RatingMatrix {
+            ratings,
+            mask,
+            rated,
+        })
+    }
+}
+
+/// Specification of the synthetic latent-factor rating dataset.
+#[derive(Clone, Debug)]
+pub struct LatentFactorSpec {
+    pub n_users: usize,
+    pub n_items: usize,
+    /// Latent dimension of the factor model.
+    pub n_factors: usize,
+    /// Mean number of ratings per user.
+    pub mean_ratings_per_user: usize,
+    /// Zipf exponent for item popularity.
+    pub popularity_skew: f64,
+    /// Std of observation noise added to the factor model.
+    pub noise: f64,
+    /// RNG seed.
+    pub seed: u64,
+}
+
+impl Default for LatentFactorSpec {
+    fn default() -> Self {
+        LatentFactorSpec {
+            n_users: 2_000,
+            n_items: 512,
+            n_factors: 8,
+            mean_ratings_per_user: 48,
+            popularity_skew: 0.9,
+            noise: 0.35,
+            seed: 0xCF_0CF_0,
+        }
+    }
+}
+
+impl LatentFactorSpec {
+    /// Generate the rating matrix.
+    pub fn generate(&self) -> Result<RatingMatrix> {
+        if self.n_users == 0 || self.n_items == 0 || self.n_factors == 0 {
+            return Err(Error::Data("empty rating spec".into()));
+        }
+        if self.mean_ratings_per_user > self.n_items {
+            return Err(Error::Data(
+                "mean_ratings_per_user exceeds n_items".into(),
+            ));
+        }
+        let mut rng = Rng::new(self.seed);
+        let f = self.n_factors;
+        let scale = (1.0 / (f as f64).sqrt()) as f32;
+
+        let mut ufac = Matrix::zeros(self.n_users, f);
+        for u in 0..self.n_users {
+            for v in ufac.row_mut(u) {
+                *v = rng.normal() as f32 * scale;
+            }
+        }
+        let mut ifac = Matrix::zeros(self.n_items, f);
+        for i in 0..self.n_items {
+            for v in ifac.row_mut(i) {
+                *v = rng.normal() as f32 * scale;
+            }
+        }
+        // Per-item bias shifts popular items' means like real catalogs.
+        let ibias: Vec<f32> = (0..self.n_items)
+            .map(|_| rng.normal_ms(0.0, 0.4) as f32)
+            .collect();
+
+        let zipf = Zipf::new(self.n_items, self.popularity_skew);
+        // Random popularity ranking of items.
+        let mut item_by_rank: Vec<usize> = (0..self.n_items).collect();
+        rng.shuffle(&mut item_by_rank);
+
+        let mut ratings = Matrix::zeros(self.n_users, self.n_items);
+        let mut mask = Matrix::zeros(self.n_users, self.n_items);
+        let mut rated = vec![Vec::new(); self.n_users];
+        for u in 0..self.n_users {
+            // Per-user activity: lognormal-ish around the mean.
+            let mult = (rng.normal_ms(0.0, 0.5)).exp();
+            let cnt = ((self.mean_ratings_per_user as f64 * mult).round() as usize)
+                .clamp(4, self.n_items);
+            let mut chosen = std::collections::HashSet::with_capacity(cnt * 2);
+            let mut guard = 0;
+            while chosen.len() < cnt && guard < cnt * 50 {
+                guard += 1;
+                let item = item_by_rank[zipf.sample(&mut rng)];
+                chosen.insert(item);
+            }
+            let mut items: Vec<u32> = chosen.into_iter().map(|i| i as u32).collect();
+            items.sort_unstable();
+            for &i in &items {
+                let i = i as usize;
+                let base = 3.0
+                    + crate::data::matrix::dot(ufac.row(u), ifac.row(i)) * 2.0
+                    + ibias[i]
+                    + rng.normal_ms(0.0, self.noise) as f32;
+                let star = base.round().clamp(1.0, 5.0);
+                ratings.set(u, i, star);
+                mask.set(u, i, 1.0);
+            }
+            rated[u] = items;
+        }
+        Ok(RatingMatrix {
+            ratings,
+            mask,
+            rated,
+        })
+    }
+}
+
+/// Train/test split for CF evaluation (paper §IV-A): a set of active
+/// users; for each, a fraction of their rated items is held out as the
+/// test set and masked out of the training matrix.
+#[derive(Clone, Debug)]
+pub struct RatingsSplit {
+    /// Training matrix (held-out ratings removed).
+    pub train: RatingMatrix,
+    /// Active user ids.
+    pub active_users: Vec<u32>,
+    /// Held-out (user, item, actual_rating) triplets.
+    pub test: Vec<(u32, u32, f32)>,
+}
+
+impl RatingsSplit {
+    /// Hold out `holdout_fraction` of each of `n_active` random users'
+    /// ratings (paper: 100 active users, 20% held out).
+    pub fn new(
+        full: &RatingMatrix,
+        n_active: usize,
+        holdout_fraction: f64,
+        seed: u64,
+    ) -> Result<RatingsSplit> {
+        if n_active == 0 || n_active > full.n_users() {
+            return Err(Error::Data(format!(
+                "n_active {n_active} out of range (users={})",
+                full.n_users()
+            )));
+        }
+        if !(0.0..1.0).contains(&holdout_fraction) {
+            return Err(Error::Data("holdout_fraction must be in [0,1)".into()));
+        }
+        let mut rng = Rng::new(seed);
+        let active = rng.sample_indices(full.n_users(), n_active);
+        let mut train = full.clone();
+        let mut test = Vec::new();
+        for &u in &active {
+            let items = &full.rated[u];
+            let n_hold = ((items.len() as f64 * holdout_fraction).round() as usize)
+                .clamp(1, items.len().saturating_sub(2).max(1));
+            let hold = rng.sample_indices(items.len(), n_hold);
+            let mut held: Vec<u32> = hold.iter().map(|&j| items[j]).collect();
+            held.sort_unstable();
+            for &i in &held {
+                test.push((u as u32, i, full.ratings.get(u, i as usize)));
+                train.ratings.set(u, i as usize, 0.0);
+                train.mask.set(u, i as usize, 0.0);
+            }
+            train.rated[u].retain(|i| !held.contains(i));
+        }
+        let mut active: Vec<u32> = active.into_iter().map(|u| u as u32).collect();
+        active.sort_unstable();
+        test.sort_unstable_by_key(|&(u, i, _)| (u, i));
+        Ok(RatingsSplit {
+            train,
+            active_users: active,
+            test,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_spec() -> LatentFactorSpec {
+        LatentFactorSpec {
+            n_users: 100,
+            n_items: 64,
+            mean_ratings_per_user: 16,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn generates_valid_ratings() {
+        let m = small_spec().generate().unwrap();
+        assert_eq!(m.n_users(), 100);
+        assert_eq!(m.n_items(), 64);
+        assert!(m.n_ratings() > 100 * 4);
+        for u in 0..m.n_users() {
+            for &i in &m.rated[u] {
+                let r = m.ratings.get(u, i as usize);
+                assert!((1.0..=5.0).contains(&r));
+                assert_eq!(m.mask.get(u, i as usize), 1.0);
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = small_spec().generate().unwrap();
+        let b = small_spec().generate().unwrap();
+        assert_eq!(a.ratings.as_slice(), b.ratings.as_slice());
+    }
+
+    #[test]
+    fn popularity_is_skewed() {
+        let m = small_spec().generate().unwrap();
+        let mut per_item = vec![0usize; m.n_items()];
+        for u in 0..m.n_users() {
+            for &i in &m.rated[u] {
+                per_item[i as usize] += 1;
+            }
+        }
+        per_item.sort_unstable_by(|a, b| b.cmp(a));
+        let head: usize = per_item[..6].iter().sum();
+        let tail: usize = per_item[m.n_items() - 6..].iter().sum();
+        assert!(head > tail * 3, "head={head} tail={tail}");
+    }
+
+    #[test]
+    fn user_mean_and_centering() {
+        let m = RatingMatrix::from_triplets(2, 4, &[(0, 0, 5.0), (0, 2, 3.0), (1, 1, 2.0)]).unwrap();
+        assert_eq!(m.user_mean(0), 4.0);
+        let (c, mean) = m.centered_row(0);
+        assert_eq!(mean, 4.0);
+        assert_eq!(c, vec![1.0, 0.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn split_holds_out_and_masks() {
+        let m = small_spec().generate().unwrap();
+        let s = RatingsSplit::new(&m, 10, 0.2, 42).unwrap();
+        assert_eq!(s.active_users.len(), 10);
+        assert!(!s.test.is_empty());
+        for &(u, i, r) in &s.test {
+            assert_eq!(s.train.mask.get(u as usize, i as usize), 0.0);
+            assert_eq!(m.ratings.get(u as usize, i as usize), r);
+            assert!(!s.train.rated[u as usize].contains(&i));
+        }
+        // Non-held-out ratings untouched.
+        let total_before = m.n_ratings();
+        let total_after = s.train.n_ratings();
+        assert_eq!(total_after + s.test.len(), total_before);
+    }
+
+    #[test]
+    fn split_rejects_bad_params() {
+        let m = small_spec().generate().unwrap();
+        assert!(RatingsSplit::new(&m, 0, 0.2, 1).is_err());
+        assert!(RatingsSplit::new(&m, 1000, 0.2, 1).is_err());
+        assert!(RatingsSplit::new(&m, 10, 1.0, 1).is_err());
+    }
+}

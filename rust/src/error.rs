@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for the AccurateML library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// I/O failures (dataset files, artifact files).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// JSON parse errors from [`crate::util::json`].
+    #[error("json error at byte {offset}: {msg}")]
+    Json { offset: usize, msg: String },
+
+    /// Artifact manifest problems (missing artifact, shape mismatch).
+    #[error("manifest error: {0}")]
+    Manifest(String),
+
+    /// PJRT/XLA failures surfaced by the `xla` crate.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// The PJRT service thread is gone or rejected a request.
+    #[error("runtime service error: {0}")]
+    Service(String),
+
+    /// Configuration / CLI problems.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Shape or dimension mismatches in numeric code.
+    #[error("shape error: {0}")]
+    Shape(String),
+
+    /// Dataset construction / validation problems.
+    #[error("data error: {0}")]
+    Data(String),
+
+    /// MapReduce engine failures (worker panic, empty job, ...).
+    #[error("engine error: {0}")]
+    Engine(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

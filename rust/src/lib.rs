@@ -1,0 +1,45 @@
+//! # AccurateML — information-aggregation-based approximate processing
+//!
+//! Reproduction of *AccurateML: Information-aggregation-based Approximate
+//! Processing for Fast and Accurate Machine Learning on MapReduce*
+//! (Han, Zhang, Wang — 2017) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! The crate is organised as (see DESIGN.md for the full inventory):
+//!
+//! * [`util`] — substrates this offline environment lacks as crates:
+//!   deterministic RNG + distributions, a minimal JSON codec, CLI parsing,
+//!   a micro-benchmark harness and table emitters.
+//! * [`data`] — dense matrix type, synthetic dataset generators standing
+//!   in for the paper's Multiple-Features-Factor and Netflix datasets.
+//! * [`lsh`] — p-stable locality-sensitive hashing (Datar et al. '04),
+//!   the bucketing primitive of paper §III-B.
+//! * [`aggregate`] — aggregated data points + index files (Definitions
+//!   3-4), for both feature vectors (kNN) and rating rows (CF).
+//! * [`mapreduce`] — the execution engine the paper assumes (Spark):
+//!   partitions, a worker pool, map/shuffle/reduce phases, shuffle byte
+//!   accounting and a communication cost model.
+//! * [`approx`] — Algorithm 1: the generic two-stage
+//!   information-aggregation-based approximate processing, plus the
+//!   random-sampling baseline and exact mode.
+//! * [`apps`] — the two evaluated applications: kNN classification and
+//!   user-based CF recommendation.
+//! * [`runtime`] — the PJRT executor: loads `artifacts/*.hlo.txt`
+//!   (AOT-lowered JAX + Pallas graphs) and serves execute requests from
+//!   map tasks on a dedicated device thread.
+//! * [`catalog`] — the Mahout/MLlib algorithm census behind Table I.
+//! * [`coordinator`] — configuration, experiment sweeps, and reporting;
+//!   drives everything from `main.rs` and the benches.
+
+pub mod aggregate;
+pub mod approx;
+pub mod apps;
+pub mod catalog;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod lsh;
+pub mod mapreduce;
+pub mod runtime;
+pub mod util;
+
+pub use error::{Error, Result};

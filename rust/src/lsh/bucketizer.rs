@@ -1,0 +1,327 @@
+//! Compression-ratio-controlled bucketing (paper §III-B Step 1).
+//!
+//! The paper "selects a bucket number to decide the compression ratio".
+//! With the p-stable family, bucket granularity is governed by the width
+//! `w`: larger `w` → coarser quantization → fewer buckets. The
+//! [`Bucketizer`] precomputes each point's projections once and then
+//! binary-searches `w` until the number of non-empty buckets is within
+//! tolerance of `n_points / target_ratio`. Oversized buckets (heavier
+//! than 4× the target occupancy) are split round-robin so no aggregated
+//! point hides an unbounded amount of the input.
+
+use std::collections::HashMap;
+
+use crate::data::matrix::Matrix;
+use crate::error::{Error, Result};
+use crate::lsh::LshFamily;
+
+/// Result of bucketing one partition's points.
+#[derive(Clone, Debug)]
+pub struct Bucketing {
+    /// Bucket membership: `buckets[b]` lists local row indices.
+    pub buckets: Vec<Vec<u32>>,
+    /// The width the search settled on.
+    pub w: f32,
+    /// Achieved compression ratio (n_points / n_buckets).
+    pub achieved_ratio: f64,
+}
+
+/// How points are grouped into buckets.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Grouping {
+    /// p-stable LSH (the paper's method — groups *similar* points).
+    Lsh,
+    /// Uniformly random groups of the target size. Ablation control:
+    /// isolates how much of AccurateML's accuracy comes from grouping
+    /// by similarity rather than from summarization per se
+    /// (`benches/ablations.rs`).
+    Random,
+}
+
+/// Configuration of the bucketing step.
+#[derive(Clone, Debug)]
+pub struct Bucketizer {
+    /// Number of hash functions in the signature.
+    pub n_hashes: usize,
+    /// Target compression ratio r (paper sweeps 10 / 20 / 100).
+    pub target_ratio: f64,
+    /// Relative tolerance on the achieved bucket count.
+    pub tolerance: f64,
+    /// Search iterations.
+    pub max_iters: usize,
+    /// RNG seed for the hash family.
+    pub seed: u64,
+    /// Grouping strategy (LSH unless ablating).
+    pub grouping: Grouping,
+}
+
+impl Default for Bucketizer {
+    fn default() -> Self {
+        Bucketizer {
+            n_hashes: 4,
+            target_ratio: 10.0,
+            tolerance: 0.2,
+            max_iters: 24,
+            seed: 0x0B0C_4E7,
+            grouping: Grouping::Lsh,
+        }
+    }
+}
+
+impl Bucketizer {
+    /// Convenience constructor with a target ratio.
+    pub fn with_ratio(target_ratio: f64, seed: u64) -> Bucketizer {
+        Bucketizer {
+            target_ratio,
+            seed,
+            ..Default::default()
+        }
+    }
+
+    /// Bucket `points` (all rows) to the target compression ratio.
+    pub fn bucketize(&self, points: &Matrix) -> Result<Bucketing> {
+        let n = points.rows();
+        if n == 0 {
+            return Err(Error::Data("cannot bucketize empty point set".into()));
+        }
+        if self.target_ratio < 1.0 {
+            return Err(Error::Data(format!(
+                "compression ratio must be >= 1, got {}",
+                self.target_ratio
+            )));
+        }
+        let target_buckets = ((n as f64 / self.target_ratio).round() as usize).clamp(1, n);
+
+        if self.grouping == Grouping::Random {
+            return Ok(self.bucketize_random(n, target_buckets));
+        }
+
+        // Projections are w-independent; compute once.
+        let family = LshFamily::new(points.cols(), self.n_hashes, 1.0, self.seed);
+        let mut projections = Matrix::zeros(n, self.n_hashes);
+        for i in 0..n {
+            let p = family.project(points.row(i));
+            projections.row_mut(i).copy_from_slice(&p);
+        }
+
+        // Bracket w: shrink/grow until the target is enclosed. Uses the
+        // allocation-free 64-bit signature hash — this loop runs
+        // max_iters × n times and dominated the LSH part before.
+        // Counting on a fixed-stride sample keeps the search O(sample)
+        // instead of O(n) per iteration; the sampled count is rescaled
+        // to full-population scale.
+        let sample_stride = (n / 512).max(1);
+        let sample_n = n.div_ceil(sample_stride);
+        let count_at = |w: f32| -> usize {
+            let fam = family.with_w(w);
+            let mut sigs = std::collections::HashSet::with_capacity(target_buckets * 2);
+            let mut i = 0;
+            while i < n {
+                sigs.insert(fam.quantize_hash(projections.row(i)));
+                i += sample_stride;
+            }
+            // Rescale: distinct-count grows sublinearly, but for the
+            // bucket regimes here (avg occupancy >= ratio) linear
+            // rescaling lands within the search tolerance.
+            sigs.len() * n / sample_n
+        };
+
+        // Initial scale from projection spread.
+        let spread = {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for x in projections.as_slice() {
+                lo = lo.min(*x);
+                hi = hi.max(*x);
+            }
+            (hi - lo).max(1e-3)
+        };
+        let mut w_lo = spread / (4.0 * n as f32); // very fine: ~all singleton
+        let mut w_hi = spread * 4.0; // very coarse: ~one bucket
+        let mut best_w = spread / self.target_ratio as f32;
+        let mut best_gap = usize::MAX;
+
+        for _ in 0..self.max_iters {
+            let w_mid = (w_lo * w_hi).sqrt(); // geometric bisection
+            let c = count_at(w_mid);
+            let gap = c.abs_diff(target_buckets);
+            if gap < best_gap {
+                best_gap = gap;
+                best_w = w_mid;
+            }
+            if (gap as f64) <= self.tolerance * target_buckets as f64 {
+                break;
+            }
+            if c > target_buckets {
+                // Too many buckets: coarsen.
+                w_lo = w_mid;
+            } else {
+                w_hi = w_mid;
+            }
+        }
+
+        // Final assignment at the best width found.
+        let fam = family.with_w(best_w);
+        let mut map: HashMap<u64, Vec<u32>> = HashMap::new();
+        for i in 0..n {
+            map.entry(fam.quantize_hash(projections.row(i)))
+                .or_default()
+                .push(i as u32);
+        }
+        // Deterministic bucket order: sort by signature hash.
+        let mut entries: Vec<_> = map.into_iter().collect();
+        entries.sort_by_key(|e| e.0);
+
+        // Split any bucket heavier than 2x the target occupancy so a
+        // single aggregated point cannot swallow an unbounded share of
+        // the partition (keeps Definition 3's "similar points" honest,
+        // and bounds stage-2 refinement cost: the top-correlation
+        // buckets are precisely the dense ones, so without a cap the
+        // refined fraction is several times eps — measured in
+        // EXPERIMENTS.md §Perf).
+        let cap = ((self.target_ratio * 2.0).ceil() as usize).max(2);
+        let mut buckets = Vec::with_capacity(entries.len());
+        for (_, members) in entries {
+            if members.len() <= cap {
+                buckets.push(members);
+            } else {
+                for chunk in members.chunks(cap) {
+                    buckets.push(chunk.to_vec());
+                }
+            }
+        }
+
+        let achieved_ratio = n as f64 / buckets.len() as f64;
+        Ok(Bucketing {
+            buckets,
+            w: best_w,
+            achieved_ratio,
+        })
+    }
+
+    /// Ablation grouping: random permutation chunked to the target
+    /// occupancy (same bucket count as LSH would aim for, zero
+    /// similarity structure).
+    fn bucketize_random(&self, n: usize, target_buckets: usize) -> Bucketing {
+        let mut idx: Vec<u32> = (0..n as u32).collect();
+        crate::util::rng::Rng::new(self.seed ^ 0xAB1A7E).shuffle(&mut idx);
+        let per = n.div_ceil(target_buckets).max(1);
+        let buckets: Vec<Vec<u32>> = idx.chunks(per).map(|c| c.to_vec()).collect();
+        let achieved_ratio = n as f64 / buckets.len() as f64;
+        Bucketing {
+            buckets,
+            w: 0.0,
+            achieved_ratio,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn clustered_points(n: usize, dim: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let n_centers = 32;
+        let centers: Vec<Vec<f32>> = (0..n_centers)
+            .map(|_| (0..dim).map(|_| rng.normal() as f32 * 3.0).collect())
+            .collect();
+        let mut m = Matrix::zeros(n, dim);
+        for i in 0..n {
+            let c = &centers[rng.index(n_centers)];
+            for (j, v) in m.row_mut(i).iter_mut().enumerate() {
+                *v = c[j] + 0.3 * rng.normal() as f32;
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn membership_is_a_partition() {
+        let pts = clustered_points(500, 8, 1);
+        let b = Bucketizer::with_ratio(10.0, 2).bucketize(&pts).unwrap();
+        let mut seen = vec![false; 500];
+        for bucket in &b.buckets {
+            assert!(!bucket.is_empty());
+            for &i in bucket {
+                assert!(!seen[i as usize], "point {i} in two buckets");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some point unassigned");
+    }
+
+    #[test]
+    fn hits_target_ratio_approximately() {
+        let pts = clustered_points(2000, 16, 3);
+        for ratio in [5.0, 10.0, 20.0] {
+            let b = Bucketizer::with_ratio(ratio, 4).bucketize(&pts).unwrap();
+            assert!(
+                b.achieved_ratio > ratio * 0.4 && b.achieved_ratio < ratio * 2.5,
+                "ratio {ratio}: achieved {}",
+                b.achieved_ratio
+            );
+        }
+    }
+
+    #[test]
+    fn bucket_members_are_similar() {
+        // Mean intra-bucket distance must undercut mean random-pair
+        // distance — LSH should group nearby points (Definition 2).
+        let pts = clustered_points(1000, 8, 5);
+        let b = Bucketizer::with_ratio(10.0, 6).bucketize(&pts).unwrap();
+        let mut rng = Rng::new(7);
+        let mut intra = Vec::new();
+        for bucket in &b.buckets {
+            if bucket.len() >= 2 {
+                for _ in 0..3.min(bucket.len()) {
+                    let i = bucket[rng.index(bucket.len())] as usize;
+                    let j = bucket[rng.index(bucket.len())] as usize;
+                    if i != j {
+                        intra.push(pts.sq_dist_row(i, pts.row(j)) as f64);
+                    }
+                }
+            }
+        }
+        let mut random = Vec::new();
+        for _ in 0..intra.len().max(50) {
+            let i = rng.index(1000);
+            let j = rng.index(1000);
+            if i != j {
+                random.push(pts.sq_dist_row(i, pts.row(j)) as f64);
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(
+            mean(&intra) < mean(&random) * 0.5,
+            "intra {} vs random {}",
+            mean(&intra),
+            mean(&random)
+        );
+    }
+
+    #[test]
+    fn no_bucket_exceeds_cap() {
+        let pts = clustered_points(1000, 8, 8);
+        let bz = Bucketizer::with_ratio(10.0, 9);
+        let b = bz.bucketize(&pts).unwrap();
+        let cap = (bz.target_ratio * 4.0).ceil() as usize;
+        assert!(b.buckets.iter().all(|bk| bk.len() <= cap));
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        let empty = Matrix::zeros(0, 4);
+        assert!(Bucketizer::default().bucketize(&empty).is_err());
+        let pts = clustered_points(10, 4, 1);
+        assert!(Bucketizer::with_ratio(0.5, 1).bucketize(&pts).is_err());
+    }
+
+    #[test]
+    fn ratio_one_gives_fine_buckets() {
+        let pts = clustered_points(200, 8, 10);
+        let b = Bucketizer::with_ratio(1.0, 11).bucketize(&pts).unwrap();
+        // Near-singleton buckets expected.
+        assert!(b.achieved_ratio < 3.0, "achieved {}", b.achieved_ratio);
+    }
+}

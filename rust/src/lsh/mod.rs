@@ -1,0 +1,183 @@
+//! p-stable locality-sensitive hashing (paper §III-B, Datar et al. '04).
+//!
+//! The hash family is Equation 1 of the paper:
+//!
+//! ```text
+//! h(d) = floor((a · d + b) / w)
+//! ```
+//!
+//! with `a` drawn coordinate-wise from N(0,1) (the 2-stable distribution,
+//! matching the l2 metric the applications use) and `b` uniform in
+//! [0, w). A *signature* concatenates `n_hashes` such values; points with
+//! equal signatures share a bucket. [`bucketizer`] drives the bucket
+//! count to a target compression ratio by searching over `w`.
+
+pub mod bucketizer;
+
+pub use bucketizer::{Bucketing, Bucketizer};
+
+use crate::data::matrix::Matrix;
+use crate::util::rng::Rng;
+
+/// A family of `n_hashes` p-stable hash functions over `dim`-dimensional
+/// points, sharing one quantization width `w`.
+#[derive(Clone, Debug)]
+pub struct LshFamily {
+    /// (n_hashes × dim) projection directions, N(0,1) entries.
+    a: Matrix,
+    /// Offsets, uniform in [0, w).
+    b: Vec<f32>,
+    /// Quantization width (Equation 1's `w`).
+    w: f32,
+}
+
+impl LshFamily {
+    /// Draw a family from the given seed. `w` can be retuned later with
+    /// [`LshFamily::with_w`] without redrawing projections (the
+    /// bucketizer's ratio search relies on this).
+    pub fn new(dim: usize, n_hashes: usize, w: f32, seed: u64) -> LshFamily {
+        assert!(dim > 0 && n_hashes > 0 && w > 0.0);
+        let mut rng = Rng::new(seed ^ 0x15_4A5_4);
+        let mut a = Matrix::zeros(n_hashes, dim);
+        for h in 0..n_hashes {
+            for v in a.row_mut(h) {
+                *v = rng.normal() as f32;
+            }
+        }
+        // b ~ U[0, w): store the unit draw so retuning w rescales it.
+        let b = (0..n_hashes).map(|_| rng.f32() * w).collect();
+        LshFamily { a, b, w }
+    }
+
+    /// Same projections, different width (offsets rescaled with w).
+    pub fn with_w(&self, w: f32) -> LshFamily {
+        assert!(w > 0.0);
+        let scale = w / self.w;
+        LshFamily {
+            a: self.a.clone(),
+            b: self.b.iter().map(|x| x * scale).collect(),
+            w,
+        }
+    }
+
+    /// Number of hash functions.
+    pub fn n_hashes(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// Current width.
+    pub fn w(&self) -> f32 {
+        self.w
+    }
+
+    /// Raw projections a·d for one point (before offset/quantization).
+    pub fn project(&self, point: &[f32]) -> Vec<f32> {
+        (0..self.a.rows())
+            .map(|h| crate::data::matrix::dot(self.a.row(h), point))
+            .collect()
+    }
+
+    /// Quantize precomputed projections into a signature.
+    pub fn quantize(&self, proj: &[f32]) -> Signature {
+        debug_assert_eq!(proj.len(), self.b.len());
+        let vals: Vec<i32> = proj
+            .iter()
+            .zip(&self.b)
+            .map(|(&p, &b)| ((p + b) / self.w).floor() as i32)
+            .collect();
+        Signature(vals)
+    }
+
+    /// Quantize into a 64-bit signature hash (FNV-1a over the bucket
+    /// ids). The bucketizer's width search calls this per point per
+    /// iteration; hashing in place avoids the per-point `Vec`
+    /// allocation of [`LshFamily::quantize`], which dominated the LSH
+    /// part of the map-task breakdown before (see EXPERIMENTS.md §Perf).
+    /// Collisions merge unrelated buckets with probability ~n²/2⁶⁴ —
+    /// negligible at any partition size this repo runs.
+    #[inline]
+    pub fn quantize_hash(&self, proj: &[f32]) -> u64 {
+        debug_assert_eq!(proj.len(), self.b.len());
+        let mut h: u64 = 0xcbf29ce484222325;
+        let inv_w = 1.0 / self.w;
+        for (&p, &b) in proj.iter().zip(&self.b) {
+            let q = ((p + b) * inv_w).floor() as i64 as u64;
+            for byte in q.to_le_bytes() {
+                h = (h ^ byte as u64).wrapping_mul(0x100000001b3);
+            }
+        }
+        h
+    }
+
+    /// Full hash: project then quantize (Equation 1 per hash function).
+    pub fn signature(&self, point: &[f32]) -> Signature {
+        self.quantize(&self.project(point))
+    }
+}
+
+/// A composite LSH signature (bucket id).
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Signature(pub Vec<i32>);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn family() -> LshFamily {
+        LshFamily::new(8, 4, 2.0, 99)
+    }
+
+    #[test]
+    fn identical_points_share_signature() {
+        let f = family();
+        let p = vec![0.3f32; 8];
+        assert_eq!(f.signature(&p), f.signature(&p));
+    }
+
+    #[test]
+    fn close_points_collide_more_than_far_points() {
+        // Definition 2's two conditions, checked statistically.
+        let f = family();
+        let mut rng = Rng::new(5);
+        let mut close_coll = 0;
+        let mut far_coll = 0;
+        let trials = 400;
+        for _ in 0..trials {
+            let base: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+            let close: Vec<f32> = base.iter().map(|x| x + 0.05 * rng.normal() as f32).collect();
+            let far: Vec<f32> = base.iter().map(|x| x + 3.0 * rng.normal() as f32).collect();
+            if f.signature(&base) == f.signature(&close) {
+                close_coll += 1;
+            }
+            if f.signature(&base) == f.signature(&far) {
+                far_coll += 1;
+            }
+        }
+        assert!(
+            close_coll > far_coll + trials / 10,
+            "close={close_coll} far={far_coll}"
+        );
+    }
+
+    #[test]
+    fn larger_w_coarser_buckets() {
+        let f = family();
+        let coarse = f.with_w(50.0);
+        let mut rng = Rng::new(6);
+        let pts: Vec<Vec<f32>> = (0..100)
+            .map(|_| (0..8).map(|_| rng.normal() as f32).collect())
+            .collect();
+        let fine_sigs: std::collections::HashSet<_> =
+            pts.iter().map(|p| f.signature(p)).collect();
+        let coarse_sigs: std::collections::HashSet<_> =
+            pts.iter().map(|p| coarse.signature(p)).collect();
+        assert!(coarse_sigs.len() < fine_sigs.len());
+    }
+
+    #[test]
+    fn quantize_matches_signature() {
+        let f = family();
+        let p: Vec<f32> = (0..8).map(|i| i as f32 * 0.1).collect();
+        assert_eq!(f.quantize(&f.project(&p)), f.signature(&p));
+    }
+}

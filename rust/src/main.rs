@@ -1,0 +1,388 @@
+//! AccurateML CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   run       — one (app × mode) job, printed as a result row
+//!   sweep     — the paper's r × ε grid for one app (Figs. 4-7 data)
+//!   compare   — equal-time AccurateML vs sampling (Figs. 8-9 data)
+//!   table1    — regenerate Table I from the algorithm census
+//!   check     — verify artifacts load and PJRT matches native numerics
+//!   info      — environment / manifest summary
+
+use std::sync::Arc;
+
+use accurateml::approx::ProcessingMode;
+use accurateml::catalog;
+use accurateml::coordinator::report::results_table;
+use accurateml::coordinator::sweep::Workbench;
+use accurateml::coordinator::{Scale, WorkbenchConfig};
+use accurateml::data::matrix::Matrix;
+use accurateml::runtime::backend::{NativeBackend, PjrtBackend, ScoreBackend};
+use accurateml::runtime::service::PjrtService;
+use accurateml::util::cli::Command;
+use accurateml::util::rng::Rng;
+use accurateml::util::table::{f, Table};
+
+fn main() {
+    accurateml::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match dispatch(&argv) {
+        Ok(()) => 0,
+        Err(accurateml::Error::Config(msg)) => {
+            eprintln!("{msg}");
+            2
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn usage() -> String {
+    "accurateml — information-aggregation-based approximate processing on MapReduce
+
+Usage: accurateml <subcommand> [options]
+
+Subcommands:
+  run      run one job            (--app knn|cf --mode exact|accurateml|sampling)
+  sweep    r × ε grid for an app  (--app knn|cf)
+  compare  equal-time AccurateML vs sampling
+  gen-data pre-generate and cache the synthetic datasets
+  table1   regenerate Table I from the algorithm census
+  check    verify artifacts: PJRT vs native numerics
+  info     environment and manifest summary
+
+Run `accurateml <subcommand> --help` for options."
+        .to_string()
+}
+
+fn dispatch(argv: &[String]) -> accurateml::Result<()> {
+    let Some(sub) = argv.first() else {
+        println!("{}", usage());
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match sub.as_str() {
+        "run" => cmd_run(rest),
+        "sweep" => cmd_sweep(rest),
+        "compare" => cmd_compare(rest),
+        "gen-data" => cmd_gen_data(rest),
+        "table1" => cmd_table1(),
+        "check" => cmd_check(rest),
+        "info" => cmd_info(rest),
+        "--help" | "-h" | "help" => {
+            println!("{}", usage());
+            Ok(())
+        }
+        other => Err(accurateml::Error::Config(format!(
+            "unknown subcommand {other:?}\n\n{}",
+            usage()
+        ))),
+    }
+}
+
+fn workbench(args: &accurateml::util::cli::Args) -> accurateml::Result<Workbench> {
+    let mut cfg = WorkbenchConfig::preset(Scale::parse(args.get("scale"))?);
+    cfg.backend = args.get("backend").to_string();
+    cfg.artifact_dir = std::path::PathBuf::from(args.get("artifacts"));
+    cfg.seed = args.get_u64("seed")?;
+    let data_dir = args.get("data-dir");
+    if !data_dir.is_empty() {
+        cfg.data_dir = Some(std::path::PathBuf::from(data_dir));
+    }
+    Workbench::new(cfg)
+}
+
+fn common_opts(c: Command) -> Command {
+    c.opt("scale", "small", "dataset scale: small|default|paper")
+        .opt("backend", "native", "scoring backend: native|pjrt|auto")
+        .opt("artifacts", "artifacts", "artifact directory")
+        .opt("data-dir", "", "dataset cache directory (empty = regenerate)")
+        .opt("seed", "44257", "base RNG seed")
+}
+
+fn parse_mode(args: &accurateml::util::cli::Args) -> accurateml::Result<ProcessingMode> {
+    match args.get("mode") {
+        "exact" => Ok(ProcessingMode::Exact),
+        "accurateml" => Ok(ProcessingMode::AccurateML {
+            compression_ratio: args.get_f64("ratio")?,
+            refinement_threshold: args.get_f64("eps")?,
+        }),
+        "sampling" => Ok(ProcessingMode::Sampling {
+            ratio: args.get_f64("sample-ratio")?,
+        }),
+        other => Err(accurateml::Error::Config(format!(
+            "unknown mode {other:?} (exact|accurateml|sampling)"
+        ))),
+    }
+}
+
+fn cmd_run(argv: &[String]) -> accurateml::Result<()> {
+    let cmd = common_opts(
+        Command::new("accurateml run", "run one (app × mode) job")
+            .opt("app", "knn", "application: knn|cf")
+            .opt("mode", "accurateml", "exact|accurateml|sampling")
+            .opt("ratio", "10", "compression ratio (accurateml)")
+            .opt("eps", "0.05", "refinement threshold (accurateml)")
+            .opt("sample-ratio", "0.1", "keep ratio (sampling)")
+            .opt("k", "5", "k for kNN"),
+    );
+    let args = cmd.parse(argv)?;
+    let wb = workbench(&args)?;
+    let mode = parse_mode(&args)?;
+    let (exact, run, lower) = match args.get("app") {
+        "knn" => {
+            let k = args.get_usize("k")?;
+            (wb.run_knn(ProcessingMode::Exact, k)?, wb.run_knn(mode, k)?, false)
+        }
+        "cf" => (wb.run_cf(ProcessingMode::Exact)?, wb.run_cf(mode)?, true),
+        other => {
+            return Err(accurateml::Error::Config(format!(
+                "unknown app {other:?} (knn|cf)"
+            )))
+        }
+    };
+    let t = results_table(
+        &format!("{} on {:?} scale ({} backend)", args.get("app"), wb.config.scale, wb.backend.name()),
+        &exact,
+        &[run.clone()],
+        lower,
+    );
+    print!("{}", t.console());
+    // Fig.-4-style mean map-task breakdown.
+    let mt = &run.mean_task;
+    let et = exact.mean_task.compute_s();
+    println!(
+        "mean map task: lsh {:.3}ms  aggregate {:.3}ms  initial {:.3}ms  refine {:.3}ms  exact {:.3}ms  (basic task {:.3}ms -> {:.1}% of basic)",
+        mt.lsh_s * 1e3,
+        mt.aggregate_s * 1e3,
+        mt.initial_s * 1e3,
+        mt.refine_s * 1e3,
+        mt.exact_s * 1e3,
+        et * 1e3,
+        mt.compute_s() / et.max(1e-12) * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> accurateml::Result<()> {
+    let cmd = common_opts(
+        Command::new("accurateml sweep", "paper grid: ratios × thresholds")
+            .opt("app", "knn", "application: knn|cf")
+            .opt("ratios", "10,20,100", "compression ratios")
+            .opt("thresholds", "0.01,0.05,0.1", "refinement thresholds")
+            .opt("k", "5", "k for kNN"),
+    );
+    let args = cmd.parse(argv)?;
+    let wb = workbench(&args)?;
+    let app = args.get("app").to_string();
+    let ratios = args.get_f64_list("ratios")?;
+    let thresholds = args.get_f64_list("thresholds")?;
+    let k = args.get_usize("k")?;
+
+    let run = |mode: ProcessingMode| -> accurateml::Result<_> {
+        match app.as_str() {
+            "knn" => wb.run_knn(mode, k),
+            "cf" => wb.run_cf(mode),
+            other => Err(accurateml::Error::Config(format!("unknown app {other:?}"))),
+        }
+    };
+    let exact = run(ProcessingMode::Exact)?;
+    let mut runs = Vec::new();
+    for &r in &ratios {
+        for &eps in &thresholds {
+            runs.push(run(ProcessingMode::AccurateML {
+                compression_ratio: r,
+                refinement_threshold: eps,
+            })?);
+        }
+    }
+    let t = results_table(&format!("{app} sweep"), &exact, &runs, app == "cf");
+    print!("{}", t.console());
+    Ok(())
+}
+
+fn cmd_compare(argv: &[String]) -> accurateml::Result<()> {
+    let cmd = common_opts(
+        Command::new(
+            "accurateml compare",
+            "equal-time AccurateML vs sampling (§IV-C protocol)",
+        )
+        .opt("app", "knn", "application: knn|cf")
+        .opt("ratio", "10", "compression ratio")
+        .opt("eps", "0.05", "refinement threshold")
+        .opt("k", "5", "k for kNN"),
+    );
+    let args = cmd.parse(argv)?;
+    let wb = workbench(&args)?;
+    let mode = ProcessingMode::AccurateML {
+        compression_ratio: args.get_f64("ratio")?,
+        refinement_threshold: args.get_f64("eps")?,
+    };
+    let k = args.get_usize("k")?;
+    let (exact, aml, samp, lower) = match args.get("app") {
+        "knn" => {
+            let exact = wb.run_knn(ProcessingMode::Exact, k)?;
+            let aml = wb.run_knn(mode, k)?;
+            let samp = wb.matched_sampling_knn(aml.sim_time_s, &exact, k)?;
+            (exact, aml, samp, false)
+        }
+        "cf" => {
+            let exact = wb.run_cf(ProcessingMode::Exact)?;
+            let aml = wb.run_cf(mode)?;
+            let samp = wb.matched_sampling_cf(aml.sim_time_s, &exact)?;
+            (exact, aml, samp, true)
+        }
+        other => {
+            return Err(accurateml::Error::Config(format!(
+                "unknown app {other:?} (knn|cf)"
+            )))
+        }
+    };
+    let t = results_table(
+        &format!("{} equal-time comparison", args.get("app")),
+        &exact,
+        &[aml.clone(), samp.clone()],
+        lower,
+    );
+    print!("{}", t.console());
+    let loss = |r: &accurateml::coordinator::RunResult| {
+        if lower {
+            ((r.metric - exact.metric) / exact.metric).max(0.0)
+        } else {
+            ((exact.metric - r.metric) / exact.metric).max(0.0)
+        }
+    };
+    let (la, ls) = (loss(&aml), loss(&samp));
+    if la > 0.0 {
+        println!("accuracy-loss reduction: {:.2}x (sampling {:.2}% -> accurateml {:.2}%)",
+            ls / la, ls * 100.0, la * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_gen_data(argv: &[String]) -> accurateml::Result<()> {
+    let cmd = Command::new("accurateml gen-data", "pre-generate and cache datasets")
+        .opt("scale", "default", "dataset scale: small|default|paper")
+        .opt("out", "data", "cache directory");
+    let args = cmd.parse(argv)?;
+    let scale = Scale::parse(args.get("scale"))?;
+    let dir = std::path::PathBuf::from(args.get("out"));
+    std::fs::create_dir_all(&dir)?;
+    let cfg = WorkbenchConfig::preset(scale);
+    let knn = cfg.knn_spec.generate()?;
+    let knn_path = dir.join(format!("knn_{scale:?}.bin").to_lowercase());
+    accurateml::data::io::save_points(&knn_path, &knn)?;
+    println!(
+        "{}: {} train / {} test points x {} dims",
+        knn_path.display(),
+        knn.train.rows(),
+        knn.test.rows(),
+        knn.train.cols()
+    );
+    let cf = cfg.cf_spec.generate()?;
+    let cf_path = dir.join(format!("cf_{scale:?}.bin").to_lowercase());
+    accurateml::data::io::save_ratings(&cf_path, &cf)?;
+    println!(
+        "{}: {} users x {} items, {} ratings",
+        cf_path.display(),
+        cf.n_users(),
+        cf.n_items(),
+        cf.n_ratings()
+    );
+    println!("pass --data-dir {} (or set data_dir in WorkbenchConfig) to reuse", dir.display());
+    Ok(())
+}
+
+fn cmd_table1() -> accurateml::Result<()> {
+    let mut t = Table::new(
+        "Table I: percentages of ML algorithms per category",
+        &["category", "mahout_yes", "mahout_no", "mllib_yes", "mllib_no"],
+    );
+    let ma = catalog::tally(catalog::Library::Mahout);
+    let ml = catalog::tally(catalog::Library::MLlib);
+    let mut row = |name: &str, a: f64, b: f64| {
+        t.row(vec![
+            name.to_string(),
+            f(a, 2),
+            f(100.0 - a, 2),
+            f(b, 2),
+            f(100.0 - b, 2),
+        ]);
+    };
+    row("map compute ∝ input size", ma.compute_yes, ml.compute_yes);
+    row("shuffle cost ∝ input size", ma.shuffle_yes, ml.shuffle_yes);
+    row("accuracy ∝ processed ratio", ma.accuracy_yes, ml.accuracy_yes);
+    print!("{}", t.console());
+    println!("(census: {} Mahout + {} MLlib algorithms)", ma.n, ml.n);
+    Ok(())
+}
+
+fn cmd_check(argv: &[String]) -> accurateml::Result<()> {
+    let cmd = Command::new(
+        "accurateml check",
+        "compile every artifact and compare PJRT vs native numerics",
+    )
+    .opt("artifacts", "artifacts", "artifact directory");
+    let args = cmd.parse(argv)?;
+    let svc = Arc::new(PjrtService::start(std::path::Path::new(args.get("artifacts")))?);
+    println!("manifest: {} artifacts", svc.manifest().artifacts.len());
+    svc.warmup_all()?;
+    println!("compile: all artifacts OK");
+
+    let pjrt = PjrtBackend::new(svc.clone());
+    let native = NativeBackend;
+    let mut rng = Rng::new(1);
+    let mut rand_m = |rows: usize, cols: usize| {
+        let mut m = Matrix::zeros(rows, cols);
+        for v in m.as_mut_slice() {
+            *v = rng.normal() as f32;
+        }
+        m
+    };
+
+    // kNN check against the smallest knn_scores artifact's dims.
+    if let Some(meta) = svc.manifest().by_kind("knn_scores").first() {
+        let d = meta.param("d")?;
+        let k = meta.param("k")?;
+        let q = rand_m(10, d);
+        let x = rand_m(300, d);
+        let a = pjrt.knn_block_topk(&q, &x, k)?;
+        let b = native.knn_block_topk(&q, &x, k)?;
+        for (qa, qb) in a.iter().zip(&b) {
+            for (ca, cb) in qa.iter().zip(qb) {
+                if (ca.0 - cb.0).abs() > 1e-3 {
+                    return Err(accurateml::Error::Xla(format!(
+                        "knn mismatch: pjrt {ca:?} vs native {cb:?}"
+                    )));
+                }
+            }
+        }
+        println!("knn_scores: PJRT matches native (10x300, d={d}, k={k})");
+    }
+    println!("check OK ({} backend ready)", pjrt.name());
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> accurateml::Result<()> {
+    let cmd = Command::new("accurateml info", "environment summary")
+        .opt("artifacts", "artifacts", "artifact directory");
+    let args = cmd.parse(argv)?;
+    println!("accurateml {}", env!("CARGO_PKG_VERSION"));
+    println!(
+        "workers available: {}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(0)
+    );
+    match accurateml::runtime::manifest::Manifest::load(std::path::Path::new(args.get("artifacts")))
+    {
+        Ok(m) => {
+            println!("artifacts ({}):", m.artifacts.len());
+            for a in &m.artifacts {
+                println!("  {} [{}]", a.name, a.kind);
+            }
+        }
+        Err(e) => println!("artifacts: not available ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,133 @@
+//! Cluster cost model: replays measured task times onto a virtual
+//! cluster to reconstruct the paper's testbed-scale job times.
+//!
+//! The paper ran on 8 workers × 2 executors over 1 GbE. We cannot
+//! measure that here, but a job's end-to-end time decomposes into
+//!
+//! ```text
+//! T_job = makespan(map task times over S slots) + shuffle_bytes / B + T_reduce
+//! ```
+//!
+//! with S executor slots and link bandwidth B. All the paper's claims
+//! are *ratios* of such times between processing modes; replaying both
+//! modes through the same model preserves those ratios while letting the
+//! map-task times be real measured compute.
+
+/// Virtual cluster parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterModel {
+    /// Executor slots executing map tasks in parallel (paper: 16).
+    pub n_slots: usize,
+    /// Shuffle link bandwidth in bytes/second (paper: 1 GbE ≈ 117 MiB/s
+    /// effective).
+    pub shuffle_bandwidth: f64,
+    /// Fixed per-job scheduling overhead in seconds.
+    pub overhead_s: f64,
+}
+
+impl Default for ClusterModel {
+    fn default() -> Self {
+        ClusterModel {
+            n_slots: 16,
+            shuffle_bandwidth: 117.0 * 1024.0 * 1024.0,
+            overhead_s: 0.0,
+        }
+    }
+}
+
+impl ClusterModel {
+    /// Longest-processing-time-first makespan of `task_times` over the
+    /// model's slots (the classic greedy 4/3-approximation — adequate
+    /// since we compare modes under the same scheduler).
+    pub fn makespan(&self, task_times: &[f64]) -> f64 {
+        if task_times.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = task_times.to_vec();
+        sorted.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        // Min-heap over slot loads via BinaryHeap<Reverse<ordered f64>>.
+        let mut slots = vec![0.0f64; self.n_slots.max(1)];
+        for t in sorted {
+            // Find least-loaded slot (n_slots is small; linear scan ok).
+            let (idx, _) = slots
+                .iter()
+                .enumerate()
+                .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap();
+            slots[idx] += t;
+        }
+        slots.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Shuffle transfer time for a byte volume.
+    pub fn shuffle_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.shuffle_bandwidth
+    }
+
+    /// Full simulated job time.
+    pub fn job_time(&self, task_times: &[f64], shuffle_bytes: u64, reduce_s: f64) -> f64 {
+        self.overhead_s + self.makespan(task_times) + self.shuffle_time(shuffle_bytes) + reduce_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn makespan_single_slot_is_sum() {
+        let m = ClusterModel {
+            n_slots: 1,
+            ..Default::default()
+        };
+        assert!((m.makespan(&[1.0, 2.0, 3.0]) - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn makespan_many_slots_is_max() {
+        let m = ClusterModel {
+            n_slots: 10,
+            ..Default::default()
+        };
+        assert!((m.makespan(&[1.0, 2.0, 3.0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn makespan_balances() {
+        let m = ClusterModel {
+            n_slots: 2,
+            ..Default::default()
+        };
+        // LPT on [3,3,2,2]: slots get {3,2} and {3,2} -> 5.
+        assert!((m.makespan(&[3.0, 3.0, 2.0, 2.0]) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shuffle_time_scales_linearly() {
+        let m = ClusterModel {
+            shuffle_bandwidth: 100.0,
+            ..Default::default()
+        };
+        assert!((m.shuffle_time(1000) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn job_time_composes() {
+        let m = ClusterModel {
+            n_slots: 1,
+            shuffle_bandwidth: 10.0,
+            overhead_s: 1.0,
+        };
+        let t = m.job_time(&[2.0], 20, 0.5);
+        assert!((t - (1.0 + 2.0 + 2.0 + 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_job_costs_overhead_only() {
+        let m = ClusterModel {
+            overhead_s: 0.25,
+            ..Default::default()
+        };
+        assert!((m.job_time(&[], 0, 0.0) - 0.25).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,359 @@
+//! The engine: run a [`MapReduceJob`] over a worker pool with shuffle
+//! accounting.
+//!
+//! `run` executes every map task on the pool, collects outputs in
+//! partition order, accounts shuffle bytes/records, runs reduce on the
+//! caller thread and returns the output together with [`JobMetrics`].
+
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::mapreduce::metrics::{JobMetrics, TaskMetrics};
+use crate::util::pool::WorkerPool;
+use crate::util::timer::Stopwatch;
+
+/// A MapReduce job: the engine's only interface to applications.
+///
+/// Implementations hold their inputs (dataset views, aggregated
+/// structures, backends) internally; `map` must be pure per partition so
+/// tasks can run on any worker in any order.
+pub trait MapReduceJob: Send + Sync + 'static {
+    /// One map task's output (the shuffled payload).
+    type MapOut: Send + 'static;
+    /// The job's final result.
+    type Output;
+
+    /// Number of input partitions == number of map tasks.
+    fn n_partitions(&self) -> usize;
+
+    /// Run one map task; record timing into `metrics`.
+    fn map(&self, part_id: usize, metrics: &mut TaskMetrics) -> Self::MapOut;
+
+    /// Bytes this output contributes to the shuffle phase.
+    fn shuffle_bytes(&self, out: &Self::MapOut) -> u64;
+
+    /// Records this output contributes to the shuffle phase.
+    fn shuffle_records(&self, out: &Self::MapOut) -> u64;
+
+    /// Reduce all map outputs (in partition order) to the final result.
+    fn reduce(&self, outs: Vec<Self::MapOut>) -> Self::Output;
+}
+
+/// Output + metrics from one job run.
+#[derive(Debug)]
+pub struct JobReport<O> {
+    pub output: O,
+    pub metrics: JobMetrics,
+}
+
+/// Execution engine owning a worker pool.
+pub struct Engine {
+    pool: WorkerPool,
+}
+
+impl Engine {
+    /// Engine with `n_workers` local workers.
+    pub fn new(n_workers: usize) -> Engine {
+        Engine {
+            pool: WorkerPool::new(n_workers),
+        }
+    }
+
+    /// Engine sized to the machine.
+    pub fn with_default_size() -> Engine {
+        Engine {
+            pool: WorkerPool::with_default_size(),
+        }
+    }
+
+    /// Local worker count.
+    pub fn n_workers(&self) -> usize {
+        self.pool.size()
+    }
+
+    /// Run a job to completion (no retries — a task panic fails the job).
+    pub fn run<J: MapReduceJob>(&self, job: Arc<J>) -> Result<JobReport<J::Output>> {
+        self.run_with_retries(job, 0)
+    }
+
+    /// Run a job, re-executing panicked map tasks up to `max_retries`
+    /// times each — the engine-level analogue of Spark's task retry.
+    /// Map tasks must therefore be idempotent (ours are: pure functions
+    /// of the partition).
+    pub fn run_with_retries<J: MapReduceJob>(
+        &self,
+        job: Arc<J>,
+        max_retries: usize,
+    ) -> Result<JobReport<J::Output>> {
+        let n = job.n_partitions();
+        if n == 0 {
+            return Err(Error::Engine("job has zero partitions".into()));
+        }
+
+        // Map phase. Task panics are caught per-task and the partition
+        // retried; the worker pool itself never sees the panic.
+        let slots: Arc<Mutex<Vec<Option<(J::MapOut, TaskMetrics)>>>> =
+            Arc::new(Mutex::new((0..n).map(|_| None).collect()));
+        let map_sw = Stopwatch::new();
+        let mut pending: Vec<usize> = (0..n).collect();
+        let mut attempt = 0;
+        while !pending.is_empty() {
+            let batch = std::mem::take(&mut pending);
+            let failed: Arc<Mutex<Vec<usize>>> = Arc::new(Mutex::new(Vec::new()));
+            self.pool.scope(batch.len(), |i| {
+                let part_id = batch[i];
+                let job = Arc::clone(&job);
+                let slots = Arc::clone(&slots);
+                let failed = Arc::clone(&failed);
+                move || {
+                    let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        let mut tm = TaskMetrics::default();
+                        let out = job.map(part_id, &mut tm);
+                        (out, tm)
+                    }));
+                    match r {
+                        Ok(out) => slots.lock().unwrap()[part_id] = Some(out),
+                        Err(_) => failed.lock().unwrap().push(part_id),
+                    }
+                }
+            });
+            pending = Arc::try_unwrap(failed)
+                .map_err(|_| Error::Engine("retry list still referenced".into()))?
+                .into_inner()
+                .map_err(|_| Error::Engine("poisoned retry lock".into()))?;
+            if !pending.is_empty() {
+                if attempt >= max_retries {
+                    return Err(Error::Engine(format!(
+                        "map tasks {pending:?} failed after {attempt} retry attempt(s)"
+                    )));
+                }
+                attempt += 1;
+                log::warn!("retrying {} failed map task(s), attempt {attempt}", pending.len());
+            }
+        }
+        let map_wall_s = map_sw.elapsed_s();
+
+        // Collect in partition order; account shuffle.
+        let collected = Arc::try_unwrap(slots)
+            .map_err(|_| Error::Engine("map outputs still referenced".into()))?
+            .into_inner()
+            .map_err(|_| Error::Engine("poisoned map output lock".into()))?;
+        let mut outs = Vec::with_capacity(n);
+        let mut tasks = Vec::with_capacity(n);
+        let mut shuffle_bytes = 0u64;
+        let mut shuffle_records = 0u64;
+        for (i, slot) in collected.into_iter().enumerate() {
+            let (out, mut tm) = slot.ok_or_else(|| {
+                Error::Engine(format!("map task {i} produced no output"))
+            })?;
+            tm.bytes_out = job.shuffle_bytes(&out);
+            tm.records_out = job.shuffle_records(&out);
+            shuffle_bytes += tm.bytes_out;
+            shuffle_records += tm.records_out;
+            tasks.push(tm);
+            outs.push(out);
+        }
+
+        // Reduce phase.
+        let red_sw = Stopwatch::new();
+        let output = job.reduce(outs);
+        let reduce_wall_s = red_sw.elapsed_s();
+
+        Ok(JobReport {
+            output,
+            metrics: JobMetrics {
+                tasks,
+                map_wall_s,
+                reduce_wall_s,
+                shuffle_bytes,
+                shuffle_records,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Toy job: map emits the squares in its range; reduce sums them.
+    struct SquareJob {
+        ranges: Vec<(u64, u64)>,
+    }
+
+    impl MapReduceJob for SquareJob {
+        type MapOut = Vec<u64>;
+        type Output = u64;
+
+        fn n_partitions(&self) -> usize {
+            self.ranges.len()
+        }
+
+        fn map(&self, part_id: usize, metrics: &mut TaskMetrics) -> Vec<u64> {
+            let sw = Stopwatch::new();
+            let (lo, hi) = self.ranges[part_id];
+            let out: Vec<u64> = (lo..hi).map(|x| x * x).collect();
+            metrics.exact_s = sw.elapsed_s();
+            out
+        }
+
+        fn shuffle_bytes(&self, out: &Vec<u64>) -> u64 {
+            (out.len() * 8) as u64
+        }
+
+        fn shuffle_records(&self, out: &Vec<u64>) -> u64 {
+            out.len() as u64
+        }
+
+        fn reduce(&self, outs: Vec<Vec<u64>>) -> u64 {
+            outs.into_iter().flatten().sum()
+        }
+    }
+
+    #[test]
+    fn runs_map_reduce_correctly() {
+        let engine = Engine::new(4);
+        let job = Arc::new(SquareJob {
+            ranges: vec![(0, 25), (25, 50), (50, 75), (75, 100), (100, 101)],
+        });
+        let report = engine.run(job).unwrap();
+        let expect: u64 = (0u64..101).map(|x| x * x).sum();
+        assert_eq!(report.output, expect);
+        assert_eq!(report.metrics.tasks.len(), 5);
+        assert_eq!(report.metrics.shuffle_records, 101);
+        assert_eq!(report.metrics.shuffle_bytes, 101 * 8);
+        assert!(report.metrics.map_wall_s >= 0.0);
+    }
+
+    #[test]
+    fn zero_partition_job_rejected() {
+        let engine = Engine::new(2);
+        let job = Arc::new(SquareJob { ranges: vec![] });
+        assert!(engine.run(job).is_err());
+    }
+
+    #[test]
+    fn outputs_arrive_in_partition_order() {
+        struct IdJob;
+        impl MapReduceJob for IdJob {
+            type MapOut = usize;
+            type Output = Vec<usize>;
+            fn n_partitions(&self) -> usize {
+                32
+            }
+            fn map(&self, part_id: usize, _m: &mut TaskMetrics) -> usize {
+                // Stagger so completion order != partition order.
+                std::thread::sleep(std::time::Duration::from_micros(
+                    ((32 - part_id) * 10) as u64,
+                ));
+                part_id
+            }
+            fn shuffle_bytes(&self, _out: &usize) -> u64 {
+                8
+            }
+            fn shuffle_records(&self, _out: &usize) -> u64 {
+                1
+            }
+            fn reduce(&self, outs: Vec<usize>) -> Vec<usize> {
+                outs
+            }
+        }
+        let engine = Engine::new(8);
+        let report = engine.run(Arc::new(IdJob)).unwrap();
+        assert_eq!(report.output, (0..32).collect::<Vec<_>>());
+    }
+}
+
+#[cfg(test)]
+mod retry_tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    /// Panics on the first attempt of every odd partition.
+    struct FlakyJob {
+        attempts: Vec<AtomicUsize>,
+    }
+
+    impl FlakyJob {
+        fn new(n: usize) -> FlakyJob {
+            FlakyJob {
+                attempts: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            }
+        }
+    }
+
+    impl MapReduceJob for FlakyJob {
+        type MapOut = usize;
+        type Output = usize;
+
+        fn n_partitions(&self) -> usize {
+            self.attempts.len()
+        }
+
+        fn map(&self, part_id: usize, _m: &mut TaskMetrics) -> usize {
+            let prior = self.attempts[part_id].fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            if part_id % 2 == 1 && prior == 0 {
+                panic!("injected fault in partition {part_id}");
+            }
+            part_id
+        }
+
+        fn shuffle_bytes(&self, _o: &usize) -> u64 {
+            8
+        }
+
+        fn shuffle_records(&self, _o: &usize) -> u64 {
+            1
+        }
+
+        fn reduce(&self, outs: Vec<usize>) -> usize {
+            outs.into_iter().sum()
+        }
+    }
+
+    #[test]
+    fn retries_recover_injected_faults() {
+        let engine = Engine::new(4);
+        let job = Arc::new(FlakyJob::new(8));
+        let report = engine.run_with_retries(Arc::clone(&job), 2).unwrap();
+        assert_eq!(report.output, (0..8).sum::<usize>());
+        // Odd partitions ran twice, even ones once.
+        for (i, a) in job.attempts.iter().enumerate() {
+            assert_eq!(a.load(Ordering::SeqCst), 1 + (i % 2), "partition {i}");
+        }
+    }
+
+    #[test]
+    fn zero_retries_fails_on_fault() {
+        let engine = Engine::new(2);
+        let job = Arc::new(FlakyJob::new(4));
+        assert!(engine.run(job).is_err());
+    }
+
+    #[test]
+    fn exhausted_retries_error_lists_partitions() {
+        struct AlwaysBad;
+        impl MapReduceJob for AlwaysBad {
+            type MapOut = ();
+            type Output = ();
+            fn n_partitions(&self) -> usize {
+                3
+            }
+            fn map(&self, part_id: usize, _m: &mut TaskMetrics) {
+                if part_id == 1 {
+                    panic!("permanent fault");
+                }
+            }
+            fn shuffle_bytes(&self, _o: &()) -> u64 {
+                0
+            }
+            fn shuffle_records(&self, _o: &()) -> u64 {
+                0
+            }
+            fn reduce(&self, _outs: Vec<()>) {}
+        }
+        let engine = Engine::new(2);
+        let err = engine.run_with_retries(Arc::new(AlwaysBad), 2).unwrap_err();
+        assert!(err.to_string().contains("[1]"), "{err}");
+    }
+}

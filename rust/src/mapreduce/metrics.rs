@@ -1,0 +1,131 @@
+//! Per-task and per-job metrics.
+//!
+//! [`TaskMetrics`] attributes map-task compute time to exactly the four
+//! parts the paper breaks down in Fig. 4: LSH grouping, information
+//! aggregation, producing the initial output, and refinement — plus an
+//! `exact_s` lane for basic (non-AccurateML) tasks and shuffle
+//! record/byte accounting.
+
+/// Timing and output accounting for one map task.
+#[derive(Clone, Debug, Default)]
+pub struct TaskMetrics {
+    /// Part 1 (Fig. 4): grouping similar data points using LSH.
+    pub lsh_s: f64,
+    /// Part 2: information aggregation of original data points.
+    pub aggregate_s: f64,
+    /// Part 3: producing initial outputs from aggregated points.
+    pub initial_s: f64,
+    /// Part 4: refining outputs by processing original data points.
+    pub refine_s: f64,
+    /// Basic-task compute (exact or sampling scan).
+    pub exact_s: f64,
+    /// Records emitted to the shuffle.
+    pub records_out: u64,
+    /// Bytes emitted to the shuffle.
+    pub bytes_out: u64,
+}
+
+impl TaskMetrics {
+    /// Total compute seconds of this task.
+    pub fn compute_s(&self) -> f64 {
+        self.lsh_s + self.aggregate_s + self.initial_s + self.refine_s + self.exact_s
+    }
+
+    /// Accumulate another task's numbers (for averaging across tasks).
+    pub fn add(&mut self, o: &TaskMetrics) {
+        self.lsh_s += o.lsh_s;
+        self.aggregate_s += o.aggregate_s;
+        self.initial_s += o.initial_s;
+        self.refine_s += o.refine_s;
+        self.exact_s += o.exact_s;
+        self.records_out += o.records_out;
+        self.bytes_out += o.bytes_out;
+    }
+
+    /// Scale all timings by `f` (averaging helper).
+    pub fn scaled(&self, f: f64) -> TaskMetrics {
+        TaskMetrics {
+            lsh_s: self.lsh_s * f,
+            aggregate_s: self.aggregate_s * f,
+            initial_s: self.initial_s * f,
+            refine_s: self.refine_s * f,
+            exact_s: self.exact_s * f,
+            records_out: self.records_out,
+            bytes_out: self.bytes_out,
+        }
+    }
+}
+
+/// Aggregated metrics for one job run.
+#[derive(Clone, Debug, Default)]
+pub struct JobMetrics {
+    /// Per-map-task metrics (len == n_partitions).
+    pub tasks: Vec<TaskMetrics>,
+    /// Measured wall-clock seconds of the whole map phase.
+    pub map_wall_s: f64,
+    /// Measured wall-clock seconds of the reduce phase.
+    pub reduce_wall_s: f64,
+    /// Total shuffle bytes.
+    pub shuffle_bytes: u64,
+    /// Total shuffle records.
+    pub shuffle_records: u64,
+}
+
+impl JobMetrics {
+    /// Sum of all map tasks' compute seconds (single-slot equivalent).
+    pub fn total_map_compute_s(&self) -> f64 {
+        self.tasks.iter().map(|t| t.compute_s()).sum()
+    }
+
+    /// Mean task metrics (the paper reports per-map-task averages).
+    pub fn mean_task(&self) -> TaskMetrics {
+        let mut acc = TaskMetrics::default();
+        for t in &self.tasks {
+            acc.add(t);
+        }
+        let n = self.tasks.len().max(1) as f64;
+        let mut mean = acc.scaled(1.0 / n);
+        mean.records_out = acc.records_out / self.tasks.len().max(1) as u64;
+        mean.bytes_out = acc.bytes_out / self.tasks.len().max(1) as u64;
+        mean
+    }
+
+    /// Per-task compute times (LPT scheduling input).
+    pub fn task_times(&self) -> Vec<f64> {
+        self.tasks.iter().map(|t| t.compute_s()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(lsh: f64, agg: f64, init: f64, refine: f64) -> TaskMetrics {
+        TaskMetrics {
+            lsh_s: lsh,
+            aggregate_s: agg,
+            initial_s: init,
+            refine_s: refine,
+            exact_s: 0.0,
+            records_out: 10,
+            bytes_out: 100,
+        }
+    }
+
+    #[test]
+    fn compute_sums_parts() {
+        let m = t(1.0, 2.0, 3.0, 4.0);
+        assert_eq!(m.compute_s(), 10.0);
+    }
+
+    #[test]
+    fn mean_task_averages() {
+        let jm = JobMetrics {
+            tasks: vec![t(1.0, 0.0, 0.0, 0.0), t(3.0, 0.0, 0.0, 0.0)],
+            ..Default::default()
+        };
+        let mean = jm.mean_task();
+        assert!((mean.lsh_s - 2.0).abs() < 1e-12);
+        assert_eq!(jm.total_map_compute_s(), 4.0);
+    }
+}

@@ -1,0 +1,20 @@
+//! The MapReduce execution engine — the substrate the paper assumes
+//! (a Spark cluster) rebuilt as an in-process engine.
+//!
+//! A job is partitions → map tasks (run on a worker pool) → shuffle
+//! (byte-accounted) → reduce. Two clocks are kept:
+//!
+//! * **measured** wall time on this machine, used for relative
+//!   comparisons between processing modes (who wins and by how much);
+//! * **simulated** cluster time from [`cost::ClusterModel`]: map-task
+//!   times scheduled LPT onto N executor slots plus shuffle bytes over a
+//!   modelled link — this reconstructs the shape of the paper's
+//!   9-node/1GbE numbers (see DESIGN.md §3's substitution table).
+
+pub mod cost;
+pub mod engine;
+pub mod metrics;
+
+pub use cost::ClusterModel;
+pub use engine::{Engine, JobReport, MapReduceJob};
+pub use metrics::{JobMetrics, TaskMetrics};

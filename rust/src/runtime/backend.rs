@@ -1,0 +1,561 @@
+//! Scoring backends: the compute interface map tasks go through.
+//!
+//! [`ScoreBackend`] abstracts the three hot contractions of the two
+//! applications. [`NativeBackend`] is the portable scalar/SIMD-unrolled
+//! Rust implementation; [`PjrtBackend`] routes blocks through the AOT
+//! Pallas/JAX artifacts (padding to artifact shapes, chunking oversize
+//! blocks, remapping indices); [`FallbackBackend`] prefers PJRT and
+//! degrades to native per call when no artifact fits (e.g. an unusual
+//! feature dimension not in the compiled shape families).
+
+use std::collections::BinaryHeap;
+use std::sync::Arc;
+
+use crate::data::matrix::{sq_dist, Matrix};
+use crate::error::{Error, Result};
+use crate::runtime::service::{PjrtService, Tensor};
+
+/// One kNN candidate: (squared distance, local row id).
+pub type Candidate = (f32, u32);
+
+/// The compute interface of the map tasks.
+pub trait ScoreBackend: Send + Sync {
+    /// For each query row of `q`, the `k` nearest rows of `x` as
+    /// (squared distance, x-row id), ascending by distance.
+    fn knn_block_topk(&self, q: &Matrix, x: &Matrix, k: usize) -> Result<Vec<Vec<Candidate>>>;
+
+    /// Full (q.rows × x.rows) squared-distance matrix.
+    fn knn_dists(&self, q: &Matrix, x: &Matrix) -> Result<Matrix>;
+
+    /// Masked Pearson weights: (a.rows × u.rows). Inputs are centered,
+    /// mask-zeroed rating rows + masks (see `python/compile/kernels/
+    /// similarity.py` for the formulation).
+    fn cf_weights(&self, ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Result<Matrix>;
+
+    /// Backend label for reports.
+    fn name(&self) -> &'static str;
+}
+
+// ---------------------------------------------------------------------------
+// Native backend
+// ---------------------------------------------------------------------------
+
+/// Portable Rust implementation (also the numerical reference for the
+/// PJRT path in integration tests).
+#[derive(Default)]
+pub struct NativeBackend;
+
+/// Max-heap entry so the heap evicts the *largest* distance.
+#[derive(PartialEq)]
+struct HeapItem(f32, u32);
+
+impl Eq for HeapItem {}
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0
+            .partial_cmp(&other.0)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(self.1.cmp(&other.1))
+    }
+}
+
+/// Maintain the k smallest candidates while scanning.
+pub struct TopK {
+    k: usize,
+    heap: BinaryHeap<HeapItem>,
+}
+
+impl TopK {
+    /// Empty accumulator for `k` candidates.
+    pub fn new(k: usize) -> TopK {
+        TopK {
+            k,
+            heap: BinaryHeap::with_capacity(k + 1),
+        }
+    }
+
+    /// Current worst (largest) kept distance, if full.
+    #[inline]
+    pub fn threshold(&self) -> Option<f32> {
+        if self.heap.len() == self.k {
+            self.heap.peek().map(|h| h.0)
+        } else {
+            None
+        }
+    }
+
+    /// Offer a candidate.
+    #[inline]
+    pub fn push(&mut self, dist: f32, id: u32) {
+        if self.heap.len() < self.k {
+            self.heap.push(HeapItem(dist, id));
+        } else if let Some(top) = self.heap.peek() {
+            if dist < top.0 {
+                self.heap.pop();
+                self.heap.push(HeapItem(dist, id));
+            }
+        }
+    }
+
+    /// Drain ascending by distance.
+    pub fn into_sorted(self) -> Vec<Candidate> {
+        let mut v: Vec<Candidate> = self.heap.into_iter().map(|h| (h.0, h.1)).collect();
+        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        v
+    }
+}
+
+impl ScoreBackend for NativeBackend {
+    fn knn_block_topk(&self, q: &Matrix, x: &Matrix, k: usize) -> Result<Vec<Vec<Candidate>>> {
+        check_dims(q, x)?;
+        let mut out = Vec::with_capacity(q.rows());
+        for qi in 0..q.rows() {
+            let qr = q.row(qi);
+            let mut topk = TopK::new(k);
+            for xi in 0..x.rows() {
+                let d = sq_dist(x.row(xi), qr);
+                topk.push(d, xi as u32);
+            }
+            out.push(topk.into_sorted());
+        }
+        Ok(out)
+    }
+
+    fn knn_dists(&self, q: &Matrix, x: &Matrix) -> Result<Matrix> {
+        check_dims(q, x)?;
+        let mut out = Matrix::zeros(q.rows(), x.rows());
+        for qi in 0..q.rows() {
+            let qr = q.row(qi);
+            let row = out.row_mut(qi);
+            for xi in 0..x.rows() {
+                row[xi] = sq_dist(x.row(xi), qr);
+            }
+        }
+        Ok(out)
+    }
+
+    fn cf_weights(&self, ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Result<Matrix> {
+        check_cf_dims(ca, ma, cu, mu)?;
+        let a = ca.rows();
+        let n = cu.rows();
+        let mut w = Matrix::zeros(a, n);
+        for i in 0..a {
+            let ca_row = ca.row(i);
+            let ma_row = ma.row(i);
+            let row = w.row_mut(i);
+            for j in 0..n {
+                row[j] = pearson_pair(ca_row, ma_row, cu.row(j), mu.row(j));
+            }
+        }
+        Ok(w)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// One Pearson weight from centered rows + masks, accumulating all
+/// three co-rated sums in a single fused pass over the item dimension.
+/// (§Perf step 6: the previous 3-separate-dots form made three memory
+/// sweeps over m plus materialized squared rows — this is the same
+/// arithmetic at one third the memory traffic.)
+#[inline]
+pub fn pearson_pair(ca: &[f32], ma: &[f32], cu: &[f32], mu: &[f32]) -> f32 {
+    debug_assert_eq!(ca.len(), cu.len());
+    let m = ca.len();
+    let mut num = [0.0f32; 4];
+    let mut den1 = [0.0f32; 4];
+    let mut den2 = [0.0f32; 4];
+    let chunks = m / 4;
+    for c in 0..chunks {
+        let j = c * 4;
+        for l in 0..4 {
+            let (a, am, u, um) = (ca[j + l], ma[j + l], cu[j + l], mu[j + l]);
+            num[l] += a * u;
+            den1[l] += a * a * um;
+            den2[l] += am * u * u;
+        }
+    }
+    let (mut sn, mut s1, mut s2) = (
+        num[0] + num[1] + num[2] + num[3],
+        den1[0] + den1[1] + den1[2] + den1[3],
+        den2[0] + den2[1] + den2[2] + den2[3],
+    );
+    for j in chunks * 4..m {
+        let (a, am, u, um) = (ca[j], ma[j], cu[j], mu[j]);
+        sn += a * u;
+        s1 += a * a * um;
+        s2 += am * u * u;
+    }
+    sn / (s1 * s2 + 1e-12).sqrt()
+}
+
+fn check_dims(q: &Matrix, x: &Matrix) -> Result<()> {
+    if q.cols() != x.cols() {
+        return Err(Error::Shape(format!(
+            "query dim {} != points dim {}",
+            q.cols(),
+            x.cols()
+        )));
+    }
+    Ok(())
+}
+
+fn check_cf_dims(ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Result<()> {
+    let m = ca.cols();
+    if ma.cols() != m || cu.cols() != m || mu.cols() != m {
+        return Err(Error::Shape("CF item dims differ".into()));
+    }
+    if ma.rows() != ca.rows() || mu.rows() != cu.rows() {
+        return Err(Error::Shape("CF mask row counts differ".into()));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend
+// ---------------------------------------------------------------------------
+
+/// Routes blocks through the AOT artifacts via the device service.
+pub struct PjrtBackend {
+    service: Arc<PjrtService>,
+    /// Use the fused `knn_scores` (distances + top-k inside the graph)
+    /// artifact instead of `knn_dists` + host-side selection. The fused
+    /// form minimizes device→host transfer (q×k instead of q×n), which
+    /// is what a TPU deployment wants; on the CPU PJRT plugin the
+    /// in-graph sort costs more than the transfer saves (§Perf step 9:
+    /// 556ms vs ~150ms on the default-scale block), so this defaults
+    /// to off.
+    fused_topk: bool,
+}
+
+impl PjrtBackend {
+    /// Wrap a running service.
+    pub fn new(service: Arc<PjrtService>) -> PjrtBackend {
+        PjrtBackend {
+            service,
+            fused_topk: false,
+        }
+    }
+
+    /// Toggle the fused in-graph top-k path (see field docs).
+    pub fn with_fused_topk(mut self, fused: bool) -> PjrtBackend {
+        self.fused_topk = fused;
+        self
+    }
+
+    /// Pad matrix rows to `target` with `fill`, reusing data when
+    /// already the right shape.
+    fn padded(m: &Matrix, target: usize, fill: f32) -> Matrix {
+        if m.rows() == target {
+            m.clone()
+        } else {
+            m.pad_rows(target, fill)
+        }
+    }
+}
+
+impl ScoreBackend for PjrtBackend {
+    fn knn_block_topk(&self, q: &Matrix, x: &Matrix, k: usize) -> Result<Vec<Vec<Candidate>>> {
+        check_dims(q, x)?;
+        if !self.fused_topk {
+            // Device computes distances; host does the O(n) selection.
+            let dists = self.knn_dists(q, x)?;
+            let mut out = Vec::with_capacity(q.rows());
+            for qi in 0..q.rows() {
+                let mut topk = TopK::new(k);
+                for (xi, &dv) in dists.row(qi).iter().enumerate() {
+                    topk.push(dv, xi as u32);
+                }
+                out.push(topk.into_sorted());
+            }
+            return Ok(out);
+        }
+        let d = q.cols();
+        let meta = self
+            .service
+            .manifest()
+            .select("knn_scores", &[("d", d), ("k", k)])?;
+        let (aq, an) = (meta.param("q")?, meta.param("n")?);
+        let pad_coord = self.service.manifest().pad_coord;
+        let name = meta.name.clone();
+
+        let mut results: Vec<TopK> = (0..q.rows()).map(|_| TopK::new(k)).collect();
+        // Chunk both the query batch and the candidate rows to the
+        // artifact's static shape; merge per-chunk top-k on the host.
+        let mut x0 = 0;
+        while x0 < x.rows() {
+            let x1 = (x0 + an).min(x.rows());
+            let x_rows: Vec<usize> = (x0..x1).collect();
+            let x_chunk = Self::padded(&x.gather_rows(&x_rows), an, pad_coord);
+            let mut q0 = 0;
+            while q0 < q.rows() {
+                let q1 = (q0 + aq).min(q.rows());
+                let q_rows: Vec<usize> = (q0..q1).collect();
+                let q_chunk = Self::padded(&q.gather_rows(&q_rows), aq, 0.0);
+                let outs = self.service.execute(
+                    &name,
+                    vec![
+                        Tensor::f32(q_chunk.into_vec(), vec![aq, d]),
+                        Tensor::f32(x_chunk.clone().into_vec(), vec![an, d]),
+                    ],
+                )?;
+                let dists = outs[0].data.as_f32()?;
+                let idx = outs[1].data.as_i32()?;
+                for (qi, topk) in results[q0..q1].iter_mut().enumerate() {
+                    for j in 0..k {
+                        let flat = qi * k + j;
+                        let local = idx[flat] as usize;
+                        if x0 + local < x1 {
+                            // Skip padded rows (they land beyond x1).
+                            topk.push(dists[flat], (x0 + local) as u32);
+                        }
+                    }
+                }
+                q0 = q1;
+            }
+            x0 = x1;
+        }
+        Ok(results.into_iter().map(|t| t.into_sorted()).collect())
+    }
+
+    fn knn_dists(&self, q: &Matrix, x: &Matrix) -> Result<Matrix> {
+        check_dims(q, x)?;
+        let d = q.cols();
+        let meta = self.service.manifest().select("knn_dists", &[("d", d)])?;
+        let (aq, an) = (meta.param("q")?, meta.param("n")?);
+        let pad_coord = self.service.manifest().pad_coord;
+        let name = meta.name.clone();
+
+        let mut out = Matrix::zeros(q.rows(), x.rows());
+        let mut x0 = 0;
+        while x0 < x.rows() {
+            let x1 = (x0 + an).min(x.rows());
+            let x_rows: Vec<usize> = (x0..x1).collect();
+            let x_chunk = Self::padded(&x.gather_rows(&x_rows), an, pad_coord);
+            let mut q0 = 0;
+            while q0 < q.rows() {
+                let q1 = (q0 + aq).min(q.rows());
+                let q_rows: Vec<usize> = (q0..q1).collect();
+                let q_chunk = Self::padded(&q.gather_rows(&q_rows), aq, 0.0);
+                let outs = self.service.execute(
+                    &name,
+                    vec![
+                        Tensor::f32(q_chunk.into_vec(), vec![aq, d]),
+                        Tensor::f32(x_chunk.clone().into_vec(), vec![an, d]),
+                    ],
+                )?;
+                let dists = outs[0].data.as_f32()?;
+                for qi in q0..q1 {
+                    let src = &dists[(qi - q0) * an..(qi - q0) * an + (x1 - x0)];
+                    out.row_mut(qi)[x0..x1].copy_from_slice(src);
+                }
+                q0 = q1;
+            }
+            x0 = x1;
+        }
+        Ok(out)
+    }
+
+    fn cf_weights(&self, ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Result<Matrix> {
+        check_cf_dims(ca, ma, cu, mu)?;
+        let m = ca.cols();
+        let meta = self.service.manifest().select("cf_weights", &[("m", m)])?;
+        let (aa, an) = (meta.param("a")?, meta.param("n")?);
+        let name = meta.name.clone();
+
+        let mut out = Matrix::zeros(ca.rows(), cu.rows());
+        let mut n0 = 0;
+        while n0 < cu.rows() {
+            let n1 = (n0 + an).min(cu.rows());
+            let rows: Vec<usize> = (n0..n1).collect();
+            // Padded users carry all-zero masks -> zero weights.
+            let cu_chunk = Self::padded(&cu.gather_rows(&rows), an, 0.0);
+            let mu_chunk = Self::padded(&mu.gather_rows(&rows), an, 0.0);
+            let mut a0 = 0;
+            while a0 < ca.rows() {
+                let a1 = (a0 + aa).min(ca.rows());
+                let arows: Vec<usize> = (a0..a1).collect();
+                let ca_chunk = Self::padded(&ca.gather_rows(&arows), aa, 0.0);
+                let ma_chunk = Self::padded(&ma.gather_rows(&arows), aa, 0.0);
+                let outs = self.service.execute(
+                    &name,
+                    vec![
+                        Tensor::f32(ca_chunk.into_vec(), vec![aa, m]),
+                        Tensor::f32(ma_chunk.into_vec(), vec![aa, m]),
+                        Tensor::f32(cu_chunk.clone().into_vec(), vec![an, m]),
+                        Tensor::f32(mu_chunk.clone().into_vec(), vec![an, m]),
+                    ],
+                )?;
+                let w = outs[0].data.as_f32()?;
+                for ai in a0..a1 {
+                    let src = &w[(ai - a0) * an..(ai - a0) * an + (n1 - n0)];
+                    out.row_mut(ai)[n0..n1].copy_from_slice(src);
+                }
+                a0 = a1;
+            }
+            n0 = n1;
+        }
+        Ok(out)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fallback composition
+// ---------------------------------------------------------------------------
+
+/// Prefer PJRT, fall back to native per call when no artifact fits the
+/// requested shapes.
+pub struct FallbackBackend {
+    pjrt: PjrtBackend,
+    native: NativeBackend,
+}
+
+impl FallbackBackend {
+    /// Compose over a running service.
+    pub fn new(service: Arc<PjrtService>) -> FallbackBackend {
+        FallbackBackend {
+            pjrt: PjrtBackend::new(service),
+            native: NativeBackend,
+        }
+    }
+}
+
+impl ScoreBackend for FallbackBackend {
+    fn knn_block_topk(&self, q: &Matrix, x: &Matrix, k: usize) -> Result<Vec<Vec<Candidate>>> {
+        match self.pjrt.knn_block_topk(q, x, k) {
+            Err(Error::Manifest(_)) => self.native.knn_block_topk(q, x, k),
+            other => other,
+        }
+    }
+
+    fn knn_dists(&self, q: &Matrix, x: &Matrix) -> Result<Matrix> {
+        match self.pjrt.knn_dists(q, x) {
+            Err(Error::Manifest(_)) => self.native.knn_dists(q, x),
+            other => other,
+        }
+    }
+
+    fn cf_weights(&self, ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Result<Matrix> {
+        match self.pjrt.cf_weights(ca, ma, cu, mu) {
+            Err(Error::Manifest(_)) => self.native.cf_weights(ca, ma, cu, mu),
+            other => other,
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt+native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(rows, cols);
+        for v in m.as_mut_slice() {
+            *v = rng.normal() as f32;
+        }
+        m
+    }
+
+    #[test]
+    fn topk_keeps_k_smallest() {
+        let mut t = TopK::new(3);
+        for (i, d) in [5.0f32, 1.0, 4.0, 0.5, 9.0, 2.0].iter().enumerate() {
+            t.push(*d, i as u32);
+        }
+        let v = t.into_sorted();
+        assert_eq!(
+            v.iter().map(|c| c.1).collect::<Vec<_>>(),
+            vec![3, 1, 5],
+            "{v:?}"
+        );
+        assert!(v[0].0 <= v[1].0 && v[1].0 <= v[2].0);
+    }
+
+    #[test]
+    fn native_topk_matches_bruteforce() {
+        let q = rand_matrix(7, 10, 1);
+        let x = rand_matrix(50, 10, 2);
+        let got = NativeBackend.knn_block_topk(&q, &x, 5).unwrap();
+        for (qi, cands) in got.iter().enumerate() {
+            let mut all: Vec<(f32, u32)> = (0..50)
+                .map(|xi| (sq_dist(x.row(xi), q.row(qi)), xi as u32))
+                .collect();
+            all.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let expect: Vec<u32> = all[..5].iter().map(|c| c.1).collect();
+            let gotids: Vec<u32> = cands.iter().map(|c| c.1).collect();
+            assert_eq!(gotids, expect, "query {qi}");
+        }
+    }
+
+    #[test]
+    fn native_dists_match_sqdist() {
+        let q = rand_matrix(3, 6, 3);
+        let x = rand_matrix(8, 6, 4);
+        let d = NativeBackend.knn_dists(&q, &x).unwrap();
+        for qi in 0..3 {
+            for xi in 0..8 {
+                let expect = sq_dist(q.row(qi), x.row(xi));
+                assert!((d.get(qi, xi) - expect).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn native_cf_weights_in_range() {
+        // Build centered rows with masks and check |w| <= 1 + eps.
+        let mut rng = Rng::new(5);
+        let m = 24;
+        let mk = |rows: usize, seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut c = Matrix::zeros(rows, m);
+            let mut mask = Matrix::zeros(rows, m);
+            for r in 0..rows {
+                let mut vals = Vec::new();
+                for i in 0..m {
+                    if rng.chance(0.4) {
+                        mask.set(r, i, 1.0);
+                        vals.push(i);
+                    }
+                }
+                // Center within the row.
+                let raw: Vec<f32> = vals.iter().map(|_| rng.range_f64(1.0, 5.0) as f32).collect();
+                let mean = raw.iter().sum::<f32>() / raw.len().max(1) as f32;
+                for (j, &i) in vals.iter().enumerate() {
+                    c.set(r, i, raw[j] - mean);
+                }
+            }
+            (c, mask)
+        };
+        let (ca, ma) = mk(4, rng.next_u64());
+        let (cu, mu) = mk(10, rng.next_u64());
+        let w = NativeBackend.cf_weights(&ca, &ma, &cu, &mu).unwrap();
+        for v in w.as_slice() {
+            assert!(v.abs() <= 1.0 + 1e-4, "weight {v}");
+            assert!(v.is_finite());
+        }
+    }
+
+    #[test]
+    fn dim_mismatch_rejected() {
+        let q = rand_matrix(2, 4, 1);
+        let x = rand_matrix(3, 5, 2);
+        assert!(NativeBackend.knn_block_topk(&q, &x, 2).is_err());
+        assert!(NativeBackend.knn_dists(&q, &x).is_err());
+    }
+}

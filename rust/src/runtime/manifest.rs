@@ -1,0 +1,264 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime.
+//!
+//! The AOT compiler writes `manifest.json` next to the HLO files; this
+//! module parses it into typed metadata. The Rust side never hardcodes
+//! artifact shapes — everything (padding targets, output dtypes, k
+//! values) comes from here, so regenerating artifacts with different
+//! shape families requires no Rust changes.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Element type of an artifact input/output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(Error::Manifest(format!("unknown dtype {other:?}"))),
+        }
+    }
+}
+
+/// One named tensor port (input or output) of an artifact.
+#[derive(Clone, Debug)]
+pub struct Port {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// Metadata of one compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    /// Unique name, e.g. `knn_scores_q64_n2048_d64_k5`.
+    pub name: String,
+    /// Graph kind: `knn_scores`, `knn_dists`, `cf_weights`, `cf_predict`.
+    pub kind: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: PathBuf,
+    pub inputs: Vec<Port>,
+    pub outputs: Vec<Port>,
+    /// Shape parameters (q, n, d, k, a, m ...).
+    pub params: BTreeMap<String, usize>,
+}
+
+impl ArtifactMeta {
+    /// Look up a shape parameter.
+    pub fn param(&self, key: &str) -> Result<usize> {
+        self.params
+            .get(key)
+            .copied()
+            .ok_or_else(|| Error::Manifest(format!("{}: missing param {key:?}", self.name)))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Directory the manifest (and HLO files) live in.
+    pub dir: PathBuf,
+    /// Sentinel coordinate used for padded kNN training rows.
+    pub pad_coord: f32,
+    /// All artifacts, in file order.
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Manifest(format!(
+                "{}: {e} (run `make artifacts` first)",
+                path.display()
+            ))
+        })?;
+        Self::parse(dir, &text)
+    }
+
+    /// Parse manifest text (split out for tests).
+    pub fn parse(dir: &Path, text: &str) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let format = root.num_of("format")? as u64;
+        if format != 1 {
+            return Err(Error::Manifest(format!("unsupported format {format}")));
+        }
+        let pad_coord = root.num_of("pad_coord")? as f32;
+        let mut artifacts = Vec::new();
+        for a in root.arr_of("artifacts")? {
+            artifacts.push(parse_artifact(a)?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            pad_coord,
+            artifacts,
+        })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn by_name(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Manifest(format!("no artifact named {name:?}")))
+    }
+
+    /// All artifacts of a kind.
+    pub fn by_kind(&self, kind: &str) -> Vec<&ArtifactMeta> {
+        self.artifacts.iter().filter(|a| a.kind == kind).collect()
+    }
+
+    /// Pick the best artifact of `kind` whose params match all `eq`
+    /// constraints exactly; among candidates, pick the one minimizing
+    /// the sum of its free capacity params (smallest padding waste).
+    pub fn select(&self, kind: &str, eq: &[(&str, usize)]) -> Result<&ArtifactMeta> {
+        let mut best: Option<(&ArtifactMeta, usize)> = None;
+        'outer: for a in self.artifacts.iter().filter(|a| a.kind == kind) {
+            for &(k, v) in eq {
+                if a.params.get(k) != Some(&v) {
+                    continue 'outer;
+                }
+            }
+            let cap: usize = a
+                .params
+                .iter()
+                .filter(|(k, _)| !eq.iter().any(|(ek, _)| *ek == k.as_str()))
+                .map(|(_, v)| *v)
+                .sum();
+            if best.map(|(_, c)| cap < c).unwrap_or(true) {
+                best = Some((a, cap));
+            }
+        }
+        best.map(|(a, _)| a).ok_or_else(|| {
+            Error::Manifest(format!(
+                "no {kind:?} artifact matching {eq:?} (have: {})",
+                self.by_kind(kind)
+                    .iter()
+                    .map(|a| a.name.as_str())
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, meta: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&meta.file)
+    }
+}
+
+fn parse_port(j: &Json) -> Result<Port> {
+    let arr = j.as_arr()?;
+    if arr.len() != 3 {
+        return Err(Error::Manifest("port must be [name, shape, dtype]".into()));
+    }
+    let name = arr[0].as_str()?.to_string();
+    let shape = arr[1]
+        .as_arr()?
+        .iter()
+        .map(|d| d.as_num().map(|n| n as usize))
+        .collect::<Result<Vec<_>>>()?;
+    let dtype = DType::parse(arr[2].as_str()?)?;
+    Ok(Port { name, shape, dtype })
+}
+
+fn parse_artifact(j: &Json) -> Result<ArtifactMeta> {
+    let name = j.str_of("name")?.to_string();
+    let kind = j.str_of("kind")?.to_string();
+    let file = PathBuf::from(j.str_of("file")?);
+    let inputs = j
+        .arr_of("inputs")?
+        .iter()
+        .map(parse_port)
+        .collect::<Result<Vec<_>>>()?;
+    let outputs = j
+        .arr_of("outputs")?
+        .iter()
+        .map(parse_port)
+        .collect::<Result<Vec<_>>>()?;
+    let mut params = BTreeMap::new();
+    if let Some(Json::Obj(m)) = j.get("params") {
+        for (k, v) in m {
+            params.insert(k.clone(), v.as_num()? as usize);
+        }
+    }
+    Ok(ArtifactMeta {
+        name,
+        kind,
+        file,
+        inputs,
+        outputs,
+        params,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "jax_version": "0.8.2",
+      "pad_coord": 1000.0,
+      "artifacts": [
+        {
+          "name": "knn_scores_q16_n256_d16_k5",
+          "kind": "knn_scores",
+          "file": "knn_scores_q16_n256_d16_k5.hlo.txt",
+          "inputs": [["q", [16, 16], "f32"], ["x", [256, 16], "f32"]],
+          "outputs": [["dists", [16, 5], "f32"], ["indices", [16, 5], "i32"]],
+          "params": {"q": 16, "n": 256, "d": 16, "k": 5}
+        },
+        {
+          "name": "knn_scores_q64_n2048_d16_k5",
+          "kind": "knn_scores",
+          "file": "knn_scores_q64_n2048_d16_k5.hlo.txt",
+          "inputs": [["q", [64, 16], "f32"], ["x", [2048, 16], "f32"]],
+          "outputs": [["dists", [64, 5], "f32"], ["indices", [64, 5], "i32"]],
+          "params": {"q": 64, "n": 2048, "d": 16, "k": 5}
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.pad_coord, 1000.0);
+        let a = m.by_name("knn_scores_q16_n256_d16_k5").unwrap();
+        assert_eq!(a.param("k").unwrap(), 5);
+        assert_eq!(a.inputs[1].shape, vec![256, 16]);
+        assert_eq!(a.outputs[1].dtype, DType::I32);
+    }
+
+    #[test]
+    fn select_prefers_smallest_capacity() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        let a = m.select("knn_scores", &[("d", 16), ("k", 5)]).unwrap();
+        assert_eq!(a.name, "knn_scores_q16_n256_d16_k5");
+    }
+
+    #[test]
+    fn select_missing_kind_errors() {
+        let m = Manifest::parse(Path::new("/tmp/a"), SAMPLE).unwrap();
+        assert!(m.select("cf_weights", &[]).is_err());
+        assert!(m.select("knn_scores", &[("d", 217)]).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        let bad = SAMPLE.replace("\"format\": 1", "\"format\": 99");
+        assert!(Manifest::parse(Path::new("/tmp/a"), &bad).is_err());
+    }
+}

@@ -1,0 +1,24 @@
+//! PJRT runtime: loads the AOT artifacts and serves compute requests.
+//!
+//! Python runs only at build time (`make artifacts`); this module is the
+//! request-path bridge to the lowered JAX + Pallas graphs:
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (names, shapes,
+//!   dtypes of every artifact the AOT compiler emitted).
+//! * [`service`] — the device thread. The `xla` crate's types are not
+//!   `Send`, so one dedicated thread owns the `PjRtClient` and all
+//!   compiled executables; map tasks talk to it through a channel. This
+//!   is also where cross-task batching happens naturally: the channel
+//!   serializes device access just like a GPU stream.
+//! * [`backend`] — the [`backend::ScoreBackend`] trait the applications
+//!   score through: a native Rust implementation (portable baseline and
+//!   fallback) and the PJRT implementation that pads blocks to artifact
+//!   shapes, executes, and unpads.
+
+pub mod backend;
+pub mod manifest;
+pub mod service;
+
+pub use backend::{FallbackBackend, NativeBackend, PjrtBackend, ScoreBackend};
+pub use manifest::{ArtifactMeta, Manifest};
+pub use service::{PjrtService, Tensor, TensorData};

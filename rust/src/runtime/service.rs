@@ -1,0 +1,306 @@
+//! The PJRT device service thread.
+//!
+//! The `xla` crate's `PjRtClient` / `PjRtLoadedExecutable` wrap raw C++
+//! pointers and are `!Send`, so a single dedicated thread owns them.
+//! Clients (map tasks on the worker pool) submit [`Request`]s over an
+//! mpsc channel and block on a rendezvous reply channel. Executables are
+//! compiled lazily on first use and cached for the life of the service —
+//! compilation happens once per artifact per process, never per task.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::mpsc;
+
+use crate::error::{Error, Result};
+use crate::runtime::manifest::{DType, Manifest};
+
+/// Raw buffer of one tensor crossing the service boundary.
+#[derive(Clone, Debug)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl TensorData {
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Borrow as f32 slice (error if i32).
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(Error::Service("expected f32 tensor".into())),
+        }
+    }
+
+    /// Borrow as i32 slice (error if f32).
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(Error::Service("expected i32 tensor".into())),
+        }
+    }
+}
+
+/// A shaped tensor (row-major).
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub data: TensorData,
+    pub shape: Vec<usize>,
+}
+
+impl Tensor {
+    /// f32 tensor from a buffer + shape.
+    pub fn f32(data: Vec<f32>, shape: Vec<usize>) -> Tensor {
+        debug_assert_eq!(data.len(), shape.iter().product::<usize>());
+        Tensor {
+            data: TensorData::F32(data),
+            shape,
+        }
+    }
+
+    /// Element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+}
+
+enum Request {
+    Execute {
+        artifact: String,
+        inputs: Vec<Tensor>,
+        resp: mpsc::SyncSender<Result<Vec<Tensor>>>,
+    },
+    /// Compile an artifact eagerly (warmup before timed runs).
+    Warmup {
+        artifact: String,
+        resp: mpsc::SyncSender<Result<()>>,
+    },
+}
+
+/// Handle to the device thread. Cheap to clone via `Arc`.
+pub struct PjrtService {
+    tx: mpsc::Sender<Request>,
+    manifest: Manifest,
+    handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl PjrtService {
+    /// Start the service: loads the manifest, spawns the device thread,
+    /// creates the PJRT CPU client inside it.
+    pub fn start(artifact_dir: &Path) -> Result<PjrtService> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
+        let thread_manifest = manifest.clone();
+        let handle = std::thread::Builder::new()
+            .name("pjrt-device".into())
+            .spawn(move || device_thread(thread_manifest, rx, ready_tx))
+            .map_err(|e| Error::Service(format!("spawn device thread: {e}")))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Service("device thread died during startup".into()))??;
+        Ok(PjrtService {
+            tx,
+            manifest,
+            handle: Some(handle),
+        })
+    }
+
+    /// The manifest the service was started with.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Execute an artifact by name with the given inputs.
+    pub fn execute(&self, artifact: &str, inputs: Vec<Tensor>) -> Result<Vec<Tensor>> {
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Execute {
+                artifact: artifact.to_string(),
+                inputs,
+                resp: resp_tx,
+            })
+            .map_err(|_| Error::Service("device thread gone".into()))?;
+        resp_rx
+            .recv()
+            .map_err(|_| Error::Service("device thread dropped reply".into()))?
+    }
+
+    /// Compile an artifact now (so timed paths skip compile cost).
+    pub fn warmup(&self, artifact: &str) -> Result<()> {
+        let (resp_tx, resp_rx) = mpsc::sync_channel(1);
+        self.tx
+            .send(Request::Warmup {
+                artifact: artifact.to_string(),
+                resp: resp_tx,
+            })
+            .map_err(|_| Error::Service("device thread gone".into()))?;
+        resp_rx
+            .recv()
+            .map_err(|_| Error::Service("device thread dropped reply".into()))?
+    }
+
+    /// Warm every artifact in the manifest.
+    pub fn warmup_all(&self) -> Result<()> {
+        for a in &self.manifest.artifacts {
+            let name = a.name.clone();
+            self.warmup(&name)?;
+        }
+        Ok(())
+    }
+}
+
+impl Drop for PjrtService {
+    fn drop(&mut self) {
+        // Closing the channel ends the device loop.
+        let (tx, _rx) = mpsc::channel();
+        drop(std::mem::replace(&mut self.tx, tx));
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Body of the device thread: owns the client and the executable cache.
+fn device_thread(
+    manifest: Manifest,
+    rx: mpsc::Receiver<Request>,
+    ready: mpsc::SyncSender<Result<()>>,
+) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(Error::Xla(e.to_string())));
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Warmup { artifact, resp } => {
+                let r = ensure_compiled(&client, &manifest, &mut cache, &artifact).map(|_| ());
+                let _ = resp.send(r);
+            }
+            Request::Execute {
+                artifact,
+                inputs,
+                resp,
+            } => {
+                let r = (|| -> Result<Vec<Tensor>> {
+                    ensure_compiled(&client, &manifest, &mut cache, &artifact)?;
+                    let exe = cache.get(&artifact).unwrap();
+                    run_executable(&manifest, &artifact, exe, inputs)
+                })();
+                let _ = resp.send(r);
+            }
+        }
+    }
+}
+
+fn ensure_compiled<'c>(
+    client: &xla::PjRtClient,
+    manifest: &Manifest,
+    cache: &'c mut HashMap<String, xla::PjRtLoadedExecutable>,
+    artifact: &str,
+) -> Result<&'c xla::PjRtLoadedExecutable> {
+    if !cache.contains_key(artifact) {
+        let meta = manifest.by_name(artifact)?;
+        let path = manifest.hlo_path(meta);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Manifest(format!("non-utf8 path {}", path.display())))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        cache.insert(artifact.to_string(), exe);
+    }
+    Ok(cache.get(artifact).unwrap())
+}
+
+fn run_executable(
+    manifest: &Manifest,
+    artifact: &str,
+    exe: &xla::PjRtLoadedExecutable,
+    inputs: Vec<Tensor>,
+) -> Result<Vec<Tensor>> {
+    let meta = manifest.by_name(artifact)?;
+    if inputs.len() != meta.inputs.len() {
+        return Err(Error::Service(format!(
+            "{artifact}: got {} inputs, expected {}",
+            inputs.len(),
+            meta.inputs.len()
+        )));
+    }
+    let mut literals = Vec::with_capacity(inputs.len());
+    for (t, port) in inputs.iter().zip(&meta.inputs) {
+        if t.shape != port.shape {
+            return Err(Error::Service(format!(
+                "{artifact}: input {} shape {:?} != artifact shape {:?}",
+                port.name, t.shape, port.shape
+            )));
+        }
+        let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+        let lit = match (&t.data, port.dtype) {
+            (TensorData::F32(v), DType::F32) => xla::Literal::vec1(v).reshape(&dims)?,
+            (TensorData::I32(v), DType::I32) => xla::Literal::vec1(v).reshape(&dims)?,
+            _ => {
+                return Err(Error::Service(format!(
+                    "{artifact}: input {} dtype mismatch",
+                    port.name
+                )))
+            }
+        };
+        literals.push(lit);
+    }
+
+    let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+    // aot.py lowers with return_tuple=True: outputs arrive as one tuple.
+    let elems = result.to_tuple()?;
+    if elems.len() != meta.outputs.len() {
+        return Err(Error::Service(format!(
+            "{artifact}: got {} outputs, expected {}",
+            elems.len(),
+            meta.outputs.len()
+        )));
+    }
+    let mut out = Vec::with_capacity(elems.len());
+    for (lit, port) in elems.into_iter().zip(&meta.outputs) {
+        let data = match port.dtype {
+            DType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            DType::I32 => TensorData::I32(lit.to_vec::<i32>()?),
+        };
+        if data.len() != port.shape.iter().product::<usize>() {
+            return Err(Error::Service(format!(
+                "{artifact}: output {} has {} elems, expected {:?}",
+                port.name,
+                data.len(),
+                port.shape
+            )));
+        }
+        out.push(Tensor {
+            data,
+            shape: port.shape.clone(),
+        });
+    }
+    Ok(out)
+}

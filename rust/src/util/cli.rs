@@ -1,0 +1,273 @@
+//! Minimal declarative CLI argument parser (clap stand-in).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments
+//! and subcommands, with generated `--help` text. Only what `main.rs`
+//! and the examples need — not a general-purpose crate.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Specification of one option.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+}
+
+/// A declarative command: options + positionals + help.
+#[derive(Clone, Debug, Default)]
+pub struct Command {
+    pub name: String,
+    pub about: String,
+    opts: Vec<OptSpec>,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positionals: Vec<String>,
+}
+
+impl Command {
+    /// New command with a name and description.
+    pub fn new(name: &str, about: &str) -> Command {
+        Command {
+            name: name.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+        }
+    }
+
+    /// Add a `--key value` option with a default.
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: Some(default.to_string()),
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Add a required `--key value` option.
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Add a boolean `--flag`.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    /// Render help text.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for o in &self.opts {
+            let left = if o.is_flag {
+                format!("  --{}", o.name)
+            } else {
+                format!("  --{} <value>", o.name)
+            };
+            let def = match &o.default {
+                Some(d) if !o.is_flag => format!(" [default: {d}]"),
+                _ => String::new(),
+            };
+            s.push_str(&format!("{left:<28}{}{def}\n", o.help));
+        }
+        s.push_str("  --help                    show this message\n");
+        s
+    }
+
+    /// Parse a token list (without argv[0]).
+    pub fn parse(&self, argv: &[String]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(Error::Config(self.help()));
+            }
+            if let Some(body) = tok.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| Error::Config(format!("unknown option --{key}\n\n{}", self.help())))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(Error::Config(format!("--{key} takes no value")));
+                    }
+                    args.flags.insert(key, true);
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| Error::Config(format!("--{key} needs a value")))?
+                        }
+                    };
+                    args.values.insert(key, val);
+                }
+            } else {
+                args.positionals.push(tok.clone());
+            }
+            i += 1;
+        }
+        // Fill defaults, check required.
+        for o in &self.opts {
+            if o.is_flag {
+                args.flags.entry(o.name.to_string()).or_insert(false);
+            } else if !args.values.contains_key(o.name) {
+                match &o.default {
+                    Some(d) => {
+                        args.values.insert(o.name.to_string(), d.clone());
+                    }
+                    None => {
+                        return Err(Error::Config(format!(
+                            "missing required option --{}\n\n{}",
+                            o.name,
+                            self.help()
+                        )))
+                    }
+                }
+            }
+        }
+        Ok(args)
+    }
+}
+
+impl Args {
+    /// String value of an option.
+    pub fn get(&self, key: &str) -> &str {
+        self.values
+            .get(key)
+            .unwrap_or_else(|| panic!("option {key} not declared"))
+    }
+
+    /// Parsed numeric value.
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        self.get(key)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{key} expects a number")))
+    }
+
+    /// Parsed integer value.
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get(key)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{key} expects an integer")))
+    }
+
+    /// Parsed u64 value.
+    pub fn get_u64(&self, key: &str) -> Result<u64> {
+        self.get(key)
+            .parse()
+            .map_err(|_| Error::Config(format!("--{key} expects an integer")))
+    }
+
+    /// Flag presence.
+    pub fn is_set(&self, key: &str) -> bool {
+        *self.flags.get(key).unwrap_or(&false)
+    }
+
+    /// Comma-separated list of f64.
+    pub fn get_f64_list(&self, key: &str) -> Result<Vec<f64>> {
+        self.get(key)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| Error::Config(format!("--{key}: bad number {s:?}")))
+            })
+            .collect()
+    }
+
+    /// Comma-separated list of usize.
+    pub fn get_usize_list(&self, key: &str) -> Result<Vec<usize>> {
+        self.get(key)
+            .split(',')
+            .filter(|s| !s.is_empty())
+            .map(|s| {
+                s.trim()
+                    .parse()
+                    .map_err(|_| Error::Config(format!("--{key}: bad integer {s:?}")))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("test", "a test command")
+            .opt("ratio", "10", "compression ratio")
+            .req("dataset", "dataset path")
+            .flag("verbose", "chatty output")
+    }
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_and_defaults() {
+        let a = cmd().parse(&sv(&["--dataset", "d.bin"])).unwrap();
+        assert_eq!(a.get("ratio"), "10");
+        assert_eq!(a.get("dataset"), "d.bin");
+        assert!(!a.is_set("verbose"));
+    }
+
+    #[test]
+    fn parses_eq_form_and_flags() {
+        let a = cmd()
+            .parse(&sv(&["--dataset=d.bin", "--ratio=100", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(a.get("ratio"), "100");
+        assert!(a.is_set("verbose"));
+        assert_eq!(a.positionals, vec!["pos1"]);
+    }
+
+    #[test]
+    fn missing_required_errors() {
+        assert!(cmd().parse(&sv(&["--ratio", "5"])).is_err());
+    }
+
+    #[test]
+    fn unknown_option_errors() {
+        assert!(cmd().parse(&sv(&["--nope", "1", "--dataset", "d"])).is_err());
+    }
+
+    #[test]
+    fn lists_parse() {
+        let c = Command::new("t", "t").opt("xs", "1,2,3", "xs");
+        let a = c.parse(&[]).unwrap();
+        assert_eq!(a.get_f64_list("xs").unwrap(), vec![1.0, 2.0, 3.0]);
+        assert_eq!(a.get_usize_list("xs").unwrap(), vec![1, 2, 3]);
+    }
+}

@@ -1,0 +1,63 @@
+//! Minimal `log` facade backend (env_logger is not in the offline
+//! registry). Level comes from `AML_LOG` (error|warn|info|debug|trace,
+//! default warn); output goes to stderr with a monotonic timestamp.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use log::{Level, LevelFilter, Metadata, Record};
+
+struct StderrLogger {
+    start: Instant,
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, _metadata: &Metadata) -> bool {
+        true
+    }
+
+    fn log(&self, record: &Record) {
+        if self.enabled(record.metadata()) {
+            let t = self.start.elapsed().as_secs_f64();
+            let lvl = match record.level() {
+                Level::Error => "ERROR",
+                Level::Warn => "WARN ",
+                Level::Info => "INFO ",
+                Level::Debug => "DEBUG",
+                Level::Trace => "TRACE",
+            };
+            eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+        }
+    }
+
+    fn flush(&self) {}
+}
+
+/// Install the logger (idempotent). Call once from binary entrypoints.
+pub fn init() {
+    let level = match std::env::var("AML_LOG").as_deref() {
+        Ok("error") => LevelFilter::Error,
+        Ok("info") => LevelFilter::Info,
+        Ok("debug") => LevelFilter::Debug,
+        Ok("trace") => LevelFilter::Trace,
+        Ok("off") => LevelFilter::Off,
+        _ => LevelFilter::Warn,
+    };
+    let logger = LOGGER.get_or_init(|| StderrLogger {
+        start: Instant::now(),
+    });
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::warn!("logger smoke test");
+    }
+}

@@ -1,0 +1,26 @@
+//! Substrate utilities built from scratch for this offline environment.
+//!
+//! The cargo registry available here contains only the `xla` crate's
+//! dependency closure, so the usual ecosystem crates (`rand`, `serde`,
+//! `clap`, `criterion`, `rayon`, `tokio`) are unavailable. Everything a
+//! production pipeline would pull from them is implemented here, small
+//! and purpose-built:
+//!
+//! * [`rng`] — deterministic xoshiro256++ PRNG + normal/zipf/uniform
+//!   distributions and sampling helpers.
+//! * [`json`] — a minimal JSON value model, parser and writer (used for
+//!   the artifact manifest and experiment reports).
+//! * [`cli`] — a small declarative command-line parser.
+//! * [`timer`] — a micro-benchmark harness (criterion replacement):
+//!   warmup + timed iterations + robust summary statistics.
+//! * [`table`] — fixed-width / markdown / CSV table emitters for the
+//!   per-figure bench outputs.
+//! * [`pool`] — a scoped worker thread pool (the engine's executor).
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod pool;
+pub mod rng;
+pub mod table;
+pub mod timer;

@@ -1,0 +1,218 @@
+//! A scoped worker thread pool — the MapReduce engine's executor.
+//!
+//! The offline registry has neither `rayon` nor `tokio`, so the engine
+//! runs map tasks on this small fixed-size pool. Tasks are `FnOnce`
+//! closures submitted to a shared injector queue; `scope` blocks until
+//! every task submitted within it has completed and propagates the first
+//! panic (a worker panic must fail the job, not hang it).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+    // Tasks submitted but not yet finished; guarded separately so
+    // `wait_idle` does not contend with task pop.
+    inflight: AtomicUsize,
+    idle_cv: Condvar,
+    idle_mx: Mutex<()>,
+    panicked: AtomicUsize,
+}
+
+struct QueueState {
+    tasks: Vec<Task>,
+    shutdown: bool,
+}
+
+/// Fixed-size worker pool.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    size: usize,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `size` workers (clamped to >= 1).
+    pub fn new(size: usize) -> Self {
+        let size = size.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState {
+                tasks: Vec::new(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            inflight: AtomicUsize::new(0),
+            idle_cv: Condvar::new(),
+            idle_mx: Mutex::new(()),
+            panicked: AtomicUsize::new(0),
+        });
+        let mut handles = Vec::with_capacity(size);
+        for w in 0..size {
+            let sh = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("aml-worker-{w}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker"),
+            );
+        }
+        WorkerPool {
+            shared,
+            handles,
+            size,
+        }
+    }
+
+    /// Pool with one worker per available CPU.
+    pub fn with_default_size() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4);
+        Self::new(n)
+    }
+
+    /// Number of workers.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a task. Usually used through [`WorkerPool::scope`].
+    pub fn submit<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.tasks.push(Box::new(f));
+        }
+        self.shared.cv.notify_one();
+    }
+
+    /// Block until every submitted task has finished. Panics if any task
+    /// panicked since the last wait (fail-fast job semantics).
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.idle_mx.lock().unwrap();
+        while self.shared.inflight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.idle_cv.wait(guard).unwrap();
+        }
+        drop(guard);
+        let p = self.shared.panicked.swap(0, Ordering::SeqCst);
+        if p > 0 {
+            panic!("{p} worker task(s) panicked");
+        }
+    }
+
+    /// Run `n` indexed tasks produced by `make` and wait for all of them.
+    ///
+    /// `make` is called with each index to build a `'static` closure; the
+    /// typical pattern clones `Arc`s of the shared inputs into it.
+    pub fn scope<F, G>(&self, n: usize, make: G)
+    where
+        F: FnOnce() + Send + 'static,
+        G: Fn(usize) -> F,
+    {
+        for i in 0..n {
+            self.submit(make(i));
+        }
+        self.wait_idle();
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.shutdown = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let task = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(t) = q.tasks.pop() {
+                    break Some(t);
+                }
+                if q.shutdown {
+                    break None;
+                }
+                q = sh.cv.wait(q).unwrap();
+            }
+        };
+        let Some(task) = task else { return };
+        let r = catch_unwind(AssertUnwindSafe(task));
+        if r.is_err() {
+            sh.panicked.fetch_add(1, Ordering::SeqCst);
+        }
+        if sh.inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            let _g = sh.idle_mx.lock().unwrap();
+            sh.idle_cv.notify_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn runs_all_tasks() {
+        let pool = WorkerPool::new(4);
+        let sum = Arc::new(AtomicU64::new(0));
+        pool.scope(100, |i| {
+            let s = Arc::clone(&sum);
+            move || {
+                s.fetch_add(i as u64, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 4950);
+    }
+
+    #[test]
+    fn reusable_across_scopes() {
+        let pool = WorkerPool::new(2);
+        let count = Arc::new(AtomicU64::new(0));
+        for _ in 0..5 {
+            pool.scope(10, |_| {
+                let c = Arc::clone(&count);
+                move || {
+                    c.fetch_add(1, Ordering::Relaxed);
+                }
+            });
+        }
+        assert_eq!(count.load(Ordering::Relaxed), 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "worker task(s) panicked")]
+    fn propagates_panic() {
+        let pool = WorkerPool::new(2);
+        pool.scope(4, |i| move || {
+            if i == 2 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn single_worker_pool_works() {
+        let pool = WorkerPool::new(1);
+        let sum = Arc::new(AtomicU64::new(0));
+        pool.scope(10, |i| {
+            let s = Arc::clone(&sum);
+            move || {
+                s.fetch_add(i as u64 + 1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 55);
+    }
+}

@@ -1,0 +1,163 @@
+//! Micro-benchmark harness (criterion stand-in) and phase stopwatch.
+//!
+//! The per-figure benches (`rust/benches/`) are plain binaries that call
+//! [`bench_fn`] for wall-clock measurements and print paper-style rows.
+//! The engine uses [`Stopwatch`] to attribute time to the four map-task
+//! parts the paper breaks down in Fig. 4.
+
+use std::time::{Duration, Instant};
+
+/// Simple resettable stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// Start timing now.
+    pub fn new() -> Self {
+        Stopwatch {
+            start: Instant::now(),
+        }
+    }
+
+    /// Seconds since start/reset.
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    /// Elapsed and restart.
+    pub fn lap_s(&mut self) -> f64 {
+        let e = self.elapsed_s();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Robust summary statistics over a sample of timings (seconds).
+#[derive(Clone, Debug)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub max: f64,
+}
+
+impl Stats {
+    /// Compute stats from raw samples.
+    pub fn from_samples(samples: &[f64]) -> Stats {
+        assert!(!samples.is_empty());
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        let mut sorted = samples.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pct = |p: f64| sorted[((p * (n - 1) as f64).round() as usize).min(n - 1)];
+        Stats {
+            n,
+            mean,
+            std: var.sqrt(),
+            min: sorted[0],
+            p50: pct(0.50),
+            p95: pct(0.95),
+            max: sorted[n - 1],
+        }
+    }
+
+    /// Human-readable one-liner (µs/ms/s auto-scaled).
+    pub fn display(&self) -> String {
+        format!(
+            "mean {} ± {} (p50 {}, p95 {}, n={})",
+            fmt_duration(self.mean),
+            fmt_duration(self.std),
+            fmt_duration(self.p50),
+            fmt_duration(self.p95),
+            self.n
+        )
+    }
+}
+
+/// Format seconds with an auto-selected unit.
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{s:.3}s")
+    }
+}
+
+/// Benchmark a closure: `warmup` untimed runs, then timed runs until both
+/// `min_iters` iterations and `min_time` have elapsed (whichever is
+/// later), capped at `max_iters`.
+pub fn bench_fn<F: FnMut()>(mut f: F, warmup: usize, min_iters: usize, min_time: Duration) -> Stats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    let max_iters = 10_000.max(min_iters);
+    while (samples.len() < min_iters || t0.elapsed() < min_time) && samples.len() < max_iters {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed().as_secs_f64());
+    }
+    Stats::from_samples(&samples)
+}
+
+/// Convenience: bench with harness defaults (3 warmup, 10 iters, 200ms).
+pub fn bench_quick<F: FnMut()>(f: F) -> Stats {
+    bench_fn(f, 3, 10, Duration::from_millis(200))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_on_known_samples() {
+        let s = Stats::from_samples(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn bench_runs_enough_iters() {
+        let mut count = 0usize;
+        let s = bench_fn(|| count += 1, 2, 5, Duration::from_millis(1));
+        assert!(s.n >= 5);
+        assert_eq!(count, s.n + 2);
+    }
+
+    #[test]
+    fn duration_formatting() {
+        assert!(fmt_duration(2.5e-9).ends_with("ns"));
+        assert!(fmt_duration(2.5e-5).ends_with("µs"));
+        assert!(fmt_duration(2.5e-2).ends_with("ms"));
+        assert!(fmt_duration(2.5).ends_with('s'));
+    }
+
+    #[test]
+    fn stopwatch_monotone() {
+        let mut sw = Stopwatch::new();
+        std::thread::sleep(Duration::from_millis(2));
+        let lap = sw.lap_s();
+        assert!(lap >= 0.001);
+        assert!(sw.elapsed_s() < lap + 1.0);
+    }
+}

@@ -1,0 +1,195 @@
+//! End-to-end integration: full jobs over the MapReduce engine with the
+//! native backend, checking the paper's qualitative claims hold on the
+//! small preset (the shapes, not the absolute numbers).
+
+use accurateml::approx::ProcessingMode;
+use accurateml::apps::cf::predict::rmse_loss;
+use accurateml::apps::knn::classify::accuracy_loss;
+use accurateml::coordinator::sweep::Workbench;
+use accurateml::coordinator::Scale;
+
+fn wb() -> Workbench {
+    Workbench::preset(Scale::Small).expect("workbench")
+}
+
+#[test]
+fn knn_time_reduction_grows_with_compression_ratio() {
+    let wb = wb();
+    let exact = wb.run_knn(ProcessingMode::Exact, 5).unwrap();
+    let mut prev_compute = exact.map_compute_s;
+    for ratio in [5.0, 20.0] {
+        let run = wb
+            .run_knn(
+                ProcessingMode::AccurateML {
+                    compression_ratio: ratio,
+                    refinement_threshold: 0.01,
+                },
+                5,
+            )
+            .unwrap();
+        assert!(
+            run.map_compute_s < prev_compute * 1.1,
+            "ratio {ratio}: compute {} vs prev {prev_compute}",
+            run.map_compute_s
+        );
+        prev_compute = run.map_compute_s;
+    }
+}
+
+#[test]
+fn knn_accuracy_loss_shrinks_with_refinement() {
+    let wb = wb();
+    let exact = wb.run_knn(ProcessingMode::Exact, 5).unwrap();
+    let small_eps = wb
+        .run_knn(
+            ProcessingMode::AccurateML {
+                compression_ratio: 10.0,
+                refinement_threshold: 0.01,
+            },
+            5,
+        )
+        .unwrap();
+    let big_eps = wb
+        .run_knn(
+            ProcessingMode::AccurateML {
+                compression_ratio: 10.0,
+                refinement_threshold: 0.5,
+            },
+            5,
+        )
+        .unwrap();
+    let loss_small = accuracy_loss(exact.metric, small_eps.metric);
+    let loss_big = accuracy_loss(exact.metric, big_eps.metric);
+    assert!(
+        loss_big <= loss_small + 0.02,
+        "eps=0.5 loss {loss_big} vs eps=0.01 loss {loss_small}"
+    );
+}
+
+#[test]
+fn knn_fig4_breakdown_shape() {
+    // Aggregation parts (LSH + info aggregation) must be a small share
+    // of the exact task compute — the paper reports <5%.
+    let wb = wb();
+    let exact = wb.run_knn(ProcessingMode::Exact, 5).unwrap();
+    let aml = wb
+        .run_knn(
+            ProcessingMode::AccurateML {
+                compression_ratio: 10.0,
+                refinement_threshold: 0.05,
+            },
+            5,
+        )
+        .unwrap();
+    let exact_task = exact.mean_task.exact_s;
+    let gen = aml.mean_task.lsh_s + aml.mean_task.aggregate_s;
+    assert!(
+        gen < exact_task * 0.5,
+        "aggregation generation {gen} not small vs exact task {exact_task}"
+    );
+}
+
+#[test]
+fn cf_shuffle_cost_tracks_compression_ratio() {
+    let wb = wb();
+    let exact = wb.run_cf(ProcessingMode::Exact).unwrap();
+    let r5 = wb
+        .run_cf(ProcessingMode::AccurateML {
+            compression_ratio: 5.0,
+            refinement_threshold: 0.01,
+        })
+        .unwrap();
+    let r20 = wb
+        .run_cf(ProcessingMode::AccurateML {
+            compression_ratio: 20.0,
+            refinement_threshold: 0.01,
+        })
+        .unwrap();
+    assert!(r5.shuffle_bytes < exact.shuffle_bytes);
+    assert!(
+        r20.shuffle_bytes < r5.shuffle_bytes,
+        "r=20 shuffle {} !< r=5 shuffle {}",
+        r20.shuffle_bytes,
+        r5.shuffle_bytes
+    );
+}
+
+#[test]
+fn cf_rmse_reasonable_across_modes() {
+    let wb = wb();
+    let exact = wb.run_cf(ProcessingMode::Exact).unwrap();
+    let aml = wb
+        .run_cf(ProcessingMode::AccurateML {
+            compression_ratio: 10.0,
+            refinement_threshold: 0.10,
+        })
+        .unwrap();
+    let loss = rmse_loss(exact.metric, aml.metric);
+    assert!(loss < 0.5, "CF rmse loss {loss} unreasonable");
+}
+
+#[test]
+fn matched_budget_comparison_favors_accurateml() {
+    // The paper's headline (§IV-C): with the same processing budget,
+    // AccurateML loses less accuracy than random sampling, because the
+    // skipped input is *summarized* rather than *discarded*. Wall-clock
+    // matching is noisy at the small test preset, so this asserts the
+    // deterministic form: sampling gets the same input fraction
+    // AccurateML touches (1/r original-equivalents for stage 1 + ε for
+    // stage 2). The time-matched form is exercised by `benches/fig8.rs`
+    // at the default scale.
+    let wb = wb();
+    let mut aml_losses = Vec::new();
+    let mut samp_losses = Vec::new();
+
+    let exact_knn = wb.run_knn(ProcessingMode::Exact, 5).unwrap();
+    let exact_cf = wb.run_cf(ProcessingMode::Exact).unwrap();
+    for &(r, eps) in &[(10.0, 0.02), (20.0, 0.05)] {
+        let budget = 1.0 / r + eps;
+        let aml_mode = ProcessingMode::AccurateML {
+            compression_ratio: r,
+            refinement_threshold: eps,
+        };
+        let samp_mode = ProcessingMode::Sampling { ratio: budget };
+
+        let aml = wb.run_knn(aml_mode, 5).unwrap();
+        let samp = wb.run_knn(samp_mode, 5).unwrap();
+        aml_losses.push(accuracy_loss(exact_knn.metric, aml.metric));
+        samp_losses.push(accuracy_loss(exact_knn.metric, samp.metric));
+
+        let aml = wb.run_cf(aml_mode).unwrap();
+        let samp = wb.run_cf(samp_mode).unwrap();
+        aml_losses.push(rmse_loss(exact_cf.metric, aml.metric));
+        samp_losses.push(rmse_loss(exact_cf.metric, samp.metric));
+    }
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    assert!(
+        mean(&aml_losses) <= mean(&samp_losses) + 0.01,
+        "mean aml loss {} vs sampling {} ({aml_losses:?} vs {samp_losses:?})",
+        mean(&aml_losses),
+        mean(&samp_losses)
+    );
+}
+
+#[test]
+fn deterministic_given_seed() {
+    let a = wb().run_knn(
+        ProcessingMode::AccurateML {
+            compression_ratio: 10.0,
+            refinement_threshold: 0.05,
+        },
+        5,
+    )
+    .unwrap();
+    let b = wb().run_knn(
+        ProcessingMode::AccurateML {
+            compression_ratio: 10.0,
+            refinement_threshold: 0.05,
+        },
+        5,
+    )
+    .unwrap();
+    assert_eq!(a.metric, b.metric);
+    assert_eq!(a.shuffle_bytes, b.shuffle_bytes);
+}

@@ -1,0 +1,248 @@
+//! PJRT integration: load real artifacts, execute, compare against the
+//! native backend bit-for-bit (within float tolerance).
+//!
+//! Requires `make artifacts` to have produced `artifacts/manifest.json`
+//! at the repo root; tests skip (pass with a notice) when absent so
+//! `cargo test` stays runnable before the first artifact build.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use accurateml::approx::ProcessingMode;
+use accurateml::coordinator::{Scale, Workbench, WorkbenchConfig};
+use accurateml::data::matrix::Matrix;
+use accurateml::runtime::backend::{NativeBackend, PjrtBackend, ScoreBackend};
+#[allow(unused_imports)]
+use accurateml::runtime::backend::FallbackBackend;
+use accurateml::runtime::service::PjrtService;
+use accurateml::util::rng::Rng;
+
+fn artifact_dir() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: no artifacts at {dir:?} (run `make artifacts`)");
+        None
+    }
+}
+
+fn service() -> Option<Arc<PjrtService>> {
+    artifact_dir().map(|d| Arc::new(PjrtService::start(&d).expect("service start")))
+}
+
+fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for v in m.as_mut_slice() {
+        *v = rng.normal() as f32;
+    }
+    m
+}
+
+#[test]
+fn all_artifacts_compile() {
+    let Some(svc) = service() else { return };
+    svc.warmup_all().expect("warmup");
+}
+
+#[test]
+fn pjrt_knn_topk_matches_native_including_chunking() {
+    let Some(svc) = service() else { return };
+    let meta = svc.manifest().by_kind("knn_scores")[0].clone();
+    let d = meta.params["d"];
+    let k = meta.params["k"];
+    let n_art = meta.params["n"];
+    let mut rng = Rng::new(1);
+    // Exceed both artifact dims to force chunk+merge paths; check both
+    // the host-selection path and the fused in-graph top-k path.
+    let q = rand_matrix(&mut rng, meta.params["q"] + 3, d);
+    let x = rand_matrix(&mut rng, n_art + 57, d);
+    let b = NativeBackend.knn_block_topk(&q, &x, k).unwrap();
+    for fused in [false, true] {
+        let pjrt = PjrtBackend::new(svc.clone()).with_fused_topk(fused);
+        let a = pjrt.knn_block_topk(&q, &x, k).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (qa, qb) in a.iter().zip(&b) {
+            let ida: Vec<u32> = qa.iter().map(|c| c.1).collect();
+            let idb: Vec<u32> = qb.iter().map(|c| c.1).collect();
+            assert_eq!(ida, idb, "indices diverge (fused={fused})");
+            for (ca, cb) in qa.iter().zip(qb) {
+                assert!((ca.0 - cb.0).abs() < 1e-3, "{} vs {}", ca.0, cb.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_knn_dists_matches_native() {
+    let Some(svc) = service() else { return };
+    let meta = svc.manifest().by_kind("knn_dists")[0].clone();
+    let d = meta.params["d"];
+    let pjrt = PjrtBackend::new(svc);
+    let mut rng = Rng::new(2);
+    let q = rand_matrix(&mut rng, 9, d);
+    let x = rand_matrix(&mut rng, meta.params["n"] + 13, d);
+    let a = pjrt.knn_dists(&q, &x).unwrap();
+    let b = NativeBackend.knn_dists(&q, &x).unwrap();
+    for (va, vb) in a.as_slice().iter().zip(b.as_slice()) {
+        assert!((va - vb).abs() < 1e-3, "{va} vs {vb}");
+    }
+}
+
+#[test]
+fn pjrt_cf_weights_matches_native() {
+    let Some(svc) = service() else { return };
+    let meta = svc.manifest().by_kind("cf_weights")[0].clone();
+    let m = meta.params["m"];
+    let pjrt = PjrtBackend::new(svc);
+    let mut rng = Rng::new(3);
+    // Build centered/masked rows.
+    let mk = |rng: &mut Rng, rows: usize| {
+        let mut c = Matrix::zeros(rows, m);
+        let mut mask = Matrix::zeros(rows, m);
+        for r in 0..rows {
+            let mut idx = Vec::new();
+            for i in 0..m {
+                if rng.chance(0.35) {
+                    idx.push(i);
+                    mask.set(r, i, 1.0);
+                }
+            }
+            let vals: Vec<f32> = idx.iter().map(|_| rng.range_f64(1.0, 5.0) as f32).collect();
+            let mean = vals.iter().sum::<f32>() / vals.len().max(1) as f32;
+            for (j, &i) in idx.iter().enumerate() {
+                c.set(r, i, vals[j] - mean);
+            }
+        }
+        (c, mask)
+    };
+    let (ca, ma) = mk(&mut rng, meta.params["a"] + 2);
+    let (cu, mu) = mk(&mut rng, meta.params["n"] + 31);
+    let a = pjrt.cf_weights(&ca, &ma, &cu, &mu).unwrap();
+    let b = NativeBackend.cf_weights(&ca, &ma, &cu, &mu).unwrap();
+    for (va, vb) in a.as_slice().iter().zip(b.as_slice()) {
+        assert!((va - vb).abs() < 2e-3, "{va} vs {vb}");
+    }
+}
+
+#[test]
+fn workbench_runs_on_pjrt_backend() {
+    // Full job through the engine with the PJRT (auto) backend; results
+    // must agree with the native-backend run on the same seed.
+    let Some(dir) = artifact_dir() else { return };
+    let mut cfg = WorkbenchConfig::preset(Scale::Small);
+    cfg.knn_spec.dim = 16; // match the `small` artifact family d=16
+    cfg.backend = "auto".into();
+    cfg.artifact_dir = dir;
+    let wb_pjrt = Workbench::new(cfg.clone()).expect("pjrt workbench");
+    let mut cfg_native = cfg;
+    cfg_native.backend = "native".into();
+    let wb_native = Workbench::new(cfg_native).expect("native workbench");
+
+    let a = wb_pjrt.run_knn(ProcessingMode::Exact, 5).unwrap();
+    let b = wb_native.run_knn(ProcessingMode::Exact, 5).unwrap();
+    assert!(
+        (a.metric - b.metric).abs() < 1e-9,
+        "pjrt accuracy {} != native {}",
+        a.metric,
+        b.metric
+    );
+
+    let am = wb_pjrt
+        .run_knn(
+            ProcessingMode::AccurateML {
+                compression_ratio: 10.0,
+                refinement_threshold: 0.05,
+            },
+            5,
+        )
+        .unwrap();
+    let bm = wb_native
+        .run_knn(
+            ProcessingMode::AccurateML {
+                compression_ratio: 10.0,
+                refinement_threshold: 0.05,
+            },
+            5,
+        )
+        .unwrap();
+    assert!(
+        (am.metric - bm.metric).abs() < 0.05,
+        "pjrt aml accuracy {} vs native {}",
+        am.metric,
+        bm.metric
+    );
+}
+
+#[test]
+fn service_survives_concurrent_clients() {
+    let Some(svc) = service() else { return };
+    let meta = svc.manifest().by_kind("knn_dists")[0].clone();
+    let d = meta.params["d"];
+    let pjrt = Arc::new(PjrtBackend::new(svc));
+    let mut handles = Vec::new();
+    for t in 0..8 {
+        let pjrt = Arc::clone(&pjrt);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(t);
+            let q = rand_matrix(&mut rng, 4, d);
+            let x = rand_matrix(&mut rng, 100, d);
+            let got = pjrt.knn_dists(&q, &x).unwrap();
+            let want = NativeBackend.knn_dists(&q, &x).unwrap();
+            for (a, b) in got.as_slice().iter().zip(want.as_slice()) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn service_rejects_bad_requests() {
+    let Some(svc) = service() else { return };
+    // Unknown artifact name.
+    assert!(svc.execute("no_such_artifact", vec![]).is_err());
+    // Wrong input count.
+    let meta = svc.manifest().by_kind("knn_dists")[0].clone();
+    let err = svc.execute(&meta.name, vec![]).unwrap_err();
+    assert!(err.to_string().contains("inputs"), "{err}");
+    // Wrong shape.
+    let bad = accurateml::runtime::service::Tensor::f32(vec![0.0; 4], vec![2, 2]);
+    let bad2 = accurateml::runtime::service::Tensor::f32(vec![0.0; 4], vec![2, 2]);
+    assert!(svc.execute(&meta.name, vec![bad, bad2]).is_err());
+}
+
+#[test]
+fn manifest_select_prefers_matching_k() {
+    let Some(svc) = service() else { return };
+    // The default family ships k in {5,10,20,50}; selection by k must
+    // return an artifact with that exact k.
+    for meta in svc.manifest().by_kind("knn_scores") {
+        let k = meta.params["k"];
+        let d = meta.params["d"];
+        let chosen = svc
+            .manifest()
+            .select("knn_scores", &[("d", d), ("k", k)])
+            .unwrap();
+        assert_eq!(chosen.params["k"], k);
+        assert_eq!(chosen.params["d"], d);
+    }
+}
+
+#[test]
+fn fallback_backend_degrades_to_native_on_unknown_dim() {
+    let Some(svc) = service() else { return };
+    let fb = accurateml::runtime::backend::FallbackBackend::new(svc);
+    let mut rng = Rng::new(9);
+    // d=7 exists in no artifact family -> must fall back, not error.
+    let q = rand_matrix(&mut rng, 3, 7);
+    let x = rand_matrix(&mut rng, 20, 7);
+    let got = fb.knn_block_topk(&q, &x, 2).unwrap();
+    let want = NativeBackend.knn_block_topk(&q, &x, 2).unwrap();
+    assert_eq!(
+        got.iter().map(|c| c[0].1).collect::<Vec<_>>(),
+        want.iter().map(|c| c[0].1).collect::<Vec<_>>()
+    );
+}

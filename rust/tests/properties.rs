@@ -1,0 +1,216 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! `proptest` is not in this environment's offline registry, so these
+//! use the crate's own deterministic RNG to draw many random cases per
+//! property — same spirit (randomized inputs, tight invariants), fixed
+//! seeds for reproducibility.
+
+use accurateml::aggregate::AggregatedPoints;
+use accurateml::approx::algorithm1::{refine_budget, refinement_order};
+use accurateml::approx::sampling::sample_rows;
+use accurateml::data::matrix::Matrix;
+use accurateml::data::points::split_rows;
+use accurateml::lsh::Bucketizer;
+use accurateml::runtime::backend::{NativeBackend, ScoreBackend};
+use accurateml::util::json::Json;
+use accurateml::util::rng::Rng;
+
+fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+    let mut m = Matrix::zeros(rows, cols);
+    for v in m.as_mut_slice() {
+        *v = rng.normal() as f32;
+    }
+    m
+}
+
+#[test]
+fn prop_split_rows_is_partition() {
+    let mut rng = Rng::new(100);
+    for _ in 0..200 {
+        let n = rng.index(5000);
+        let parts = 1 + rng.index(128);
+        let ranges = split_rows(n, parts);
+        let mut covered = 0usize;
+        let mut cursor = 0usize;
+        for r in &ranges {
+            assert_eq!(r.start, cursor, "gap or overlap at {cursor}");
+            covered += r.len();
+            cursor = r.end;
+        }
+        assert_eq!(covered, n);
+    }
+}
+
+#[test]
+fn prop_bucketing_is_partition_of_rows() {
+    let mut rng = Rng::new(101);
+    for trial in 0..20 {
+        let n = 50 + rng.index(400);
+        let d = 2 + rng.index(12);
+        let pts = rand_matrix(&mut rng, n, d);
+        let ratio = 2.0 + rng.f64() * 20.0;
+        let b = Bucketizer::with_ratio(ratio, trial as u64)
+            .bucketize(&pts)
+            .unwrap();
+        let mut seen = vec![false; n];
+        for bucket in &b.buckets {
+            for &i in bucket {
+                assert!(!seen[i as usize], "duplicate assignment");
+                seen[i as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "unassigned point");
+    }
+}
+
+#[test]
+fn prop_aggregation_preserves_weighted_mean() {
+    let mut rng = Rng::new(102);
+    for trial in 0..20 {
+        let n = 30 + rng.index(300);
+        let d = 1 + rng.index(10);
+        let pts = rand_matrix(&mut rng, n, d);
+        let labels: Vec<u32> = (0..n).map(|_| rng.index(4) as u32).collect();
+        let b = Bucketizer::with_ratio(8.0, trial as u64).bucketize(&pts).unwrap();
+        let agg = AggregatedPoints::build(&pts, &labels, &b).unwrap();
+        for j in 0..d {
+            let global: f64 =
+                (0..n).map(|i| pts.get(i, j) as f64).sum::<f64>() / n as f64;
+            let weighted: f64 = (0..agg.len())
+                .map(|bk| agg.centroids.get(bk, j) as f64 * agg.index[bk].len() as f64)
+                .sum::<f64>()
+                / n as f64;
+            assert!(
+                (global - weighted).abs() < 1e-3,
+                "col {j}: {global} vs {weighted}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_refinement_order_is_true_top_budget() {
+    let mut rng = Rng::new(103);
+    for _ in 0..300 {
+        let k = 1 + rng.index(200);
+        let corr: Vec<f32> = (0..k).map(|_| rng.normal() as f32).collect();
+        let budget = rng.index(k + 1);
+        let got = refinement_order(&corr, budget);
+        // Reference: full argsort descending, truncated.
+        let mut idx: Vec<usize> = (0..k).collect();
+        idx.sort_by(|&a, &b| corr[b].partial_cmp(&corr[a]).unwrap());
+        idx.truncate(budget);
+        let got_vals: Vec<f32> = got.iter().map(|&i| corr[i]).collect();
+        let want_vals: Vec<f32> = idx.iter().map(|&i| corr[i]).collect();
+        assert_eq!(got_vals, want_vals, "k={k} budget={budget}");
+    }
+}
+
+#[test]
+fn prop_refine_budget_bounds() {
+    let mut rng = Rng::new(104);
+    for _ in 0..500 {
+        let k = rng.index(10_000);
+        let eps = rng.f64();
+        let b = refine_budget(k, eps);
+        assert!(b <= k);
+        if eps <= 0.0 {
+            assert_eq!(b, 0);
+        } else {
+            // Line 5 semantics: floor(k·ε)+1 sets, capped at k.
+            assert!(b >= 1.min(k));
+            assert!((b as f64) <= k as f64 * eps + 1.0 + 1e-9);
+        }
+    }
+}
+
+#[test]
+fn prop_sampling_is_subset_and_exact_at_one() {
+    let mut rng = Rng::new(105);
+    for trial in 0..200 {
+        let n = rng.index(2000);
+        let ratio = rng.f64();
+        let s = sample_rows(n, ratio, trial as u64, trial as u64 % 7);
+        assert!(s.iter().all(|&i| i < n));
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        if n > 0 {
+            let full = sample_rows(n, 1.0, trial as u64, 0);
+            assert_eq!(full.len(), n);
+        }
+    }
+}
+
+#[test]
+fn prop_native_topk_matches_full_sort() {
+    let mut rng = Rng::new(106);
+    for _ in 0..30 {
+        let nq = 1 + rng.index(8);
+        let nx = 5 + rng.index(120);
+        let d = 1 + rng.index(16);
+        let k = 1 + rng.index(nx.min(10));
+        let q = rand_matrix(&mut rng, nq, d);
+        let x = rand_matrix(&mut rng, nx, d);
+        let got = NativeBackend.knn_block_topk(&q, &x, k).unwrap();
+        let dists = NativeBackend.knn_dists(&q, &x).unwrap();
+        for qi in 0..nq {
+            let mut row: Vec<(f32, u32)> = (0..nx)
+                .map(|xi| (dists.get(qi, xi), xi as u32))
+                .collect();
+            row.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+            let want: Vec<u32> = row[..k].iter().map(|c| c.1).collect();
+            let have: Vec<u32> = got[qi].iter().map(|c| c.1).collect();
+            assert_eq!(have, want);
+        }
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    // Generate random JSON values, serialize, reparse, compare.
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.index(4) } else { rng.index(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.normal() * 1e3).round()),
+            3 => {
+                let len = rng.index(12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.index(96) as u8 + 32;
+                        c as char
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.index(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.index(5))
+                    .map(|i| (format!("k{i}"), gen(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    let mut rng = Rng::new(107);
+    for _ in 0..300 {
+        let v = gen(&mut rng, 3);
+        assert_eq!(Json::parse(&v.compact()).unwrap(), v);
+        assert_eq!(Json::parse(&v.pretty()).unwrap(), v);
+    }
+}
+
+#[test]
+fn prop_lsh_ratio_monotone_in_target() {
+    // Larger target ratios must produce coarser bucketings.
+    let mut rng = Rng::new(108);
+    let pts = rand_matrix(&mut rng, 800, 8);
+    let mut prev_buckets = usize::MAX;
+    for ratio in [2.0, 8.0, 32.0] {
+        let b = Bucketizer::with_ratio(ratio, 9).bucketize(&pts).unwrap();
+        assert!(
+            b.buckets.len() <= prev_buckets,
+            "ratio {ratio} gave {} buckets, prev {prev_buckets}",
+            b.buckets.len()
+        );
+        prev_buckets = b.buckets.len();
+    }
+}
