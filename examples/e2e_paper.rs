@@ -53,7 +53,12 @@ fn main() -> accurateml::Result<()> {
     let mut t = Table::new(
         "headline: execution-time reduction x accuracy loss",
         &[
-            "app", "config", "reduction_x", "loss_%", "samp_loss_%_at_equal_time", "loss_reduction_x",
+            "app",
+            "config",
+            "reduction_x",
+            "loss_%",
+            "samp_loss_%_at_equal_time",
+            "loss_reduction_x",
         ],
     );
 

@@ -26,7 +26,14 @@ fn main() -> accurateml::Result<()> {
     let mut t = Table::new(
         "kNN: exact vs AccurateML",
         &[
-            "mode", "ratio", "eps", "accuracy", "loss_%", "reduction_x", "task_ms", "task_%_of_basic",
+            "mode",
+            "ratio",
+            "eps",
+            "accuracy",
+            "loss_%",
+            "reduction_x",
+            "task_ms",
+            "task_%_of_basic",
         ],
     );
     t.row(vec![

@@ -6,6 +6,12 @@
 //! actually scores at the default scale.
 //!
 //!     cargo bench --bench hotpath
+//!
+//! The `bench-smoke` cargo feature shrinks every shape and time budget
+//! so CI can *execute* this bench in seconds as a smoke test (compile +
+//! run) without paying for a figure-scale sweep:
+//!
+//!     cargo bench --bench hotpath --features bench-smoke
 mod common;
 
 use std::sync::Arc;
@@ -19,6 +25,13 @@ use accurateml::util::rng::Rng;
 use accurateml::util::table::{f, Table};
 use accurateml::util::timer::{bench_fn, fmt_duration};
 
+/// Smoke mode: tiny shapes, short budgets (CI); otherwise full scale.
+const SMOKE: bool = cfg!(feature = "bench-smoke");
+
+fn budget() -> Duration {
+    Duration::from_millis(if SMOKE { 20 } else { 300 })
+}
+
 fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
     let mut m = Matrix::zeros(rows, cols);
     for v in m.as_mut_slice() {
@@ -30,44 +43,47 @@ fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
 fn bench_backend(name: &str, be: &dyn ScoreBackend, t: &mut Table) {
     let mut rng = Rng::new(42);
     // One map task's exact kNN block at default scale: 640 test x 4000
-    // partition rows x 64 dims.
-    let q = rand_matrix(&mut rng, 640, 64);
-    let x = rand_matrix(&mut rng, 4000, 64);
+    // partition rows x 64 dims (smoke: 32 x 200 x 16).
+    let (nq, nx, d) = if SMOKE { (32, 200, 16) } else { (640, 4000, 64) };
+    let q = rand_matrix(&mut rng, nq, d);
+    let x = rand_matrix(&mut rng, nx, d);
     let s = bench_fn(
         || {
             be.knn_block_topk(&q, &x, 5).unwrap();
         },
         1,
-        5,
-        Duration::from_millis(300),
+        if SMOKE { 2 } else { 5 },
+        budget(),
     );
-    let flops = 640.0 * 4000.0 * 64.0 * 3.0; // sub+mul+add per dim
+    let flops = (nq * nx * d * 3) as f64; // sub+mul+add per dim
     t.row(vec![
         name.into(),
-        "knn_topk 640x4000 d64".into(),
+        format!("knn_topk {nq}x{nx} d{d}"),
         fmt_duration(s.p50),
         f(flops / s.p50 / 1e9, 2),
     ]);
 
-    // Stage-1 distances: 640 test x 400 centroids.
-    let c = rand_matrix(&mut rng, 400, 64);
+    // Stage-1 distances: test points x aggregated centroids.
+    let nc = if SMOKE { 40 } else { 400 };
+    let c = rand_matrix(&mut rng, nc, d);
     let s = bench_fn(
         || {
             be.knn_dists(&q, &c).unwrap();
         },
         1,
-        5,
-        Duration::from_millis(300),
+        if SMOKE { 2 } else { 5 },
+        budget(),
     );
-    let flops = 640.0 * 400.0 * 64.0 * 3.0;
+    let flops = (nq * nc * d * 3) as f64;
     t.row(vec![
         name.into(),
-        "knn_dists 640x400 d64".into(),
+        format!("knn_dists {nq}x{nc} d{d}"),
         fmt_duration(s.p50),
         f(flops / s.p50 / 1e9, 2),
     ]);
 
-    // CF weights: 50 active x 1200 users x 2048 items (3 contractions).
+    // CF weights: active users x partition users x items.
+    let (na, nu, m) = if SMOKE { (8, 60, 128) } else { (50, 1200, 2048) };
     let mk = |rng: &mut Rng, rows: usize, m: usize| {
         let mut c = Matrix::zeros(rows, m);
         let mut mask = Matrix::zeros(rows, m);
@@ -81,20 +97,20 @@ fn bench_backend(name: &str, be: &dyn ScoreBackend, t: &mut Table) {
         }
         (c, mask)
     };
-    let (ca, ma) = mk(&mut rng, 50, 2048);
-    let (cu, mu) = mk(&mut rng, 1200, 2048);
+    let (ca, ma) = mk(&mut rng, na, m);
+    let (cu, mu) = mk(&mut rng, nu, m);
     let s = bench_fn(
         || {
             be.cf_weights(&ca, &ma, &cu, &mu).unwrap();
         },
         1,
-        3,
-        Duration::from_millis(300),
+        if SMOKE { 2 } else { 3 },
+        budget(),
     );
-    let flops = 50.0 * 1200.0 * 2048.0 * 3.0 * 2.0;
+    let flops = (na * nu * m * 3 * 2) as f64;
     t.row(vec![
         name.into(),
-        "cf_weights 50x1200 m2048".into(),
+        format!("cf_weights {na}x{nu} m{m}"),
         fmt_duration(s.p50),
         f(flops / s.p50 / 1e9, 2),
     ]);
@@ -118,18 +134,19 @@ fn main() {
 
     // LSH bucketizer (the map-task part-1 cost).
     let mut rng = Rng::new(7);
-    let pts = rand_matrix(&mut rng, 4000, 64);
+    let (np, d) = if SMOKE { (400, 16) } else { (4000, 64) };
+    let pts = rand_matrix(&mut rng, np, d);
     let s = bench_fn(
         || {
             Bucketizer::with_ratio(10.0, 1).bucketize(&pts).unwrap();
         },
         1,
-        5,
-        Duration::from_millis(300),
+        if SMOKE { 2 } else { 5 },
+        budget(),
     );
     t.row(vec![
         "native".into(),
-        "lsh_bucketize 4000 d64 r=10".into(),
+        format!("lsh_bucketize {np} d{d} r=10"),
         fmt_duration(s.p50),
         "-".into(),
     ]);

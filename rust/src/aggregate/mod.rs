@@ -35,7 +35,11 @@ pub struct AggregatedPoints {
 
 impl AggregatedPoints {
     /// Aggregate `points` (with per-row labels) according to a bucketing.
-    pub fn build(points: &Matrix, labels: &[u32], bucketing: &Bucketing) -> Result<AggregatedPoints> {
+    pub fn build(
+        points: &Matrix,
+        labels: &[u32],
+        bucketing: &Bucketing,
+    ) -> Result<AggregatedPoints> {
         if labels.len() != points.rows() {
             return Err(Error::Data(format!(
                 "labels {} != rows {}",

@@ -98,6 +98,25 @@ pub fn refinement_order_random(k: usize, budget: usize, seed: u64) -> Vec<usize>
     Rng::new(seed ^ 0x5EED_0DE4_u64).sample_indices(k, budget)
 }
 
+/// Stage-2 selection for one query (Algorithm 1 lines 2-5): derive the
+/// refinement budget from `eps_max` and rank the bucket sets, honoring
+/// the ablation switch. This is the single entry point the streaming
+/// two-stage jobs (kNN, CF, k-means) plan their refinement tasks
+/// through — stage 1 computes correlations, calls this, and hands the
+/// chosen buckets to the stage-2 task via its carry.
+pub fn stage2_selection(
+    correlations: &[f32],
+    eps_max: f64,
+    order: RefineOrder,
+    seed: u64,
+) -> Vec<usize> {
+    let budget = refine_budget(correlations.len(), eps_max);
+    match order {
+        RefineOrder::Correlation => refinement_order(correlations, budget),
+        RefineOrder::Random => refinement_order_random(correlations.len(), budget, seed),
+    }
+}
+
 /// Run Algorithm 1 for one query. Timing is attributed to the
 /// Fig.-4 parts: `initial_s` for stage 1, `refine_s` for stage 2.
 pub fn run_algorithm1<T: AggregatedQueryTask>(
@@ -190,6 +209,25 @@ mod tests {
         assert!((out - 21.0).abs() < 1e-6);
         assert!(m.initial_s >= 0.0);
         assert!(m.refine_s >= 0.0);
+    }
+
+    #[test]
+    fn stage2_selection_honors_order_switch() {
+        let corr = vec![0.1, 0.9, 0.5];
+        assert_eq!(
+            stage2_selection(&corr, 1.0, RefineOrder::Correlation, 0),
+            vec![1, 2, 0]
+        );
+        let random = stage2_selection(&corr, 1.0, RefineOrder::Random, 7);
+        let mut sorted = random.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2]);
+        assert!(stage2_selection(&corr, 0.0, RefineOrder::Correlation, 0).is_empty());
+        // eps in (0,1): budget semantics match refine_budget.
+        assert_eq!(
+            stage2_selection(&corr, 0.4, RefineOrder::Correlation, 0).len(),
+            refine_budget(3, 0.4)
+        );
     }
 
     #[test]

@@ -16,7 +16,7 @@
 pub mod algorithm1;
 pub mod sampling;
 
-pub use algorithm1::{refinement_order, run_algorithm1, AggregatedQueryTask};
+pub use algorithm1::{refinement_order, run_algorithm1, stage2_selection, AggregatedQueryTask};
 pub use sampling::sample_rows;
 
 /// How a map task processes its partition.

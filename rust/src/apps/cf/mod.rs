@@ -25,7 +25,7 @@ pub mod predict;
 use std::sync::Arc;
 
 use crate::aggregate::AggregatedUsers;
-use crate::approx::algorithm1::{refine_budget, refinement_order, refinement_order_random, RefineOrder};
+use crate::approx::algorithm1::{stage2_selection, RefineOrder};
 use crate::approx::sampling::sample_rows;
 use crate::approx::ProcessingMode;
 use crate::data::matrix::Matrix;
@@ -34,7 +34,7 @@ use crate::data::ratings::RatingsSplit;
 use crate::error::Result;
 use crate::lsh::bucketizer::Grouping;
 use crate::lsh::Bucketizer;
-use crate::mapreduce::engine::MapReduceJob;
+use crate::mapreduce::engine::{MapReduceJob, TwoStageJob};
 use crate::mapreduce::metrics::TaskMetrics;
 use crate::runtime::backend::ScoreBackend;
 use crate::util::timer::Stopwatch;
@@ -217,14 +217,53 @@ impl CfJob {
         out
     }
 
-    /// AccurateML map task.
-    fn accurateml_map(
+    /// Emit the aggregated-user record for one (active, bucket) pair if
+    /// it carries any evidence for the active user's test items.
+    fn aggregated_record(
+        &self,
+        ai: usize,
+        b: usize,
+        agg: &AggregatedUsers,
+        agg_means: &[f32],
+        wagg: &Matrix,
+        out: &mut Vec<NeighborRecord>,
+    ) {
+        let w = wagg.get(ai, b);
+        if w == 0.0 || !w.is_finite() {
+            return;
+        }
+        let mut deviations = Vec::new();
+        for &i in &self.test_items[ai] {
+            if agg.mask.get(b, i as usize) > 0.0 {
+                deviations.push((i, agg.ratings.get(b, i as usize) - agg_means[b]));
+            }
+        }
+        if !deviations.is_empty() {
+            // The aggregated user enters the prediction as ONE neighbor
+            // (its deviations are already bucket means). Scaling its
+            // weight by bucket size was tried and measurably hurts
+            // RMSE: the aggregated deviations are variance-shrunken,
+            // and multiplying their den-share amplifies that bias.
+            out.push(NeighborRecord {
+                active: ai as u32,
+                weight: w,
+                deviations,
+            });
+        }
+    }
+
+    /// AccurateML stage-1 core (parts 1-3): bucketize users, aggregate,
+    /// score the aggregated users, and plan each active user's stage-2
+    /// refinement (Algorithm 1 lines 2-5). Everything both the barrier
+    /// and streaming paths need; the streaming path additionally
+    /// materializes [`CfJob::initial_records`].
+    fn accurateml_carry(
         &self,
         range: RowRange,
         compression_ratio: f64,
         eps_max: f64,
         metrics: &mut TaskMetrics,
-    ) -> Vec<NeighborRecord> {
+    ) -> CfCarry {
         let users: Vec<usize> = (range.start..range.end).collect();
         let m = self.split.train.n_items();
 
@@ -278,84 +317,110 @@ impl CfJob {
         }
         metrics.aggregate_s += sw.lap_s();
 
-        // Part 3: initial output — score aggregated users, emit one
-        // record per (active, bucket).
+        // Part 3: score aggregated users and plan stage 2 (Algorithm 1
+        // lines 2-5).
         let wagg = self
             .backend
             .cf_weights(&self.ca, &self.ma, &cagg, &agg.mask)
             .expect("backend cf_weights failed");
-        let budget = refine_budget(n_buckets, eps_max);
-        let mut out = Vec::new();
-        // Records per (active, bucket) kept addressable for replacement.
         let mut refined: Vec<Vec<usize>> = Vec::with_capacity(self.n_active());
         for ai in 0..self.n_active() {
-            let witems = &self.test_items[ai];
             let corr: Vec<f32> = (0..n_buckets).map(|b| wagg.get(ai, b)).collect();
-            let chosen = match self.config.refine_order {
-                RefineOrder::Correlation => refinement_order(&corr, budget),
-                RefineOrder::Random => {
-                    refinement_order_random(n_buckets, budget, self.config.seed ^ ai as u64)
-                }
-            };
-            let mut is_refined = vec![false; n_buckets];
-            for &b in &chosen {
-                is_refined[b] = true;
-            }
-            refined.push(chosen);
-            if witems.is_empty() {
-                continue;
-            }
-            for b in 0..n_buckets {
-                if is_refined[b] {
-                    continue; // replaced by originals in part 4
-                }
-                let w = wagg.get(ai, b);
-                if w == 0.0 || !w.is_finite() {
-                    continue;
-                }
-                let mut deviations = Vec::new();
-                for &i in witems {
-                    if agg.mask.get(b, i as usize) > 0.0 {
-                        deviations.push((i, agg.ratings.get(b, i as usize) - agg_means[b]));
-                    }
-                }
-                if !deviations.is_empty() {
-                    // The aggregated user enters the prediction as ONE
-                    // neighbor (its deviations are already bucket
-                    // means). Scaling its weight by bucket size was
-                    // tried and measurably hurts RMSE: the aggregated
-                    // deviations are variance-shrunken, and multiplying
-                    // their den-share amplifies that bias.
-                    out.push(NeighborRecord {
-                        active: ai as u32,
-                        weight: w,
-                        deviations,
-                    });
-                }
-            }
+            refined.push(stage2_selection(
+                &corr,
+                eps_max,
+                self.config.refine_order,
+                self.config.seed ^ ai as u64,
+            ));
         }
         metrics.initial_s += sw.lap_s();
 
-        // Part 4: refinement — original users of each active user's top
-        // buckets (weights computed natively per pair; the refined sets
-        // differ per active user so there is no dense block to batch).
+        CfCarry {
+            users,
+            cu,
+            mu,
+            agg,
+            agg_means,
+            wagg,
+            refined,
+        }
+    }
+
+    /// The streaming initial output: one record per (active, bucket)
+    /// for *every* bucket. Only the streaming path pays for this — the
+    /// barrier path goes straight to stage 2.
+    fn initial_records(&self, carry: &CfCarry, metrics: &mut TaskMetrics) -> Vec<NeighborRecord> {
+        let mut sw = Stopwatch::new();
+        let n_buckets = carry.agg.len();
+        let mut out = Vec::new();
         for ai in 0..self.n_active() {
-            let self_id = self.split.active_users[ai] as usize;
+            if self.test_items[ai].is_empty() {
+                continue;
+            }
+            for b in 0..n_buckets {
+                self.aggregated_record(
+                    ai,
+                    b,
+                    &carry.agg,
+                    &carry.agg_means,
+                    &carry.wagg,
+                    &mut out,
+                );
+            }
+        }
+        metrics.initial_s += sw.lap_s();
+        out
+    }
+
+    /// AccurateML stage 2 (Algorithm 1 lines 6-10): the replacement
+    /// output — unrefined buckets keep their aggregated record, refined
+    /// buckets are replaced by their original users' records (weights
+    /// computed natively per pair; the refined sets differ per active
+    /// user so there is no dense block to batch).
+    fn accurateml_stage2(
+        &self,
+        carry: &CfCarry,
+        metrics: &mut TaskMetrics,
+    ) -> Vec<NeighborRecord> {
+        let mut sw = Stopwatch::new();
+        let n_buckets = carry.agg.len();
+        let mut out = Vec::new();
+        let mut is_refined = vec![false; n_buckets];
+        for ai in 0..self.n_active() {
             let witems = &self.test_items[ai];
             if witems.is_empty() {
                 continue;
             }
-            for &b in &refined[ai] {
-                for &local in &agg.index[b] {
-                    let v = users[local as usize];
+            is_refined.fill(false);
+            for &b in &carry.refined[ai] {
+                is_refined[b] = true;
+            }
+            // Aggregated records that survive refinement.
+            for b in 0..n_buckets {
+                if !is_refined[b] {
+                    self.aggregated_record(
+                        ai,
+                        b,
+                        &carry.agg,
+                        &carry.agg_means,
+                        &carry.wagg,
+                        &mut out,
+                    );
+                }
+            }
+            // Refined buckets: original users replace the aggregate.
+            let self_id = self.split.active_users[ai] as usize;
+            for &b in &carry.refined[ai] {
+                for &local in &carry.agg.index[b] {
+                    let v = carry.users[local as usize];
                     if v == self_id {
                         continue;
                     }
                     let w = crate::runtime::backend::pearson_pair(
                         self.ca.row(ai),
                         self.ma.row(ai),
-                        cu.row(local as usize),
-                        mu.row(local as usize),
+                        carry.cu.row(local as usize),
+                        carry.mu.row(local as usize),
                     );
                     if w == 0.0 || !w.is_finite() {
                         continue;
@@ -383,6 +448,19 @@ impl CfJob {
     }
 }
 
+/// Stage-1 → stage-2 carry of one CF partition: the partition's users
+/// with their centered rows/masks, the aggregation, the stage-1 weight
+/// block and the per-active refinement plan.
+pub struct CfCarry {
+    users: Vec<usize>,
+    cu: Matrix,
+    mu: Matrix,
+    agg: AggregatedUsers,
+    agg_means: Vec<f32>,
+    wagg: Matrix,
+    refined: Vec<Vec<usize>>,
+}
+
 impl MapReduceJob for CfJob {
     type MapOut = Vec<NeighborRecord>;
     type Output = CfOutput;
@@ -397,22 +475,17 @@ impl MapReduceJob for CfJob {
             return Vec::new();
         }
         match self.config.mode {
-            ProcessingMode::Exact => {
-                let users: Vec<usize> = (range.start..range.end).collect();
-                self.scan_users(&users, metrics)
-            }
-            ProcessingMode::Sampling { ratio } => {
-                let local = sample_rows(range.len(), ratio, self.config.seed, part_id as u64);
-                if local.is_empty() {
-                    return Vec::new();
-                }
-                let users: Vec<usize> = local.iter().map(|&i| range.start + i).collect();
-                self.scan_users(&users, metrics)
-            }
             ProcessingMode::AccurateML {
                 compression_ratio,
                 refinement_threshold,
-            } => self.accurateml_map(range, compression_ratio, refinement_threshold, metrics),
+            } => {
+                // Barrier mode skips the initial output: only the
+                // refined result ships.
+                let carry =
+                    self.accurateml_carry(range, compression_ratio, refinement_threshold, metrics);
+                self.accurateml_stage2(&carry, metrics)
+            }
+            _ => self.stage1(part_id, metrics).0,
         }
     }
 
@@ -425,8 +498,50 @@ impl MapReduceJob for CfJob {
     }
 
     fn reduce(&self, outs: Vec<Self::MapOut>) -> CfOutput {
+        self.reduce_ref(&outs)
+    }
+}
+
+impl TwoStageJob for CfJob {
+    type Carry = CfCarry;
+
+    fn stage1(&self, part_id: usize, metrics: &mut TaskMetrics) -> (Self::MapOut, Option<CfCarry>) {
+        let range = self.partitions[part_id];
+        if range.is_empty() {
+            return (Vec::new(), None);
+        }
+        match self.config.mode {
+            ProcessingMode::Exact => {
+                let users: Vec<usize> = (range.start..range.end).collect();
+                (self.scan_users(&users, metrics), None)
+            }
+            ProcessingMode::Sampling { ratio } => {
+                let local = sample_rows(range.len(), ratio, self.config.seed, part_id as u64);
+                if local.is_empty() {
+                    return (Vec::new(), None);
+                }
+                let users: Vec<usize> = local.iter().map(|&i| range.start + i).collect();
+                (self.scan_users(&users, metrics), None)
+            }
+            ProcessingMode::AccurateML {
+                compression_ratio,
+                refinement_threshold,
+            } => {
+                let carry =
+                    self.accurateml_carry(range, compression_ratio, refinement_threshold, metrics);
+                let initial = self.initial_records(&carry, metrics);
+                (initial, Some(carry))
+            }
+        }
+    }
+
+    fn stage2(&self, _part_id: usize, carry: CfCarry, metrics: &mut TaskMetrics) -> Self::MapOut {
+        self.accurateml_stage2(&carry, metrics)
+    }
+
+    fn reduce_ref(&self, outs: &[Self::MapOut]) -> CfOutput {
         let mut acc = PredictionAccumulator::default();
-        for records in &outs {
+        for records in outs {
             for r in records {
                 acc.add(r);
             }
@@ -445,6 +560,11 @@ impl MapReduceJob for CfJob {
             predictions,
             rmse: rmse(&pairs),
         }
+    }
+
+    /// Trace accuracy for CF is negative RMSE (higher is better).
+    fn evaluate(&self, output: &CfOutput) -> f64 {
+        -output.rmse
     }
 }
 
@@ -468,7 +588,10 @@ mod tests {
         Arc::new(RatingsSplit::new(&m, 20, 0.2, 9).unwrap())
     }
 
-    fn run(mode: ProcessingMode, split: Arc<RatingsSplit>) -> (CfOutput, crate::mapreduce::JobMetrics) {
+    fn run(
+        mode: ProcessingMode,
+        split: Arc<RatingsSplit>,
+    ) -> (CfOutput, crate::mapreduce::JobMetrics) {
         let engine = Engine::new(4);
         let job = CfJob::new(
             CfConfig {

@@ -28,7 +28,7 @@
 
 use std::sync::Arc;
 
-use crate::approx::algorithm1::{refine_budget, refinement_order, refinement_order_random, RefineOrder};
+use crate::approx::algorithm1::{stage2_selection, RefineOrder};
 use crate::approx::sampling::sample_rows;
 use crate::approx::ProcessingMode;
 use crate::data::matrix::{sq_dist, Matrix};
@@ -36,7 +36,7 @@ use crate::data::points::{split_rows, RowRange};
 use crate::error::Result;
 use crate::lsh::bucketizer::Grouping;
 use crate::lsh::Bucketizer;
-use crate::mapreduce::engine::{Engine, MapReduceJob};
+use crate::mapreduce::engine::{Engine, MapReduceJob, TwoStageJob};
 use crate::mapreduce::metrics::{JobMetrics, TaskMetrics};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
@@ -110,6 +110,25 @@ struct KmeansIterJob {
 /// Per-cluster partial result: (sum of assigned vectors, total weight).
 type ClusterPartials = Vec<(Vec<f32>, f32)>;
 
+/// Stage-1 → stage-2 carry of one k-means partition: the aggregated
+/// partials plus which cluster each bucket went to and which buckets
+/// the refinement plan selected.
+struct KmeansCarry {
+    partials: ClusterPartials,
+    assigned: Vec<usize>,
+    chosen: Vec<usize>,
+}
+
+/// Mean squared distance of every point to its nearest centroid.
+fn mean_inertia(points: &Matrix, centroids: &Matrix) -> f64 {
+    let mut inertia = 0.0f64;
+    for r in 0..points.rows() {
+        let (_, d1, _) = nearest_centroid(centroids, points.row(r));
+        inertia += d1 as f64;
+    }
+    inertia / points.rows().max(1) as f64
+}
+
 fn nearest_centroid(centroids: &Matrix, p: &[f32]) -> (usize, f32, f32) {
     let mut best = (0usize, f32::INFINITY);
     let mut second = f32::INFINITY;
@@ -143,6 +162,82 @@ impl KmeansIterJob {
             *w += 1.0;
         }
     }
+
+    /// AccurateML stage-1 core: assign aggregated points (weighted by
+    /// bucket size) and plan refinement. Returns (partials, bucket →
+    /// cluster assignment, chosen buckets).
+    fn aggregated_pass(
+        &self,
+        part_id: usize,
+        metrics: &mut TaskMetrics,
+    ) -> (ClusterPartials, Vec<usize>, Vec<usize>) {
+        let ProcessingMode::AccurateML {
+            refinement_threshold,
+            ..
+        } = self.mode
+        else {
+            unreachable!("aggregated_pass is only called in AccurateML mode");
+        };
+        let agg = &self.agg.as_ref().expect("aggregation not built")[part_id];
+        let n_buckets = agg.index.len();
+        let mut sw = Stopwatch::new();
+        let mut out = self.empty_partials();
+
+        // Assign aggregated points; correlation = -(assignment margin).
+        let mut assigned = Vec::with_capacity(n_buckets);
+        let mut corr = Vec::with_capacity(n_buckets);
+        for b in 0..n_buckets {
+            let (c, d1, d2) = nearest_centroid(&self.centroids, agg.centers.row(b));
+            assigned.push(c);
+            corr.push(d1 - d2); // <= 0; near 0 = boundary bucket
+            let size = agg.index[b].len() as f32;
+            let (sum, w) = &mut out[c];
+            for (s, &x) in sum.iter_mut().zip(agg.centers.row(b)) {
+                *s += x * size;
+            }
+            *w += size;
+        }
+        // Refinement plan (Algorithm 1 lines 2-5).
+        let chosen = stage2_selection(
+            &corr,
+            refinement_threshold,
+            self.refine_order,
+            self.seed ^ part_id as u64,
+        );
+        metrics.initial_s += sw.lap_s();
+        (out, assigned, chosen)
+    }
+
+    /// AccurateML stage 2: re-assign the chosen boundary buckets point
+    /// by point, replacing their aggregate contribution.
+    fn refine_partials(
+        &self,
+        part_id: usize,
+        mut partials: ClusterPartials,
+        assigned: &[usize],
+        chosen: &[usize],
+        metrics: &mut TaskMetrics,
+    ) -> ClusterPartials {
+        let range = self.partitions[part_id];
+        let agg = &self.agg.as_ref().expect("aggregation not built")[part_id];
+        let mut sw = Stopwatch::new();
+        for &b in chosen {
+            // Remove the aggregate contribution...
+            let size = agg.index[b].len() as f32;
+            let (sum, w) = &mut partials[assigned[b]];
+            for (s, &x) in sum.iter_mut().zip(agg.centers.row(b)) {
+                *s -= x * size;
+            }
+            *w -= size;
+            // ...and add members individually.
+            self.assign_rows(
+                agg.index[b].iter().map(|&i| range.start + i as usize),
+                &mut partials,
+            );
+        }
+        metrics.refine_s += sw.lap_s();
+        partials
+    }
 }
 
 impl MapReduceJob for KmeansIterJob {
@@ -154,71 +249,15 @@ impl MapReduceJob for KmeansIterJob {
     }
 
     fn map(&self, part_id: usize, metrics: &mut TaskMetrics) -> ClusterPartials {
-        let range = self.partitions[part_id];
-        let mut out = self.empty_partials();
         match self.mode {
-            ProcessingMode::Exact => {
-                let sw = Stopwatch::new();
-                self.assign_rows(range.start..range.end, &mut out);
-                metrics.exact_s += sw.elapsed_s();
+            ProcessingMode::AccurateML { .. } => {
+                // Barrier mode refines in place — no carry clone, no
+                // discarded initial output.
+                let (partials, assigned, chosen) = self.aggregated_pass(part_id, metrics);
+                self.refine_partials(part_id, partials, &assigned, &chosen, metrics)
             }
-            ProcessingMode::Sampling { ratio } => {
-                let sw = Stopwatch::new();
-                let local = sample_rows(range.len(), ratio, self.seed, part_id as u64);
-                self.assign_rows(local.into_iter().map(|i| range.start + i), &mut out);
-                metrics.exact_s += sw.elapsed_s();
-            }
-            ProcessingMode::AccurateML {
-                refinement_threshold,
-                ..
-            } => {
-                let agg = &self.agg.as_ref().expect("aggregation not built")[part_id];
-                let n_buckets = agg.index.len();
-                let mut sw = Stopwatch::new();
-
-                // Stage 1: assign aggregated points, weighted by bucket
-                // size; correlation = -(assignment margin).
-                let mut assigned = Vec::with_capacity(n_buckets);
-                let mut corr = Vec::with_capacity(n_buckets);
-                for b in 0..n_buckets {
-                    let (c, d1, d2) = nearest_centroid(&self.centroids, agg.centers.row(b));
-                    assigned.push(c);
-                    corr.push(d1 - d2); // <= 0; near 0 = boundary bucket
-                    let size = agg.index[b].len() as f32;
-                    let (sum, w) = &mut out[c];
-                    for (s, &x) in sum.iter_mut().zip(agg.centers.row(b)) {
-                        *s += x * size;
-                    }
-                    *w += size;
-                }
-                metrics.initial_s += sw.lap_s();
-
-                // Stage 2: re-assign boundary buckets point by point.
-                let budget = refine_budget(n_buckets, refinement_threshold);
-                let chosen = match self.refine_order {
-                    RefineOrder::Correlation => refinement_order(&corr, budget),
-                    RefineOrder::Random => {
-                        refinement_order_random(n_buckets, budget, self.seed ^ part_id as u64)
-                    }
-                };
-                for b in chosen {
-                    // Remove the aggregate contribution...
-                    let size = agg.index[b].len() as f32;
-                    let (sum, w) = &mut out[assigned[b]];
-                    for (s, &x) in sum.iter_mut().zip(agg.centers.row(b)) {
-                        *s -= x * size;
-                    }
-                    *w -= size;
-                    // ...and add members individually.
-                    self.assign_rows(
-                        agg.index[b].iter().map(|&i| range.start + i as usize),
-                        &mut out,
-                    );
-                }
-                metrics.refine_s += sw.lap_s();
-            }
+            _ => self.stage1(part_id, metrics).0,
         }
-        out
     }
 
     fn shuffle_bytes(&self, out: &ClusterPartials) -> u64 {
@@ -230,13 +269,64 @@ impl MapReduceJob for KmeansIterJob {
     }
 
     fn reduce(&self, outs: Vec<ClusterPartials>) -> Matrix {
+        self.reduce_ref(&outs)
+    }
+}
+
+impl TwoStageJob for KmeansIterJob {
+    type Carry = KmeansCarry;
+
+    fn stage1(
+        &self,
+        part_id: usize,
+        metrics: &mut TaskMetrics,
+    ) -> (ClusterPartials, Option<KmeansCarry>) {
+        let range = self.partitions[part_id];
+        match self.mode {
+            ProcessingMode::Exact => {
+                let sw = Stopwatch::new();
+                let mut out = self.empty_partials();
+                self.assign_rows(range.start..range.end, &mut out);
+                metrics.exact_s += sw.elapsed_s();
+                (out, None)
+            }
+            ProcessingMode::Sampling { ratio } => {
+                let sw = Stopwatch::new();
+                let mut out = self.empty_partials();
+                let local = sample_rows(range.len(), ratio, self.seed, part_id as u64);
+                self.assign_rows(local.into_iter().map(|i| range.start + i), &mut out);
+                metrics.exact_s += sw.elapsed_s();
+                (out, None)
+            }
+            ProcessingMode::AccurateML { .. } => {
+                let (partials, assigned, chosen) = self.aggregated_pass(part_id, metrics);
+                let carry = KmeansCarry {
+                    partials: partials.clone(),
+                    assigned,
+                    chosen,
+                };
+                (partials, Some(carry))
+            }
+        }
+    }
+
+    fn stage2(
+        &self,
+        part_id: usize,
+        carry: KmeansCarry,
+        metrics: &mut TaskMetrics,
+    ) -> ClusterPartials {
+        self.refine_partials(part_id, carry.partials, &carry.assigned, &carry.chosen, metrics)
+    }
+
+    fn reduce_ref(&self, outs: &[ClusterPartials]) -> Matrix {
         let k = self.centroids.rows();
         let d = self.points.cols();
         let mut next = Matrix::zeros(k, d);
         for c in 0..k {
             let mut sum = vec![0.0f64; d];
             let mut w = 0.0f64;
-            for part in &outs {
+            for part in outs {
                 let (s, pw) = &part[c];
                 for (a, &x) in sum.iter_mut().zip(s) {
                     *a += x as f64;
@@ -248,11 +338,16 @@ impl MapReduceJob for KmeansIterJob {
                     next.set(c, j, (a / w) as f32);
                 }
             } else {
-                // Empty cluster: keep the previous centroid.
                 next.row_mut(c).copy_from_slice(self.centroids.row(c));
             }
         }
         next
+    }
+
+    /// Trace accuracy is negative inertia (higher is better), computed
+    /// exactly over all points against the checkpoint's centroids.
+    fn evaluate(&self, centroids: &Matrix) -> f64 {
+        -mean_inertia(&self.points, centroids)
     }
 }
 
@@ -279,6 +374,26 @@ impl KmeansRunner {
     /// Run to completion; returns the output and metrics accumulated
     /// over all iterations (aggregation generation counted once).
     pub fn run(&self, engine: &Engine) -> Result<(KmeansOutput, JobMetrics)> {
+        self.run_impl(engine, None)
+    }
+
+    /// Run every Lloyd iteration on the pipelined streaming engine:
+    /// each round's initial (aggregated-assignment) result lands before
+    /// its refinement tasks finish, and the per-round accuracy/time
+    /// checkpoints are concatenated into the returned metrics' trace.
+    pub fn run_streaming(
+        &self,
+        engine: &Engine,
+        checkpoint_every: usize,
+    ) -> Result<(KmeansOutput, JobMetrics)> {
+        self.run_impl(engine, Some(checkpoint_every))
+    }
+
+    fn run_impl(
+        &self,
+        engine: &Engine,
+        streaming: Option<usize>,
+    ) -> Result<(KmeansOutput, JobMetrics)> {
         let cfg = &self.config;
         let partitions = split_rows(self.points.rows(), cfg.n_partitions);
 
@@ -323,6 +438,7 @@ impl KmeansRunner {
         };
 
         let mut total = JobMetrics::default();
+        let run_sw = Stopwatch::new();
         for _iter in 0..cfg.n_iterations {
             let job = KmeansIterJob {
                 points: Arc::clone(&self.points),
@@ -333,7 +449,14 @@ impl KmeansRunner {
                 refine_order: cfg.refine_order,
                 agg: agg.clone(),
             };
-            let report = engine.run(Arc::new(job))?;
+            // Each round's trace restarts its clock; shift onto the
+            // run-level axis so the concatenated trajectory is monotone
+            // in time. (Refinement counts stay per-round.)
+            let iter_start_s = run_sw.elapsed_s();
+            let report = match streaming {
+                Some(every) => engine.run_streaming(Arc::new(job), every)?,
+                None => engine.run(Arc::new(job))?,
+            };
             centroids = report.output;
             // Accumulate per-iteration metrics.
             if total.tasks.is_empty() {
@@ -347,6 +470,10 @@ impl KmeansRunner {
             total.reduce_wall_s += report.metrics.reduce_wall_s;
             total.shuffle_bytes += report.metrics.shuffle_bytes;
             total.shuffle_records += report.metrics.shuffle_records;
+            total.trace.extend(report.metrics.trace.into_iter().map(|mut p| {
+                p.wall_s += iter_start_s;
+                p
+            }));
         }
         // Attribute generation cost once (first task slot is as good a
         // home as any for a per-job one-off; mean_task dilutes it).
@@ -355,12 +482,7 @@ impl KmeansRunner {
         }
 
         // Exact inertia for fair accuracy comparison.
-        let mut inertia = 0.0f64;
-        for r in 0..self.points.rows() {
-            let (_, d1, _) = nearest_centroid(&centroids, self.points.row(r));
-            inertia += d1 as f64;
-        }
-        inertia /= self.points.rows() as f64;
+        let inertia = mean_inertia(&self.points, &centroids);
 
         Ok((KmeansOutput { centroids, inertia }, total))
     }

@@ -22,17 +22,17 @@ pub mod classify;
 
 use std::sync::Arc;
 
-use crate::approx::algorithm1::{refine_budget, refinement_order, refinement_order_random, RefineOrder};
+use crate::aggregate::AggregatedPoints;
+use crate::approx::algorithm1::{stage2_selection, RefineOrder};
 use crate::approx::sampling::sample_rows;
 use crate::approx::ProcessingMode;
 use crate::data::gaussian::LabeledPoints;
-use crate::data::matrix::sq_dist;
+use crate::data::matrix::{sq_dist, Matrix};
 use crate::data::points::{split_rows, RowRange};
 use crate::error::Result;
 use crate::lsh::bucketizer::Grouping;
 use crate::lsh::Bucketizer;
-use crate::aggregate::AggregatedPoints;
-use crate::mapreduce::engine::MapReduceJob;
+use crate::mapreduce::engine::{MapReduceJob, TwoStageJob};
 use crate::mapreduce::metrics::TaskMetrics;
 use crate::runtime::backend::{ScoreBackend, TopK};
 use crate::util::timer::Stopwatch;
@@ -135,14 +135,18 @@ impl KnnJob {
         out
     }
 
-    /// AccurateML map task (Fig. 2b + Algorithm 1).
-    fn accurateml_map(
+    /// AccurateML stage-1 core (Fig. 2b parts 1-3 + Algorithm 1 lines
+    /// 2-5): bucketize, aggregate, score the aggregated points, and
+    /// plan each test point's stage-2 refinement. Everything both the
+    /// barrier and the streaming paths need; the streaming path
+    /// additionally materializes [`KnnJob::initial_candidates`].
+    fn accurateml_carry(
         &self,
         range: RowRange,
         compression_ratio: f64,
         eps_max: f64,
         metrics: &mut TaskMetrics,
-    ) -> Vec<Vec<LabeledCandidate>> {
+    ) -> KnnCarry {
         let rows: Vec<usize> = (range.start..range.end).collect();
         let part = self.data.train.gather_rows(&rows);
         let labels: Vec<u32> = rows.iter().map(|&r| self.data.train_labels[r]).collect();
@@ -163,51 +167,99 @@ impl KnnJob {
 
         // Part 3: initial outputs from aggregated points. One dense
         // distance block: (test × centroids). Correlation of bucket b
-        // for test point t is -dists[t][b] (Definition 4).
+        // for test point t is -dists[t][b] (Definition 4); ranking it
+        // plans stage 2 (Algorithm 1 lines 2-5).
         let dists = self
             .backend
             .knn_dists(&self.data.test, &agg.centroids)
             .expect("backend scoring failed");
+        let n_buckets = agg.len();
+        let mut refined = Vec::with_capacity(self.data.test.rows());
+        let mut corr: Vec<f32> = Vec::with_capacity(n_buckets);
+        for t in 0..self.data.test.rows() {
+            corr.clear();
+            corr.extend(dists.row(t).iter().map(|&d| -d));
+            refined.push(stage2_selection(
+                &corr,
+                eps_max,
+                self.config.refine_order,
+                self.config.seed ^ t as u64,
+            ));
+        }
         metrics.initial_s += sw.lap_s();
 
-        // Part 4: refinement (Algorithm 1 lines 2-10, per test point).
-        // Scratch buffers are reused across test points — this loop runs
-        // |test| × |partitions| times and per-iteration allocations were
-        // a measured hot spot (EXPERIMENTS.md §Perf).
-        let n_buckets = agg.len();
-        let budget = refine_budget(n_buckets, eps_max);
+        KnnCarry {
+            part,
+            labels,
+            agg,
+            dists,
+            refined,
+        }
+    }
+
+    /// The streaming initial output: every bucket's aggregated point as
+    /// a candidate, per test point. Only the streaming path pays for
+    /// this — the barrier path goes straight to stage 2.
+    fn initial_candidates(
+        &self,
+        carry: &KnnCarry,
+        metrics: &mut TaskMetrics,
+    ) -> Vec<Vec<LabeledCandidate>> {
+        let mut sw = Stopwatch::new();
+        let k = self.config.k;
+        let mut initial = Vec::with_capacity(self.data.test.rows());
+        for t in 0..self.data.test.rows() {
+            let mut topk = TopK::new(k);
+            for (b, &dv) in carry.dists.row(t).iter().enumerate() {
+                topk.push(dv, b as u32);
+            }
+            initial.push(
+                topk.into_sorted()
+                    .into_iter()
+                    .map(|(d, b)| (d, carry.agg.labels[b as usize]))
+                    .collect(),
+            );
+        }
+        metrics.initial_s += sw.lap_s();
+        initial
+    }
+
+    /// AccurateML stage 2 (Algorithm 1 lines 6-10): replace the planned
+    /// buckets' aggregated candidates with their original points;
+    /// unrefined buckets keep contributing their aggregated point.
+    /// Scratch buffers are reused across test points — this loop runs
+    /// |test| × |partitions| times and per-iteration allocations were a
+    /// measured hot spot (EXPERIMENTS.md §Perf).
+    fn accurateml_stage2(
+        &self,
+        carry: &KnnCarry,
+        metrics: &mut TaskMetrics,
+    ) -> Vec<Vec<LabeledCandidate>> {
+        let mut sw = Stopwatch::new();
+        let n_buckets = carry.agg.len();
         let k = self.config.k;
         let mut out = Vec::with_capacity(self.data.test.rows());
-        let mut corr: Vec<f32> = Vec::with_capacity(n_buckets);
         let mut is_refined = vec![false; n_buckets];
         for t in 0..self.data.test.rows() {
-            let drow = dists.row(t);
-            // Rank buckets by correlation (= -distance) descending.
-            corr.clear();
-            corr.extend(drow.iter().map(|&d| -d));
-            let refined = match self.config.refine_order {
-                RefineOrder::Correlation => refinement_order(&corr, budget),
-                RefineOrder::Random => {
-                    refinement_order_random(n_buckets, budget, self.config.seed ^ t as u64)
-                }
-            };
-            is_refined.iter_mut().for_each(|x| *x = false);
-            for &b in &refined {
+            let drow = carry.dists.row(t);
+            let chosen = &carry.refined[t];
+            is_refined.fill(false);
+            for &b in chosen {
                 is_refined[b] = true;
             }
             let mut topk = TopK::new(k);
             // Refined buckets contribute their original points...
             let q = self.data.test.row(t);
-            for &b in &refined {
-                for &local in &agg.index[b] {
-                    let d = sq_dist(part.row(local as usize), q);
+            for &b in chosen {
+                for &local in &carry.agg.index[b] {
+                    let d = sq_dist(carry.part.row(local as usize), q);
                     topk.push(d, local);
                 }
             }
             let mut cands: Vec<LabeledCandidate> = topk
                 .into_sorted()
                 .into_iter()
-                .map(|(d, local)| (d, labels[local as usize]))
+                .map(|(d, local)| (d, carry.labels[local as usize]))
                 .collect();
             // ...unrefined buckets contribute their aggregated point
             // (initial-output entries that survive refinement).
@@ -218,7 +270,7 @@ impl KnnJob {
                 }
             }
             for (d, b) in agg_topk.into_sorted() {
-                cands.push((d, agg.labels[b as usize]));
+                cands.push((d, carry.agg.labels[b as usize]));
             }
             cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
             cands.truncate(k);
@@ -227,6 +279,17 @@ impl KnnJob {
         metrics.refine_s += sw.lap_s();
         out
     }
+}
+
+/// Stage-1 → stage-2 carry of one kNN partition: the gathered rows, the
+/// aggregation, the stage-1 distance block and the per-test refinement
+/// plan (Algorithm 1 lines 2-5, already ranked).
+pub struct KnnCarry {
+    part: Matrix,
+    labels: Vec<u32>,
+    agg: AggregatedPoints,
+    dists: Matrix,
+    refined: Vec<Vec<usize>>,
 }
 
 impl MapReduceJob for KnnJob {
@@ -244,22 +307,17 @@ impl MapReduceJob for KnnJob {
             return vec![Vec::new(); self.data.test.rows()];
         }
         match self.config.mode {
-            ProcessingMode::Exact => {
-                let rows: Vec<usize> = (range.start..range.end).collect();
-                self.scan_rows(&rows, metrics)
-            }
-            ProcessingMode::Sampling { ratio } => {
-                let local = sample_rows(range.len(), ratio, self.config.seed, part_id as u64);
-                if local.is_empty() {
-                    return vec![Vec::new(); self.data.test.rows()];
-                }
-                let rows: Vec<usize> = local.iter().map(|&i| range.start + i).collect();
-                self.scan_rows(&rows, metrics)
-            }
             ProcessingMode::AccurateML {
                 compression_ratio,
                 refinement_threshold,
-            } => self.accurateml_map(range, compression_ratio, refinement_threshold, metrics),
+            } => {
+                // Barrier mode skips the initial output: only the
+                // refined result ships.
+                let carry =
+                    self.accurateml_carry(range, compression_ratio, refinement_threshold, metrics);
+                self.accurateml_stage2(&carry, metrics)
+            }
+            _ => self.stage1(part_id, metrics).0,
         }
     }
 
@@ -273,11 +331,56 @@ impl MapReduceJob for KnnJob {
     }
 
     fn reduce(&self, outs: Vec<Self::MapOut>) -> KnnOutput {
+        self.reduce_ref(&outs)
+    }
+}
+
+impl TwoStageJob for KnnJob {
+    type Carry = KnnCarry;
+
+    fn stage1(
+        &self,
+        part_id: usize,
+        metrics: &mut TaskMetrics,
+    ) -> (Self::MapOut, Option<KnnCarry>) {
+        let range = self.partitions[part_id];
+        if range.is_empty() {
+            return (vec![Vec::new(); self.data.test.rows()], None);
+        }
+        match self.config.mode {
+            ProcessingMode::Exact => {
+                let rows: Vec<usize> = (range.start..range.end).collect();
+                (self.scan_rows(&rows, metrics), None)
+            }
+            ProcessingMode::Sampling { ratio } => {
+                let local = sample_rows(range.len(), ratio, self.config.seed, part_id as u64);
+                if local.is_empty() {
+                    return (vec![Vec::new(); self.data.test.rows()], None);
+                }
+                let rows: Vec<usize> = local.iter().map(|&i| range.start + i).collect();
+                (self.scan_rows(&rows, metrics), None)
+            }
+            ProcessingMode::AccurateML {
+                compression_ratio,
+                refinement_threshold,
+            } => {
+                let carry =
+                    self.accurateml_carry(range, compression_ratio, refinement_threshold, metrics);
+                let initial = self.initial_candidates(&carry, metrics);
+                (initial, Some(carry))
+            }
+        }
+    }
+
+    fn stage2(&self, _part_id: usize, carry: KnnCarry, metrics: &mut TaskMetrics) -> Self::MapOut {
+        self.accurateml_stage2(&carry, metrics)
+    }
+
+    fn reduce_ref(&self, outs: &[Self::MapOut]) -> KnnOutput {
         let n_test = self.data.test.rows();
         let mut predictions = Vec::with_capacity(n_test);
         for t in 0..n_test {
-            let lists: Vec<Vec<LabeledCandidate>> =
-                outs.iter().map(|o| o[t].clone()).collect();
+            let lists: Vec<Vec<LabeledCandidate>> = outs.iter().map(|o| o[t].clone()).collect();
             let merged = merge_candidates(&lists, self.config.k);
             predictions.push(majority_vote(&merged));
         }
@@ -286,6 +389,10 @@ impl MapReduceJob for KnnJob {
             predictions,
             accuracy,
         }
+    }
+
+    fn evaluate(&self, output: &KnnOutput) -> f64 {
+        output.accuracy
     }
 }
 
@@ -312,7 +419,10 @@ mod tests {
         )
     }
 
-    fn run(mode: ProcessingMode, data: Arc<LabeledPoints>) -> (KnnOutput, crate::mapreduce::JobMetrics) {
+    fn run(
+        mode: ProcessingMode,
+        data: Arc<LabeledPoints>,
+    ) -> (KnnOutput, crate::mapreduce::JobMetrics) {
         let engine = Engine::new(4);
         let job = KnnJob::new(
             KnnConfig {

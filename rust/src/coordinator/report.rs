@@ -25,7 +25,12 @@ fn mode_cells(mode: &ProcessingMode) -> (String, String, String) {
 
 /// Generic results table: one row per run, with time reduction and
 /// accuracy loss relative to the provided exact run.
-pub fn results_table(title: &str, exact: &RunResult, runs: &[RunResult], lower_is_better: bool) -> Table {
+pub fn results_table(
+    title: &str,
+    exact: &RunResult,
+    runs: &[RunResult],
+    lower_is_better: bool,
+) -> Table {
     let mut t = Table::new(
         title,
         &[

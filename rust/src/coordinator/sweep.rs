@@ -235,6 +235,52 @@ impl Workbench {
         Ok((report.output, rr))
     }
 
+    /// Run the kNN workload on the pipelined streaming engine
+    /// ([`crate::mapreduce::engine::Engine::run_streaming`]): the
+    /// returned metrics carry the accuracy/time trace whose first
+    /// checkpoint is the stage-1 initial result.
+    pub fn run_knn_streaming(
+        &self,
+        mode: ProcessingMode,
+        k: usize,
+        checkpoint_every: usize,
+    ) -> Result<(KnnOutput, JobMetrics)> {
+        let job = KnnJob::new(
+            KnnConfig {
+                k,
+                n_partitions: self.config.n_partitions,
+                mode,
+                seed: self.config.seed,
+                ..Default::default()
+            },
+            Arc::clone(&self.knn_data),
+            Arc::clone(&self.backend),
+        )?;
+        let report = self.engine.run_streaming(Arc::new(job), checkpoint_every)?;
+        Ok((report.output, report.metrics))
+    }
+
+    /// CF variant of [`Workbench::run_knn_streaming`]. Trace accuracy
+    /// is negative RMSE (higher is better).
+    pub fn run_cf_streaming(
+        &self,
+        mode: ProcessingMode,
+        checkpoint_every: usize,
+    ) -> Result<(CfOutput, JobMetrics)> {
+        let job = CfJob::new(
+            CfConfig {
+                n_partitions: self.config.cf_partitions,
+                mode,
+                seed: self.config.seed,
+                ..Default::default()
+            },
+            Arc::clone(&self.cf_split),
+            Arc::clone(&self.backend),
+        )?;
+        let report = self.engine.run_streaming(Arc::new(job), checkpoint_every)?;
+        Ok((report.output, report.metrics))
+    }
+
     /// Sampling run whose simulated time matches `target_sim_s` (the
     /// §IV-C protocol: "the same job execution times are permitted").
     /// Calibrates the keep-ratio from the exact run's time, with one
@@ -317,6 +363,21 @@ mod tests {
             samp.sim_time_s,
             exact.sim_time_s
         );
+    }
+
+    #[test]
+    fn streaming_runs_produce_traces() {
+        let wb = Workbench::preset(Scale::Small).unwrap();
+        let mode = ProcessingMode::AccurateML {
+            compression_ratio: 10.0,
+            refinement_threshold: 0.05,
+        };
+        let (out, metrics) = wb.run_knn_streaming(mode, 5, 0).unwrap();
+        assert!(out.accuracy > 0.5, "streamed knn accuracy {}", out.accuracy);
+        assert!(metrics.trace.len() >= 2, "trace: {:?}", metrics.trace);
+        let (cf, cfm) = wb.run_cf_streaming(mode, 0).unwrap();
+        assert!(cf.rmse > 0.0);
+        assert!(cfm.trace.len() >= 2);
     }
 
     #[test]

@@ -313,7 +313,8 @@ mod tests {
 
     #[test]
     fn user_mean_and_centering() {
-        let m = RatingMatrix::from_triplets(2, 4, &[(0, 0, 5.0), (0, 2, 3.0), (1, 1, 2.0)]).unwrap();
+        let m =
+            RatingMatrix::from_triplets(2, 4, &[(0, 0, 5.0), (0, 2, 3.0), (1, 1, 2.0)]).unwrap();
         assert_eq!(m.user_mean(0), 4.0);
         let (c, mean) = m.centered_row(0);
         assert_eq!(mean, 4.0);

@@ -1,47 +1,73 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled: `thiserror` is not in the offline registry, so the enum
+//! carries manual `Display`, `std::error::Error` and `From` impls.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for the AccurateML library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// I/O failures (dataset files, artifact files).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// JSON parse errors from [`crate::util::json`].
-    #[error("json error at byte {offset}: {msg}")]
     Json { offset: usize, msg: String },
 
     /// Artifact manifest problems (missing artifact, shape mismatch).
-    #[error("manifest error: {0}")]
     Manifest(String),
 
-    /// PJRT/XLA failures surfaced by the `xla` crate.
-    #[error("xla error: {0}")]
+    /// PJRT/XLA failures surfaced by the device service.
     Xla(String),
 
     /// The PJRT service thread is gone or rejected a request.
-    #[error("runtime service error: {0}")]
     Service(String),
 
     /// Configuration / CLI problems.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Shape or dimension mismatches in numeric code.
-    #[error("shape error: {0}")]
     Shape(String),
 
     /// Dataset construction / validation problems.
-    #[error("data error: {0}")]
     Data(String),
 
     /// MapReduce engine failures (worker panic, empty job, ...).
-    #[error("engine error: {0}")]
     Engine(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Json { offset, msg } => write!(f, "json error at byte {offset}: {msg}"),
+            Error::Manifest(m) => write!(f, "manifest error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Service(m) => write!(f, "runtime service error: {m}"),
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Shape(m) => write!(f, "shape error: {m}"),
+            Error::Data(m) => write!(f, "data error: {m}"),
+            Error::Engine(m) => write!(f, "engine error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -50,3 +76,29 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_category_and_payload() {
+        assert_eq!(Error::Engine("boom".into()).to_string(), "engine error: boom");
+        assert_eq!(
+            Error::Json {
+                offset: 7,
+                msg: "bad".into()
+            }
+            .to_string(),
+            "json error at byte 7: bad"
+        );
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = io.into();
+        assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -126,11 +126,15 @@ fn cmd_run(argv: &[String]) -> accurateml::Result<()> {
             .opt("ratio", "10", "compression ratio (accurateml)")
             .opt("eps", "0.05", "refinement threshold (accurateml)")
             .opt("sample-ratio", "0.1", "keep ratio (sampling)")
-            .opt("k", "5", "k for kNN"),
+            .opt("k", "5", "k for kNN")
+            .flag("streaming", "pipelined two-stage engine; prints the accuracy/time trace"),
     );
     let args = cmd.parse(argv)?;
     let wb = workbench(&args)?;
     let mode = parse_mode(&args)?;
+    if args.is_set("streaming") {
+        return run_streaming(&wb, &args, mode);
+    }
     let (exact, run, lower) = match args.get("app") {
         "knn" => {
             let k = args.get_usize("k")?;
@@ -143,12 +147,13 @@ fn cmd_run(argv: &[String]) -> accurateml::Result<()> {
             )))
         }
     };
-    let t = results_table(
-        &format!("{} on {:?} scale ({} backend)", args.get("app"), wb.config.scale, wb.backend.name()),
-        &exact,
-        &[run.clone()],
-        lower,
+    let title = format!(
+        "{} on {:?} scale ({} backend)",
+        args.get("app"),
+        wb.config.scale,
+        wb.backend.name()
     );
+    let t = results_table(&title, &exact, &[run.clone()], lower);
     print!("{}", t.console());
     // Fig.-4-style mean map-task breakdown.
     let mt = &run.mean_task;
@@ -163,6 +168,47 @@ fn cmd_run(argv: &[String]) -> accurateml::Result<()> {
         et * 1e3,
         mt.compute_s() / et.max(1e-12) * 100.0
     );
+    Ok(())
+}
+
+fn run_streaming(
+    wb: &Workbench,
+    args: &accurateml::util::cli::Args,
+    mode: ProcessingMode,
+) -> accurateml::Result<()> {
+    let (label, metric, trace) = match args.get("app") {
+        "knn" => {
+            let k = args.get_usize("k")?;
+            let (out, metrics) = wb.run_knn_streaming(mode, k, 1)?;
+            ("accuracy", out.accuracy, metrics.trace)
+        }
+        "cf" => {
+            let (out, metrics) = wb.run_cf_streaming(mode, 1)?;
+            ("rmse", out.rmse, metrics.trace)
+        }
+        other => {
+            return Err(accurateml::Error::Config(format!(
+                "unknown app {other:?} (knn|cf)"
+            )))
+        }
+    };
+    println!(
+        "streaming {} run ({} backend): final {label} {metric:.4}",
+        args.get("app"),
+        wb.backend.name()
+    );
+    if args.get("app") == "cf" {
+        println!("  (trace accuracy is higher-is-better: negative RMSE)");
+    }
+    for (i, p) in trace.iter().enumerate() {
+        println!(
+            "  checkpoint {i}: refined {}/{} partitions  wall {:.4}s  accuracy {:.4}",
+            p.refined_partitions,
+            p.refined_partitions + p.pending_refinements,
+            p.wall_s,
+            p.accuracy
+        );
+    }
     Ok(())
 }
 

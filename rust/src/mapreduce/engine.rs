@@ -1,14 +1,22 @@
 //! The engine: run a [`MapReduceJob`] over a worker pool with shuffle
 //! accounting.
 //!
-//! `run` executes every map task on the pool, collects outputs in
-//! partition order, accounts shuffle bytes/records, runs reduce on the
-//! caller thread and returns the output together with [`JobMetrics`].
+//! Two execution modes:
+//!
+//! * [`Engine::run`] — the barrier mode: every map task completes, then
+//!   reduce runs on the caller thread.
+//! * [`Engine::run_streaming`] — the pipelined two-stage mode for
+//!   [`TwoStageJob`]s: stage-1 (aggregated pass) outputs stream back to
+//!   the caller in *completion order* over a channel, each partition's
+//!   stage-2 (refinement) task is scheduled the moment its stage-1
+//!   lands, and the evolving result is checkpointed into
+//!   [`JobMetrics::trace`] — the paper's fast-initial-output-then-
+//!   refine loop with no barrier between the stages.
 
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::error::{Error, Result};
-use crate::mapreduce::metrics::{JobMetrics, TaskMetrics};
+use crate::mapreduce::metrics::{JobMetrics, TaskMetrics, TracePoint};
 use crate::util::pool::WorkerPool;
 use crate::util::timer::Stopwatch;
 
@@ -37,6 +45,44 @@ pub trait MapReduceJob: Send + Sync + 'static {
 
     /// Reduce all map outputs (in partition order) to the final result.
     fn reduce(&self, outs: Vec<Self::MapOut>) -> Self::Output;
+}
+
+/// The two-stage streaming extension of [`MapReduceJob`] — Algorithm
+/// 1's shape lifted to the engine level. Stage 1 is the fast pass over
+/// aggregated data producing the *initial* output; stage 2 turns the
+/// stage-1 carry into a refined *replacement* output for the same
+/// partition. [`Engine::run_streaming`] overlaps the two stages across
+/// partitions with no barrier.
+pub trait TwoStageJob: MapReduceJob {
+    /// State handed from a partition's stage-1 task to its stage-2 task
+    /// (the aggregation, correlations and refinement plan).
+    type Carry: Send + 'static;
+
+    /// Fast initial pass over the partition. A `None` carry means the
+    /// partition needs no refinement (exact/sampling modes) and its
+    /// stage-1 output is final.
+    fn stage1(
+        &self,
+        part_id: usize,
+        metrics: &mut TaskMetrics,
+    ) -> (Self::MapOut, Option<Self::Carry>);
+
+    /// Refinement pass: the replacement output for the partition.
+    fn stage2(
+        &self,
+        part_id: usize,
+        carry: Self::Carry,
+        metrics: &mut TaskMetrics,
+    ) -> Self::MapOut;
+
+    /// Reduce without consuming the outputs — trace checkpoints
+    /// re-reduce the evolving per-partition set mid-flight.
+    fn reduce_ref(&self, outs: &[Self::MapOut]) -> Self::Output;
+
+    /// Higher-is-better accuracy of an output, recorded per checkpoint
+    /// (kNN: classification accuracy; CF: negative RMSE; k-means:
+    /// negative inertia).
+    fn evaluate(&self, output: &Self::Output) -> f64;
 }
 
 /// Output + metrics from one job run.
@@ -128,7 +174,10 @@ impl Engine {
                     )));
                 }
                 attempt += 1;
-                log::warn!("retrying {} failed map task(s), attempt {attempt}", pending.len());
+                crate::log_warn!(
+                    "retrying {} failed map task(s), attempt {attempt}",
+                    pending.len()
+                );
             }
         }
         let map_wall_s = map_sw.elapsed_s();
@@ -167,8 +216,176 @@ impl Engine {
                 reduce_wall_s,
                 shuffle_bytes,
                 shuffle_records,
+                trace: Vec::new(),
             },
         })
+    }
+
+    /// Run a [`TwoStageJob`] in pipelined streaming mode.
+    ///
+    /// All stage-1 tasks go to the pool up front via
+    /// [`WorkerPool::stream`]; their outputs arrive on a
+    /// completion-order channel and each partition's stage-2 refinement
+    /// task is submitted the moment its stage-1 output lands
+    /// ([`WorkerPool::stream_into`]) — stage 2 of early partitions
+    /// executes while stage 1 of late ones is still running. Once every
+    /// initial output has landed, the first [`TracePoint`] is recorded:
+    /// the job's *initial result*, evaluated on stage-1 outputs only
+    /// (deterministic — refinements that already finished are buffered
+    /// in the channel, not yet folded) while refinement tasks are still
+    /// in flight. Refinements then fold in completion order;
+    /// `checkpoint_every > 0` records a checkpoint after that many
+    /// folds, and the final reduce always appends a closing checkpoint.
+    ///
+    /// Checkpoint evaluation (`reduce_ref` + `evaluate`) runs on the
+    /// caller thread between folds — size `checkpoint_every` to the
+    /// reduce cost. Shuffle accounting covers both stages (a real
+    /// deployment ships the initial outputs *and* the refinements). A
+    /// panic in either stage fails the job with an error after draining
+    /// in-flight tasks — it never hangs the pool.
+    pub fn run_streaming<J: TwoStageJob>(
+        &self,
+        job: Arc<J>,
+        checkpoint_every: usize,
+    ) -> Result<JobReport<J::Output>> {
+        let n = job.n_partitions();
+        if n == 0 {
+            return Err(Error::Engine("job has zero partitions".into()));
+        }
+        let sw = Stopwatch::new();
+
+        // Stage 1: all partitions, results in completion order.
+        let rx1 = self.pool.stream(n, |part| {
+            let job = Arc::clone(&job);
+            move || {
+                let mut tm = TaskMetrics::default();
+                let (out, carry) = job.stage1(part, &mut tm);
+                (out, carry, tm)
+            }
+        });
+
+        let mut slots: Vec<Option<J::MapOut>> = (0..n).map(|_| None).collect();
+        let mut tasks: Vec<TaskMetrics> = vec![TaskMetrics::default(); n];
+        let mut trace: Vec<TracePoint> = Vec::new();
+        let (mut shuffle_bytes, mut shuffle_records) = (0u64, 0u64);
+        let mut stage2_submitted = 0usize;
+        let mut failure: Option<Error> = None;
+
+        let (tx2, rx2) = mpsc::channel();
+        for (part, result) in rx1 {
+            match result {
+                Ok((out, carry, tm)) => {
+                    tasks[part].add(&tm);
+                    let bytes = job.shuffle_bytes(&out);
+                    let records = job.shuffle_records(&out);
+                    tasks[part].bytes_out += bytes;
+                    tasks[part].records_out += records;
+                    shuffle_bytes += bytes;
+                    shuffle_records += records;
+                    slots[part] = Some(out);
+                    if failure.is_none() {
+                        if let Some(carry) = carry {
+                            // Schedule this partition's refinement now —
+                            // it overlaps later partitions' stage 1.
+                            stage2_submitted += 1;
+                            let job = Arc::clone(&job);
+                            self.pool.stream_into(&tx2, part, move || {
+                                let mut tm = TaskMetrics::default();
+                                let out = job.stage2(part, carry, &mut tm);
+                                (out, tm)
+                            });
+                        }
+                    }
+                }
+                Err(_) => {
+                    failure.get_or_insert_with(|| {
+                        Error::Engine(format!("stage-1 task for partition {part} panicked"))
+                    });
+                }
+            }
+        }
+        drop(tx2);
+
+        if failure.is_none() {
+            // The initial result: every partition's stage-1 output, with
+            // all refinement tasks submitted but none folded yet.
+            let current: Vec<J::MapOut> = slots
+                .iter_mut()
+                .map(|s| s.take().expect("stage-1 output missing"))
+                .collect();
+            let accuracy = job.evaluate(&job.reduce_ref(&current));
+            trace.push(TracePoint {
+                refined_partitions: 0,
+                pending_refinements: stage2_submitted,
+                wall_s: sw.elapsed_s(),
+                accuracy,
+            });
+
+            // Stage 2: fold refinements in completion order.
+            let mut current = current;
+            let mut applied = 0usize;
+            for (part, result) in &rx2 {
+                match result {
+                    Ok((out, tm)) => {
+                        tasks[part].add(&tm);
+                        let bytes = job.shuffle_bytes(&out);
+                        let records = job.shuffle_records(&out);
+                        tasks[part].bytes_out += bytes;
+                        tasks[part].records_out += records;
+                        shuffle_bytes += bytes;
+                        shuffle_records += records;
+                        current[part] = out;
+                        applied += 1;
+                        let checkpoint = checkpoint_every > 0
+                            && applied % checkpoint_every == 0
+                            && applied < stage2_submitted;
+                        if checkpoint {
+                            let accuracy = job.evaluate(&job.reduce_ref(&current));
+                            trace.push(TracePoint {
+                                refined_partitions: applied,
+                                pending_refinements: stage2_submitted - applied,
+                                wall_s: sw.elapsed_s(),
+                                accuracy,
+                            });
+                        }
+                    }
+                    Err(_) => {
+                        failure.get_or_insert_with(|| {
+                            Error::Engine(format!("stage-2 task for partition {part} panicked"))
+                        });
+                    }
+                }
+            }
+            if failure.is_none() {
+                let map_wall_s = sw.elapsed_s();
+                let red_sw = Stopwatch::new();
+                let output = job.reduce_ref(&current);
+                let reduce_wall_s = red_sw.elapsed_s();
+                trace.push(TracePoint {
+                    refined_partitions: applied,
+                    pending_refinements: 0,
+                    wall_s: sw.elapsed_s(),
+                    accuracy: job.evaluate(&output),
+                });
+                return Ok(JobReport {
+                    output,
+                    metrics: JobMetrics {
+                        tasks,
+                        map_wall_s,
+                        reduce_wall_s,
+                        shuffle_bytes,
+                        shuffle_records,
+                        trace,
+                    },
+                });
+            }
+        } else {
+            // Stage-1 failure: drain whatever stage-2 tasks were already
+            // submitted so the pool is clean before reporting.
+            for _ in &rx2 {}
+        }
+
+        Err(failure.unwrap_or_else(|| Error::Engine("streaming run failed".into())))
     }
 }
 
@@ -331,6 +548,23 @@ mod retry_tests {
     }
 
     #[test]
+    fn shuffle_accounting_sums_across_partitions() {
+        let engine = Engine::new(3);
+        let job = Arc::new(SquareJob {
+            ranges: vec![(0, 10), (10, 30), (30, 35)],
+        });
+        let report = engine.run(job).unwrap();
+        let per_task: Vec<u64> = report.metrics.tasks.iter().map(|t| t.records_out).collect();
+        assert_eq!(per_task, vec![10, 20, 5]);
+        assert_eq!(report.metrics.shuffle_records, 35);
+        assert_eq!(report.metrics.shuffle_bytes, 35 * 8);
+        assert_eq!(
+            report.metrics.tasks.iter().map(|t| t.bytes_out).sum::<u64>(),
+            report.metrics.shuffle_bytes
+        );
+    }
+
+    #[test]
     fn exhausted_retries_error_lists_partitions() {
         struct AlwaysBad;
         impl MapReduceJob for AlwaysBad {
@@ -355,5 +589,192 @@ mod retry_tests {
         let engine = Engine::new(2);
         let err = engine.run_with_retries(Arc::new(AlwaysBad), 2).unwrap_err();
         assert!(err.to_string().contains("[1]"), "{err}");
+    }
+}
+
+#[cfg(test)]
+mod streaming_tests {
+    use super::*;
+    use std::time::Duration;
+
+    /// Toy two-stage job: stage 1 emits 0 (coarse), stage 2 replaces it
+    /// with 1 (refined). The metric — the refined fraction — is
+    /// strictly non-decreasing, so the trace must be monotone.
+    struct RefineJob {
+        n: usize,
+        delay_us: u64,
+        panic_stage2_part: Option<usize>,
+    }
+
+    impl MapReduceJob for RefineJob {
+        type MapOut = u32;
+        type Output = f64;
+
+        fn n_partitions(&self) -> usize {
+            self.n
+        }
+
+        fn map(&self, part_id: usize, metrics: &mut TaskMetrics) -> u32 {
+            match self.stage1(part_id, metrics) {
+                (out, None) => out,
+                (_, Some(carry)) => self.stage2(part_id, carry, metrics),
+            }
+        }
+
+        fn shuffle_bytes(&self, _out: &u32) -> u64 {
+            4
+        }
+
+        fn shuffle_records(&self, _out: &u32) -> u64 {
+            1
+        }
+
+        fn reduce(&self, outs: Vec<u32>) -> f64 {
+            self.reduce_ref(&outs)
+        }
+    }
+
+    impl TwoStageJob for RefineJob {
+        type Carry = ();
+
+        fn stage1(&self, part_id: usize, _m: &mut TaskMetrics) -> (u32, Option<()>) {
+            // Stagger so completion order differs from partition order.
+            std::thread::sleep(Duration::from_micros(
+                self.delay_us * (part_id as u64 % 4 + 1),
+            ));
+            (0, Some(()))
+        }
+
+        fn stage2(&self, part_id: usize, _carry: (), _m: &mut TaskMetrics) -> u32 {
+            if self.panic_stage2_part == Some(part_id) {
+                panic!("injected stage-2 fault");
+            }
+            std::thread::sleep(Duration::from_micros(self.delay_us));
+            1
+        }
+
+        fn reduce_ref(&self, outs: &[u32]) -> f64 {
+            outs.iter().map(|&x| x as f64).sum::<f64>() / outs.len().max(1) as f64
+        }
+
+        fn evaluate(&self, output: &f64) -> f64 {
+            *output
+        }
+    }
+
+    #[test]
+    fn streaming_emits_initial_result_before_refinement_finishes() {
+        let engine = Engine::new(4);
+        let job = Arc::new(RefineJob {
+            n: 8,
+            delay_us: 200,
+            panic_stage2_part: None,
+        });
+        let report = engine.run_streaming(job, 1).unwrap();
+        assert!((report.output - 1.0).abs() < 1e-12, "all partitions refined");
+
+        let trace = &report.metrics.trace;
+        assert!(trace.len() >= 2, "trace: {trace:?}");
+        assert!(
+            trace[0].pending_refinements > 0,
+            "initial checkpoint must precede refinement completion: {trace:?}"
+        );
+        for w in trace.windows(2) {
+            assert!(w[1].accuracy >= w[0].accuracy, "trace not monotone: {trace:?}");
+        }
+        assert_eq!(trace.last().unwrap().refined_partitions, 8);
+        assert_eq!(trace.last().unwrap().pending_refinements, 0);
+
+        // Both stages are shuffle-accounted: 8 initial + 8 refined.
+        assert_eq!(report.metrics.shuffle_records, 16);
+        assert_eq!(report.metrics.shuffle_bytes, 64);
+        assert_eq!(report.metrics.tasks.len(), 8);
+    }
+
+    #[test]
+    fn streaming_without_carries_matches_batch() {
+        /// Stage-1-only job (exact mode shape): no carries, trace has
+        /// the initial and final checkpoints at the same accuracy.
+        struct FlatJob;
+        impl MapReduceJob for FlatJob {
+            type MapOut = u64;
+            type Output = u64;
+            fn n_partitions(&self) -> usize {
+                5
+            }
+            fn map(&self, part_id: usize, m: &mut TaskMetrics) -> u64 {
+                self.stage1(part_id, m).0
+            }
+            fn shuffle_bytes(&self, _o: &u64) -> u64 {
+                8
+            }
+            fn shuffle_records(&self, _o: &u64) -> u64 {
+                1
+            }
+            fn reduce(&self, outs: Vec<u64>) -> u64 {
+                self.reduce_ref(&outs)
+            }
+        }
+        impl TwoStageJob for FlatJob {
+            type Carry = ();
+            fn stage1(&self, part_id: usize, _m: &mut TaskMetrics) -> (u64, Option<()>) {
+                (part_id as u64 * 10, None)
+            }
+            fn stage2(&self, _p: usize, _c: (), _m: &mut TaskMetrics) -> u64 {
+                unreachable!("no carries were produced")
+            }
+            fn reduce_ref(&self, outs: &[u64]) -> u64 {
+                outs.iter().sum()
+            }
+            fn evaluate(&self, output: &u64) -> f64 {
+                *output as f64
+            }
+        }
+
+        let engine = Engine::new(2);
+        let streamed = engine.run_streaming(Arc::new(FlatJob), 1).unwrap();
+        let batch = engine.run(Arc::new(FlatJob)).unwrap();
+        assert_eq!(streamed.output, batch.output);
+        let trace = &streamed.metrics.trace;
+        assert_eq!(trace.len(), 2);
+        assert_eq!(trace[0].pending_refinements, 0);
+        assert_eq!(trace[0].accuracy, trace[1].accuracy);
+    }
+
+    #[test]
+    fn streaming_stage2_panic_fails_job_without_hanging() {
+        let engine = Engine::new(2);
+        let job = Arc::new(RefineJob {
+            n: 6,
+            delay_us: 50,
+            panic_stage2_part: Some(3),
+        });
+        let err = engine.run_streaming(job, 0).unwrap_err();
+        assert!(err.to_string().contains("stage-2"), "{err}");
+        assert!(err.to_string().contains("panicked"), "{err}");
+
+        // The engine (and its pool) stays usable afterwards.
+        let ok = engine
+            .run_streaming(
+                Arc::new(RefineJob {
+                    n: 4,
+                    delay_us: 10,
+                    panic_stage2_part: None,
+                }),
+                0,
+            )
+            .unwrap();
+        assert!((ok.output - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn streaming_rejects_zero_partitions() {
+        let engine = Engine::new(2);
+        let job = Arc::new(RefineJob {
+            n: 0,
+            delay_us: 0,
+            panic_stage2_part: None,
+        });
+        assert!(engine.run_streaming(job, 0).is_err());
     }
 }

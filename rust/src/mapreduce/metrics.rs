@@ -56,6 +56,27 @@ impl TaskMetrics {
     }
 }
 
+/// One accuracy/time checkpoint emitted by a streaming run
+/// ([`crate::mapreduce::engine::Engine::run_streaming`]).
+///
+/// The first checkpoint is taken the moment every partition has
+/// delivered its stage-1 (initial) output — refinement tasks are still
+/// in flight at that point, which is the overlap the paper's two-stage
+/// design buys. Subsequent checkpoints track refinement progress.
+#[derive(Clone, Debug)]
+pub struct TracePoint {
+    /// Stage-2 refinement tasks folded into the result so far.
+    pub refined_partitions: usize,
+    /// Stage-2 tasks submitted but not yet folded when this was taken.
+    pub pending_refinements: usize,
+    /// Wall-clock seconds since the job started.
+    pub wall_s: f64,
+    /// Job-defined accuracy of the current reduce, higher is better
+    /// (kNN: classification accuracy; CF: negative RMSE; k-means:
+    /// negative inertia).
+    pub accuracy: f64,
+}
+
 /// Aggregated metrics for one job run.
 #[derive(Clone, Debug, Default)]
 pub struct JobMetrics {
@@ -69,6 +90,9 @@ pub struct JobMetrics {
     pub shuffle_bytes: u64,
     /// Total shuffle records.
     pub shuffle_records: u64,
+    /// Accuracy/time checkpoints (streaming runs only; empty for
+    /// barrier runs).
+    pub trace: Vec<TracePoint>,
 }
 
 impl JobMetrics {

@@ -2,7 +2,11 @@
 //! (a Spark cluster) rebuilt as an in-process engine.
 //!
 //! A job is partitions → map tasks (run on a worker pool) → shuffle
-//! (byte-accounted) → reduce. Two clocks are kept:
+//! (byte-accounted) → reduce. [`TwoStageJob`]s can additionally run on
+//! the pipelined streaming path ([`engine::Engine::run_streaming`]):
+//! initial outputs land first, refinements stream in behind them, and
+//! the accuracy/time trajectory is recorded as [`TracePoint`]s. Two
+//! clocks are kept:
 //!
 //! * **measured** wall time on this machine, used for relative
 //!   comparisons between processing modes (who wins and by how much);
@@ -16,5 +20,5 @@ pub mod engine;
 pub mod metrics;
 
 pub use cost::ClusterModel;
-pub use engine::{Engine, JobReport, MapReduceJob};
-pub use metrics::{JobMetrics, TaskMetrics};
+pub use engine::{Engine, JobReport, MapReduceJob, TwoStageJob};
+pub use metrics::{JobMetrics, TaskMetrics, TracePoint};

@@ -6,13 +6,23 @@
 //! mpsc channel and block on a rendezvous reply channel. Executables are
 //! compiled lazily on first use and cached for the life of the service —
 //! compilation happens once per artifact per process, never per task.
+//!
+//! The device thread's implementation is gated behind the `xla` cargo
+//! feature (the `xla` crate is not vendored in this offline workspace).
+//! Without it, [`PjrtService::start`] returns a runtime error and every
+//! caller — the `auto`/`pjrt` backends, `accurateml check` — degrades
+//! to the native backend. The [`Tensor`] plumbing stays available so
+//! backend code compiles identically either way.
 
+#[cfg(feature = "xla")]
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::mpsc;
 
 use crate::error::{Error, Result};
-use crate::runtime::manifest::{DType, Manifest};
+#[cfg(feature = "xla")]
+use crate::runtime::manifest::DType;
+use crate::runtime::manifest::Manifest;
 
 /// Raw buffer of one tensor crossing the service boundary.
 #[derive(Clone, Debug)]
@@ -102,9 +112,16 @@ pub struct PjrtService {
 
 impl PjrtService {
     /// Start the service: loads the manifest, spawns the device thread,
-    /// creates the PJRT CPU client inside it.
+    /// creates the PJRT CPU client inside it. Without the `xla` feature
+    /// this errors after the manifest check so callers fall back to the
+    /// native backend.
     pub fn start(artifact_dir: &Path) -> Result<PjrtService> {
         let manifest = Manifest::load(artifact_dir)?;
+        Self::start_with_manifest(manifest)
+    }
+
+    #[cfg(feature = "xla")]
+    fn start_with_manifest(manifest: Manifest) -> Result<PjrtService> {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::sync_channel::<Result<()>>(1);
         let thread_manifest = manifest.clone();
@@ -120,6 +137,14 @@ impl PjrtService {
             manifest,
             handle: Some(handle),
         })
+    }
+
+    #[cfg(not(feature = "xla"))]
+    fn start_with_manifest(_manifest: Manifest) -> Result<PjrtService> {
+        Err(Error::Service(
+            "PJRT backend unavailable: built without the `xla` feature (see rust/README.md)"
+                .into(),
+        ))
     }
 
     /// The manifest the service was started with.
@@ -178,6 +203,7 @@ impl Drop for PjrtService {
 }
 
 /// Body of the device thread: owns the client and the executable cache.
+#[cfg(feature = "xla")]
 fn device_thread(
     manifest: Manifest,
     rx: mpsc::Receiver<Request>,
@@ -217,6 +243,7 @@ fn device_thread(
     }
 }
 
+#[cfg(feature = "xla")]
 fn ensure_compiled<'c>(
     client: &xla::PjRtClient,
     manifest: &Manifest,
@@ -237,6 +264,7 @@ fn ensure_compiled<'c>(
     Ok(cache.get(artifact).unwrap())
 }
 
+#[cfg(feature = "xla")]
 fn run_executable(
     manifest: &Manifest,
     artifact: &str,
@@ -303,4 +331,26 @@ fn run_executable(
         });
     }
     Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn start_requires_a_manifest() {
+        // With or without the `xla` feature, a missing manifest is the
+        // first failure a caller sees.
+        let err = PjrtService::start(Path::new("/nonexistent-artifacts")).unwrap_err();
+        assert!(err.to_string().contains("manifest"), "{err}");
+    }
+
+    #[test]
+    fn tensor_accessors() {
+        let t = Tensor::f32(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]);
+        assert_eq!(t.len(), 4);
+        assert!(!t.is_empty());
+        assert_eq!(t.data.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert!(t.data.as_i32().is_err());
+    }
 }

@@ -109,11 +109,9 @@ impl Command {
                     Some((k, v)) => (k.to_string(), Some(v.to_string())),
                     None => (body.to_string(), None),
                 };
-                let spec = self
-                    .opts
-                    .iter()
-                    .find(|o| o.name == key)
-                    .ok_or_else(|| Error::Config(format!("unknown option --{key}\n\n{}", self.help())))?;
+                let spec = self.opts.iter().find(|o| o.name == key).ok_or_else(|| {
+                    Error::Config(format!("unknown option --{key}\n\n{}", self.help()))
+                })?;
                 if spec.is_flag {
                     if inline_val.is_some() {
                         return Err(Error::Config(format!("--{key} takes no value")));

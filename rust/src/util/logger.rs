@@ -1,63 +1,138 @@
-//! Minimal `log` facade backend (env_logger is not in the offline
-//! registry). Level comes from `AML_LOG` (error|warn|info|debug|trace,
-//! default warn); output goes to stderr with a monotonic timestamp.
+//! Minimal logging facade (the `log` / `env_logger` crates are not in
+//! the offline registry). Level comes from `AML_LOG`
+//! (`error|warn|info|debug|trace|off`, default `warn`); output goes to
+//! stderr with a monotonic timestamp.
+//!
+//! Call sites use the crate-level macros: `crate::log_warn!("...")`,
+//! `crate::log_info!("...")`, etc.
 
+use std::fmt;
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::OnceLock;
 use std::time::Instant;
 
-use log::{Level, LevelFilter, Metadata, Record};
-
-struct StderrLogger {
-    start: Instant,
+/// Log severity. Numeric values order verbosity: a message is emitted
+/// when its level value is <= the configured maximum.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Level {
+    Error = 1,
+    Warn = 2,
+    Info = 3,
+    Debug = 4,
+    Trace = 5,
 }
 
-static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+/// Configured maximum level (0 = off). Defaults to `Warn` so logging
+/// works even when [`init`] was never called.
+static MAX_LEVEL: AtomicU8 = AtomicU8::new(Level::Warn as u8);
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, _metadata: &Metadata) -> bool {
-        true
-    }
+/// Process-relative clock for log timestamps.
+static START: OnceLock<Instant> = OnceLock::new();
 
-    fn log(&self, record: &Record) {
-        if self.enabled(record.metadata()) {
-            let t = self.start.elapsed().as_secs_f64();
-            let lvl = match record.level() {
-                Level::Error => "ERROR",
-                Level::Warn => "WARN ",
-                Level::Info => "INFO ",
-                Level::Debug => "DEBUG",
-                Level::Trace => "TRACE",
-            };
-            eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
-        }
-    }
-
-    fn flush(&self) {}
-}
-
-/// Install the logger (idempotent). Call once from binary entrypoints.
+/// Install the logger configuration from `AML_LOG` (idempotent). Call
+/// once from binary entrypoints.
 pub fn init() {
     let level = match std::env::var("AML_LOG").as_deref() {
-        Ok("error") => LevelFilter::Error,
-        Ok("info") => LevelFilter::Info,
-        Ok("debug") => LevelFilter::Debug,
-        Ok("trace") => LevelFilter::Trace,
-        Ok("off") => LevelFilter::Off,
-        _ => LevelFilter::Warn,
+        Ok("off") => 0,
+        Ok("error") => Level::Error as u8,
+        Ok("info") => Level::Info as u8,
+        Ok("debug") => Level::Debug as u8,
+        Ok("trace") => Level::Trace as u8,
+        _ => Level::Warn as u8,
     };
-    let logger = LOGGER.get_or_init(|| StderrLogger {
-        start: Instant::now(),
-    });
-    let _ = log::set_logger(logger);
-    log::set_max_level(level);
+    START.get_or_init(Instant::now);
+    MAX_LEVEL.store(level, Ordering::Relaxed);
+}
+
+/// Whether a message at `level` would be emitted.
+pub fn enabled(level: Level) -> bool {
+    level as u8 <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record. Prefer the `log_*` macros, which fill in the
+/// module path and handle formatting lazily.
+pub fn log(level: Level, target: &str, args: fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    let lvl = match level {
+        Level::Error => "ERROR",
+        Level::Warn => "WARN ",
+        Level::Info => "INFO ",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[{t:9.3}s {lvl} {target}] {args}");
+}
+
+/// Log at error level.
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at warn level.
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at info level.
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+/// Log at debug level.
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
         super::init();
         super::init();
-        log::warn!("logger smoke test");
+        crate::log_warn!("logger smoke test");
+    }
+
+    #[test]
+    fn level_gating_orders_severities() {
+        // Default (or post-init without AML_LOG) is warn: errors and
+        // warnings pass, info and below are filtered.
+        super::init();
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Trace));
     }
 }

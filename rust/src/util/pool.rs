@@ -8,7 +8,11 @@
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+/// One streamed task result: the task's index plus either its value or
+/// the panic payload (see [`WorkerPool::stream`]).
+pub type StreamResult<T> = (usize, std::thread::Result<T>);
 
 type Task = Box<dyn FnOnce() + Send + 'static>;
 
@@ -118,6 +122,44 @@ impl WorkerPool {
         }
         self.wait_idle();
     }
+
+    /// Run `n` indexed tasks and stream each result back in *completion*
+    /// order — no barrier. The receiver yields `(index, Ok(value))` as
+    /// each task finishes, so a consumer can overlap downstream work
+    /// with still-running tasks; a panicking task yields
+    /// `(index, Err(payload))` so the consumer fails fast instead of
+    /// hanging. The channel closes once every task has reported.
+    ///
+    /// Panics are caught inside the streamed task itself, so they do not
+    /// poison the pool's [`WorkerPool::wait_idle`] accounting — the pool
+    /// stays usable for later `scope`/`stream` calls.
+    pub fn stream<T, F, G>(&self, n: usize, make: G) -> mpsc::Receiver<StreamResult<T>>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+        G: Fn(usize) -> F,
+    {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..n {
+            self.stream_into(&tx, i, make(i));
+        }
+        rx
+    }
+
+    /// Submit one task whose result is streamed to an existing channel
+    /// (the incremental form of [`WorkerPool::stream`], for consumers
+    /// that submit follow-up tasks while draining earlier results).
+    pub fn stream_into<T, F>(&self, tx: &mpsc::Sender<StreamResult<T>>, index: usize, task: F)
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let tx = tx.clone();
+        self.submit(move || {
+            let r = catch_unwind(AssertUnwindSafe(task));
+            let _ = tx.send((index, r));
+        });
+    }
 }
 
 impl Drop for WorkerPool {
@@ -214,5 +256,73 @@ mod tests {
             }
         });
         assert_eq!(sum.load(Ordering::Relaxed), 55);
+    }
+
+    #[test]
+    fn scope_drains_inflight_tasks_before_returning() {
+        // Every task sleeps; if scope returned before the queue drained,
+        // the counter would be short the still-running tasks.
+        let pool = WorkerPool::new(4);
+        let done = Arc::new(AtomicU64::new(0));
+        pool.scope(16, |_| {
+            let d = Arc::clone(&done);
+            move || {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                d.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(done.load(Ordering::SeqCst), 16, "scope returned with tasks in flight");
+    }
+
+    #[test]
+    fn stream_yields_every_task_result() {
+        let pool = WorkerPool::new(4);
+        let rx = pool.stream(16, |i| {
+            move || {
+                // Stagger so completion order differs from submit order.
+                std::thread::sleep(std::time::Duration::from_micros(((16 - i) * 50) as u64));
+                i * 2
+            }
+        });
+        let mut got: Vec<(usize, usize)> = rx
+            .iter()
+            .map(|(i, r)| (i, r.expect("no task panicked")))
+            .collect();
+        assert_eq!(got.len(), 16);
+        got.sort_unstable();
+        for (k, (i, v)) in got.into_iter().enumerate() {
+            assert_eq!((i, v), (k, k * 2));
+        }
+    }
+
+    #[test]
+    fn stream_reports_panics_without_poisoning_the_pool() {
+        let pool = WorkerPool::new(2);
+        let rx = pool.stream(4, |i| {
+            move || {
+                if i == 2 {
+                    panic!("injected stream fault");
+                }
+                i
+            }
+        });
+        let (mut ok, mut failed) = (0, 0);
+        for (_, r) in rx {
+            match r {
+                Ok(_) => ok += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        assert_eq!((ok, failed), (3, 1));
+        // The pool's barrier accounting must be untouched: a later scope
+        // neither panics nor hangs.
+        let count = Arc::new(AtomicU64::new(0));
+        pool.scope(8, |_| {
+            let c = Arc::clone(&count);
+            move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 8);
     }
 }

@@ -102,7 +102,12 @@ pub fn fmt_duration(s: f64) -> String {
 /// Benchmark a closure: `warmup` untimed runs, then timed runs until both
 /// `min_iters` iterations and `min_time` have elapsed (whichever is
 /// later), capped at `max_iters`.
-pub fn bench_fn<F: FnMut()>(mut f: F, warmup: usize, min_iters: usize, min_time: Duration) -> Stats {
+pub fn bench_fn<F: FnMut()>(
+    mut f: F,
+    warmup: usize,
+    min_iters: usize,
+    min_time: Duration,
+) -> Stats {
     for _ in 0..warmup {
         f();
     }

@@ -2,14 +2,42 @@
 //! native backend, checking the paper's qualitative claims hold on the
 //! small preset (the shapes, not the absolute numbers).
 
+use std::sync::Arc;
+
 use accurateml::approx::ProcessingMode;
 use accurateml::apps::cf::predict::rmse_loss;
+use accurateml::apps::cf::{CfConfig, CfJob};
+use accurateml::apps::kmeans::{KmeansConfig, KmeansRunner};
 use accurateml::apps::knn::classify::accuracy_loss;
+use accurateml::apps::knn::{KnnConfig, KnnJob};
 use accurateml::coordinator::sweep::Workbench;
 use accurateml::coordinator::Scale;
+use accurateml::data::gaussian::GaussianMixtureSpec;
+use accurateml::data::ratings::{LatentFactorSpec, RatingsSplit};
+use accurateml::mapreduce::engine::Engine;
+use accurateml::mapreduce::metrics::TracePoint;
+use accurateml::runtime::backend::NativeBackend;
 
 fn wb() -> Workbench {
     Workbench::preset(Scale::Small).expect("workbench")
+}
+
+/// The streaming acceptance shape shared by all three apps: at least
+/// the initial + final checkpoints, the initial one recorded while
+/// refinement tasks were still pending, and accuracy never decreasing.
+fn assert_streaming_trace(trace: &[TracePoint]) {
+    assert!(trace.len() >= 2, "expected >= 2 checkpoints: {trace:?}");
+    assert!(
+        trace[0].pending_refinements > 0,
+        "initial result must land before all refinement tasks finish: {trace:?}"
+    );
+    for w in trace.windows(2) {
+        assert!(
+            w[1].accuracy >= w[0].accuracy,
+            "accuracy decreased along the trace: {trace:?}"
+        );
+    }
+    assert_eq!(trace.last().unwrap().pending_refinements, 0);
 }
 
 #[test]
@@ -169,6 +197,164 @@ fn matched_budget_comparison_favors_accurateml() {
         "mean aml loss {} vs sampling {} ({aml_losses:?} vs {samp_losses:?})",
         mean(&aml_losses),
         mean(&samp_losses)
+    );
+}
+
+#[test]
+fn streaming_knn_initial_result_precedes_refinement() {
+    // Well-separated classes: the exact result is (near-)perfect, so
+    // full refinement (eps = 1) can only match or improve the
+    // aggregated-only initial checkpoint.
+    let data = Arc::new(
+        GaussianMixtureSpec {
+            n_points: 3000,
+            dim: 16,
+            n_classes: 4,
+            noise: 0.1,
+            test_fraction: 0.02,
+            seed: 21,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap(),
+    );
+    let engine = Engine::new(4);
+    let config = KnnConfig {
+        k: 5,
+        n_partitions: 8,
+        mode: ProcessingMode::AccurateML {
+            compression_ratio: 10.0,
+            refinement_threshold: 1.0,
+        },
+        seed: 5,
+        ..Default::default()
+    };
+    let job = KnnJob::new(config.clone(), Arc::clone(&data), Arc::new(NativeBackend)).unwrap();
+    let streamed = engine.run_streaming(Arc::new(job), 0).unwrap();
+    assert_streaming_trace(&streamed.metrics.trace);
+    assert!(
+        streamed.output.accuracy > 0.9,
+        "refined accuracy {}",
+        streamed.output.accuracy
+    );
+
+    // The streamed result must equal the barrier-mode run bit-for-bit:
+    // stage 1 + stage 2 is the same computation, only the scheduling
+    // overlaps.
+    let batch_job = KnnJob::new(config, data, Arc::new(NativeBackend)).unwrap();
+    let batch = engine.run(Arc::new(batch_job)).unwrap();
+    assert_eq!(batch.output.predictions, streamed.output.predictions);
+}
+
+#[test]
+fn streaming_cf_trace_non_decreasing_and_matches_batch() {
+    let ratings = LatentFactorSpec {
+        n_users: 400,
+        n_items: 96,
+        n_factors: 4,
+        mean_ratings_per_user: 24,
+        ..Default::default()
+    }
+    .generate()
+    .unwrap();
+    let split = Arc::new(RatingsSplit::new(&ratings, 20, 0.2, 9).unwrap());
+    let engine = Engine::new(4);
+    // Extreme compression (about one aggregated user per partition)
+    // makes the initial output clearly coarser than the fully refined
+    // one; eps = 1 refines every bucket, recovering the exact scan.
+    let config = CfConfig {
+        n_partitions: 4,
+        mode: ProcessingMode::AccurateML {
+            compression_ratio: 100.0,
+            refinement_threshold: 1.0,
+        },
+        seed: 3,
+        ..Default::default()
+    };
+    let job = CfJob::new(config.clone(), Arc::clone(&split), Arc::new(NativeBackend)).unwrap();
+    let streamed = engine.run_streaming(Arc::new(job), 0).unwrap();
+    assert_streaming_trace(&streamed.metrics.trace);
+
+    let batch_job = CfJob::new(config, Arc::clone(&split), Arc::new(NativeBackend)).unwrap();
+    let batch = engine.run(Arc::new(batch_job)).unwrap();
+    assert_eq!(batch.output.predictions, streamed.output.predictions);
+
+    // eps = 1 refined every bucket, so the result is the exact scan's.
+    let exact_job = CfJob::new(
+        CfConfig {
+            n_partitions: 4,
+            mode: ProcessingMode::Exact,
+            seed: 3,
+            ..Default::default()
+        },
+        split,
+        Arc::new(NativeBackend),
+    )
+    .unwrap();
+    let exact = engine.run(Arc::new(exact_job)).unwrap();
+    assert!(
+        (streamed.output.rmse - exact.output.rmse).abs() < 1e-6,
+        "streamed rmse {} vs exact {}",
+        streamed.output.rmse,
+        exact.output.rmse
+    );
+}
+
+#[test]
+fn streaming_kmeans_initial_then_refined() {
+    let d = GaussianMixtureSpec {
+        n_points: 2000,
+        dim: 8,
+        n_classes: 8,
+        noise: 0.25,
+        test_fraction: 0.01,
+        ..Default::default()
+    }
+    .generate()
+    .unwrap();
+    let pts = Arc::new(d.train);
+    let engine = Engine::new(4);
+    // Very coarse aggregation (a handful of buckets per partition) so
+    // the aggregated-only Lloyd step is clearly worse than the refined
+    // one; eps = 1 re-assigns every bucket point by point.
+    let base = KmeansConfig {
+        n_clusters: 8,
+        n_iterations: 1,
+        n_partitions: 4,
+        mode: ProcessingMode::AccurateML {
+            compression_ratio: 200.0,
+            refinement_threshold: 1.0,
+        },
+        seed: 3,
+        ..Default::default()
+    };
+    let runner = KmeansRunner::new(base.clone(), Arc::clone(&pts)).unwrap();
+    let (streamed, metrics) = runner.run_streaming(&engine, 0).unwrap();
+    assert_streaming_trace(&metrics.trace);
+
+    // Identical arithmetic to the barrier run of the same config.
+    let (batch, _) = KmeansRunner::new(base.clone(), Arc::clone(&pts))
+        .unwrap()
+        .run(&engine)
+        .unwrap();
+    assert!((streamed.inertia - batch.inertia).abs() < 1e-12);
+
+    // And close to the exact Lloyd step (full refinement).
+    let (exact, _) = KmeansRunner::new(
+        KmeansConfig {
+            mode: ProcessingMode::Exact,
+            ..base
+        },
+        pts,
+    )
+    .unwrap()
+    .run(&engine)
+    .unwrap();
+    assert!(
+        (streamed.inertia - exact.inertia).abs() < 1e-3 * exact.inertia,
+        "streamed inertia {} vs exact {}",
+        streamed.inertia,
+        exact.inertia
     );
 }
 
