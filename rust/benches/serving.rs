@@ -1,0 +1,87 @@
+//! Serving throughput: replay synthetic query logs against the sharded
+//! anytime server and report queries/sec plus latency percentiles and
+//! initial-vs-refined accuracy for all three apps. Shards are built
+//! (and k-means centroids trained) *outside* the timed region — the
+//! stopwatch covers steady-state serving only, matching the model
+//! layer's build-once contract.
+//!
+//!     cargo bench --bench serving
+//!
+//! The `bench-smoke` cargo feature shrinks the scale and query count so
+//! CI can *execute* this bench in seconds (compile + run) as a serving
+//! hot-path smoke test:
+//!
+//!     cargo bench --bench serving --features bench-smoke
+
+use accurateml::coordinator::{Scale, Workbench};
+use accurateml::serve::{query_log, RefineBudget, ServeConfig, ServeReport, ShardedServer};
+use accurateml::util::table::{f, Table};
+use accurateml::util::timer::Stopwatch;
+
+/// Smoke mode: small scale, few queries (CI); otherwise default scale.
+const SMOKE: bool = cfg!(feature = "bench-smoke");
+
+fn main() {
+    let scale = if SMOKE { Scale::Small } else { Scale::Default };
+    let n_queries = if SMOKE { 300 } else { 2000 };
+    let wb = Workbench::preset(scale).expect("workbench");
+    let cfg = ServeConfig {
+        batch_size: 64,
+        deadline_s: if SMOKE { 1.0 } else { 0.050 },
+        budget: RefineBudget::Fraction(0.05),
+    };
+
+    let mut t = Table::new(
+        &format!("serving throughput ({scale:?} scale, {n_queries} queries)"),
+        &[
+            "app",
+            "wall_s",
+            "qps",
+            "p50_ms",
+            "p99_ms",
+            "acc_initial",
+            "acc_refined",
+            "misses",
+        ],
+    );
+    let mut row = |app: &str, wall_s: f64, r: &ServeReport| {
+        t.row(vec![
+            app.into(),
+            f(wall_s, 3),
+            f(r.queries as f64 / wall_s.max(1e-9), 1),
+            f(r.total.p50_s * 1e3, 3),
+            f(r.total.p99_s * 1e3, 3),
+            r.initial_accuracy.map(|a| f(a, 4)).unwrap_or_else(|| "-".into()),
+            r.refined_accuracy.map(|a| f(a, 4)).unwrap_or_else(|| "-".into()),
+            r.deadline_misses.to_string(),
+        ]);
+    };
+
+    // kNN: build shards untimed, time the replay.
+    let server = ShardedServer::new(wb.knn_shards(10.0, 5).expect("knn shards")).expect("server");
+    let queries = query_log::knn_query_log(&wb.knn_data, n_queries, wb.config.seed);
+    let sw = Stopwatch::new();
+    let (_, report) = server.serve(&wb.engine, queries, &cfg).expect("serve knn");
+    row("knn", sw.elapsed_s(), &report);
+
+    // CF.
+    let server = ShardedServer::new(wb.cf_shards(10.0).expect("cf shards")).expect("server");
+    let queries = query_log::cf_query_log(&wb.cf_split, n_queries, wb.config.seed);
+    let sw = Stopwatch::new();
+    let (_, report) = server.serve(&wb.engine, queries, &cfg).expect("serve cf");
+    row("cf", sw.elapsed_s(), &report);
+
+    // k-means (training + shard build untimed).
+    let (shards, points) = wb.kmeans_shards(20.0).expect("kmeans shards");
+    let server = ShardedServer::new(shards).expect("server");
+    let queries = query_log::kmeans_query_log(&points, n_queries, wb.config.seed);
+    let sw = Stopwatch::new();
+    let (_, report) = server.serve(&wb.engine, queries, &cfg).expect("serve kmeans");
+    row("kmeans", sw.elapsed_s(), &report);
+
+    print!("{}", t.console());
+    println!(
+        "(accuracy metrics: knn 0/1 correctness; cf negative squared rating error; \
+kmeans negative squared representative distance)"
+    );
+}

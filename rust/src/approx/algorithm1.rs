@@ -231,6 +231,45 @@ mod tests {
     }
 
     #[test]
+    fn stage2_selection_budget_zero() {
+        // ε = 0 is the documented pure-stage-1 escape hatch: no bucket
+        // is selected under either ordering.
+        let corr = vec![0.9, 0.1, 0.5];
+        assert!(stage2_selection(&corr, 0.0, RefineOrder::Correlation, 1).is_empty());
+        assert!(stage2_selection(&corr, 0.0, RefineOrder::Random, 1).is_empty());
+        assert!(stage2_selection(&corr, -0.5, RefineOrder::Correlation, 1).is_empty());
+    }
+
+    #[test]
+    fn stage2_selection_budget_covers_all_buckets() {
+        // ε = 1 (and anything pushing the budget past k) selects every
+        // bucket exactly once, under both orderings.
+        let corr = vec![0.2, 0.8, 0.4, 0.6];
+        for eps in [1.0, 5.0] {
+            let ranked = stage2_selection(&corr, eps, RefineOrder::Correlation, 0);
+            assert_eq!(ranked, vec![1, 3, 2, 0], "eps {eps}");
+            let mut random = stage2_selection(&corr, eps, RefineOrder::Random, 3);
+            random.sort_unstable();
+            assert_eq!(random, vec![0, 1, 2, 3], "eps {eps}");
+        }
+    }
+
+    #[test]
+    fn stage2_selection_empty_partition() {
+        // A partition with no buckets (empty correlations) must select
+        // nothing for any ε — refine_budget's +1 floor would otherwise
+        // index out of bounds.
+        for eps in [0.0, 0.05, 1.0] {
+            assert!(stage2_selection(&[], eps, RefineOrder::Correlation, 0).is_empty());
+            assert!(stage2_selection(&[], eps, RefineOrder::Random, 7).is_empty());
+        }
+        assert_eq!(refine_budget(0, 1.0), 0);
+        assert_eq!(refine_budget(0, 0.01), 0);
+        assert!(refinement_order(&[], 5).is_empty());
+        assert!(refinement_order_random(0, 5, 1).is_empty());
+    }
+
+    #[test]
     fn eps_zero_skips_refinement() {
         struct Panicky;
         impl AggregatedQueryTask for Panicky {

@@ -24,7 +24,6 @@ pub mod predict;
 
 use std::sync::Arc;
 
-use crate::aggregate::AggregatedUsers;
 use crate::approx::algorithm1::{stage2_selection, RefineOrder};
 use crate::approx::sampling::sample_rows;
 use crate::approx::ProcessingMode;
@@ -33,9 +32,9 @@ use crate::data::points::{split_rows, RowRange};
 use crate::data::ratings::RatingsSplit;
 use crate::error::Result;
 use crate::lsh::bucketizer::Grouping;
-use crate::lsh::Bucketizer;
 use crate::mapreduce::engine::{MapReduceJob, TwoStageJob};
 use crate::mapreduce::metrics::TaskMetrics;
+use crate::model::cf::{user_block, CfModel};
 use crate::runtime::backend::ScoreBackend;
 use crate::util::timer::Stopwatch;
 use predict::{rmse, NeighborRecord, PredictionAccumulator};
@@ -91,7 +90,8 @@ pub struct CfJob {
     /// Every training user's mean rating, precomputed once — the record
     /// emitters need it per (active, neighbor) pair and recomputing it
     /// per record was a measured hot spot (EXPERIMENTS.md §Perf).
-    user_means: Vec<f32>,
+    /// Shared (`Arc`) with the per-partition query-core models.
+    user_means: Arc<Vec<f32>>,
     /// Test items per active user (parallel to `split.active_users`).
     test_items: Vec<Vec<u32>>,
 }
@@ -126,9 +126,7 @@ impl CfJob {
             test_items[ai].push(i);
         }
         let partitions = split_rows(split.train.n_users(), config.n_partitions);
-        let user_means = (0..split.train.n_users())
-            .map(|u| split.train.user_mean(u))
-            .collect();
+        let user_means = crate::model::cf::user_means(&split);
         Ok(CfJob {
             config,
             split,
@@ -145,21 +143,6 @@ impl CfJob {
     /// Number of active users.
     pub fn n_active(&self) -> usize {
         self.split.active_users.len()
-    }
-
-    /// Centered rows + masks for a set of training users.
-    fn user_block(&self, users: &[usize]) -> (Matrix, Matrix) {
-        let m = self.split.train.n_items();
-        let mut cu = Matrix::zeros(users.len(), m);
-        let mut mu = Matrix::zeros(users.len(), m);
-        for (r, &u) in users.iter().enumerate() {
-            let (row, _) = self.split.train.centered_row(u);
-            cu.row_mut(r).copy_from_slice(&row);
-            for &i in &self.split.train.rated[u] {
-                mu.set(r, i as usize, 1.0);
-            }
-        }
-        (cu, mu)
     }
 
     /// Emit records for original users `users` (global ids) given their
@@ -206,7 +189,7 @@ impl CfJob {
     /// Exact / sampling scan over a set of users.
     fn scan_users(&self, users: &[usize], metrics: &mut TaskMetrics) -> Vec<NeighborRecord> {
         let sw = Stopwatch::new();
-        let (cu, mu) = self.user_block(users);
+        let (cu, mu) = user_block(&self.split, users);
         let w = self
             .backend
             .cf_weights(&self.ca, &self.ma, &cu, &mu)
@@ -223,11 +206,12 @@ impl CfJob {
         &self,
         ai: usize,
         b: usize,
-        agg: &AggregatedUsers,
-        agg_means: &[f32],
+        model: &CfModel,
         wagg: &Matrix,
         out: &mut Vec<NeighborRecord>,
     ) {
+        let agg = model.agg();
+        let agg_means = model.agg_means();
         let w = wagg.get(ai, b);
         if w == 0.0 || !w.is_finite() {
             return;
@@ -252,11 +236,12 @@ impl CfJob {
         }
     }
 
-    /// AccurateML stage-1 core (parts 1-3): bucketize users, aggregate,
-    /// score the aggregated users, and plan each active user's stage-2
-    /// refinement (Algorithm 1 lines 2-5). Everything both the barrier
-    /// and streaming paths need; the streaming path additionally
-    /// materializes [`CfJob::initial_records`].
+    /// AccurateML stage-1 core (parts 1-3): build the partition's
+    /// query-core model ([`crate::model::cf::CfModel`] — bucketize +
+    /// aggregate), score the aggregated users, and plan each active
+    /// user's stage-2 refinement (Algorithm 1 lines 2-5). Everything
+    /// both the barrier and streaming paths need; the streaming path
+    /// additionally materializes [`CfJob::initial_records`].
     fn accurateml_carry(
         &self,
         range: RowRange,
@@ -264,64 +249,27 @@ impl CfJob {
         eps_max: f64,
         metrics: &mut TaskMetrics,
     ) -> CfCarry {
-        let users: Vec<usize> = (range.start..range.end).collect();
-        let m = self.split.train.n_items();
-
-        // Part 1: group similar users with LSH. Centered rating rows
-        // are sparse (unrated = 0), so raw Euclidean LSH would group
-        // users by *sparsity* rather than taste — two users with
-        // disjoint item sets are both near the origin. Normalizing each
-        // row to unit L2 norm turns the p-stable hash into an angular
-        // one: buckets collect users whose rating *directions* agree,
-        // which is exactly the Pearson neighborhood structure stage 1
-        // needs to preserve.
-        let mut sw = Stopwatch::new();
-        let (cu, mu) = self.user_block(&users);
-        let mut unit = cu.clone();
-        for r in 0..unit.rows() {
-            let row = unit.row_mut(r);
-            let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
-            if norm > 1e-6 {
-                for v in row.iter_mut() {
-                    *v /= norm;
-                }
-            }
-        }
-        let bucketing = Bucketizer {
-            grouping: self.config.grouping,
-            ..Bucketizer::with_ratio(compression_ratio, self.config.seed)
-        }
-        .bucketize(&unit)
-        .expect("bucketize failed");
-        drop(unit);
-        metrics.lsh_s += sw.lap_s();
-
-        // Part 2: aggregate each bucket into one aggregated user.
-        // Bucket member indices are partition-local; build a local view.
-        let local_matrix = crate::data::ratings::RatingMatrix {
-            ratings: self.split.train.ratings.gather_rows(&users),
-            mask: self.split.train.mask.gather_rows(&users),
-            rated: users
-                .iter()
-                .map(|&u| self.split.train.rated[u].clone())
-                .collect(),
-        };
-        let agg = AggregatedUsers::build(&local_matrix, &bucketing).expect("aggregate failed");
-        let n_buckets = agg.len();
-        let mut cagg = Matrix::zeros(n_buckets, m);
-        let mut agg_means = Vec::with_capacity(n_buckets);
-        for b in 0..n_buckets {
-            let (row, mean) = agg.centered_row(b);
-            cagg.row_mut(b).copy_from_slice(&row);
-            agg_means.push(mean);
-        }
-        metrics.aggregate_s += sw.lap_s();
+        // Parts 1-2: the model (bucketize + aggregate), built once per
+        // partition.
+        let model = CfModel::build(
+            &self.split,
+            &self.user_means,
+            range,
+            compression_ratio,
+            self.config.grouping,
+            self.config.refine_order,
+            self.config.seed,
+            metrics,
+        )
+        .expect("model build failed");
 
         // Part 3: score aggregated users and plan stage 2 (Algorithm 1
         // lines 2-5).
+        let mut sw = Stopwatch::new();
+        let n_buckets = model.n_buckets();
         let wagg = self
             .backend
-            .cf_weights(&self.ca, &self.ma, &cagg, &agg.mask)
+            .cf_weights(&self.ca, &self.ma, model.cagg(), &model.agg().mask)
             .expect("backend cf_weights failed");
         let mut refined: Vec<Vec<usize>> = Vec::with_capacity(self.n_active());
         for ai in 0..self.n_active() {
@@ -336,11 +284,7 @@ impl CfJob {
         metrics.initial_s += sw.lap_s();
 
         CfCarry {
-            users,
-            cu,
-            mu,
-            agg,
-            agg_means,
+            model,
             wagg,
             refined,
         }
@@ -351,21 +295,14 @@ impl CfJob {
     /// barrier path goes straight to stage 2.
     fn initial_records(&self, carry: &CfCarry, metrics: &mut TaskMetrics) -> Vec<NeighborRecord> {
         let mut sw = Stopwatch::new();
-        let n_buckets = carry.agg.len();
+        let n_buckets = carry.model.n_buckets();
         let mut out = Vec::new();
         for ai in 0..self.n_active() {
             if self.test_items[ai].is_empty() {
                 continue;
             }
             for b in 0..n_buckets {
-                self.aggregated_record(
-                    ai,
-                    b,
-                    &carry.agg,
-                    &carry.agg_means,
-                    &carry.wagg,
-                    &mut out,
-                );
+                self.aggregated_record(ai, b, &carry.model, &carry.wagg, &mut out);
             }
         }
         metrics.initial_s += sw.lap_s();
@@ -375,15 +312,16 @@ impl CfJob {
     /// AccurateML stage 2 (Algorithm 1 lines 6-10): the replacement
     /// output — unrefined buckets keep their aggregated record, refined
     /// buckets are replaced by their original users' records (weights
-    /// computed natively per pair; the refined sets differ per active
-    /// user so there is no dense block to batch).
+    /// computed natively per pair via the model's shared neighbor
+    /// visitor; the refined sets differ per active user so there is no
+    /// dense block to batch).
     fn accurateml_stage2(
         &self,
         carry: &CfCarry,
         metrics: &mut TaskMetrics,
     ) -> Vec<NeighborRecord> {
         let mut sw = Stopwatch::new();
-        let n_buckets = carry.agg.len();
+        let n_buckets = carry.model.n_buckets();
         let mut out = Vec::new();
         let mut is_refined = vec![false; n_buckets];
         for ai in 0..self.n_active() {
@@ -398,49 +336,37 @@ impl CfJob {
             // Aggregated records that survive refinement.
             for b in 0..n_buckets {
                 if !is_refined[b] {
-                    self.aggregated_record(
-                        ai,
-                        b,
-                        &carry.agg,
-                        &carry.agg_means,
-                        &carry.wagg,
-                        &mut out,
-                    );
+                    self.aggregated_record(ai, b, &carry.model, &carry.wagg, &mut out);
                 }
             }
             // Refined buckets: original users replace the aggregate.
             let self_id = self.split.active_users[ai] as usize;
             for &b in &carry.refined[ai] {
-                for &local in &carry.agg.index[b] {
-                    let v = carry.users[local as usize];
-                    if v == self_id {
-                        continue;
-                    }
-                    let w = crate::runtime::backend::pearson_pair(
-                        self.ca.row(ai),
-                        self.ma.row(ai),
-                        carry.cu.row(local as usize),
-                        carry.mu.row(local as usize),
-                    );
-                    if w == 0.0 || !w.is_finite() {
-                        continue;
-                    }
-                    let vmean = self.user_means[v];
-                    let mut deviations = Vec::new();
-                    for &i in witems {
-                        if self.split.train.mask.get(v, i as usize) > 0.0 {
-                            deviations
-                                .push((i, self.split.train.ratings.get(v, i as usize) - vmean));
+                carry.model.for_each_original(
+                    b,
+                    self.ca.row(ai),
+                    self.ma.row(ai),
+                    Some(self_id),
+                    |v, w| {
+                        let vmean = self.user_means[v];
+                        let mut deviations = Vec::new();
+                        for &i in witems {
+                            if self.split.train.mask.get(v, i as usize) > 0.0 {
+                                deviations.push((
+                                    i,
+                                    self.split.train.ratings.get(v, i as usize) - vmean,
+                                ));
+                            }
                         }
-                    }
-                    if !deviations.is_empty() {
-                        out.push(NeighborRecord {
-                            active: ai as u32,
-                            weight: w,
-                            deviations,
-                        });
-                    }
-                }
+                        if !deviations.is_empty() {
+                            out.push(NeighborRecord {
+                                active: ai as u32,
+                                weight: w,
+                                deviations,
+                            });
+                        }
+                    },
+                );
             }
         }
         metrics.refine_s += sw.lap_s();
@@ -448,15 +374,11 @@ impl CfJob {
     }
 }
 
-/// Stage-1 → stage-2 carry of one CF partition: the partition's users
-/// with their centered rows/masks, the aggregation, the stage-1 weight
-/// block and the per-active refinement plan.
+/// Stage-1 → stage-2 carry of one CF partition: the partition's
+/// query-core model (users, centered rows/masks, aggregation), the
+/// stage-1 weight block and the per-active refinement plan.
 pub struct CfCarry {
-    users: Vec<usize>,
-    cu: Matrix,
-    mu: Matrix,
-    agg: AggregatedUsers,
-    agg_means: Vec<f32>,
+    model: CfModel,
     wagg: Matrix,
     refined: Vec<Vec<usize>>,
 }

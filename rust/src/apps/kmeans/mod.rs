@@ -35,9 +35,9 @@ use crate::data::matrix::{sq_dist, Matrix};
 use crate::data::points::{split_rows, RowRange};
 use crate::error::Result;
 use crate::lsh::bucketizer::Grouping;
-use crate::lsh::Bucketizer;
 use crate::mapreduce::engine::{Engine, MapReduceJob, TwoStageJob};
 use crate::mapreduce::metrics::{JobMetrics, TaskMetrics};
+use crate::model::kmeans::{build_partition_agg, nearest_centroid};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -127,21 +127,6 @@ fn mean_inertia(points: &Matrix, centroids: &Matrix) -> f64 {
         inertia += d1 as f64;
     }
     inertia / points.rows().max(1) as f64
-}
-
-fn nearest_centroid(centroids: &Matrix, p: &[f32]) -> (usize, f32, f32) {
-    let mut best = (0usize, f32::INFINITY);
-    let mut second = f32::INFINITY;
-    for c in 0..centroids.rows() {
-        let d = sq_dist(centroids.row(c), p);
-        if d < best.1 {
-            second = best.1;
-            best = (c, d);
-        } else if d < second {
-            second = d;
-        }
-    }
-    (best.0, best.1, second)
 }
 
 impl KmeansIterJob {
@@ -402,35 +387,25 @@ impl KmeansRunner {
         let init_rows = rng.sample_indices(self.points.rows(), cfg.n_clusters);
         let mut centroids = self.points.gather_rows(&init_rows);
 
-        // AccurateML: build per-partition aggregations once, timing the
-        // generation parts into the first round's metrics.
+        // AccurateML: build per-partition aggregations once via the
+        // query-core helper shared with the serving shard builder,
+        // timing the generation parts into the first round's metrics.
         let mut gen_metrics = TaskMetrics::default();
         let agg: Option<Arc<Vec<PartitionAgg>>> = match cfg.mode {
             ProcessingMode::AccurateML {
                 compression_ratio, ..
             } => {
-                let mut sw = Stopwatch::new();
                 let mut parts = Vec::with_capacity(partitions.len());
                 for range in &partitions {
-                    let rows: Vec<usize> = (range.start..range.end).collect();
-                    let slice = self.points.gather_rows(&rows);
-                    let bucketing = Bucketizer {
-                        grouping: cfg.grouping,
-                        ..Bucketizer::with_ratio(compression_ratio, cfg.seed)
-                    }
-                    .bucketize(&slice)?;
-                    gen_metrics.lsh_s += sw.lap_s();
-                    let mut centers = Matrix::zeros(bucketing.buckets.len(), self.points.cols());
-                    for (b, members) in bucketing.buckets.iter().enumerate() {
-                        let idx: Vec<usize> = members.iter().map(|&i| i as usize).collect();
-                        let mean = slice.mean_of_rows(&idx);
-                        centers.row_mut(b).copy_from_slice(&mean);
-                    }
-                    gen_metrics.aggregate_s += sw.lap_s();
-                    parts.push(PartitionAgg {
-                        centers,
-                        index: bucketing.buckets,
-                    });
+                    let (_slice, centers, index) = build_partition_agg(
+                        &self.points,
+                        *range,
+                        compression_ratio,
+                        cfg.grouping,
+                        cfg.seed,
+                        &mut gen_metrics,
+                    )?;
+                    parts.push(PartitionAgg { centers, index });
                 }
                 Some(Arc::new(parts))
             }

@@ -22,19 +22,18 @@ pub mod classify;
 
 use std::sync::Arc;
 
-use crate::aggregate::AggregatedPoints;
-use crate::approx::algorithm1::{stage2_selection, RefineOrder};
+use crate::approx::algorithm1::RefineOrder;
 use crate::approx::sampling::sample_rows;
 use crate::approx::ProcessingMode;
 use crate::data::gaussian::LabeledPoints;
-use crate::data::matrix::{sq_dist, Matrix};
+use crate::data::matrix::Matrix;
 use crate::data::points::{split_rows, RowRange};
 use crate::error::Result;
 use crate::lsh::bucketizer::Grouping;
-use crate::lsh::Bucketizer;
 use crate::mapreduce::engine::{MapReduceJob, TwoStageJob};
 use crate::mapreduce::metrics::TaskMetrics;
-use crate::runtime::backend::{ScoreBackend, TopK};
+use crate::model::knn::KnnModel;
+use crate::runtime::backend::ScoreBackend;
 use crate::util::timer::Stopwatch;
 use classify::{classification_accuracy, majority_vote, merge_candidates, LabeledCandidate};
 
@@ -136,10 +135,12 @@ impl KnnJob {
     }
 
     /// AccurateML stage-1 core (Fig. 2b parts 1-3 + Algorithm 1 lines
-    /// 2-5): bucketize, aggregate, score the aggregated points, and
-    /// plan each test point's stage-2 refinement. Everything both the
-    /// barrier and the streaming paths need; the streaming path
-    /// additionally materializes [`KnnJob::initial_candidates`].
+    /// 2-5): build the partition's query-core model
+    /// ([`crate::model::knn::KnnModel`] — bucketize + aggregate), score
+    /// the aggregated points, and plan each test point's stage-2
+    /// refinement. Everything both the barrier and the streaming paths
+    /// need; the streaming path additionally materializes
+    /// [`KnnJob::initial_candidates`].
     fn accurateml_carry(
         &self,
         range: RowRange,
@@ -147,51 +148,36 @@ impl KnnJob {
         eps_max: f64,
         metrics: &mut TaskMetrics,
     ) -> KnnCarry {
-        let rows: Vec<usize> = (range.start..range.end).collect();
-        let part = self.data.train.gather_rows(&rows);
-        let labels: Vec<u32> = rows.iter().map(|&r| self.data.train_labels[r]).collect();
-
-        // Part 1: group similar data points using LSH.
-        let mut sw = Stopwatch::new();
-        let bucketing = Bucketizer {
-            grouping: self.config.grouping,
-            ..Bucketizer::with_ratio(compression_ratio, self.config.seed)
-        }
-        .bucketize(&part)
-        .expect("bucketize failed");
-        metrics.lsh_s += sw.lap_s();
-
-        // Part 2: information aggregation of original data points.
-        let agg = AggregatedPoints::build(&part, &labels, &bucketing).expect("aggregate failed");
-        metrics.aggregate_s += sw.lap_s();
+        // Parts 1-2: the model (bucketize + aggregate), built once per
+        // partition.
+        let model = KnnModel::build(
+            &self.data.train,
+            &self.data.train_labels,
+            range,
+            self.config.k,
+            compression_ratio,
+            self.config.grouping,
+            self.config.refine_order,
+            self.config.seed,
+            Arc::clone(&self.backend),
+            metrics,
+        )
+        .expect("model build failed");
 
         // Part 3: initial outputs from aggregated points. One dense
         // distance block: (test × centroids). Correlation of bucket b
         // for test point t is -dists[t][b] (Definition 4); ranking it
         // plans stage 2 (Algorithm 1 lines 2-5).
-        let dists = self
-            .backend
-            .knn_dists(&self.data.test, &agg.centroids)
-            .expect("backend scoring failed");
-        let n_buckets = agg.len();
+        let mut sw = Stopwatch::new();
+        let dists = model.score_block(&self.data.test);
         let mut refined = Vec::with_capacity(self.data.test.rows());
-        let mut corr: Vec<f32> = Vec::with_capacity(n_buckets);
         for t in 0..self.data.test.rows() {
-            corr.clear();
-            corr.extend(dists.row(t).iter().map(|&d| -d));
-            refined.push(stage2_selection(
-                &corr,
-                eps_max,
-                self.config.refine_order,
-                self.config.seed ^ t as u64,
-            ));
+            refined.push(model.plan(dists.row(t), eps_max, self.config.seed ^ t as u64));
         }
         metrics.initial_s += sw.lap_s();
 
         KnnCarry {
-            part,
-            labels,
-            agg,
+            model,
             dists,
             refined,
         }
@@ -206,88 +192,45 @@ impl KnnJob {
         metrics: &mut TaskMetrics,
     ) -> Vec<Vec<LabeledCandidate>> {
         let mut sw = Stopwatch::new();
-        let k = self.config.k;
         let mut initial = Vec::with_capacity(self.data.test.rows());
         for t in 0..self.data.test.rows() {
-            let mut topk = TopK::new(k);
-            for (b, &dv) in carry.dists.row(t).iter().enumerate() {
-                topk.push(dv, b as u32);
-            }
-            initial.push(
-                topk.into_sorted()
-                    .into_iter()
-                    .map(|(d, b)| (d, carry.agg.labels[b as usize]))
-                    .collect(),
-            );
+            initial.push(carry.model.initial_topk(carry.dists.row(t)));
         }
         metrics.initial_s += sw.lap_s();
         initial
     }
 
-    /// AccurateML stage 2 (Algorithm 1 lines 6-10): replace the planned
-    /// buckets' aggregated candidates with their original points;
-    /// unrefined buckets keep contributing their aggregated point.
-    /// Scratch buffers are reused across test points — this loop runs
-    /// |test| × |partitions| times and per-iteration allocations were a
-    /// measured hot spot (EXPERIMENTS.md §Perf).
+    /// AccurateML stage 2 (Algorithm 1 lines 6-10): the per-query
+    /// refinement core looped over the test set. Scratch buffers are
+    /// reused across test points — this loop runs |test| × |partitions|
+    /// times and per-iteration allocations were a measured hot spot
+    /// (EXPERIMENTS.md §Perf).
     fn accurateml_stage2(
         &self,
         carry: &KnnCarry,
         metrics: &mut TaskMetrics,
     ) -> Vec<Vec<LabeledCandidate>> {
         let mut sw = Stopwatch::new();
-        let n_buckets = carry.agg.len();
-        let k = self.config.k;
         let mut out = Vec::with_capacity(self.data.test.rows());
-        let mut is_refined = vec![false; n_buckets];
+        let mut is_refined = vec![false; carry.model.n_buckets()];
         for t in 0..self.data.test.rows() {
-            let drow = carry.dists.row(t);
-            let chosen = &carry.refined[t];
-            is_refined.fill(false);
-            for &b in chosen {
-                is_refined[b] = true;
-            }
-            let mut topk = TopK::new(k);
-            // Refined buckets contribute their original points...
-            let q = self.data.test.row(t);
-            for &b in chosen {
-                for &local in &carry.agg.index[b] {
-                    let d = sq_dist(carry.part.row(local as usize), q);
-                    topk.push(d, local);
-                }
-            }
-            let mut cands: Vec<LabeledCandidate> = topk
-                .into_sorted()
-                .into_iter()
-                .map(|(d, local)| (d, carry.labels[local as usize]))
-                .collect();
-            // ...unrefined buckets contribute their aggregated point
-            // (initial-output entries that survive refinement).
-            let mut agg_topk = TopK::new(k);
-            for b in 0..n_buckets {
-                if !is_refined[b] {
-                    agg_topk.push(drow[b], b as u32);
-                }
-            }
-            for (d, b) in agg_topk.into_sorted() {
-                cands.push((d, carry.agg.labels[b as usize]));
-            }
-            cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
-            cands.truncate(k);
-            out.push(cands);
+            out.push(carry.model.refine_query(
+                self.data.test.row(t),
+                carry.dists.row(t),
+                &carry.refined[t],
+                &mut is_refined,
+            ));
         }
         metrics.refine_s += sw.lap_s();
         out
     }
 }
 
-/// Stage-1 → stage-2 carry of one kNN partition: the gathered rows, the
-/// aggregation, the stage-1 distance block and the per-test refinement
-/// plan (Algorithm 1 lines 2-5, already ranked).
+/// Stage-1 → stage-2 carry of one kNN partition: the partition's
+/// query-core model, the stage-1 distance block and the per-test
+/// refinement plan (Algorithm 1 lines 2-5, already ranked).
 pub struct KnnCarry {
-    part: Matrix,
-    labels: Vec<u32>,
-    agg: AggregatedPoints,
+    model: KnnModel,
     dists: Matrix,
     refined: Vec<Vec<usize>>,
 }

@@ -3,18 +3,24 @@
 
 use std::sync::Arc;
 
+use crate::approx::algorithm1::RefineOrder;
 use crate::approx::ProcessingMode;
 use crate::apps::cf::{CfConfig, CfJob, CfOutput};
+use crate::apps::kmeans::{KmeansConfig, KmeansRunner};
 use crate::apps::knn::{KnnConfig, KnnJob, KnnOutput};
 use crate::coordinator::config::{Scale, WorkbenchConfig};
 use crate::data::gaussian::LabeledPoints;
-use crate::data::points::standardize;
+use crate::data::matrix::Matrix;
+use crate::data::points::{split_rows, standardize};
 use crate::data::ratings::RatingsSplit;
 use crate::error::Result;
+use crate::lsh::bucketizer::Grouping;
 use crate::mapreduce::engine::Engine;
 use crate::mapreduce::metrics::{JobMetrics, TaskMetrics};
+use crate::model::{CfModel, KmeansModel, KnnModel};
 use crate::runtime::backend::{FallbackBackend, NativeBackend, PjrtBackend, ScoreBackend};
 use crate::runtime::service::PjrtService;
+use crate::serve::{query_log, ServeConfig, ServeReport, ShardedServer};
 
 /// The paper's sweep grid (§IV-B): compression ratios × refinement
 /// thresholds.
@@ -281,6 +287,147 @@ impl Workbench {
         Ok((report.output, report.metrics))
     }
 
+    /// Per-partition kNN shard models — the serving form of the batch
+    /// job's stage-1 structures, built once and shared by every query.
+    pub fn knn_shards(&self, compression_ratio: f64, k: usize) -> Result<Vec<Arc<KnnModel>>> {
+        let mut shards = Vec::new();
+        for range in split_rows(self.knn_data.train.rows(), self.config.n_partitions) {
+            if range.is_empty() {
+                continue;
+            }
+            let mut tm = TaskMetrics::default();
+            shards.push(Arc::new(KnnModel::build(
+                &self.knn_data.train,
+                &self.knn_data.train_labels,
+                range,
+                k,
+                compression_ratio,
+                Grouping::Lsh,
+                RefineOrder::Correlation,
+                self.config.seed,
+                Arc::clone(&self.backend),
+                &mut tm,
+            )?));
+        }
+        Ok(shards)
+    }
+
+    /// Replay `n_queries` synthetic kNN queries (held-out test points)
+    /// against the sharded model. Accuracy metric: 0/1 label
+    /// correctness, so the report's mean accuracy is classification
+    /// accuracy.
+    pub fn serve_knn(
+        &self,
+        n_queries: usize,
+        k: usize,
+        compression_ratio: f64,
+        cfg: &ServeConfig,
+    ) -> Result<ServeReport> {
+        let server = ShardedServer::new(self.knn_shards(compression_ratio, k)?)?;
+        let queries = query_log::knn_query_log(&self.knn_data, n_queries, self.config.seed);
+        let (_, report) = server.serve(&self.engine, queries, cfg)?;
+        Ok(report)
+    }
+
+    /// Per-partition CF shard models over the training users.
+    pub fn cf_shards(&self, compression_ratio: f64) -> Result<Vec<Arc<CfModel>>> {
+        let user_means = crate::model::cf::user_means(&self.cf_split);
+        let mut shards = Vec::new();
+        for range in split_rows(self.cf_split.train.n_users(), self.config.cf_partitions) {
+            if range.is_empty() {
+                continue;
+            }
+            let mut tm = TaskMetrics::default();
+            shards.push(Arc::new(CfModel::build(
+                &self.cf_split,
+                &user_means,
+                range,
+                compression_ratio,
+                Grouping::Lsh,
+                RefineOrder::Correlation,
+                self.config.seed,
+                &mut tm,
+            )?));
+        }
+        Ok(shards)
+    }
+
+    /// Replay `n_queries` synthetic CF queries (held-out ratings).
+    /// Accuracy metric: negative squared rating error, so RMSE =
+    /// `sqrt(-mean_accuracy)`.
+    pub fn serve_cf(
+        &self,
+        n_queries: usize,
+        compression_ratio: f64,
+        cfg: &ServeConfig,
+    ) -> Result<ServeReport> {
+        let server = ShardedServer::new(self.cf_shards(compression_ratio)?)?;
+        let queries = query_log::cf_query_log(&self.cf_split, n_queries, self.config.seed);
+        let (_, report) = server.serve(&self.engine, queries, cfg)?;
+        Ok(report)
+    }
+
+    /// Per-partition k-means shard models over the kNN point set, with
+    /// centroids trained by an exact run first. Also returns the point
+    /// set so callers can derive query logs from it.
+    pub fn kmeans_shards(
+        &self,
+        compression_ratio: f64,
+    ) -> Result<(Vec<Arc<KmeansModel>>, Arc<Matrix>)> {
+        // One full copy: the runner wants Arc<Matrix> but the workbench
+        // stores the train matrix inside Arc<LabeledPoints> (making
+        // that field Arc<Matrix> is a wider refactor than this entry
+        // point justifies).
+        let points = Arc::new(self.knn_data.train.clone());
+        let runner = KmeansRunner::new(
+            KmeansConfig {
+                n_clusters: 16,
+                n_iterations: 5,
+                n_partitions: self.config.n_partitions,
+                mode: ProcessingMode::Exact,
+                seed: self.config.seed,
+                ..Default::default()
+            },
+            Arc::clone(&points),
+        )?;
+        let (trained, _) = runner.run(&self.engine)?;
+        let mut shards = Vec::new();
+        for range in split_rows(points.rows(), self.config.n_partitions) {
+            if range.is_empty() {
+                continue;
+            }
+            let mut tm = TaskMetrics::default();
+            shards.push(Arc::new(KmeansModel::build(
+                &points,
+                range,
+                &trained.centroids,
+                compression_ratio,
+                Grouping::Lsh,
+                RefineOrder::Correlation,
+                self.config.seed,
+                &mut tm,
+            )?));
+        }
+        Ok((shards, points))
+    }
+
+    /// Replay `n_queries` synthetic k-means assignment queries against
+    /// shards built on centroids trained by an exact run. Accuracy
+    /// metric: negative squared distance to the chosen representative
+    /// (deterministically non-decreasing under refinement).
+    pub fn serve_kmeans(
+        &self,
+        n_queries: usize,
+        compression_ratio: f64,
+        cfg: &ServeConfig,
+    ) -> Result<ServeReport> {
+        let (shards, points) = self.kmeans_shards(compression_ratio)?;
+        let server = ShardedServer::new(shards)?;
+        let queries = query_log::kmeans_query_log(&points, n_queries, self.config.seed);
+        let (_, report) = server.serve(&self.engine, queries, cfg)?;
+        Ok(report)
+    }
+
     /// Sampling run whose simulated time matches `target_sim_s` (the
     /// §IV-C protocol: "the same job execution times are permitted").
     /// Calibrates the keep-ratio from the exact run's time, with one
@@ -378,6 +525,23 @@ mod tests {
         let (cf, cfm) = wb.run_cf_streaming(mode, 0).unwrap();
         assert!(cf.rmse > 0.0);
         assert!(cfm.trace.len() >= 2);
+    }
+
+    #[test]
+    fn serving_replays_a_knn_query_log() {
+        let wb = Workbench::preset(Scale::Small).unwrap();
+        let cfg = ServeConfig {
+            batch_size: 16,
+            deadline_s: 30.0,
+            budget: crate::serve::RefineBudget::Fraction(0.1),
+        };
+        let report = wb.serve_knn(48, 5, 10.0, &cfg).unwrap();
+        assert_eq!(report.queries, 48);
+        assert!(report.shards > 0);
+        assert_eq!(report.refined_queries, 48);
+        assert!(report.initial_accuracy.is_some());
+        assert!(report.refined_accuracy.is_some());
+        assert_eq!(report.deadline_misses, 0);
     }
 
     #[test]

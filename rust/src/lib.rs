@@ -23,6 +23,13 @@
 //!   random-sampling baseline and exact mode.
 //! * [`apps`] — the two evaluated applications: kNN classification and
 //!   user-based CF recommendation.
+//! * [`model`] — the query-core model layer: per-partition *shards*
+//!   ([`model::ServableModel`]) that answer one query from aggregated
+//!   points and refine it per query via Algorithm 1's ranking; the
+//!   batch jobs are thin adapters looping these cores.
+//! * [`serve`] — the sharded anytime serving subsystem: request
+//!   batcher, deadline-aware executor over the worker pool, and
+//!   latency/accuracy reporting.
 //! * [`runtime`] — the PJRT executor: loads `artifacts/*.hlo.txt`
 //!   (AOT-lowered JAX + Pallas graphs) and serves execute requests from
 //!   map tasks on a dedicated device thread.
@@ -39,7 +46,9 @@ pub mod data;
 pub mod error;
 pub mod lsh;
 pub mod mapreduce;
+pub mod model;
 pub mod runtime;
+pub mod serve;
 pub mod util;
 
 pub use error::{Error, Result};

@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   run       — one (app × mode) job, printed as a result row
+//!   serve     — replay a synthetic query log against the sharded
+//!               anytime serving subsystem; prints latency/accuracy
 //!   sweep     — the paper's r × ε grid for one app (Figs. 4-7 data)
 //!   compare   — equal-time AccurateML vs sampling (Figs. 8-9 data)
 //!   table1    — regenerate Table I from the algorithm census
@@ -46,6 +48,8 @@ Usage: accurateml <subcommand> [options]
 
 Subcommands:
   run      run one job            (--app knn|cf --mode exact|accurateml|sampling)
+  serve    replay a synthetic query log (--app knn|cf|kmeans); prints
+           p50/p99 latency and initial-vs-refined accuracy
   sweep    r × ε grid for an app  (--app knn|cf)
   compare  equal-time AccurateML vs sampling
   gen-data pre-generate and cache the synthetic datasets
@@ -65,6 +69,7 @@ fn dispatch(argv: &[String]) -> accurateml::Result<()> {
     let rest = &argv[1..];
     match sub.as_str() {
         "run" => cmd_run(rest),
+        "serve" => cmd_serve(rest),
         "sweep" => cmd_sweep(rest),
         "compare" => cmd_compare(rest),
         "gen-data" => cmd_gen_data(rest),
@@ -208,6 +213,92 @@ fn run_streaming(
             p.wall_s,
             p.accuracy
         );
+    }
+    Ok(())
+}
+
+fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
+    use accurateml::serve::{RefineBudget, ServeConfig};
+
+    let cmd = common_opts(
+        Command::new(
+            "accurateml serve",
+            "replay a synthetic query log against the sharded anytime server",
+        )
+        .opt("app", "knn", "application: knn|cf|kmeans")
+        .opt("queries", "1000", "queries to replay")
+        .opt("batch", "64", "micro-batch size (queries grouped per shard task)")
+        .opt("deadline-ms", "50", "per-request deadline in milliseconds")
+        .opt(
+            "budget",
+            "eps",
+            "refinement budget: eps|all|none|deadline",
+        )
+        .opt("eps", "0.05", "refinement threshold for --budget eps")
+        .opt("ratio", "10", "compression ratio of the shard models")
+        .opt("k", "5", "k for kNN"),
+    );
+    let args = cmd.parse(argv)?;
+    let wb = workbench(&args)?;
+    let budget = match args.get("budget") {
+        "eps" => RefineBudget::Fraction(args.get_f64("eps")?),
+        "all" => RefineBudget::All,
+        "none" => RefineBudget::Off,
+        "deadline" => RefineBudget::Deadline,
+        other => {
+            return Err(accurateml::Error::Config(format!(
+                "unknown budget {other:?} (eps|all|none|deadline)"
+            )))
+        }
+    };
+    let cfg = ServeConfig {
+        batch_size: args.get_usize("batch")?,
+        deadline_s: args.get_f64("deadline-ms")? / 1e3,
+        budget,
+    };
+    let n = args.get_usize("queries")?;
+    let ratio = args.get_f64("ratio")?;
+    let app = args.get("app").to_string();
+    let report = match app.as_str() {
+        "knn" => wb.serve_knn(n, args.get_usize("k")?, ratio, &cfg)?,
+        "cf" => wb.serve_cf(n, ratio, &cfg)?,
+        "kmeans" => wb.serve_kmeans(n, ratio, &cfg)?,
+        other => {
+            return Err(accurateml::Error::Config(format!(
+                "unknown app {other:?} (knn|cf|kmeans)"
+            )))
+        }
+    };
+    let title = format!(
+        "{app} serving: {} queries over {} shards ({} backend)",
+        report.queries,
+        report.shards,
+        wb.backend.name()
+    );
+    print!("{}", report.table(&title).console());
+    println!(
+        "refined {}/{} queries ({:.1} buckets/query), {} deadline miss(es) at {:.1}ms",
+        report.refined_queries,
+        report.queries,
+        report.refined_buckets_mean,
+        report.deadline_misses,
+        cfg.deadline_s * 1e3
+    );
+    match app.as_str() {
+        "cf" => {
+            // Accuracy is negative squared rating error.
+            let rmse = |a: Option<f64>| a.map(|v| (-v).max(0.0).sqrt());
+            if let (Some(i), Some(r)) = (
+                rmse(report.initial_accuracy),
+                rmse(report.refined_accuracy),
+            ) {
+                println!("rmse: initial {i:.4} -> refined {r:.4}");
+            }
+        }
+        "kmeans" => {
+            println!("(accuracy is negative squared distance to the chosen representative)");
+        }
+        _ => {}
     }
     Ok(())
 }

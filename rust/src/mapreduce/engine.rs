@@ -17,8 +17,41 @@ use std::sync::{mpsc, Arc, Mutex};
 
 use crate::error::{Error, Result};
 use crate::mapreduce::metrics::{JobMetrics, TaskMetrics, TracePoint};
-use crate::util::pool::WorkerPool;
+use crate::util::pool::{StreamResult, WorkerPool};
 use crate::util::timer::Stopwatch;
+
+/// Drain a [`WorkerPool`] result stream to completion, invoking `on_ok`
+/// for every successful task and converting the *first* panic into a
+/// job-level [`Error`] labelled with `stage`. The channel is always
+/// consumed to the end, so no in-flight task can outlive the call and
+/// the pool stays clean for the next job.
+///
+/// `on_ok` receives `(index, value, failed)` where `failed` reports
+/// whether a panic has already been recorded — consumers use it to stop
+/// scheduling follow-up work while still accounting results that were
+/// already computed. This is the single task-failure/drain path shared
+/// by [`Engine::run_streaming`] (both stages) and the serving executor
+/// ([`crate::serve::ShardedServer`]).
+pub fn drain_stream<T>(
+    rx: mpsc::Receiver<StreamResult<T>>,
+    stage: &str,
+    failure: &mut Option<Error>,
+    mut on_ok: impl FnMut(usize, T, bool),
+) {
+    for (index, result) in rx {
+        match result {
+            Ok(value) => {
+                let failed = failure.is_some();
+                on_ok(index, value, failed);
+            }
+            Err(_) => {
+                failure.get_or_insert_with(|| {
+                    Error::Engine(format!("{stage} task for partition {index} panicked"))
+                });
+            }
+        }
+    }
+}
 
 /// A MapReduce job: the engine's only interface to applications.
 ///
@@ -115,6 +148,13 @@ impl Engine {
     /// Local worker count.
     pub fn n_workers(&self) -> usize {
         self.pool.size()
+    }
+
+    /// The engine's worker pool. The serving executor shards its model
+    /// over the same workers the batch jobs run on, so batch and serve
+    /// share one compute budget.
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
     }
 
     /// Run a job to completion (no retries — a task panic fails the job).
@@ -272,38 +312,29 @@ impl Engine {
         let mut failure: Option<Error> = None;
 
         let (tx2, rx2) = mpsc::channel();
-        for (part, result) in rx1 {
-            match result {
-                Ok((out, carry, tm)) => {
-                    tasks[part].add(&tm);
-                    let bytes = job.shuffle_bytes(&out);
-                    let records = job.shuffle_records(&out);
-                    tasks[part].bytes_out += bytes;
-                    tasks[part].records_out += records;
-                    shuffle_bytes += bytes;
-                    shuffle_records += records;
-                    slots[part] = Some(out);
-                    if failure.is_none() {
-                        if let Some(carry) = carry {
-                            // Schedule this partition's refinement now —
-                            // it overlaps later partitions' stage 1.
-                            stage2_submitted += 1;
-                            let job = Arc::clone(&job);
-                            self.pool.stream_into(&tx2, part, move || {
-                                let mut tm = TaskMetrics::default();
-                                let out = job.stage2(part, carry, &mut tm);
-                                (out, tm)
-                            });
-                        }
-                    }
-                }
-                Err(_) => {
-                    failure.get_or_insert_with(|| {
-                        Error::Engine(format!("stage-1 task for partition {part} panicked"))
+        drain_stream(rx1, "stage-1", &mut failure, |part, (out, carry, tm), failed| {
+            tasks[part].add(&tm);
+            let bytes = job.shuffle_bytes(&out);
+            let records = job.shuffle_records(&out);
+            tasks[part].bytes_out += bytes;
+            tasks[part].records_out += records;
+            shuffle_bytes += bytes;
+            shuffle_records += records;
+            slots[part] = Some(out);
+            if !failed {
+                if let Some(carry) = carry {
+                    // Schedule this partition's refinement now — it
+                    // overlaps later partitions' stage 1.
+                    stage2_submitted += 1;
+                    let job = Arc::clone(&job);
+                    self.pool.stream_into(&tx2, part, move || {
+                        let mut tm = TaskMetrics::default();
+                        let out = job.stage2(part, carry, &mut tm);
+                        (out, tm)
                     });
                 }
             }
-        }
+        });
         drop(tx2);
 
         if failure.is_none() {
@@ -324,38 +355,29 @@ impl Engine {
             // Stage 2: fold refinements in completion order.
             let mut current = current;
             let mut applied = 0usize;
-            for (part, result) in &rx2 {
-                match result {
-                    Ok((out, tm)) => {
-                        tasks[part].add(&tm);
-                        let bytes = job.shuffle_bytes(&out);
-                        let records = job.shuffle_records(&out);
-                        tasks[part].bytes_out += bytes;
-                        tasks[part].records_out += records;
-                        shuffle_bytes += bytes;
-                        shuffle_records += records;
-                        current[part] = out;
-                        applied += 1;
-                        let checkpoint = checkpoint_every > 0
-                            && applied % checkpoint_every == 0
-                            && applied < stage2_submitted;
-                        if checkpoint {
-                            let accuracy = job.evaluate(&job.reduce_ref(&current));
-                            trace.push(TracePoint {
-                                refined_partitions: applied,
-                                pending_refinements: stage2_submitted - applied,
-                                wall_s: sw.elapsed_s(),
-                                accuracy,
-                            });
-                        }
-                    }
-                    Err(_) => {
-                        failure.get_or_insert_with(|| {
-                            Error::Engine(format!("stage-2 task for partition {part} panicked"))
-                        });
-                    }
+            drain_stream(rx2, "stage-2", &mut failure, |part, (out, tm), _failed| {
+                tasks[part].add(&tm);
+                let bytes = job.shuffle_bytes(&out);
+                let records = job.shuffle_records(&out);
+                tasks[part].bytes_out += bytes;
+                tasks[part].records_out += records;
+                shuffle_bytes += bytes;
+                shuffle_records += records;
+                current[part] = out;
+                applied += 1;
+                let checkpoint = checkpoint_every > 0
+                    && applied % checkpoint_every == 0
+                    && applied < stage2_submitted;
+                if checkpoint {
+                    let accuracy = job.evaluate(&job.reduce_ref(&current));
+                    trace.push(TracePoint {
+                        refined_partitions: applied,
+                        pending_refinements: stage2_submitted - applied,
+                        wall_s: sw.elapsed_s(),
+                        accuracy,
+                    });
                 }
-            }
+            });
             if failure.is_none() {
                 let map_wall_s = sw.elapsed_s();
                 let red_sw = Stopwatch::new();
@@ -382,7 +404,7 @@ impl Engine {
         } else {
             // Stage-1 failure: drain whatever stage-2 tasks were already
             // submitted so the pool is clean before reporting.
-            for _ in &rx2 {}
+            drain_stream(rx2, "stage-2", &mut failure, |_, _, _| {});
         }
 
         Err(failure.unwrap_or_else(|| Error::Engine("streaming run failed".into())))
@@ -394,8 +416,9 @@ mod tests {
     use super::*;
 
     /// Toy job: map emits the squares in its range; reduce sums them.
-    struct SquareJob {
-        ranges: Vec<(u64, u64)>,
+    /// `pub(super)` so the sibling `retry_tests` module can reuse it.
+    pub(super) struct SquareJob {
+        pub(super) ranges: Vec<(u64, u64)>,
     }
 
     impl MapReduceJob for SquareJob {
@@ -483,6 +506,7 @@ mod tests {
 
 #[cfg(test)]
 mod retry_tests {
+    use super::tests::SquareJob;
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
 

@@ -13,7 +13,7 @@
 //! * **simulated** cluster time from [`cost::ClusterModel`]: map-task
 //!   times scheduled LPT onto N executor slots plus shuffle bytes over a
 //!   modelled link — this reconstructs the shape of the paper's
-//!   9-node/1GbE numbers (see DESIGN.md §3's substitution table).
+//!   9-node/1GbE numbers (see DESIGN.md §4's substitution table).
 
 pub mod cost;
 pub mod engine;

@@ -1,0 +1,448 @@
+//! The CF query core: one shard = one partition of training users with
+//! their aggregation, extracted from `apps::cf`'s map task. A query is
+//! one (user, item) pair: the user's centered rating row scores every
+//! aggregated user (stage 1) and refinement replaces the top-ranked
+//! buckets' aggregated evidence with their original users' (stage 2).
+
+use std::sync::Arc;
+
+use crate::aggregate::AggregatedUsers;
+use crate::approx::algorithm1::{refinement_order, refinement_order_random, RefineOrder};
+use crate::data::matrix::Matrix;
+use crate::data::points::RowRange;
+use crate::data::ratings::RatingsSplit;
+use crate::error::Result;
+use crate::lsh::bucketizer::Grouping;
+use crate::lsh::Bucketizer;
+use crate::mapreduce::metrics::TaskMetrics;
+use crate::model::{InitialAnswer, ServableModel};
+use crate::runtime::backend::pearson_pair;
+use crate::util::timer::Stopwatch;
+
+/// One CF serving request: the active user's centered rating row +
+/// mask + mean, the target item, and optional ground truth. `exclude`
+/// names the train-matrix row of the query user so the user never
+/// becomes their own neighbor. Row and mask are `Arc`-shared so a
+/// query log that revisits a user (repeat traffic) stores each dense
+/// row once, not once per request.
+#[derive(Clone, Debug)]
+pub struct CfQuery {
+    /// Centered, mask-zeroed rating row (length = n_items).
+    pub cu: Arc<Vec<f32>>,
+    /// Rated-item mask (1.0 where rated).
+    pub mu: Arc<Vec<f32>>,
+    /// The user's mean rating.
+    pub mean: f32,
+    /// Item to predict.
+    pub item: u32,
+    /// Global train-user row to exclude from neighborhoods.
+    pub exclude: Option<u32>,
+    /// Held-out actual rating, when known.
+    pub actual: Option<f32>,
+    /// Per-query seed (used by the random-refinement ablation).
+    pub seed: u64,
+}
+
+/// One shard's partial prediction: Σ w·dev and Σ|w| over its
+/// neighbors. Merging across shards sums the partials — the per-query
+/// form of [`crate::apps::cf::predict::PredictionAccumulator`].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct CfPartial {
+    pub num: f64,
+    pub den: f64,
+}
+
+/// Every training user's mean rating, precomputed once — recomputing
+/// it per record was a measured hot spot (EXPERIMENTS.md §Perf).
+/// Shared by the batch job ([`crate::apps::cf::CfJob`]) and the
+/// serving shard builder so the two scoring paths cannot drift.
+pub fn user_means(split: &RatingsSplit) -> Arc<Vec<f32>> {
+    Arc::new(
+        (0..split.train.n_users())
+            .map(|u| split.train.user_mean(u))
+            .collect(),
+    )
+}
+
+/// Centered rows + masks for a set of training users (shared by the
+/// batch job's exact scan and the shard builder).
+pub fn user_block(split: &RatingsSplit, users: &[usize]) -> (Matrix, Matrix) {
+    let m = split.train.n_items();
+    let mut cu = Matrix::zeros(users.len(), m);
+    let mut mu = Matrix::zeros(users.len(), m);
+    for (r, &u) in users.iter().enumerate() {
+        let (row, _) = split.train.centered_row(u);
+        cu.row_mut(r).copy_from_slice(&row);
+        for &i in &split.train.rated[u] {
+            mu.set(r, i as usize, 1.0);
+        }
+    }
+    (cu, mu)
+}
+
+/// One CF shard: the partition's users (centered rows + masks), their
+/// aggregation, and the centered aggregated rows stage 1 scores
+/// against.
+pub struct CfModel {
+    split: Arc<RatingsSplit>,
+    user_means: Arc<Vec<f32>>,
+    users: Vec<usize>,
+    cu: Matrix,
+    mu: Matrix,
+    agg: AggregatedUsers,
+    cagg: Matrix,
+    agg_means: Vec<f32>,
+    refine_order: RefineOrder,
+}
+
+impl CfModel {
+    /// Build the shard from a partition of training users: gather their
+    /// centered rows, LSH-bucket them on unit-normalized rows (angular
+    /// hashing — see the field comment in the old map task), aggregate
+    /// each bucket, and precompute the centered aggregated rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        split: &Arc<RatingsSplit>,
+        user_means: &Arc<Vec<f32>>,
+        range: RowRange,
+        compression_ratio: f64,
+        grouping: Grouping,
+        refine_order: RefineOrder,
+        seed: u64,
+        metrics: &mut TaskMetrics,
+    ) -> Result<CfModel> {
+        let users: Vec<usize> = (range.start..range.end).collect();
+        let m = split.train.n_items();
+
+        // Part 1: group similar users with LSH. Centered rating rows
+        // are sparse (unrated = 0), so raw Euclidean LSH would group
+        // users by *sparsity* rather than taste — two users with
+        // disjoint item sets are both near the origin. Normalizing each
+        // row to unit L2 norm turns the p-stable hash into an angular
+        // one: buckets collect users whose rating *directions* agree,
+        // which is exactly the Pearson neighborhood structure stage 1
+        // needs to preserve.
+        let mut sw = Stopwatch::new();
+        let (cu, mu) = user_block(split, &users);
+        let mut unit = cu.clone();
+        for r in 0..unit.rows() {
+            let row = unit.row_mut(r);
+            let norm = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+            if norm > 1e-6 {
+                for v in row.iter_mut() {
+                    *v /= norm;
+                }
+            }
+        }
+        let bucketing = Bucketizer {
+            grouping,
+            ..Bucketizer::with_ratio(compression_ratio, seed)
+        }
+        .bucketize(&unit)?;
+        drop(unit);
+        metrics.lsh_s += sw.lap_s();
+
+        // Part 2: aggregate each bucket into one aggregated user.
+        // Bucket member indices are partition-local; build a local view.
+        let local_matrix = crate::data::ratings::RatingMatrix {
+            ratings: split.train.ratings.gather_rows(&users),
+            mask: split.train.mask.gather_rows(&users),
+            rated: users.iter().map(|&u| split.train.rated[u].clone()).collect(),
+        };
+        let agg = AggregatedUsers::build(&local_matrix, &bucketing)?;
+        let n_buckets = agg.len();
+        let mut cagg = Matrix::zeros(n_buckets, m);
+        let mut agg_means = Vec::with_capacity(n_buckets);
+        for b in 0..n_buckets {
+            let (row, mean) = agg.centered_row(b);
+            cagg.row_mut(b).copy_from_slice(&row);
+            agg_means.push(mean);
+        }
+        metrics.aggregate_s += sw.lap_s();
+
+        Ok(CfModel {
+            split: Arc::clone(split),
+            user_means: Arc::clone(user_means),
+            users,
+            cu,
+            mu,
+            agg,
+            cagg,
+            agg_means,
+            refine_order,
+        })
+    }
+
+    /// Aggregated buckets in this shard (inherent mirror of the
+    /// [`ServableModel`] method so batch code needs no trait import).
+    pub fn n_buckets(&self) -> usize {
+        self.agg.len()
+    }
+
+    /// The aggregation (buckets of users).
+    pub fn agg(&self) -> &AggregatedUsers {
+        &self.agg
+    }
+
+    /// Centered aggregated rows (buckets × items) — stage 1's scoring
+    /// block.
+    pub fn cagg(&self) -> &Matrix {
+        &self.cagg
+    }
+
+    /// Per-bucket mean rating of the aggregated user.
+    pub fn agg_means(&self) -> &[f32] {
+        &self.agg_means
+    }
+
+    /// Global train-user ids of this shard's partition.
+    pub fn users(&self) -> &[usize] {
+        &self.users
+    }
+
+    /// Visit every original user of `bucket` with their Pearson weight
+    /// against the given centered query row, skipping `exclude` and
+    /// zero/non-finite weights — the inner loop shared by batch stage 2
+    /// (record emission) and per-query refinement (sum folding).
+    pub fn for_each_original(
+        &self,
+        bucket: usize,
+        q_cu: &[f32],
+        q_mu: &[f32],
+        exclude: Option<usize>,
+        mut f: impl FnMut(usize, f32),
+    ) {
+        for &local in &self.agg.index[bucket] {
+            let v = self.users[local as usize];
+            if exclude == Some(v) {
+                continue;
+            }
+            let w = pearson_pair(
+                q_cu,
+                q_mu,
+                self.cu.row(local as usize),
+                self.mu.row(local as usize),
+            );
+            if w == 0.0 || !w.is_finite() {
+                continue;
+            }
+            f(v, w);
+        }
+    }
+}
+
+impl ServableModel for CfModel {
+    type Query = CfQuery;
+    type Answer = CfPartial;
+    type Response = f32;
+
+    fn n_buckets(&self) -> usize {
+        self.agg.len()
+    }
+
+    fn n_originals(&self) -> usize {
+        self.users.len()
+    }
+
+    fn answer_initial(&self, query: &Self::Query) -> InitialAnswer<Self::Answer> {
+        let item = query.item as usize;
+        let n_buckets = self.agg.len();
+        let mut corr = Vec::with_capacity(n_buckets);
+        let mut partial = CfPartial::default();
+        for b in 0..n_buckets {
+            let w = pearson_pair(
+                query.cu.as_slice(),
+                query.mu.as_slice(),
+                self.cagg.row(b),
+                self.agg.mask.row(b),
+            );
+            corr.push(w);
+            if w == 0.0 || !w.is_finite() {
+                continue;
+            }
+            if self.agg.mask.get(b, item) > 0.0 {
+                let dev = self.agg.ratings.get(b, item) - self.agg_means[b];
+                partial.num += w as f64 * dev as f64;
+                partial.den += w.abs() as f64;
+            }
+        }
+        InitialAnswer {
+            answer: partial,
+            correlations: corr,
+        }
+    }
+
+    fn refine(
+        &self,
+        query: &Self::Query,
+        initial: &InitialAnswer<Self::Answer>,
+        budget: usize,
+    ) -> Self::Answer {
+        if budget == 0 {
+            return initial.answer;
+        }
+        let chosen = match self.refine_order {
+            RefineOrder::Correlation => refinement_order(&initial.correlations, budget),
+            RefineOrder::Random => {
+                refinement_order_random(initial.correlations.len(), budget, query.seed)
+            }
+        };
+        let item = query.item as usize;
+        let exclude = query.exclude.map(|u| u as usize);
+        let mut partial = initial.answer;
+        for &b in &chosen {
+            // Withdraw the bucket's aggregated evidence...
+            let w = initial.correlations[b];
+            if w != 0.0 && w.is_finite() && self.agg.mask.get(b, item) > 0.0 {
+                let dev = self.agg.ratings.get(b, item) - self.agg_means[b];
+                partial.num -= w as f64 * dev as f64;
+                partial.den -= w.abs() as f64;
+            }
+            // ...and replace it with the original users'.
+            self.for_each_original(b, query.cu.as_slice(), query.mu.as_slice(), exclude, |v, wv| {
+                if self.split.train.mask.get(v, item) > 0.0 {
+                    let dev = self.split.train.ratings.get(v, item) - self.user_means[v];
+                    partial.num += wv as f64 * dev as f64;
+                    partial.den += wv.abs() as f64;
+                }
+            });
+        }
+        partial
+    }
+
+    fn merge(&self, query: &Self::Query, partials: &[Self::Answer]) -> Self::Response {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for p in partials {
+            num += p.num;
+            den += p.den;
+        }
+        let p = if den > 1e-12 {
+            (query.mean as f64 + num / den) as f32
+        } else {
+            query.mean
+        };
+        p.clamp(1.0, 5.0)
+    }
+
+    fn accuracy(&self, query: &Self::Query, response: &Self::Response) -> Option<f64> {
+        query.actual.map(|a| {
+            let d = (*response - a) as f64;
+            -(d * d)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::points::split_rows;
+    use crate::data::ratings::LatentFactorSpec;
+
+    fn setup() -> (Arc<RatingsSplit>, Arc<Vec<f32>>, CfModel) {
+        let ratings = LatentFactorSpec {
+            n_users: 200,
+            n_items: 64,
+            n_factors: 4,
+            mean_ratings_per_user: 16,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        let split = Arc::new(RatingsSplit::new(&ratings, 10, 0.2, 9).unwrap());
+        let user_means = user_means(&split);
+        let range = split_rows(split.train.n_users(), 1)[0];
+        let model = CfModel::build(
+            &split,
+            &user_means,
+            range,
+            10.0,
+            Grouping::Lsh,
+            RefineOrder::Correlation,
+            3,
+            &mut TaskMetrics::default(),
+        )
+        .unwrap();
+        (split, user_means, model)
+    }
+
+    fn query_for(split: &RatingsSplit, idx: usize, seed: u64) -> CfQuery {
+        let (u, i, actual) = split.test[idx];
+        let (cu, mean) = split.train.centered_row(u as usize);
+        let m = split.train.n_items();
+        let mut mu = vec![0.0f32; m];
+        for &it in &split.train.rated[u as usize] {
+            mu[it as usize] = 1.0;
+        }
+        CfQuery {
+            cu: Arc::new(cu),
+            mu: Arc::new(mu),
+            mean,
+            item: i,
+            exclude: Some(u),
+            actual: Some(actual),
+            seed,
+        }
+    }
+
+    #[test]
+    fn initial_answer_scores_every_bucket() {
+        let (split, _, model) = setup();
+        let q = query_for(&split, 0, 7);
+        let init = model.answer_initial(&q);
+        assert_eq!(init.correlations.len(), model.n_buckets());
+        assert!(init.answer.den >= 0.0);
+        assert_eq!(model.refine(&q, &init, 0), init.answer);
+    }
+
+    #[test]
+    fn full_budget_refine_equals_exact_neighbor_scan() {
+        // Refining every bucket withdraws all aggregated evidence and
+        // folds every original user — the partial must match a direct
+        // scan of the shard's users (up to fp cancellation noise).
+        let (split, user_means, model) = setup();
+        for idx in 0..split.test.len().min(10) {
+            let q = query_for(&split, idx, 1);
+            let init = model.answer_initial(&q);
+            let refined = model.refine(&q, &init, model.n_buckets());
+
+            let item = q.item as usize;
+            let mut exact = CfPartial::default();
+            for (local, &v) in model.users().iter().enumerate() {
+                if Some(v) == q.exclude.map(|u| u as usize) {
+                    continue;
+                }
+                let w = pearson_pair(
+                    q.cu.as_slice(),
+                    q.mu.as_slice(),
+                    model.cu.row(local),
+                    model.mu.row(local),
+                );
+                if w == 0.0 || !w.is_finite() {
+                    continue;
+                }
+                if split.train.mask.get(v, item) > 0.0 {
+                    let dev = split.train.ratings.get(v, item) - user_means[v];
+                    exact.num += w as f64 * dev as f64;
+                    exact.den += w.abs() as f64;
+                }
+            }
+            assert!(
+                (refined.num - exact.num).abs() < 1e-6 && (refined.den - exact.den).abs() < 1e-6,
+                "query {idx}: refined {refined:?} vs exact {exact:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn merge_predicts_and_scores() {
+        let (split, _, model) = setup();
+        let q = query_for(&split, 0, 0);
+        let p = model.merge(&q, &[CfPartial { num: 0.5, den: 1.0 }]);
+        assert!((1.0..=5.0).contains(&p));
+        assert!(model.accuracy(&q, &p).unwrap() <= 0.0);
+        // No evidence -> the user's mean, clamped.
+        let fallback = model.merge(&q, &[CfPartial::default()]);
+        assert_eq!(fallback, q.mean.clamp(1.0, 5.0));
+    }
+}

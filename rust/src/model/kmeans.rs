@@ -1,0 +1,309 @@
+//! The k-means query core: one shard = one partition's bucket
+//! aggregation plus the trained centroids. A query is one point; the
+//! initial answer assigns it via the nearest *aggregated* bucket
+//! center, refinement scans the top-ranked buckets' original points
+//! for a closer representative. The answer quality metric — squared
+//! distance to the chosen representative — can only improve with
+//! refinement (the refined answer keeps the initial best), which gives
+//! serving a deterministically monotone anytime contract.
+
+use crate::aggregate::IndexFile;
+use crate::approx::algorithm1::{refinement_order, refinement_order_random, RefineOrder};
+use crate::data::matrix::{sq_dist, Matrix};
+use crate::data::points::RowRange;
+use crate::error::Result;
+use crate::lsh::bucketizer::Grouping;
+use crate::lsh::Bucketizer;
+use crate::mapreduce::metrics::TaskMetrics;
+use crate::model::{InitialAnswer, ServableModel};
+use crate::util::timer::Stopwatch;
+
+/// One k-means serving request: a point and the per-query seed (used
+/// by the random-refinement ablation).
+#[derive(Clone, Debug)]
+pub struct KmeansQuery {
+    pub point: Vec<f32>,
+    pub seed: u64,
+}
+
+/// A representative match: the squared distance to the closest
+/// representative found so far and the cluster that representative
+/// belongs to.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RepMatch {
+    pub dist: f32,
+    pub cluster: u32,
+}
+
+/// Nearest centroid of `p`: (index, distance, second-best distance).
+/// The margin `d1 - d2` is the batch job's boundary-bucket correlation.
+pub fn nearest_centroid(centroids: &Matrix, p: &[f32]) -> (usize, f32, f32) {
+    let mut best = (0usize, f32::INFINITY);
+    let mut second = f32::INFINITY;
+    for c in 0..centroids.rows() {
+        let d = sq_dist(centroids.row(c), p);
+        if d < best.1 {
+            second = best.1;
+            best = (c, d);
+        } else if d < second {
+            second = d;
+        }
+    }
+    (best.0, best.1, second)
+}
+
+/// Bucketize one partition and aggregate bucket means — the k-means
+/// generation step (Fig. 4 parts 1-2), shared by the batch runner's
+/// per-partition cache and the serving shard builder. Returns the
+/// gathered partition rows too, so callers that keep them (the serving
+/// shard) don't pay a second gather.
+pub fn build_partition_agg(
+    points: &Matrix,
+    range: RowRange,
+    compression_ratio: f64,
+    grouping: Grouping,
+    seed: u64,
+    metrics: &mut TaskMetrics,
+) -> Result<(Matrix, Matrix, IndexFile)> {
+    let mut sw = Stopwatch::new();
+    let rows: Vec<usize> = (range.start..range.end).collect();
+    let slice = points.gather_rows(&rows);
+    let bucketing = Bucketizer {
+        grouping,
+        ..Bucketizer::with_ratio(compression_ratio, seed)
+    }
+    .bucketize(&slice)?;
+    metrics.lsh_s += sw.lap_s();
+    let mut centers = Matrix::zeros(bucketing.buckets.len(), points.cols());
+    for (b, members) in bucketing.buckets.iter().enumerate() {
+        let idx: Vec<usize> = members.iter().map(|&i| i as usize).collect();
+        let mean = slice.mean_of_rows(&idx);
+        centers.row_mut(b).copy_from_slice(&mean);
+    }
+    metrics.aggregate_s += sw.lap_s();
+    Ok((slice, centers, bucketing.buckets))
+}
+
+/// One k-means shard: the partition's points, their aggregation, and
+/// the cluster assignment of every point and bucket center under the
+/// trained centroids.
+pub struct KmeansModel {
+    points: Matrix,
+    centers: Matrix,
+    index: IndexFile,
+    point_cluster: Vec<u32>,
+    center_cluster: Vec<u32>,
+    refine_order: RefineOrder,
+}
+
+impl KmeansModel {
+    /// Build the shard from a partition and trained centroids.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        points: &Matrix,
+        range: RowRange,
+        centroids: &Matrix,
+        compression_ratio: f64,
+        grouping: Grouping,
+        refine_order: RefineOrder,
+        seed: u64,
+        metrics: &mut TaskMetrics,
+    ) -> Result<KmeansModel> {
+        let (part, centers, index) = build_partition_agg(
+            points,
+            range,
+            compression_ratio,
+            grouping,
+            seed,
+            metrics,
+        )?;
+        let point_cluster: Vec<u32> = (0..part.rows())
+            .map(|r| nearest_centroid(centroids, part.row(r)).0 as u32)
+            .collect();
+        let center_cluster: Vec<u32> = (0..centers.rows())
+            .map(|b| nearest_centroid(centroids, centers.row(b)).0 as u32)
+            .collect();
+        Ok(KmeansModel {
+            points: part,
+            centers,
+            index,
+            point_cluster,
+            center_cluster,
+            refine_order,
+        })
+    }
+}
+
+impl ServableModel for KmeansModel {
+    type Query = KmeansQuery;
+    type Answer = RepMatch;
+    type Response = RepMatch;
+
+    fn n_buckets(&self) -> usize {
+        self.index.len()
+    }
+
+    fn n_originals(&self) -> usize {
+        self.points.rows()
+    }
+
+    fn answer_initial(&self, query: &Self::Query) -> InitialAnswer<Self::Answer> {
+        let n_buckets = self.centers.rows();
+        let mut corr = Vec::with_capacity(n_buckets);
+        let mut best = RepMatch {
+            dist: f32::INFINITY,
+            cluster: 0,
+        };
+        for b in 0..n_buckets {
+            let d = sq_dist(self.centers.row(b), &query.point);
+            // Proximity ranking: a query refines its *nearest* buckets
+            // first (the batch job ranks by assignment margin instead —
+            // it optimizes the global result, not one query).
+            corr.push(-d);
+            if d < best.dist {
+                best = RepMatch {
+                    dist: d,
+                    cluster: self.center_cluster[b],
+                };
+            }
+        }
+        InitialAnswer {
+            answer: best,
+            correlations: corr,
+        }
+    }
+
+    fn refine(
+        &self,
+        query: &Self::Query,
+        initial: &InitialAnswer<Self::Answer>,
+        budget: usize,
+    ) -> Self::Answer {
+        if budget == 0 {
+            return initial.answer;
+        }
+        let chosen = match self.refine_order {
+            RefineOrder::Correlation => refinement_order(&initial.correlations, budget),
+            RefineOrder::Random => {
+                refinement_order_random(initial.correlations.len(), budget, query.seed)
+            }
+        };
+        let mut best = initial.answer;
+        for &b in &chosen {
+            for &local in &self.index[b] {
+                let d = sq_dist(self.points.row(local as usize), &query.point);
+                if d < best.dist {
+                    best = RepMatch {
+                        dist: d,
+                        cluster: self.point_cluster[local as usize],
+                    };
+                }
+            }
+        }
+        best
+    }
+
+    fn merge(&self, _query: &Self::Query, partials: &[Self::Answer]) -> Self::Response {
+        let mut best = RepMatch {
+            dist: f32::INFINITY,
+            cluster: 0,
+        };
+        for p in partials {
+            if p.dist < best.dist {
+                best = *p;
+            }
+        }
+        best
+    }
+
+    fn accuracy(&self, _query: &Self::Query, response: &Self::Response) -> Option<f64> {
+        Some(-(response.dist as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixtureSpec;
+    use crate::data::points::split_rows;
+
+    fn shard() -> (KmeansModel, Matrix) {
+        let d = GaussianMixtureSpec {
+            n_points: 500,
+            dim: 6,
+            n_classes: 4,
+            noise: 0.2,
+            test_fraction: 0.01,
+            seed: 5,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        let pts = d.train;
+        // Trivial "trained" centroids: the first 4 points.
+        let centroids = pts.gather_rows(&[0, 1, 2, 3]);
+        let range = split_rows(pts.rows(), 1)[0];
+        let model = KmeansModel::build(
+            &pts,
+            range,
+            &centroids,
+            20.0,
+            Grouping::Lsh,
+            RefineOrder::Correlation,
+            3,
+            &mut TaskMetrics::default(),
+        )
+        .unwrap();
+        (model, pts)
+    }
+
+    #[test]
+    fn refinement_never_worsens_the_match() {
+        let (model, pts) = shard();
+        for r in (0..pts.rows()).step_by(37) {
+            let q = KmeansQuery {
+                point: pts.row(r).to_vec(),
+                seed: 1,
+            };
+            let init = model.answer_initial(&q);
+            let mut prev = init.answer.dist;
+            for budget in [1, 3, model.n_buckets()] {
+                let refined = model.refine(&q, &init, budget);
+                assert!(refined.dist <= prev + 1e-12, "budget {budget}");
+                prev = refined.dist;
+            }
+        }
+    }
+
+    #[test]
+    fn full_budget_finds_the_exact_nearest_point() {
+        // The query is a training point itself, so full refinement must
+        // find it at distance 0.
+        let (model, pts) = shard();
+        let q = KmeansQuery {
+            point: pts.row(17).to_vec(),
+            seed: 0,
+        };
+        let init = model.answer_initial(&q);
+        let refined = model.refine(&q, &init, model.n_buckets());
+        assert!(refined.dist <= 1e-12, "dist {}", refined.dist);
+    }
+
+    #[test]
+    fn merge_takes_the_closest_shard() {
+        let (model, _) = shard();
+        let q = KmeansQuery {
+            point: vec![0.0; 6],
+            seed: 0,
+        };
+        let merged = model.merge(
+            &q,
+            &[
+                RepMatch { dist: 2.0, cluster: 1 },
+                RepMatch { dist: 0.5, cluster: 3 },
+            ],
+        );
+        assert_eq!(merged, RepMatch { dist: 0.5, cluster: 3 });
+        assert_eq!(model.accuracy(&q, &merged), Some(-0.5));
+    }
+}

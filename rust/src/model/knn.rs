@@ -1,0 +1,338 @@
+//! The kNN query core: one shard = one partition's bucketized +
+//! aggregated training rows, extracted from `apps::knn`'s map task so
+//! that batch stage-1/stage-2 and per-query serving share one
+//! implementation.
+
+use std::sync::Arc;
+
+use crate::aggregate::AggregatedPoints;
+use crate::approx::algorithm1::{
+    refinement_order, refinement_order_random, stage2_selection, RefineOrder,
+};
+use crate::apps::knn::classify::{majority_vote, merge_candidates, LabeledCandidate};
+use crate::data::matrix::{sq_dist, Matrix};
+use crate::data::points::RowRange;
+use crate::error::Result;
+use crate::lsh::bucketizer::Grouping;
+use crate::lsh::Bucketizer;
+use crate::mapreduce::metrics::TaskMetrics;
+use crate::model::{InitialAnswer, ServableModel};
+use crate::runtime::backend::{ScoreBackend, TopK};
+use crate::util::timer::Stopwatch;
+
+/// One kNN serving request: a feature vector, optional ground-truth
+/// label, and the per-query seed (only consulted by the
+/// [`RefineOrder::Random`] ablation).
+#[derive(Clone, Debug)]
+pub struct KnnQuery {
+    pub features: Vec<f32>,
+    pub label: Option<u32>,
+    pub seed: u64,
+}
+
+/// One kNN shard: the gathered partition rows, their labels, and the
+/// aggregation (Fig. 2b parts 1-2), plus the scoring backend. Built
+/// once; every query is answered against it.
+pub struct KnnModel {
+    part: Matrix,
+    labels: Vec<u32>,
+    agg: AggregatedPoints,
+    k: usize,
+    refine_order: RefineOrder,
+    backend: Arc<dyn ScoreBackend>,
+}
+
+impl KnnModel {
+    /// Build the shard from a partition of the training set: gather the
+    /// rows, LSH-bucket them and aggregate each bucket (timed as
+    /// Fig. 4's parts 1-2). This is exactly the model-construction half
+    /// of the old map-task body.
+    #[allow(clippy::too_many_arguments)]
+    pub fn build(
+        train: &Matrix,
+        train_labels: &[u32],
+        range: RowRange,
+        k: usize,
+        compression_ratio: f64,
+        grouping: Grouping,
+        refine_order: RefineOrder,
+        seed: u64,
+        backend: Arc<dyn ScoreBackend>,
+        metrics: &mut TaskMetrics,
+    ) -> Result<KnnModel> {
+        let rows: Vec<usize> = (range.start..range.end).collect();
+        let part = train.gather_rows(&rows);
+        let labels: Vec<u32> = rows.iter().map(|&r| train_labels[r]).collect();
+
+        // Part 1: group similar data points using LSH.
+        let mut sw = Stopwatch::new();
+        let bucketing = Bucketizer {
+            grouping,
+            ..Bucketizer::with_ratio(compression_ratio, seed)
+        }
+        .bucketize(&part)?;
+        metrics.lsh_s += sw.lap_s();
+
+        // Part 2: information aggregation of original data points.
+        let agg = AggregatedPoints::build(&part, &labels, &bucketing)?;
+        metrics.aggregate_s += sw.lap_s();
+
+        Ok(KnnModel {
+            part,
+            labels,
+            agg,
+            k,
+            refine_order,
+            backend,
+        })
+    }
+
+    /// Dense (queries × buckets) squared-distance block against the
+    /// aggregated centroids — stage 1's scoring, shared by the batch
+    /// path (whole test matrix) and serving (one-row matrix).
+    pub fn score_block(&self, queries: &Matrix) -> Matrix {
+        self.backend
+            .knn_dists(queries, &self.agg.centroids)
+            .expect("backend scoring failed")
+    }
+
+    /// The initial answer for one query given its centroid-distance
+    /// row: every bucket's aggregated point as a candidate, top-k kept.
+    pub fn initial_topk(&self, drow: &[f32]) -> Vec<LabeledCandidate> {
+        let mut topk = TopK::new(self.k);
+        for (b, &dv) in drow.iter().enumerate() {
+            topk.push(dv, b as u32);
+        }
+        topk.into_sorted()
+            .into_iter()
+            .map(|(d, b)| (d, self.agg.labels[b as usize]))
+            .collect()
+    }
+
+    /// Plan one query's refinement (Algorithm 1 lines 2-5): correlation
+    /// of bucket `b` is `-drow[b]` (Definition 4), ranked by
+    /// `stage2_selection` under the shard's order switch.
+    pub fn plan(&self, drow: &[f32], eps_max: f64, seed: u64) -> Vec<usize> {
+        let corr: Vec<f32> = drow.iter().map(|&d| -d).collect();
+        stage2_selection(&corr, eps_max, self.refine_order, seed)
+    }
+
+    /// Refine one query (Algorithm 1 lines 6-10): the chosen buckets
+    /// contribute their original rows, the rest keep their aggregated
+    /// point. `is_refined` is caller-provided scratch (len == buckets)
+    /// so the batch loop can reuse one allocation across test points.
+    pub fn refine_query(
+        &self,
+        q: &[f32],
+        drow: &[f32],
+        chosen: &[usize],
+        is_refined: &mut [bool],
+    ) -> Vec<LabeledCandidate> {
+        let n_buckets = self.agg.len();
+        debug_assert_eq!(is_refined.len(), n_buckets);
+        is_refined.fill(false);
+        for &b in chosen {
+            is_refined[b] = true;
+        }
+        let mut topk = TopK::new(self.k);
+        // Refined buckets contribute their original points...
+        for &b in chosen {
+            for &local in &self.agg.index[b] {
+                let d = sq_dist(self.part.row(local as usize), q);
+                topk.push(d, local);
+            }
+        }
+        let mut cands: Vec<LabeledCandidate> = topk
+            .into_sorted()
+            .into_iter()
+            .map(|(d, local)| (d, self.labels[local as usize]))
+            .collect();
+        // ...unrefined buckets contribute their aggregated point
+        // (initial-output entries that survive refinement).
+        let mut agg_topk = TopK::new(self.k);
+        for b in 0..n_buckets {
+            if !is_refined[b] {
+                agg_topk.push(drow[b], b as u32);
+            }
+        }
+        for (d, b) in agg_topk.into_sorted() {
+            cands.push((d, self.agg.labels[b as usize]));
+        }
+        cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+        cands.truncate(self.k);
+        cands
+    }
+
+    /// Neighbors kept per query.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Aggregated buckets in this shard (inherent mirror of the
+    /// [`ServableModel`] method so batch code needs no trait import).
+    pub fn n_buckets(&self) -> usize {
+        self.agg.len()
+    }
+}
+
+impl ServableModel for KnnModel {
+    type Query = KnnQuery;
+    type Answer = Vec<LabeledCandidate>;
+    type Response = u32;
+
+    fn n_buckets(&self) -> usize {
+        self.agg.len()
+    }
+
+    fn n_originals(&self) -> usize {
+        self.part.rows()
+    }
+
+    fn answer_initial(&self, query: &Self::Query) -> InitialAnswer<Self::Answer> {
+        let q = Matrix::from_vec(1, query.features.len(), query.features.clone())
+            .expect("query feature vector");
+        let dists = self.score_block(&q);
+        let drow = dists.row(0);
+        InitialAnswer {
+            answer: self.initial_topk(drow),
+            correlations: drow.iter().map(|&d| -d).collect(),
+        }
+    }
+
+    fn refine(
+        &self,
+        query: &Self::Query,
+        initial: &InitialAnswer<Self::Answer>,
+        budget: usize,
+    ) -> Self::Answer {
+        if budget == 0 {
+            return initial.answer.clone();
+        }
+        let chosen = match self.refine_order {
+            RefineOrder::Correlation => refinement_order(&initial.correlations, budget),
+            RefineOrder::Random => {
+                refinement_order_random(initial.correlations.len(), budget, query.seed)
+            }
+        };
+        // Two small per-call allocations (drow + scratch) — unlike the
+        // batch loop there is no cross-query reuse point in the trait
+        // call; both are O(n_buckets), dwarfed by the bucket rescans.
+        let drow: Vec<f32> = initial.correlations.iter().map(|&c| -c).collect();
+        let mut is_refined = vec![false; self.n_buckets()];
+        self.refine_query(&query.features, &drow, &chosen, &mut is_refined)
+    }
+
+    fn merge(&self, _query: &Self::Query, partials: &[Self::Answer]) -> Self::Response {
+        majority_vote(&merge_candidates(partials, self.k))
+    }
+
+    fn accuracy(&self, query: &Self::Query, response: &Self::Response) -> Option<f64> {
+        query
+            .label
+            .map(|l| if *response == l { 1.0 } else { 0.0 })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixtureSpec;
+    use crate::data::points::split_rows;
+    use crate::runtime::backend::NativeBackend;
+
+    fn shard() -> (KnnModel, crate::data::gaussian::LabeledPoints) {
+        let data = GaussianMixtureSpec {
+            n_points: 600,
+            dim: 8,
+            n_classes: 3,
+            noise: 0.2,
+            test_fraction: 0.05,
+            seed: 11,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        let range = split_rows(data.train.rows(), 1)[0];
+        let model = KnnModel::build(
+            &data.train,
+            &data.train_labels,
+            range,
+            5,
+            8.0,
+            Grouping::Lsh,
+            RefineOrder::Correlation,
+            7,
+            Arc::new(NativeBackend),
+            &mut TaskMetrics::default(),
+        )
+        .unwrap();
+        (model, data)
+    }
+
+    #[test]
+    fn initial_answer_has_one_correlation_per_bucket() {
+        let (model, data) = shard();
+        let q = KnnQuery {
+            features: data.test.row(0).to_vec(),
+            label: Some(data.test_labels[0]),
+            seed: 7,
+        };
+        let init = model.answer_initial(&q);
+        assert_eq!(init.correlations.len(), model.n_buckets());
+        assert!(!init.answer.is_empty());
+        assert!(init.answer.len() <= model.k());
+    }
+
+    #[test]
+    fn zero_budget_refine_is_the_initial_answer() {
+        let (model, data) = shard();
+        let q = KnnQuery {
+            features: data.test.row(0).to_vec(),
+            label: None,
+            seed: 7,
+        };
+        let init = model.answer_initial(&q);
+        assert_eq!(model.refine(&q, &init, 0), init.answer);
+    }
+
+    #[test]
+    fn full_budget_refine_equals_exact_partition_scan() {
+        // Refining every bucket means every original row competes, so
+        // the shard answer must equal a brute-force scan of the rows.
+        let (model, data) = shard();
+        for t in 0..data.test.rows() {
+            let q = KnnQuery {
+                features: data.test.row(t).to_vec(),
+                label: None,
+                seed: 3,
+            };
+            let init = model.answer_initial(&q);
+            let refined = model.refine(&q, &init, model.n_buckets());
+            let mut topk = TopK::new(model.k());
+            for r in 0..model.part.rows() {
+                topk.push(sq_dist(model.part.row(r), &q.features), r as u32);
+            }
+            let exact: Vec<LabeledCandidate> = topk
+                .into_sorted()
+                .into_iter()
+                .map(|(d, local)| (d, model.labels[local as usize]))
+                .collect();
+            assert_eq!(refined, exact, "test point {t}");
+        }
+    }
+
+    #[test]
+    fn merge_votes_over_shard_answers() {
+        let (model, _) = shard();
+        let q = KnnQuery {
+            features: vec![0.0; 8],
+            label: Some(2),
+            seed: 0,
+        };
+        let partials = vec![vec![(0.1f32, 2u32), (0.2, 1)], vec![(0.15f32, 2u32)]];
+        let r = model.merge(&q, &partials);
+        assert_eq!(r, 2);
+        assert_eq!(model.accuracy(&q, &r), Some(1.0));
+        assert_eq!(model.accuracy(&q, &0), Some(0.0));
+    }
+}

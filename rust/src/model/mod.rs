@@ -1,0 +1,88 @@
+//! The query-core model layer: "build the model once, answer single
+//! queries against it" — the serving form of the map tasks.
+//!
+//! The batch jobs in [`crate::apps`] process whole partitions, but the
+//! arithmetic inside each map task is per *query* (per test point for
+//! kNN, per (user, item) pair for CF, per point assignment for
+//! k-means). This module extracts those per-query cores so that
+//!
+//! * the batch `MapReduceJob`/`TwoStageJob` impls become thin adapters
+//!   looping the cores over a partition (byte-identical outputs to the
+//!   pre-extraction code), and
+//! * the serving subsystem ([`crate::serve`]) can answer one query at a
+//!   time with the paper's anytime contract: a fast *initial* answer
+//!   from aggregated points, then per-query refinement that expands the
+//!   Algorithm-1-ranked buckets as budget allows.
+//!
+//! One [`ServableModel`] instance is one *shard*: the aggregated
+//! structures built from one partition of the training data (exactly
+//! what a map task builds today). A query is answered by every shard
+//! and the per-shard answers are merged — the per-query analogue of the
+//! batch reduce.
+
+pub mod cf;
+pub mod kmeans;
+pub mod knn;
+
+pub use cf::{CfModel, CfPartial, CfQuery};
+pub use kmeans::{KmeansModel, KmeansQuery, RepMatch};
+pub use knn::{KnnModel, KnnQuery};
+
+/// Stage-1 product for one query against one shard: the answer derived
+/// from aggregated points only, plus one correlation per bucket
+/// (Definition 4) so refinement can rank the buckets per query.
+#[derive(Clone, Debug)]
+pub struct InitialAnswer<A> {
+    /// The aggregated-only answer.
+    pub answer: A,
+    /// Per-bucket correlations, higher = refine first (Algorithm 1
+    /// line 2's ranking key).
+    pub correlations: Vec<f32>,
+}
+
+/// One shard of a servable model: per-query stage 1 (initial answer
+/// from aggregated points), per-query stage 2 (budgeted refinement via
+/// Algorithm 1's ranking), and the per-query reduce (merge across
+/// shards).
+pub trait ServableModel: Send + Sync + 'static {
+    /// One request. Carries optional ground truth so serving reports
+    /// can score accuracy without a separate oracle pass.
+    type Query: Send + Sync + 'static;
+    /// One shard's contribution to a query's answer.
+    type Answer: Clone + Send + 'static;
+    /// The merged, client-facing answer.
+    type Response: Send + 'static;
+
+    /// Aggregated buckets in this shard (the `k` of Algorithm 1).
+    fn n_buckets(&self) -> usize;
+
+    /// Original data points behind this shard's buckets (used by the
+    /// deadline-adaptive budget estimator in [`crate::serve`]).
+    fn n_originals(&self) -> usize;
+
+    /// Stage 1 for one query: the answer from aggregated points plus
+    /// the per-bucket correlations that rank refinement.
+    fn answer_initial(&self, query: &Self::Query) -> InitialAnswer<Self::Answer>;
+
+    /// Stage 2 for one query: expand up to `budget` ranked buckets
+    /// (Algorithm 1 lines 2-10) and return the replacement answer. A
+    /// budget of 0 must return the initial answer unchanged; budgets
+    /// beyond `n_buckets` are capped.
+    fn refine(
+        &self,
+        query: &Self::Query,
+        initial: &InitialAnswer<Self::Answer>,
+        budget: usize,
+    ) -> Self::Answer;
+
+    /// Merge per-shard answers into the client-facing response (the
+    /// per-query reduce). Every shard shares config, so any shard can
+    /// merge.
+    fn merge(&self, query: &Self::Query, partials: &[Self::Answer]) -> Self::Response;
+
+    /// Higher-is-better per-query accuracy when the query carries
+    /// ground truth (kNN: 0/1 correctness; CF: negative squared rating
+    /// error; k-means: negative squared distance to the chosen
+    /// representative).
+    fn accuracy(&self, query: &Self::Query, response: &Self::Response) -> Option<f64>;
+}

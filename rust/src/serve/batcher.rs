@@ -1,0 +1,80 @@
+//! Request micro-batching.
+//!
+//! A shard answers a whole batch of queries in one pool task, so the
+//! per-task overhead (submission, channel send, scheduling) amortizes
+//! across the batch instead of being paid per query — the standard
+//! serving trade of a little queueing latency for a lot of throughput.
+
+/// Accumulates requests and releases them in fixed-size batches.
+#[derive(Debug)]
+pub struct MicroBatcher<Q> {
+    capacity: usize,
+    pending: Vec<Q>,
+}
+
+impl<Q> MicroBatcher<Q> {
+    /// Batcher releasing batches of `capacity` (clamped to >= 1).
+    pub fn new(capacity: usize) -> MicroBatcher<Q> {
+        let capacity = capacity.max(1);
+        MicroBatcher {
+            capacity,
+            pending: Vec::with_capacity(capacity),
+        }
+    }
+
+    /// Enqueue one request; returns a full batch when the window fills.
+    pub fn push(&mut self, q: Q) -> Option<Vec<Q>> {
+        self.pending.push(q);
+        if self.pending.len() >= self.capacity {
+            Some(std::mem::replace(
+                &mut self.pending,
+                Vec::with_capacity(self.capacity),
+            ))
+        } else {
+            None
+        }
+    }
+
+    /// Release whatever is queued (end of the replay / timeout tick).
+    pub fn flush(&mut self) -> Option<Vec<Q>> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(std::mem::take(&mut self.pending))
+        }
+    }
+
+    /// Requests currently queued.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// The batch window.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn releases_full_batches_in_order() {
+        let mut b = MicroBatcher::new(3);
+        assert_eq!(b.push(1), None);
+        assert_eq!(b.push(2), None);
+        assert_eq!(b.push(3), Some(vec![1, 2, 3]));
+        assert_eq!(b.pending(), 0);
+        assert_eq!(b.push(4), None);
+        assert_eq!(b.flush(), Some(vec![4]));
+        assert_eq!(b.flush(), None);
+    }
+
+    #[test]
+    fn zero_capacity_degenerates_to_per_query_batches() {
+        let mut b = MicroBatcher::new(0);
+        assert_eq!(b.capacity(), 1);
+        assert_eq!(b.push(7), Some(vec![7]));
+    }
+}

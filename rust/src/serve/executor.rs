@@ -1,0 +1,572 @@
+//! The deadline-aware sharded executor.
+//!
+//! A [`ShardedServer`] owns one model shard per partition and serves a
+//! replayed query log over the batch engine's worker pool. Per batch:
+//!
+//! 1. **Stage 1** — one pool task per shard computes every query's
+//!    initial answer from aggregated points; results stream back in
+//!    completion order and are merged per query the moment the last
+//!    shard lands. The initial response is *always* delivered.
+//! 2. **Budget** — the per-request refinement budget is resolved:
+//!    a fixed bucket count, Algorithm 1's ε_max fraction, everything,
+//!    or whatever the remaining deadline affords (estimated from the
+//!    measured stage-1 cost and the shards' originals-per-bucket).
+//! 3. **Stage 2** — one pool task per shard refines the batch with the
+//!    resolved budget (Algorithm 1's ranking picks which buckets each
+//!    query expands); refined answers are merged into the final
+//!    responses.
+//!
+//! Task panics take the same path as the batch engine
+//! ([`crate::mapreduce::engine::drain_stream`]): the first panic fails
+//! the replay with an error after draining in-flight tasks.
+
+use std::sync::{mpsc, Arc};
+
+use crate::approx::algorithm1::refine_budget;
+use crate::error::{Error, Result};
+use crate::mapreduce::engine::{drain_stream, Engine};
+use crate::model::{InitialAnswer, ServableModel};
+use crate::serve::batcher::MicroBatcher;
+use crate::serve::stats::{LatencyStats, ServeReport};
+use crate::util::timer::Stopwatch;
+
+/// How much stage-2 work each request may spend, per shard.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RefineBudget {
+    /// No refinement: serve the initial answer only.
+    Off,
+    /// A fixed number of ranked buckets per shard.
+    Buckets(usize),
+    /// Algorithm 1's ε_max: `refine_budget(n_buckets, eps)` per shard.
+    Fraction(f64),
+    /// Refine every bucket (the anytime upper bound; equals the exact
+    /// answer for kNN/CF/k-means models).
+    All,
+    /// Spend whatever remains of the request deadline, estimated from
+    /// the measured stage-1 cost of the same batch.
+    Deadline,
+}
+
+/// Serving parameters for one replay.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfig {
+    /// Queries grouped per shard task (see
+    /// [`crate::serve::MicroBatcher`]).
+    pub batch_size: usize,
+    /// Per-request deadline, seconds from batch dispatch.
+    pub deadline_s: f64,
+    /// Refinement budget policy.
+    pub budget: RefineBudget,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            batch_size: 64,
+            deadline_s: 0.050,
+            budget: RefineBudget::Fraction(0.05),
+        }
+    }
+}
+
+/// Everything the server did for one request.
+#[derive(Clone, Debug)]
+pub struct QueryOutcome<R> {
+    /// The always-delivered initial response (aggregated points only).
+    pub initial: R,
+    /// The refined response, when any budget was spent.
+    pub refined: Option<R>,
+    /// Seconds from batch dispatch to the merged initial response.
+    pub initial_latency_s: f64,
+    /// Seconds from batch dispatch to the final response.
+    pub total_latency_s: f64,
+    /// Per-query accuracy of the initial response (ground truth
+    /// permitting).
+    pub initial_accuracy: Option<f64>,
+    /// Per-query accuracy of the refined response.
+    pub refined_accuracy: Option<f64>,
+    /// Buckets expanded for this request, summed over shards.
+    pub refined_buckets: usize,
+}
+
+impl<R> QueryOutcome<R> {
+    /// The response a client would act on: refined when present,
+    /// initial otherwise.
+    pub fn final_response(&self) -> &R {
+        self.refined.as_ref().unwrap_or(&self.initial)
+    }
+}
+
+/// A model sharded across the engine's worker pool.
+pub struct ShardedServer<M: ServableModel> {
+    shards: Vec<Arc<M>>,
+}
+
+impl<M: ServableModel> ShardedServer<M> {
+    /// Serve from the given shards (at least one).
+    pub fn new(shards: Vec<Arc<M>>) -> Result<ShardedServer<M>> {
+        if shards.is_empty() {
+            return Err(Error::Engine("server needs at least one shard".into()));
+        }
+        Ok(ShardedServer { shards })
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Replay a query log: batch, answer, refine. Returns the
+    /// per-request outcomes (in input order) and the aggregate report.
+    pub fn serve(
+        &self,
+        engine: &Engine,
+        queries: Vec<M::Query>,
+        config: &ServeConfig,
+    ) -> Result<(Vec<QueryOutcome<M::Response>>, ServeReport)> {
+        let queries = Arc::new(queries);
+        let mut outcomes: Vec<QueryOutcome<M::Response>> =
+            Vec::with_capacity(queries.len());
+        let mut batcher = MicroBatcher::new(config.batch_size);
+        for qi in 0..queries.len() {
+            if let Some(batch) = batcher.push(qi) {
+                self.serve_batch(engine, &queries, batch, config, &mut outcomes)?;
+            }
+        }
+        if let Some(batch) = batcher.flush() {
+            self.serve_batch(engine, &queries, batch, config, &mut outcomes)?;
+        }
+
+        let report = self.report(&queries, &outcomes, config);
+        Ok((outcomes, report))
+    }
+
+    /// One micro-batch through both stages.
+    fn serve_batch(
+        &self,
+        engine: &Engine,
+        queries: &Arc<Vec<M::Query>>,
+        batch: Vec<usize>,
+        config: &ServeConfig,
+        outcomes: &mut Vec<QueryOutcome<M::Response>>,
+    ) -> Result<()> {
+        let n_shards = self.shards.len();
+        let batch = Arc::new(batch);
+        let sw = Stopwatch::new();
+
+        // Stage 1: every shard answers the whole batch from aggregates.
+        let rx1 = engine.pool().stream(n_shards, |s| {
+            let shard = Arc::clone(&self.shards[s]);
+            let queries = Arc::clone(queries);
+            let batch = Arc::clone(&batch);
+            move || -> Vec<InitialAnswer<M::Answer>> {
+                batch.iter().map(|&qi| shard.answer_initial(&queries[qi])).collect()
+            }
+        });
+        let mut per_shard: Vec<Option<Vec<InitialAnswer<M::Answer>>>> =
+            (0..n_shards).map(|_| None).collect();
+        let mut failure: Option<Error> = None;
+        drain_stream(rx1, "serving stage-1", &mut failure, |s, v, _| {
+            per_shard[s] = Some(v);
+        });
+        if let Some(e) = failure {
+            return Err(e);
+        }
+
+        // Merge per query: the initial responses, always delivered.
+        let merger = &self.shards[0];
+        let mut initial_responses: Vec<M::Response> = Vec::with_capacity(batch.len());
+        for (j, &qi) in batch.iter().enumerate() {
+            let partials: Vec<M::Answer> = per_shard
+                .iter()
+                .map(|s| s.as_ref().expect("shard answer missing")[j].answer.clone())
+                .collect();
+            initial_responses.push(merger.merge(&queries[qi], &partials));
+        }
+        // The client-visible initial-response time: stage 1 *plus* the
+        // merge that produces the deliverable answer.
+        let initial_latency_s = sw.elapsed_s();
+
+        // Resolve the per-shard refinement budgets.
+        let budgets = self.resolve_budgets(config, initial_latency_s, batch.len());
+        let refined_buckets: usize = budgets
+            .iter()
+            .enumerate()
+            .map(|(s, &b)| b.min(self.shards[s].n_buckets()))
+            .sum();
+
+        if budgets.iter().all(|&b| b == 0) {
+            // Initial answers are final.
+            for (&qi, initial) in batch.iter().zip(initial_responses) {
+                let initial_accuracy = merger.accuracy(&queries[qi], &initial);
+                outcomes.push(QueryOutcome {
+                    initial,
+                    refined: None,
+                    initial_latency_s,
+                    total_latency_s: initial_latency_s,
+                    initial_accuracy,
+                    refined_accuracy: None,
+                    refined_buckets: 0,
+                });
+            }
+            return Ok(());
+        }
+
+        // Stage 2: every shard refines the whole batch with its budget,
+        // consuming the stage-1 answers it produced.
+        let (tx2, rx2) = mpsc::channel();
+        for (s, slot) in per_shard.iter_mut().enumerate() {
+            let initials = slot.take().expect("shard answer missing");
+            let shard = Arc::clone(&self.shards[s]);
+            let queries = Arc::clone(queries);
+            let batch = Arc::clone(&batch);
+            let budget = budgets[s];
+            engine.pool().stream_into(&tx2, s, move || -> Vec<M::Answer> {
+                batch
+                    .iter()
+                    .zip(&initials)
+                    .map(|(&qi, initial)| shard.refine(&queries[qi], initial, budget))
+                    .collect()
+            });
+        }
+        drop(tx2);
+        let mut refined_per_shard: Vec<Option<Vec<M::Answer>>> =
+            (0..n_shards).map(|_| None).collect();
+        let mut failure: Option<Error> = None;
+        drain_stream(rx2, "serving stage-2", &mut failure, |s, v, _| {
+            refined_per_shard[s] = Some(v);
+        });
+        if let Some(e) = failure {
+            return Err(e);
+        }
+        let total_latency_s = sw.elapsed_s();
+
+        for ((j, &qi), initial) in batch.iter().enumerate().zip(initial_responses) {
+            let partials: Vec<M::Answer> = refined_per_shard
+                .iter()
+                .map(|s| s.as_ref().expect("shard refinement missing")[j].clone())
+                .collect();
+            let refined = merger.merge(&queries[qi], &partials);
+            let initial_accuracy = merger.accuracy(&queries[qi], &initial);
+            let refined_accuracy = merger.accuracy(&queries[qi], &refined);
+            outcomes.push(QueryOutcome {
+                initial,
+                refined: Some(refined),
+                initial_latency_s,
+                total_latency_s,
+                initial_accuracy,
+                refined_accuracy,
+                refined_buckets,
+            });
+        }
+        Ok(())
+    }
+
+    /// Per-shard stage-2 budgets under the configured policy.
+    /// `elapsed_s` is the batch's dispatch-to-initial-response time —
+    /// it both anchors the remaining-deadline check and calibrates the
+    /// per-bucket cost estimate.
+    fn resolve_budgets(
+        &self,
+        config: &ServeConfig,
+        elapsed_s: f64,
+        batch_len: usize,
+    ) -> Vec<usize> {
+        match config.budget {
+            RefineBudget::Off => vec![0; self.shards.len()],
+            RefineBudget::Buckets(n) => vec![n; self.shards.len()],
+            RefineBudget::All => {
+                self.shards.iter().map(|s| s.n_buckets()).collect()
+            }
+            RefineBudget::Fraction(eps) => self
+                .shards
+                .iter()
+                .map(|s| refine_budget(s.n_buckets(), eps))
+                .collect(),
+            RefineBudget::Deadline => {
+                let remaining = config.deadline_s - elapsed_s;
+                if remaining <= 0.0 {
+                    return vec![0; self.shards.len()];
+                }
+                // Stage 1 scored every aggregated bucket once per query;
+                // refining a bucket rescans its originals, so one
+                // refined bucket costs roughly (originals / buckets) ×
+                // the per-bucket stage-1 cost. Divide the remaining
+                // time evenly across shards.
+                let total_buckets: usize =
+                    self.shards.iter().map(|s| s.n_buckets().max(1)).sum();
+                let per_bucket_s = (elapsed_s
+                    / (batch_len.max(1) * total_buckets.max(1)) as f64)
+                    .max(1e-9);
+                self.shards
+                    .iter()
+                    .map(|s| {
+                        let per_refined_bucket_s = per_bucket_s
+                            * (s.n_originals().max(1) as f64 / s.n_buckets().max(1) as f64);
+                        let affordable = remaining
+                            / (self.shards.len().max(1) * batch_len.max(1)) as f64
+                            / per_refined_bucket_s;
+                        (affordable.floor() as usize).min(s.n_buckets())
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Aggregate the outcomes into a [`ServeReport`].
+    fn report(
+        &self,
+        queries: &Arc<Vec<M::Query>>,
+        outcomes: &[QueryOutcome<M::Response>],
+        config: &ServeConfig,
+    ) -> ServeReport {
+        let mean_of = |xs: Vec<f64>| {
+            if xs.is_empty() {
+                None
+            } else {
+                Some(xs.iter().sum::<f64>() / xs.len() as f64)
+            }
+        };
+        let refined_queries = outcomes.iter().filter(|o| o.refined.is_some()).count();
+        let refined_buckets_mean = if refined_queries > 0 {
+            outcomes.iter().map(|o| o.refined_buckets as f64).sum::<f64>()
+                / refined_queries as f64
+        } else {
+            0.0
+        };
+        ServeReport {
+            queries: queries.len(),
+            shards: self.shards.len(),
+            initial: LatencyStats::from_samples(
+                outcomes.iter().map(|o| o.initial_latency_s).collect(),
+            ),
+            total: LatencyStats::from_samples(
+                outcomes.iter().map(|o| o.total_latency_s).collect(),
+            ),
+            initial_accuracy: mean_of(
+                outcomes.iter().filter_map(|o| o.initial_accuracy).collect(),
+            ),
+            // Final-response accuracy over the SAME population as the
+            // initial mean: unrefined queries contribute their initial
+            // accuracy, so partial refinement (e.g. Deadline budgets
+            // under load) cannot skew the comparison by averaging over
+            // an easier subset.
+            refined_accuracy: mean_of(
+                outcomes
+                    .iter()
+                    .filter_map(|o| o.refined_accuracy.or(o.initial_accuracy))
+                    .collect(),
+            ),
+            refined_queries,
+            refined_buckets_mean,
+            deadline_misses: outcomes
+                .iter()
+                .filter(|o| o.initial_latency_s > config.deadline_s)
+                .count(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::InitialAnswer;
+
+    /// Toy shard: buckets hold integers; the initial answer is the
+    /// bucket-max, refinement reveals the true max of expanded buckets.
+    /// Ground truth is the query's `target`.
+    struct ToyModel {
+        /// Per-bucket (aggregate_value, exact_value).
+        buckets: Vec<(i64, i64)>,
+        panic_on_refine: bool,
+    }
+
+    #[derive(Clone, Debug)]
+    struct ToyQuery {
+        target: i64,
+    }
+
+    impl ServableModel for ToyModel {
+        type Query = ToyQuery;
+        type Answer = i64;
+        type Response = i64;
+
+        fn n_buckets(&self) -> usize {
+            self.buckets.len()
+        }
+
+        fn n_originals(&self) -> usize {
+            self.buckets.len() * 4
+        }
+
+        fn answer_initial(&self, _q: &ToyQuery) -> InitialAnswer<i64> {
+            let answer = self.buckets.iter().map(|b| b.0).max().unwrap_or(0);
+            // Rank buckets by their aggregate value.
+            let correlations = self.buckets.iter().map(|b| b.0 as f32).collect();
+            InitialAnswer {
+                answer,
+                correlations,
+            }
+        }
+
+        fn refine(&self, _q: &ToyQuery, initial: &InitialAnswer<i64>, budget: usize) -> i64 {
+            if self.panic_on_refine {
+                panic!("injected refine fault");
+            }
+            let chosen =
+                crate::approx::algorithm1::refinement_order(&initial.correlations, budget);
+            let mut best = initial.answer;
+            for b in chosen {
+                best = best.max(self.buckets[b].1);
+            }
+            best
+        }
+
+        fn merge(&self, _q: &ToyQuery, partials: &[i64]) -> i64 {
+            partials.iter().copied().max().unwrap_or(0)
+        }
+
+        fn accuracy(&self, q: &ToyQuery, r: &i64) -> Option<f64> {
+            Some(-((q.target - r).abs() as f64))
+        }
+    }
+
+    fn server(panic_on_refine: bool) -> ShardedServer<ToyModel> {
+        ShardedServer::new(vec![
+            Arc::new(ToyModel {
+                buckets: vec![(5, 9), (3, 4), (1, 1)],
+                panic_on_refine,
+            }),
+            Arc::new(ToyModel {
+                buckets: vec![(2, 2), (4, 12)],
+                panic_on_refine,
+            }),
+        ])
+        .unwrap()
+    }
+
+    fn queries(n: usize) -> Vec<ToyQuery> {
+        (0..n).map(|_| ToyQuery { target: 12 }).collect()
+    }
+
+    #[test]
+    fn rejects_empty_shard_set() {
+        assert!(ShardedServer::<ToyModel>::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn initial_only_when_budget_off() {
+        let engine = Engine::new(2);
+        let (outcomes, report) = server(false)
+            .serve(
+                &engine,
+                queries(5),
+                &ServeConfig {
+                    batch_size: 2,
+                    deadline_s: 10.0,
+                    budget: RefineBudget::Off,
+                },
+            )
+            .unwrap();
+        assert_eq!(outcomes.len(), 5);
+        for o in &outcomes {
+            assert_eq!(o.initial, 5, "initial = max of aggregates");
+            assert!(o.refined.is_none());
+            assert_eq!(o.refined_buckets, 0);
+            assert_eq!(*o.final_response(), 5);
+        }
+        assert_eq!(report.refined_queries, 0);
+        assert_eq!(report.deadline_misses, 0);
+        assert_eq!(report.queries, 5);
+        assert_eq!(report.shards, 2);
+    }
+
+    #[test]
+    fn full_budget_recovers_the_exact_answer() {
+        let engine = Engine::new(2);
+        let (outcomes, report) = server(false)
+            .serve(
+                &engine,
+                queries(7),
+                &ServeConfig {
+                    batch_size: 3,
+                    deadline_s: 10.0,
+                    budget: RefineBudget::All,
+                },
+            )
+            .unwrap();
+        for o in &outcomes {
+            assert_eq!(o.initial, 5);
+            assert_eq!(o.refined, Some(12), "exact max after full refinement");
+            assert!(o.total_latency_s >= o.initial_latency_s);
+            assert_eq!(o.refined_buckets, 5, "all buckets of both shards");
+        }
+        // Ground truth is 12: refined is exact, initial is off by 7.
+        assert_eq!(report.refined_accuracy, Some(0.0));
+        assert_eq!(report.initial_accuracy, Some(-7.0));
+        assert!(report.refined_accuracy >= report.initial_accuracy);
+    }
+
+    #[test]
+    fn fixed_bucket_budget_is_partial() {
+        let engine = Engine::new(2);
+        let (outcomes, _) = server(false)
+            .serve(
+                &engine,
+                queries(1),
+                &ServeConfig {
+                    batch_size: 1,
+                    deadline_s: 10.0,
+                    budget: RefineBudget::Buckets(1),
+                },
+            )
+            .unwrap();
+        // Shard 0 expands its top aggregate bucket (5 -> 9); shard 1
+        // expands (4 -> 12). Merge = 12.
+        assert_eq!(outcomes[0].refined, Some(12));
+        assert_eq!(outcomes[0].refined_buckets, 2);
+    }
+
+    #[test]
+    fn zero_deadline_counts_misses_but_still_answers() {
+        let engine = Engine::new(2);
+        let (outcomes, report) = server(false)
+            .serve(
+                &engine,
+                queries(4),
+                &ServeConfig {
+                    batch_size: 4,
+                    deadline_s: 0.0,
+                    budget: RefineBudget::Deadline,
+                },
+            )
+            .unwrap();
+        assert_eq!(outcomes.len(), 4, "initial answers always delivered");
+        assert_eq!(report.deadline_misses, 4);
+        for o in &outcomes {
+            assert!(o.refined.is_none(), "no budget left past the deadline");
+        }
+    }
+
+    #[test]
+    fn refine_panic_fails_the_replay_without_hanging() {
+        let engine = Engine::new(2);
+        let err = server(true)
+            .serve(
+                &engine,
+                queries(3),
+                &ServeConfig {
+                    batch_size: 3,
+                    deadline_s: 10.0,
+                    budget: RefineBudget::All,
+                },
+            )
+            .unwrap_err();
+        assert!(err.to_string().contains("serving stage-2"), "{err}");
+        // The engine stays usable afterwards.
+        let (outcomes, _) = server(false)
+            .serve(&engine, queries(2), &ServeConfig::default())
+            .unwrap();
+        assert_eq!(outcomes.len(), 2);
+    }
+}

@@ -1,0 +1,34 @@
+//! The sharded anytime serving subsystem.
+//!
+//! The paper's two-stage split — *initial answer from aggregated
+//! points, refinement from accuracy-critical originals* — maps directly
+//! onto deadline-bounded anytime query serving (the contract EARL-style
+//! systems expose to clients): every request always gets its initial
+//! answer, and whatever per-request budget remains is spent refining
+//! the Algorithm-1-ranked buckets.
+//!
+//! Pieces:
+//!
+//! * [`MicroBatcher`] — groups in-flight requests so each model shard
+//!   sees one task per batch instead of one task per query;
+//! * [`ShardedServer`] — shards a [`crate::model::ServableModel`]
+//!   across the engine's [`crate::util::pool::WorkerPool`], runs stage
+//!   1 for a batch on every shard, merges the per-shard answers into
+//!   initial responses, then spends the remaining budget on stage-2
+//!   refinement tasks (same drain/failure path as the batch engine:
+//!   [`crate::mapreduce::engine::drain_stream`]);
+//! * [`query_log`] — synthetic query logs derived from the workbench
+//!   datasets, for replay by the CLI `serve` command, the e2e tests and
+//!   `benches/serving.rs`;
+//! * [`ServeReport`] — per-run latency percentiles plus
+//!   initial-vs-refined accuracy, the serving analogue of
+//!   [`crate::mapreduce::metrics::TracePoint`] accounting.
+
+pub mod batcher;
+pub mod executor;
+pub mod query_log;
+pub mod stats;
+
+pub use batcher::MicroBatcher;
+pub use executor::{QueryOutcome, RefineBudget, ServeConfig, ShardedServer};
+pub use stats::{LatencyStats, ServeReport};

@@ -1,0 +1,146 @@
+//! Synthetic query logs for replay.
+//!
+//! Serving is exercised by replaying deterministic logs derived from
+//! the workbench datasets: kNN queries are held-out test points (with
+//! their labels as ground truth), CF queries are held-out (user, item)
+//! ratings, k-means queries are jittered training points. Logs longer
+//! than the source data cycle through it — a skew-free stand-in for
+//! repeat traffic.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::data::gaussian::LabeledPoints;
+use crate::data::matrix::Matrix;
+use crate::data::ratings::RatingsSplit;
+use crate::model::cf::CfQuery;
+use crate::model::kmeans::KmeansQuery;
+use crate::model::knn::KnnQuery;
+use crate::util::rng::Rng;
+
+/// `n` kNN queries cycling over the held-out test points. Per-query
+/// seeds mirror the batch job's plan seeds (`seed ^ test_row`).
+pub fn knn_query_log(data: &LabeledPoints, n: usize, seed: u64) -> Vec<KnnQuery> {
+    let n_test = data.test.rows().max(1);
+    (0..n)
+        .map(|i| {
+            let t = i % n_test;
+            KnnQuery {
+                features: data.test.row(t).to_vec(),
+                label: Some(data.test_labels[t]),
+                seed: seed ^ t as u64,
+            }
+        })
+        .collect()
+}
+
+/// `n` CF queries cycling over the held-out (user, item, rating)
+/// triplets. Each query carries the user's centered row + mask + mean
+/// and excludes the user from their own neighborhood. The dense row
+/// and mask are built once per distinct user and `Arc`-shared across
+/// the repeats, so the log is O(distinct users) in memory, not O(n).
+pub fn cf_query_log(split: &RatingsSplit, n: usize, seed: u64) -> Vec<CfQuery> {
+    let n_test = split.test.len().max(1);
+    let m = split.train.n_items();
+    let mut rows: HashMap<u32, (Arc<Vec<f32>>, Arc<Vec<f32>>, f32)> = HashMap::new();
+    (0..n)
+        .map(|i| {
+            let (u, item, actual) = split.test[i % n_test];
+            let (cu, mu, mean) = rows
+                .entry(u)
+                .or_insert_with(|| {
+                    let (cu, mean) = split.train.centered_row(u as usize);
+                    let mut mu = vec![0.0f32; m];
+                    for &it in &split.train.rated[u as usize] {
+                        mu[it as usize] = 1.0;
+                    }
+                    (Arc::new(cu), Arc::new(mu), mean)
+                })
+                .clone();
+            CfQuery {
+                cu,
+                mu,
+                mean,
+                item,
+                exclude: Some(u),
+                actual: Some(actual),
+                seed: seed ^ i as u64,
+            }
+        })
+        .collect()
+}
+
+/// `n` k-means queries: training points with a little Gaussian jitter,
+/// so queries sit near (not on) the data manifold.
+pub fn kmeans_query_log(points: &Matrix, n: usize, seed: u64) -> Vec<KmeansQuery> {
+    let mut rng = Rng::new(seed ^ 0x5E4E);
+    let rows = points.rows().max(1);
+    (0..n)
+        .map(|i| {
+            let r = rng.index(rows);
+            let mut point = points.row(r).to_vec();
+            for v in point.iter_mut() {
+                *v += rng.normal() as f32 * 0.05;
+            }
+            KmeansQuery {
+                point,
+                seed: seed ^ i as u64,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixtureSpec;
+    use crate::data::ratings::LatentFactorSpec;
+
+    #[test]
+    fn knn_log_cycles_and_carries_labels() {
+        let d = GaussianMixtureSpec {
+            n_points: 300,
+            dim: 4,
+            n_classes: 2,
+            test_fraction: 0.05,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        let n_test = d.test.rows();
+        let log = knn_query_log(&d, n_test * 2 + 3, 9);
+        assert_eq!(log.len(), n_test * 2 + 3);
+        assert_eq!(log[0].features, log[n_test].features);
+        assert!(log.iter().all(|q| q.label.is_some()));
+    }
+
+    #[test]
+    fn cf_log_matches_heldout_and_is_deterministic() {
+        let m = LatentFactorSpec {
+            n_users: 120,
+            n_items: 48,
+            mean_ratings_per_user: 10,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        let split = RatingsSplit::new(&m, 8, 0.2, 3).unwrap();
+        let a = cf_query_log(&split, 20, 5);
+        let b = cf_query_log(&split, 20, 5);
+        assert_eq!(a.len(), 20);
+        assert_eq!(a[0].item, b[0].item);
+        assert_eq!(a[0].cu, b[0].cu);
+        assert!(a.iter().all(|q| q.actual.is_some() && q.exclude.is_some()));
+    }
+
+    #[test]
+    fn kmeans_log_jitters_points_deterministically() {
+        let pts = Matrix::from_vec(4, 2, vec![0., 0., 1., 1., 2., 2., 3., 3.]).unwrap();
+        let a = kmeans_query_log(&pts, 10, 1);
+        let b = kmeans_query_log(&pts, 10, 1);
+        assert_eq!(a.len(), 10);
+        for (qa, qb) in a.iter().zip(&b) {
+            assert_eq!(qa.point, qb.point);
+        }
+    }
+}

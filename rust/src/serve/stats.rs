@@ -1,0 +1,129 @@
+//! Serving-side accounting: latency percentiles and initial-vs-refined
+//! accuracy — the per-request analogue of the batch engine's
+//! [`crate::mapreduce::metrics::TracePoint`] trace.
+
+use crate::util::table::{f, Table};
+
+/// Latency summary over a set of per-request samples (seconds).
+#[derive(Clone, Debug, Default)]
+pub struct LatencyStats {
+    pub n: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p90_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+impl LatencyStats {
+    /// Summarize raw samples (empty input yields zeros).
+    pub fn from_samples(mut samples: Vec<f64>) -> LatencyStats {
+        if samples.is_empty() {
+            return LatencyStats::default();
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let n = samples.len();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        LatencyStats {
+            n,
+            mean_s: mean,
+            p50_s: percentile(&samples, 0.50),
+            p90_s: percentile(&samples, 0.90),
+            p99_s: percentile(&samples, 0.99),
+            max_s: samples[n - 1],
+        }
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample.
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((p * (sorted.len() - 1) as f64).round() as usize).min(sorted.len() - 1);
+    sorted[idx]
+}
+
+/// One serving run's report: how fast the initial answers landed, how
+/// fast the refined ones did, and what each was worth.
+#[derive(Clone, Debug)]
+pub struct ServeReport {
+    /// Requests replayed.
+    pub queries: usize,
+    /// Model shards served from.
+    pub shards: usize,
+    /// Latency of the always-delivered initial answer.
+    pub initial: LatencyStats,
+    /// End-to-end latency including refinement (== initial when no
+    /// budget was spent).
+    pub total: LatencyStats,
+    /// Mean per-query accuracy of initial answers (None when no query
+    /// carried ground truth). Metric is app-defined: kNN 0/1
+    /// correctness, CF negative squared rating error, k-means negative
+    /// squared distance to the chosen representative.
+    pub initial_accuracy: Option<f64>,
+    /// Mean per-query accuracy of the final (client-visible) response:
+    /// the refined answer where refinement ran, the initial answer
+    /// otherwise — averaged over the same population as
+    /// `initial_accuracy` so partial refinement cannot bias the
+    /// comparison.
+    pub refined_accuracy: Option<f64>,
+    /// Requests that received any refinement.
+    pub refined_queries: usize,
+    /// Mean buckets expanded per refined request (summed over shards).
+    pub refined_buckets_mean: f64,
+    /// Requests whose initial answer landed after their deadline.
+    pub deadline_misses: usize,
+}
+
+impl ServeReport {
+    /// Render as a two-row latency table (initial vs refined) plus an
+    /// accuracy row.
+    pub fn table(&self, title: &str) -> Table {
+        let ms = |s: f64| f(s * 1e3, 3);
+        let mut t = Table::new(
+            title,
+            &["answer", "p50_ms", "p90_ms", "p99_ms", "max_ms", "mean_accuracy"],
+        );
+        t.row(vec![
+            "initial".into(),
+            ms(self.initial.p50_s),
+            ms(self.initial.p90_s),
+            ms(self.initial.p99_s),
+            ms(self.initial.max_s),
+            self.initial_accuracy.map(|a| f(a, 4)).unwrap_or_else(|| "-".into()),
+        ]);
+        t.row(vec![
+            "refined".into(),
+            ms(self.total.p50_s),
+            ms(self.total.p90_s),
+            ms(self.total.p99_s),
+            ms(self.total.max_s),
+            self.refined_accuracy.map(|a| f(a, 4)).unwrap_or_else(|| "-".into()),
+        ]);
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_on_known_samples() {
+        let s = LatencyStats::from_samples((1..=100).map(|i| i as f64).collect());
+        assert_eq!(s.n, 100);
+        assert!((s.p50_s - 50.0).abs() <= 1.0);
+        assert!((s.p99_s - 99.0).abs() <= 1.0);
+        assert_eq!(s.max_s, 100.0);
+        assert!((s.mean_s - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_samples_are_zero() {
+        let s = LatencyStats::from_samples(vec![]);
+        assert_eq!(s.n, 0);
+        assert_eq!(s.max_s, 0.0);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+}

@@ -1,0 +1,360 @@
+//! End-to-end serving integration: the sharded anytime executor over
+//! real models, replaying synthetic query logs.
+//!
+//! The acceptance shape mirrors the streaming-engine e2e tests: every
+//! query always gets an initial answer (and within its deadline when
+//! the deadline is generous), full-budget refinement never lowers
+//! accuracy, and the query-core extraction left the batch outputs
+//! unchanged (anchored to the mode-independent golden: AccurateML at
+//! r=1/ε=1 equals the exact scan, and streamed == barrier).
+
+use std::sync::Arc;
+
+use accurateml::approx::ProcessingMode;
+use accurateml::apps::kmeans::{KmeansConfig, KmeansRunner};
+use accurateml::apps::knn::{KnnConfig, KnnJob};
+use accurateml::apps::cf::{CfConfig, CfJob};
+use accurateml::data::gaussian::GaussianMixtureSpec;
+use accurateml::data::points::split_rows;
+use accurateml::data::ratings::{LatentFactorSpec, RatingsSplit};
+use accurateml::lsh::bucketizer::Grouping;
+use accurateml::approx::algorithm1::RefineOrder;
+use accurateml::mapreduce::engine::Engine;
+use accurateml::mapreduce::metrics::TaskMetrics;
+use accurateml::model::{CfModel, KmeansModel, KnnModel};
+use accurateml::runtime::backend::NativeBackend;
+use accurateml::serve::{query_log, RefineBudget, ServeConfig, ShardedServer};
+
+/// A deadline no local batch can miss, so "initial answer before the
+/// deadline" is a hard assertion rather than a flake.
+const GENEROUS_DEADLINE_S: f64 = 30.0;
+
+fn knn_data() -> Arc<accurateml::data::gaussian::LabeledPoints> {
+    // Mirrors engine_e2e's streaming test: well-separated classes so
+    // full refinement (== the exact scan) can only match or improve the
+    // aggregated-only initial answer.
+    Arc::new(
+        GaussianMixtureSpec {
+            n_points: 3000,
+            dim: 16,
+            n_classes: 4,
+            noise: 0.1,
+            test_fraction: 0.02,
+            seed: 21,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap(),
+    )
+}
+
+fn knn_shards(
+    data: &Arc<accurateml::data::gaussian::LabeledPoints>,
+    n_partitions: usize,
+    ratio: f64,
+) -> Vec<Arc<KnnModel>> {
+    split_rows(data.train.rows(), n_partitions)
+        .into_iter()
+        .filter(|r| !r.is_empty())
+        .map(|range| {
+            Arc::new(
+                KnnModel::build(
+                    &data.train,
+                    &data.train_labels,
+                    range,
+                    5,
+                    ratio,
+                    Grouping::Lsh,
+                    RefineOrder::Correlation,
+                    5,
+                    Arc::new(NativeBackend),
+                    &mut TaskMetrics::default(),
+                )
+                .unwrap(),
+            )
+        })
+        .collect()
+}
+
+#[test]
+fn knn_serving_initial_always_lands_and_refinement_never_hurts() {
+    let data = knn_data();
+    let server = ShardedServer::new(knn_shards(&data, 8, 10.0)).unwrap();
+    let engine = Engine::new(4);
+    let queries = query_log::knn_query_log(&data, data.test.rows(), 5);
+    let n = queries.len();
+    let (outcomes, report) = server
+        .serve(
+            &engine,
+            queries,
+            &ServeConfig {
+                batch_size: 16,
+                deadline_s: GENEROUS_DEADLINE_S,
+                budget: RefineBudget::All,
+            },
+        )
+        .unwrap();
+
+    // Every query got an initial answer, before its deadline.
+    assert_eq!(outcomes.len(), n);
+    assert_eq!(report.deadline_misses, 0);
+    for o in &outcomes {
+        assert!(o.initial_latency_s <= GENEROUS_DEADLINE_S);
+        assert!(o.total_latency_s >= o.initial_latency_s);
+        assert!(o.refined.is_some());
+    }
+
+    // Full-budget refinement never lowers accuracy on this fixed seed
+    // (the serving analogue of the monotone streaming trace).
+    let (ia, ra) = (
+        report.initial_accuracy.unwrap(),
+        report.refined_accuracy.unwrap(),
+    );
+    assert!(ra >= ia, "refined accuracy {ra} < initial {ia}");
+    assert!(ra > 0.9, "fully refined serving accuracy {ra}");
+}
+
+#[test]
+fn knn_full_refinement_matches_the_batch_job() {
+    // Full-budget serving refinement runs the same per-query core the
+    // batch stage 2 loops, so the served predictions must equal the
+    // barrier-mode job's predictions exactly.
+    let data = knn_data();
+    let engine = Engine::new(4);
+    let config = KnnConfig {
+        k: 5,
+        n_partitions: 8,
+        mode: ProcessingMode::AccurateML {
+            compression_ratio: 10.0,
+            refinement_threshold: 1.0,
+        },
+        seed: 5,
+        ..Default::default()
+    };
+    let job = KnnJob::new(config, Arc::clone(&data), Arc::new(NativeBackend)).unwrap();
+    let batch = engine.run(Arc::new(job)).unwrap();
+
+    let server = ShardedServer::new(knn_shards(&data, 8, 10.0)).unwrap();
+    let queries = query_log::knn_query_log(&data, data.test.rows(), 5);
+    let (outcomes, _) = server
+        .serve(
+            &engine,
+            queries,
+            &ServeConfig {
+                batch_size: 32,
+                deadline_s: GENEROUS_DEADLINE_S,
+                budget: RefineBudget::All,
+            },
+        )
+        .unwrap();
+    let served: Vec<u32> = outcomes.iter().map(|o| *o.final_response()).collect();
+    assert_eq!(served, batch.output.predictions);
+}
+
+#[test]
+fn cf_serving_refinement_never_raises_rmse() {
+    // Mirrors engine_e2e's CF streaming config: extreme compression
+    // makes the aggregated-only answer clearly coarser, full refinement
+    // recovers the exact neighbor scan.
+    let ratings = LatentFactorSpec {
+        n_users: 400,
+        n_items: 96,
+        n_factors: 4,
+        mean_ratings_per_user: 24,
+        ..Default::default()
+    }
+    .generate()
+    .unwrap();
+    let split = Arc::new(RatingsSplit::new(&ratings, 20, 0.2, 9).unwrap());
+    let user_means = accurateml::model::cf::user_means(&split);
+    let shards: Vec<Arc<CfModel>> = split_rows(split.train.n_users(), 4)
+        .into_iter()
+        .filter(|r| !r.is_empty())
+        .map(|range| {
+            Arc::new(
+                CfModel::build(
+                    &split,
+                    &user_means,
+                    range,
+                    100.0,
+                    Grouping::Lsh,
+                    RefineOrder::Correlation,
+                    3,
+                    &mut TaskMetrics::default(),
+                )
+                .unwrap(),
+            )
+        })
+        .collect();
+    let server = ShardedServer::new(shards).unwrap();
+    let engine = Engine::new(4);
+    let queries = query_log::cf_query_log(&split, split.test.len(), 3);
+    let n = queries.len();
+    let (outcomes, report) = server
+        .serve(
+            &engine,
+            queries,
+            &ServeConfig {
+                batch_size: 16,
+                deadline_s: GENEROUS_DEADLINE_S,
+                budget: RefineBudget::All,
+            },
+        )
+        .unwrap();
+    assert_eq!(outcomes.len(), n);
+    assert_eq!(report.deadline_misses, 0);
+
+    // Accuracy is negative squared error: refined >= initial means
+    // refined RMSE <= initial RMSE.
+    let (ia, ra) = (
+        report.initial_accuracy.unwrap(),
+        report.refined_accuracy.unwrap(),
+    );
+    assert!(
+        ra >= ia,
+        "refined RMSE {} > initial RMSE {}",
+        (-ra).max(0.0).sqrt(),
+        (-ia).max(0.0).sqrt()
+    );
+
+    // Full-budget serving equals the exact batch scan per prediction
+    // (up to f64 summation-order noise across shards).
+    let exact_job = CfJob::new(
+        CfConfig {
+            n_partitions: 4,
+            mode: ProcessingMode::Exact,
+            seed: 3,
+            ..Default::default()
+        },
+        Arc::clone(&split),
+        Arc::new(NativeBackend),
+    )
+    .unwrap();
+    let exact = engine.run(Arc::new(exact_job)).unwrap();
+    assert_eq!(exact.output.predictions.len(), outcomes.len());
+    for (o, &(_, _, p_batch, _)) in outcomes.iter().zip(&exact.output.predictions) {
+        let p_served = *o.final_response();
+        assert!(
+            (p_served - p_batch).abs() < 1e-3,
+            "served {p_served} vs batch {p_batch}"
+        );
+    }
+}
+
+#[test]
+fn kmeans_serving_refinement_is_monotone_per_query() {
+    let d = GaussianMixtureSpec {
+        n_points: 2000,
+        dim: 8,
+        n_classes: 8,
+        noise: 0.25,
+        test_fraction: 0.01,
+        ..Default::default()
+    }
+    .generate()
+    .unwrap();
+    let points = Arc::new(d.train);
+    let engine = Engine::new(4);
+    let runner = KmeansRunner::new(
+        KmeansConfig {
+            n_clusters: 8,
+            n_iterations: 5,
+            n_partitions: 4,
+            mode: ProcessingMode::Exact,
+            seed: 3,
+            ..Default::default()
+        },
+        Arc::clone(&points),
+    )
+    .unwrap();
+    let (trained, _) = runner.run(&engine).unwrap();
+
+    let shards: Vec<Arc<KmeansModel>> = split_rows(points.rows(), 4)
+        .into_iter()
+        .filter(|r| !r.is_empty())
+        .map(|range| {
+            Arc::new(
+                KmeansModel::build(
+                    &points,
+                    range,
+                    &trained.centroids,
+                    50.0,
+                    Grouping::Lsh,
+                    RefineOrder::Correlation,
+                    3,
+                    &mut TaskMetrics::default(),
+                )
+                .unwrap(),
+            )
+        })
+        .collect();
+    let server = ShardedServer::new(shards).unwrap();
+    let queries = query_log::kmeans_query_log(&points, 200, 7);
+    let (outcomes, report) = server
+        .serve(
+            &engine,
+            queries,
+            &ServeConfig {
+                batch_size: 25,
+                deadline_s: GENEROUS_DEADLINE_S,
+                budget: RefineBudget::Fraction(0.2),
+            },
+        )
+        .unwrap();
+    assert_eq!(outcomes.len(), 200);
+    assert_eq!(report.deadline_misses, 0);
+    // The refined representative keeps the initial best, so per-query
+    // accuracy (negative squared distance) is monotone by construction
+    // — assert it per outcome, not just on the means.
+    for o in &outcomes {
+        let (ia, ra) = (o.initial_accuracy.unwrap(), o.refined_accuracy.unwrap());
+        assert!(ra >= ia, "query regressed: initial {ia} refined {ra}");
+        assert!(o.refined.unwrap().dist <= o.initial.dist + 1e-12);
+    }
+    assert!(report.refined_accuracy >= report.initial_accuracy);
+}
+
+#[test]
+fn query_core_extraction_keeps_batch_outputs() {
+    // The golden anchor for "batch unchanged": AccurateML at r=1/ε=1
+    // degenerates to the exact scan (a mode-independent identity that
+    // pre-dates the query-core extraction), and the streamed run equals
+    // the barrier run of the same job.
+    let data = Arc::new(
+        GaussianMixtureSpec {
+            n_points: 1500,
+            dim: 12,
+            n_classes: 5,
+            noise: 0.35,
+            test_fraction: 0.03,
+            seed: 42,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap(),
+    );
+    let engine = Engine::new(4);
+    let mk = |mode| {
+        KnnJob::new(
+            KnnConfig {
+                k: 5,
+                n_partitions: 6,
+                mode,
+                seed: 7,
+                ..Default::default()
+            },
+            Arc::clone(&data),
+            Arc::new(NativeBackend),
+        )
+        .unwrap()
+    };
+    let exact = engine.run(Arc::new(mk(ProcessingMode::Exact))).unwrap();
+    let aml_mode = ProcessingMode::AccurateML {
+        compression_ratio: 1.0,
+        refinement_threshold: 1.0,
+    };
+    let barrier = engine.run(Arc::new(mk(aml_mode))).unwrap();
+    let streamed = engine.run_streaming(Arc::new(mk(aml_mode)), 0).unwrap();
+    assert_eq!(exact.output.predictions, barrier.output.predictions);
+    assert_eq!(barrier.output.predictions, streamed.output.predictions);
+}
