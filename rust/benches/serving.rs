@@ -5,6 +5,21 @@
 //! stopwatch covers steady-state serving only, matching the model
 //! layer's build-once contract.
 //!
+//! Each app is measured three ways so the repo has a perf trajectory:
+//!
+//! * `per-query` — micro-batch size 1: every query is its own backend
+//!   call (the pre-block-scoring baseline shape);
+//! * `batched`  — micro-batch size 64: ONE backend call per (shard,
+//!   batch) via `answer_initial_block`;
+//! * `cached`   — batched plus the hot-query answer cache (replayed
+//!   logs repeat queries, so repeats are served at zero compute). Set
+//!   `AML_SERVE_CACHE=0` to skip this pass (CI runs the bench with the
+//!   cache both on and off), or to another value to size the cache.
+//!
+//! A machine-readable `BENCH_serving.json` is written to the working
+//! directory (path printed at the end; CI uploads it as a workflow
+//! artifact).
+//!
 //!     cargo bench --bench serving
 //!
 //! The `bench-smoke` cargo feature shrinks the scale and query count so
@@ -14,74 +29,203 @@
 //!     cargo bench --bench serving --features bench-smoke
 
 use accurateml::coordinator::{Scale, Workbench};
+use accurateml::mapreduce::engine::Engine;
+use accurateml::model::ServableModel;
 use accurateml::serve::{query_log, RefineBudget, ServeConfig, ServeReport, ShardedServer};
+use accurateml::util::json::Json;
 use accurateml::util::table::{f, Table};
 use accurateml::util::timer::Stopwatch;
 
 /// Smoke mode: small scale, few queries (CI); otherwise default scale.
 const SMOKE: bool = cfg!(feature = "bench-smoke");
 
+/// One measured replay.
+struct Measured {
+    wall_s: f64,
+    qps: f64,
+    report: ServeReport,
+}
+
+/// The three replay configurations of one app.
+struct Cfgs {
+    per_query: ServeConfig,
+    batched: ServeConfig,
+    cached: ServeConfig,
+    cache_capacity: usize,
+}
+
+fn measure<M: ServableModel>(
+    server: &ShardedServer<M>,
+    engine: &Engine,
+    queries: Vec<M::Query>,
+    cfg: &ServeConfig,
+) -> Measured {
+    let n = queries.len();
+    let sw = Stopwatch::new();
+    let (_, report) = server.serve(engine, queries, cfg).expect("serve failed");
+    let wall_s = sw.elapsed_s();
+    Measured {
+        wall_s,
+        qps: n as f64 / wall_s.max(1e-9),
+        report,
+    }
+}
+
+fn push_row(t: &mut Table, app: &str, mode: &str, m: &Measured) {
+    t.row(vec![
+        app.into(),
+        mode.into(),
+        f(m.wall_s, 3),
+        f(m.qps, 1),
+        f(m.report.total.p50_s * 1e3, 3),
+        f(m.report.total.p99_s * 1e3, 3),
+        m.report
+            .refined_accuracy
+            .map(|a| f(a, 4))
+            .unwrap_or_else(|| "-".into()),
+        f(m.report.cache_hit_rate() * 100.0, 1),
+        m.report.deadline_misses.to_string(),
+    ]);
+}
+
+fn run_json(m: &Measured, with_cache: bool) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("wall_s", m.wall_s.into()),
+        ("qps", m.qps.into()),
+        ("p50_ms", (m.report.total.p50_s * 1e3).into()),
+        ("p99_ms", (m.report.total.p99_s * 1e3).into()),
+        ("deadline_misses", m.report.deadline_misses.into()),
+    ];
+    if let Some(a) = m.report.initial_accuracy {
+        pairs.push(("accuracy_initial", a.into()));
+    }
+    if let Some(a) = m.report.refined_accuracy {
+        pairs.push(("accuracy_refined", a.into()));
+    }
+    if with_cache {
+        pairs.push(("cache_hits", m.report.cache_hits.into()));
+        pairs.push(("cache_hit_rate", m.report.cache_hit_rate().into()));
+    }
+    Json::obj(pairs)
+}
+
+/// Replay one app under all three configurations, appending table rows
+/// and the app's JSON entry. `replay` owns the (server, query-log)
+/// specifics; everything else is shared shape.
+fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
+    t: &mut Table,
+    apps_json: &mut Vec<Json>,
+    cfgs: &Cfgs,
+    app: &str,
+    mut replay: F,
+) {
+    let per_query = replay(&cfgs.per_query);
+    let batched = replay(&cfgs.batched);
+    push_row(t, app, "per-query", &per_query);
+    push_row(t, app, "batched", &batched);
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("app", app.into()),
+        ("per_query", run_json(&per_query, false)),
+        ("batched", run_json(&batched, false)),
+        (
+            "batched_speedup",
+            (batched.qps / per_query.qps.max(1e-9)).into(),
+        ),
+    ];
+    if cfgs.cache_capacity > 0 {
+        let cached = replay(&cfgs.cached);
+        push_row(t, app, "cached", &cached);
+        pairs.push(("cached", run_json(&cached, true)));
+    }
+    apps_json.push(Json::obj(pairs));
+}
+
 fn main() {
     let scale = if SMOKE { Scale::Small } else { Scale::Default };
     let n_queries = if SMOKE { 300 } else { 2000 };
+    let cache_capacity: usize = std::env::var("AML_SERVE_CACHE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(4096);
     let wb = Workbench::preset(scale).expect("workbench");
-    let cfg = ServeConfig {
+    let batched = ServeConfig {
         batch_size: 64,
         deadline_s: if SMOKE { 1.0 } else { 0.050 },
         budget: RefineBudget::Fraction(0.05),
+        cache_capacity: 0,
+    };
+    let cfgs = Cfgs {
+        per_query: ServeConfig {
+            batch_size: 1,
+            ..batched
+        },
+        batched,
+        cached: ServeConfig {
+            cache_capacity,
+            ..batched
+        },
+        cache_capacity,
     };
 
     let mut t = Table::new(
         &format!("serving throughput ({scale:?} scale, {n_queries} queries)"),
         &[
             "app",
+            "mode",
             "wall_s",
             "qps",
             "p50_ms",
             "p99_ms",
-            "acc_initial",
             "acc_refined",
+            "cache_hit%",
             "misses",
         ],
     );
-    let mut row = |app: &str, wall_s: f64, r: &ServeReport| {
-        t.row(vec![
-            app.into(),
-            f(wall_s, 3),
-            f(r.queries as f64 / wall_s.max(1e-9), 1),
-            f(r.total.p50_s * 1e3, 3),
-            f(r.total.p99_s * 1e3, 3),
-            r.initial_accuracy.map(|a| f(a, 4)).unwrap_or_else(|| "-".into()),
-            r.refined_accuracy.map(|a| f(a, 4)).unwrap_or_else(|| "-".into()),
-            r.deadline_misses.to_string(),
-        ]);
-    };
+    let mut apps_json: Vec<Json> = Vec::new();
 
-    // kNN: build shards untimed, time the replay.
+    // kNN: build shards untimed, replay under each config.
     let server = ShardedServer::new(wb.knn_shards(10.0, 5).expect("knn shards")).expect("server");
-    let queries = query_log::knn_query_log(&wb.knn_data, n_queries, wb.config.seed);
-    let sw = Stopwatch::new();
-    let (_, report) = server.serve(&wb.engine, queries, &cfg).expect("serve knn");
-    row("knn", sw.elapsed_s(), &report);
+    bench_app(&mut t, &mut apps_json, &cfgs, "knn", |cfg| {
+        let queries = query_log::knn_query_log(&wb.knn_data, n_queries, wb.config.seed);
+        measure(&server, &wb.engine, queries, cfg)
+    });
+    drop(server);
 
     // CF.
     let server = ShardedServer::new(wb.cf_shards(10.0).expect("cf shards")).expect("server");
-    let queries = query_log::cf_query_log(&wb.cf_split, n_queries, wb.config.seed);
-    let sw = Stopwatch::new();
-    let (_, report) = server.serve(&wb.engine, queries, &cfg).expect("serve cf");
-    row("cf", sw.elapsed_s(), &report);
+    bench_app(&mut t, &mut apps_json, &cfgs, "cf", |cfg| {
+        let queries = query_log::cf_query_log(&wb.cf_split, n_queries, wb.config.seed);
+        measure(&server, &wb.engine, queries, cfg)
+    });
+    drop(server);
 
     // k-means (training + shard build untimed).
     let (shards, points) = wb.kmeans_shards(20.0).expect("kmeans shards");
     let server = ShardedServer::new(shards).expect("server");
-    let queries = query_log::kmeans_query_log(&points, n_queries, wb.config.seed);
-    let sw = Stopwatch::new();
-    let (_, report) = server.serve(&wb.engine, queries, &cfg).expect("serve kmeans");
-    row("kmeans", sw.elapsed_s(), &report);
+    bench_app(&mut t, &mut apps_json, &cfgs, "kmeans", |cfg| {
+        let queries = query_log::kmeans_query_log(&points, n_queries, wb.config.seed);
+        measure(&server, &wb.engine, queries, cfg)
+    });
 
     print!("{}", t.console());
     println!(
         "(accuracy metrics: knn 0/1 correctness; cf negative squared rating error; \
 kmeans negative squared representative distance)"
+    );
+
+    let doc = Json::obj(vec![
+        ("schema", "bench_serving_v1".into()),
+        ("scale", format!("{scale:?}").as_str().into()),
+        ("queries", n_queries.into()),
+        ("backend", wb.backend.name().into()),
+        ("batch_size", cfgs.batched.batch_size.into()),
+        ("cache_capacity", cache_capacity.into()),
+        ("apps", Json::Arr(apps_json)),
+    ]);
+    let path = std::path::Path::new("BENCH_serving.json");
+    std::fs::write(path, doc.pretty()).expect("write BENCH_serving.json");
+    println!(
+        "wrote {} (per-query vs batched vs cached serving throughput)",
+        path.display()
     );
 }

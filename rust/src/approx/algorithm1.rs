@@ -59,33 +59,50 @@ pub fn refine_budget(k: usize, eps_max: f64) -> usize {
     (((k as f64) * eps_max).floor() as usize + 1).min(k)
 }
 
-/// Ranking order (line 2): bucket ids sorted by correlation descending.
-/// Only the first `budget` entries are fully ordered — the tail is never
-/// processed, so a partial selection is sufficient (hot-path: this runs
-/// once per query).
-pub fn refinement_order(correlations: &[f32], budget: usize) -> Vec<usize> {
-    let k = correlations.len();
+/// The shared partial-selection core of the two ranking orders: the
+/// `budget` first bucket ids under `cmp`, in `cmp` order. Partial
+/// selection first (the tail is never processed), then a full sort of
+/// the selected head only — hot-path: this runs once per query. One
+/// comparator, one implementation, so the two public orderings cannot
+/// drift apart.
+fn select_ranked<F>(k: usize, budget: usize, cmp: F) -> Vec<usize>
+where
+    F: Fn(usize, usize) -> std::cmp::Ordering,
+{
     let budget = budget.min(k);
     if budget == 0 {
         return Vec::new();
     }
     let mut idx: Vec<usize> = (0..k).collect();
     if budget < k {
-        // Partial selection: the `budget` largest first, unordered...
-        idx.select_nth_unstable_by(budget - 1, |&a, &b| {
-            correlations[b]
-                .partial_cmp(&correlations[a])
-                .unwrap_or(std::cmp::Ordering::Equal)
-        });
+        idx.select_nth_unstable_by(budget - 1, |&a, &b| cmp(a, b));
         idx.truncate(budget);
     }
-    // ...then order the selected head descending.
-    idx.sort_by(|&a, &b| {
+    idx.sort_by(|&a, &b| cmp(a, b));
+    idx
+}
+
+/// Ranking order (line 2): bucket ids sorted by correlation descending.
+pub fn refinement_order(correlations: &[f32], budget: usize) -> Vec<usize> {
+    select_ranked(correlations.len(), budget, |a, b| {
         correlations[b]
             .partial_cmp(&correlations[a])
             .unwrap_or(std::cmp::Ordering::Equal)
-    });
-    idx
+    })
+}
+
+/// Ranking order on raw *distances* (ascending): bucket ids of the
+/// `budget` smallest values. For kNN-style correlations (Definition 4:
+/// correlation = −distance) this is exactly [`refinement_order`] on the
+/// negated values — the shared [`select_ranked`] core makes the same
+/// comparator decisions, so the selected set and its order are
+/// identical — without materializing a negated `Vec<f32>` per query.
+pub fn refinement_order_ascending(values: &[f32], budget: usize) -> Vec<usize> {
+    select_ranked(values.len(), budget, |a, b| {
+        values[a]
+            .partial_cmp(&values[b])
+            .unwrap_or(std::cmp::Ordering::Equal)
+    })
 }
 
 /// Random refinement selection (the [`RefineOrder::Random`] ablation):
@@ -197,6 +214,28 @@ mod tests {
         let corr = vec![0.5, 0.5, f32::NAN, 0.5];
         let order = refinement_order(&corr, 4);
         assert_eq!(order.len(), 4);
+    }
+
+    #[test]
+    fn ascending_order_equals_descending_on_negation() {
+        // The distance-direct ranking must reproduce the correlation
+        // ranking exactly (including tie order), since callers switched
+        // from refinement_order(&-d) to refinement_order_ascending(&d).
+        let dists = vec![3.0f32, 0.5, 2.0, 0.5, 7.0, 1.0, 0.5, 4.5];
+        let negated: Vec<f32> = dists.iter().map(|&d| -d).collect();
+        for budget in 0..=dists.len() + 2 {
+            assert_eq!(
+                refinement_order_ascending(&dists, budget),
+                refinement_order(&negated, budget),
+                "budget {budget}"
+            );
+        }
+        // Untied values have a fully determined ranking.
+        assert_eq!(
+            refinement_order_ascending(&[4.0, 1.0, 3.0, 2.0], 3),
+            vec![1, 3, 2]
+        );
+        assert!(refinement_order_ascending(&[], 3).is_empty());
     }
 
     #[test]

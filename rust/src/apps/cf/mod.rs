@@ -259,6 +259,7 @@ impl CfJob {
             self.config.grouping,
             self.config.refine_order,
             self.config.seed,
+            Arc::clone(&self.backend),
             metrics,
         )
         .expect("model build failed");

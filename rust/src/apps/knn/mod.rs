@@ -33,7 +33,7 @@ use crate::lsh::bucketizer::Grouping;
 use crate::mapreduce::engine::{MapReduceJob, TwoStageJob};
 use crate::mapreduce::metrics::TaskMetrics;
 use crate::model::knn::KnnModel;
-use crate::runtime::backend::ScoreBackend;
+use crate::runtime::backend::{ScoreBackend, TopK};
 use crate::util::timer::Stopwatch;
 use classify::{classification_accuracy, majority_vote, merge_candidates, LabeledCandidate};
 
@@ -185,7 +185,9 @@ impl KnnJob {
 
     /// The streaming initial output: every bucket's aggregated point as
     /// a candidate, per test point. Only the streaming path pays for
-    /// this — the barrier path goes straight to stage 2.
+    /// this — the barrier path goes straight to stage 2. One selection
+    /// heap is drained per test point instead of allocating |test|
+    /// heaps (the same scratch pattern as the stage-2 loop below).
     fn initial_candidates(
         &self,
         carry: &KnnCarry,
@@ -193,8 +195,9 @@ impl KnnJob {
     ) -> Vec<Vec<LabeledCandidate>> {
         let mut sw = Stopwatch::new();
         let mut initial = Vec::with_capacity(self.data.test.rows());
+        let mut topk = TopK::new(self.config.k);
         for t in 0..self.data.test.rows() {
-            initial.push(carry.model.initial_topk(carry.dists.row(t)));
+            initial.push(carry.model.initial_topk_with(carry.dists.row(t), &mut topk));
         }
         metrics.initial_s += sw.lap_s();
         initial

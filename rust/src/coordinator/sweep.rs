@@ -346,6 +346,7 @@ impl Workbench {
                 Grouping::Lsh,
                 RefineOrder::Correlation,
                 self.config.seed,
+                Arc::clone(&self.backend),
                 &mut tm,
             )?));
         }
@@ -405,6 +406,7 @@ impl Workbench {
                 Grouping::Lsh,
                 RefineOrder::Correlation,
                 self.config.seed,
+                Arc::clone(&self.backend),
                 &mut tm,
             )?));
         }
@@ -534,6 +536,7 @@ mod tests {
             batch_size: 16,
             deadline_s: 30.0,
             budget: crate::serve::RefineBudget::Fraction(0.1),
+            cache_capacity: 0,
         };
         let report = wb.serve_knn(48, 5, 10.0, &cfg).unwrap();
         assert_eq!(report.queries, 48);
@@ -542,6 +545,7 @@ mod tests {
         assert!(report.initial_accuracy.is_some());
         assert!(report.refined_accuracy.is_some());
         assert_eq!(report.deadline_misses, 0);
+        assert_eq!(report.cache_lookups, 0, "cache disabled");
     }
 
     #[test]

@@ -228,6 +228,7 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
         .opt("app", "knn", "application: knn|cf|kmeans")
         .opt("queries", "1000", "queries to replay")
         .opt("batch", "64", "micro-batch size (queries grouped per shard task)")
+        .opt("cache", "1024", "hot-query answer cache capacity (0 = off)")
         .opt("deadline-ms", "50", "per-request deadline in milliseconds")
         .opt(
             "budget",
@@ -255,6 +256,7 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
         batch_size: args.get_usize("batch")?,
         deadline_s: args.get_f64("deadline-ms")? / 1e3,
         budget,
+        cache_capacity: args.get_usize("cache")?,
     };
     let n = args.get_usize("queries")?;
     let ratio = args.get_f64("ratio")?;
@@ -284,6 +286,26 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
         report.deadline_misses,
         cfg.deadline_s * 1e3
     );
+    if cfg.cache_capacity > 0 {
+        println!(
+            "cache: {} hit(s) / {} lookup(s) ({:.1}% hit rate, capacity {})",
+            report.cache_hits,
+            report.cache_lookups,
+            report.cache_hit_rate() * 100.0,
+            cfg.cache_capacity
+        );
+    }
+    if matches!(cfg.budget, RefineBudget::Deadline) {
+        let ewma_ns: Vec<String> = report
+            .stage1_bucket_cost_ewma_s
+            .iter()
+            .map(|c| format!("{:.0}", c * 1e9))
+            .collect();
+        println!(
+            "deadline calibration: stage-1 cost/query/bucket EWMA per shard [{} ns]",
+            ewma_ns.join(", ")
+        );
+    }
     match app.as_str() {
         "cf" => {
             // Accuracy is negative squared rating error.

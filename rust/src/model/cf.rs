@@ -16,7 +16,7 @@ use crate::lsh::bucketizer::Grouping;
 use crate::lsh::Bucketizer;
 use crate::mapreduce::metrics::TaskMetrics;
 use crate::model::{InitialAnswer, ServableModel};
-use crate::runtime::backend::pearson_pair;
+use crate::runtime::backend::{pearson_pair, ScoreBackend};
 use crate::util::timer::Stopwatch;
 
 /// One CF serving request: the active user's centered rating row +
@@ -93,6 +93,7 @@ pub struct CfModel {
     cagg: Matrix,
     agg_means: Vec<f32>,
     refine_order: RefineOrder,
+    backend: Arc<dyn ScoreBackend>,
 }
 
 impl CfModel {
@@ -109,6 +110,7 @@ impl CfModel {
         grouping: Grouping,
         refine_order: RefineOrder,
         seed: u64,
+        backend: Arc<dyn ScoreBackend>,
         metrics: &mut TaskMetrics,
     ) -> Result<CfModel> {
         let users: Vec<usize> = (range.start..range.end).collect();
@@ -170,6 +172,7 @@ impl CfModel {
             cagg,
             agg_means,
             refine_order,
+            backend,
         })
     }
 
@@ -245,31 +248,78 @@ impl ServableModel for CfModel {
     }
 
     fn answer_initial(&self, query: &Self::Query) -> InitialAnswer<Self::Answer> {
-        let item = query.item as usize;
-        let n_buckets = self.agg.len();
-        let mut corr = Vec::with_capacity(n_buckets);
-        let mut partial = CfPartial::default();
-        for b in 0..n_buckets {
-            let w = pearson_pair(
-                query.cu.as_slice(),
-                query.mu.as_slice(),
-                self.cagg.row(b),
-                self.agg.mask.row(b),
-            );
-            corr.push(w);
-            if w == 0.0 || !w.is_finite() {
-                continue;
-            }
-            if self.agg.mask.get(b, item) > 0.0 {
-                let dev = self.agg.ratings.get(b, item) - self.agg_means[b];
-                partial.num += w as f64 * dev as f64;
-                partial.den += w.abs() as f64;
-            }
+        // A 1-row block through the same backend call as the batched
+        // path, so per-query and batched stage 1 cannot diverge — not
+        // even in final ULPs on a device backend whose reductions
+        // differ from the host loop.
+        self.answer_initial_block(&[query])
+            .pop()
+            .expect("one answer for one query")
+    }
+
+    fn answer_initial_block(&self, queries: &[&Self::Query]) -> Vec<InitialAnswer<Self::Answer>> {
+        if queries.is_empty() {
+            return Vec::new();
         }
-        InitialAnswer {
-            answer: partial,
-            correlations: corr,
+        // Assemble the Q×m centered-row + mask blocks once; ONE backend
+        // call computes every (query, bucket) Pearson weight. The
+        // native backend runs `pearson_pair` per pair with the same
+        // argument order the pre-block per-query loop used, keeping
+        // stage-1 numerics bit-identical to PR 2's scoring.
+        let m = self.cagg.cols();
+        let mut cu = Matrix::zeros(queries.len(), m);
+        let mut mu = Matrix::zeros(queries.len(), m);
+        for (i, q) in queries.iter().enumerate() {
+            cu.row_mut(i).copy_from_slice(q.cu.as_slice());
+            mu.row_mut(i).copy_from_slice(q.mu.as_slice());
         }
+        let w = self
+            .backend
+            .cf_weights(&cu, &mu, &self.cagg, &self.agg.mask)
+            .expect("backend cf_weights failed");
+        queries
+            .iter()
+            .enumerate()
+            .map(|(i, q)| {
+                let wrow = w.row(i);
+                let item = q.item as usize;
+                let mut partial = CfPartial::default();
+                for (b, &wv) in wrow.iter().enumerate() {
+                    if wv == 0.0 || !wv.is_finite() {
+                        continue;
+                    }
+                    if self.agg.mask.get(b, item) > 0.0 {
+                        let dev = self.agg.ratings.get(b, item) - self.agg_means[b];
+                        partial.num += wv as f64 * dev as f64;
+                        partial.den += wv.abs() as f64;
+                    }
+                }
+                InitialAnswer {
+                    answer: partial,
+                    correlations: wrow.to_vec(),
+                }
+            })
+            .collect()
+    }
+
+    fn query_key(&self, query: &Self::Query) -> Option<Vec<u8>> {
+        // The answer is a function of the centered row, mask, mean,
+        // target item and exclusion — ground truth (`actual`) is
+        // metadata. Masks are exact 0.0/1.0 so one byte each suffices.
+        let mut key = Vec::with_capacity(query.cu.len() * 4 + query.mu.len() + 21);
+        key.extend_from_slice(&query.item.to_le_bytes());
+        key.extend_from_slice(&query.exclude.unwrap_or(u32::MAX).to_le_bytes());
+        key.extend_from_slice(&query.mean.to_le_bytes());
+        for v in query.cu.iter() {
+            key.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in query.mu.iter() {
+            key.push((*v > 0.0) as u8);
+        }
+        if self.refine_order == RefineOrder::Random {
+            key.extend_from_slice(&query.seed.to_le_bytes());
+        }
+        Some(key)
     }
 
     fn refine(
@@ -360,6 +410,7 @@ mod tests {
             Grouping::Lsh,
             RefineOrder::Correlation,
             3,
+            Arc::new(crate::runtime::backend::NativeBackend),
             &mut TaskMetrics::default(),
         )
         .unwrap();
@@ -393,6 +444,22 @@ mod tests {
         assert_eq!(init.correlations.len(), model.n_buckets());
         assert!(init.answer.den >= 0.0);
         assert_eq!(model.refine(&q, &init, 0), init.answer);
+    }
+
+    #[test]
+    fn block_answers_match_per_query() {
+        let (split, _, model) = setup();
+        let queries: Vec<CfQuery> =
+            (0..split.test.len().min(12)).map(|i| query_for(&split, i, i as u64)).collect();
+        let refs: Vec<&CfQuery> = queries.iter().collect();
+        let block = model.answer_initial_block(&refs);
+        assert_eq!(block.len(), queries.len());
+        for (q, b) in queries.iter().zip(&block) {
+            let per = model.answer_initial(q);
+            assert_eq!(b.answer, per.answer);
+            assert_eq!(b.correlations, per.correlations);
+        }
+        assert!(model.answer_initial_block(&[]).is_empty());
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! refinement (the refined answer keeps the initial best), which gives
 //! serving a deterministically monotone anytime contract.
 
+use std::sync::Arc;
+
 use crate::aggregate::IndexFile;
 use crate::approx::algorithm1::{refinement_order, refinement_order_random, RefineOrder};
 use crate::data::matrix::{sq_dist, Matrix};
@@ -16,6 +18,7 @@ use crate::lsh::bucketizer::Grouping;
 use crate::lsh::Bucketizer;
 use crate::mapreduce::metrics::TaskMetrics;
 use crate::model::{InitialAnswer, ServableModel};
+use crate::runtime::backend::ScoreBackend;
 use crate::util::timer::Stopwatch;
 
 /// One k-means serving request: a point and the per-query seed (used
@@ -94,6 +97,7 @@ pub struct KmeansModel {
     point_cluster: Vec<u32>,
     center_cluster: Vec<u32>,
     refine_order: RefineOrder,
+    backend: Arc<dyn ScoreBackend>,
 }
 
 impl KmeansModel {
@@ -107,6 +111,7 @@ impl KmeansModel {
         grouping: Grouping,
         refine_order: RefineOrder,
         seed: u64,
+        backend: Arc<dyn ScoreBackend>,
         metrics: &mut TaskMetrics,
     ) -> Result<KmeansModel> {
         let (part, centers, index) = build_partition_agg(
@@ -130,6 +135,7 @@ impl KmeansModel {
             point_cluster,
             center_cluster,
             refine_order,
+            backend,
         })
     }
 }
@@ -148,29 +154,71 @@ impl ServableModel for KmeansModel {
     }
 
     fn answer_initial(&self, query: &Self::Query) -> InitialAnswer<Self::Answer> {
-        let n_buckets = self.centers.rows();
-        let mut corr = Vec::with_capacity(n_buckets);
-        let mut best = RepMatch {
-            dist: f32::INFINITY,
-            cluster: 0,
-        };
-        for b in 0..n_buckets {
-            let d = sq_dist(self.centers.row(b), &query.point);
-            // Proximity ranking: a query refines its *nearest* buckets
-            // first (the batch job ranks by assignment margin instead —
-            // it optimizes the global result, not one query).
-            corr.push(-d);
-            if d < best.dist {
-                best = RepMatch {
-                    dist: d,
-                    cluster: self.center_cluster[b],
+        // A 1-row block through the same backend call as the batched
+        // path, so per-query and batched stage 1 cannot diverge — not
+        // even in final ULPs on a device backend whose reductions
+        // differ from the host loop.
+        self.answer_initial_block(&[query])
+            .pop()
+            .expect("one answer for one query")
+    }
+
+    fn answer_initial_block(&self, queries: &[&Self::Query]) -> Vec<InitialAnswer<Self::Answer>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        // Assemble the Q×d block once; ONE backend call computes every
+        // (query, bucket-center) squared distance. The native backend
+        // runs the same `sq_dist` the pre-block per-query loop used,
+        // keeping stage-1 numerics bit-identical to PR 2's scoring.
+        // Proximity ranking: correlation = -distance, so a query
+        // refines its *nearest* buckets first (the batch job ranks by
+        // assignment margin instead — it optimizes the global result,
+        // not one query).
+        let d = queries[0].point.len();
+        let mut buf = Vec::with_capacity(queries.len() * d);
+        for q in queries {
+            buf.extend_from_slice(&q.point);
+        }
+        let block = Matrix::from_vec(queries.len(), d, buf).expect("query block");
+        let dists = self
+            .backend
+            .knn_dists(&block, &self.centers)
+            .expect("backend scoring failed");
+        (0..queries.len())
+            .map(|i| {
+                let drow = dists.row(i);
+                let mut best = RepMatch {
+                    dist: f32::INFINITY,
+                    cluster: 0,
                 };
-            }
+                let mut corr = Vec::with_capacity(drow.len());
+                for (b, &dv) in drow.iter().enumerate() {
+                    corr.push(-dv);
+                    if dv < best.dist {
+                        best = RepMatch {
+                            dist: dv,
+                            cluster: self.center_cluster[b],
+                        };
+                    }
+                }
+                InitialAnswer {
+                    answer: best,
+                    correlations: corr,
+                }
+            })
+            .collect()
+    }
+
+    fn query_key(&self, query: &Self::Query) -> Option<Vec<u8>> {
+        let mut key = Vec::with_capacity(query.point.len() * 4 + 8);
+        for v in &query.point {
+            key.extend_from_slice(&v.to_le_bytes());
         }
-        InitialAnswer {
-            answer: best,
-            correlations: corr,
+        if self.refine_order == RefineOrder::Random {
+            key.extend_from_slice(&query.seed.to_le_bytes());
         }
+        Some(key)
     }
 
     fn refine(
@@ -251,10 +299,32 @@ mod tests {
             Grouping::Lsh,
             RefineOrder::Correlation,
             3,
+            Arc::new(crate::runtime::backend::NativeBackend),
             &mut TaskMetrics::default(),
         )
         .unwrap();
         (model, pts)
+    }
+
+    #[test]
+    fn block_answers_match_per_query() {
+        let (model, pts) = shard();
+        let queries: Vec<KmeansQuery> = (0..pts.rows())
+            .step_by(29)
+            .map(|r| KmeansQuery {
+                point: pts.row(r).to_vec(),
+                seed: r as u64,
+            })
+            .collect();
+        let refs: Vec<&KmeansQuery> = queries.iter().collect();
+        let block = model.answer_initial_block(&refs);
+        assert_eq!(block.len(), queries.len());
+        for (q, b) in queries.iter().zip(&block) {
+            let per = model.answer_initial(q);
+            assert_eq!(b.answer, per.answer);
+            assert_eq!(b.correlations, per.correlations);
+        }
+        assert!(model.answer_initial_block(&[]).is_empty());
     }
 
     #[test]

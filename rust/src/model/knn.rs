@@ -7,7 +7,8 @@ use std::sync::Arc;
 
 use crate::aggregate::AggregatedPoints;
 use crate::approx::algorithm1::{
-    refinement_order, refinement_order_random, stage2_selection, RefineOrder,
+    refine_budget, refinement_order, refinement_order_ascending, refinement_order_random,
+    RefineOrder,
 };
 use crate::apps::knn::classify::{majority_vote, merge_candidates, LabeledCandidate};
 use crate::data::matrix::{sq_dist, Matrix};
@@ -89,7 +90,7 @@ impl KnnModel {
 
     /// Dense (queries × buckets) squared-distance block against the
     /// aggregated centroids — stage 1's scoring, shared by the batch
-    /// path (whole test matrix) and serving (one-row matrix).
+    /// path (whole test matrix) and serving (one block per micro-batch).
     pub fn score_block(&self, queries: &Matrix) -> Matrix {
         self.backend
             .knn_dists(queries, &self.agg.centroids)
@@ -100,21 +101,32 @@ impl KnnModel {
     /// row: every bucket's aggregated point as a candidate, top-k kept.
     pub fn initial_topk(&self, drow: &[f32]) -> Vec<LabeledCandidate> {
         let mut topk = TopK::new(self.k);
+        self.initial_topk_with(drow, &mut topk)
+    }
+
+    /// Scratch-reusing form of [`KnnModel::initial_topk`]: `topk` must
+    /// be an empty `TopK::new(self.k())` and is drained back to empty,
+    /// so one heap serves a whole batch of queries.
+    pub fn initial_topk_with(&self, drow: &[f32], topk: &mut TopK) -> Vec<LabeledCandidate> {
         for (b, &dv) in drow.iter().enumerate() {
             topk.push(dv, b as u32);
         }
-        topk.into_sorted()
+        topk.drain_sorted()
             .into_iter()
             .map(|(d, b)| (d, self.agg.labels[b as usize]))
             .collect()
     }
 
     /// Plan one query's refinement (Algorithm 1 lines 2-5): correlation
-    /// of bucket `b` is `-drow[b]` (Definition 4), ranked by
-    /// `stage2_selection` under the shard's order switch.
+    /// of bucket `b` is `-drow[b]` (Definition 4), so ranking the
+    /// distances *ascending* is the correlation ranking without
+    /// materializing a negated vector per query.
     pub fn plan(&self, drow: &[f32], eps_max: f64, seed: u64) -> Vec<usize> {
-        let corr: Vec<f32> = drow.iter().map(|&d| -d).collect();
-        stage2_selection(&corr, eps_max, self.refine_order, seed)
+        let budget = refine_budget(drow.len(), eps_max);
+        match self.refine_order {
+            RefineOrder::Correlation => refinement_order_ascending(drow, budget),
+            RefineOrder::Random => refinement_order_random(drow.len(), budget, seed),
+        }
     }
 
     /// Refine one query (Algorithm 1 lines 6-10): the chosen buckets
@@ -199,6 +211,46 @@ impl ServableModel for KnnModel {
         }
     }
 
+    fn answer_initial_block(&self, queries: &[&Self::Query]) -> Vec<InitialAnswer<Self::Answer>> {
+        if queries.is_empty() {
+            return Vec::new();
+        }
+        // Assemble the Q×d block once; ONE backend call scores the
+        // whole micro-batch against the aggregated centroids.
+        let d = queries[0].features.len();
+        let mut buf = Vec::with_capacity(queries.len() * d);
+        for q in queries {
+            buf.extend_from_slice(&q.features);
+        }
+        let block = Matrix::from_vec(queries.len(), d, buf).expect("query block");
+        let dists = self.score_block(&block);
+        // One selection heap drained per query (no per-query heap).
+        let mut topk = TopK::new(self.k);
+        (0..queries.len())
+            .map(|i| {
+                let drow = dists.row(i);
+                InitialAnswer {
+                    answer: self.initial_topk_with(drow, &mut topk),
+                    correlations: drow.iter().map(|&dv| -dv).collect(),
+                }
+            })
+            .collect()
+    }
+
+    fn query_key(&self, query: &Self::Query) -> Option<Vec<u8>> {
+        let mut key = Vec::with_capacity(query.features.len() * 4 + 8);
+        for v in &query.features {
+            key.extend_from_slice(&v.to_le_bytes());
+        }
+        // The seed only changes the answer under the Random ablation;
+        // folding it in unconditionally would split repeat traffic
+        // (distinct per-query seeds) into distinct cache entries.
+        if self.refine_order == RefineOrder::Random {
+            key.extend_from_slice(&query.seed.to_le_bytes());
+        }
+        Some(key)
+    }
+
     fn refine(
         &self,
         query: &Self::Query,
@@ -281,6 +333,27 @@ mod tests {
         assert_eq!(init.correlations.len(), model.n_buckets());
         assert!(!init.answer.is_empty());
         assert!(init.answer.len() <= model.k());
+    }
+
+    #[test]
+    fn block_answers_match_per_query() {
+        let (model, data) = shard();
+        let queries: Vec<KnnQuery> = (0..data.test.rows())
+            .map(|t| KnnQuery {
+                features: data.test.row(t).to_vec(),
+                label: None,
+                seed: t as u64,
+            })
+            .collect();
+        let refs: Vec<&KnnQuery> = queries.iter().collect();
+        let block = model.answer_initial_block(&refs);
+        assert_eq!(block.len(), queries.len());
+        for (q, b) in queries.iter().zip(&block) {
+            let per = model.answer_initial(q);
+            assert_eq!(b.answer, per.answer);
+            assert_eq!(b.correlations, per.correlations);
+        }
+        assert!(model.answer_initial_block(&[]).is_empty());
     }
 
     #[test]

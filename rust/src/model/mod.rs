@@ -50,8 +50,9 @@ pub trait ServableModel: Send + Sync + 'static {
     type Query: Send + Sync + 'static;
     /// One shard's contribution to a query's answer.
     type Answer: Clone + Send + 'static;
-    /// The merged, client-facing answer.
-    type Response: Send + 'static;
+    /// The merged, client-facing answer (`Clone` so the serving layer's
+    /// hot-query answer cache can hand out copies).
+    type Response: Clone + Send + 'static;
 
     /// Aggregated buckets in this shard (the `k` of Algorithm 1).
     fn n_buckets(&self) -> usize;
@@ -63,6 +64,29 @@ pub trait ServableModel: Send + Sync + 'static {
     /// Stage 1 for one query: the answer from aggregated points plus
     /// the per-bucket correlations that rank refinement.
     fn answer_initial(&self, query: &Self::Query) -> InitialAnswer<Self::Answer>;
+
+    /// Stage 1 for a whole micro-batch: one answer per query, in input
+    /// order, **identical** to calling [`ServableModel::answer_initial`]
+    /// per query. The default loops; the concrete models override it so
+    /// the batch's scoring becomes ONE
+    /// [`ScoreBackend`](crate::runtime::backend::ScoreBackend) call over
+    /// a Q×d block (the serving analogue of the paper's amortized
+    /// aggregated-point pass) with per-batch scratch instead of
+    /// per-query allocations.
+    fn answer_initial_block(&self, queries: &[&Self::Query]) -> Vec<InitialAnswer<Self::Answer>> {
+        queries.iter().map(|q| self.answer_initial(q)).collect()
+    }
+
+    /// Stable byte key identifying the *answer-relevant* content of a
+    /// query, for the serving layer's hot-query answer cache. Two
+    /// queries with equal keys must produce the same response under the
+    /// same budget, so per-query fields that change the answer (e.g.
+    /// the seed under the `Random` refinement ablation) must be folded
+    /// in, while pure-metadata fields (ground-truth labels) must not.
+    /// `None` (the default) marks the query uncacheable.
+    fn query_key(&self, _query: &Self::Query) -> Option<Vec<u8>> {
+        None
+    }
 
     /// Stage 2 for one query: expand up to `budget` ranked buckets
     /// (Algorithm 1 lines 2-10) and return the replacement answer. A

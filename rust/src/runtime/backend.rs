@@ -24,6 +24,23 @@ pub trait ScoreBackend: Send + Sync {
     /// (squared distance, x-row id), ascending by distance.
     fn knn_block_topk(&self, q: &Matrix, x: &Matrix, k: usize) -> Result<Vec<Vec<Candidate>>>;
 
+    /// Scratch-reusing variant of [`ScoreBackend::knn_block_topk`]:
+    /// writes the per-query candidate lists into `out` (resized to
+    /// `q.rows()`), reusing its inner allocations where the
+    /// implementation can. The default just delegates; the native
+    /// backend overrides it to reuse one [`TopK`] heap and `out`'s
+    /// buffers across the whole block.
+    fn knn_block_topk_into(
+        &self,
+        q: &Matrix,
+        x: &Matrix,
+        k: usize,
+        out: &mut Vec<Vec<Candidate>>,
+    ) -> Result<()> {
+        *out = self.knn_block_topk(q, x, k)?;
+        Ok(())
+    }
+
     /// Full (q.rows × x.rows) squared-distance matrix.
     fn knn_dists(&self, q: &Matrix, x: &Matrix) -> Result<Matrix>;
 
@@ -105,25 +122,64 @@ impl TopK {
     /// Drain ascending by distance.
     pub fn into_sorted(self) -> Vec<Candidate> {
         let mut v: Vec<Candidate> = self.heap.into_iter().map(|h| (h.0, h.1)).collect();
-        v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+        sort_candidates(&mut v);
+        v
+    }
+
+    /// Drain ascending by distance into `out` (cleared first), leaving
+    /// the accumulator empty — heap capacity kept — so one `TopK` can
+    /// serve a whole block of queries without per-query allocation.
+    pub fn drain_sorted_into(&mut self, out: &mut Vec<Candidate>) {
+        out.clear();
+        out.extend(self.heap.drain().map(|h| (h.0, h.1)));
+        sort_candidates(out);
+    }
+
+    /// Drain ascending by distance, keeping the (now empty) heap
+    /// reusable for the next query.
+    pub fn drain_sorted(&mut self) -> Vec<Candidate> {
+        let mut v = Vec::with_capacity(self.heap.len());
+        self.drain_sorted_into(&mut v);
         v
     }
 }
 
+/// Ascending (distance, id) order — the one sort both the consuming and
+/// the draining `TopK` paths share, so batched and per-query scoring
+/// produce identical candidate lists.
+fn sort_candidates(v: &mut [Candidate]) {
+    v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+}
+
 impl ScoreBackend for NativeBackend {
     fn knn_block_topk(&self, q: &Matrix, x: &Matrix, k: usize) -> Result<Vec<Vec<Candidate>>> {
-        check_dims(q, x)?;
         let mut out = Vec::with_capacity(q.rows());
+        self.knn_block_topk_into(q, x, k, &mut out)?;
+        Ok(out)
+    }
+
+    fn knn_block_topk_into(
+        &self,
+        q: &Matrix,
+        x: &Matrix,
+        k: usize,
+        out: &mut Vec<Vec<Candidate>>,
+    ) -> Result<()> {
+        check_dims(q, x)?;
+        out.resize_with(q.rows(), Vec::new);
+        // One heap for the whole block: drained (not consumed) per
+        // query, so the selection pass allocates nothing per row beyond
+        // the output lists themselves — which `out` also reuses.
+        let mut topk = TopK::new(k);
         for qi in 0..q.rows() {
             let qr = q.row(qi);
-            let mut topk = TopK::new(k);
             for xi in 0..x.rows() {
                 let d = sq_dist(x.row(xi), qr);
                 topk.push(d, xi as u32);
             }
-            out.push(topk.into_sorted());
+            topk.drain_sorted_into(&mut out[qi]);
         }
-        Ok(out)
+        Ok(())
     }
 
     fn knn_dists(&self, q: &Matrix, x: &Matrix) -> Result<Matrix> {
@@ -265,15 +321,16 @@ impl ScoreBackend for PjrtBackend {
     fn knn_block_topk(&self, q: &Matrix, x: &Matrix, k: usize) -> Result<Vec<Vec<Candidate>>> {
         check_dims(q, x)?;
         if !self.fused_topk {
-            // Device computes distances; host does the O(n) selection.
+            // Device computes distances; host does the O(n) selection
+            // with one reused heap across the block.
             let dists = self.knn_dists(q, x)?;
             let mut out = Vec::with_capacity(q.rows());
+            let mut topk = TopK::new(k);
             for qi in 0..q.rows() {
-                let mut topk = TopK::new(k);
                 for (xi, &dv) in dists.row(qi).iter().enumerate() {
                     topk.push(dv, xi as u32);
                 }
-                out.push(topk.into_sorted());
+                out.push(topk.drain_sorted());
             }
             return Ok(out);
         }
@@ -485,6 +542,37 @@ mod tests {
             "{v:?}"
         );
         assert!(v[0].0 <= v[1].0 && v[1].0 <= v[2].0);
+    }
+
+    #[test]
+    fn drained_topk_matches_consumed_topk_and_is_reusable() {
+        let feed = |t: &mut TopK| {
+            for (i, d) in [5.0f32, 1.0, 4.0, 0.5, 9.0, 2.0].iter().enumerate() {
+                t.push(*d, i as u32);
+            }
+        };
+        let mut owned = TopK::new(3);
+        feed(&mut owned);
+        let expect = owned.into_sorted();
+
+        let mut reused = TopK::new(3);
+        let mut out = vec![(0.0f32, 99u32); 8]; // stale content must be cleared
+        feed(&mut reused);
+        reused.drain_sorted_into(&mut out);
+        assert_eq!(out, expect);
+        // Second query through the same heap: identical again.
+        feed(&mut reused);
+        assert_eq!(reused.drain_sorted(), expect);
+    }
+
+    #[test]
+    fn block_topk_into_matches_block_topk() {
+        let q = rand_matrix(5, 10, 8);
+        let x = rand_matrix(40, 10, 9);
+        let expect = NativeBackend.knn_block_topk(&q, &x, 4).unwrap();
+        let mut out = vec![vec![(7.0f32, 7u32)]; 9]; // wrong len + stale rows
+        NativeBackend.knn_block_topk_into(&q, &x, 4, &mut out).unwrap();
+        assert_eq!(out, expect);
     }
 
     #[test]

@@ -1,9 +1,13 @@
 //! Request micro-batching.
 //!
-//! A shard answers a whole batch of queries in one pool task, so the
-//! per-task overhead (submission, channel send, scheduling) amortizes
-//! across the batch instead of being paid per query — the standard
-//! serving trade of a little queueing latency for a lot of throughput.
+//! A shard answers a whole batch of queries in one pool task — and,
+//! since the model layer's `answer_initial_block`, in ONE backend call
+//! — so both the per-task overhead (submission, channel send,
+//! scheduling) and the per-call scoring overhead amortize across the
+//! batch instead of being paid per query: the standard serving trade of
+//! a little queueing latency for a lot of throughput. The executor's
+//! hot-query answer cache sits *in front* of this batcher; only cache
+//! misses are admitted.
 
 /// Accumulates requests and releases them in fixed-size batches.
 #[derive(Debug)]
@@ -49,6 +53,11 @@ impl<Q> MicroBatcher<Q> {
         self.pending.len()
     }
 
+    /// No requests queued.
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
     /// The batch window.
     pub fn capacity(&self) -> usize {
         self.capacity
@@ -66,7 +75,9 @@ mod tests {
         assert_eq!(b.push(2), None);
         assert_eq!(b.push(3), Some(vec![1, 2, 3]));
         assert_eq!(b.pending(), 0);
+        assert!(b.is_empty());
         assert_eq!(b.push(4), None);
+        assert!(!b.is_empty());
         assert_eq!(b.flush(), Some(vec![4]));
         assert_eq!(b.flush(), None);
     }

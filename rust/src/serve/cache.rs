@@ -1,0 +1,230 @@
+//! Hot-query answer cache.
+//!
+//! Replayed logs repeat queries (the same test point, the same (user,
+//! item) pair), and a repeat costs exactly as much as a first sight on
+//! the compute path. The cache sits *in front of admission* in the
+//! serving executor: a request whose
+//! [`query_key`](crate::model::ServableModel::query_key) hits is
+//! served its cached **final** response at zero
+//! compute — no batching, no stage 1, no refinement — which is the
+//! ROADMAP's "hot-query caching" direction.
+//!
+//! Bounded LRU, keyed on raw query bytes. Implemented with the lazy-
+//! stamp queue technique (no intrusive linked list, no external
+//! crates): every touch pushes `(key, stamp)` onto a queue and records
+//! the stamp on the live entry; eviction pops from the front and only
+//! evicts when the popped stamp is still the entry's current one, so
+//! stale queue entries (earlier touches of a since-reused key) are
+//! skipped for free. The queue is compacted when it outgrows a small
+//! multiple of the capacity, keeping memory bounded on hit-heavy logs.
+
+use std::collections::{HashMap, VecDeque};
+
+struct Slot<V> {
+    value: V,
+    stamp: u64,
+}
+
+/// Bounded LRU map from query-key bytes to a cached response.
+pub struct AnswerCache<V> {
+    cap: usize,
+    map: HashMap<Vec<u8>, Slot<V>>,
+    queue: VecDeque<(Vec<u8>, u64)>,
+    tick: u64,
+    hits: u64,
+    lookups: u64,
+}
+
+impl<V: Clone> AnswerCache<V> {
+    /// Cache holding at most `capacity` entries (0 disables it: every
+    /// lookup misses and inserts are dropped).
+    pub fn new(capacity: usize) -> AnswerCache<V> {
+        AnswerCache {
+            cap: capacity,
+            map: HashMap::with_capacity(capacity.min(1 << 16)),
+            queue: VecDeque::new(),
+            tick: 0,
+            hits: 0,
+            lookups: 0,
+        }
+    }
+
+    /// Entries cached.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// No entries cached.
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Maximum entries.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Lookups performed.
+    pub fn lookups(&self) -> u64 {
+        self.lookups
+    }
+
+    /// Lookups that hit.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Fraction of lookups that hit (0 when none were made).
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    /// Look up a key, refreshing its recency on a hit.
+    pub fn get(&mut self, key: &[u8]) -> Option<V> {
+        self.lookups += 1;
+        self.tick += 1;
+        let tick = self.tick;
+        if let Some(slot) = self.map.get_mut(key) {
+            slot.stamp = tick;
+            self.hits += 1;
+            let value = slot.value.clone();
+            self.touch(key.to_vec(), tick);
+            return Some(value);
+        }
+        None
+    }
+
+    /// Insert (or refresh) a key, evicting least-recently-used entries
+    /// past capacity.
+    pub fn insert(&mut self, key: Vec<u8>, value: V) {
+        if self.cap == 0 {
+            return;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        // Map first, then the recency record: `touch` may compact the
+        // queue, and compaction only retains records whose stamp
+        // matches a live map entry — touching before inserting would
+        // let that compaction drop the new entry's only record, leaving
+        // it unevictable.
+        self.map.insert(key.clone(), Slot { value, stamp: tick });
+        self.touch(key, tick);
+        while self.map.len() > self.cap {
+            match self.queue.pop_front() {
+                Some((k, stamp)) => {
+                    // Only evict when this queue entry is the key's
+                    // *current* recency record; stale entries from
+                    // earlier touches are skipped.
+                    if self.map.get(&k).is_some_and(|s| s.stamp == stamp) {
+                        self.map.remove(&k);
+                    }
+                }
+                None => break,
+            }
+        }
+    }
+
+    fn touch(&mut self, key: Vec<u8>, stamp: u64) {
+        self.queue.push_back((key, stamp));
+        // Compact the lazy queue so hit-heavy replays stay bounded.
+        if self.queue.len() > self.cap.saturating_mul(4) + 16 {
+            let map = &self.map;
+            self.queue
+                .retain(|(k, s)| map.get(k).is_some_and(|slot| slot.stamp == *s));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k(b: u8) -> Vec<u8> {
+        vec![b]
+    }
+
+    #[test]
+    fn hits_and_misses_are_counted() {
+        let mut c: AnswerCache<u32> = AnswerCache::new(4);
+        assert!(c.get(&k(1)).is_none());
+        c.insert(k(1), 11);
+        assert_eq!(c.get(&k(1)), Some(11));
+        assert_eq!(c.lookups(), 2);
+        assert_eq!(c.hits(), 1);
+        assert!((c.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(c.len(), 1);
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c: AnswerCache<u32> = AnswerCache::new(2);
+        c.insert(k(1), 1);
+        c.insert(k(2), 2);
+        // Touch 1 so 2 becomes the LRU entry.
+        assert_eq!(c.get(&k(1)), Some(1));
+        c.insert(k(3), 3);
+        assert_eq!(c.len(), 2);
+        assert!(c.get(&k(2)).is_none(), "LRU entry evicted");
+        assert_eq!(c.get(&k(1)), Some(1));
+        assert_eq!(c.get(&k(3)), Some(3));
+    }
+
+    #[test]
+    fn reinsert_refreshes_value_and_recency() {
+        let mut c: AnswerCache<u32> = AnswerCache::new(2);
+        c.insert(k(1), 1);
+        c.insert(k(2), 2);
+        c.insert(k(1), 10);
+        c.insert(k(3), 3);
+        assert_eq!(c.get(&k(1)), Some(10), "refreshed key survives");
+        assert!(c.get(&k(2)).is_none(), "stale key evicted");
+    }
+
+    #[test]
+    fn zero_capacity_disables_the_cache() {
+        let mut c: AnswerCache<u32> = AnswerCache::new(0);
+        c.insert(k(1), 1);
+        assert!(c.get(&k(1)).is_none());
+        assert!(c.is_empty());
+    }
+
+    #[test]
+    fn inserts_across_compaction_boundaries_stay_evictable() {
+        // Interleaved hits and inserts repeatedly drive the lazy queue
+        // across its compaction threshold, so some inserts compact
+        // *inside* their own recency touch. The map must be updated
+        // before that touch: otherwise the compaction drops the new
+        // entry's only record, the key becomes an unevictable phantom,
+        // and eviction starts removing fresh entries instead.
+        let mut c: AnswerCache<u32> = AnswerCache::new(2);
+        c.insert(k(0), 0);
+        for i in 1..=100u8 {
+            assert!(c.get(&k(i - 1)).is_some(), "latest insert {i} must be live");
+            c.insert(k(i), u32::from(i));
+            assert!(c.len() <= 2, "capacity must hold at insert {i}");
+        }
+        assert_eq!(c.get(&k(100)), Some(100));
+    }
+
+    #[test]
+    fn queue_stays_bounded_under_repeat_hits() {
+        let mut c: AnswerCache<u32> = AnswerCache::new(2);
+        c.insert(k(1), 1);
+        c.insert(k(2), 2);
+        for _ in 0..10_000 {
+            assert!(c.get(&k(1)).is_some());
+            assert!(c.get(&k(2)).is_some());
+        }
+        assert!(
+            c.queue.len() <= c.cap * 4 + 17,
+            "lazy queue grew unboundedly: {}",
+            c.queue.len()
+        );
+        assert_eq!(c.len(), 2);
+    }
+}

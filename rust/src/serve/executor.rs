@@ -1,34 +1,48 @@
 //! The deadline-aware sharded executor.
 //!
 //! A [`ShardedServer`] owns one model shard per partition and serves a
-//! replayed query log over the batch engine's worker pool. Per batch:
+//! replayed query log over the batch engine's worker pool.
 //!
-//! 1. **Stage 1** — one pool task per shard computes every query's
-//!    initial answer from aggregated points; results stream back in
-//!    completion order and are merged per query the moment the last
-//!    shard lands. The initial response is *always* delivered.
+//! 0. **Cache** — the hot-query answer cache sits in front of
+//!    admission: a request whose query bytes hit serves the cached
+//!    final response immediately at zero compute (no batching, no
+//!    scoring). Misses are admitted to the micro-batcher.
+//! 1. **Stage 1** — one pool task per shard answers the whole
+//!    micro-batch from aggregated points via
+//!    [`ServableModel::answer_initial_block`]: the batch query block is
+//!    assembled once and scored in ONE `ScoreBackend` call per (shard,
+//!    batch) — not one per query. Results stream back in completion
+//!    order and are merged per query the moment the last shard lands;
+//!    the initial response is *always* delivered. Each shard's measured
+//!    stage-1 time feeds a per-shard EWMA of the per-(query × bucket)
+//!    cost.
 //! 2. **Budget** — the per-request refinement budget is resolved:
 //!    a fixed bucket count, Algorithm 1's ε_max fraction, everything,
 //!    or whatever the remaining deadline affords (estimated from the
-//!    measured stage-1 cost and the shards' originals-per-bucket).
+//!    cross-batch EWMA and the shards' originals-per-bucket).
 //! 3. **Stage 2** — one pool task per shard refines the batch with the
 //!    resolved budget (Algorithm 1's ranking picks which buckets each
 //!    query expands); refined answers are merged into the final
-//!    responses.
+//!    responses, which also populate the answer cache.
 //!
 //! Task panics take the same path as the batch engine
 //! ([`crate::mapreduce::engine::drain_stream`]): the first panic fails
 //! the replay with an error after draining in-flight tasks.
 
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, Mutex};
 
 use crate::approx::algorithm1::refine_budget;
 use crate::error::{Error, Result};
 use crate::mapreduce::engine::{drain_stream, Engine};
 use crate::model::{InitialAnswer, ServableModel};
 use crate::serve::batcher::MicroBatcher;
+use crate::serve::cache::AnswerCache;
 use crate::serve::stats::{LatencyStats, ServeReport};
 use crate::util::timer::Stopwatch;
+
+/// Smoothing factor of the per-shard stage-1 cost EWMA (weight of the
+/// newest batch's measurement).
+const EWMA_ALPHA: f64 = 0.3;
 
 /// How much stage-2 work each request may spend, per shard.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -57,6 +71,13 @@ pub struct ServeConfig {
     pub deadline_s: f64,
     /// Refinement budget policy.
     pub budget: RefineBudget,
+    /// Hot-query answer cache entries (0 disables the cache). A hit
+    /// serves the cached final response at zero compute; see
+    /// [`crate::serve::AnswerCache`]. Batches served under
+    /// [`RefineBudget::Deadline`] never populate the cache (its
+    /// budgets vary with load, so a loaded batch's degraded answers
+    /// would otherwise be pinned onto hot queries).
+    pub cache_capacity: usize,
 }
 
 impl Default for ServeConfig {
@@ -65,6 +86,7 @@ impl Default for ServeConfig {
             batch_size: 64,
             deadline_s: 0.050,
             budget: RefineBudget::Fraction(0.05),
+            cache_capacity: 0,
         }
     }
 }
@@ -72,21 +94,28 @@ impl Default for ServeConfig {
 /// Everything the server did for one request.
 #[derive(Clone, Debug)]
 pub struct QueryOutcome<R> {
-    /// The always-delivered initial response (aggregated points only).
+    /// The always-delivered initial response (aggregated points only —
+    /// or, on a cache hit, the cached final response).
     pub initial: R,
-    /// The refined response, when any budget was spent.
+    /// The refined response, when any budget was spent on *this*
+    /// request (always `None` for cache hits).
     pub refined: Option<R>,
     /// Seconds from batch dispatch to the merged initial response.
     pub initial_latency_s: f64,
     /// Seconds from batch dispatch to the final response.
     pub total_latency_s: f64,
     /// Per-query accuracy of the initial response (ground truth
-    /// permitting).
+    /// permitting). On a cache hit this scores the cached final
+    /// response and is excluded from the report's stage-1 mean.
     pub initial_accuracy: Option<f64>,
-    /// Per-query accuracy of the refined response.
+    /// Per-query accuracy of the refined response — or, on a cache
+    /// hit, of the cached final response being replayed.
     pub refined_accuracy: Option<f64>,
     /// Buckets expanded for this request, summed over shards.
     pub refined_buckets: usize,
+    /// Whether this request was served from the hot-query answer cache
+    /// (zero compute; latencies are 0, `refined_buckets` is 0).
+    pub cache_hit: bool,
 }
 
 impl<R> QueryOutcome<R> {
@@ -100,6 +129,11 @@ impl<R> QueryOutcome<R> {
 /// A model sharded across the engine's worker pool.
 pub struct ShardedServer<M: ServableModel> {
     shards: Vec<Arc<M>>,
+    /// Per-shard EWMA of the measured stage-1 cost per (query ×
+    /// bucket), in seconds; 0.0 = no batch measured yet. Calibrates
+    /// [`RefineBudget::Deadline`] across batches instead of from the
+    /// current batch alone.
+    stage1_bucket_cost: Mutex<Vec<f64>>,
 }
 
 impl<M: ServableModel> ShardedServer<M> {
@@ -108,7 +142,11 @@ impl<M: ServableModel> ShardedServer<M> {
         if shards.is_empty() {
             return Err(Error::Engine("server needs at least one shard".into()));
         }
-        Ok(ShardedServer { shards })
+        let n = shards.len();
+        Ok(ShardedServer {
+            shards,
+            stage1_bucket_cost: Mutex::new(vec![0.0; n]),
+        })
     }
 
     /// Number of shards.
@@ -116,8 +154,9 @@ impl<M: ServableModel> ShardedServer<M> {
         self.shards.len()
     }
 
-    /// Replay a query log: batch, answer, refine. Returns the
-    /// per-request outcomes (in input order) and the aggregate report.
+    /// Replay a query log: check the answer cache, batch the misses,
+    /// answer, refine. Returns the per-request outcomes (in input
+    /// order) and the aggregate report.
     pub fn serve(
         &self,
         engine: &Engine,
@@ -125,53 +164,104 @@ impl<M: ServableModel> ShardedServer<M> {
         config: &ServeConfig,
     ) -> Result<(Vec<QueryOutcome<M::Response>>, ServeReport)> {
         let queries = Arc::new(queries);
-        let mut outcomes: Vec<QueryOutcome<M::Response>> =
-            Vec::with_capacity(queries.len());
+        // Outcomes are written by input index: cache hits resolve ahead
+        // of still-queued misses, so a plain push would misorder them.
+        let mut slots: Vec<Option<QueryOutcome<M::Response>>> =
+            (0..queries.len()).map(|_| None).collect();
+        let mut cache: AnswerCache<M::Response> = AnswerCache::new(config.cache_capacity);
+        let merger = &self.shards[0];
         let mut batcher = MicroBatcher::new(config.batch_size);
         for qi in 0..queries.len() {
-            if let Some(batch) = batcher.push(qi) {
-                self.serve_batch(engine, &queries, batch, config, &mut outcomes)?;
+            // The cache sits in front of admission: a hit serves the
+            // cached final response at zero compute. The key computed
+            // here rides along with the admitted index so a miss does
+            // not serialize the query a second time at insert.
+            let key = if config.cache_capacity > 0 {
+                merger.query_key(&queries[qi])
+            } else {
+                None
+            };
+            if let Some(k) = &key {
+                if let Some(response) = cache.get(k) {
+                    let accuracy = merger.accuracy(&queries[qi], &response);
+                    // A hit is neither a fresh stage-1 answer nor a
+                    // refinement of this request: `initial` carries the
+                    // response so `final_response()` works, but
+                    // `initial_accuracy` is reported under the
+                    // cache-hit flag (excluded from the stage-1 mean)
+                    // and `refined` stays None (no budget was spent).
+                    slots[qi] = Some(QueryOutcome {
+                        initial: response,
+                        refined: None,
+                        initial_latency_s: 0.0,
+                        total_latency_s: 0.0,
+                        initial_accuracy: accuracy,
+                        refined_accuracy: accuracy,
+                        refined_buckets: 0,
+                        cache_hit: true,
+                    });
+                    continue;
+                }
+            }
+            if let Some(batch) = batcher.push((qi, key)) {
+                self.serve_batch(engine, &queries, batch, config, &mut slots, &mut cache)?;
             }
         }
         if let Some(batch) = batcher.flush() {
-            self.serve_batch(engine, &queries, batch, config, &mut outcomes)?;
+            self.serve_batch(engine, &queries, batch, config, &mut slots, &mut cache)?;
         }
 
-        let report = self.report(&queries, &outcomes, config);
+        let outcomes: Vec<QueryOutcome<M::Response>> = slots
+            .into_iter()
+            .map(|s| s.expect("query outcome missing"))
+            .collect();
+        let report = self.report(&queries, &outcomes, config, &cache);
         Ok((outcomes, report))
     }
 
-    /// One micro-batch through both stages.
+    /// One micro-batch through both stages. `batch` pairs each admitted
+    /// query index with its precomputed cache key (None when the cache
+    /// is off or the query is uncacheable).
     fn serve_batch(
         &self,
         engine: &Engine,
         queries: &Arc<Vec<M::Query>>,
-        batch: Vec<usize>,
+        batch: Vec<(usize, Option<Vec<u8>>)>,
         config: &ServeConfig,
-        outcomes: &mut Vec<QueryOutcome<M::Response>>,
+        slots: &mut [Option<QueryOutcome<M::Response>>],
+        cache: &mut AnswerCache<M::Response>,
     ) -> Result<()> {
         let n_shards = self.shards.len();
-        let batch = Arc::new(batch);
+        let (indices, mut keys): (Vec<usize>, Vec<Option<Vec<u8>>>) = batch.into_iter().unzip();
+        let batch = Arc::new(indices);
         let sw = Stopwatch::new();
 
-        // Stage 1: every shard answers the whole batch from aggregates.
+        // Stage 1: every shard answers the whole micro-batch in ONE
+        // backend call (`answer_initial_block` assembles the batch
+        // query block once per task), timing itself for the EWMA.
         let rx1 = engine.pool().stream(n_shards, |s| {
             let shard = Arc::clone(&self.shards[s]);
             let queries = Arc::clone(queries);
             let batch = Arc::clone(&batch);
-            move || -> Vec<InitialAnswer<M::Answer>> {
-                batch.iter().map(|&qi| shard.answer_initial(&queries[qi])).collect()
+            move || -> (Vec<InitialAnswer<M::Answer>>, f64) {
+                let task_sw = Stopwatch::new();
+                let block: Vec<&M::Query> = batch.iter().map(|&qi| &queries[qi]).collect();
+                let answers = shard.answer_initial_block(&block);
+                (answers, task_sw.elapsed_s())
             }
         });
         let mut per_shard: Vec<Option<Vec<InitialAnswer<M::Answer>>>> =
             (0..n_shards).map(|_| None).collect();
+        let mut stage1_task_s = vec![0.0f64; n_shards];
         let mut failure: Option<Error> = None;
-        drain_stream(rx1, "serving stage-1", &mut failure, |s, v, _| {
+        drain_stream(rx1, "serving stage-1", &mut failure, |s, (v, t), _| {
             per_shard[s] = Some(v);
+            stage1_task_s[s] = t;
         });
         if let Some(e) = failure {
             return Err(e);
         }
+        self.update_stage1_ewma(&stage1_task_s, batch.len());
 
         // Merge per query: the initial responses, always delivered.
         let merger = &self.shards[0];
@@ -195,11 +285,25 @@ impl<M: ServableModel> ShardedServer<M> {
             .map(|(s, &b)| b.min(self.shards[s].n_buckets()))
             .sum();
 
+        // Deadline budgets vary batch to batch with measured load, so
+        // whatever quality a loaded batch produced (initial-only or
+        // barely refined) would be pinned onto its hot queries forever
+        // — hits refresh recency — even once full refinement is
+        // affordable again. Only policy-stable budgets populate the
+        // cache.
+        let cacheable = !matches!(config.budget, RefineBudget::Deadline);
+
         if budgets.iter().all(|&b| b == 0) {
-            // Initial answers are final.
-            for (&qi, initial) in batch.iter().zip(initial_responses) {
+            // Initial answers are final (and, policy permitting,
+            // cacheable as such).
+            for ((j, &qi), initial) in batch.iter().enumerate().zip(initial_responses) {
                 let initial_accuracy = merger.accuracy(&queries[qi], &initial);
-                outcomes.push(QueryOutcome {
+                if cacheable {
+                    if let Some(key) = keys[j].take() {
+                        cache.insert(key, initial.clone());
+                    }
+                }
+                slots[qi] = Some(QueryOutcome {
                     initial,
                     refined: None,
                     initial_latency_s,
@@ -207,6 +311,7 @@ impl<M: ServableModel> ShardedServer<M> {
                     initial_accuracy,
                     refined_accuracy: None,
                     refined_buckets: 0,
+                    cache_hit: false,
                 });
             }
             return Ok(());
@@ -249,7 +354,12 @@ impl<M: ServableModel> ShardedServer<M> {
             let refined = merger.merge(&queries[qi], &partials);
             let initial_accuracy = merger.accuracy(&queries[qi], &initial);
             let refined_accuracy = merger.accuracy(&queries[qi], &refined);
-            outcomes.push(QueryOutcome {
+            if cacheable {
+                if let Some(key) = keys[j].take() {
+                    cache.insert(key, refined.clone());
+                }
+            }
+            slots[qi] = Some(QueryOutcome {
                 initial,
                 refined: Some(refined),
                 initial_latency_s,
@@ -257,15 +367,34 @@ impl<M: ServableModel> ShardedServer<M> {
                 initial_accuracy,
                 refined_accuracy,
                 refined_buckets,
+                cache_hit: false,
             });
         }
         Ok(())
     }
 
+    /// Fold one batch's measured per-shard stage-1 times into the
+    /// per-shard per-(query × bucket) cost EWMA.
+    fn update_stage1_ewma(&self, stage1_task_s: &[f64], batch_len: usize) {
+        let mut ewma = self.stage1_bucket_cost.lock().unwrap();
+        for (s, &t) in stage1_task_s.iter().enumerate() {
+            if t <= 0.0 || !t.is_finite() || batch_len == 0 {
+                continue;
+            }
+            let units = (batch_len * self.shards[s].n_buckets().max(1)) as f64;
+            let x = t / units;
+            ewma[s] = if ewma[s] > 0.0 {
+                EWMA_ALPHA * x + (1.0 - EWMA_ALPHA) * ewma[s]
+            } else {
+                x
+            };
+        }
+    }
+
     /// Per-shard stage-2 budgets under the configured policy.
     /// `elapsed_s` is the batch's dispatch-to-initial-response time —
-    /// it both anchors the remaining-deadline check and calibrates the
-    /// per-bucket cost estimate.
+    /// it anchors the remaining-deadline check; the per-bucket cost
+    /// itself comes from the cross-batch per-shard EWMA.
     fn resolve_budgets(
         &self,
         config: &ServeConfig,
@@ -288,25 +417,26 @@ impl<M: ServableModel> ShardedServer<M> {
                 if remaining <= 0.0 {
                     return vec![0; self.shards.len()];
                 }
-                // Stage 1 scored every aggregated bucket once per query;
-                // refining a bucket rescans its originals, so one
-                // refined bucket costs roughly (originals / buckets) ×
-                // the per-bucket stage-1 cost. Divide the remaining
-                // time evenly across shards.
-                let total_buckets: usize =
-                    self.shards.iter().map(|s| s.n_buckets().max(1)).sum();
-                let per_bucket_s = (elapsed_s
-                    / (batch_len.max(1) * total_buckets.max(1)) as f64)
-                    .max(1e-9);
+                // Stage 1 scored every aggregated bucket once per
+                // query; refining a bucket rescans its originals, so
+                // one refined bucket costs roughly (originals /
+                // buckets) × the EWMA'd per-bucket stage-1 cost of that
+                // shard. Divide the remaining time evenly across
+                // shards. (The EWMA has at least the current batch's
+                // sample by the time budgets are resolved.)
+                let ewma = self.stage1_bucket_cost.lock().unwrap().clone();
                 self.shards
                     .iter()
-                    .map(|s| {
+                    .enumerate()
+                    .map(|(s, shard)| {
+                        let per_bucket_s = ewma[s].max(1e-9);
                         let per_refined_bucket_s = per_bucket_s
-                            * (s.n_originals().max(1) as f64 / s.n_buckets().max(1) as f64);
+                            * (shard.n_originals().max(1) as f64
+                                / shard.n_buckets().max(1) as f64);
                         let affordable = remaining
                             / (self.shards.len().max(1) * batch_len.max(1)) as f64
                             / per_refined_bucket_s;
-                        (affordable.floor() as usize).min(s.n_buckets())
+                        (affordable.floor() as usize).min(shard.n_buckets())
                     })
                     .collect()
             }
@@ -319,6 +449,7 @@ impl<M: ServableModel> ShardedServer<M> {
         queries: &Arc<Vec<M::Query>>,
         outcomes: &[QueryOutcome<M::Response>],
         config: &ServeConfig,
+        cache: &AnswerCache<M::Response>,
     ) -> ServeReport {
         let mean_of = |xs: Vec<f64>| {
             if xs.is_empty() {
@@ -343,14 +474,23 @@ impl<M: ServableModel> ShardedServer<M> {
             total: LatencyStats::from_samples(
                 outcomes.iter().map(|o| o.total_latency_s).collect(),
             ),
+            // Stage-1 accuracy over queries whose stage 1 actually ran:
+            // cache hits replay a *final* response, so counting them
+            // here would inflate what aggregated-only answers achieve.
             initial_accuracy: mean_of(
-                outcomes.iter().filter_map(|o| o.initial_accuracy).collect(),
+                outcomes
+                    .iter()
+                    .filter(|o| !o.cache_hit)
+                    .filter_map(|o| o.initial_accuracy)
+                    .collect(),
             ),
-            // Final-response accuracy over the SAME population as the
-            // initial mean: unrefined queries contribute their initial
-            // accuracy, so partial refinement (e.g. Deadline budgets
-            // under load) cannot skew the comparison by averaging over
-            // an easier subset.
+            // Final-response accuracy over EVERY ground-truth query:
+            // unrefined queries contribute their initial accuracy (so
+            // partial refinement under Deadline load cannot average an
+            // easier subset) and cache hits contribute the replayed
+            // final response — they are real deliveries, unlike the
+            // stage-1 mean above which deliberately covers only the
+            // queries whose stage 1 ran.
             refined_accuracy: mean_of(
                 outcomes
                     .iter()
@@ -363,6 +503,9 @@ impl<M: ServableModel> ShardedServer<M> {
                 .iter()
                 .filter(|o| o.initial_latency_s > config.deadline_s)
                 .count(),
+            cache_hits: cache.hits() as usize,
+            cache_lookups: cache.lookups() as usize,
+            stage1_bucket_cost_ewma_s: self.stage1_bucket_cost.lock().unwrap().clone(),
         }
     }
 }
@@ -429,6 +572,10 @@ mod tests {
         fn accuracy(&self, q: &ToyQuery, r: &i64) -> Option<f64> {
             Some(-((q.target - r).abs() as f64))
         }
+
+        fn query_key(&self, q: &ToyQuery) -> Option<Vec<u8>> {
+            Some(q.target.to_le_bytes().to_vec())
+        }
     }
 
     fn server(panic_on_refine: bool) -> ShardedServer<ToyModel> {
@@ -465,6 +612,7 @@ mod tests {
                     batch_size: 2,
                     deadline_s: 10.0,
                     budget: RefineBudget::Off,
+                    cache_capacity: 0,
                 },
             )
             .unwrap();
@@ -492,6 +640,7 @@ mod tests {
                     batch_size: 3,
                     deadline_s: 10.0,
                     budget: RefineBudget::All,
+                    cache_capacity: 0,
                 },
             )
             .unwrap();
@@ -518,6 +667,7 @@ mod tests {
                     batch_size: 1,
                     deadline_s: 10.0,
                     budget: RefineBudget::Buckets(1),
+                    cache_capacity: 0,
                 },
             )
             .unwrap();
@@ -538,6 +688,7 @@ mod tests {
                     batch_size: 4,
                     deadline_s: 0.0,
                     budget: RefineBudget::Deadline,
+                    cache_capacity: 0,
                 },
             )
             .unwrap();
@@ -545,6 +696,79 @@ mod tests {
         assert_eq!(report.deadline_misses, 4);
         for o in &outcomes {
             assert!(o.refined.is_none(), "no budget left past the deadline");
+        }
+    }
+
+    #[test]
+    fn cache_hits_serve_the_refined_answer_in_input_order() {
+        let engine = Engine::new(2);
+        let (outcomes, report) = server(false)
+            .serve(
+                &engine,
+                queries(7),
+                &ServeConfig {
+                    batch_size: 2,
+                    deadline_s: 10.0,
+                    budget: RefineBudget::All,
+                    cache_capacity: 16,
+                },
+            )
+            .unwrap();
+        assert_eq!(outcomes.len(), 7);
+        // All 7 queries share one key. q0 misses and is queued; q1
+        // misses too (the cache only fills once its batch is served),
+        // completing the first batch; every later query hits.
+        assert!(!outcomes[0].cache_hit && !outcomes[1].cache_hit);
+        for (i, o) in outcomes.iter().enumerate().skip(2) {
+            assert!(o.cache_hit, "query {i} should hit");
+            assert_eq!(*o.final_response(), 12, "cached refined answer");
+            assert!(o.refined.is_none(), "no budget was spent on a hit");
+            assert_eq!(o.refined_buckets, 0);
+            assert_eq!(o.total_latency_s, 0.0);
+            assert_eq!(o.refined_accuracy, Some(0.0), "accuracy rescored per query");
+        }
+        assert_eq!(report.cache_hits, 5);
+        assert_eq!(report.cache_lookups, 7);
+        assert!((report.cache_hit_rate() - 5.0 / 7.0).abs() < 1e-12);
+        assert_eq!(report.queries, 7);
+        // Only the two computed queries refined; the stage-1 mean
+        // covers them alone (hits replay a final response), while the
+        // final-response mean covers all seven.
+        assert_eq!(report.refined_queries, 2);
+        assert_eq!(report.initial_accuracy, Some(-7.0));
+        assert_eq!(report.refined_accuracy, Some(0.0));
+    }
+
+    #[test]
+    fn cache_off_never_hits() {
+        let engine = Engine::new(2);
+        let (outcomes, report) = server(false)
+            .serve(&engine, queries(6), &ServeConfig::default())
+            .unwrap();
+        assert!(outcomes.iter().all(|o| !o.cache_hit));
+        assert_eq!(report.cache_hits, 0);
+        assert_eq!(report.cache_lookups, 0);
+        assert_eq!(report.cache_hit_rate(), 0.0);
+    }
+
+    #[test]
+    fn stage1_ewma_is_measured_per_shard() {
+        let engine = Engine::new(2);
+        let (_, report) = server(false)
+            .serve(
+                &engine,
+                queries(8),
+                &ServeConfig {
+                    batch_size: 2,
+                    deadline_s: 10.0,
+                    budget: RefineBudget::Deadline,
+                    cache_capacity: 0,
+                },
+            )
+            .unwrap();
+        assert_eq!(report.stage1_bucket_cost_ewma_s.len(), 2);
+        for (s, &c) in report.stage1_bucket_cost_ewma_s.iter().enumerate() {
+            assert!(c > 0.0 && c.is_finite(), "shard {s} ewma {c}");
         }
     }
 
@@ -559,6 +783,7 @@ mod tests {
                     batch_size: 3,
                     deadline_s: 10.0,
                     budget: RefineBudget::All,
+                    cache_capacity: 0,
                 },
             )
             .unwrap_err();

@@ -9,26 +9,35 @@
 //!
 //! Pieces:
 //!
+//! * [`AnswerCache`] — the hot-query answer cache sitting in front of
+//!   admission: repeat queries (keyed on their answer-relevant bytes)
+//!   are served their cached final response at zero compute;
 //! * [`MicroBatcher`] — groups in-flight requests so each model shard
 //!   sees one task per batch instead of one task per query;
 //! * [`ShardedServer`] — shards a [`crate::model::ServableModel`]
-//!   across the engine's [`crate::util::pool::WorkerPool`], runs stage
-//!   1 for a batch on every shard, merges the per-shard answers into
-//!   initial responses, then spends the remaining budget on stage-2
-//!   refinement tasks (same drain/failure path as the batch engine:
-//!   [`crate::mapreduce::engine::drain_stream`]);
+//!   across the engine's [`crate::util::pool::WorkerPool`], answers a
+//!   whole micro-batch per shard in ONE backend call
+//!   ([`crate::model::ServableModel::answer_initial_block`]), merges
+//!   the per-shard answers into initial responses, then spends the
+//!   remaining budget on stage-2 refinement tasks (same drain/failure
+//!   path as the batch engine:
+//!   [`crate::mapreduce::engine::drain_stream`]); the `Deadline` budget
+//!   is calibrated by a per-shard EWMA of measured stage-1 cost;
 //! * [`query_log`] — synthetic query logs derived from the workbench
 //!   datasets, for replay by the CLI `serve` command, the e2e tests and
 //!   `benches/serving.rs`;
 //! * [`ServeReport`] — per-run latency percentiles plus
-//!   initial-vs-refined accuracy, the serving analogue of
+//!   initial-vs-refined accuracy, cache hit counts and the budget
+//!   calibration state, the serving analogue of
 //!   [`crate::mapreduce::metrics::TracePoint`] accounting.
 
 pub mod batcher;
+pub mod cache;
 pub mod executor;
 pub mod query_log;
 pub mod stats;
 
 pub use batcher::MicroBatcher;
+pub use cache::AnswerCache;
 pub use executor::{QueryOutcome, RefineBudget, ServeConfig, ShardedServer};
 pub use stats::{LatencyStats, ServeReport};

@@ -57,16 +57,18 @@ pub struct ServeReport {
     /// End-to-end latency including refinement (== initial when no
     /// budget was spent).
     pub total: LatencyStats,
-    /// Mean per-query accuracy of initial answers (None when no query
-    /// carried ground truth). Metric is app-defined: kNN 0/1
-    /// correctness, CF negative squared rating error, k-means negative
-    /// squared distance to the chosen representative.
+    /// Mean per-query accuracy of initial answers, over queries whose
+    /// stage 1 actually ran — cache hits replay a final response and
+    /// are excluded (None when no such query carried ground truth).
+    /// Metric is app-defined: kNN 0/1 correctness, CF negative squared
+    /// rating error, k-means negative squared distance to the chosen
+    /// representative.
     pub initial_accuracy: Option<f64>,
     /// Mean per-query accuracy of the final (client-visible) response:
-    /// the refined answer where refinement ran, the initial answer
-    /// otherwise — averaged over the same population as
-    /// `initial_accuracy` so partial refinement cannot bias the
-    /// comparison.
+    /// the refined answer where refinement ran, the cached final
+    /// response for cache hits, the initial answer otherwise —
+    /// averaged over every ground-truth query so partial refinement
+    /// cannot bias the comparison by averaging an easier subset.
     pub refined_accuracy: Option<f64>,
     /// Requests that received any refinement.
     pub refined_queries: usize,
@@ -74,9 +76,26 @@ pub struct ServeReport {
     pub refined_buckets_mean: f64,
     /// Requests whose initial answer landed after their deadline.
     pub deadline_misses: usize,
+    /// Hot-query answer-cache hits (requests served at zero compute).
+    pub cache_hits: usize,
+    /// Answer-cache lookups (cacheable requests seen while the cache
+    /// was enabled; 0 when it was off).
+    pub cache_lookups: usize,
+    /// Per-shard EWMA of the measured stage-1 cost per (query ×
+    /// bucket), seconds — the [`crate::serve::RefineBudget::Deadline`]
+    /// calibration state after the replay (0.0 = shard never measured).
+    pub stage1_bucket_cost_ewma_s: Vec<f64>,
 }
 
 impl ServeReport {
+    /// Fraction of cache lookups that hit (0 when none were made).
+    pub fn cache_hit_rate(&self) -> f64 {
+        if self.cache_lookups == 0 {
+            0.0
+        } else {
+            self.cache_hits as f64 / self.cache_lookups as f64
+        }
+    }
     /// Render as a two-row latency table (initial vs refined) plus an
     /// accuracy row.
     pub fn table(&self, title: &str) -> Table {

@@ -1,0 +1,402 @@
+//! Block-oriented serving stage 1: the acceptance tests for the
+//! batched hot path.
+//!
+//! * A counting `ScoreBackend` wrapper asserts serving stage 1 issues
+//!   EXACTLY one backend call per (shard, micro-batch) for all three
+//!   models — the whole point of `answer_initial_block`.
+//! * Batched answers equal per-query answers bit-for-bit on fixed
+//!   seeds (including the Q=1 and empty-batch edge cases, exercised
+//!   both directly and through the executor).
+//! * The hot-query answer cache returns byte-identical responses for
+//!   repeated queries, at zero additional backend calls.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+use accurateml::approx::algorithm1::RefineOrder;
+use accurateml::approx::ProcessingMode;
+use accurateml::apps::kmeans::{KmeansConfig, KmeansRunner};
+use accurateml::data::gaussian::{GaussianMixtureSpec, LabeledPoints};
+use accurateml::data::matrix::Matrix;
+use accurateml::data::points::split_rows;
+use accurateml::data::ratings::{LatentFactorSpec, RatingsSplit};
+use accurateml::lsh::bucketizer::Grouping;
+use accurateml::mapreduce::engine::Engine;
+use accurateml::mapreduce::metrics::TaskMetrics;
+use accurateml::model::{CfModel, KmeansModel, KnnModel, ServableModel};
+use accurateml::runtime::backend::{Candidate, NativeBackend, ScoreBackend};
+use accurateml::serve::{query_log, RefineBudget, ServeConfig, ShardedServer};
+
+/// Wraps the native backend and counts every scoring call.
+#[derive(Default)]
+struct CountingBackend {
+    inner: NativeBackend,
+    knn_dists_calls: AtomicUsize,
+    knn_topk_calls: AtomicUsize,
+    cf_weights_calls: AtomicUsize,
+}
+
+impl ScoreBackend for CountingBackend {
+    fn knn_block_topk(
+        &self,
+        q: &Matrix,
+        x: &Matrix,
+        k: usize,
+    ) -> accurateml::Result<Vec<Vec<Candidate>>> {
+        self.knn_topk_calls.fetch_add(1, Ordering::SeqCst);
+        self.inner.knn_block_topk(q, x, k)
+    }
+
+    fn knn_dists(&self, q: &Matrix, x: &Matrix) -> accurateml::Result<Matrix> {
+        self.knn_dists_calls.fetch_add(1, Ordering::SeqCst);
+        self.inner.knn_dists(q, x)
+    }
+
+    fn cf_weights(
+        &self,
+        ca: &Matrix,
+        ma: &Matrix,
+        cu: &Matrix,
+        mu: &Matrix,
+    ) -> accurateml::Result<Matrix> {
+        self.cf_weights_calls.fetch_add(1, Ordering::SeqCst);
+        self.inner.cf_weights(ca, ma, cu, mu)
+    }
+
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+}
+
+fn knn_data() -> Arc<LabeledPoints> {
+    Arc::new(
+        GaussianMixtureSpec {
+            n_points: 900,
+            dim: 8,
+            n_classes: 3,
+            noise: 0.2,
+            test_fraction: 0.05,
+            seed: 13,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap(),
+    )
+}
+
+fn knn_shards(
+    data: &Arc<LabeledPoints>,
+    n_partitions: usize,
+    backend: Arc<dyn ScoreBackend>,
+) -> Vec<Arc<KnnModel>> {
+    split_rows(data.train.rows(), n_partitions)
+        .into_iter()
+        .filter(|r| !r.is_empty())
+        .map(|range| {
+            Arc::new(
+                KnnModel::build(
+                    &data.train,
+                    &data.train_labels,
+                    range,
+                    5,
+                    10.0,
+                    Grouping::Lsh,
+                    RefineOrder::Correlation,
+                    7,
+                    Arc::clone(&backend),
+                    &mut TaskMetrics::default(),
+                )
+                .unwrap(),
+            )
+        })
+        .collect()
+}
+
+fn cf_split() -> Arc<RatingsSplit> {
+    let ratings = LatentFactorSpec {
+        n_users: 240,
+        n_items: 64,
+        n_factors: 4,
+        mean_ratings_per_user: 16,
+        ..Default::default()
+    }
+    .generate()
+    .unwrap();
+    Arc::new(RatingsSplit::new(&ratings, 12, 0.2, 9).unwrap())
+}
+
+fn cf_shards(split: &Arc<RatingsSplit>, backend: Arc<dyn ScoreBackend>) -> Vec<Arc<CfModel>> {
+    let user_means = accurateml::model::cf::user_means(split);
+    split_rows(split.train.n_users(), 2)
+        .into_iter()
+        .filter(|r| !r.is_empty())
+        .map(|range| {
+            Arc::new(
+                CfModel::build(
+                    split,
+                    &user_means,
+                    range,
+                    10.0,
+                    Grouping::Lsh,
+                    RefineOrder::Correlation,
+                    3,
+                    Arc::clone(&backend),
+                    &mut TaskMetrics::default(),
+                )
+                .unwrap(),
+            )
+        })
+        .collect()
+}
+
+fn kmeans_setup(backend: Arc<dyn ScoreBackend>) -> (Vec<Arc<KmeansModel>>, Arc<Matrix>) {
+    let d = GaussianMixtureSpec {
+        n_points: 800,
+        dim: 6,
+        n_classes: 4,
+        noise: 0.2,
+        test_fraction: 0.01,
+        seed: 5,
+        ..Default::default()
+    }
+    .generate()
+    .unwrap();
+    let points = Arc::new(d.train);
+    let engine = Engine::new(2);
+    let runner = KmeansRunner::new(
+        KmeansConfig {
+            n_clusters: 4,
+            n_iterations: 3,
+            n_partitions: 2,
+            mode: ProcessingMode::Exact,
+            seed: 3,
+            ..Default::default()
+        },
+        Arc::clone(&points),
+    )
+    .unwrap();
+    let (trained, _) = runner.run(&engine).unwrap();
+    let shards = split_rows(points.rows(), 2)
+        .into_iter()
+        .filter(|r| !r.is_empty())
+        .map(|range| {
+            Arc::new(
+                KmeansModel::build(
+                    &points,
+                    range,
+                    &trained.centroids,
+                    20.0,
+                    Grouping::Lsh,
+                    RefineOrder::Correlation,
+                    3,
+                    Arc::clone(&backend),
+                    &mut TaskMetrics::default(),
+                )
+                .unwrap(),
+            )
+        })
+        .collect();
+    (shards, points)
+}
+
+fn serve_cfg(batch_size: usize, budget: RefineBudget, cache: usize) -> ServeConfig {
+    ServeConfig {
+        batch_size,
+        deadline_s: 30.0,
+        budget,
+        cache_capacity: cache,
+    }
+}
+
+/// 10 queries at batch size 4 = 3 micro-batches (4 + 4 + 2).
+const N_QUERIES: usize = 10;
+const BATCH: usize = 4;
+const N_BATCHES: usize = 3;
+
+#[test]
+fn knn_stage1_issues_one_backend_call_per_shard_and_batch() {
+    let counting = Arc::new(CountingBackend::default());
+    let backend: Arc<dyn ScoreBackend> = Arc::clone(&counting) as Arc<dyn ScoreBackend>;
+    let data = knn_data();
+    let shards = knn_shards(&data, 3, backend);
+    let n_shards = shards.len();
+    let server = ShardedServer::new(shards).unwrap();
+    let engine = Engine::new(2);
+    let queries = query_log::knn_query_log(&data, N_QUERIES, 7);
+    counting.knn_dists_calls.store(0, Ordering::SeqCst);
+
+    let (outcomes, _) = server
+        .serve(&engine, queries, &serve_cfg(BATCH, RefineBudget::Fraction(0.1), 0))
+        .unwrap();
+    assert_eq!(outcomes.len(), N_QUERIES);
+    assert_eq!(
+        counting.knn_dists_calls.load(Ordering::SeqCst),
+        n_shards * N_BATCHES,
+        "exactly one knn_dists call per (shard, micro-batch)"
+    );
+    assert_eq!(counting.knn_topk_calls.load(Ordering::SeqCst), 0);
+    assert_eq!(counting.cf_weights_calls.load(Ordering::SeqCst), 0);
+}
+
+#[test]
+fn cf_stage1_issues_one_backend_call_per_shard_and_batch() {
+    let counting = Arc::new(CountingBackend::default());
+    let backend: Arc<dyn ScoreBackend> = Arc::clone(&counting) as Arc<dyn ScoreBackend>;
+    let split = cf_split();
+    let shards = cf_shards(&split, backend);
+    let n_shards = shards.len();
+    let server = ShardedServer::new(shards).unwrap();
+    let engine = Engine::new(2);
+    let queries = query_log::cf_query_log(&split, N_QUERIES, 3);
+    counting.cf_weights_calls.store(0, Ordering::SeqCst);
+
+    let (outcomes, _) = server
+        .serve(&engine, queries, &serve_cfg(BATCH, RefineBudget::Fraction(0.1), 0))
+        .unwrap();
+    assert_eq!(outcomes.len(), N_QUERIES);
+    assert_eq!(
+        counting.cf_weights_calls.load(Ordering::SeqCst),
+        n_shards * N_BATCHES,
+        "exactly one cf_weights call per (shard, micro-batch)"
+    );
+    assert_eq!(counting.knn_dists_calls.load(Ordering::SeqCst), 0);
+}
+
+#[test]
+fn kmeans_stage1_issues_one_backend_call_per_shard_and_batch() {
+    let counting = Arc::new(CountingBackend::default());
+    let backend: Arc<dyn ScoreBackend> = Arc::clone(&counting) as Arc<dyn ScoreBackend>;
+    let (shards, points) = kmeans_setup(backend);
+    let n_shards = shards.len();
+    let server = ShardedServer::new(shards).unwrap();
+    let engine = Engine::new(2);
+    let queries = query_log::kmeans_query_log(&points, N_QUERIES, 7);
+    counting.knn_dists_calls.store(0, Ordering::SeqCst);
+
+    let (outcomes, _) = server
+        .serve(&engine, queries, &serve_cfg(BATCH, RefineBudget::Fraction(0.1), 0))
+        .unwrap();
+    assert_eq!(outcomes.len(), N_QUERIES);
+    assert_eq!(
+        counting.knn_dists_calls.load(Ordering::SeqCst),
+        n_shards * N_BATCHES,
+        "exactly one knn_dists call per (shard, micro-batch)"
+    );
+}
+
+#[test]
+fn batched_answers_equal_per_query_answers() {
+    // kNN.
+    let data = knn_data();
+    let shards = knn_shards(&data, 2, Arc::new(NativeBackend));
+    let queries = query_log::knn_query_log(&data, 17, 7);
+    for shard in &shards {
+        let refs: Vec<&_> = queries.iter().collect();
+        let block = shard.answer_initial_block(&refs);
+        assert_eq!(block.len(), queries.len());
+        for (q, b) in queries.iter().zip(&block) {
+            let per = shard.answer_initial(q);
+            assert_eq!(b.answer, per.answer);
+            assert_eq!(b.correlations, per.correlations);
+        }
+        // Edge cases: empty batch and Q=1.
+        assert!(shard.answer_initial_block(&[]).is_empty());
+        let single = shard.answer_initial_block(&[&queries[0]]);
+        assert_eq!(single.len(), 1);
+        assert_eq!(single[0].answer, shard.answer_initial(&queries[0]).answer);
+    }
+
+    // CF.
+    let split = cf_split();
+    let shards = cf_shards(&split, Arc::new(NativeBackend));
+    let queries = query_log::cf_query_log(&split, 15, 3);
+    for shard in &shards {
+        let refs: Vec<&_> = queries.iter().collect();
+        let block = shard.answer_initial_block(&refs);
+        for (q, b) in queries.iter().zip(&block) {
+            let per = shard.answer_initial(q);
+            assert_eq!(b.answer, per.answer);
+            assert_eq!(b.correlations, per.correlations);
+        }
+        assert!(shard.answer_initial_block(&[]).is_empty());
+    }
+
+    // k-means.
+    let (shards, points) = kmeans_setup(Arc::new(NativeBackend));
+    let queries = query_log::kmeans_query_log(&points, 15, 7);
+    for shard in &shards {
+        let refs: Vec<&_> = queries.iter().collect();
+        let block = shard.answer_initial_block(&refs);
+        for (q, b) in queries.iter().zip(&block) {
+            let per = shard.answer_initial(q);
+            assert_eq!(b.answer, per.answer);
+            assert_eq!(b.correlations, per.correlations);
+        }
+        assert!(shard.answer_initial_block(&[]).is_empty());
+    }
+}
+
+#[test]
+fn batch_size_one_serves_the_same_responses_as_batched() {
+    // The executor's batched path must be invisible in the outputs:
+    // replaying the same log at Q=1 and Q=8 yields identical responses.
+    let data = knn_data();
+    let engine = Engine::new(2);
+    let server = ShardedServer::new(knn_shards(&data, 3, Arc::new(NativeBackend))).unwrap();
+    let queries = || query_log::knn_query_log(&data, 24, 7);
+    let (per_query, _) = server
+        .serve(&engine, queries(), &serve_cfg(1, RefineBudget::All, 0))
+        .unwrap();
+    let (batched, _) = server
+        .serve(&engine, queries(), &serve_cfg(8, RefineBudget::All, 0))
+        .unwrap();
+    let a: Vec<u32> = per_query.iter().map(|o| *o.final_response()).collect();
+    let b: Vec<u32> = batched.iter().map(|o| *o.final_response()).collect();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn cache_returns_byte_identical_answers_for_repeats_at_zero_backend_cost() {
+    let counting = Arc::new(CountingBackend::default());
+    let backend: Arc<dyn ScoreBackend> = Arc::clone(&counting) as Arc<dyn ScoreBackend>;
+    let data = knn_data();
+    let n_test = data.test.rows();
+    let shards = knn_shards(&data, 2, backend);
+    let n_shards = shards.len();
+    let server = ShardedServer::new(shards).unwrap();
+    let engine = Engine::new(2);
+
+    // Three full cycles over the test points: cycle 1 misses and fills
+    // the cache, cycles 2-3 hit. One micro-batch per cycle (batch ==
+    // n_test) keeps the admission arithmetic exact: cycle 1 flushes as
+    // one full batch before the first repeat arrives, so cycles 2-3
+    // never admit anything.
+    let n = n_test * 3;
+    let batch = n_test;
+    let queries = query_log::knn_query_log(&data, n, 7);
+    counting.knn_dists_calls.store(0, Ordering::SeqCst);
+    let (outcomes, report) = server
+        .serve(&engine, queries, &serve_cfg(batch, RefineBudget::All, 4 * n_test))
+        .unwrap();
+
+    assert_eq!(outcomes.len(), n);
+    assert_eq!(report.cache_hits, 2 * n_test);
+    assert_eq!(report.cache_lookups, n);
+    for i in n_test..n {
+        let first = &outcomes[i % n_test];
+        let repeat = &outcomes[i];
+        assert!(repeat.cache_hit, "repeat {i} should hit the cache");
+        assert_eq!(
+            *repeat.final_response(),
+            *first.final_response(),
+            "repeat {i} must serve the identical cached answer"
+        );
+        assert_eq!(repeat.refined_buckets, 0, "zero compute on a hit");
+    }
+    // Only the first cycle (one micro-batch) touched the backend.
+    assert_eq!(
+        counting.knn_dists_calls.load(Ordering::SeqCst),
+        n_shards,
+        "cache hits must not reach the backend"
+    );
+}

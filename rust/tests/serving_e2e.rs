@@ -91,6 +91,7 @@ fn knn_serving_initial_always_lands_and_refinement_never_hurts() {
                 batch_size: 16,
                 deadline_s: GENEROUS_DEADLINE_S,
                 budget: RefineBudget::All,
+                cache_capacity: 0,
             },
         )
         .unwrap();
@@ -144,6 +145,7 @@ fn knn_full_refinement_matches_the_batch_job() {
                 batch_size: 32,
                 deadline_s: GENEROUS_DEADLINE_S,
                 budget: RefineBudget::All,
+                cache_capacity: 0,
             },
         )
         .unwrap();
@@ -180,6 +182,7 @@ fn cf_serving_refinement_never_raises_rmse() {
                     Grouping::Lsh,
                     RefineOrder::Correlation,
                     3,
+                    Arc::new(NativeBackend),
                     &mut TaskMetrics::default(),
                 )
                 .unwrap(),
@@ -198,6 +201,7 @@ fn cf_serving_refinement_never_raises_rmse() {
                 batch_size: 16,
                 deadline_s: GENEROUS_DEADLINE_S,
                 budget: RefineBudget::All,
+                cache_capacity: 0,
             },
         )
         .unwrap();
@@ -282,6 +286,7 @@ fn kmeans_serving_refinement_is_monotone_per_query() {
                     Grouping::Lsh,
                     RefineOrder::Correlation,
                     3,
+                    Arc::new(NativeBackend),
                     &mut TaskMetrics::default(),
                 )
                 .unwrap(),
@@ -298,6 +303,7 @@ fn kmeans_serving_refinement_is_monotone_per_query() {
                 batch_size: 25,
                 deadline_s: GENEROUS_DEADLINE_S,
                 budget: RefineBudget::Fraction(0.2),
+                cache_capacity: 0,
             },
         )
         .unwrap();
