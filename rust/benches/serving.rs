@@ -16,6 +16,12 @@
 //!   `AML_SERVE_CACHE=0` to skip this pass (CI runs the bench with the
 //!   cache both on and off), or to another value to size the cache.
 //!
+//! Stage 2 gets its own scalar-vs-batched measurement: one micro-batch
+//! of queries refined per shard through the per-query `refine` loop
+//! (host-side scalar rescans) and through `refine_block` (bucket-
+//! grouped backend rescans); the ratio lands in the JSON as
+//! `refine_batched_speedup` per app.
+//!
 //! A machine-readable `BENCH_serving.json` is written to the working
 //! directory (path printed at the end; CI uploads it as a workflow
 //! artifact).
@@ -28,6 +34,9 @@
 //!
 //!     cargo bench --bench serving --features bench-smoke
 
+use std::sync::Arc;
+
+use accurateml::approx::algorithm1::refine_budget;
 use accurateml::coordinator::{Scale, Workbench};
 use accurateml::mapreduce::engine::Engine;
 use accurateml::model::ServableModel;
@@ -71,6 +80,36 @@ fn measure<M: ServableModel>(
     }
 }
 
+/// Stage-2 scalar-vs-batched: refine one micro-batch per shard through
+/// the per-query `refine` loop (host-side scalar rescans) and through
+/// `refine_block` (bucket-grouped backend rescans). Returns
+/// (scalar_s, batched_s) summed over shards and reps.
+fn measure_refine<M: ServableModel>(
+    shards: &[Arc<M>],
+    queries: &[M::Query],
+    eps: f64,
+    reps: usize,
+) -> (f64, f64) {
+    let refs: Vec<&M::Query> = queries.iter().collect();
+    let (mut scalar_s, mut batched_s) = (0.0, 0.0);
+    for shard in shards {
+        let initials = shard.answer_initial_block(&refs);
+        let budget = refine_budget(shard.n_buckets(), eps);
+        let budgets = vec![budget; refs.len()];
+        for _ in 0..reps {
+            let sw = Stopwatch::new();
+            for (q, init) in refs.iter().zip(&initials) {
+                std::hint::black_box(shard.refine(q, init, budget));
+            }
+            scalar_s += sw.elapsed_s();
+            let sw = Stopwatch::new();
+            std::hint::black_box(shard.refine_block(&refs, &initials, &budgets));
+            batched_s += sw.elapsed_s();
+        }
+    }
+    (scalar_s, batched_s)
+}
+
 fn push_row(t: &mut Table, app: &str, mode: &str, m: &Measured) {
     t.row(vec![
         app.into(),
@@ -111,18 +150,21 @@ fn run_json(m: &Measured, with_cache: bool) -> Json {
 
 /// Replay one app under all three configurations, appending table rows
 /// and the app's JSON entry. `replay` owns the (server, query-log)
-/// specifics; everything else is shared shape.
+/// specifics; everything else is shared shape. `refine` is the app's
+/// (scalar_s, batched_s) stage-2 measurement from [`measure_refine`].
 fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
     t: &mut Table,
     apps_json: &mut Vec<Json>,
     cfgs: &Cfgs,
     app: &str,
+    refine: (f64, f64),
     mut replay: F,
 ) {
     let per_query = replay(&cfgs.per_query);
     let batched = replay(&cfgs.batched);
     push_row(t, app, "per-query", &per_query);
     push_row(t, app, "batched", &batched);
+    let (refine_scalar_s, refine_batched_s) = refine;
     let mut pairs: Vec<(&str, Json)> = vec![
         ("app", app.into()),
         ("per_query", run_json(&per_query, false)),
@@ -131,12 +173,24 @@ fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
             "batched_speedup",
             (batched.qps / per_query.qps.max(1e-9)).into(),
         ),
+        ("refine_scalar_s", refine_scalar_s.into()),
+        ("refine_batched_s", refine_batched_s.into()),
+        (
+            "refine_batched_speedup",
+            (refine_scalar_s / refine_batched_s.max(1e-9)).into(),
+        ),
     ];
     if cfgs.cache_capacity > 0 {
         let cached = replay(&cfgs.cached);
         push_row(t, app, "cached", &cached);
         pairs.push(("cached", run_json(&cached, true)));
     }
+    println!(
+        "{app} stage-2 refinement: scalar {:.4}s vs batched {:.4}s ({:.2}x)",
+        refine_scalar_s,
+        refine_batched_s,
+        refine_scalar_s / refine_batched_s.max(1e-9)
+    );
     apps_json.push(Json::obj(pairs));
 }
 
@@ -148,11 +202,16 @@ fn main() {
         .and_then(|v| v.parse().ok())
         .unwrap_or(4096);
     let wb = Workbench::preset(scale).expect("workbench");
+    // Stage-2 measurement shape: one micro-batch, a few repetitions.
+    let refine_batch = 64;
+    let refine_reps = if SMOKE { 2 } else { 8 };
+    let refine_eps = 0.05;
     let batched = ServeConfig {
         batch_size: 64,
         deadline_s: if SMOKE { 1.0 } else { 0.050 },
-        budget: RefineBudget::Fraction(0.05),
+        budget: RefineBudget::Fraction(refine_eps),
         cache_capacity: 0,
+        ..ServeConfig::default()
     };
     let cfgs = Cfgs {
         per_query: ServeConfig {
@@ -183,17 +242,24 @@ fn main() {
     );
     let mut apps_json: Vec<Json> = Vec::new();
 
-    // kNN: build shards untimed, replay under each config.
-    let server = ShardedServer::new(wb.knn_shards(10.0, 5).expect("knn shards")).expect("server");
-    bench_app(&mut t, &mut apps_json, &cfgs, "knn", |cfg| {
+    // kNN: build shards untimed, measure stage-2 scalar-vs-batched on
+    // them, then replay under each config.
+    let shards = wb.knn_shards(10.0, 5).expect("knn shards");
+    let refine_queries = query_log::knn_query_log(&wb.knn_data, refine_batch, wb.config.seed);
+    let refine = measure_refine(&shards, &refine_queries, refine_eps, refine_reps);
+    let server = ShardedServer::new(shards).expect("server");
+    bench_app(&mut t, &mut apps_json, &cfgs, "knn", refine, |cfg| {
         let queries = query_log::knn_query_log(&wb.knn_data, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });
     drop(server);
 
     // CF.
-    let server = ShardedServer::new(wb.cf_shards(10.0).expect("cf shards")).expect("server");
-    bench_app(&mut t, &mut apps_json, &cfgs, "cf", |cfg| {
+    let shards = wb.cf_shards(10.0).expect("cf shards");
+    let refine_queries = query_log::cf_query_log(&wb.cf_split, refine_batch, wb.config.seed);
+    let refine = measure_refine(&shards, &refine_queries, refine_eps, refine_reps);
+    let server = ShardedServer::new(shards).expect("server");
+    bench_app(&mut t, &mut apps_json, &cfgs, "cf", refine, |cfg| {
         let queries = query_log::cf_query_log(&wb.cf_split, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });
@@ -201,8 +267,10 @@ fn main() {
 
     // k-means (training + shard build untimed).
     let (shards, points) = wb.kmeans_shards(20.0).expect("kmeans shards");
+    let refine_queries = query_log::kmeans_query_log(&points, refine_batch, wb.config.seed);
+    let refine = measure_refine(&shards, &refine_queries, refine_eps, refine_reps);
     let server = ShardedServer::new(shards).expect("server");
-    bench_app(&mut t, &mut apps_json, &cfgs, "kmeans", |cfg| {
+    bench_app(&mut t, &mut apps_json, &cfgs, "kmeans", refine, |cfg| {
         let queries = query_log::kmeans_query_log(&points, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });

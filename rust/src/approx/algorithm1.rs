@@ -115,6 +115,23 @@ pub fn refinement_order_random(k: usize, budget: usize, seed: u64) -> Vec<usize>
     Rng::new(seed ^ 0x5EED_0DE4_u64).sample_indices(k, budget)
 }
 
+/// Stage-2 selection from an explicit bucket budget (Algorithm 1 line
+/// 2 plus the ablation switch) — the serving form, where the budget
+/// comes from a [`crate::serve::RefineBudget`] policy rather than
+/// ε_max. [`stage2_selection`] derives the budget and delegates here,
+/// so the two entry points cannot rank differently.
+pub fn refinement_selection(
+    correlations: &[f32],
+    budget: usize,
+    order: RefineOrder,
+    seed: u64,
+) -> Vec<usize> {
+    match order {
+        RefineOrder::Correlation => refinement_order(correlations, budget),
+        RefineOrder::Random => refinement_order_random(correlations.len(), budget, seed),
+    }
+}
+
 /// Stage-2 selection for one query (Algorithm 1 lines 2-5): derive the
 /// refinement budget from `eps_max` and rank the bucket sets, honoring
 /// the ablation switch. This is the single entry point the streaming
@@ -127,11 +144,54 @@ pub fn stage2_selection(
     order: RefineOrder,
     seed: u64,
 ) -> Vec<usize> {
-    let budget = refine_budget(correlations.len(), eps_max);
-    match order {
-        RefineOrder::Correlation => refinement_order(correlations, budget),
-        RefineOrder::Random => refinement_order_random(correlations.len(), budget, seed),
+    refinement_selection(
+        correlations,
+        refine_budget(correlations.len(), eps_max),
+        order,
+        seed,
+    )
+}
+
+/// Bucket-grouped view of a micro-batch's per-query refinement plans —
+/// the block form of Algorithm 1 line 3's "ranked original sets".
+///
+/// Queries that refine the *same* bucket can share one gathered
+/// original-point block and one backend scoring call; `groups` lists
+/// every such bucket with its member queries, and `slots` maps each
+/// query's plan position back to its row inside the shared block, so
+/// the scatter pass can replay Algorithm 1's per-query refinement
+/// order unchanged.
+#[derive(Clone, Debug, Default)]
+pub struct BucketGroups {
+    /// `(bucket id, member query indices ascending)` for every bucket
+    /// chosen by at least one query, ascending by bucket id.
+    pub groups: Vec<(usize, Vec<usize>)>,
+    /// `slots[q][j]` = row of query `q` inside the group of bucket
+    /// `plans[q][j]` (parallel to the input plans).
+    pub slots: Vec<Vec<usize>>,
+}
+
+/// Group per-query refinement plans by bucket (see [`BucketGroups`]).
+/// Plans must name buckets `< n_buckets`; duplicate buckets within one
+/// plan are not expected (the selection functions return distinct ids).
+pub fn group_plans_by_bucket(plans: &[Vec<usize>], n_buckets: usize) -> BucketGroups {
+    let mut members: Vec<Vec<usize>> = vec![Vec::new(); n_buckets];
+    let mut slots = Vec::with_capacity(plans.len());
+    for (q, plan) in plans.iter().enumerate() {
+        let mut qslots = Vec::with_capacity(plan.len());
+        for &b in plan {
+            debug_assert!(b < n_buckets, "plan bucket {b} >= {n_buckets}");
+            qslots.push(members[b].len());
+            members[b].push(q);
+        }
+        slots.push(qslots);
     }
+    let groups = members
+        .into_iter()
+        .enumerate()
+        .filter(|(_, m)| !m.is_empty())
+        .collect();
+    BucketGroups { groups, slots }
 }
 
 /// Run Algorithm 1 for one query. Timing is attributed to the
@@ -306,6 +366,51 @@ mod tests {
         assert_eq!(refine_budget(0, 0.01), 0);
         assert!(refinement_order(&[], 5).is_empty());
         assert!(refinement_order_random(0, 5, 1).is_empty());
+    }
+
+    #[test]
+    fn refinement_selection_matches_stage2_selection() {
+        // The budget-based and ε-based entry points share one core:
+        // same correlations + derived budget => same buckets, same
+        // order, under both ablation switches.
+        let corr = vec![0.2, 0.8, 0.4, 0.6, 0.1];
+        for eps in [0.0, 0.2, 0.5, 1.0] {
+            let budget = refine_budget(corr.len(), eps);
+            for order in [RefineOrder::Correlation, RefineOrder::Random] {
+                assert_eq!(
+                    refinement_selection(&corr, budget, order, 9),
+                    stage2_selection(&corr, eps, order, 9),
+                    "eps {eps} order {order:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_grouping_shares_buckets_and_keeps_slots() {
+        let plans = vec![vec![2, 0], vec![0, 3], Vec::new(), vec![0]];
+        let g = group_plans_by_bucket(&plans, 5);
+        assert_eq!(
+            g.groups,
+            vec![(0, vec![0, 1, 3]), (2, vec![0]), (3, vec![1])]
+        );
+        // slots round-trip: group_of(plans[q][j]).members[slots[q][j]] == q.
+        assert_eq!(g.slots, vec![vec![0, 0], vec![1, 0], vec![], vec![2]]);
+        for (q, plan) in plans.iter().enumerate() {
+            for (j, &b) in plan.iter().enumerate() {
+                let (_, members) = g.groups.iter().find(|(gb, _)| *gb == b).unwrap();
+                assert_eq!(members[g.slots[q][j]], q, "query {q} bucket {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_grouping_handles_empty_batches() {
+        let g = group_plans_by_bucket(&[], 4);
+        assert!(g.groups.is_empty() && g.slots.is_empty());
+        let g = group_plans_by_bucket(&[Vec::new(), Vec::new()], 0);
+        assert!(g.groups.is_empty());
+        assert_eq!(g.slots.len(), 2);
     }
 
     #[test]

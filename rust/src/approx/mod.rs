@@ -16,7 +16,10 @@
 pub mod algorithm1;
 pub mod sampling;
 
-pub use algorithm1::{refinement_order, run_algorithm1, stage2_selection, AggregatedQueryTask};
+pub use algorithm1::{
+    group_plans_by_bucket, refinement_order, refinement_selection, run_algorithm1,
+    stage2_selection, AggregatedQueryTask, BucketGroups,
+};
 pub use sampling::sample_rows;
 
 /// How a map task processes its partition.

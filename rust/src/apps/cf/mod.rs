@@ -27,6 +27,7 @@ use std::sync::Arc;
 use crate::approx::algorithm1::{stage2_selection, RefineOrder};
 use crate::approx::sampling::sample_rows;
 use crate::approx::ProcessingMode;
+use crate::apps::STAGE2_BLOCK_QUERIES;
 use crate::data::matrix::Matrix;
 use crate::data::points::{split_rows, RowRange};
 use crate::data::ratings::RatingsSplit;
@@ -312,10 +313,14 @@ impl CfJob {
 
     /// AccurateML stage 2 (Algorithm 1 lines 6-10): the replacement
     /// output — unrefined buckets keep their aggregated record, refined
-    /// buckets are replaced by their original users' records (weights
-    /// computed natively per pair via the model's shared neighbor
-    /// visitor; the refined sets differ per active user so there is no
-    /// dense block to batch).
+    /// buckets are replaced by their original users' records. The
+    /// refined sets differ per active user, but active users refining
+    /// the *same* bucket share one gathered original-user block whose
+    /// Pearson weights are computed in ONE `cf_weights` backend call
+    /// per bucket-group ([`CfModel::rescan_weight_blocks`]); the
+    /// per-user scatter emits records in the old per-pair loop's order
+    /// with the same skip rules, so the records are byte-identical on
+    /// the native backend.
     fn accurateml_stage2(
         &self,
         carry: &CfCarry,
@@ -325,49 +330,73 @@ impl CfJob {
         let n_buckets = carry.model.n_buckets();
         let mut out = Vec::new();
         let mut is_refined = vec![false; n_buckets];
-        for ai in 0..self.n_active() {
-            let witems = &self.test_items[ai];
-            if witems.is_empty() {
-                continue;
-            }
-            is_refined.fill(false);
-            for &b in &carry.refined[ai] {
-                is_refined[b] = true;
-            }
-            // Aggregated records that survive refinement.
-            for b in 0..n_buckets {
-                if !is_refined[b] {
-                    self.aggregated_record(ai, b, &carry.model, &carry.wagg, &mut out);
+        // Fixed-size micro-batches of active users: scoring the whole
+        // active set's weight blocks at once would peak at
+        // O(n_active × partition_users); chunking bounds it, and the
+        // per-user emission order (ai ascending) is unchanged.
+        for start in (0..self.n_active()).step_by(STAGE2_BLOCK_QUERIES) {
+            let end = (start + STAGE2_BLOCK_QUERIES).min(self.n_active());
+            // Active users with no test items emit nothing — mask
+            // their plans so the weight blocks are not scored for them
+            // (the old per-pair loop skipped them before any weight
+            // was computed).
+            let plans: Vec<Vec<usize>> = (start..end)
+                .map(|ai| {
+                    if self.test_items[ai].is_empty() {
+                        Vec::new()
+                    } else {
+                        carry.refined[ai].clone()
+                    }
+                })
+                .collect();
+            let q_cu: Vec<&[f32]> = (start..end).map(|ai| self.ca.row(ai)).collect();
+            let q_mu: Vec<&[f32]> = (start..end).map(|ai| self.ma.row(ai)).collect();
+            let (blocks, grouped) = carry.model.rescan_weight_blocks(&q_cu, &q_mu, &plans);
+            for ai in start..end {
+                let local = ai - start;
+                let witems = &self.test_items[ai];
+                if witems.is_empty() {
+                    continue;
                 }
-            }
-            // Refined buckets: original users replace the aggregate.
-            let self_id = self.split.active_users[ai] as usize;
-            for &b in &carry.refined[ai] {
-                carry.model.for_each_original(
-                    b,
-                    self.ca.row(ai),
-                    self.ma.row(ai),
-                    Some(self_id),
-                    |v, w| {
-                        let vmean = self.user_means[v];
-                        let mut deviations = Vec::new();
-                        for &i in witems {
-                            if self.split.train.mask.get(v, i as usize) > 0.0 {
-                                deviations.push((
-                                    i,
-                                    self.split.train.ratings.get(v, i as usize) - vmean,
-                                ));
+                is_refined.fill(false);
+                for &b in &plans[local] {
+                    is_refined[b] = true;
+                }
+                // Aggregated records that survive refinement.
+                for b in 0..n_buckets {
+                    if !is_refined[b] {
+                        self.aggregated_record(ai, b, &carry.model, &carry.wagg, &mut out);
+                    }
+                }
+                // Refined buckets: original users replace the
+                // aggregate, their weights read from the shared scored
+                // blocks.
+                let self_id = self.split.active_users[ai] as usize;
+                for (j, &b) in plans[local].iter().enumerate() {
+                    let wrow = blocks[b].as_ref().expect("scored bucket group");
+                    let wrow = wrow.row(grouped.slots[local][j]);
+                    carry
+                        .model
+                        .for_each_original_weighted(b, wrow, Some(self_id), |v, w| {
+                            let vmean = self.user_means[v];
+                            let mut deviations = Vec::new();
+                            for &i in witems {
+                                if self.split.train.mask.get(v, i as usize) > 0.0 {
+                                    deviations.push((
+                                        i,
+                                        self.split.train.ratings.get(v, i as usize) - vmean,
+                                    ));
+                                }
                             }
-                        }
-                        if !deviations.is_empty() {
-                            out.push(NeighborRecord {
-                                active: ai as u32,
-                                weight: w,
-                                deviations,
-                            });
-                        }
-                    },
-                );
+                            if !deviations.is_empty() {
+                                out.push(NeighborRecord {
+                                    active: ai as u32,
+                                    weight: w,
+                                    deviations,
+                                });
+                            }
+                        });
+                }
             }
         }
         metrics.refine_s += sw.lap_s();

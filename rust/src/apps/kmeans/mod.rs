@@ -37,7 +37,8 @@ use crate::error::Result;
 use crate::lsh::bucketizer::Grouping;
 use crate::mapreduce::engine::{Engine, MapReduceJob, TwoStageJob};
 use crate::mapreduce::metrics::{JobMetrics, TaskMetrics};
-use crate::model::kmeans::{build_partition_agg, nearest_centroid};
+use crate::model::kmeans::{argmin_row, build_partition_agg, nearest_centroid};
+use crate::runtime::backend::{GatherBuf, NativeBackend, ScoreBackend};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
 
@@ -101,6 +102,10 @@ struct KmeansIterJob {
     mode: ProcessingMode,
     seed: u64,
     refine_order: RefineOrder,
+    /// Scoring backend for the stage-2 block reassignments (the
+    /// scalar stage-1 assignment stays host-side — it runs once per
+    /// aggregated point, not per original).
+    backend: Arc<dyn ScoreBackend>,
     /// Aggregations per partition (AccurateML mode only). The Option is
     /// None on the first iteration *before* generation — the job then
     /// builds and returns timing through metrics; the runner caches.
@@ -193,8 +198,14 @@ impl KmeansIterJob {
         (out, assigned, chosen)
     }
 
-    /// AccurateML stage 2: re-assign the chosen boundary buckets point
-    /// by point, replacing their aggregate contribution.
+    /// AccurateML stage 2: re-assign the chosen boundary buckets'
+    /// members, replacing their aggregate contribution. Each refined
+    /// bucket's member points are gathered into one block and their
+    /// centroid distances computed in ONE backend call per bucket
+    /// (gather → score → scatter, PJRT-routed when the backend is);
+    /// the scatter replays the scalar strict-< nearest-centroid scan
+    /// in member order, so the partial sums are bit-identical to the
+    /// old per-point loop on the native backend.
     fn refine_partials(
         &self,
         part_id: usize,
@@ -206,6 +217,7 @@ impl KmeansIterJob {
         let range = self.partitions[part_id];
         let agg = &self.agg.as_ref().expect("aggregation not built")[part_id];
         let mut sw = Stopwatch::new();
+        let mut buf = GatherBuf::default();
         for &b in chosen {
             // Remove the aggregate contribution...
             let size = agg.index[b].len() as f32;
@@ -214,11 +226,30 @@ impl KmeansIterJob {
                 *s -= x * size;
             }
             *w -= size;
-            // ...and add members individually.
-            self.assign_rows(
-                agg.index[b].iter().map(|&i| range.start + i as usize),
-                &mut partials,
+            // ...and add members individually, scored as one block.
+            let members = &agg.index[b];
+            if members.is_empty() {
+                continue; // nothing to re-assign (defensive; buckets are non-empty)
+            }
+            let block = buf.gather(
+                members
+                    .iter()
+                    .map(|&i| self.points.row(range.start + i as usize)),
             );
+            let dists = self
+                .backend
+                .knn_dists(&block, &self.centroids)
+                .expect("backend scoring failed");
+            buf.recycle(block);
+            for (r, &i) in members.iter().enumerate() {
+                let p = self.points.row(range.start + i as usize);
+                let (c, _) = argmin_row(dists.row(r));
+                let (sum, w) = &mut partials[c];
+                for (s, &x) in sum.iter_mut().zip(p) {
+                    *s += x;
+                }
+                *w += 1.0;
+            }
         }
         metrics.refine_s += sw.lap_s();
         partials
@@ -340,11 +371,24 @@ impl TwoStageJob for KmeansIterJob {
 pub struct KmeansRunner {
     pub config: KmeansConfig,
     points: Arc<Matrix>,
+    backend: Arc<dyn ScoreBackend>,
 }
 
 impl KmeansRunner {
-    /// New runner over a point set.
+    /// New runner over a point set, scoring stage-2 blocks natively.
     pub fn new(config: KmeansConfig, points: Arc<Matrix>) -> Result<KmeansRunner> {
+        KmeansRunner::with_backend(config, points, Arc::new(NativeBackend))
+    }
+
+    /// New runner with an explicit scoring backend: the stage-2 block
+    /// reassignments route through it (PJRT when it is), while the
+    /// native backend keeps the historical host-side arithmetic
+    /// bit-for-bit.
+    pub fn with_backend(
+        config: KmeansConfig,
+        points: Arc<Matrix>,
+        backend: Arc<dyn ScoreBackend>,
+    ) -> Result<KmeansRunner> {
         config.mode.validate()?;
         if config.n_clusters == 0 || config.n_clusters > points.rows() {
             return Err(crate::Error::Config(format!(
@@ -353,7 +397,11 @@ impl KmeansRunner {
                 points.rows()
             )));
         }
-        Ok(KmeansRunner { config, points })
+        Ok(KmeansRunner {
+            config,
+            points,
+            backend,
+        })
     }
 
     /// Run to completion; returns the output and metrics accumulated
@@ -422,6 +470,7 @@ impl KmeansRunner {
                 mode: cfg.mode,
                 seed: cfg.seed,
                 refine_order: cfg.refine_order,
+                backend: Arc::clone(&self.backend),
                 agg: agg.clone(),
             };
             // Each round's trace restarts its clock; shift onto the

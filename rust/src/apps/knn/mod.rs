@@ -25,6 +25,7 @@ use std::sync::Arc;
 use crate::approx::algorithm1::RefineOrder;
 use crate::approx::sampling::sample_rows;
 use crate::approx::ProcessingMode;
+use crate::apps::STAGE2_BLOCK_QUERIES;
 use crate::data::gaussian::LabeledPoints;
 use crate::data::matrix::Matrix;
 use crate::data::points::{split_rows, RowRange};
@@ -203,26 +204,35 @@ impl KnnJob {
         initial
     }
 
-    /// AccurateML stage 2 (Algorithm 1 lines 6-10): the per-query
-    /// refinement core looped over the test set. Scratch buffers are
-    /// reused across test points — this loop runs |test| × |partitions|
-    /// times and per-iteration allocations were a measured hot spot
-    /// (EXPERIMENTS.md §Perf).
+    /// AccurateML stage 2 (Algorithm 1 lines 6-10): the whole test
+    /// set's refinement plans run through the model's bucket-grouped
+    /// block core ([`KnnModel::refine_rows_block`]) — test points that
+    /// refine the *same* bucket share one gathered original-row block
+    /// and ONE backend call, and the per-query scatter preserves each
+    /// plan's Algorithm-1 order, so the emitted candidates are
+    /// byte-identical to the old per-query `refine_query` loop on the
+    /// native backend.
     fn accurateml_stage2(
         &self,
         carry: &KnnCarry,
         metrics: &mut TaskMetrics,
     ) -> Vec<Vec<LabeledCandidate>> {
         let mut sw = Stopwatch::new();
-        let mut out = Vec::with_capacity(self.data.test.rows());
-        let mut is_refined = vec![false; carry.model.n_buckets()];
-        for t in 0..self.data.test.rows() {
-            out.push(carry.model.refine_query(
-                self.data.test.row(t),
-                carry.dists.row(t),
-                &carry.refined[t],
-                &mut is_refined,
-            ));
+        let n_test = self.data.test.rows();
+        // Fixed-size micro-batches (the serving executor's shape):
+        // refine_rows_block materializes one scored block per refined
+        // bucket before scattering, so feeding the whole test set at
+        // once would peak at O(n_test × partition_rows) per task.
+        // Chunking bounds that; per-query results are independent, so
+        // the concatenation is identical to one big block.
+        let mut out = Vec::with_capacity(n_test);
+        for start in (0..n_test).step_by(STAGE2_BLOCK_QUERIES) {
+            let end = (start + STAGE2_BLOCK_QUERIES).min(n_test);
+            let qrows: Vec<&[f32]> = (start..end).map(|t| self.data.test.row(t)).collect();
+            let drows: Vec<&[f32]> = (start..end).map(|t| carry.dists.row(t)).collect();
+            let (chunk, _bucket_groups) =
+                carry.model.refine_rows_block(&qrows, &drows, &carry.refined[start..end]);
+            out.extend(chunk);
         }
         metrics.refine_s += sw.lap_s();
         out

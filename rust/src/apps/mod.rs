@@ -14,3 +14,10 @@
 pub mod cf;
 pub mod kmeans;
 pub mod knn;
+
+/// Queries per stage-2 block in the batch adapters: bounds the scored
+/// rescan blocks a map task holds at once (memory ∝ chunk × refined
+/// originals) while keeping enough queries per bucket-group to
+/// amortize each backend call — the same micro-batch shape the serving
+/// executor uses.
+pub(crate) const STAGE2_BLOCK_QUERIES: usize = 256;

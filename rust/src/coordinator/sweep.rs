@@ -380,7 +380,7 @@ impl Workbench {
         // that field Arc<Matrix> is a wider refactor than this entry
         // point justifies).
         let points = Arc::new(self.knn_data.train.clone());
-        let runner = KmeansRunner::new(
+        let runner = KmeansRunner::with_backend(
             KmeansConfig {
                 n_clusters: 16,
                 n_iterations: 5,
@@ -390,6 +390,7 @@ impl Workbench {
                 ..Default::default()
             },
             Arc::clone(&points),
+            Arc::clone(&self.backend),
         )?;
         let (trained, _) = runner.run(&self.engine)?;
         let mut shards = Vec::new();
@@ -537,6 +538,7 @@ mod tests {
             deadline_s: 30.0,
             budget: crate::serve::RefineBudget::Fraction(0.1),
             cache_capacity: 0,
+            ..ServeConfig::default()
         };
         let report = wb.serve_knn(48, 5, 10.0, &cfg).unwrap();
         assert_eq!(report.queries, 48);

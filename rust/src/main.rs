@@ -229,6 +229,11 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
         .opt("queries", "1000", "queries to replay")
         .opt("batch", "64", "micro-batch size (queries grouped per shard task)")
         .opt("cache", "1024", "hot-query answer cache capacity (0 = off)")
+        .opt(
+            "shed",
+            "0",
+            "load shedding: pending-batch depth before refinement is shed (0 = never)",
+        )
         .opt("deadline-ms", "50", "per-request deadline in milliseconds")
         .opt(
             "budget",
@@ -252,11 +257,13 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
             )))
         }
     };
+    let shed = args.get_usize("shed")?;
     let cfg = ServeConfig {
         batch_size: args.get_usize("batch")?,
         deadline_s: args.get_f64("deadline-ms")? / 1e3,
         budget,
         cache_capacity: args.get_usize("cache")?,
+        shed_queue_depth: if shed == 0 { usize::MAX } else { shed },
     };
     let n = args.get_usize("queries")?;
     let ratio = args.get_f64("ratio")?;
@@ -279,13 +286,21 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
     );
     print!("{}", report.table(&title).console());
     println!(
-        "refined {}/{} queries ({:.1} buckets/query), {} deadline miss(es) at {:.1}ms",
+        "refined {}/{} queries ({:.1} buckets/query, {} bucket-group rescan call(s)), \
+{} deadline miss(es) at {:.1}ms",
         report.refined_queries,
         report.queries,
         report.refined_buckets_mean,
+        report.stage2_bucket_groups,
         report.deadline_misses,
         cfg.deadline_s * 1e3
     );
+    if shed > 0 {
+        println!(
+            "load shedding: {} batch(es) downgraded to initial-only at queue depth {shed}",
+            report.shed_batches
+        );
+    }
     if cfg.cache_capacity > 0 {
         println!(
             "cache: {} hit(s) / {} lookup(s) ({:.1}% hit rate, capacity {})",

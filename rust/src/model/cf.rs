@@ -7,7 +7,9 @@
 use std::sync::Arc;
 
 use crate::aggregate::AggregatedUsers;
-use crate::approx::algorithm1::{refinement_order, refinement_order_random, RefineOrder};
+use crate::approx::algorithm1::{
+    group_plans_by_bucket, refinement_selection, BucketGroups, RefineOrder,
+};
 use crate::data::matrix::Matrix;
 use crate::data::points::RowRange;
 use crate::data::ratings::RatingsSplit;
@@ -15,8 +17,8 @@ use crate::error::Result;
 use crate::lsh::bucketizer::Grouping;
 use crate::lsh::Bucketizer;
 use crate::mapreduce::metrics::TaskMetrics;
-use crate::model::{InitialAnswer, ServableModel};
-use crate::runtime::backend::{pearson_pair, ScoreBackend};
+use crate::model::{InitialAnswer, RefinedBlock, ServableModel};
+use crate::runtime::backend::{pearson_pair, GatherBuf, ScoreBackend};
 use crate::util::timer::Stopwatch;
 
 /// One CF serving request: the active user's centered rating row +
@@ -206,7 +208,10 @@ impl CfModel {
     /// Visit every original user of `bucket` with their Pearson weight
     /// against the given centered query row, skipping `exclude` and
     /// zero/non-finite weights — the inner loop shared by batch stage 2
-    /// (record emission) and per-query refinement (sum folding).
+    /// (record emission) and per-query refinement (sum folding). The
+    /// block paths precompute the weights and visit through
+    /// [`CfModel::for_each_original_weighted`] instead; both apply the
+    /// same skip rules.
     pub fn for_each_original(
         &self,
         bucket: usize,
@@ -231,6 +236,107 @@ impl CfModel {
             }
             f(v, w);
         }
+    }
+
+    /// [`CfModel::for_each_original`] with the weights already scored:
+    /// `wrow` is parallel to the bucket's index (one weight per
+    /// original user), as produced by
+    /// [`CfModel::rescan_weight_blocks`]. The excluded user's weight is
+    /// present in the row but skipped here, so the accumulated
+    /// evidence is identical to the compute-on-the-fly visitor.
+    pub fn for_each_original_weighted(
+        &self,
+        bucket: usize,
+        wrow: &[f32],
+        exclude: Option<usize>,
+        mut f: impl FnMut(usize, f32),
+    ) {
+        debug_assert_eq!(wrow.len(), self.agg.index[bucket].len());
+        for (j, &local) in self.agg.index[bucket].iter().enumerate() {
+            let v = self.users[local as usize];
+            if exclude == Some(v) {
+                continue;
+            }
+            let w = wrow[j];
+            if w == 0.0 || !w.is_finite() {
+                continue;
+            }
+            f(v, w);
+        }
+    }
+
+    /// Withdraw bucket `b`'s aggregated evidence for `item` from
+    /// `partial` (stage 1 counted it; refinement replaces it with the
+    /// originals'). `w` is the bucket's stage-1 correlation (Pearson
+    /// weight). Shared by the scalar and block refinement paths.
+    fn withdraw_aggregated(&self, b: usize, w: f32, item: usize, partial: &mut CfPartial) {
+        if w != 0.0 && w.is_finite() && self.agg.mask.get(b, item) > 0.0 {
+            let dev = self.agg.ratings.get(b, item) - self.agg_means[b];
+            partial.num -= w as f64 * dev as f64;
+            partial.den -= w.abs() as f64;
+        }
+    }
+
+    /// Fold one original neighbor's evidence for `item` into `partial`.
+    /// Shared by the scalar and block refinement paths.
+    fn fold_original(&self, v: usize, wv: f32, item: usize, partial: &mut CfPartial) {
+        if self.split.train.mask.get(v, item) > 0.0 {
+            let dev = self.split.train.ratings.get(v, item) - self.user_means[v];
+            partial.num += wv as f64 * dev as f64;
+            partial.den += wv.abs() as f64;
+        }
+    }
+
+    /// Bucket-grouped stage-2 weight blocks for a batch of centered
+    /// query rows — the gather + score half of block refinement, shared
+    /// by the serving [`ServableModel::refine_block`] override and the
+    /// batch job's record emission:
+    ///
+    /// the per-query `plans` are grouped by bucket
+    /// ([`group_plans_by_bucket`]); for each bucket refined by at least
+    /// one query, the member queries' centered rows + masks and the
+    /// bucket's original users' rows + masks are gathered into dense
+    /// blocks and every pairwise Pearson weight is computed in ONE
+    /// [`ScoreBackend::cf_weights`] call per bucket-group (PJRT-routed
+    /// whenever the shard's backend is). The native backend runs
+    /// `pearson_pair` with the same argument order as the scalar
+    /// visitor, keeping the weights bit-identical.
+    ///
+    /// Returns the per-bucket blocks (indexed by bucket id; row
+    /// `slots[q][j]` of block `plans[q][j]` is query `q`'s weight row)
+    /// and the grouping.
+    pub fn rescan_weight_blocks(
+        &self,
+        q_cu: &[&[f32]],
+        q_mu: &[&[f32]],
+        plans: &[Vec<usize>],
+    ) -> (Vec<Option<Matrix>>, BucketGroups) {
+        debug_assert_eq!(q_cu.len(), q_mu.len());
+        debug_assert_eq!(q_cu.len(), plans.len());
+        let n_buckets = self.agg.len();
+        let grouped = group_plans_by_bucket(plans, n_buckets);
+        let mut blocks: Vec<Option<Matrix>> = vec![None; n_buckets];
+        let mut qc = GatherBuf::default();
+        let mut qm = GatherBuf::default();
+        let mut xc = GatherBuf::default();
+        let mut xm = GatherBuf::default();
+        for (b, members) in &grouped.groups {
+            let qcb = qc.gather(members.iter().map(|&q| q_cu[q]));
+            let qmb = qm.gather(members.iter().map(|&q| q_mu[q]));
+            let index = &self.agg.index[*b];
+            let xcb = xc.gather(index.iter().map(|&l| self.cu.row(l as usize)));
+            let xmb = xm.gather(index.iter().map(|&l| self.mu.row(l as usize)));
+            let w = self
+                .backend
+                .cf_weights(&qcb, &qmb, &xcb, &xmb)
+                .expect("backend cf_weights failed");
+            qc.recycle(qcb);
+            qm.recycle(qmb);
+            xc.recycle(xcb);
+            xm.recycle(xmb);
+            blocks[*b] = Some(w);
+        }
+        (blocks, grouped)
     }
 }
 
@@ -331,33 +437,65 @@ impl ServableModel for CfModel {
         if budget == 0 {
             return initial.answer;
         }
-        let chosen = match self.refine_order {
-            RefineOrder::Correlation => refinement_order(&initial.correlations, budget),
-            RefineOrder::Random => {
-                refinement_order_random(initial.correlations.len(), budget, query.seed)
-            }
-        };
+        let chosen =
+            refinement_selection(&initial.correlations, budget, self.refine_order, query.seed);
         let item = query.item as usize;
         let exclude = query.exclude.map(|u| u as usize);
         let mut partial = initial.answer;
         for &b in &chosen {
             // Withdraw the bucket's aggregated evidence...
-            let w = initial.correlations[b];
-            if w != 0.0 && w.is_finite() && self.agg.mask.get(b, item) > 0.0 {
-                let dev = self.agg.ratings.get(b, item) - self.agg_means[b];
-                partial.num -= w as f64 * dev as f64;
-                partial.den -= w.abs() as f64;
-            }
+            self.withdraw_aggregated(b, initial.correlations[b], item, &mut partial);
             // ...and replace it with the original users'.
             self.for_each_original(b, query.cu.as_slice(), query.mu.as_slice(), exclude, |v, wv| {
-                if self.split.train.mask.get(v, item) > 0.0 {
-                    let dev = self.split.train.ratings.get(v, item) - self.user_means[v];
-                    partial.num += wv as f64 * dev as f64;
-                    partial.den += wv.abs() as f64;
-                }
+                self.fold_original(v, wv, item, &mut partial);
             });
         }
         partial
+    }
+
+    fn refine_block(
+        &self,
+        queries: &[&Self::Query],
+        initials: &[InitialAnswer<Self::Answer>],
+        budgets: &[usize],
+    ) -> RefinedBlock<Self::Answer> {
+        debug_assert_eq!(queries.len(), initials.len());
+        debug_assert_eq!(queries.len(), budgets.len());
+        // Plan each query exactly as the scalar `refine` does, then
+        // score every refined bucket's weights block-wise.
+        let plans = crate::model::plan_block(
+            initials,
+            queries.iter().map(|q| q.seed),
+            budgets,
+            self.refine_order,
+        );
+        let q_cu: Vec<&[f32]> = queries.iter().map(|q| q.cu.as_slice()).collect();
+        let q_mu: Vec<&[f32]> = queries.iter().map(|q| q.mu.as_slice()).collect();
+        let (blocks, grouped) = self.rescan_weight_blocks(&q_cu, &q_mu, &plans);
+        // Scatter: the scalar withdraw + fold sequence per query, in
+        // plan order, with the weights read from the shared blocks.
+        let answers = queries
+            .iter()
+            .enumerate()
+            .map(|(qi, query)| {
+                let item = query.item as usize;
+                let exclude = query.exclude.map(|u| u as usize);
+                let mut partial = initials[qi].answer;
+                for (j, &b) in plans[qi].iter().enumerate() {
+                    self.withdraw_aggregated(b, initials[qi].correlations[b], item, &mut partial);
+                    let wrow = blocks[b].as_ref().expect("scored bucket group");
+                    let wrow = wrow.row(grouped.slots[qi][j]);
+                    self.for_each_original_weighted(b, wrow, exclude, |v, wv| {
+                        self.fold_original(v, wv, item, &mut partial);
+                    });
+                }
+                partial
+            })
+            .collect();
+        RefinedBlock {
+            answers,
+            bucket_groups: grouped.groups.len(),
+        }
     }
 
     fn merge(&self, query: &Self::Query, partials: &[Self::Answer]) -> Self::Response {
@@ -460,6 +598,35 @@ mod tests {
             assert_eq!(b.correlations, per.correlations);
         }
         assert!(model.answer_initial_block(&[]).is_empty());
+    }
+
+    #[test]
+    fn refine_block_matches_scalar_refine() {
+        let (split, _, model) = setup();
+        let queries: Vec<CfQuery> = (0..split.test.len().min(14))
+            .map(|i| query_for(&split, i, i as u64))
+            .collect();
+        let refs: Vec<&CfQuery> = queries.iter().collect();
+        let initials = model.answer_initial_block(&refs);
+        let n_b = model.n_buckets();
+        let mixed: Vec<usize> = (0..refs.len()).map(|i| i % (n_b + 2)).collect();
+        for budgets in [vec![0; refs.len()], vec![2; refs.len()], vec![n_b; refs.len()], mixed] {
+            let block = model.refine_block(&refs, &initials, &budgets);
+            for i in 0..refs.len() {
+                assert_eq!(
+                    block.answers[i],
+                    model.refine(refs[i], &initials[i], budgets[i]),
+                    "query {i} budget {}",
+                    budgets[i]
+                );
+            }
+        }
+        // Q=1 and the empty batch.
+        let one = model.refine_block(&refs[..1], &initials[..1], &[1]);
+        assert_eq!(one.answers[0], model.refine(refs[0], &initials[0], 1));
+        let empty = model.refine_block(&[], &[], &[]);
+        assert!(empty.answers.is_empty());
+        assert_eq!(empty.bucket_groups, 0);
     }
 
     #[test]

@@ -10,14 +10,14 @@
 use std::sync::Arc;
 
 use crate::aggregate::IndexFile;
-use crate::approx::algorithm1::{refinement_order, refinement_order_random, RefineOrder};
+use crate::approx::algorithm1::{group_plans_by_bucket, refinement_selection, RefineOrder};
 use crate::data::matrix::{sq_dist, Matrix};
 use crate::data::points::RowRange;
 use crate::error::Result;
 use crate::lsh::bucketizer::Grouping;
 use crate::lsh::Bucketizer;
 use crate::mapreduce::metrics::TaskMetrics;
-use crate::model::{InitialAnswer, ServableModel};
+use crate::model::{InitialAnswer, RefinedBlock, ServableModel};
 use crate::runtime::backend::ScoreBackend;
 use crate::util::timer::Stopwatch;
 
@@ -36,6 +36,24 @@ pub struct KmeansQuery {
 pub struct RepMatch {
     pub dist: f32,
     pub cluster: u32,
+}
+
+/// First-occurrence argmin over a scored distance row: the row form of
+/// [`nearest_centroid`]'s strict-`<` scan — the same tie rule (the
+/// first index achieving the minimum wins, non-finite entries never
+/// win against a finite best), kept in one place so every block-rescan
+/// scatter stays bit-identical to the scalar scans. Returns
+/// `(0, f32::INFINITY)` for an empty row.
+pub fn argmin_row(row: &[f32]) -> (usize, f32) {
+    let mut c = 0;
+    let mut best = f32::INFINITY;
+    for (i, &d) in row.iter().enumerate() {
+        if d < best {
+            best = d;
+            c = i;
+        }
+    }
+    (c, best)
 }
 
 /// Nearest centroid of `p`: (index, distance, second-best distance).
@@ -230,12 +248,8 @@ impl ServableModel for KmeansModel {
         if budget == 0 {
             return initial.answer;
         }
-        let chosen = match self.refine_order {
-            RefineOrder::Correlation => refinement_order(&initial.correlations, budget),
-            RefineOrder::Random => {
-                refinement_order_random(initial.correlations.len(), budget, query.seed)
-            }
-        };
+        let chosen =
+            refinement_selection(&initial.correlations, budget, self.refine_order, query.seed);
         let mut best = initial.answer;
         for &b in &chosen {
             for &local in &self.index[b] {
@@ -249,6 +263,62 @@ impl ServableModel for KmeansModel {
             }
         }
         best
+    }
+
+    fn refine_block(
+        &self,
+        queries: &[&Self::Query],
+        initials: &[InitialAnswer<Self::Answer>],
+        budgets: &[usize],
+    ) -> RefinedBlock<Self::Answer> {
+        debug_assert_eq!(queries.len(), initials.len());
+        debug_assert_eq!(queries.len(), budgets.len());
+        // Plan each query exactly as the scalar `refine` does; group
+        // the plans so queries rescanning the same bucket share one
+        // gathered original-point block and ONE `knn_dists` call.
+        let plans = crate::model::plan_block(
+            initials,
+            queries.iter().map(|q| q.seed),
+            budgets,
+            self.refine_order,
+        );
+        let grouped = group_plans_by_bucket(&plans, self.index.len());
+        let (blocks, scored_groups) = crate::model::score_distance_blocks(
+            self.backend.as_ref(),
+            &grouped,
+            &self.index,
+            |q| queries[q].point.as_slice(),
+            |l| self.points.row(l as usize),
+        );
+        // Scatter: the scalar strict-< scan per query, in plan order,
+        // reading the shared scored rows — so the chosen representative
+        // (ties included) matches `refine` bit-for-bit on the native
+        // backend: `argmin_row` keeps the row's first strict minimum,
+        // exactly where the sequential scan would have stopped.
+        let answers = plans
+            .iter()
+            .enumerate()
+            .map(|(qi, plan)| {
+                let mut best = initials[qi].answer;
+                for (j, &b) in plan.iter().enumerate() {
+                    let Some(block) = blocks[b].as_ref() else {
+                        continue; // empty bucket: no originals to rescan
+                    };
+                    let (jj, d) = argmin_row(block.row(grouped.slots[qi][j]));
+                    if d < best.dist {
+                        best = RepMatch {
+                            dist: d,
+                            cluster: self.point_cluster[self.index[b][jj] as usize],
+                        };
+                    }
+                }
+                best
+            })
+            .collect();
+        RefinedBlock {
+            answers,
+            bucket_groups: scored_groups,
+        }
     }
 
     fn merge(&self, _query: &Self::Query, partials: &[Self::Answer]) -> Self::Response {
@@ -325,6 +395,49 @@ mod tests {
             assert_eq!(b.correlations, per.correlations);
         }
         assert!(model.answer_initial_block(&[]).is_empty());
+    }
+
+    #[test]
+    fn argmin_row_keeps_first_minimum_and_skips_non_finite() {
+        assert_eq!(argmin_row(&[3.0, 1.0, 2.0, 1.0]), (1, 1.0));
+        assert_eq!(argmin_row(&[5.0]), (0, 5.0));
+        assert_eq!(argmin_row(&[]), (0, f32::INFINITY));
+        // NaN never wins (the sequential strict-< scan's behavior).
+        let (c, d) = argmin_row(&[f32::NAN, 2.0, 1.0]);
+        assert_eq!((c, d), (2, 1.0));
+    }
+
+    #[test]
+    fn refine_block_matches_scalar_refine() {
+        let (model, pts) = shard();
+        let queries: Vec<KmeansQuery> = (0..pts.rows())
+            .step_by(31)
+            .map(|r| KmeansQuery {
+                point: pts.row(r).to_vec(),
+                seed: r as u64,
+            })
+            .collect();
+        let refs: Vec<&KmeansQuery> = queries.iter().collect();
+        let initials = model.answer_initial_block(&refs);
+        let n_b = ServableModel::n_buckets(&model);
+        let mixed: Vec<usize> = (0..refs.len()).map(|i| i % (n_b + 2)).collect();
+        for budgets in [vec![0; refs.len()], vec![2; refs.len()], vec![n_b; refs.len()], mixed] {
+            let block = model.refine_block(&refs, &initials, &budgets);
+            for i in 0..refs.len() {
+                assert_eq!(
+                    block.answers[i],
+                    model.refine(refs[i], &initials[i], budgets[i]),
+                    "query {i} budget {}",
+                    budgets[i]
+                );
+            }
+        }
+        // Q=1 and the empty batch.
+        let one = model.refine_block(&refs[..1], &initials[..1], &[2]);
+        assert_eq!(one.answers[0], model.refine(refs[0], &initials[0], 2));
+        let empty = model.refine_block(&[], &[], &[]);
+        assert!(empty.answers.is_empty());
+        assert_eq!(empty.bucket_groups, 0);
     }
 
     #[test]

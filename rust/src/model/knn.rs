@@ -7,8 +7,8 @@ use std::sync::Arc;
 
 use crate::aggregate::AggregatedPoints;
 use crate::approx::algorithm1::{
-    refine_budget, refinement_order, refinement_order_ascending, refinement_order_random,
-    RefineOrder,
+    group_plans_by_bucket, refine_budget, refinement_order_ascending, refinement_order_random,
+    refinement_selection, RefineOrder,
 };
 use crate::apps::knn::classify::{majority_vote, merge_candidates, LabeledCandidate};
 use crate::data::matrix::{sq_dist, Matrix};
@@ -17,7 +17,7 @@ use crate::error::Result;
 use crate::lsh::bucketizer::Grouping;
 use crate::lsh::Bucketizer;
 use crate::mapreduce::metrics::TaskMetrics;
-use crate::model::{InitialAnswer, ServableModel};
+use crate::model::{InitialAnswer, RefinedBlock, ServableModel};
 use crate::runtime::backend::{ScoreBackend, TopK};
 use crate::util::timer::Stopwatch;
 
@@ -175,6 +175,86 @@ impl KnnModel {
         cands
     }
 
+    /// Batched stage 2 over a set of query rows — the block form of
+    /// looping [`KnnModel::refine_query`], shared by the serving
+    /// [`ServableModel::refine_block`] override and the batch job's
+    /// stage-2 adapter (gather → score → scatter):
+    ///
+    /// 1. **gather** — the per-query plans are grouped by bucket
+    ///    ([`group_plans_by_bucket`]); each refined bucket's original
+    ///    rows and its member queries' rows are gathered into dense
+    ///    blocks once, however many queries share the bucket;
+    /// 2. **score** — each block pair is scored in ONE
+    ///    [`ScoreBackend::knn_dists`] call per bucket-group (so rescans
+    ///    route through PJRT whenever the shard's backend does);
+    /// 3. **scatter** — per query, the scored rows are replayed in the
+    ///    plan's Algorithm-1 order into the same top-k/merge sequence
+    ///    the scalar path runs, so results are bit-identical to
+    ///    `refine_query` on the native backend.
+    ///
+    /// `queries[i]`/`drows[i]`/`plans[i]` describe query `i` (feature
+    /// row, aggregated-centroid distance row, ranked buckets). Returns
+    /// the per-query candidate lists plus the number of bucket-groups
+    /// scored (== backend calls issued).
+    pub fn refine_rows_block(
+        &self,
+        queries: &[&[f32]],
+        drows: &[&[f32]],
+        plans: &[Vec<usize>],
+    ) -> (Vec<Vec<LabeledCandidate>>, usize) {
+        debug_assert_eq!(queries.len(), drows.len());
+        debug_assert_eq!(queries.len(), plans.len());
+        let n_buckets = self.agg.len();
+        let grouped = group_plans_by_bucket(plans, n_buckets);
+        let (blocks, scored_groups) = crate::model::score_distance_blocks(
+            self.backend.as_ref(),
+            &grouped,
+            &self.agg.index,
+            |q| queries[q],
+            |l| self.part.row(l as usize),
+        );
+
+        // Scatter: the same selection/merge sequence as `refine_query`,
+        // with scratch (heaps + flags) reused across the batch.
+        let mut out = Vec::with_capacity(queries.len());
+        let mut is_refined = vec![false; n_buckets];
+        let mut topk = TopK::new(self.k);
+        let mut agg_topk = TopK::new(self.k);
+        for (q, plan) in plans.iter().enumerate() {
+            is_refined.fill(false);
+            // Refined buckets contribute their original points, read
+            // from the shared scored blocks in plan order...
+            for (j, &b) in plan.iter().enumerate() {
+                is_refined[b] = true;
+                let Some(block) = blocks[b].as_ref() else {
+                    continue; // empty bucket: no originals to rescan
+                };
+                let row = block.row(grouped.slots[q][j]);
+                for (jj, &local) in self.agg.index[b].iter().enumerate() {
+                    topk.push(row[jj], local);
+                }
+            }
+            let mut cands: Vec<LabeledCandidate> = topk
+                .drain_sorted()
+                .into_iter()
+                .map(|(d, local)| (d, self.labels[local as usize]))
+                .collect();
+            // ...unrefined buckets contribute their aggregated point.
+            for b in 0..n_buckets {
+                if !is_refined[b] {
+                    agg_topk.push(drows[q][b], b as u32);
+                }
+            }
+            for (d, b) in agg_topk.drain_sorted() {
+                cands.push((d, self.agg.labels[b as usize]));
+            }
+            cands.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap_or(std::cmp::Ordering::Equal));
+            cands.truncate(self.k);
+            out.push(cands);
+        }
+        (out, scored_groups)
+    }
+
     /// Neighbors kept per query.
     pub fn k(&self) -> usize {
         self.k
@@ -260,18 +340,51 @@ impl ServableModel for KnnModel {
         if budget == 0 {
             return initial.answer.clone();
         }
-        let chosen = match self.refine_order {
-            RefineOrder::Correlation => refinement_order(&initial.correlations, budget),
-            RefineOrder::Random => {
-                refinement_order_random(initial.correlations.len(), budget, query.seed)
-            }
-        };
+        let chosen =
+            refinement_selection(&initial.correlations, budget, self.refine_order, query.seed);
         // Two small per-call allocations (drow + scratch) — unlike the
         // batch loop there is no cross-query reuse point in the trait
         // call; both are O(n_buckets), dwarfed by the bucket rescans.
         let drow: Vec<f32> = initial.correlations.iter().map(|&c| -c).collect();
         let mut is_refined = vec![false; self.n_buckets()];
         self.refine_query(&query.features, &drow, &chosen, &mut is_refined)
+    }
+
+    fn refine_block(
+        &self,
+        queries: &[&Self::Query],
+        initials: &[InitialAnswer<Self::Answer>],
+        budgets: &[usize],
+    ) -> RefinedBlock<Self::Answer> {
+        debug_assert_eq!(queries.len(), initials.len());
+        debug_assert_eq!(queries.len(), budgets.len());
+        // Plan each query exactly as the scalar `refine` does, then run
+        // the shared bucket-grouped core.
+        let plans = crate::model::plan_block(
+            initials,
+            queries.iter().map(|q| q.seed),
+            budgets,
+            self.refine_order,
+        );
+        let drows: Vec<Vec<f32>> = initials
+            .iter()
+            .map(|init| init.correlations.iter().map(|&c| -c).collect())
+            .collect();
+        let qrows: Vec<&[f32]> = queries.iter().map(|q| q.features.as_slice()).collect();
+        let drefs: Vec<&[f32]> = drows.iter().map(|d| d.as_slice()).collect();
+        let (mut answers, bucket_groups) = self.refine_rows_block(&qrows, &drefs, &plans);
+        // Budget-0 queries mirror `refine`'s early-out: the initial
+        // answer verbatim (the core's empty-plan output is equal, but
+        // the clone pins the identity structurally).
+        for (i, &budget) in budgets.iter().enumerate() {
+            if budget == 0 {
+                answers[i] = initials[i].answer.clone();
+            }
+        }
+        RefinedBlock {
+            answers,
+            bucket_groups,
+        }
     }
 
     fn merge(&self, _query: &Self::Query, partials: &[Self::Answer]) -> Self::Response {
@@ -354,6 +467,67 @@ mod tests {
             assert_eq!(b.correlations, per.correlations);
         }
         assert!(model.answer_initial_block(&[]).is_empty());
+    }
+
+    #[test]
+    fn refine_block_matches_scalar_refine() {
+        let (model, data) = shard();
+        let queries: Vec<KnnQuery> = (0..data.test.rows())
+            .map(|t| KnnQuery {
+                features: data.test.row(t).to_vec(),
+                label: None,
+                seed: t as u64,
+            })
+            .collect();
+        let refs: Vec<&KnnQuery> = queries.iter().collect();
+        let initials = model.answer_initial_block(&refs);
+        let n_b = model.n_buckets();
+        // Uniform budgets (0, partial, all) and a per-query mix.
+        let mixed: Vec<usize> = (0..refs.len()).map(|i| i % (n_b + 2)).collect();
+        for budgets in [vec![0; refs.len()], vec![2; refs.len()], vec![n_b; refs.len()], mixed] {
+            let block = model.refine_block(&refs, &initials, &budgets);
+            assert_eq!(block.answers.len(), refs.len());
+            for i in 0..refs.len() {
+                assert_eq!(
+                    block.answers[i],
+                    model.refine(refs[i], &initials[i], budgets[i]),
+                    "query {i} budget {}",
+                    budgets[i]
+                );
+            }
+        }
+        // Q=1 and the empty batch.
+        let one = model.refine_block(&refs[..1], &initials[..1], &[3]);
+        assert_eq!(one.answers[0], model.refine(refs[0], &initials[0], 3));
+        assert!(one.bucket_groups <= 3);
+        let empty = model.refine_block(&[], &[], &[]);
+        assert!(empty.answers.is_empty());
+        assert_eq!(empty.bucket_groups, 0);
+    }
+
+    #[test]
+    fn refine_block_matches_scalar_under_random_ablation() {
+        // The Random selection is seeded per query; the block path must
+        // honor each query's seed, not a batch-level one.
+        let (model, data) = shard();
+        let model = KnnModel {
+            refine_order: RefineOrder::Random,
+            ..model
+        };
+        let queries: Vec<KnnQuery> = (0..data.test.rows())
+            .map(|t| KnnQuery {
+                features: data.test.row(t).to_vec(),
+                label: None,
+                seed: 1000 + t as u64,
+            })
+            .collect();
+        let refs: Vec<&KnnQuery> = queries.iter().collect();
+        let initials = model.answer_initial_block(&refs);
+        let budgets = vec![3usize; refs.len()];
+        let block = model.refine_block(&refs, &initials, &budgets);
+        for i in 0..refs.len() {
+            assert_eq!(block.answers[i], model.refine(refs[i], &initials[i], 3), "query {i}");
+        }
     }
 
     #[test]

@@ -24,6 +24,10 @@ pub mod cf;
 pub mod kmeans;
 pub mod knn;
 
+use crate::approx::algorithm1::{refinement_selection, BucketGroups, RefineOrder};
+use crate::data::matrix::Matrix;
+use crate::runtime::backend::{GatherBuf, ScoreBackend};
+
 pub use cf::{CfModel, CfPartial, CfQuery};
 pub use kmeans::{KmeansModel, KmeansQuery, RepMatch};
 pub use knn::{KnnModel, KnnQuery};
@@ -38,6 +42,76 @@ pub struct InitialAnswer<A> {
     /// Per-bucket correlations, higher = refine first (Algorithm 1
     /// line 2's ranking key).
     pub correlations: Vec<f32>,
+}
+
+/// Per-query refinement plans for a micro-batch: budget 0 yields an
+/// empty plan (the scalar `refine` early-out), otherwise exactly the
+/// buckets scalar `refine` would select for that query — the one
+/// planning rule every `refine_block` override shares.
+pub(crate) fn plan_block<A>(
+    initials: &[InitialAnswer<A>],
+    seeds: impl Iterator<Item = u64>,
+    budgets: &[usize],
+    order: RefineOrder,
+) -> Vec<Vec<usize>> {
+    debug_assert_eq!(initials.len(), budgets.len());
+    initials
+        .iter()
+        .zip(seeds)
+        .zip(budgets)
+        .map(|((init, seed), &budget)| {
+            if budget == 0 {
+                Vec::new()
+            } else {
+                refinement_selection(&init.correlations, budget, order, seed)
+            }
+        })
+        .collect()
+}
+
+/// The gather + score half of a distance-based block rescan (kNN rows,
+/// k-means points), shared by the two `knn_dists`-scoring models: per
+/// bucket-group, gather the member queries' rows and the bucket's
+/// original rows (allocation-reusing [`GatherBuf`]s) and score them in
+/// ONE [`ScoreBackend::knn_dists`] call. Returns the per-bucket
+/// distance blocks (indexed by bucket id) and the number of groups
+/// scored (== backend calls; empty buckets are skipped defensively).
+pub(crate) fn score_distance_blocks<'a>(
+    backend: &dyn ScoreBackend,
+    grouped: &BucketGroups,
+    index: &[Vec<u32>],
+    query_row: impl Fn(usize) -> &'a [f32],
+    original_row: impl Fn(u32) -> &'a [f32],
+) -> (Vec<Option<Matrix>>, usize) {
+    let mut blocks: Vec<Option<Matrix>> = vec![None; index.len()];
+    let mut scored_groups = 0;
+    let mut qbuf = GatherBuf::default();
+    let mut xbuf = GatherBuf::default();
+    for (b, members) in &grouped.groups {
+        if index[*b].is_empty() {
+            continue; // nothing to rescan (defensive; buckets are non-empty)
+        }
+        let qm = qbuf.gather(members.iter().map(|&q| query_row(q)));
+        let xm = xbuf.gather(index[*b].iter().map(|&l| original_row(l)));
+        let dists = backend.knn_dists(&qm, &xm).expect("backend scoring failed");
+        qbuf.recycle(qm);
+        xbuf.recycle(xm);
+        blocks[*b] = Some(dists);
+        scored_groups += 1;
+    }
+    (blocks, scored_groups)
+}
+
+/// Stage-2 product for one micro-batch against one shard.
+#[derive(Clone, Debug)]
+pub struct RefinedBlock<A> {
+    /// One refined answer per query, in input order.
+    pub answers: Vec<A>,
+    /// Distinct buckets expanded by at least one query of the batch —
+    /// the number of gathered original-point blocks (one
+    /// [`ScoreBackend`](crate::runtime::backend::ScoreBackend) call
+    /// each) the batch shared. 0 when the per-query default path ran.
+    pub bucket_groups: usize,
 }
 
 /// One shard of a servable model: per-query stage 1 (initial answer
@@ -98,6 +172,37 @@ pub trait ServableModel: Send + Sync + 'static {
         initial: &InitialAnswer<Self::Answer>,
         budget: usize,
     ) -> Self::Answer;
+
+    /// Stage 2 for a whole micro-batch: one refined answer per query,
+    /// in input order, **identical** to calling
+    /// [`ServableModel::refine`] per query with the matching budget
+    /// (bit-for-bit on the native backend). The default loops — and
+    /// reports 0 shared bucket groups — while the concrete models
+    /// override it to group the batch's refinement plans by bucket:
+    /// queries expanding the *same* bucket share one gathered
+    /// original-point block scored in ONE
+    /// [`ScoreBackend`](crate::runtime::backend::ScoreBackend) call per
+    /// (shard, bucket-group), with the per-query scatter replaying
+    /// Algorithm 1's refinement order unchanged — the stage-2 analogue
+    /// of [`ServableModel::answer_initial_block`].
+    fn refine_block(
+        &self,
+        queries: &[&Self::Query],
+        initials: &[InitialAnswer<Self::Answer>],
+        budgets: &[usize],
+    ) -> RefinedBlock<Self::Answer> {
+        debug_assert_eq!(queries.len(), initials.len());
+        debug_assert_eq!(queries.len(), budgets.len());
+        RefinedBlock {
+            answers: queries
+                .iter()
+                .zip(initials)
+                .zip(budgets)
+                .map(|((q, init), &budget)| self.refine(q, init, budget))
+                .collect(),
+            bucket_groups: 0,
+        }
+    }
 
     /// Merge per-shard answers into the client-facing response (the
     /// per-query reduce). Every shard shares config, so any shard can

@@ -151,6 +151,51 @@ fn sort_candidates(v: &mut [Candidate]) {
     v.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
 }
 
+/// Reusable row-gather scratch for assembling stage-2 rescan blocks.
+///
+/// Block-oriented refinement works gather → score → scatter: each
+/// bucket-group gathers its original rows (and the member queries'
+/// rows) into a dense block, scores it through the regular
+/// [`ScoreBackend`] entry points (`knn_dists` / `cf_weights` — so
+/// rescans route through PJRT whenever the shard's backend does), and
+/// scatters the scored block back per query. One `GatherBuf` backs
+/// every gathered block a caller builds: [`GatherBuf::gather`] takes
+/// the buffer, [`GatherBuf::recycle`] returns it after the backend
+/// call, so a batch that rescans many bucket-groups performs one
+/// allocation, not one per group.
+#[derive(Default)]
+pub struct GatherBuf {
+    buf: Vec<f32>,
+}
+
+impl GatherBuf {
+    /// Gather equal-length rows into a matrix backed by this buffer's
+    /// allocation. Hand the matrix back via [`GatherBuf::recycle`]
+    /// after scoring to keep reusing the allocation.
+    pub fn gather<'a, I>(&mut self, rows: I) -> Matrix
+    where
+        I: IntoIterator<Item = &'a [f32]>,
+    {
+        let mut buf = std::mem::take(&mut self.buf);
+        buf.clear();
+        let mut n = 0;
+        let mut cols = 0;
+        for r in rows {
+            debug_assert!(n == 0 || r.len() == cols, "ragged gather: {} vs {cols}", r.len());
+            cols = r.len();
+            buf.extend_from_slice(r);
+            n += 1;
+        }
+        Matrix::from_vec(n, cols, buf).expect("gathered rows must share one length")
+    }
+
+    /// Reclaim a matrix previously built by [`GatherBuf::gather`] so
+    /// the next gather reuses its allocation.
+    pub fn recycle(&mut self, block: Matrix) {
+        self.buf = block.into_vec();
+    }
+}
+
 impl ScoreBackend for NativeBackend {
     fn knn_block_topk(&self, q: &Matrix, x: &Matrix, k: usize) -> Result<Vec<Vec<Candidate>>> {
         let mut out = Vec::with_capacity(q.rows());
@@ -637,6 +682,21 @@ mod tests {
             assert!(v.abs() <= 1.0 + 1e-4, "weight {v}");
             assert!(v.is_finite());
         }
+    }
+
+    #[test]
+    fn gather_buf_matches_gather_rows_and_recycles() {
+        let m = rand_matrix(6, 4, 11);
+        let mut buf = GatherBuf::default();
+        let g = buf.gather([2usize, 0, 5].iter().map(|&r| m.row(r)));
+        assert_eq!(g, m.gather_rows(&[2, 0, 5]));
+        buf.recycle(g);
+        // The recycled buffer serves the next (larger) gather too.
+        let g = buf.gather((0..6).map(|r| m.row(r)));
+        assert_eq!(g, m);
+        buf.recycle(g);
+        let empty = buf.gather(std::iter::empty::<&[f32]>());
+        assert_eq!(empty.rows(), 0);
     }
 
     #[test]

@@ -83,6 +83,17 @@ impl<V: Clone> AnswerCache<V> {
         }
     }
 
+    /// Drop every entry, keeping capacity and the hit/lookup counters
+    /// (they describe the request stream, not the contents). This is
+    /// the lifecycle hook for caches held *across* replays (see
+    /// [`crate::serve::SharedAnswerCache`]): call it when the model a
+    /// cached response was computed against is swapped or rebuilt, so
+    /// stale answers cannot outlive their shards.
+    pub fn invalidate_all(&mut self) {
+        self.map.clear();
+        self.queue.clear();
+    }
+
     /// Look up a key, refreshing its recency on a hit.
     pub fn get(&mut self, key: &[u8]) -> Option<V> {
         self.lookups += 1;
@@ -209,6 +220,23 @@ mod tests {
             assert!(c.len() <= 2, "capacity must hold at insert {i}");
         }
         assert_eq!(c.get(&k(100)), Some(100));
+    }
+
+    #[test]
+    fn invalidate_all_clears_entries_but_keeps_stats() {
+        let mut c: AnswerCache<u32> = AnswerCache::new(4);
+        c.insert(k(1), 1);
+        c.insert(k(2), 2);
+        assert_eq!(c.get(&k(1)), Some(1));
+        c.invalidate_all();
+        assert!(c.is_empty());
+        assert!(c.get(&k(1)).is_none(), "entries gone after invalidation");
+        assert_eq!(c.capacity(), 4, "capacity survives");
+        assert_eq!(c.hits(), 1, "stats describe the stream, not contents");
+        assert_eq!(c.lookups(), 2);
+        // The cache keeps working after invalidation.
+        c.insert(k(3), 3);
+        assert_eq!(c.get(&k(3)), Some(3));
     }
 
     #[test]

@@ -34,11 +34,20 @@ use std::sync::{mpsc, Arc, Mutex};
 use crate::approx::algorithm1::refine_budget;
 use crate::error::{Error, Result};
 use crate::mapreduce::engine::{drain_stream, Engine};
-use crate::model::{InitialAnswer, ServableModel};
+use crate::model::{InitialAnswer, RefinedBlock, ServableModel};
 use crate::serve::batcher::MicroBatcher;
 use crate::serve::cache::AnswerCache;
-use crate::serve::stats::{LatencyStats, ServeReport};
+use crate::serve::stats::{LatencyStats, ServeReport, ServeStage, ServeTracePoint};
 use crate::util::timer::Stopwatch;
+
+/// An answer cache shared *across* `serve` calls: hand the same handle
+/// to successive replays ([`ShardedServer::serve_with_cache`]) so
+/// repeat traffic across replay loops hits, and call
+/// [`AnswerCache::invalidate_all`] on it after a model swap so stale
+/// answers cannot outlive their shards. The lock is only taken on the
+/// serving thread (per lookup / per batch of inserts), never inside
+/// pool tasks.
+pub type SharedAnswerCache<R> = Arc<Mutex<AnswerCache<R>>>;
 
 /// Smoothing factor of the per-shard stage-1 cost EWMA (weight of the
 /// newest batch's measurement).
@@ -76,8 +85,23 @@ pub struct ServeConfig {
     /// [`crate::serve::AnswerCache`]. Batches served under
     /// [`RefineBudget::Deadline`] never populate the cache (its
     /// budgets vary with load, so a loaded batch's degraded answers
-    /// would otherwise be pinned onto hot queries).
+    /// would otherwise be pinned onto hot queries). Ignored by
+    /// [`ShardedServer::serve_with_cache`], where the external cache's
+    /// own capacity governs.
     pub cache_capacity: usize,
+    /// Load shedding: how many micro-batches may be pending behind a
+    /// batch before its refinement budget is downgraded to
+    /// [`RefineBudget::Off`] — initial answers only, never
+    /// cache-populated — so the executor degrades quality before it
+    /// would ever reject requests. Counted as
+    /// [`ServeReport::shed_batches`]; batches whose budget already
+    /// resolves to zero are neither counted nor barred from caching
+    /// (the downgrade would change nothing). `usize::MAX` (the
+    /// default) disables shedding. In a replay, arrivals are
+    /// instantaneous, so the pending depth is the unread remainder of
+    /// the log; an online deployment would feed the real queue length
+    /// here.
+    pub shed_queue_depth: usize,
 }
 
 impl Default for ServeConfig {
@@ -87,6 +111,7 @@ impl Default for ServeConfig {
             deadline_s: 0.050,
             budget: RefineBudget::Fraction(0.05),
             cache_capacity: 0,
+            shed_queue_depth: usize::MAX,
         }
     }
 }
@@ -116,6 +141,11 @@ pub struct QueryOutcome<R> {
     /// Whether this request was served from the hot-query answer cache
     /// (zero compute; latencies are 0, `refined_buckets` is 0).
     pub cache_hit: bool,
+    /// Per-request anytime checkpoints, in delivery order: the initial
+    /// response, then the post-refinement response when stage 2 ran
+    /// (one `CacheHit` point for cache hits) — the serving analogue of
+    /// the batch trace, for plotting anytime curves per query class.
+    pub trace: Vec<ServeTracePoint>,
 }
 
 impl<R> QueryOutcome<R> {
@@ -124,6 +154,16 @@ impl<R> QueryOutcome<R> {
     pub fn final_response(&self) -> &R {
         self.refined.as_ref().unwrap_or(&self.initial)
     }
+}
+
+/// Per-replay accounting accumulated across micro-batches.
+#[derive(Default)]
+struct ReplayCounters {
+    /// Batches whose refinement was shed under queue pressure.
+    shed_batches: usize,
+    /// Stage-2 bucket-groups scored (one backend call each), summed
+    /// over (batch, shard).
+    stage2_bucket_groups: usize,
 }
 
 /// A model sharded across the engine's worker pool.
@@ -156,33 +196,59 @@ impl<M: ServableModel> ShardedServer<M> {
 
     /// Replay a query log: check the answer cache, batch the misses,
     /// answer, refine. Returns the per-request outcomes (in input
-    /// order) and the aggregate report.
+    /// order) and the aggregate report. The answer cache lives and
+    /// dies with this call; use [`ShardedServer::serve_with_cache`] to
+    /// reuse one across replays.
     pub fn serve(
         &self,
         engine: &Engine,
         queries: Vec<M::Query>,
         config: &ServeConfig,
     ) -> Result<(Vec<QueryOutcome<M::Response>>, ServeReport)> {
+        let cache = Arc::new(Mutex::new(AnswerCache::new(config.cache_capacity)));
+        self.serve_with_cache(engine, queries, config, &cache)
+    }
+
+    /// [`ShardedServer::serve`] with a caller-held answer cache, so
+    /// repeat traffic *across* replay loops hits too. The external
+    /// cache's own capacity governs (`config.cache_capacity` is not
+    /// consulted on this path); the report's hit/lookup counts are
+    /// this replay's deltas, not the cache's lifetime totals. Call
+    /// [`AnswerCache::invalidate_all`] on the cache whenever the
+    /// shards it answered from are swapped or rebuilt.
+    pub fn serve_with_cache(
+        &self,
+        engine: &Engine,
+        queries: Vec<M::Query>,
+        config: &ServeConfig,
+        cache: &SharedAnswerCache<M::Response>,
+    ) -> Result<(Vec<QueryOutcome<M::Response>>, ServeReport)> {
         let queries = Arc::new(queries);
         // Outcomes are written by input index: cache hits resolve ahead
         // of still-queued misses, so a plain push would misorder them.
         let mut slots: Vec<Option<QueryOutcome<M::Response>>> =
             (0..queries.len()).map(|_| None).collect();
-        let mut cache: AnswerCache<M::Response> = AnswerCache::new(config.cache_capacity);
+        // Baselines so a reused external cache reports per-replay
+        // deltas rather than lifetime totals.
+        let (hits0, lookups0, cache_on) = {
+            let c = cache.lock().unwrap();
+            (c.hits(), c.lookups(), c.capacity() > 0)
+        };
         let merger = &self.shards[0];
+        let mut counters = ReplayCounters::default();
         let mut batcher = MicroBatcher::new(config.batch_size);
         for qi in 0..queries.len() {
             // The cache sits in front of admission: a hit serves the
             // cached final response at zero compute. The key computed
             // here rides along with the admitted index so a miss does
             // not serialize the query a second time at insert.
-            let key = if config.cache_capacity > 0 {
+            let key = if cache_on {
                 merger.query_key(&queries[qi])
             } else {
                 None
             };
             if let Some(k) = &key {
-                if let Some(response) = cache.get(k) {
+                if let Some(response) = cache.lock().unwrap().get(k) {
                     let accuracy = merger.accuracy(&queries[qi], &response);
                     // A hit is neither a fresh stage-1 answer nor a
                     // refinement of this request: `initial` carries the
@@ -199,37 +265,64 @@ impl<M: ServableModel> ShardedServer<M> {
                         refined_accuracy: accuracy,
                         refined_buckets: 0,
                         cache_hit: true,
+                        trace: vec![ServeTracePoint {
+                            stage: ServeStage::CacheHit,
+                            wall_s: 0.0,
+                            accuracy,
+                            refined_buckets: 0,
+                        }],
                     });
                     continue;
                 }
             }
             if let Some(batch) = batcher.push((qi, key)) {
-                self.serve_batch(engine, &queries, batch, config, &mut slots, &mut cache)?;
+                // The pending depth behind this batch: in a replay the
+                // whole unread remainder of the log is already queued.
+                let pending = (queries.len() - qi - 1).div_ceil(config.batch_size.max(1));
+                self.serve_batch(
+                    engine,
+                    &queries,
+                    batch,
+                    config,
+                    pending,
+                    &mut slots,
+                    cache,
+                    &mut counters,
+                )?;
             }
         }
         if let Some(batch) = batcher.flush() {
-            self.serve_batch(engine, &queries, batch, config, &mut slots, &mut cache)?;
+            self.serve_batch(engine, &queries, batch, config, 0, &mut slots, cache, &mut counters)?;
         }
 
         let outcomes: Vec<QueryOutcome<M::Response>> = slots
             .into_iter()
             .map(|s| s.expect("query outcome missing"))
             .collect();
-        let report = self.report(&queries, &outcomes, config, &cache);
+        let (cache_hits, cache_lookups) = {
+            let c = cache.lock().unwrap();
+            ((c.hits() - hits0) as usize, (c.lookups() - lookups0) as usize)
+        };
+        let report = self.report(&queries, &outcomes, config, cache_hits, cache_lookups, &counters);
         Ok((outcomes, report))
     }
 
     /// One micro-batch through both stages. `batch` pairs each admitted
     /// query index with its precomputed cache key (None when the cache
-    /// is off or the query is uncacheable).
+    /// is off or the query is uncacheable); `pending_batches` is the
+    /// queue depth behind this batch, which the shedding policy acts
+    /// on.
+    #[allow(clippy::too_many_arguments)]
     fn serve_batch(
         &self,
         engine: &Engine,
         queries: &Arc<Vec<M::Query>>,
         batch: Vec<(usize, Option<Vec<u8>>)>,
         config: &ServeConfig,
+        pending_batches: usize,
         slots: &mut [Option<QueryOutcome<M::Response>>],
-        cache: &mut AnswerCache<M::Response>,
+        cache: &SharedAnswerCache<M::Response>,
+        counters: &mut ReplayCounters,
     ) -> Result<()> {
         let n_shards = self.shards.len();
         let (indices, mut keys): (Vec<usize>, Vec<Option<Vec<u8>>>) = batch.into_iter().unzip();
@@ -277,8 +370,18 @@ impl<M: ServableModel> ShardedServer<M> {
         // merge that produces the deliverable answer.
         let initial_latency_s = sw.elapsed_s();
 
-        // Resolve the per-shard refinement budgets.
-        let budgets = self.resolve_budgets(config, initial_latency_s, batch.len());
+        // Load shedding: under queue pressure the batch's budget is
+        // downgraded to Off — initial answers only — degrading quality
+        // before the executor would ever reject requests. Budgets are
+        // resolved first so a batch whose policy already yields zero
+        // (Off, Buckets(0), an expired deadline) is neither counted as
+        // shed nor barred from caching — the downgrade changed nothing.
+        let mut budgets = self.resolve_budgets(config, initial_latency_s, batch.len());
+        let shed = pending_batches > config.shed_queue_depth && budgets.iter().any(|&b| b > 0);
+        if shed {
+            counters.shed_batches += 1;
+            budgets.iter_mut().for_each(|b| *b = 0);
+        }
         let refined_buckets: usize = budgets
             .iter()
             .enumerate()
@@ -290,8 +393,8 @@ impl<M: ServableModel> ShardedServer<M> {
         // barely refined) would be pinned onto its hot queries forever
         // — hits refresh recency — even once full refinement is
         // affordable again. Only policy-stable budgets populate the
-        // cache.
-        let cacheable = !matches!(config.budget, RefineBudget::Deadline);
+        // cache; a shed batch's downgraded answers never do.
+        let cacheable = !shed && !matches!(config.budget, RefineBudget::Deadline);
 
         if budgets.iter().all(|&b| b == 0) {
             // Initial answers are final (and, policy permitting,
@@ -300,7 +403,7 @@ impl<M: ServableModel> ShardedServer<M> {
                 let initial_accuracy = merger.accuracy(&queries[qi], &initial);
                 if cacheable {
                     if let Some(key) = keys[j].take() {
-                        cache.insert(key, initial.clone());
+                        cache.lock().unwrap().insert(key, initial.clone());
                     }
                 }
                 slots[qi] = Some(QueryOutcome {
@@ -312,13 +415,22 @@ impl<M: ServableModel> ShardedServer<M> {
                     refined_accuracy: None,
                     refined_buckets: 0,
                     cache_hit: false,
+                    trace: vec![ServeTracePoint {
+                        stage: ServeStage::Initial,
+                        wall_s: initial_latency_s,
+                        accuracy: initial_accuracy,
+                        refined_buckets: 0,
+                    }],
                 });
             }
             return Ok(());
         }
 
-        // Stage 2: every shard refines the whole batch with its budget,
-        // consuming the stage-1 answers it produced.
+        // Stage 2: every shard refines the whole batch with its budget
+        // in ONE `refine_block` task — the batch's refinement plans are
+        // grouped by bucket so queries rescanning the same bucket share
+        // one gathered original-point block and one backend call per
+        // (shard, bucket-group).
         let (tx2, rx2) = mpsc::channel();
         for (s, slot) in per_shard.iter_mut().enumerate() {
             let initials = slot.take().expect("shard answer missing");
@@ -326,20 +438,21 @@ impl<M: ServableModel> ShardedServer<M> {
             let queries = Arc::clone(queries);
             let batch = Arc::clone(&batch);
             let budget = budgets[s];
-            engine.pool().stream_into(&tx2, s, move || -> Vec<M::Answer> {
-                batch
-                    .iter()
-                    .zip(&initials)
-                    .map(|(&qi, initial)| shard.refine(&queries[qi], initial, budget))
-                    .collect()
-            });
+            engine
+                .pool()
+                .stream_into(&tx2, s, move || -> RefinedBlock<M::Answer> {
+                    let block: Vec<&M::Query> = batch.iter().map(|&qi| &queries[qi]).collect();
+                    let per_query = vec![budget; block.len()];
+                    shard.refine_block(&block, &initials, &per_query)
+                });
         }
         drop(tx2);
         let mut refined_per_shard: Vec<Option<Vec<M::Answer>>> =
             (0..n_shards).map(|_| None).collect();
         let mut failure: Option<Error> = None;
-        drain_stream(rx2, "serving stage-2", &mut failure, |s, v, _| {
-            refined_per_shard[s] = Some(v);
+        drain_stream(rx2, "serving stage-2", &mut failure, |s, rb, _| {
+            counters.stage2_bucket_groups += rb.bucket_groups;
+            refined_per_shard[s] = Some(rb.answers);
         });
         if let Some(e) = failure {
             return Err(e);
@@ -356,7 +469,7 @@ impl<M: ServableModel> ShardedServer<M> {
             let refined_accuracy = merger.accuracy(&queries[qi], &refined);
             if cacheable {
                 if let Some(key) = keys[j].take() {
-                    cache.insert(key, refined.clone());
+                    cache.lock().unwrap().insert(key, refined.clone());
                 }
             }
             slots[qi] = Some(QueryOutcome {
@@ -368,6 +481,20 @@ impl<M: ServableModel> ShardedServer<M> {
                 refined_accuracy,
                 refined_buckets,
                 cache_hit: false,
+                trace: vec![
+                    ServeTracePoint {
+                        stage: ServeStage::Initial,
+                        wall_s: initial_latency_s,
+                        accuracy: initial_accuracy,
+                        refined_buckets: 0,
+                    },
+                    ServeTracePoint {
+                        stage: ServeStage::Refined,
+                        wall_s: total_latency_s,
+                        accuracy: refined_accuracy,
+                        refined_buckets,
+                    },
+                ],
             });
         }
         Ok(())
@@ -443,13 +570,17 @@ impl<M: ServableModel> ShardedServer<M> {
         }
     }
 
-    /// Aggregate the outcomes into a [`ServeReport`].
+    /// Aggregate the outcomes into a [`ServeReport`]. `cache_hits` /
+    /// `cache_lookups` are this replay's deltas (an external cache may
+    /// carry totals from earlier replays).
     fn report(
         &self,
         queries: &Arc<Vec<M::Query>>,
         outcomes: &[QueryOutcome<M::Response>],
         config: &ServeConfig,
-        cache: &AnswerCache<M::Response>,
+        cache_hits: usize,
+        cache_lookups: usize,
+        counters: &ReplayCounters,
     ) -> ServeReport {
         let mean_of = |xs: Vec<f64>| {
             if xs.is_empty() {
@@ -503,8 +634,10 @@ impl<M: ServableModel> ShardedServer<M> {
                 .iter()
                 .filter(|o| o.initial_latency_s > config.deadline_s)
                 .count(),
-            cache_hits: cache.hits() as usize,
-            cache_lookups: cache.lookups() as usize,
+            shed_batches: counters.shed_batches,
+            stage2_bucket_groups: counters.stage2_bucket_groups,
+            cache_hits,
+            cache_lookups,
             stage1_bucket_cost_ewma_s: self.stage1_bucket_cost.lock().unwrap().clone(),
         }
     }
@@ -596,6 +729,16 @@ mod tests {
         (0..n).map(|_| ToyQuery { target: 12 }).collect()
     }
 
+    fn cfg(batch_size: usize, deadline_s: f64, budget: RefineBudget, cache: usize) -> ServeConfig {
+        ServeConfig {
+            batch_size,
+            deadline_s,
+            budget,
+            cache_capacity: cache,
+            ..ServeConfig::default()
+        }
+    }
+
     #[test]
     fn rejects_empty_shard_set() {
         assert!(ShardedServer::<ToyModel>::new(vec![]).is_err());
@@ -608,12 +751,7 @@ mod tests {
             .serve(
                 &engine,
                 queries(5),
-                &ServeConfig {
-                    batch_size: 2,
-                    deadline_s: 10.0,
-                    budget: RefineBudget::Off,
-                    cache_capacity: 0,
-                },
+                &cfg(2, 10.0, RefineBudget::Off, 0),
             )
             .unwrap();
         assert_eq!(outcomes.len(), 5);
@@ -636,12 +774,7 @@ mod tests {
             .serve(
                 &engine,
                 queries(7),
-                &ServeConfig {
-                    batch_size: 3,
-                    deadline_s: 10.0,
-                    budget: RefineBudget::All,
-                    cache_capacity: 0,
-                },
+                &cfg(3, 10.0, RefineBudget::All, 0),
             )
             .unwrap();
         for o in &outcomes {
@@ -663,12 +796,7 @@ mod tests {
             .serve(
                 &engine,
                 queries(1),
-                &ServeConfig {
-                    batch_size: 1,
-                    deadline_s: 10.0,
-                    budget: RefineBudget::Buckets(1),
-                    cache_capacity: 0,
-                },
+                &cfg(1, 10.0, RefineBudget::Buckets(1), 0),
             )
             .unwrap();
         // Shard 0 expands its top aggregate bucket (5 -> 9); shard 1
@@ -684,12 +812,7 @@ mod tests {
             .serve(
                 &engine,
                 queries(4),
-                &ServeConfig {
-                    batch_size: 4,
-                    deadline_s: 0.0,
-                    budget: RefineBudget::Deadline,
-                    cache_capacity: 0,
-                },
+                &cfg(4, 0.0, RefineBudget::Deadline, 0),
             )
             .unwrap();
         assert_eq!(outcomes.len(), 4, "initial answers always delivered");
@@ -706,12 +829,7 @@ mod tests {
             .serve(
                 &engine,
                 queries(7),
-                &ServeConfig {
-                    batch_size: 2,
-                    deadline_s: 10.0,
-                    budget: RefineBudget::All,
-                    cache_capacity: 16,
-                },
+                &cfg(2, 10.0, RefineBudget::All, 16),
             )
             .unwrap();
         assert_eq!(outcomes.len(), 7);
@@ -758,12 +876,7 @@ mod tests {
             .serve(
                 &engine,
                 queries(8),
-                &ServeConfig {
-                    batch_size: 2,
-                    deadline_s: 10.0,
-                    budget: RefineBudget::Deadline,
-                    cache_capacity: 0,
-                },
+                &cfg(2, 10.0, RefineBudget::Deadline, 0),
             )
             .unwrap();
         assert_eq!(report.stage1_bucket_cost_ewma_s.len(), 2);
@@ -773,18 +886,146 @@ mod tests {
     }
 
     #[test]
+    fn shedding_downgrades_deep_queues_to_initial_only() {
+        // 10 queries at batch 2 = 5 batches. When batch i is dispatched
+        // the unread remainder is 8-2i queries = 4-i pending batches;
+        // with depth 2 the first two batches (pending 4, 3) shed and
+        // the last three refine.
+        let engine = Engine::new(2);
+        let config = ServeConfig {
+            shed_queue_depth: 2,
+            ..cfg(2, 10.0, RefineBudget::All, 0)
+        };
+        let (outcomes, report) = server(false).serve(&engine, queries(10), &config).unwrap();
+        assert_eq!(report.shed_batches, 2);
+        for (i, o) in outcomes.iter().enumerate() {
+            if i < 4 {
+                assert!(o.refined.is_none(), "query {i} should be shed");
+                assert_eq!(o.refined_buckets, 0);
+                assert_eq!(*o.final_response(), 5, "shed = initial-only");
+            } else {
+                assert_eq!(o.refined, Some(12), "query {i} should refine");
+            }
+        }
+        // Shedding degrades quality; it never drops requests.
+        assert_eq!(outcomes.len(), 10);
+        assert_eq!(report.refined_queries, 6);
+    }
+
+    #[test]
+    fn shed_batches_never_populate_the_cache() {
+        // Depth 0: every batch with anything pending behind it sheds.
+        // All queries share one cache key, so if a shed batch DID
+        // insert, the very next query would hit — assert none do until
+        // the final (unshed) batch has been served.
+        let engine = Engine::new(2);
+        let config = ServeConfig {
+            shed_queue_depth: 0,
+            ..cfg(2, 10.0, RefineBudget::All, 16)
+        };
+        let (outcomes, report) = server(false).serve(&engine, queries(6), &config).unwrap();
+        assert_eq!(report.shed_batches, 2);
+        assert_eq!(report.cache_hits, 0, "shed answers must not be cached");
+        assert!(outcomes.iter().all(|o| !o.cache_hit));
+        assert_eq!(outcomes[4].refined, Some(12), "final batch refines");
+    }
+
+    #[test]
+    fn shedding_ignores_batches_that_would_not_refine() {
+        // Budget Off already resolves to zero budgets: shedding must
+        // neither count those batches nor bar their (policy-stable)
+        // initial answers from the cache.
+        let engine = Engine::new(2);
+        let config = ServeConfig {
+            shed_queue_depth: 0,
+            ..cfg(2, 10.0, RefineBudget::Off, 16)
+        };
+        let (outcomes, report) = server(false).serve(&engine, queries(6), &config).unwrap();
+        assert_eq!(report.shed_batches, 0);
+        // q0/q1 miss and fill the first batch, whose initial answer is
+        // cached; every later query hits.
+        assert_eq!(report.cache_hits, 4);
+        assert!(outcomes.iter().skip(2).all(|o| o.cache_hit));
+    }
+
+    #[test]
+    fn external_cache_persists_across_replays_until_invalidated() {
+        let engine = Engine::new(2);
+        let srv = server(false);
+        let cache: SharedAnswerCache<i64> = Arc::new(Mutex::new(AnswerCache::new(16)));
+        // cache_capacity is ignored on this path: the external cache's
+        // own capacity (16) governs.
+        let config = cfg(2, 10.0, RefineBudget::All, 0);
+
+        let (_, r1) = srv
+            .serve_with_cache(&engine, queries(4), &config, &cache)
+            .unwrap();
+        assert_eq!(r1.cache_hits, 2, "q2/q3 hit after the first batch fills");
+        // Replay 2: every query hits the carried-over cache, and the
+        // report counts this replay's deltas only.
+        let (o2, r2) = srv
+            .serve_with_cache(&engine, queries(4), &config, &cache)
+            .unwrap();
+        assert_eq!(r2.cache_hits, 4);
+        assert_eq!(r2.cache_lookups, 4);
+        for o in &o2 {
+            assert!(o.cache_hit);
+            assert_eq!(*o.final_response(), 12, "cached refined answer");
+        }
+        // Invalidation (the model-swap hook) empties it: the next
+        // replay recomputes.
+        cache.lock().unwrap().invalidate_all();
+        let (_, r3) = srv
+            .serve_with_cache(&engine, queries(4), &config, &cache)
+            .unwrap();
+        assert_eq!(r3.cache_hits, 2, "first batch recomputes after invalidation");
+    }
+
+    #[test]
+    fn outcomes_carry_anytime_trace_checkpoints() {
+        let engine = Engine::new(2);
+        // Refined queries: two checkpoints, initial then refined.
+        let (outcomes, _) = server(false)
+            .serve(&engine, queries(3), &cfg(3, 10.0, RefineBudget::All, 0))
+            .unwrap();
+        for o in &outcomes {
+            assert_eq!(o.trace.len(), 2);
+            assert_eq!(o.trace[0].stage, ServeStage::Initial);
+            assert_eq!(o.trace[0].wall_s, o.initial_latency_s);
+            assert_eq!(o.trace[0].accuracy, o.initial_accuracy);
+            assert_eq!(o.trace[0].refined_buckets, 0);
+            assert_eq!(o.trace[1].stage, ServeStage::Refined);
+            assert_eq!(o.trace[1].wall_s, o.total_latency_s);
+            assert_eq!(o.trace[1].accuracy, o.refined_accuracy);
+            assert_eq!(o.trace[1].refined_buckets, o.refined_buckets);
+            assert!(o.trace[1].wall_s >= o.trace[0].wall_s);
+        }
+        // Initial-only queries: a single checkpoint.
+        let (outcomes, _) = server(false)
+            .serve(&engine, queries(2), &cfg(2, 10.0, RefineBudget::Off, 0))
+            .unwrap();
+        for o in &outcomes {
+            assert_eq!(o.trace.len(), 1);
+            assert_eq!(o.trace[0].stage, ServeStage::Initial);
+        }
+        // Cache hits: a single CacheHit checkpoint at zero latency.
+        let (outcomes, _) = server(false)
+            .serve(&engine, queries(4), &cfg(2, 10.0, RefineBudget::All, 16))
+            .unwrap();
+        let hit = outcomes.iter().find(|o| o.cache_hit).expect("a hit");
+        assert_eq!(hit.trace.len(), 1);
+        assert_eq!(hit.trace[0].stage, ServeStage::CacheHit);
+        assert_eq!(hit.trace[0].wall_s, 0.0);
+    }
+
+    #[test]
     fn refine_panic_fails_the_replay_without_hanging() {
         let engine = Engine::new(2);
         let err = server(true)
             .serve(
                 &engine,
                 queries(3),
-                &ServeConfig {
-                    batch_size: 3,
-                    deadline_s: 10.0,
-                    budget: RefineBudget::All,
-                    cache_capacity: 0,
-                },
+                &cfg(3, 10.0, RefineBudget::All, 0),
             )
             .unwrap_err();
         assert!(err.to_string().contains("serving stage-2"), "{err}");

@@ -11,7 +11,11 @@
 //!
 //! * [`AnswerCache`] — the hot-query answer cache sitting in front of
 //!   admission: repeat queries (keyed on their answer-relevant bytes)
-//!   are served their cached final response at zero compute;
+//!   are served their cached final response at zero compute; it can be
+//!   held externally ([`SharedAnswerCache`] +
+//!   [`ShardedServer::serve_with_cache`]) so repeat traffic across
+//!   replay loops hits, with [`AnswerCache::invalidate_all`] as the
+//!   model-swap lifecycle hook;
 //! * [`MicroBatcher`] — groups in-flight requests so each model shard
 //!   sees one task per batch instead of one task per query;
 //! * [`ShardedServer`] — shards a [`crate::model::ServableModel`]
@@ -19,16 +23,24 @@
 //!   whole micro-batch per shard in ONE backend call
 //!   ([`crate::model::ServableModel::answer_initial_block`]), merges
 //!   the per-shard answers into initial responses, then spends the
-//!   remaining budget on stage-2 refinement tasks (same drain/failure
-//!   path as the batch engine:
-//!   [`crate::mapreduce::engine::drain_stream`]); the `Deadline` budget
-//!   is calibrated by a per-shard EWMA of measured stage-1 cost;
+//!   remaining budget on stage-2 refinement — one
+//!   [`crate::model::ServableModel::refine_block`] task per shard, the
+//!   batch's bucket rescans grouped so queries refining the same
+//!   bucket share one gathered block and ONE backend call per (shard,
+//!   bucket-group) (same drain/failure path as the batch engine:
+//!   [`crate::mapreduce::engine::drain_stream`]); the `Deadline`
+//!   budget is calibrated by a per-shard EWMA of measured stage-1
+//!   cost, and under queue pressure refinement is shed
+//!   ([`ServeConfig::shed_queue_depth`]) before requests would be
+//!   rejected;
 //! * [`query_log`] — synthetic query logs derived from the workbench
 //!   datasets, for replay by the CLI `serve` command, the e2e tests and
 //!   `benches/serving.rs`;
 //! * [`ServeReport`] — per-run latency percentiles plus
-//!   initial-vs-refined accuracy, cache hit counts and the budget
-//!   calibration state, the serving analogue of
+//!   initial-vs-refined accuracy, cache hit counts, shed/bucket-group
+//!   counters and the budget calibration state; each [`QueryOutcome`]
+//!   additionally carries its own [`ServeTracePoint`] checkpoints, the
+//!   per-request analogue of
 //!   [`crate::mapreduce::metrics::TracePoint`] accounting.
 
 pub mod batcher;
@@ -39,5 +51,5 @@ pub mod stats;
 
 pub use batcher::MicroBatcher;
 pub use cache::AnswerCache;
-pub use executor::{QueryOutcome, RefineBudget, ServeConfig, ShardedServer};
-pub use stats::{LatencyStats, ServeReport};
+pub use executor::{QueryOutcome, RefineBudget, ServeConfig, ShardedServer, SharedAnswerCache};
+pub use stats::{LatencyStats, ServeReport, ServeStage, ServeTracePoint};

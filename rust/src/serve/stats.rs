@@ -44,6 +44,37 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     sorted[idx]
 }
 
+/// Which response a per-request trace checkpoint describes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ServeStage {
+    /// The always-delivered aggregated-only answer (stage 1).
+    Initial,
+    /// The post-refinement answer (stage 2 ran on this request).
+    Refined,
+    /// A hot-query cache hit replaying a previously computed final
+    /// response at zero compute.
+    CacheHit,
+}
+
+/// One per-request anytime checkpoint — the serving analogue of the
+/// batch trace's [`crate::mapreduce::metrics::TracePoint`]: when a
+/// response became available and what it was worth. Each
+/// [`crate::serve::QueryOutcome`] carries its checkpoints in order
+/// (initial, then post-refinement when stage 2 ran), so anytime
+/// curves can be plotted per query class by grouping outcomes.
+#[derive(Clone, Copy, Debug)]
+pub struct ServeTracePoint {
+    /// Which response this checkpoint describes.
+    pub stage: ServeStage,
+    /// Seconds from batch dispatch to this response (0 on cache hits).
+    pub wall_s: f64,
+    /// Per-query accuracy at this checkpoint (ground truth
+    /// permitting).
+    pub accuracy: Option<f64>,
+    /// Buckets expanded by this checkpoint, summed over shards.
+    pub refined_buckets: usize,
+}
+
 /// One serving run's report: how fast the initial answers landed, how
 /// fast the refined ones did, and what each was worth.
 #[derive(Clone, Debug)]
@@ -76,6 +107,17 @@ pub struct ServeReport {
     pub refined_buckets_mean: f64,
     /// Requests whose initial answer landed after their deadline.
     pub deadline_misses: usize,
+    /// Micro-batches whose refinement was shed (downgraded to
+    /// initial-only) because more than
+    /// [`crate::serve::ServeConfig::shed_queue_depth`] batches were
+    /// pending behind them.
+    pub shed_batches: usize,
+    /// Stage-2 bucket-groups scored across the replay: distinct
+    /// (shard, bucket) pairs expanded per batch, each gathered and
+    /// scored in ONE backend call however many queries shared it. 0
+    /// when no refinement ran (or the model uses the per-query default
+    /// path).
+    pub stage2_bucket_groups: usize,
     /// Hot-query answer-cache hits (requests served at zero compute).
     pub cache_hits: usize,
     /// Answer-cache lookups (cacheable requests seen while the cache

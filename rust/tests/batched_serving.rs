@@ -1,19 +1,25 @@
-//! Block-oriented serving stage 1: the acceptance tests for the
+//! Block-oriented serving stages 1 AND 2: the acceptance tests for the
 //! batched hot path.
 //!
 //! * A counting `ScoreBackend` wrapper asserts serving stage 1 issues
 //!   EXACTLY one backend call per (shard, micro-batch) for all three
-//!   models — the whole point of `answer_initial_block`.
+//!   models — the whole point of `answer_initial_block` — and that
+//!   stage-2 refinement issues EXACTLY one backend call per (shard,
+//!   bucket-group) per batch: however many queries of a batch refine
+//!   the same bucket, its original points are gathered and scored
+//!   once (`refine_block`).
 //! * Batched answers equal per-query answers bit-for-bit on fixed
-//!   seeds (including the Q=1 and empty-batch edge cases, exercised
-//!   both directly and through the executor).
+//!   seeds for both stages (including the Q=1, empty-batch and
+//!   budget-0/budget-all edge cases, exercised both directly and
+//!   through the executor).
 //! * The hot-query answer cache returns byte-identical responses for
 //!   repeated queries, at zero additional backend calls.
 
+use std::collections::BTreeSet;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Arc;
 
-use accurateml::approx::algorithm1::RefineOrder;
+use accurateml::approx::algorithm1::{refine_budget, refinement_order, RefineOrder};
 use accurateml::approx::ProcessingMode;
 use accurateml::apps::kmeans::{KmeansConfig, KmeansRunner};
 use accurateml::data::gaussian::{GaussianMixtureSpec, LabeledPoints};
@@ -205,7 +211,37 @@ fn serve_cfg(batch_size: usize, budget: RefineBudget, cache: usize) -> ServeConf
         deadline_s: 30.0,
         budget,
         cache_capacity: cache,
+        ..ServeConfig::default()
     }
+}
+
+/// Independently derive the number of stage-2 bucket-groups a replay
+/// must score: for every (input-order micro-batch, shard), the union
+/// of the per-query ranked plans under `Fraction(eps)`. This is what
+/// `refine_block` must collapse each batch's rescans into — one
+/// backend call per distinct refined bucket.
+fn expected_stage2_groups<M: ServableModel>(
+    shards: &[Arc<M>],
+    queries: &[M::Query],
+    batch: usize,
+    eps: f64,
+) -> usize {
+    let mut total = 0;
+    for chunk in queries.chunks(batch) {
+        let refs: Vec<&M::Query> = chunk.iter().collect();
+        for shard in shards {
+            let initials = shard.answer_initial_block(&refs);
+            let budget = refine_budget(shard.n_buckets(), eps);
+            let mut buckets = BTreeSet::new();
+            for init in &initials {
+                for b in refinement_order(&init.correlations, budget) {
+                    buckets.insert(b);
+                }
+            }
+            total += buckets.len();
+        }
+    }
+    total
 }
 
 /// 10 queries at batch size 4 = 3 micro-batches (4 + 4 + 2).
@@ -225,8 +261,9 @@ fn knn_stage1_issues_one_backend_call_per_shard_and_batch() {
     let queries = query_log::knn_query_log(&data, N_QUERIES, 7);
     counting.knn_dists_calls.store(0, Ordering::SeqCst);
 
+    // Budget Off isolates stage 1: refinement issues no tasks at all.
     let (outcomes, _) = server
-        .serve(&engine, queries, &serve_cfg(BATCH, RefineBudget::Fraction(0.1), 0))
+        .serve(&engine, queries, &serve_cfg(BATCH, RefineBudget::Off, 0))
         .unwrap();
     assert_eq!(outcomes.len(), N_QUERIES);
     assert_eq!(
@@ -236,6 +273,32 @@ fn knn_stage1_issues_one_backend_call_per_shard_and_batch() {
     );
     assert_eq!(counting.knn_topk_calls.load(Ordering::SeqCst), 0);
     assert_eq!(counting.cf_weights_calls.load(Ordering::SeqCst), 0);
+}
+
+#[test]
+fn knn_stage2_issues_one_backend_call_per_shard_and_bucket_group() {
+    let counting = Arc::new(CountingBackend::default());
+    let backend: Arc<dyn ScoreBackend> = Arc::clone(&counting) as Arc<dyn ScoreBackend>;
+    let data = knn_data();
+    let shards = knn_shards(&data, 3, backend);
+    let n_shards = shards.len();
+    let queries = query_log::knn_query_log(&data, N_QUERIES, 7);
+    let expected = expected_stage2_groups(&shards, &queries, BATCH, 0.1);
+    assert!(expected > 0, "the fixture must actually refine something");
+    let server = ShardedServer::new(shards).unwrap();
+    let engine = Engine::new(2);
+    counting.knn_dists_calls.store(0, Ordering::SeqCst);
+
+    let (outcomes, report) = server
+        .serve(&engine, queries, &serve_cfg(BATCH, RefineBudget::Fraction(0.1), 0))
+        .unwrap();
+    assert_eq!(outcomes.len(), N_QUERIES);
+    assert_eq!(report.stage2_bucket_groups, expected);
+    assert_eq!(
+        counting.knn_dists_calls.load(Ordering::SeqCst),
+        n_shards * N_BATCHES + expected,
+        "stage 1: one call per (shard, batch); stage 2: one per (shard, bucket-group)"
+    );
 }
 
 #[test]
@@ -250,8 +313,9 @@ fn cf_stage1_issues_one_backend_call_per_shard_and_batch() {
     let queries = query_log::cf_query_log(&split, N_QUERIES, 3);
     counting.cf_weights_calls.store(0, Ordering::SeqCst);
 
+    // Budget Off isolates stage 1: refinement issues no tasks at all.
     let (outcomes, _) = server
-        .serve(&engine, queries, &serve_cfg(BATCH, RefineBudget::Fraction(0.1), 0))
+        .serve(&engine, queries, &serve_cfg(BATCH, RefineBudget::Off, 0))
         .unwrap();
     assert_eq!(outcomes.len(), N_QUERIES);
     assert_eq!(
@@ -260,6 +324,32 @@ fn cf_stage1_issues_one_backend_call_per_shard_and_batch() {
         "exactly one cf_weights call per (shard, micro-batch)"
     );
     assert_eq!(counting.knn_dists_calls.load(Ordering::SeqCst), 0);
+}
+
+#[test]
+fn cf_stage2_issues_one_backend_call_per_shard_and_bucket_group() {
+    let counting = Arc::new(CountingBackend::default());
+    let backend: Arc<dyn ScoreBackend> = Arc::clone(&counting) as Arc<dyn ScoreBackend>;
+    let split = cf_split();
+    let shards = cf_shards(&split, backend);
+    let n_shards = shards.len();
+    let queries = query_log::cf_query_log(&split, N_QUERIES, 3);
+    let expected = expected_stage2_groups(&shards, &queries, BATCH, 0.1);
+    assert!(expected > 0, "the fixture must actually refine something");
+    let server = ShardedServer::new(shards).unwrap();
+    let engine = Engine::new(2);
+    counting.cf_weights_calls.store(0, Ordering::SeqCst);
+
+    let (outcomes, report) = server
+        .serve(&engine, queries, &serve_cfg(BATCH, RefineBudget::Fraction(0.1), 0))
+        .unwrap();
+    assert_eq!(outcomes.len(), N_QUERIES);
+    assert_eq!(report.stage2_bucket_groups, expected);
+    assert_eq!(
+        counting.cf_weights_calls.load(Ordering::SeqCst),
+        n_shards * N_BATCHES + expected,
+        "stage 1: one call per (shard, batch); stage 2: one per (shard, bucket-group)"
+    );
 }
 
 #[test]
@@ -273,14 +363,40 @@ fn kmeans_stage1_issues_one_backend_call_per_shard_and_batch() {
     let queries = query_log::kmeans_query_log(&points, N_QUERIES, 7);
     counting.knn_dists_calls.store(0, Ordering::SeqCst);
 
+    // Budget Off isolates stage 1: refinement issues no tasks at all.
     let (outcomes, _) = server
-        .serve(&engine, queries, &serve_cfg(BATCH, RefineBudget::Fraction(0.1), 0))
+        .serve(&engine, queries, &serve_cfg(BATCH, RefineBudget::Off, 0))
         .unwrap();
     assert_eq!(outcomes.len(), N_QUERIES);
     assert_eq!(
         counting.knn_dists_calls.load(Ordering::SeqCst),
         n_shards * N_BATCHES,
         "exactly one knn_dists call per (shard, micro-batch)"
+    );
+}
+
+#[test]
+fn kmeans_stage2_issues_one_backend_call_per_shard_and_bucket_group() {
+    let counting = Arc::new(CountingBackend::default());
+    let backend: Arc<dyn ScoreBackend> = Arc::clone(&counting) as Arc<dyn ScoreBackend>;
+    let (shards, points) = kmeans_setup(backend);
+    let n_shards = shards.len();
+    let queries = query_log::kmeans_query_log(&points, N_QUERIES, 7);
+    let expected = expected_stage2_groups(&shards, &queries, BATCH, 0.1);
+    assert!(expected > 0, "the fixture must actually refine something");
+    let server = ShardedServer::new(shards).unwrap();
+    let engine = Engine::new(2);
+    counting.knn_dists_calls.store(0, Ordering::SeqCst);
+
+    let (outcomes, report) = server
+        .serve(&engine, queries, &serve_cfg(BATCH, RefineBudget::Fraction(0.1), 0))
+        .unwrap();
+    assert_eq!(outcomes.len(), N_QUERIES);
+    assert_eq!(report.stage2_bucket_groups, expected);
+    assert_eq!(
+        counting.knn_dists_calls.load(Ordering::SeqCst),
+        n_shards * N_BATCHES + expected,
+        "stage 1: one call per (shard, batch); stage 2: one per (shard, bucket-group)"
     );
 }
 
@@ -337,6 +453,58 @@ fn batched_answers_equal_per_query_answers() {
 }
 
 #[test]
+fn batched_stage2_equals_scalar_stage2() {
+    // `refine_block` must be invisible in the answers: for every model,
+    // every budget shape (0, partial, all, per-query mix), the batched
+    // bucket-grouped rescan equals the scalar per-query `refine` loop
+    // bit-for-bit on the native backend.
+    fn check<M: ServableModel>(shards: &[Arc<M>], queries: &[M::Query])
+    where
+        M::Answer: PartialEq + std::fmt::Debug,
+    {
+        let refs: Vec<&M::Query> = queries.iter().collect();
+        for shard in shards {
+            let initials = shard.answer_initial_block(&refs);
+            let n_b = shard.n_buckets();
+            let mixed: Vec<usize> = (0..refs.len()).map(|i| i % (n_b + 2)).collect();
+            for budgets in
+                [vec![0; refs.len()], vec![2; refs.len()], vec![n_b; refs.len()], mixed]
+            {
+                let block = shard.refine_block(&refs, &initials, &budgets);
+                assert_eq!(block.answers.len(), refs.len());
+                for i in 0..refs.len() {
+                    assert_eq!(
+                        block.answers[i],
+                        shard.refine(refs[i], &initials[i], budgets[i]),
+                        "query {i} budget {}",
+                        budgets[i]
+                    );
+                }
+            }
+            // Q=1 and the empty batch.
+            let one = shard.refine_block(&refs[..1], &initials[..1], &[1]);
+            assert_eq!(one.answers[0], shard.refine(refs[0], &initials[0], 1));
+            let empty = shard.refine_block(&[], &[], &[]);
+            assert!(empty.answers.is_empty());
+            assert_eq!(empty.bucket_groups, 0);
+        }
+    }
+
+    let data = knn_data();
+    check(
+        &knn_shards(&data, 2, Arc::new(NativeBackend)),
+        &query_log::knn_query_log(&data, 13, 7),
+    );
+    let split = cf_split();
+    check(
+        &cf_shards(&split, Arc::new(NativeBackend)),
+        &query_log::cf_query_log(&split, 13, 3),
+    );
+    let (shards, points) = kmeans_setup(Arc::new(NativeBackend));
+    check(&shards, &query_log::kmeans_query_log(&points, 13, 7));
+}
+
+#[test]
 fn batch_size_one_serves_the_same_responses_as_batched() {
     // The executor's batched path must be invisible in the outputs:
     // replaying the same log at Q=1 and Q=8 yields identical responses.
@@ -363,6 +531,9 @@ fn cache_returns_byte_identical_answers_for_repeats_at_zero_backend_cost() {
     let n_test = data.test.rows();
     let shards = knn_shards(&data, 2, backend);
     let n_shards = shards.len();
+    // Under `All`, every query refines every bucket, so the one
+    // micro-batch rescans exactly n_buckets bucket-groups per shard.
+    let total_buckets: usize = shards.iter().map(|s| s.n_buckets()).sum();
     let server = ShardedServer::new(shards).unwrap();
     let engine = Engine::new(2);
 
@@ -393,10 +564,13 @@ fn cache_returns_byte_identical_answers_for_repeats_at_zero_backend_cost() {
         );
         assert_eq!(repeat.refined_buckets, 0, "zero compute on a hit");
     }
-    // Only the first cycle (one micro-batch) touched the backend.
+    // Only the first cycle (one micro-batch) touched the backend: one
+    // stage-1 call per shard plus one stage-2 call per (shard,
+    // bucket-group) — under `All`, every bucket of every shard.
+    assert_eq!(report.stage2_bucket_groups, total_buckets);
     assert_eq!(
         counting.knn_dists_calls.load(Ordering::SeqCst),
-        n_shards,
+        n_shards + total_buckets,
         "cache hits must not reach the backend"
     );
 }

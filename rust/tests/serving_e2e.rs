@@ -92,6 +92,7 @@ fn knn_serving_initial_always_lands_and_refinement_never_hurts() {
                 deadline_s: GENEROUS_DEADLINE_S,
                 budget: RefineBudget::All,
                 cache_capacity: 0,
+                ..ServeConfig::default()
             },
         )
         .unwrap();
@@ -146,6 +147,7 @@ fn knn_full_refinement_matches_the_batch_job() {
                 deadline_s: GENEROUS_DEADLINE_S,
                 budget: RefineBudget::All,
                 cache_capacity: 0,
+                ..ServeConfig::default()
             },
         )
         .unwrap();
@@ -202,6 +204,7 @@ fn cf_serving_refinement_never_raises_rmse() {
                 deadline_s: GENEROUS_DEADLINE_S,
                 budget: RefineBudget::All,
                 cache_capacity: 0,
+                ..ServeConfig::default()
             },
         )
         .unwrap();
@@ -304,6 +307,7 @@ fn kmeans_serving_refinement_is_monotone_per_query() {
                 deadline_s: GENEROUS_DEADLINE_S,
                 budget: RefineBudget::Fraction(0.2),
                 cache_capacity: 0,
+                ..ServeConfig::default()
             },
         )
         .unwrap();
