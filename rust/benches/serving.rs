@@ -22,6 +22,15 @@
 //! grouped backend rescans); the ratio lands in the JSON as
 //! `refine_batched_speedup` per app.
 //!
+//! Each app additionally runs a **live-refresh replay**: 25% of the
+//! training data is held back, ingested as deltas every quarter of the
+//! log, folded into the shards by background rebuilds and hot-swapped
+//! in — the JSON's per-app `refresh` entry reports
+//! `refresh_swap_count` and `serve_during_rebuild_p99_s` (p99 of the
+//! queries served while a rebuild was competing for the pool) next to
+//! the static p99. The batched replay's per-class anytime curves land
+//! under `per_class`.
+//!
 //! A machine-readable `BENCH_serving.json` is written to the working
 //! directory (path printed at the end; CI uploads it as a workflow
 //! artifact).
@@ -40,7 +49,9 @@ use accurateml::approx::algorithm1::refine_budget;
 use accurateml::coordinator::{Scale, Workbench};
 use accurateml::mapreduce::engine::Engine;
 use accurateml::model::ServableModel;
-use accurateml::serve::{query_log, RefineBudget, ServeConfig, ServeReport, ShardedServer};
+use accurateml::serve::{
+    query_log, RefineBudget, RefreshPolicy, ServeConfig, ServeReport, ShardedServer,
+};
 use accurateml::util::json::Json;
 use accurateml::util::table::{f, Table};
 use accurateml::util::timer::Stopwatch;
@@ -148,16 +159,78 @@ fn run_json(m: &Measured, with_cache: bool) -> Json {
     Json::obj(pairs)
 }
 
+/// Per-class anytime curves of one replay, as a JSON array.
+fn per_class_json(report: &ServeReport) -> Json {
+    Json::Arr(
+        report
+            .per_class
+            .iter()
+            .map(|c| {
+                Json::obj(vec![
+                    ("class", c.class.as_str().into()),
+                    ("queries", c.queries.into()),
+                    ("cache_hits", c.cache_hits.into()),
+                    (
+                        "curve",
+                        Json::Arr(
+                            c.curve
+                                .iter()
+                                .map(|p| {
+                                    Json::obj(vec![
+                                        ("stage", p.stage.name().into()),
+                                        ("queries", p.queries.into()),
+                                        ("mean_wall_s", p.mean_wall_s.into()),
+                                        (
+                                            "mean_accuracy",
+                                            p.mean_accuracy.map(Json::from).unwrap_or(Json::Null),
+                                        ),
+                                        (
+                                            "mean_refined_buckets",
+                                            p.mean_refined_buckets.into(),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// The live-refresh replay's JSON entry: swap/staleness counters and
+/// the p99 of queries served while a rebuild was in flight.
+fn refresh_json(report: &ServeReport) -> Json {
+    let mut pairs: Vec<(&str, Json)> = vec![
+        ("refresh_swap_count", report.refresh_swap_count.into()),
+        ("refresh_generation", (report.refresh_generation as usize).into()),
+        ("stale_queries", report.stale_queries.into()),
+        (
+            "serve_during_rebuild_p99_s",
+            report.during_rebuild.p99_s.into(),
+        ),
+        ("p99_ms", (report.total.p99_s * 1e3).into()),
+    ];
+    if let Some(a) = report.refined_accuracy {
+        pairs.push(("accuracy_refined", a.into()));
+    }
+    Json::obj(pairs)
+}
+
 /// Replay one app under all three configurations, appending table rows
 /// and the app's JSON entry. `replay` owns the (server, query-log)
 /// specifics; everything else is shared shape. `refine` is the app's
-/// (scalar_s, batched_s) stage-2 measurement from [`measure_refine`].
+/// (scalar_s, batched_s) stage-2 measurement from [`measure_refine`];
+/// `refresh` is the app's live-refresh replay report (measured by the
+/// caller against its own freshly built shards).
 fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
     t: &mut Table,
     apps_json: &mut Vec<Json>,
     cfgs: &Cfgs,
     app: &str,
     refine: (f64, f64),
+    refresh: &ServeReport,
     mut replay: F,
 ) {
     let per_query = replay(&cfgs.per_query);
@@ -179,6 +252,8 @@ fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
             "refine_batched_speedup",
             (refine_scalar_s / refine_batched_s.max(1e-9)).into(),
         ),
+        ("refresh", refresh_json(refresh)),
+        ("per_class", per_class_json(&batched.report)),
     ];
     if cfgs.cache_capacity > 0 {
         let cached = replay(&cfgs.cached);
@@ -190,6 +265,15 @@ fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
         refine_scalar_s,
         refine_batched_s,
         refine_scalar_s / refine_batched_s.max(1e-9)
+    );
+    println!(
+        "{app} live refresh: {} swap(s) -> generation {}, p99 during rebuild {:.3}ms \
+({} stale quer(ies)) vs static p99 {:.3}ms",
+        refresh.refresh_swap_count,
+        refresh.refresh_generation,
+        refresh.during_rebuild.p99_s * 1e3,
+        refresh.stale_queries,
+        batched.report.total.p99_s * 1e3
     );
     apps_json.push(Json::obj(pairs));
 }
@@ -225,6 +309,16 @@ fn main() {
         },
         cache_capacity,
     };
+    // Live-refresh replay: hold back 25% of the training data as the
+    // ingestion reserve and run a refresh cycle (delta ingestion +
+    // background rebuild + atomic hot-swap) every quarter of the log.
+    let refresh_cfg = ServeConfig {
+        refresh: RefreshPolicy {
+            every: (n_queries / 4).max(1),
+        },
+        ..batched
+    };
+    let delta_frac = 0.25;
 
     let mut t = Table::new(
         &format!("serving throughput ({scale:?} scale, {n_queries} queries)"),
@@ -243,12 +337,16 @@ fn main() {
     let mut apps_json: Vec<Json> = Vec::new();
 
     // kNN: build shards untimed, measure stage-2 scalar-vs-batched on
-    // them, then replay under each config.
+    // them, then replay under each config (the refresh replay builds
+    // its own base shards over the non-reserve data).
     let shards = wb.knn_shards(10.0, 5).expect("knn shards");
     let refine_queries = query_log::knn_query_log(&wb.knn_data, refine_batch, wb.config.seed);
     let refine = measure_refine(&shards, &refine_queries, refine_eps, refine_reps);
+    let refresh = wb
+        .serve_knn_refresh(n_queries, 5, 10.0, &refresh_cfg, delta_frac)
+        .expect("knn refresh replay");
     let server = ShardedServer::new(shards).expect("server");
-    bench_app(&mut t, &mut apps_json, &cfgs, "knn", refine, |cfg| {
+    bench_app(&mut t, &mut apps_json, &cfgs, "knn", refine, &refresh, |cfg| {
         let queries = query_log::knn_query_log(&wb.knn_data, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });
@@ -258,8 +356,11 @@ fn main() {
     let shards = wb.cf_shards(10.0).expect("cf shards");
     let refine_queries = query_log::cf_query_log(&wb.cf_split, refine_batch, wb.config.seed);
     let refine = measure_refine(&shards, &refine_queries, refine_eps, refine_reps);
+    let refresh = wb
+        .serve_cf_refresh(n_queries, 10.0, &refresh_cfg, delta_frac)
+        .expect("cf refresh replay");
     let server = ShardedServer::new(shards).expect("server");
-    bench_app(&mut t, &mut apps_json, &cfgs, "cf", refine, |cfg| {
+    bench_app(&mut t, &mut apps_json, &cfgs, "cf", refine, &refresh, |cfg| {
         let queries = query_log::cf_query_log(&wb.cf_split, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });
@@ -269,8 +370,11 @@ fn main() {
     let (shards, points) = wb.kmeans_shards(20.0).expect("kmeans shards");
     let refine_queries = query_log::kmeans_query_log(&points, refine_batch, wb.config.seed);
     let refine = measure_refine(&shards, &refine_queries, refine_eps, refine_reps);
+    let refresh = wb
+        .serve_kmeans_refresh(n_queries, 20.0, &refresh_cfg, delta_frac)
+        .expect("kmeans refresh replay");
     let server = ShardedServer::new(shards).expect("server");
-    bench_app(&mut t, &mut apps_json, &cfgs, "kmeans", refine, |cfg| {
+    bench_app(&mut t, &mut apps_json, &cfgs, "kmeans", refine, &refresh, |cfg| {
         let queries = query_log::kmeans_query_log(&points, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });
@@ -288,6 +392,8 @@ kmeans negative squared representative distance)"
         ("backend", wb.backend.name().into()),
         ("batch_size", cfgs.batched.batch_size.into()),
         ("cache_capacity", cache_capacity.into()),
+        ("refresh_every", refresh_cfg.refresh.every.into()),
+        ("delta_frac", delta_frac.into()),
         ("apps", Json::Arr(apps_json)),
     ]);
     let path = std::path::Path::new("BENCH_serving.json");

@@ -82,9 +82,18 @@ impl AggregatedPoints {
 /// Majority label among `idx` rows (ties break to the smaller label, so
 /// results are deterministic).
 fn majority_label(labels: &[u32], idx: &[usize]) -> u32 {
+    majority_label_of(idx.iter().map(|&i| labels[i]))
+}
+
+/// Majority over a stream of member labels — the one tie-break rule
+/// (ties go to the smaller label) shared by the batch aggregation above
+/// and the incremental delta merge
+/// ([`crate::refresh::Refreshable::merge_deltas`] for kNN), so the two
+/// paths cannot drift.
+pub fn majority_label_of(members: impl Iterator<Item = u32>) -> u32 {
     let mut counts: std::collections::BTreeMap<u32, usize> = std::collections::BTreeMap::new();
-    for &i in idx {
-        *counts.entry(labels[i]).or_insert(0) += 1;
+    for l in members {
+        *counts.entry(l).or_insert(0) += 1;
     }
     counts
         .into_iter()

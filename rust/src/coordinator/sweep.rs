@@ -1,7 +1,7 @@
 //! The workbench: datasets + engine + backend bundled, with runners for
 //! every (app × mode) combination and the paper's sweep grids.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::approx::algorithm1::RefineOrder;
 use crate::approx::ProcessingMode;
@@ -18,9 +18,12 @@ use crate::lsh::bucketizer::Grouping;
 use crate::mapreduce::engine::Engine;
 use crate::mapreduce::metrics::{JobMetrics, TaskMetrics};
 use crate::model::{CfModel, KmeansModel, KnnModel};
+use crate::refresh::{
+    slice_deltas, DeltaLog, LabeledPoint, ModelRegistry, Rebuilder, RefreshDriver, Refreshable,
+};
 use crate::runtime::backend::{FallbackBackend, NativeBackend, PjrtBackend, ScoreBackend};
 use crate::runtime::service::PjrtService;
-use crate::serve::{query_log, ServeConfig, ServeReport, ShardedServer};
+use crate::serve::{query_log, AnswerCache, ServeConfig, ServeReport, ShardedServer};
 
 /// The paper's sweep grid (§IV-B): compression ratios × refinement
 /// thresholds.
@@ -431,6 +434,174 @@ impl Workbench {
         Ok(report)
     }
 
+    /// How many training rows the *base* shards are built from when a
+    /// `delta_frac` fraction is held back as the live-ingestion
+    /// reserve (at least one row per partition so no shard is empty).
+    fn base_rows(&self, n: usize, delta_frac: f64, partitions: usize) -> usize {
+        let frac = delta_frac.clamp(0.0, 0.9);
+        ((n as f64 * (1.0 - frac)).round() as usize).clamp(partitions.max(1).min(n), n)
+    }
+
+    /// Shared refresh-replay harness: wrap the base shards in an
+    /// epoch-versioned registry with an attached answer cache, cut the
+    /// delta reserve into one ingestion slice per refresh cycle
+    /// (`cfg.refresh.every` queries apart), and replay the log with
+    /// background rebuilds + atomic hot-swaps interleaved.
+    fn serve_refresh_replay<M: Refreshable>(
+        &self,
+        shards: Vec<Arc<M>>,
+        queries: Vec<M::Query>,
+        cfg: &ServeConfig,
+        deltas: Vec<M::Delta>,
+    ) -> Result<ServeReport> {
+        let registry = Arc::new(ModelRegistry::new(shards)?);
+        let cache = Arc::new(Mutex::new(AnswerCache::new(cfg.cache_capacity)));
+        registry.attach_cache(Arc::clone(&cache));
+        let log = Arc::new(DeltaLog::new(registry.n_shards()));
+        let rebuilder = Rebuilder::new(Arc::clone(&registry), log);
+        let cycles = if cfg.refresh.every > 0 {
+            queries.len().saturating_sub(1) / cfg.refresh.every
+        } else {
+            0
+        };
+        let mut driver = RefreshDriver::new(rebuilder, slice_deltas(deltas, cycles));
+        let server = ShardedServer::with_registry(registry);
+        let (_, report) =
+            server.serve_with_refresh(&self.engine, queries, cfg, &cache, &mut driver)?;
+        Ok(report)
+    }
+
+    /// Replay `n_queries` kNN queries with live refresh: shards are
+    /// built on the first `1 - delta_frac` of the training rows, the
+    /// held-back remainder is ingested as labeled-point deltas every
+    /// `cfg.refresh.every` queries, and background rebuilds hot-swap
+    /// refreshed shards in without dropping in-flight queries.
+    pub fn serve_knn_refresh(
+        &self,
+        n_queries: usize,
+        k: usize,
+        compression_ratio: f64,
+        cfg: &ServeConfig,
+        delta_frac: f64,
+    ) -> Result<ServeReport> {
+        let n = self.knn_data.train.rows();
+        let base = self.base_rows(n, delta_frac, self.config.n_partitions);
+        let mut shards = Vec::new();
+        for range in split_rows(base, self.config.n_partitions) {
+            if range.is_empty() {
+                continue;
+            }
+            let mut tm = TaskMetrics::default();
+            shards.push(Arc::new(KnnModel::build(
+                &self.knn_data.train,
+                &self.knn_data.train_labels,
+                range,
+                k,
+                compression_ratio,
+                Grouping::Lsh,
+                RefineOrder::Correlation,
+                self.config.seed,
+                Arc::clone(&self.backend),
+                &mut tm,
+            )?));
+        }
+        let deltas: Vec<LabeledPoint> = (base..n)
+            .map(|r| LabeledPoint {
+                features: self.knn_data.train.row(r).to_vec(),
+                label: self.knn_data.train_labels[r],
+            })
+            .collect();
+        let queries = query_log::knn_query_log(&self.knn_data, n_queries, self.config.seed);
+        self.serve_refresh_replay(shards, queries, cfg, deltas)
+    }
+
+    /// CF variant of [`Workbench::serve_knn_refresh`]: the held-back
+    /// training *users* are the ingestion reserve (their global row
+    /// ids are the deltas; rating rows come from the shared split).
+    pub fn serve_cf_refresh(
+        &self,
+        n_queries: usize,
+        compression_ratio: f64,
+        cfg: &ServeConfig,
+        delta_frac: f64,
+    ) -> Result<ServeReport> {
+        let n = self.cf_split.train.n_users();
+        let base = self.base_rows(n, delta_frac, self.config.cf_partitions);
+        let user_means = crate::model::cf::user_means(&self.cf_split);
+        let mut shards = Vec::new();
+        for range in split_rows(base, self.config.cf_partitions) {
+            if range.is_empty() {
+                continue;
+            }
+            let mut tm = TaskMetrics::default();
+            shards.push(Arc::new(CfModel::build(
+                &self.cf_split,
+                &user_means,
+                range,
+                compression_ratio,
+                Grouping::Lsh,
+                RefineOrder::Correlation,
+                self.config.seed,
+                Arc::clone(&self.backend),
+                &mut tm,
+            )?));
+        }
+        let deltas: Vec<u32> = (base..n).map(|u| u as u32).collect();
+        let queries = query_log::cf_query_log(&self.cf_split, n_queries, self.config.seed);
+        self.serve_refresh_replay(shards, queries, cfg, deltas)
+    }
+
+    /// k-means variant of [`Workbench::serve_knn_refresh`]: centroids
+    /// are trained by an exact run over the full point set (training is
+    /// not refreshed — only the shards' aggregated buckets grow), base
+    /// shards cover the first `1 - delta_frac` of the points, and the
+    /// held-back points are the ingestion reserve.
+    pub fn serve_kmeans_refresh(
+        &self,
+        n_queries: usize,
+        compression_ratio: f64,
+        cfg: &ServeConfig,
+        delta_frac: f64,
+    ) -> Result<ServeReport> {
+        let points = Arc::new(self.knn_data.train.clone());
+        let runner = KmeansRunner::with_backend(
+            KmeansConfig {
+                n_clusters: 16,
+                n_iterations: 5,
+                n_partitions: self.config.n_partitions,
+                mode: ProcessingMode::Exact,
+                seed: self.config.seed,
+                ..Default::default()
+            },
+            Arc::clone(&points),
+            Arc::clone(&self.backend),
+        )?;
+        let (trained, _) = runner.run(&self.engine)?;
+        let n = points.rows();
+        let base = self.base_rows(n, delta_frac, self.config.n_partitions);
+        let mut shards = Vec::new();
+        for range in split_rows(base, self.config.n_partitions) {
+            if range.is_empty() {
+                continue;
+            }
+            let mut tm = TaskMetrics::default();
+            shards.push(Arc::new(KmeansModel::build(
+                &points,
+                range,
+                &trained.centroids,
+                compression_ratio,
+                Grouping::Lsh,
+                RefineOrder::Correlation,
+                self.config.seed,
+                Arc::clone(&self.backend),
+                &mut tm,
+            )?));
+        }
+        let deltas: Vec<Vec<f32>> = (base..n).map(|r| points.row(r).to_vec()).collect();
+        let queries = query_log::kmeans_query_log(&points, n_queries, self.config.seed);
+        self.serve_refresh_replay(shards, queries, cfg, deltas)
+    }
+
     /// Sampling run whose simulated time matches `target_sim_s` (the
     /// §IV-C protocol: "the same job execution times are permitted").
     /// Calibrates the keep-ratio from the exact run's time, with one
@@ -548,6 +719,28 @@ mod tests {
         assert!(report.refined_accuracy.is_some());
         assert_eq!(report.deadline_misses, 0);
         assert_eq!(report.cache_lookups, 0, "cache disabled");
+    }
+
+    #[test]
+    fn refresh_replay_swaps_without_dropping_queries() {
+        let wb = Workbench::preset(Scale::Small).unwrap();
+        let cfg = ServeConfig {
+            batch_size: 8,
+            deadline_s: 30.0,
+            budget: crate::serve::RefineBudget::Fraction(0.1),
+            cache_capacity: 64,
+            refresh: crate::serve::RefreshPolicy { every: 16 },
+            ..ServeConfig::default()
+        };
+        let report = wb.serve_knn_refresh(64, 5, 10.0, &cfg, 0.3).unwrap();
+        // Every query answered (nothing dropped or rejected), at least
+        // one atomic swap landed, and the registry generation moved.
+        assert_eq!(report.queries, 64);
+        assert!(report.refresh_swap_count >= 1, "no swap: {report:?}");
+        assert!(report.refresh_generation >= 1);
+        assert!(report.initial_accuracy.is_some());
+        assert!(report.refined_accuracy.is_some());
+        assert!(!report.per_class.is_empty(), "kNN queries carry labels");
     }
 
     #[test]

@@ -30,6 +30,10 @@
 //! * [`serve`] — the sharded anytime serving subsystem: request
 //!   batcher, deadline-aware executor over the worker pool, and
 //!   latency/accuracy reporting.
+//! * [`refresh`] — live model refresh: epoch-versioned shard registry,
+//!   delta ingestion log, and background rebuilds with atomic hot-swap
+//!   (aggregation is associative, so a refresh is base ⊕ delta, not a
+//!   rescan).
 //! * [`runtime`] — the PJRT executor: loads `artifacts/*.hlo.txt`
 //!   (AOT-lowered JAX + Pallas graphs) and serves execute requests from
 //!   map tasks on a dedicated device thread.
@@ -47,6 +51,7 @@ pub mod error;
 pub mod lsh;
 pub mod mapreduce;
 pub mod model;
+pub mod refresh;
 pub mod runtime;
 pub mod serve;
 pub mod util;

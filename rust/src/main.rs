@@ -218,7 +218,7 @@ fn run_streaming(
 }
 
 fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
-    use accurateml::serve::{RefineBudget, ServeConfig};
+    use accurateml::serve::{RefineBudget, RefreshPolicy, ServeConfig};
 
     let cmd = common_opts(
         Command::new(
@@ -228,6 +228,11 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
         .opt("app", "knn", "application: knn|cf|kmeans")
         .opt("queries", "1000", "queries to replay")
         .opt("batch", "64", "micro-batch size (queries grouped per shard task)")
+        .opt(
+            "batch-wait-ms",
+            "0",
+            "max milliseconds a partial micro-batch may queue before a time-based flush (0 = size-only)",
+        )
         .opt("cache", "1024", "hot-query answer cache capacity (0 = off)")
         .opt(
             "shed",
@@ -242,7 +247,17 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
         )
         .opt("eps", "0.05", "refinement threshold for --budget eps")
         .opt("ratio", "10", "compression ratio of the shard models")
-        .opt("k", "5", "k for kNN"),
+        .opt("k", "5", "k for kNN")
+        .opt(
+            "refresh-every",
+            "0",
+            "live refresh: queries between delta-ingestion + background-rebuild cycles (0 = static shards)",
+        )
+        .opt(
+            "delta-frac",
+            "0.2",
+            "fraction of the training data held back as the live-ingestion reserve (with --refresh-every)",
+        ),
     );
     let args = cmd.parse(argv)?;
     let wb = workbench(&args)?;
@@ -258,21 +273,31 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
         }
     };
     let shed = args.get_usize("shed")?;
+    let refresh_every = args.get_usize("refresh-every")?;
+    let delta_frac = args.get_f64("delta-frac")?;
     let cfg = ServeConfig {
         batch_size: args.get_usize("batch")?,
         deadline_s: args.get_f64("deadline-ms")? / 1e3,
         budget,
         cache_capacity: args.get_usize("cache")?,
         shed_queue_depth: if shed == 0 { usize::MAX } else { shed },
+        max_batch_wait_s: args.get_f64("batch-wait-ms")? / 1e3,
+        refresh: RefreshPolicy {
+            every: refresh_every,
+        },
     };
     let n = args.get_usize("queries")?;
     let ratio = args.get_f64("ratio")?;
     let app = args.get("app").to_string();
-    let report = match app.as_str() {
-        "knn" => wb.serve_knn(n, args.get_usize("k")?, ratio, &cfg)?,
-        "cf" => wb.serve_cf(n, ratio, &cfg)?,
-        "kmeans" => wb.serve_kmeans(n, ratio, &cfg)?,
-        other => {
+    let live = refresh_every > 0;
+    let report = match (app.as_str(), live) {
+        ("knn", false) => wb.serve_knn(n, args.get_usize("k")?, ratio, &cfg)?,
+        ("knn", true) => wb.serve_knn_refresh(n, args.get_usize("k")?, ratio, &cfg, delta_frac)?,
+        ("cf", false) => wb.serve_cf(n, ratio, &cfg)?,
+        ("cf", true) => wb.serve_cf_refresh(n, ratio, &cfg, delta_frac)?,
+        ("kmeans", false) => wb.serve_kmeans(n, ratio, &cfg)?,
+        ("kmeans", true) => wb.serve_kmeans_refresh(n, ratio, &cfg, delta_frac)?,
+        (other, _) => {
             return Err(accurateml::Error::Config(format!(
                 "unknown app {other:?} (knn|cf|kmeans)"
             )))
@@ -300,6 +325,41 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
             "load shedding: {} batch(es) downgraded to initial-only at queue depth {shed}",
             report.shed_batches
         );
+    }
+    if live {
+        println!(
+            "live refresh: {} atomic swap(s) -> generation {}, {} quer(ies) served during a \
+rebuild (p99 {:.3}ms), reserve {:.0}% ingested every {refresh_every} queries",
+            report.refresh_swap_count,
+            report.refresh_generation,
+            report.stale_queries,
+            report.during_rebuild.p99_s * 1e3,
+            delta_frac * 100.0
+        );
+    }
+    if !report.per_class.is_empty() {
+        println!("per-class anytime curves (mean wall -> mean accuracy):");
+        for c in &report.per_class {
+            let points: Vec<String> = c
+                .curve
+                .iter()
+                .map(|p| {
+                    format!(
+                        "{} {:.3}ms -> {}",
+                        p.stage.name(),
+                        p.mean_wall_s * 1e3,
+                        p.mean_accuracy.map(|a| format!("{a:.4}")).unwrap_or_else(|| "-".into())
+                    )
+                })
+                .collect();
+            println!(
+                "  {} ({} queries, {} cache hit(s)): {}",
+                c.class,
+                c.queries,
+                c.cache_hits,
+                points.join(", ")
+            );
+        }
     }
     if cfg.cache_capacity > 0 {
         println!(

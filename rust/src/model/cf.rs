@@ -338,6 +338,121 @@ impl CfModel {
         }
         (blocks, grouped)
     }
+
+    /// Fold new training users (global row ids of `split.train`) into a
+    /// candidate replacement shard (`self` is untouched — it may be
+    /// serving pinned queries). Each user joins the bucket whose
+    /// aggregated user carries the highest Pearson weight against the
+    /// user's centered row (strict-`>` first-max over finite weights;
+    /// bucket 0 when none is finite): the bucket's per-item mean
+    /// ratings absorb the user's ratings by running-mean merge in f64,
+    /// the fractional mask is rebuilt over the grown member count, and
+    /// the bucket's centered aggregated row + mean are recomputed.
+    /// Users are absorbed sequentially, so folding a log in one call is
+    /// bit-identical to folding it split across calls.
+    pub fn merge_deltas(&self, deltas: &[u32]) -> Result<CfModel> {
+        use crate::error::Error;
+        let n_users_total = self.split.train.n_users();
+        for &u in deltas {
+            if u as usize >= n_users_total {
+                return Err(Error::Data(format!(
+                    "delta user {u} out of range ({n_users_total} train users)"
+                )));
+            }
+        }
+        if self.agg.is_empty() {
+            return Err(Error::Data("cannot merge deltas into a bucketless shard".into()));
+        }
+        let new_users: Vec<usize> = deltas.iter().map(|&u| u as usize).collect();
+        let (dcu, dmu) = user_block(&self.split, &new_users);
+        let cu = self.cu.vstack(&dcu)?;
+        let mu = self.mu.vstack(&dmu)?;
+        let mut users = self.users.clone();
+        let mut agg = self.agg.clone();
+        let mut cagg = self.cagg.clone();
+        let mut agg_means = self.agg_means.clone();
+        let m = self.cagg.cols();
+        for (i, &u) in new_users.iter().enumerate() {
+            let local = (self.users.len() + i) as u32;
+            let mut best_b = 0usize;
+            let mut best_w = f32::NEG_INFINITY;
+            for b in 0..agg.len() {
+                let w = pearson_pair(dcu.row(i), dmu.row(i), cagg.row(b), agg.mask.row(b));
+                if w.is_finite() && w > best_w {
+                    best_w = w;
+                    best_b = b;
+                }
+            }
+            let b = best_b;
+            let members_old = agg.index[b].len();
+            // Per-item rater counts, recovered from the fractional mask
+            // (cnt/members round-trips exactly at bucket scale: counts
+            // are tiny against f32's 2^24 integer range).
+            let mut cnts: Vec<u32> = (0..m)
+                .map(|it| (agg.mask.get(b, it) as f64 * members_old as f64).round() as u32)
+                .collect();
+            for &it in &self.split.train.rated[u] {
+                let it = it as usize;
+                let r = self.split.train.ratings.get(u, it);
+                let c = cnts[it] as f64;
+                let mean_new = (agg.ratings.get(b, it) as f64 * c + r as f64) / (c + 1.0);
+                agg.ratings.set(b, it, mean_new as f32);
+                cnts[it] += 1;
+            }
+            agg.index[b].push(local);
+            let members_new = (members_old + 1) as f32;
+            for (it, &c) in cnts.iter().enumerate() {
+                agg.mask.set(b, it, if c > 0 { c as f32 / members_new } else { 0.0 });
+            }
+            let (crow, mean) = agg.centered_row(b);
+            cagg.row_mut(b).copy_from_slice(&crow);
+            agg_means[b] = mean;
+            users.push(u);
+        }
+        Ok(CfModel {
+            split: Arc::clone(&self.split),
+            user_means: Arc::clone(&self.user_means),
+            users,
+            cu,
+            mu,
+            agg,
+            cagg,
+            agg_means,
+            refine_order: self.refine_order,
+            backend: Arc::clone(&self.backend),
+        })
+    }
+}
+
+impl crate::refresh::Refreshable for CfModel {
+    type Delta = u32;
+
+    fn merge_deltas(&self, deltas: &[u32]) -> Result<CfModel> {
+        CfModel::merge_deltas(self, deltas)
+    }
+
+    fn validate(&self) -> Result<()> {
+        use crate::error::Error;
+        if self.agg.is_empty() {
+            return Err(Error::Data("candidate CF shard has no buckets".into()));
+        }
+        if let Some(b) = self.agg.index.iter().position(Vec::is_empty) {
+            return Err(Error::Data(format!("candidate CF shard bucket {b} is empty")));
+        }
+        let originals: usize = self.agg.index.iter().map(Vec::len).sum();
+        if originals != self.users.len()
+            || self.users.len() != self.cu.rows()
+            || self.users.len() != self.mu.rows()
+        {
+            return Err(Error::Data("candidate CF shard index accounting broken".into()));
+        }
+        if !self.cagg.as_slice().iter().all(|v| v.is_finite())
+            || !self.agg_means.iter().all(|v| v.is_finite())
+        {
+            return Err(Error::Data("candidate CF shard has non-finite aggregates".into()));
+        }
+        Ok(())
+    }
 }
 
 impl ServableModel for CfModel {
@@ -513,6 +628,20 @@ impl ServableModel for CfModel {
         p.clamp(1.0, 5.0)
     }
 
+    fn query_class(&self, query: &Self::Query, _response: &Self::Response) -> Option<String> {
+        // User-activity bands by rated-item count: light/medium/heavy
+        // tails behave very differently under aggregated-only answers.
+        let rated = query.mu.iter().filter(|&&v| v > 0.0).count();
+        let band = if rated < 8 {
+            "light"
+        } else if rated < 32 {
+            "medium"
+        } else {
+            "heavy"
+        };
+        Some(format!("activity:{band}"))
+    }
+
     fn accuracy(&self, query: &Self::Query, response: &Self::Response) -> Option<f64> {
         query.actual.map(|a| {
             let d = (*response - a) as f64;
@@ -666,6 +795,47 @@ mod tests {
                 "query {idx}: refined {refined:?} vs exact {exact:?}"
             );
         }
+    }
+
+    #[test]
+    fn merge_deltas_is_batch_associative_and_validates() {
+        use crate::refresh::Refreshable;
+        let (split, user_means, _) = setup();
+        // Base shard over the first 150 users; the held-back 50 are the
+        // ingestion reserve.
+        let base = CfModel::build(
+            &split,
+            &user_means,
+            RowRange { start: 0, end: 150 },
+            10.0,
+            Grouping::Lsh,
+            RefineOrder::Correlation,
+            3,
+            Arc::new(crate::runtime::backend::NativeBackend),
+            &mut TaskMetrics::default(),
+        )
+        .unwrap();
+        let deltas: Vec<u32> = (150..200).collect();
+        let one_shot = base.merge_deltas(&deltas).unwrap();
+        let stepped = base
+            .merge_deltas(&deltas[..20])
+            .unwrap()
+            .merge_deltas(&deltas[20..])
+            .unwrap();
+        assert_eq!(one_shot.agg.ratings, stepped.agg.ratings);
+        assert_eq!(one_shot.agg.mask, stepped.agg.mask);
+        assert_eq!(one_shot.agg.index, stepped.agg.index);
+        assert_eq!(one_shot.cagg, stepped.cagg);
+        assert_eq!(one_shot.agg_means, stepped.agg_means);
+        assert_eq!(one_shot.users, stepped.users);
+        assert_eq!(one_shot.users.len(), 200);
+        Refreshable::validate(&one_shot).unwrap();
+        // Out-of-range users are rejected.
+        assert!(base.merge_deltas(&[200]).is_err());
+        // The merged shard answers queries over its grown neighborhood.
+        let q = query_for(&split, 0, 1);
+        let init = one_shot.answer_initial(&q);
+        assert_eq!(init.correlations.len(), one_shot.n_buckets());
     }
 
     #[test]

@@ -56,6 +56,29 @@ pub fn argmin_row(row: &[f32]) -> (usize, f32) {
     (c, best)
 }
 
+/// Route `point` into its nearest bucket center (the [`nearest_centroid`]
+/// strict-`<` first-min rule), fold it into that bucket's running mean
+/// — weighted-centroid merge `(c·n + x)/(n + 1)` in f64 — and record
+/// `local` in the bucket's index file. Returns the chosen bucket. The
+/// ONE incremental-aggregation step shared by the kNN and k-means
+/// [`crate::refresh::Refreshable::merge_deltas`] constructors, so their
+/// routing/merge arithmetic cannot drift apart.
+pub(crate) fn absorb_point(
+    centers: &mut Matrix,
+    index: &mut IndexFile,
+    point: &[f32],
+    local: u32,
+) -> usize {
+    let b = nearest_centroid(centers, point).0;
+    let n = index[b].len() as f64;
+    let row = centers.row_mut(b);
+    for (j, &x) in point.iter().enumerate() {
+        row[j] = ((row[j] as f64 * n + x as f64) / (n + 1.0)) as f32;
+    }
+    index[b].push(local);
+    b
+}
+
 /// Nearest centroid of `p`: (index, distance, second-best distance).
 /// The margin `d1 - d2` is the batch job's boundary-bucket correlation.
 pub fn nearest_centroid(centroids: &Matrix, p: &[f32]) -> (usize, f32, f32) {
@@ -112,6 +135,9 @@ pub struct KmeansModel {
     points: Matrix,
     centers: Matrix,
     index: IndexFile,
+    /// The trained k-means centroids (kept so delta ingestion can
+    /// re-assign moved bucket centers and classify new points).
+    centroids: Matrix,
     point_cluster: Vec<u32>,
     center_cluster: Vec<u32>,
     refine_order: RefineOrder,
@@ -150,11 +176,103 @@ impl KmeansModel {
             points: part,
             centers,
             index,
+            centroids: centroids.clone(),
             point_cluster,
             center_cluster,
             refine_order,
             backend,
         })
+    }
+
+    /// The aggregated bucket centers — read-only, for the refresh
+    /// tests' bit-identity checks.
+    pub fn centers(&self) -> &Matrix {
+        &self.centers
+    }
+
+    /// Bucket → original-point index file.
+    pub fn bucket_index(&self) -> &IndexFile {
+        &self.index
+    }
+
+    /// Fold new points into a candidate replacement shard (`self` is
+    /// untouched — it may be serving pinned queries). Each point joins
+    /// its nearest aggregated bucket center (the shared
+    /// [`nearest_centroid`] strict-`<` first-min rule): the
+    /// center absorbs it by weighted-centroid merge `(c·n + x)/(n + 1)`
+    /// in f64, the index file gains the new row, the moved center is
+    /// re-assigned under the trained centroids, and the point's own
+    /// cluster is classified. Points are absorbed sequentially, so
+    /// folding a log in one call is bit-identical to folding it split
+    /// across calls.
+    pub fn merge_deltas(&self, deltas: &[Vec<f32>]) -> Result<KmeansModel> {
+        use crate::error::Error;
+        let d = self.points.cols();
+        for p in deltas {
+            if p.len() != d {
+                return Err(Error::Data(format!(
+                    "delta point dim {} != shard dim {d}",
+                    p.len()
+                )));
+            }
+        }
+        if self.index.is_empty() {
+            return Err(Error::Data("cannot merge deltas into a bucketless shard".into()));
+        }
+        let mut dm = Matrix::zeros(deltas.len(), d);
+        for (i, p) in deltas.iter().enumerate() {
+            dm.row_mut(i).copy_from_slice(p);
+        }
+        let points = self.points.vstack(&dm)?;
+        let mut centers = self.centers.clone();
+        let mut index = self.index.clone();
+        let mut point_cluster = self.point_cluster.clone();
+        let mut center_cluster = self.center_cluster.clone();
+        for (i, p) in deltas.iter().enumerate() {
+            let local = (self.points.rows() + i) as u32;
+            let b = absorb_point(&mut centers, &mut index, p, local);
+            center_cluster[b] = nearest_centroid(&self.centroids, centers.row(b)).0 as u32;
+            point_cluster.push(nearest_centroid(&self.centroids, p).0 as u32);
+        }
+        Ok(KmeansModel {
+            points,
+            centers,
+            index,
+            centroids: self.centroids.clone(),
+            point_cluster,
+            center_cluster,
+            refine_order: self.refine_order,
+            backend: Arc::clone(&self.backend),
+        })
+    }
+}
+
+impl crate::refresh::Refreshable for KmeansModel {
+    type Delta = Vec<f32>;
+
+    fn merge_deltas(&self, deltas: &[Vec<f32>]) -> Result<KmeansModel> {
+        KmeansModel::merge_deltas(self, deltas)
+    }
+
+    fn validate(&self) -> Result<()> {
+        use crate::error::Error;
+        if self.index.is_empty() {
+            return Err(Error::Data("candidate k-means shard has no buckets".into()));
+        }
+        if let Some(b) = self.index.iter().position(Vec::is_empty) {
+            return Err(Error::Data(format!("candidate k-means shard bucket {b} is empty")));
+        }
+        let originals: usize = self.index.iter().map(Vec::len).sum();
+        if originals != self.points.rows() || self.point_cluster.len() != self.points.rows() {
+            return Err(Error::Data("candidate k-means shard index accounting broken".into()));
+        }
+        if self.center_cluster.len() != self.centers.rows() {
+            return Err(Error::Data("candidate k-means shard cluster map broken".into()));
+        }
+        if !self.centers.as_slice().iter().all(|v| v.is_finite()) {
+            return Err(Error::Data("candidate k-means shard has non-finite centers".into()));
+        }
+        Ok(())
     }
 }
 
@@ -334,6 +452,12 @@ impl ServableModel for KmeansModel {
         best
     }
 
+    fn query_class(&self, _query: &Self::Query, response: &Self::Response) -> Option<String> {
+        // A request's class is the cluster its delivered representative
+        // belongs to.
+        Some(format!("cluster:{}", response.cluster))
+    }
+
     fn accuracy(&self, _query: &Self::Query, response: &Self::Response) -> Option<f64> {
         Some(-(response.dist as f64))
     }
@@ -470,6 +594,40 @@ mod tests {
         let init = model.answer_initial(&q);
         let refined = model.refine(&q, &init, model.n_buckets());
         assert!(refined.dist <= 1e-12, "dist {}", refined.dist);
+    }
+
+    #[test]
+    fn merge_deltas_is_batch_associative_and_validates() {
+        use crate::refresh::Refreshable;
+        let (model, pts) = shard();
+        let deltas: Vec<Vec<f32>> =
+            (0..24).map(|i| pts.row((i * 13) % pts.rows()).to_vec()).collect();
+        let one_shot = model.merge_deltas(&deltas).unwrap();
+        let stepped = model
+            .merge_deltas(&deltas[..9])
+            .unwrap()
+            .merge_deltas(&deltas[9..])
+            .unwrap();
+        assert_eq!(one_shot.centers, stepped.centers);
+        assert_eq!(one_shot.index, stepped.index);
+        assert_eq!(one_shot.points, stepped.points);
+        assert_eq!(one_shot.point_cluster, stepped.point_cluster);
+        assert_eq!(one_shot.center_cluster, stepped.center_cluster);
+        assert_eq!(
+            ServableModel::n_originals(&one_shot),
+            ServableModel::n_originals(&model) + deltas.len()
+        );
+        Refreshable::validate(&one_shot).unwrap();
+        assert!(model.merge_deltas(&[vec![0.0; 2]]).is_err(), "dim mismatch");
+        // Refinement over the merged shard still finds ingested points
+        // exactly.
+        let q = KmeansQuery {
+            point: deltas[0].clone(),
+            seed: 0,
+        };
+        let init = one_shot.answer_initial(&q);
+        let refined = one_shot.refine(&q, &init, ServableModel::n_buckets(&one_shot));
+        assert!(refined.dist <= 1e-12);
     }
 
     #[test]

@@ -265,6 +265,96 @@ impl KnnModel {
     pub fn n_buckets(&self) -> usize {
         self.agg.len()
     }
+
+    /// The shard's aggregation (centroids + index + bucket labels) —
+    /// read-only, for the refresh tests' bit-identity checks.
+    pub fn agg(&self) -> &AggregatedPoints {
+        &self.agg
+    }
+
+    /// Fold new labeled points into a candidate replacement shard
+    /// (`self` is untouched — it may be serving pinned queries). Each
+    /// point joins its nearest aggregated centroid (the shared
+    /// [`crate::model::kmeans::nearest_centroid`] strict-`<` first-min
+    /// rule): the centroid absorbs it by weighted-centroid merge
+    /// `(c·n + x) / (n + 1)` in f64, the index file gains the new row,
+    /// and the bucket's majority label is recomputed under the same
+    /// tie-break the batch aggregation uses. Points are absorbed
+    /// sequentially, so folding a log in one call is bit-identical to
+    /// folding it split across calls.
+    pub fn merge_deltas(&self, deltas: &[crate::refresh::LabeledPoint]) -> Result<KnnModel> {
+        use crate::error::Error;
+        let d = self.part.cols();
+        for p in deltas {
+            if p.features.len() != d {
+                return Err(Error::Data(format!(
+                    "delta point dim {} != shard dim {d}",
+                    p.features.len()
+                )));
+            }
+        }
+        if self.agg.is_empty() {
+            return Err(Error::Data("cannot merge deltas into a bucketless shard".into()));
+        }
+        let mut dm = Matrix::zeros(deltas.len(), d);
+        for (i, p) in deltas.iter().enumerate() {
+            dm.row_mut(i).copy_from_slice(&p.features);
+        }
+        let part = self.part.vstack(&dm)?;
+        let mut labels = self.labels.clone();
+        labels.extend(deltas.iter().map(|p| p.label));
+        let mut agg = self.agg.clone();
+        for (i, p) in deltas.iter().enumerate() {
+            let local = (self.part.rows() + i) as u32;
+            let b = crate::model::kmeans::absorb_point(
+                &mut agg.centroids,
+                &mut agg.index,
+                &p.features,
+                local,
+            );
+            agg.labels[b] = crate::aggregate::majority_label_of(
+                agg.index[b].iter().map(|&l| labels[l as usize]),
+            );
+        }
+        Ok(KnnModel {
+            part,
+            labels,
+            agg,
+            k: self.k,
+            refine_order: self.refine_order,
+            backend: Arc::clone(&self.backend),
+        })
+    }
+}
+
+impl crate::refresh::Refreshable for KnnModel {
+    type Delta = crate::refresh::LabeledPoint;
+
+    fn merge_deltas(&self, deltas: &[Self::Delta]) -> Result<KnnModel> {
+        KnnModel::merge_deltas(self, deltas)
+    }
+
+    fn validate(&self) -> Result<()> {
+        use crate::error::Error;
+        if self.agg.is_empty() {
+            return Err(Error::Data("candidate kNN shard has no buckets".into()));
+        }
+        if self.agg.labels.len() != self.agg.len() {
+            return Err(Error::Data("candidate kNN shard label/bucket mismatch".into()));
+        }
+        if let Some(b) = self.agg.index.iter().position(Vec::is_empty) {
+            return Err(Error::Data(format!("candidate kNN shard bucket {b} is empty")));
+        }
+        if self.agg.total_originals() != self.part.rows()
+            || self.labels.len() != self.part.rows()
+        {
+            return Err(Error::Data("candidate kNN shard index accounting broken".into()));
+        }
+        if !self.agg.centroids.as_slice().iter().all(|v| v.is_finite()) {
+            return Err(Error::Data("candidate kNN shard has non-finite centroids".into()));
+        }
+        Ok(())
+    }
 }
 
 impl ServableModel for KnnModel {
@@ -389,6 +479,10 @@ impl ServableModel for KnnModel {
 
     fn merge(&self, _query: &Self::Query, partials: &[Self::Answer]) -> Self::Response {
         majority_vote(&merge_candidates(partials, self.k))
+    }
+
+    fn query_class(&self, query: &Self::Query, _response: &Self::Response) -> Option<String> {
+        query.label.map(|l| format!("label:{l}"))
     }
 
     fn accuracy(&self, query: &Self::Query, response: &Self::Response) -> Option<f64> {
@@ -566,6 +660,54 @@ mod tests {
                 .collect();
             assert_eq!(refined, exact, "test point {t}");
         }
+    }
+
+    #[test]
+    fn merge_deltas_is_batch_associative_and_validates() {
+        use crate::refresh::{LabeledPoint, Refreshable};
+        let (model, data) = shard();
+        let deltas: Vec<LabeledPoint> = (0..20)
+            .map(|i| {
+                let t = i % data.test.rows();
+                LabeledPoint {
+                    features: data.test.row(t).to_vec(),
+                    label: data.test_labels[t],
+                }
+            })
+            .collect();
+        let one_shot = model.merge_deltas(&deltas).unwrap();
+        let stepped = model
+            .merge_deltas(&deltas[..7])
+            .unwrap()
+            .merge_deltas(&deltas[7..])
+            .unwrap();
+        // base ⊕ (d₁ ++ d₂) == (base ⊕ d₁) ⊕ d₂, bit for bit.
+        assert_eq!(one_shot.agg.centroids, stepped.agg.centroids);
+        assert_eq!(one_shot.agg.index, stepped.agg.index);
+        assert_eq!(one_shot.agg.labels, stepped.agg.labels);
+        assert_eq!(one_shot.part, stepped.part);
+        assert_eq!(one_shot.labels, stepped.labels);
+        assert_eq!(
+            ServableModel::n_originals(&one_shot),
+            ServableModel::n_originals(&model) + deltas.len()
+        );
+        Refreshable::validate(&one_shot).unwrap();
+        // Dimension mismatches are rejected.
+        let bad = LabeledPoint {
+            features: vec![0.0; 3],
+            label: 0,
+        };
+        assert!(model.merge_deltas(&[bad]).is_err());
+        // The merged shard still answers (full refinement = exact scan
+        // over the grown partition).
+        let q = KnnQuery {
+            features: data.test.row(0).to_vec(),
+            label: None,
+            seed: 1,
+        };
+        let init = one_shot.answer_initial(&q);
+        let refined = one_shot.refine(&q, &init, one_shot.n_buckets());
+        assert!(refined[0].0 <= 1e-12, "the query itself was ingested");
     }
 
     #[test]

@@ -209,6 +209,16 @@ pub trait ServableModel: Send + Sync + 'static {
     /// merge.
     fn merge(&self, query: &Self::Query, partials: &[Self::Answer]) -> Self::Response;
 
+    /// The query's *class* for per-class serving reports: a short
+    /// deterministic tag grouping requests whose anytime curves should
+    /// be aggregated together (kNN: the ground-truth label; CF: the
+    /// user-activity band; k-means: the cluster of the delivered
+    /// response). `None` (the default) leaves the query out of the
+    /// per-class grouping.
+    fn query_class(&self, _query: &Self::Query, _response: &Self::Response) -> Option<String> {
+        None
+    }
+
     /// Higher-is-better per-query accuracy when the query carries
     /// ground truth (kNN: 0/1 correctness; CF: negative squared rating
     /// error; k-means: negative squared distance to the chosen

@@ -1,0 +1,132 @@
+//! The delta-ingestion buffer between live traffic and shard rebuilds.
+//!
+//! New data (points, users, ratings) arrives while shards are serving;
+//! it is appended to a per-shard [`DeltaLog`] and folded into the
+//! shard's aggregates by the next background rebuild
+//! ([`crate::refresh::Rebuilder`]). The log is append-only between
+//! refresh cycles and drained per shard when a rebuild starts; a failed
+//! rebuild re-appends its drained deltas so ingested data is never
+//! silently dropped.
+
+use std::sync::Mutex;
+
+/// One kNN ingestion record: a feature row and its label (the serving
+/// analogue of one new training example).
+#[derive(Clone, Debug)]
+pub struct LabeledPoint {
+    pub features: Vec<f32>,
+    pub label: u32,
+}
+
+struct Inner<D> {
+    per_shard: Vec<Vec<D>>,
+    /// Round-robin cursor of [`DeltaLog::append_round_robin`], kept
+    /// across calls so successive slices keep rotating.
+    cursor: usize,
+    /// Records ever appended (drains do not decrement).
+    appended: usize,
+}
+
+/// Thread-safe per-shard buffer of pending ingestion records.
+pub struct DeltaLog<D> {
+    inner: Mutex<Inner<D>>,
+}
+
+impl<D> DeltaLog<D> {
+    /// Log with one buffer per shard (at least one).
+    pub fn new(n_shards: usize) -> DeltaLog<D> {
+        let n_shards = n_shards.max(1);
+        DeltaLog {
+            inner: Mutex::new(Inner {
+                per_shard: (0..n_shards).map(|_| Vec::new()).collect(),
+                cursor: 0,
+                appended: 0,
+            }),
+        }
+    }
+
+    /// Number of per-shard buffers.
+    pub fn n_shards(&self) -> usize {
+        self.inner.lock().unwrap().per_shard.len()
+    }
+
+    /// Append one record to a shard's buffer (panics on a bad shard
+    /// index — shard count is fixed at construction).
+    pub fn append(&self, shard: usize, delta: D) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.per_shard[shard].push(delta);
+        inner.appended += 1;
+    }
+
+    /// Distribute records across shards round-robin, continuing from
+    /// where the previous call left off (deterministic for a
+    /// deterministic input order).
+    pub fn append_round_robin(&self, deltas: impl IntoIterator<Item = D>) {
+        let mut inner = self.inner.lock().unwrap();
+        let n = inner.per_shard.len();
+        for d in deltas {
+            let s = inner.cursor % n;
+            inner.per_shard[s].push(d);
+            inner.cursor = (inner.cursor + 1) % n;
+            inner.appended += 1;
+        }
+    }
+
+    /// Records pending across all shards.
+    pub fn pending(&self) -> usize {
+        self.inner.lock().unwrap().per_shard.iter().map(Vec::len).sum()
+    }
+
+    /// Records pending for one shard.
+    pub fn pending_for(&self, shard: usize) -> usize {
+        self.inner.lock().unwrap().per_shard[shard].len()
+    }
+
+    /// Take every pending record of one shard (the rebuild handoff).
+    pub fn drain(&self, shard: usize) -> Vec<D> {
+        std::mem::take(&mut self.inner.lock().unwrap().per_shard[shard])
+    }
+
+    /// Records ever appended (ingestion volume; drains do not subtract).
+    pub fn total_appended(&self) -> usize {
+        self.inner.lock().unwrap().appended
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_drain_per_shard() {
+        let log: DeltaLog<u32> = DeltaLog::new(2);
+        assert_eq!(log.n_shards(), 2);
+        log.append(0, 1);
+        log.append(1, 2);
+        log.append(0, 3);
+        assert_eq!(log.pending(), 3);
+        assert_eq!(log.pending_for(0), 2);
+        assert_eq!(log.drain(0), vec![1, 3]);
+        assert_eq!(log.pending_for(0), 0);
+        assert_eq!(log.pending(), 1);
+        assert_eq!(log.total_appended(), 3, "drains do not subtract");
+    }
+
+    #[test]
+    fn round_robin_rotates_across_calls() {
+        let log: DeltaLog<u32> = DeltaLog::new(3);
+        log.append_round_robin(0..4); // shards 0,1,2,0
+        log.append_round_robin(4..6); // continues at 1,2
+        assert_eq!(log.drain(0), vec![0, 3]);
+        assert_eq!(log.drain(1), vec![1, 4]);
+        assert_eq!(log.drain(2), vec![2, 5]);
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let log: DeltaLog<u32> = DeltaLog::new(0);
+        assert_eq!(log.n_shards(), 1);
+        log.append_round_robin([7, 8]);
+        assert_eq!(log.drain(0), vec![7, 8]);
+    }
+}

@@ -1,0 +1,65 @@
+//! Live model refresh: delta ingestion, background shard rebuild, and
+//! atomic hot-swap under serving load.
+//!
+//! The paper's aggregation (Definition 3: bucket means plus index
+//! files) is *associative* — absorbing new data into an aggregated
+//! point is a weighted-centroid merge, not a rescan — so a serving
+//! deployment never has to stop the world to pick up new data. This
+//! module is the lifecycle layer that exploits that:
+//!
+//! * [`ModelRegistry`] — epoch-versioned shard sets. The serve executor
+//!   pins one generation per micro-batch at dispatch so in-flight
+//!   queries always finish on a consistent shard set; a writer
+//!   publishes a replacement generation atomically and the attached
+//!   answer cache is invalidated in the same step
+//!   ([`crate::serve::AnswerCache::invalidate_all`]), so zero stale
+//!   answers survive a swap.
+//! * [`DeltaLog`] — the per-shard ingestion buffer new data lands in
+//!   while the current generation keeps serving.
+//! * [`Rebuilder`] — folds pending deltas into a pinned copy of each
+//!   shard as background tasks on the engine's
+//!   [`crate::util::pool::WorkerPool`] (serving tasks are never
+//!   blocked: the pool pops LIFO, and the serve loop never waits on a
+//!   rebuild), validates each candidate, and publishes it as a swap.
+//!   [`RefreshDriver`] adapts a rebuilder (plus an ingestion schedule)
+//!   to the executor's [`crate::serve::RefreshHook`] for replay runs.
+//!
+//! The incremental math lives on the models as [`Refreshable`]
+//! implementations (`model/{knn,cf,kmeans}.rs`): folding a delta batch
+//! in one call is bit-identical to folding it split across any number
+//! of calls, because each record is absorbed sequentially by the same
+//! weighted-merge arithmetic — the property the refresh tests pin.
+
+pub mod delta;
+pub mod rebuilder;
+pub mod registry;
+
+pub use delta::{DeltaLog, LabeledPoint};
+pub use rebuilder::{slice_deltas, Rebuilder, RefreshDriver, RefreshStats};
+pub use registry::{ModelRegistry, ShardSet};
+
+use crate::error::Result;
+use crate::model::ServableModel;
+
+/// A servable shard that can absorb new data incrementally.
+///
+/// `merge_deltas` folds ingestion records into a **new** shard (the
+/// receiver is immutable — it may be serving pinned queries right now):
+/// each record is routed to the aggregated bucket it belongs with and
+/// merged by weighted-centroid / running-mean arithmetic, so the cost
+/// is O(deltas × buckets + deltas × dim), not a rescan of the
+/// originals. Because records are absorbed sequentially, the fold is
+/// associative at the batch level: `base ⊕ (d₁ ++ d₂)` is bit-identical
+/// to `(base ⊕ d₁) ⊕ d₂` — rebuilding from scratch over the full log
+/// equals the incrementally refreshed shard exactly.
+pub trait Refreshable: ServableModel + Sized {
+    /// One ingestion record (a labeled point, a user id, a raw point).
+    type Delta: Send + Sync + 'static;
+
+    /// Fold `deltas` in order into a candidate replacement shard.
+    fn merge_deltas(&self, deltas: &[Self::Delta]) -> Result<Self>;
+
+    /// Check a candidate before it may be swapped in: non-empty
+    /// buckets, finite aggregates, consistent index accounting.
+    fn validate(&self) -> Result<()>;
+}

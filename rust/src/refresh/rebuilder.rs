@@ -1,0 +1,444 @@
+//! Background shard rebuilds with atomic hot-swap.
+//!
+//! The [`Rebuilder`] turns pending [`crate::refresh::DeltaLog`] records
+//! into published shard generations without ever blocking the serving
+//! loop:
+//!
+//! 1. [`Rebuilder::request_refresh`] drains each shard's pending deltas
+//!    and submits one rebuild task per shard to the **same**
+//!    [`WorkerPool`] the serve executor uses. A rebuild task folds the
+//!    deltas into a *pinned* copy of the current shard via the model's
+//!    incremental-merge constructor
+//!    ([`Refreshable::merge_deltas`]) — base-aggregates ⊕ delta, not a
+//!    full rescan — and streams the candidate back on a private
+//!    channel. Serving tasks submitted later run first (the pool pops
+//!    LIFO), so a long rebuild delays the queue tail, never the head.
+//! 2. [`Rebuilder::try_collect`] (called from the serving thread
+//!    between query admissions) picks up finished candidates without
+//!    blocking, validates them ([`Refreshable::validate`]: non-empty
+//!    buckets, finite aggregates), and publishes each good one as an
+//!    atomic generation swap on the [`ModelRegistry`] — which also
+//!    invalidates the attached answer cache. A candidate that fails
+//!    validation (or a rebuild that returns an error) re-appends its
+//!    drained deltas to the log so ingested data survives for the next
+//!    cycle; only a panicking rebuild task loses its in-task batch.
+//! 3. [`Rebuilder::collect_blocking`] drains in-flight rebuilds at the
+//!    end of a replay so the last cycle's swaps still land.
+//!
+//! [`RefreshDriver`] packages a `Rebuilder` plus a pre-cut ingestion
+//! schedule behind the executor's
+//! [`crate::serve::RefreshHook`], which is how the CLI's
+//! `serve --refresh-every N --delta-frac F` replay interleaves
+//! ingestion with traffic.
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc};
+
+use crate::error::Result;
+use crate::mapreduce::engine::Engine;
+use crate::refresh::delta::DeltaLog;
+use crate::refresh::registry::ModelRegistry;
+use crate::refresh::Refreshable;
+use crate::serve::RefreshHook;
+use crate::util::pool::{StreamResult, WorkerPool};
+
+/// What a refresh session did (cumulative over the rebuilder's life).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RefreshStats {
+    /// Background rebuild tasks submitted.
+    pub rebuilds_started: usize,
+    /// Candidates validated and atomically swapped in.
+    pub swaps: usize,
+    /// Rebuilds that failed (merge error, validation failure, panic).
+    pub failed: usize,
+    /// Delta records folded into published generations.
+    pub deltas_merged: usize,
+    /// Delta records re-appended to the log after a failed rebuild.
+    pub deltas_requeued: usize,
+}
+
+/// One finished rebuild: the drained deltas (returned so failures can
+/// requeue them) and the candidate shard.
+type RebuildOutput<M> = (Vec<<M as Refreshable>::Delta>, Result<M>);
+
+/// Drives background rebuilds and atomic swaps (see the module docs).
+pub struct Rebuilder<M: Refreshable> {
+    registry: Arc<ModelRegistry<M>>,
+    log: Arc<DeltaLog<M::Delta>>,
+    tx: mpsc::Sender<StreamResult<RebuildOutput<M>>>,
+    rx: mpsc::Receiver<StreamResult<RebuildOutput<M>>>,
+    /// Per-shard "rebuild in flight" flags: a shard is never rebuilt
+    /// concurrently with itself (the second rebuild would publish over
+    /// the first's merged data).
+    busy: Vec<bool>,
+    in_flight: usize,
+    stats: RefreshStats,
+}
+
+impl<M: Refreshable> Rebuilder<M> {
+    /// Rebuilder over a registry and its delta log (the log must have
+    /// one buffer per registry shard).
+    pub fn new(registry: Arc<ModelRegistry<M>>, log: Arc<DeltaLog<M::Delta>>) -> Rebuilder<M> {
+        let n = registry.n_shards();
+        let (tx, rx) = mpsc::channel();
+        Rebuilder {
+            registry,
+            log,
+            tx,
+            rx,
+            busy: vec![false; n],
+            in_flight: 0,
+            stats: RefreshStats::default(),
+        }
+    }
+
+    /// The delta log rebuilds drain from.
+    pub fn log(&self) -> &Arc<DeltaLog<M::Delta>> {
+        &self.log
+    }
+
+    /// The registry swaps are published to.
+    pub fn registry(&self) -> &Arc<ModelRegistry<M>> {
+        &self.registry
+    }
+
+    /// Background rebuild tasks currently in flight — the live queue
+    /// depth the serve executor's shedding policy reads through
+    /// [`RefreshDriver::queue_depth`].
+    pub fn in_flight(&self) -> usize {
+        self.in_flight
+    }
+
+    /// Cumulative refresh accounting.
+    pub fn stats(&self) -> RefreshStats {
+        self.stats
+    }
+
+    /// Start one background rebuild per shard that has pending deltas
+    /// and no rebuild already in flight. Returns how many tasks were
+    /// submitted. Never blocks: the candidates surface later through
+    /// [`Rebuilder::try_collect`] / [`Rebuilder::collect_blocking`].
+    ///
+    /// Refreshable shards are those the delta log has a buffer for: if
+    /// a writer grows the registry past the log's shard count (a
+    /// whole-set [`ModelRegistry::publish`]), the extra shards cannot
+    /// receive deltas and are left alone; a shrunk set simply stops
+    /// the out-of-range rebuilds from being requested.
+    pub fn request_refresh(&mut self, pool: &WorkerPool) -> usize {
+        let pinned = self.registry.pin();
+        let refreshable = pinned.shards().len().min(self.log.n_shards());
+        if self.busy.len() < refreshable {
+            self.busy.resize(refreshable, false);
+        }
+        let mut started = 0;
+        for (s, base) in pinned.shards().iter().enumerate().take(refreshable) {
+            if self.busy[s] || self.log.pending_for(s) == 0 {
+                continue;
+            }
+            let deltas = self.log.drain(s);
+            let base = Arc::clone(base);
+            self.busy[s] = true;
+            self.in_flight += 1;
+            self.stats.rebuilds_started += 1;
+            started += 1;
+            pool.stream_into(&self.tx, s, move || {
+                let candidate = base.merge_deltas(&deltas);
+                (deltas, candidate)
+            });
+        }
+        started
+    }
+
+    /// Collect every rebuild that has finished, without blocking.
+    /// Returns the number of swaps published.
+    pub fn try_collect(&mut self) -> usize {
+        let mut swaps = 0;
+        while let Ok((s, payload)) = self.rx.try_recv() {
+            swaps += usize::from(self.absorb(s, payload));
+        }
+        swaps
+    }
+
+    /// Block until every in-flight rebuild has reported, publishing the
+    /// good candidates. Returns the number of swaps published.
+    pub fn collect_blocking(&mut self) -> usize {
+        let mut swaps = 0;
+        while self.in_flight > 0 {
+            match self.rx.recv() {
+                Ok((s, payload)) => swaps += usize::from(self.absorb(s, payload)),
+                Err(_) => break, // our own sender is alive; unreachable
+            }
+        }
+        swaps
+    }
+
+    /// Fold one finished rebuild into the registry; true = swapped.
+    fn absorb(&mut self, shard: usize, payload: std::thread::Result<RebuildOutput<M>>) -> bool {
+        self.in_flight -= 1;
+        if let Some(b) = self.busy.get_mut(shard) {
+            *b = false;
+        }
+        match payload {
+            Ok((deltas, Ok(candidate))) => {
+                let published = candidate
+                    .validate()
+                    .and_then(|_| self.registry.publish_shard(shard, Arc::new(candidate)));
+                match published {
+                    Ok(_generation) => {
+                        self.stats.swaps += 1;
+                        self.stats.deltas_merged += deltas.len();
+                        true
+                    }
+                    Err(_) => {
+                        self.requeue(shard, deltas);
+                        false
+                    }
+                }
+            }
+            Ok((deltas, Err(_merge_error))) => {
+                self.requeue(shard, deltas);
+                false
+            }
+            Err(_panic) => {
+                // The panicking task owned its deltas; they are gone.
+                self.stats.failed += 1;
+                false
+            }
+        }
+    }
+
+    fn requeue(&mut self, shard: usize, deltas: Vec<M::Delta>) {
+        self.stats.failed += 1;
+        self.stats.deltas_requeued += deltas.len();
+        for d in deltas {
+            self.log.append(shard, d);
+        }
+    }
+}
+
+/// A [`Rebuilder`] plus a pre-cut ingestion schedule, packaged behind
+/// the serve executor's [`RefreshHook`]: each refresh cycle ingests the
+/// next delta slice round-robin across shards and kicks off background
+/// rebuilds; every poll publishes whatever candidates have landed.
+pub struct RefreshDriver<M: Refreshable> {
+    rebuilder: Rebuilder<M>,
+    slices: VecDeque<Vec<M::Delta>>,
+}
+
+impl<M: Refreshable> RefreshDriver<M> {
+    /// Driver ingesting one slice per refresh cycle, in order.
+    pub fn new(rebuilder: Rebuilder<M>, slices: Vec<Vec<M::Delta>>) -> RefreshDriver<M> {
+        RefreshDriver {
+            rebuilder,
+            slices: slices.into(),
+        }
+    }
+
+    /// Refresh accounting so far.
+    pub fn stats(&self) -> RefreshStats {
+        self.rebuilder.stats()
+    }
+
+    /// The driven rebuilder.
+    pub fn rebuilder(&self) -> &Rebuilder<M> {
+        &self.rebuilder
+    }
+}
+
+impl<M: Refreshable> RefreshHook<M> for RefreshDriver<M> {
+    fn poll(&mut self, _engine: &Engine) -> Result<()> {
+        self.rebuilder.try_collect();
+        Ok(())
+    }
+
+    fn cycle(&mut self, engine: &Engine) -> Result<()> {
+        if let Some(slice) = self.slices.pop_front() {
+            self.rebuilder.log().append_round_robin(slice);
+        }
+        self.rebuilder.request_refresh(engine.pool());
+        Ok(())
+    }
+
+    fn finish(&mut self, engine: &Engine) -> Result<()> {
+        self.rebuilder.collect_blocking();
+        // Slices the replay never cycled through (a refresh interval
+        // longer than the log): ingest and fold them now, so held-back
+        // data is never silently dropped — the final generation always
+        // reflects the whole reserve.
+        if !self.slices.is_empty() {
+            for slice in self.slices.drain(..) {
+                self.rebuilder.log().append_round_robin(slice);
+            }
+            self.rebuilder.request_refresh(engine.pool());
+            self.rebuilder.collect_blocking();
+        }
+        Ok(())
+    }
+
+    fn queue_depth(&self) -> usize {
+        self.rebuilder.in_flight()
+    }
+}
+
+/// Cut `deltas` into `cycles` near-equal contiguous slices (earlier
+/// slices take the remainder), preserving order. `cycles` is clamped
+/// to >= 1; empty input yields empty slices.
+pub fn slice_deltas<D>(deltas: Vec<D>, cycles: usize) -> Vec<Vec<D>> {
+    let cycles = cycles.max(1);
+    let n = deltas.len();
+    let base = n / cycles;
+    let extra = n % cycles;
+    let mut out: Vec<Vec<D>> = Vec::with_capacity(cycles);
+    let mut it = deltas.into_iter();
+    for c in 0..cycles {
+        let take = base + usize::from(c < extra);
+        out.push(it.by_ref().take(take).collect());
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::error::Error;
+    use crate::model::{InitialAnswer, ServableModel};
+
+    /// Toy refreshable shard: the answer is a running sum of absorbed
+    /// deltas; negative deltas poison the merge (to exercise failure
+    /// requeue) and a sum above 1000 fails validation.
+    struct SumModel {
+        sum: i64,
+    }
+
+    impl ServableModel for SumModel {
+        type Query = ();
+        type Answer = i64;
+        type Response = i64;
+
+        fn n_buckets(&self) -> usize {
+            1
+        }
+        fn n_originals(&self) -> usize {
+            1
+        }
+        fn answer_initial(&self, _q: &()) -> InitialAnswer<i64> {
+            InitialAnswer {
+                answer: self.sum,
+                correlations: vec![0.0],
+            }
+        }
+        fn refine(&self, _q: &(), initial: &InitialAnswer<i64>, _b: usize) -> i64 {
+            initial.answer
+        }
+        fn merge(&self, _q: &(), partials: &[i64]) -> i64 {
+            partials.iter().sum()
+        }
+        fn accuracy(&self, _q: &(), _r: &i64) -> Option<f64> {
+            None
+        }
+    }
+
+    impl Refreshable for SumModel {
+        type Delta = i64;
+
+        fn merge_deltas(&self, deltas: &[i64]) -> Result<SumModel> {
+            if deltas.iter().any(|&d| d < 0) {
+                return Err(Error::Data("poison delta".into()));
+            }
+            Ok(SumModel {
+                sum: self.sum + deltas.iter().sum::<i64>(),
+            })
+        }
+
+        fn validate(&self) -> Result<()> {
+            if self.sum > 1000 {
+                return Err(Error::Data(format!("sum {} too large", self.sum)));
+            }
+            Ok(())
+        }
+    }
+
+    fn setup(n_shards: usize) -> (Arc<ModelRegistry<SumModel>>, Rebuilder<SumModel>) {
+        let shards = (0..n_shards).map(|_| Arc::new(SumModel { sum: 0 })).collect();
+        let registry = Arc::new(ModelRegistry::new(shards).unwrap());
+        let log = Arc::new(DeltaLog::new(n_shards));
+        let rebuilder = Rebuilder::new(Arc::clone(&registry), log);
+        (registry, rebuilder)
+    }
+
+    #[test]
+    fn rebuild_merges_and_swaps() {
+        let pool = WorkerPool::new(2);
+        let (registry, mut rb) = setup(2);
+        rb.log().append(0, 5);
+        rb.log().append(0, 7);
+        rb.log().append(1, 11);
+        assert_eq!(rb.request_refresh(&pool), 2);
+        assert_eq!(rb.in_flight(), 2);
+        assert_eq!(rb.collect_blocking(), 2);
+        assert_eq!(rb.in_flight(), 0);
+        let pinned = registry.pin();
+        assert_eq!(pinned.shards()[0].sum, 12);
+        assert_eq!(pinned.shards()[1].sum, 11);
+        assert_eq!(registry.swap_count(), 2);
+        let stats = rb.stats();
+        assert_eq!(stats.swaps, 2);
+        assert_eq!(stats.deltas_merged, 3);
+        assert_eq!(stats.failed, 0);
+        // Nothing pending: another request is a no-op.
+        assert_eq!(rb.request_refresh(&pool), 0);
+    }
+
+    #[test]
+    fn failed_merge_requeues_deltas() {
+        let pool = WorkerPool::new(1);
+        let (registry, mut rb) = setup(1);
+        rb.log().append(0, -1); // poison: merge_deltas errors
+        rb.log().append(0, 3);
+        rb.request_refresh(&pool);
+        assert_eq!(rb.collect_blocking(), 0);
+        assert_eq!(registry.swap_count(), 0, "no swap on failure");
+        let stats = rb.stats();
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.deltas_requeued, 2);
+        assert_eq!(rb.log().pending_for(0), 2, "deltas survive for retry");
+    }
+
+    #[test]
+    fn invalid_candidate_is_rejected_and_requeued() {
+        let pool = WorkerPool::new(1);
+        let (registry, mut rb) = setup(1);
+        rb.log().append(0, 2000); // merges fine, fails validation
+        rb.request_refresh(&pool);
+        assert_eq!(rb.collect_blocking(), 0);
+        assert_eq!(registry.swap_count(), 0);
+        assert_eq!(registry.pin().shards()[0].sum, 0, "old shard still serves");
+        assert_eq!(rb.log().pending_for(0), 1);
+    }
+
+    #[test]
+    fn busy_shards_are_not_rebuilt_concurrently() {
+        let pool = WorkerPool::new(1);
+        let (_registry, mut rb) = setup(1);
+        rb.log().append(0, 1);
+        assert_eq!(rb.request_refresh(&pool), 1);
+        // More deltas arrive while the rebuild is in flight: the shard
+        // is busy, so no second task is submitted...
+        rb.log().append(0, 2);
+        assert_eq!(rb.request_refresh(&pool), 0);
+        rb.collect_blocking();
+        // ...and the next cycle picks them up.
+        assert_eq!(rb.log().pending_for(0), 1);
+        assert_eq!(rb.request_refresh(&pool), 1);
+        rb.collect_blocking();
+        assert_eq!(rb.registry().pin().shards()[0].sum, 3);
+    }
+
+    #[test]
+    fn slice_deltas_covers_everything_in_order() {
+        let slices = slice_deltas((0..10).collect::<Vec<_>>(), 3);
+        assert_eq!(slices, vec![vec![0, 1, 2, 3], vec![4, 5, 6], vec![7, 8, 9]]);
+        assert_eq!(slice_deltas(Vec::<u8>::new(), 4).concat(), vec![]);
+        assert_eq!(slice_deltas(vec![1u8, 2], 0), vec![vec![1, 2]]);
+    }
+}

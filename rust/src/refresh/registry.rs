@@ -1,0 +1,266 @@
+//! The epoch-versioned shard registry behind live model refresh.
+//!
+//! A [`ModelRegistry`] owns the *current* [`ShardSet`] — an immutable,
+//! generation-stamped vector of shard handles — behind one mutex that
+//! is only ever held long enough to clone or replace an `Arc`. Readers
+//! ([`crate::serve::ShardedServer`]) call [`ModelRegistry::pin`] once
+//! per micro-batch at dispatch: the returned `Arc<ShardSet>` keeps that
+//! generation's shards alive for as long as the batch runs, so
+//! in-flight queries always finish on a consistent shard set no matter
+//! how many swaps land meanwhile. Writers (the
+//! [`crate::refresh::Rebuilder`]) publish a replacement shard (or a
+//! whole set) atomically: later pins see the new generation, earlier
+//! pins are untouched, and the old set is freed when its last pin
+//! drops.
+//!
+//! Publishing also fires [`AnswerCache::invalidate_all`] on the
+//! attached shared answer cache (when one is attached via
+//! [`ModelRegistry::attach_cache`]), so a response computed against the
+//! replaced shards can never be replayed after the swap. The
+//! swap-then-invalidate order is safe because cache inserts and
+//! publishes both happen on the serving thread (the executor inserts
+//! between batches; the rebuilder publishes from the executor's refresh
+//! hook) — there is no window in which a pre-swap response can be
+//! inserted after the invalidation.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::error::{Error, Result};
+use crate::model::ServableModel;
+use crate::serve::SharedAnswerCache;
+
+/// One immutable generation of shard handles. Serving pins a whole set,
+/// never individual shards, so every shard a batch touches belongs to
+/// the same epoch.
+pub struct ShardSet<M> {
+    generation: u64,
+    shards: Vec<Arc<M>>,
+}
+
+impl<M> ShardSet<M> {
+    /// The epoch this set was published at (0 = the initial build).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The shard handles of this generation.
+    pub fn shards(&self) -> &[Arc<M>] {
+        &self.shards
+    }
+
+    /// Number of shards.
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+/// The registry of epoch-versioned shard sets (see the module docs).
+pub struct ModelRegistry<M: ServableModel> {
+    current: Mutex<Arc<ShardSet<M>>>,
+    swap_count: AtomicUsize,
+    cache: Mutex<Option<SharedAnswerCache<M::Response>>>,
+}
+
+impl<M: ServableModel> ModelRegistry<M> {
+    /// Registry starting at generation 0 with the given shards (at
+    /// least one).
+    pub fn new(shards: Vec<Arc<M>>) -> Result<ModelRegistry<M>> {
+        if shards.is_empty() {
+            return Err(Error::Engine("registry needs at least one shard".into()));
+        }
+        Ok(ModelRegistry {
+            current: Mutex::new(Arc::new(ShardSet {
+                generation: 0,
+                shards,
+            })),
+            swap_count: AtomicUsize::new(0),
+            cache: Mutex::new(None),
+        })
+    }
+
+    /// Pin the current generation: the returned set is immutable and
+    /// stays valid (and its shards alive) however many swaps land while
+    /// the caller holds it.
+    pub fn pin(&self) -> Arc<ShardSet<M>> {
+        Arc::clone(&self.current.lock().unwrap())
+    }
+
+    /// The current generation number.
+    pub fn generation(&self) -> u64 {
+        self.current.lock().unwrap().generation
+    }
+
+    /// Shards in the current generation.
+    pub fn n_shards(&self) -> usize {
+        self.current.lock().unwrap().shards.len()
+    }
+
+    /// Atomic swaps published so far (single shards and whole sets each
+    /// count once).
+    pub fn swap_count(&self) -> usize {
+        self.swap_count.load(Ordering::SeqCst)
+    }
+
+    /// Attach the shared answer cache that serves responses computed
+    /// against this registry's shards; every subsequent publish fires
+    /// [`crate::serve::AnswerCache::invalidate_all`] on it so stale
+    /// answers cannot outlive a swap.
+    pub fn attach_cache(&self, cache: SharedAnswerCache<M::Response>) {
+        *self.cache.lock().unwrap() = Some(cache);
+    }
+
+    /// Publish a replacement for one shard: the new generation carries
+    /// the old set with `shards[index]` swapped. Returns the new
+    /// generation number.
+    pub fn publish_shard(&self, index: usize, shard: Arc<M>) -> Result<u64> {
+        let generation = {
+            let mut cur = self.current.lock().unwrap();
+            if index >= cur.shards.len() {
+                return Err(Error::Engine(format!(
+                    "publish_shard index {index} out of range ({} shards)",
+                    cur.shards.len()
+                )));
+            }
+            let mut shards = cur.shards.clone();
+            shards[index] = shard;
+            let generation = cur.generation + 1;
+            *cur = Arc::new(ShardSet { generation, shards });
+            generation
+        };
+        self.after_publish();
+        Ok(generation)
+    }
+
+    /// Publish a whole replacement shard set (at least one shard).
+    /// Returns the new generation number.
+    pub fn publish(&self, shards: Vec<Arc<M>>) -> Result<u64> {
+        if shards.is_empty() {
+            return Err(Error::Engine("cannot publish an empty shard set".into()));
+        }
+        let generation = {
+            let mut cur = self.current.lock().unwrap();
+            let generation = cur.generation + 1;
+            *cur = Arc::new(ShardSet { generation, shards });
+            generation
+        };
+        self.after_publish();
+        Ok(generation)
+    }
+
+    fn after_publish(&self) {
+        self.swap_count.fetch_add(1, Ordering::SeqCst);
+        if let Some(cache) = self.cache.lock().unwrap().as_ref() {
+            cache.lock().unwrap().invalidate_all();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::InitialAnswer;
+    use crate::serve::AnswerCache;
+
+    /// Minimal shard: answers with a constant.
+    struct Const(i64);
+
+    impl ServableModel for Const {
+        type Query = ();
+        type Answer = i64;
+        type Response = i64;
+
+        fn n_buckets(&self) -> usize {
+            1
+        }
+        fn n_originals(&self) -> usize {
+            1
+        }
+        fn answer_initial(&self, _q: &()) -> InitialAnswer<i64> {
+            InitialAnswer {
+                answer: self.0,
+                correlations: vec![0.0],
+            }
+        }
+        fn refine(&self, _q: &(), initial: &InitialAnswer<i64>, _budget: usize) -> i64 {
+            initial.answer
+        }
+        fn merge(&self, _q: &(), partials: &[i64]) -> i64 {
+            partials[0]
+        }
+        fn accuracy(&self, _q: &(), _r: &i64) -> Option<f64> {
+            None
+        }
+    }
+
+    #[test]
+    fn rejects_empty_sets() {
+        assert!(ModelRegistry::<Const>::new(vec![]).is_err());
+        let reg = ModelRegistry::new(vec![Arc::new(Const(1))]).unwrap();
+        assert!(reg.publish(vec![]).is_err());
+        assert!(reg.publish_shard(1, Arc::new(Const(2))).is_err());
+        assert_eq!(reg.generation(), 0, "failed publishes do not bump the epoch");
+        assert_eq!(reg.swap_count(), 0);
+    }
+
+    #[test]
+    fn pinned_sets_survive_publishes() {
+        let reg = ModelRegistry::new(vec![Arc::new(Const(1)), Arc::new(Const(2))]).unwrap();
+        let pinned = reg.pin();
+        assert_eq!(pinned.generation(), 0);
+        assert_eq!(pinned.n_shards(), 2);
+        assert_eq!(reg.publish_shard(0, Arc::new(Const(10))).unwrap(), 1);
+        // The pin still sees the old epoch...
+        assert_eq!(pinned.generation(), 0);
+        assert_eq!(pinned.shards()[0].0, 1);
+        // ...while a fresh pin sees the new one, with the untouched
+        // shard shared (same allocation).
+        let fresh = reg.pin();
+        assert_eq!(fresh.generation(), 1);
+        assert_eq!(fresh.shards()[0].0, 10);
+        assert!(Arc::ptr_eq(&fresh.shards()[1], &pinned.shards()[1]));
+        assert_eq!(reg.swap_count(), 1);
+    }
+
+    #[test]
+    fn full_set_publish_bumps_generation() {
+        let reg = ModelRegistry::new(vec![Arc::new(Const(1))]).unwrap();
+        assert_eq!(reg.publish(vec![Arc::new(Const(5)), Arc::new(Const(6))]).unwrap(), 1);
+        assert_eq!(reg.n_shards(), 2);
+        assert_eq!(reg.pin().shards()[1].0, 6);
+    }
+
+    #[test]
+    fn publish_invalidates_the_attached_cache() {
+        let reg = ModelRegistry::new(vec![Arc::new(Const(1))]).unwrap();
+        let cache: SharedAnswerCache<i64> = Arc::new(Mutex::new(AnswerCache::new(8)));
+        cache.lock().unwrap().insert(vec![1], 41);
+        reg.attach_cache(Arc::clone(&cache));
+        // Without a publish the entry survives.
+        assert_eq!(cache.lock().unwrap().get(&[1]), Some(41));
+        reg.publish_shard(0, Arc::new(Const(2))).unwrap();
+        assert!(cache.lock().unwrap().get(&[1]).is_none(), "swap invalidates");
+    }
+
+    #[test]
+    fn concurrent_pins_see_a_consistent_epoch() {
+        let reg = Arc::new(ModelRegistry::new(vec![Arc::new(Const(0))]).unwrap());
+        let writer = {
+            let reg = Arc::clone(&reg);
+            std::thread::spawn(move || {
+                for g in 1..=100i64 {
+                    reg.publish(vec![Arc::new(Const(g))]).unwrap();
+                }
+            })
+        };
+        for _ in 0..1000 {
+            let pinned = reg.pin();
+            // The pinned set's payload always matches its own epoch —
+            // a torn read would pair generation g with shard value != g.
+            assert_eq!(pinned.shards()[0].0, pinned.generation() as i64);
+        }
+        writer.join().unwrap();
+        assert_eq!(reg.generation(), 100);
+        assert_eq!(reg.swap_count(), 100);
+    }
+}

@@ -8,28 +8,59 @@
 //! a little queueing latency for a lot of throughput. The executor's
 //! hot-query answer cache sits *in front* of this batcher; only cache
 //! misses are admitted.
+//!
+//! Two release triggers:
+//!
+//! * **size** — the window fills ([`MicroBatcher::push`] returns the
+//!   batch);
+//! * **time** — the oldest pending request has waited longer than the
+//!   configured `max_wait_s` ([`MicroBatcher::flush_expired`]), which
+//!   bounds the queueing latency a partial batch can accrue while the
+//!   executor is busy serving, rebuilding shards, or waiting on sparse
+//!   arrivals. `max_wait_s <= 0` (the [`MicroBatcher::new`] default)
+//!   disables the time trigger: release on size only.
 
-/// Accumulates requests and releases them in fixed-size batches.
+use crate::util::timer::Stopwatch;
+
+/// Accumulates requests and releases them in fixed-size batches, with
+/// an optional cap on how long the oldest request may queue.
 #[derive(Debug)]
 pub struct MicroBatcher<Q> {
     capacity: usize,
+    max_wait_s: f64,
     pending: Vec<Q>,
+    /// Started when the first request of the current window arrives.
+    oldest: Option<Stopwatch>,
 }
 
 impl<Q> MicroBatcher<Q> {
-    /// Batcher releasing batches of `capacity` (clamped to >= 1).
+    /// Batcher releasing batches of `capacity` (clamped to >= 1) on
+    /// size only.
     pub fn new(capacity: usize) -> MicroBatcher<Q> {
+        MicroBatcher::with_max_wait(capacity, 0.0)
+    }
+
+    /// Batcher that additionally expires a partial window once its
+    /// oldest request has waited `max_wait_s` seconds (`<= 0` disables
+    /// the time trigger).
+    pub fn with_max_wait(capacity: usize, max_wait_s: f64) -> MicroBatcher<Q> {
         let capacity = capacity.max(1);
         MicroBatcher {
             capacity,
+            max_wait_s,
             pending: Vec::with_capacity(capacity),
+            oldest: None,
         }
     }
 
     /// Enqueue one request; returns a full batch when the window fills.
     pub fn push(&mut self, q: Q) -> Option<Vec<Q>> {
+        if self.pending.is_empty() {
+            self.oldest = Some(Stopwatch::new());
+        }
         self.pending.push(q);
         if self.pending.len() >= self.capacity {
+            self.oldest = None;
             Some(std::mem::replace(
                 &mut self.pending,
                 Vec::with_capacity(self.capacity),
@@ -41,10 +72,32 @@ impl<Q> MicroBatcher<Q> {
 
     /// Release whatever is queued (end of the replay / timeout tick).
     pub fn flush(&mut self) -> Option<Vec<Q>> {
+        self.oldest = None;
         if self.pending.is_empty() {
             None
         } else {
             Some(std::mem::take(&mut self.pending))
+        }
+    }
+
+    /// Whether the oldest pending request has exceeded the batcher's
+    /// max wait (always false when the time trigger is disabled or
+    /// nothing is pending).
+    pub fn expired(&self) -> bool {
+        self.max_wait_s > 0.0
+            && self
+                .oldest
+                .as_ref()
+                .is_some_and(|sw| sw.elapsed_s() >= self.max_wait_s)
+    }
+
+    /// Release the pending window iff it has expired (the time-based
+    /// flush the serving loop polls between admissions).
+    pub fn flush_expired(&mut self) -> Option<Vec<Q>> {
+        if self.expired() {
+            self.flush()
+        } else {
+            None
         }
     }
 
@@ -61,6 +114,11 @@ impl<Q> MicroBatcher<Q> {
     /// The batch window.
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// The time trigger (seconds; `<= 0` = disabled).
+    pub fn max_wait_s(&self) -> f64 {
+        self.max_wait_s
     }
 }
 
@@ -87,5 +145,44 @@ mod tests {
         let mut b = MicroBatcher::new(0);
         assert_eq!(b.capacity(), 1);
         assert_eq!(b.push(7), Some(vec![7]));
+    }
+
+    #[test]
+    fn size_only_batcher_never_expires() {
+        let mut b = MicroBatcher::new(4);
+        assert_eq!(b.max_wait_s(), 0.0);
+        b.push(1);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(!b.expired());
+        assert_eq!(b.flush_expired(), None);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn partial_window_expires_after_max_wait() {
+        let mut b = MicroBatcher::with_max_wait(4, 0.001);
+        assert!(!b.expired(), "nothing pending yet");
+        b.push(1);
+        b.push(2);
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        assert!(b.expired());
+        assert_eq!(b.flush_expired(), Some(vec![1, 2]));
+        assert!(!b.expired(), "flush resets the window clock");
+        assert_eq!(b.flush_expired(), None);
+    }
+
+    #[test]
+    fn filling_a_window_resets_the_clock() {
+        let mut b = MicroBatcher::with_max_wait(2, 0.001);
+        b.push(1);
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        assert_eq!(b.push(2), Some(vec![1, 2]), "size trigger still wins");
+        // The next window starts fresh: not expired until ITS oldest
+        // request has waited long enough.
+        b.push(3);
+        assert!(!b.expired());
+        std::thread::sleep(std::time::Duration::from_millis(3));
+        assert!(b.expired());
+        assert_eq!(b.flush_expired(), Some(vec![3]));
     }
 }

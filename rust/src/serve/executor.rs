@@ -29,15 +29,19 @@
 //! ([`crate::mapreduce::engine::drain_stream`]): the first panic fails
 //! the replay with an error after draining in-flight tasks.
 
+use std::collections::BTreeMap;
 use std::sync::{mpsc, Arc, Mutex};
 
 use crate::approx::algorithm1::refine_budget;
 use crate::error::{Error, Result};
 use crate::mapreduce::engine::{drain_stream, Engine};
 use crate::model::{InitialAnswer, RefinedBlock, ServableModel};
+use crate::refresh::ModelRegistry;
 use crate::serve::batcher::MicroBatcher;
 use crate::serve::cache::AnswerCache;
-use crate::serve::stats::{LatencyStats, ServeReport, ServeStage, ServeTracePoint};
+use crate::serve::stats::{
+    ClassCurvePoint, ClassReport, LatencyStats, ServeReport, ServeStage, ServeTracePoint,
+};
 use crate::util::timer::Stopwatch;
 
 /// An answer cache shared *across* `serve` calls: hand the same handle
@@ -52,6 +56,42 @@ pub type SharedAnswerCache<R> = Arc<Mutex<AnswerCache<R>>>;
 /// Smoothing factor of the per-shard stage-1 cost EWMA (weight of the
 /// newest batch's measurement).
 const EWMA_ALPHA: f64 = 0.3;
+
+/// When the executor runs refresh cycles during a replay (see
+/// [`ServeConfig::refresh`] and
+/// [`ShardedServer::serve_with_refresh`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RefreshPolicy {
+    /// Queries between refresh cycles (ingestion + background rebuild
+    /// kick-off). 0 = no periodic cycles; the hook is still polled so
+    /// externally requested rebuilds can land.
+    pub every: usize,
+}
+
+/// The executor's handle onto the live-refresh machinery (implemented
+/// by [`crate::refresh::RefreshDriver`]). All methods run on the
+/// serving thread, which is what makes swap-then-invalidate atomic
+/// with respect to cache inserts.
+pub trait RefreshHook<M: ServableModel> {
+    /// Called before every query admission: collect finished background
+    /// rebuilds and publish them (never blocks).
+    fn poll(&mut self, engine: &Engine) -> Result<()>;
+
+    /// A refresh-cycle boundary (every [`RefreshPolicy::every`]
+    /// queries): ingest the next delta slice and start background
+    /// rebuilds on the engine's pool.
+    fn cycle(&mut self, engine: &Engine) -> Result<()>;
+
+    /// End of the replay: block until in-flight rebuilds land so the
+    /// final cycle's swaps still publish.
+    fn finish(&mut self, engine: &Engine) -> Result<()>;
+
+    /// Background rebuild tasks currently in flight — the *live*
+    /// queue-pressure feed for [`ServeConfig::shed_queue_depth`]
+    /// (replacing the replay's unread-remainder stand-in while a hook
+    /// is attached).
+    fn queue_depth(&self) -> usize;
+}
 
 /// How much stage-2 work each request may spend, per shard.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -97,11 +137,21 @@ pub struct ServeConfig {
     /// [`ServeReport::shed_batches`]; batches whose budget already
     /// resolves to zero are neither counted nor barred from caching
     /// (the downgrade would change nothing). `usize::MAX` (the
-    /// default) disables shedding. In a replay, arrivals are
+    /// default) disables shedding. In a plain replay, arrivals are
     /// instantaneous, so the pending depth is the unread remainder of
-    /// the log; an online deployment would feed the real queue length
-    /// here.
+    /// the log; with a refresh hook attached the depth is the hook's
+    /// *live* queue reading (in-flight background rebuilds competing
+    /// for the pool) instead of that stand-in.
     pub shed_queue_depth: usize,
+    /// Time-based micro-batch flush: a partial batch whose oldest
+    /// admitted query has queued this many seconds is dispatched
+    /// without waiting for the window to fill (bounds queueing latency
+    /// under sparse arrivals or while rebuilds hold the pool). `<= 0`
+    /// (the default) releases on size only.
+    pub max_batch_wait_s: f64,
+    /// Live-refresh cycle policy; only consulted when a refresh hook
+    /// is attached via [`ShardedServer::serve_with_refresh`].
+    pub refresh: RefreshPolicy,
 }
 
 impl Default for ServeConfig {
@@ -112,6 +162,8 @@ impl Default for ServeConfig {
             budget: RefineBudget::Fraction(0.05),
             cache_capacity: 0,
             shed_queue_depth: usize::MAX,
+            max_batch_wait_s: 0.0,
+            refresh: RefreshPolicy::default(),
         }
     }
 }
@@ -141,6 +193,16 @@ pub struct QueryOutcome<R> {
     /// Whether this request was served from the hot-query answer cache
     /// (zero compute; latencies are 0, `refined_buckets` is 0).
     pub cache_hit: bool,
+    /// The shard-set generation pinned for this request (its
+    /// micro-batch's epoch; for a cache hit, the generation current at
+    /// the hit — invalidation-on-swap guarantees the cached response
+    /// was computed against that same generation).
+    pub generation: u64,
+    /// Whether a background shard rebuild was in flight when this
+    /// request's batch was dispatched (always false for cache hits and
+    /// without a refresh hook) — the per-request staleness marker
+    /// behind [`ServeReport::stale_queries`].
+    pub during_rebuild: bool,
     /// Per-request anytime checkpoints, in delivery order: the initial
     /// response, then the post-refinement response when stage 2 ran
     /// (one `CacheHit` point for cache hits) — the serving analogue of
@@ -166,32 +228,56 @@ struct ReplayCounters {
     stage2_bucket_groups: usize,
 }
 
-/// A model sharded across the engine's worker pool.
+/// A model sharded across the engine's worker pool, served from an
+/// epoch-versioned [`ModelRegistry`]: every micro-batch pins the
+/// current generation at dispatch, so swaps published between batches
+/// (live model refresh) never tear an in-flight batch across shard
+/// sets.
 pub struct ShardedServer<M: ServableModel> {
-    shards: Vec<Arc<M>>,
+    registry: Arc<ModelRegistry<M>>,
     /// Per-shard EWMA of the measured stage-1 cost per (query ×
     /// bucket), in seconds; 0.0 = no batch measured yet. Calibrates
     /// [`RefineBudget::Deadline`] across batches instead of from the
-    /// current batch alone.
+    /// current batch alone. Indexed by shard position; survives swaps
+    /// (a rebuilt shard's cost profile is close to its predecessor's)
+    /// and resets if a publish changes the shard count.
     stage1_bucket_cost: Mutex<Vec<f64>>,
 }
 
 impl<M: ServableModel> ShardedServer<M> {
-    /// Serve from the given shards (at least one).
+    /// Serve from the given shards (at least one), wrapped in a fresh
+    /// registry at generation 0.
     pub fn new(shards: Vec<Arc<M>>) -> Result<ShardedServer<M>> {
-        if shards.is_empty() {
-            return Err(Error::Engine("server needs at least one shard".into()));
-        }
-        let n = shards.len();
-        Ok(ShardedServer {
+        Ok(ShardedServer::with_registry(Arc::new(ModelRegistry::new(
             shards,
-            stage1_bucket_cost: Mutex::new(vec![0.0; n]),
-        })
+        )?)))
     }
 
-    /// Number of shards.
+    /// Serve from a caller-held registry, so a
+    /// [`crate::refresh::Rebuilder`] can publish new generations while
+    /// this server replays traffic. Publishes must run on the serving
+    /// thread — i.e. from the [`RefreshHook`] callbacks of
+    /// [`ShardedServer::serve_with_refresh`] — for the swap +
+    /// cache-invalidation step to be atomic with respect to this
+    /// server's cache inserts; an off-thread publish can race a
+    /// just-computed pre-swap response into the freshly invalidated
+    /// cache.
+    pub fn with_registry(registry: Arc<ModelRegistry<M>>) -> ShardedServer<M> {
+        let n = registry.n_shards();
+        ShardedServer {
+            registry,
+            stage1_bucket_cost: Mutex::new(vec![0.0; n]),
+        }
+    }
+
+    /// The registry this server pins generations from.
+    pub fn registry(&self) -> &Arc<ModelRegistry<M>> {
+        &self.registry
+    }
+
+    /// Number of shards (of the current generation).
     pub fn n_shards(&self) -> usize {
-        self.shards.len()
+        self.registry.n_shards()
     }
 
     /// Replay a query log: check the answer cache, batch the misses,
@@ -223,21 +309,94 @@ impl<M: ServableModel> ShardedServer<M> {
         config: &ServeConfig,
         cache: &SharedAnswerCache<M::Response>,
     ) -> Result<(Vec<QueryOutcome<M::Response>>, ServeReport)> {
+        self.serve_core(engine, queries, config, cache, None)
+    }
+
+    /// [`ShardedServer::serve_with_cache`] with a live-refresh hook
+    /// driven from the serving loop: the hook is polled before every
+    /// admission (publishing finished background rebuilds as atomic
+    /// swaps), gets a [`RefreshHook::cycle`] every
+    /// `config.refresh.every` queries (delta ingestion + rebuild
+    /// kick-off), supplies the *live* queue depth the shedding policy
+    /// reads, and is drained at the end of the replay. Attach the same
+    /// `cache` handle to the hook's registry
+    /// ([`ModelRegistry::attach_cache`]) so every swap invalidates it.
+    pub fn serve_with_refresh(
+        &self,
+        engine: &Engine,
+        queries: Vec<M::Query>,
+        config: &ServeConfig,
+        cache: &SharedAnswerCache<M::Response>,
+        hook: &mut dyn RefreshHook<M>,
+    ) -> Result<(Vec<QueryOutcome<M::Response>>, ServeReport)> {
+        self.serve_core(engine, queries, config, cache, Some(hook))
+    }
+
+    fn serve_core(
+        &self,
+        engine: &Engine,
+        queries: Vec<M::Query>,
+        config: &ServeConfig,
+        cache: &SharedAnswerCache<M::Response>,
+        mut hook: Option<&mut dyn RefreshHook<M>>,
+    ) -> Result<(Vec<QueryOutcome<M::Response>>, ServeReport)> {
         let queries = Arc::new(queries);
         // Outcomes are written by input index: cache hits resolve ahead
         // of still-queued misses, so a plain push would misorder them.
         let mut slots: Vec<Option<QueryOutcome<M::Response>>> =
             (0..queries.len()).map(|_| None).collect();
-        // Baselines so a reused external cache reports per-replay
-        // deltas rather than lifetime totals.
+        // Baselines so a reused external cache (or registry) reports
+        // per-replay deltas rather than lifetime totals.
         let (hits0, lookups0, cache_on) = {
             let c = cache.lock().unwrap();
             (c.hits(), c.lookups(), c.capacity() > 0)
         };
-        let merger = &self.shards[0];
+        let swaps0 = self.registry.swap_count();
         let mut counters = ReplayCounters::default();
-        let mut batcher = MicroBatcher::new(config.batch_size);
+        let mut batcher = MicroBatcher::with_max_wait(config.batch_size, config.max_batch_wait_s);
+        // The pending depth behind a batch: the hook's live reading
+        // when attached, else the replay stand-in (the whole unread
+        // remainder of the log is already queued).
+        let queue_depth = |hook: &Option<&mut dyn RefreshHook<M>>, qi: usize| match hook {
+            Some(h) => h.queue_depth(),
+            None => (queries.len() - qi - 1).div_ceil(config.batch_size.max(1)),
+        };
+        // Generation pin for admission-side work (cache keys, hit
+        // scoring/stamping). Publishes only land inside the hook
+        // callbacks on this same thread, so the pin is refreshed right
+        // after them — hookless replays pin exactly once.
+        let mut pinned = self.registry.pin();
         for qi in 0..queries.len() {
+            if let Some(h) = hook.as_mut() {
+                // Publish finished rebuilds first, so this query is
+                // admitted against the freshest generation...
+                h.poll(engine)?;
+                // ...then run a refresh-cycle boundary when due.
+                if config.refresh.every > 0 && qi > 0 && qi % config.refresh.every == 0 {
+                    h.cycle(engine)?;
+                }
+                pinned = self.registry.pin();
+            }
+            // Time-based flush first: a pending partial batch must not
+            // outwait its window just because the admission stream is
+            // all cache hits (the push path below re-checks after each
+            // admitted miss).
+            if let Some(batch) = batcher.flush_expired() {
+                let pending = queue_depth(&hook, qi);
+                let during_rebuild = hook.is_some() && pending > 0;
+                self.serve_batch(
+                    engine,
+                    &queries,
+                    batch,
+                    config,
+                    pending,
+                    during_rebuild,
+                    &mut slots,
+                    cache,
+                    &mut counters,
+                )?;
+            }
+            let merger = &pinned.shards()[0];
             // The cache sits in front of admission: a hit serves the
             // cached final response at zero compute. The key computed
             // here rides along with the admitted index so a miss does
@@ -265,6 +424,8 @@ impl<M: ServableModel> ShardedServer<M> {
                         refined_accuracy: accuracy,
                         refined_buckets: 0,
                         cache_hit: true,
+                        generation: pinned.generation(),
+                        during_rebuild: false,
                         trace: vec![ServeTracePoint {
                             stage: ServeStage::CacheHit,
                             wall_s: 0.0,
@@ -275,16 +436,22 @@ impl<M: ServableModel> ShardedServer<M> {
                     continue;
                 }
             }
-            if let Some(batch) = batcher.push((qi, key)) {
-                // The pending depth behind this batch: in a replay the
-                // whole unread remainder of the log is already queued.
-                let pending = (queries.len() - qi - 1).div_ceil(config.batch_size.max(1));
+            let released = match batcher.push((qi, key)) {
+                Some(batch) => Some(batch),
+                // Time-based flush: dispatch a partial batch whose
+                // oldest query has queued past the configured wait.
+                None => batcher.flush_expired(),
+            };
+            if let Some(batch) = released {
+                let pending = queue_depth(&hook, qi);
+                let during_rebuild = hook.is_some() && pending > 0;
                 self.serve_batch(
                     engine,
                     &queries,
                     batch,
                     config,
                     pending,
+                    during_rebuild,
                     &mut slots,
                     cache,
                     &mut counters,
@@ -292,7 +459,24 @@ impl<M: ServableModel> ShardedServer<M> {
             }
         }
         if let Some(batch) = batcher.flush() {
-            self.serve_batch(engine, &queries, batch, config, 0, &mut slots, cache, &mut counters)?;
+            let pending = queue_depth(&hook, queries.len().saturating_sub(1));
+            let during_rebuild = hook.is_some() && pending > 0;
+            self.serve_batch(
+                engine,
+                &queries,
+                batch,
+                config,
+                pending,
+                during_rebuild,
+                &mut slots,
+                cache,
+                &mut counters,
+            )?;
+        }
+        if let Some(h) = hook.as_mut() {
+            // Let the last cycle's rebuilds land and publish, so the
+            // report sees every swap this replay caused.
+            h.finish(engine)?;
         }
 
         let outcomes: Vec<QueryOutcome<M::Response>> = slots
@@ -303,15 +487,26 @@ impl<M: ServableModel> ShardedServer<M> {
             let c = cache.lock().unwrap();
             ((c.hits() - hits0) as usize, (c.lookups() - lookups0) as usize)
         };
-        let report = self.report(&queries, &outcomes, config, cache_hits, cache_lookups, &counters);
+        let report = self.report(
+            &queries,
+            &outcomes,
+            config,
+            cache_hits,
+            cache_lookups,
+            &counters,
+            self.registry.swap_count() - swaps0,
+        );
         Ok((outcomes, report))
     }
 
-    /// One micro-batch through both stages. `batch` pairs each admitted
-    /// query index with its precomputed cache key (None when the cache
-    /// is off or the query is uncacheable); `pending_batches` is the
-    /// queue depth behind this batch, which the shedding policy acts
-    /// on.
+    /// One micro-batch through both stages, on the shard-set generation
+    /// pinned here at dispatch (swaps published while the batch runs
+    /// cannot tear it). `batch` pairs each admitted query index with
+    /// its precomputed cache key (None when the cache is off or the
+    /// query is uncacheable); `pending_batches` is the queue depth
+    /// behind this batch, which the shedding policy acts on;
+    /// `during_rebuild` marks the batch as dispatched while a
+    /// background rebuild was in flight.
     #[allow(clippy::too_many_arguments)]
     fn serve_batch(
         &self,
@@ -320,11 +515,17 @@ impl<M: ServableModel> ShardedServer<M> {
         batch: Vec<(usize, Option<Vec<u8>>)>,
         config: &ServeConfig,
         pending_batches: usize,
+        during_rebuild: bool,
         slots: &mut [Option<QueryOutcome<M::Response>>],
         cache: &SharedAnswerCache<M::Response>,
         counters: &mut ReplayCounters,
     ) -> Result<()> {
-        let n_shards = self.shards.len();
+        // Admission-time generation pin: every task of this batch works
+        // on this immutable shard set, whatever publishes meanwhile.
+        let pinned = self.registry.pin();
+        let shards = pinned.shards();
+        let generation = pinned.generation();
+        let n_shards = shards.len();
         let (indices, mut keys): (Vec<usize>, Vec<Option<Vec<u8>>>) = batch.into_iter().unzip();
         let batch = Arc::new(indices);
         let sw = Stopwatch::new();
@@ -333,7 +534,7 @@ impl<M: ServableModel> ShardedServer<M> {
         // backend call (`answer_initial_block` assembles the batch
         // query block once per task), timing itself for the EWMA.
         let rx1 = engine.pool().stream(n_shards, |s| {
-            let shard = Arc::clone(&self.shards[s]);
+            let shard = Arc::clone(&shards[s]);
             let queries = Arc::clone(queries);
             let batch = Arc::clone(&batch);
             move || -> (Vec<InitialAnswer<M::Answer>>, f64) {
@@ -354,10 +555,10 @@ impl<M: ServableModel> ShardedServer<M> {
         if let Some(e) = failure {
             return Err(e);
         }
-        self.update_stage1_ewma(&stage1_task_s, batch.len());
+        self.update_stage1_ewma(shards, &stage1_task_s, batch.len());
 
         // Merge per query: the initial responses, always delivered.
-        let merger = &self.shards[0];
+        let merger = &shards[0];
         let mut initial_responses: Vec<M::Response> = Vec::with_capacity(batch.len());
         for (j, &qi) in batch.iter().enumerate() {
             let partials: Vec<M::Answer> = per_shard
@@ -376,7 +577,7 @@ impl<M: ServableModel> ShardedServer<M> {
         // resolved first so a batch whose policy already yields zero
         // (Off, Buckets(0), an expired deadline) is neither counted as
         // shed nor barred from caching — the downgrade changed nothing.
-        let mut budgets = self.resolve_budgets(config, initial_latency_s, batch.len());
+        let mut budgets = self.resolve_budgets(shards, config, initial_latency_s, batch.len());
         let shed = pending_batches > config.shed_queue_depth && budgets.iter().any(|&b| b > 0);
         if shed {
             counters.shed_batches += 1;
@@ -385,7 +586,7 @@ impl<M: ServableModel> ShardedServer<M> {
         let refined_buckets: usize = budgets
             .iter()
             .enumerate()
-            .map(|(s, &b)| b.min(self.shards[s].n_buckets()))
+            .map(|(s, &b)| b.min(shards[s].n_buckets()))
             .sum();
 
         // Deadline budgets vary batch to batch with measured load, so
@@ -415,6 +616,8 @@ impl<M: ServableModel> ShardedServer<M> {
                     refined_accuracy: None,
                     refined_buckets: 0,
                     cache_hit: false,
+                    generation,
+                    during_rebuild,
                     trace: vec![ServeTracePoint {
                         stage: ServeStage::Initial,
                         wall_s: initial_latency_s,
@@ -434,7 +637,7 @@ impl<M: ServableModel> ShardedServer<M> {
         let (tx2, rx2) = mpsc::channel();
         for (s, slot) in per_shard.iter_mut().enumerate() {
             let initials = slot.take().expect("shard answer missing");
-            let shard = Arc::clone(&self.shards[s]);
+            let shard = Arc::clone(&shards[s]);
             let queries = Arc::clone(queries);
             let batch = Arc::clone(&batch);
             let budget = budgets[s];
@@ -481,6 +684,8 @@ impl<M: ServableModel> ShardedServer<M> {
                 refined_accuracy,
                 refined_buckets,
                 cache_hit: false,
+                generation,
+                during_rebuild,
                 trace: vec![
                     ServeTracePoint {
                         stage: ServeStage::Initial,
@@ -501,14 +706,19 @@ impl<M: ServableModel> ShardedServer<M> {
     }
 
     /// Fold one batch's measured per-shard stage-1 times into the
-    /// per-shard per-(query × bucket) cost EWMA.
-    fn update_stage1_ewma(&self, stage1_task_s: &[f64], batch_len: usize) {
+    /// per-shard per-(query × bucket) cost EWMA. `shards` is the
+    /// batch's pinned shard set; a publish that changed the shard count
+    /// resets the EWMA vector.
+    fn update_stage1_ewma(&self, shards: &[Arc<M>], stage1_task_s: &[f64], batch_len: usize) {
         let mut ewma = self.stage1_bucket_cost.lock().unwrap();
+        if ewma.len() != shards.len() {
+            *ewma = vec![0.0; shards.len()];
+        }
         for (s, &t) in stage1_task_s.iter().enumerate() {
             if t <= 0.0 || !t.is_finite() || batch_len == 0 {
                 continue;
             }
-            let units = (batch_len * self.shards[s].n_buckets().max(1)) as f64;
+            let units = (batch_len * shards[s].n_buckets().max(1)) as f64;
             let x = t / units;
             ewma[s] = if ewma[s] > 0.0 {
                 EWMA_ALPHA * x + (1.0 - EWMA_ALPHA) * ewma[s]
@@ -524,25 +734,23 @@ impl<M: ServableModel> ShardedServer<M> {
     /// itself comes from the cross-batch per-shard EWMA.
     fn resolve_budgets(
         &self,
+        shards: &[Arc<M>],
         config: &ServeConfig,
         elapsed_s: f64,
         batch_len: usize,
     ) -> Vec<usize> {
         match config.budget {
-            RefineBudget::Off => vec![0; self.shards.len()],
-            RefineBudget::Buckets(n) => vec![n; self.shards.len()],
-            RefineBudget::All => {
-                self.shards.iter().map(|s| s.n_buckets()).collect()
-            }
-            RefineBudget::Fraction(eps) => self
-                .shards
+            RefineBudget::Off => vec![0; shards.len()],
+            RefineBudget::Buckets(n) => vec![n; shards.len()],
+            RefineBudget::All => shards.iter().map(|s| s.n_buckets()).collect(),
+            RefineBudget::Fraction(eps) => shards
                 .iter()
                 .map(|s| refine_budget(s.n_buckets(), eps))
                 .collect(),
             RefineBudget::Deadline => {
                 let remaining = config.deadline_s - elapsed_s;
                 if remaining <= 0.0 {
-                    return vec![0; self.shards.len()];
+                    return vec![0; shards.len()];
                 }
                 // Stage 1 scored every aggregated bucket once per
                 // query; refining a bucket rescans its originals, so
@@ -552,16 +760,16 @@ impl<M: ServableModel> ShardedServer<M> {
                 // shards. (The EWMA has at least the current batch's
                 // sample by the time budgets are resolved.)
                 let ewma = self.stage1_bucket_cost.lock().unwrap().clone();
-                self.shards
+                shards
                     .iter()
                     .enumerate()
                     .map(|(s, shard)| {
-                        let per_bucket_s = ewma[s].max(1e-9);
+                        let per_bucket_s = ewma.get(s).copied().unwrap_or(0.0).max(1e-9);
                         let per_refined_bucket_s = per_bucket_s
                             * (shard.n_originals().max(1) as f64
                                 / shard.n_buckets().max(1) as f64);
                         let affordable = remaining
-                            / (self.shards.len().max(1) * batch_len.max(1)) as f64
+                            / (shards.len().max(1) * batch_len.max(1)) as f64
                             / per_refined_bucket_s;
                         (affordable.floor() as usize).min(shard.n_buckets())
                     })
@@ -571,8 +779,10 @@ impl<M: ServableModel> ShardedServer<M> {
     }
 
     /// Aggregate the outcomes into a [`ServeReport`]. `cache_hits` /
-    /// `cache_lookups` are this replay's deltas (an external cache may
-    /// carry totals from earlier replays).
+    /// `cache_lookups` / `refresh_swap_count` are this replay's deltas
+    /// (an external cache or registry may carry totals from earlier
+    /// replays).
+    #[allow(clippy::too_many_arguments)]
     fn report(
         &self,
         queries: &Arc<Vec<M::Query>>,
@@ -581,6 +791,7 @@ impl<M: ServableModel> ShardedServer<M> {
         cache_hits: usize,
         cache_lookups: usize,
         counters: &ReplayCounters,
+        refresh_swap_count: usize,
     ) -> ServeReport {
         let mean_of = |xs: Vec<f64>| {
             if xs.is_empty() {
@@ -596,9 +807,10 @@ impl<M: ServableModel> ShardedServer<M> {
         } else {
             0.0
         };
+        let pinned = self.registry.pin();
         ServeReport {
             queries: queries.len(),
-            shards: self.shards.len(),
+            shards: pinned.n_shards(),
             initial: LatencyStats::from_samples(
                 outcomes.iter().map(|o| o.initial_latency_s).collect(),
             ),
@@ -639,8 +851,85 @@ impl<M: ServableModel> ShardedServer<M> {
             cache_hits,
             cache_lookups,
             stage1_bucket_cost_ewma_s: self.stage1_bucket_cost.lock().unwrap().clone(),
+            refresh_swap_count,
+            refresh_generation: pinned.generation(),
+            stale_queries: outcomes.iter().filter(|o| o.during_rebuild).count(),
+            during_rebuild: LatencyStats::from_samples(
+                outcomes
+                    .iter()
+                    .filter(|o| o.during_rebuild)
+                    .map(|o| o.total_latency_s)
+                    .collect(),
+            ),
+            per_class: per_class_reports(pinned.shards()[0].as_ref(), queries.as_slice(), outcomes),
         }
     }
+}
+
+/// Group the per-request anytime traces by
+/// [`ServableModel::query_class`] and average them stage by stage into
+/// per-class curves, sorted by class tag (deterministic output).
+fn per_class_reports<M: ServableModel>(
+    merger: &M,
+    queries: &[M::Query],
+    outcomes: &[QueryOutcome<M::Response>],
+) -> Vec<ClassReport> {
+    #[derive(Default)]
+    struct StageAccum {
+        queries: usize,
+        wall_s: f64,
+        accuracy_sum: f64,
+        accuracy_n: usize,
+        refined_buckets: f64,
+    }
+    #[derive(Default)]
+    struct ClassAccum {
+        queries: usize,
+        cache_hits: usize,
+        stages: BTreeMap<ServeStage, StageAccum>,
+    }
+    let mut classes: BTreeMap<String, ClassAccum> = BTreeMap::new();
+    for (o, q) in outcomes.iter().zip(queries) {
+        let Some(class) = merger.query_class(q, o.final_response()) else {
+            continue;
+        };
+        let acc = classes.entry(class).or_default();
+        acc.queries += 1;
+        acc.cache_hits += usize::from(o.cache_hit);
+        for tp in &o.trace {
+            let s = acc.stages.entry(tp.stage).or_default();
+            s.queries += 1;
+            s.wall_s += tp.wall_s;
+            if let Some(a) = tp.accuracy {
+                s.accuracy_sum += a;
+                s.accuracy_n += 1;
+            }
+            s.refined_buckets += tp.refined_buckets as f64;
+        }
+    }
+    classes
+        .into_iter()
+        .map(|(class, acc)| ClassReport {
+            class,
+            queries: acc.queries,
+            cache_hits: acc.cache_hits,
+            curve: acc
+                .stages
+                .into_iter()
+                .map(|(stage, s)| {
+                    let n = s.queries.max(1) as f64;
+                    ClassCurvePoint {
+                        stage,
+                        queries: s.queries,
+                        mean_wall_s: s.wall_s / n,
+                        mean_accuracy: (s.accuracy_n > 0)
+                            .then(|| s.accuracy_sum / s.accuracy_n as f64),
+                        mean_refined_buckets: s.refined_buckets / n,
+                    }
+                })
+                .collect(),
+        })
+        .collect()
 }
 
 #[cfg(test)]
@@ -708,6 +997,10 @@ mod tests {
 
         fn query_key(&self, q: &ToyQuery) -> Option<Vec<u8>> {
             Some(q.target.to_le_bytes().to_vec())
+        }
+
+        fn query_class(&self, q: &ToyQuery, _r: &i64) -> Option<String> {
+            Some(format!("target:{}", q.target))
         }
     }
 
@@ -1016,6 +1309,179 @@ mod tests {
         assert_eq!(hit.trace.len(), 1);
         assert_eq!(hit.trace[0].stage, ServeStage::CacheHit);
         assert_eq!(hit.trace[0].wall_s, 0.0);
+    }
+
+    /// Test hook: publishes a prepared replacement shard set at the
+    /// first cycle boundary and reports a fixed fake queue depth.
+    struct SwapOnCycle {
+        registry: Arc<crate::refresh::ModelRegistry<ToyModel>>,
+        replacement: Option<Vec<Arc<ToyModel>>>,
+        depth: usize,
+    }
+
+    impl RefreshHook<ToyModel> for SwapOnCycle {
+        fn poll(&mut self, _engine: &Engine) -> Result<()> {
+            Ok(())
+        }
+        fn cycle(&mut self, _engine: &Engine) -> Result<()> {
+            if let Some(shards) = self.replacement.take() {
+                self.registry.publish(shards)?;
+            }
+            Ok(())
+        }
+        fn finish(&mut self, _engine: &Engine) -> Result<()> {
+            Ok(())
+        }
+        fn queue_depth(&self) -> usize {
+            self.depth
+        }
+    }
+
+    #[test]
+    fn swap_between_batches_pins_generations_and_yields_no_stale_hits() {
+        use crate::refresh::ModelRegistry;
+        let engine = Engine::new(2);
+        // Generation 0 answers 5 (initial-only, budget Off); the
+        // replacement generation answers 7.
+        let registry = Arc::new(
+            ModelRegistry::new(vec![
+                Arc::new(ToyModel {
+                    buckets: vec![(5, 9), (3, 4), (1, 1)],
+                    panic_on_refine: false,
+                }),
+                Arc::new(ToyModel {
+                    buckets: vec![(2, 2), (4, 12)],
+                    panic_on_refine: false,
+                }),
+            ])
+            .unwrap(),
+        );
+        let cache: SharedAnswerCache<i64> = Arc::new(Mutex::new(AnswerCache::new(16)));
+        registry.attach_cache(Arc::clone(&cache));
+        let mut hook = SwapOnCycle {
+            registry: Arc::clone(&registry),
+            replacement: Some(vec![
+                Arc::new(ToyModel {
+                    buckets: vec![(7, 9)],
+                    panic_on_refine: false,
+                }),
+                Arc::new(ToyModel {
+                    buckets: vec![(4, 4)],
+                    panic_on_refine: false,
+                }),
+            ]),
+            depth: 0,
+        };
+        let server = ShardedServer::with_registry(Arc::clone(&registry));
+        let config = ServeConfig {
+            refresh: RefreshPolicy { every: 4 },
+            ..cfg(2, 10.0, RefineBudget::Off, 16)
+        };
+        let (outcomes, report) = server
+            .serve_with_refresh(&engine, queries(8), &config, &cache, &mut hook)
+            .unwrap();
+        // q0/q1 compute on generation 0 and fill the cache; q2/q3 hit.
+        for o in &outcomes[..2] {
+            assert!(!o.cache_hit);
+            assert_eq!(*o.final_response(), 5);
+            assert_eq!(o.generation, 0);
+        }
+        for o in &outcomes[2..4] {
+            assert!(o.cache_hit);
+            assert_eq!(*o.final_response(), 5);
+            assert_eq!(o.generation, 0);
+        }
+        // The swap lands before q4 is admitted: the cache was
+        // invalidated (zero stale hits — q4/q5 recompute on the new
+        // generation) and later repeats hit the fresh entry.
+        for o in &outcomes[4..6] {
+            assert!(!o.cache_hit, "post-swap queries must not replay stale answers");
+            assert_eq!(*o.final_response(), 7, "answered by the new generation");
+            assert_eq!(o.generation, 1);
+        }
+        for o in &outcomes[6..8] {
+            assert!(o.cache_hit);
+            assert_eq!(*o.final_response(), 7);
+            assert_eq!(o.generation, 1);
+        }
+        assert_eq!(report.refresh_swap_count, 1);
+        assert_eq!(report.refresh_generation, 1);
+        assert_eq!(report.cache_hits, 4);
+        assert_eq!(report.stale_queries, 0, "hook reported no rebuild in flight");
+        assert_eq!(report.shards, 2);
+    }
+
+    #[test]
+    fn live_queue_depth_feeds_shedding_and_staleness() {
+        use crate::refresh::ModelRegistry;
+        let engine = Engine::new(2);
+        let registry = Arc::new(
+            ModelRegistry::new(vec![Arc::new(ToyModel {
+                buckets: vec![(5, 9), (3, 4)],
+                panic_on_refine: false,
+            })])
+            .unwrap(),
+        );
+        let cache: SharedAnswerCache<i64> = Arc::new(Mutex::new(AnswerCache::new(0)));
+        let mut hook = SwapOnCycle {
+            registry: Arc::clone(&registry),
+            replacement: None,
+            depth: 1, // a rebuild is (pretend) in flight the whole time
+        };
+        let server = ShardedServer::with_registry(registry);
+        // Under the replay stand-in the last batch has nothing pending
+        // behind it and would not shed; the live feed (1 pending
+        // rebuild) sheds every batch.
+        let config = ServeConfig {
+            shed_queue_depth: 0,
+            ..cfg(2, 10.0, RefineBudget::All, 0)
+        };
+        let (outcomes, report) = server
+            .serve_with_refresh(&engine, queries(4), &config, &cache, &mut hook)
+            .unwrap();
+        assert_eq!(report.shed_batches, 2, "live depth 1 > shed depth 0");
+        assert!(outcomes.iter().all(|o| o.refined.is_none()));
+        assert!(outcomes.iter().all(|o| o.during_rebuild));
+        assert_eq!(report.stale_queries, 4);
+        assert_eq!(report.during_rebuild.n, 4);
+        assert!(report.during_rebuild.p99_s >= 0.0);
+    }
+
+    #[test]
+    fn per_class_curves_group_outcomes_by_query_class() {
+        let engine = Engine::new(2);
+        let qs: Vec<ToyQuery> = (0..6)
+            .map(|i| ToyQuery {
+                target: if i % 2 == 0 { 12 } else { 0 },
+            })
+            .collect();
+        let (_, report) = server(false)
+            .serve(&engine, qs, &cfg(2, 10.0, RefineBudget::All, 0))
+            .unwrap();
+        assert_eq!(report.per_class.len(), 2);
+        let c0 = &report.per_class[0];
+        let c12 = &report.per_class[1];
+        assert_eq!(c0.class, "target:0");
+        assert_eq!(c12.class, "target:12");
+        assert_eq!(c0.queries, 3);
+        assert_eq!(c12.queries, 3);
+        assert_eq!(c0.cache_hits, 0);
+        // Every query refined: each class curve has an Initial and a
+        // Refined point covering all its queries.
+        for c in [c0, c12] {
+            assert_eq!(c.curve.len(), 2);
+            assert_eq!(c.curve[0].stage, ServeStage::Initial);
+            assert_eq!(c.curve[1].stage, ServeStage::Refined);
+            assert_eq!(c.curve[0].queries, 3);
+            assert_eq!(c.curve[1].queries, 3);
+            assert!(c.curve[1].mean_wall_s >= c.curve[0].mean_wall_s);
+            assert!(c.curve[1].mean_refined_buckets > 0.0);
+        }
+        // Refinement recovers 12 exactly: perfect for the 12-class
+        // (accuracy 0), twelve off for the 0-class.
+        assert_eq!(c12.curve[1].mean_accuracy, Some(0.0));
+        assert_eq!(c0.curve[1].mean_accuracy, Some(-12.0));
+        assert!(c12.curve[0].mean_accuracy.unwrap() <= c12.curve[1].mean_accuracy.unwrap());
     }
 
     #[test]

@@ -36,6 +36,15 @@
 //! * [`query_log`] — synthetic query logs derived from the workbench
 //!   datasets, for replay by the CLI `serve` command, the e2e tests and
 //!   `benches/serving.rs`;
+//! * live refresh — the server pins one
+//!   [`crate::refresh::ModelRegistry`] generation per micro-batch at
+//!   dispatch, so shard sets rebuilt in the background
+//!   ([`crate::refresh::Rebuilder`]) can be hot-swapped between batches
+//!   without tearing in-flight queries; the executor drives the
+//!   machinery through a [`RefreshHook`]
+//!   ([`ShardedServer::serve_with_refresh`], cycles every
+//!   [`ServeConfig::refresh`]`.every` queries), and shedding reads the
+//!   hook's *live* queue depth instead of the replay stand-in;
 //! * [`ServeReport`] — per-run latency percentiles plus
 //!   initial-vs-refined accuracy, cache hit counts, shed/bucket-group
 //!   counters and the budget calibration state; each [`QueryOutcome`]
@@ -51,5 +60,10 @@ pub mod stats;
 
 pub use batcher::MicroBatcher;
 pub use cache::AnswerCache;
-pub use executor::{QueryOutcome, RefineBudget, ServeConfig, ShardedServer, SharedAnswerCache};
-pub use stats::{LatencyStats, ServeReport, ServeStage, ServeTracePoint};
+pub use executor::{
+    QueryOutcome, RefineBudget, RefreshHook, RefreshPolicy, ServeConfig, ShardedServer,
+    SharedAnswerCache,
+};
+pub use stats::{
+    ClassCurvePoint, ClassReport, LatencyStats, ServeReport, ServeStage, ServeTracePoint,
+};

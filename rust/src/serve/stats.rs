@@ -45,7 +45,7 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
 }
 
 /// Which response a per-request trace checkpoint describes.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub enum ServeStage {
     /// The always-delivered aggregated-only answer (stage 1).
     Initial,
@@ -54,6 +54,17 @@ pub enum ServeStage {
     /// A hot-query cache hit replaying a previously computed final
     /// response at zero compute.
     CacheHit,
+}
+
+impl ServeStage {
+    /// Stable lowercase name (report tables, JSON artifacts).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ServeStage::Initial => "initial",
+            ServeStage::Refined => "refined",
+            ServeStage::CacheHit => "cache_hit",
+        }
+    }
 }
 
 /// One per-request anytime checkpoint — the serving analogue of the
@@ -73,6 +84,41 @@ pub struct ServeTracePoint {
     pub accuracy: Option<f64>,
     /// Buckets expanded by this checkpoint, summed over shards.
     pub refined_buckets: usize,
+}
+
+/// One point of a per-class anytime curve: the mean availability time
+/// and quality of one response stage across every query of the class
+/// that reached it.
+#[derive(Clone, Debug)]
+pub struct ClassCurvePoint {
+    /// Which response this point averages.
+    pub stage: ServeStage,
+    /// Queries of the class that produced this stage.
+    pub queries: usize,
+    /// Mean seconds from batch dispatch to this response.
+    pub mean_wall_s: f64,
+    /// Mean per-query accuracy at this stage (ground truth permitting).
+    pub mean_accuracy: Option<f64>,
+    /// Mean buckets expanded by this stage, summed over shards.
+    pub mean_refined_buckets: f64,
+}
+
+/// Per-class serving summary: every query of one class
+/// ([`crate::model::ServableModel::query_class`] — label for kNN,
+/// user-activity band for CF, delivered cluster for k-means) with its
+/// anytime curve, derived by averaging the per-request
+/// [`ServeTracePoint`] checkpoints stage by stage.
+#[derive(Clone, Debug)]
+pub struct ClassReport {
+    /// The class tag.
+    pub class: String,
+    /// Queries grouped under this class.
+    pub queries: usize,
+    /// Of those, answered from the hot-query cache.
+    pub cache_hits: usize,
+    /// The class's anytime curve, one point per stage reached (initial,
+    /// then refined, then cache-hit replays), in stage order.
+    pub curve: Vec<ClassCurvePoint>,
 }
 
 /// One serving run's report: how fast the initial answers landed, how
@@ -127,6 +173,29 @@ pub struct ServeReport {
     /// bucket), seconds — the [`crate::serve::RefineBudget::Deadline`]
     /// calibration state after the replay (0.0 = shard never measured).
     pub stage1_bucket_cost_ewma_s: Vec<f64>,
+    /// Atomic shard-set swaps published during this replay (0 when no
+    /// refresh hook was attached or no rebuild completed).
+    pub refresh_swap_count: usize,
+    /// The registry generation after the replay (0 = the initial
+    /// build; counts every publish over the registry's lifetime, so it
+    /// can exceed `refresh_swap_count` when the registry served earlier
+    /// replays).
+    pub refresh_generation: u64,
+    /// Queries dispatched while a background shard rebuild was in
+    /// flight — answered from a generation known to be missing
+    /// already-ingested data (the refresh staleness counter; 0 without
+    /// a refresh hook).
+    pub stale_queries: usize,
+    /// Total-latency stats over exactly those stale queries: what
+    /// serving cost while rebuilds were competing for the worker pool
+    /// (`during_rebuild.p99_s` is the bench's
+    /// `serve_during_rebuild_p99_s`). Zeros when no query was served
+    /// during a rebuild.
+    pub during_rebuild: LatencyStats,
+    /// Per-class anytime curves (classes defined by
+    /// [`crate::model::ServableModel::query_class`]; empty when the
+    /// model classifies nothing), sorted by class tag.
+    pub per_class: Vec<ClassReport>,
 }
 
 impl ServeReport {

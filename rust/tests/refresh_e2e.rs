@@ -1,0 +1,372 @@
+//! End-to-end tests for live model refresh: incremental delta merges
+//! must be bit-identical to one-shot (from-scratch) folds for all three
+//! models, and the full serve-while-refreshing pipeline (DeltaLog →
+//! background Rebuilder → atomic registry swap → cache invalidation)
+//! must complete swaps without dropping queries or serving stale cache
+//! hits.
+
+use std::sync::{Arc, Mutex};
+
+use accurateml::approx::algorithm1::RefineOrder;
+use accurateml::data::gaussian::GaussianMixtureSpec;
+use accurateml::data::points::RowRange;
+use accurateml::data::ratings::{LatentFactorSpec, RatingsSplit};
+use accurateml::error::Result;
+use accurateml::lsh::bucketizer::Grouping;
+use accurateml::mapreduce::engine::Engine;
+use accurateml::mapreduce::metrics::TaskMetrics;
+use accurateml::model::{
+    CfModel, CfQuery, InitialAnswer, KmeansModel, KmeansQuery, KnnModel, KnnQuery, ServableModel,
+};
+use accurateml::refresh::{
+    DeltaLog, LabeledPoint, ModelRegistry, Rebuilder, RefreshDriver, Refreshable,
+};
+use accurateml::runtime::backend::NativeBackend;
+use accurateml::serve::{
+    AnswerCache, RefineBudget, RefreshPolicy, ServeConfig, ShardedServer, SharedAnswerCache,
+};
+
+// ---------------------------------------------------------------------
+// Bit-identity: incremental folds == one-shot (from-scratch) fold.
+// ---------------------------------------------------------------------
+
+/// Compare two same-model shards by what they *serve*: stage-1 answers
+/// (answer + correlations) and full-budget refinements must be
+/// bit-identical on every probe query.
+fn assert_serves_identically<M: ServableModel>(a: &M, b: &M, probes: &[M::Query])
+where
+    M::Answer: PartialEq + std::fmt::Debug,
+{
+    assert_eq!(a.n_buckets(), b.n_buckets());
+    assert_eq!(a.n_originals(), b.n_originals());
+    for (i, q) in probes.iter().enumerate() {
+        let ia: InitialAnswer<M::Answer> = a.answer_initial(q);
+        let ib = b.answer_initial(q);
+        assert_eq!(ia.answer, ib.answer, "probe {i}: stage-1 answer");
+        assert_eq!(ia.correlations, ib.correlations, "probe {i}: correlations");
+        let ra = a.refine(q, &ia, a.n_buckets());
+        let rb = b.refine(q, &ib, b.n_buckets());
+        assert_eq!(ra, rb, "probe {i}: full-budget refinement");
+    }
+}
+
+#[test]
+fn knn_incremental_merge_equals_from_scratch() {
+    let data = GaussianMixtureSpec {
+        n_points: 600,
+        dim: 8,
+        n_classes: 3,
+        noise: 0.2,
+        test_fraction: 0.05,
+        seed: 11,
+        ..Default::default()
+    }
+    .generate()
+    .unwrap();
+    let base = KnnModel::build(
+        &data.train,
+        &data.train_labels,
+        RowRange { start: 0, end: 400 },
+        5,
+        8.0,
+        Grouping::Lsh,
+        RefineOrder::Correlation,
+        7,
+        Arc::new(NativeBackend),
+        &mut TaskMetrics::default(),
+    )
+    .unwrap();
+    let deltas: Vec<LabeledPoint> = (400..data.train.rows())
+        .map(|r| LabeledPoint {
+            features: data.train.row(r).to_vec(),
+            label: data.train_labels[r],
+        })
+        .collect();
+    // Incremental: three refresh cycles. From-scratch: one fold of the
+    // whole log.
+    let inc = base
+        .merge_deltas(&deltas[..60])
+        .unwrap()
+        .merge_deltas(&deltas[60..130])
+        .unwrap()
+        .merge_deltas(&deltas[130..])
+        .unwrap();
+    let scratch = base.merge_deltas(&deltas).unwrap();
+    assert_eq!(inc.agg().centroids, scratch.agg().centroids, "bit-identical aggregates");
+    assert_eq!(inc.agg().index, scratch.agg().index);
+    assert_eq!(inc.agg().labels, scratch.agg().labels);
+    let probes: Vec<KnnQuery> = (0..data.test.rows())
+        .map(|t| KnnQuery {
+            features: data.test.row(t).to_vec(),
+            label: None,
+            seed: t as u64,
+        })
+        .collect();
+    assert_serves_identically(&inc, &scratch, &probes);
+    Refreshable::validate(&inc).unwrap();
+}
+
+#[test]
+fn cf_incremental_merge_equals_from_scratch() {
+    let ratings = LatentFactorSpec {
+        n_users: 220,
+        n_items: 64,
+        n_factors: 4,
+        mean_ratings_per_user: 16,
+        ..Default::default()
+    }
+    .generate()
+    .unwrap();
+    let split = Arc::new(RatingsSplit::new(&ratings, 10, 0.2, 9).unwrap());
+    let user_means = accurateml::model::cf::user_means(&split);
+    let base = CfModel::build(
+        &split,
+        &user_means,
+        RowRange { start: 0, end: 160 },
+        10.0,
+        Grouping::Lsh,
+        RefineOrder::Correlation,
+        3,
+        Arc::new(NativeBackend),
+        &mut TaskMetrics::default(),
+    )
+    .unwrap();
+    let deltas: Vec<u32> = (160..split.train.n_users() as u32).collect();
+    let inc = base
+        .merge_deltas(&deltas[..25])
+        .unwrap()
+        .merge_deltas(&deltas[25..])
+        .unwrap();
+    let scratch = base.merge_deltas(&deltas).unwrap();
+    assert_eq!(inc.cagg(), scratch.cagg(), "bit-identical centered aggregates");
+    assert_eq!(inc.agg_means(), scratch.agg_means());
+    assert_eq!(inc.agg().index, scratch.agg().index);
+    assert_eq!(inc.users(), scratch.users());
+    let probes: Vec<CfQuery> = (0..split.test.len().min(12))
+        .map(|i| {
+            let (u, item, actual) = split.test[i];
+            let (cu, mean) = split.train.centered_row(u as usize);
+            let m = split.train.n_items();
+            let mut mu = vec![0.0f32; m];
+            for &it in &split.train.rated[u as usize] {
+                mu[it as usize] = 1.0;
+            }
+            CfQuery {
+                cu: Arc::new(cu),
+                mu: Arc::new(mu),
+                mean,
+                item,
+                exclude: Some(u),
+                actual: Some(actual),
+                seed: i as u64,
+            }
+        })
+        .collect();
+    assert_serves_identically(&inc, &scratch, &probes);
+    Refreshable::validate(&inc).unwrap();
+}
+
+#[test]
+fn kmeans_incremental_merge_equals_from_scratch() {
+    let data = GaussianMixtureSpec {
+        n_points: 500,
+        dim: 6,
+        n_classes: 4,
+        noise: 0.2,
+        test_fraction: 0.01,
+        seed: 5,
+        ..Default::default()
+    }
+    .generate()
+    .unwrap();
+    let pts = data.train;
+    let centroids = pts.gather_rows(&[0, 1, 2, 3]);
+    let base = KmeansModel::build(
+        &pts,
+        RowRange { start: 0, end: 350 },
+        &centroids,
+        20.0,
+        Grouping::Lsh,
+        RefineOrder::Correlation,
+        3,
+        Arc::new(NativeBackend),
+        &mut TaskMetrics::default(),
+    )
+    .unwrap();
+    let deltas: Vec<Vec<f32>> = (350..pts.rows()).map(|r| pts.row(r).to_vec()).collect();
+    let inc = base
+        .merge_deltas(&deltas[..50])
+        .unwrap()
+        .merge_deltas(&deltas[50..90])
+        .unwrap()
+        .merge_deltas(&deltas[90..])
+        .unwrap();
+    let scratch = base.merge_deltas(&deltas).unwrap();
+    assert_eq!(inc.centers(), scratch.centers(), "bit-identical bucket centers");
+    assert_eq!(inc.bucket_index(), scratch.bucket_index());
+    let probes: Vec<KmeansQuery> = (0..pts.rows())
+        .step_by(41)
+        .map(|r| KmeansQuery {
+            point: pts.row(r).to_vec(),
+            seed: r as u64,
+        })
+        .collect();
+    assert_serves_identically(&inc, &scratch, &probes);
+    Refreshable::validate(&inc).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// Serve-while-refreshing: the full DeltaLog → Rebuilder → swap loop.
+// ---------------------------------------------------------------------
+
+/// Toy refreshable shard whose answer is its absorbed-delta sum: swaps
+/// are visible in the served responses, so generation pinning, swap
+/// monotonicity and cache-staleness are all directly assertable.
+struct GenModel {
+    value: i64,
+}
+
+impl ServableModel for GenModel {
+    type Query = u64;
+    type Answer = i64;
+    type Response = i64;
+
+    fn n_buckets(&self) -> usize {
+        1
+    }
+    fn n_originals(&self) -> usize {
+        1
+    }
+    fn answer_initial(&self, _q: &u64) -> InitialAnswer<i64> {
+        InitialAnswer {
+            answer: self.value,
+            correlations: vec![0.0],
+        }
+    }
+    fn refine(&self, _q: &u64, initial: &InitialAnswer<i64>, _budget: usize) -> i64 {
+        initial.answer
+    }
+    fn merge(&self, _q: &u64, partials: &[i64]) -> i64 {
+        partials.iter().copied().max().unwrap_or(0)
+    }
+    fn accuracy(&self, _q: &u64, _r: &i64) -> Option<f64> {
+        None
+    }
+    fn query_key(&self, q: &u64) -> Option<Vec<u8>> {
+        Some(q.to_le_bytes().to_vec())
+    }
+}
+
+impl Refreshable for GenModel {
+    type Delta = i64;
+
+    fn merge_deltas(&self, deltas: &[i64]) -> Result<GenModel> {
+        Ok(GenModel {
+            value: self.value + deltas.iter().sum::<i64>(),
+        })
+    }
+
+    fn validate(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+#[test]
+fn background_rebuilds_swap_atomically_with_zero_stale_cache_hits() {
+    let engine = Engine::new(2);
+    let registry = Arc::new(
+        ModelRegistry::new(vec![
+            Arc::new(GenModel { value: 1 }),
+            Arc::new(GenModel { value: 2 }),
+        ])
+        .unwrap(),
+    );
+    let cache: SharedAnswerCache<i64> = Arc::new(Mutex::new(AnswerCache::new(16)));
+    registry.attach_cache(Arc::clone(&cache));
+    let log = Arc::new(DeltaLog::new(2));
+    let rebuilder = Rebuilder::new(Arc::clone(&registry), Arc::clone(&log));
+    // One ingestion slice: +10 to each shard (round-robin), cycled in
+    // at query 8 of 40.
+    let mut driver = RefreshDriver::new(rebuilder, vec![vec![10, 10]]);
+    let server = ShardedServer::with_registry(Arc::clone(&registry));
+    let config = ServeConfig {
+        batch_size: 2,
+        deadline_s: 30.0,
+        budget: RefineBudget::Off,
+        cache_capacity: 16,
+        refresh: RefreshPolicy { every: 8 },
+        ..ServeConfig::default()
+    };
+    let queries: Vec<u64> = vec![0; 40];
+    let (outcomes, report) = server
+        .serve_with_refresh(&engine, queries, &config, &cache, &mut driver)
+        .unwrap();
+
+    // Nothing dropped or rejected.
+    assert_eq!(outcomes.len(), 40);
+    // Both shards had deltas, so both rebuilds eventually published
+    // (the final drain guarantees it even if the replay outran them).
+    assert_eq!(report.refresh_swap_count, 2);
+    assert_eq!(report.refresh_generation, 2);
+    let stats = driver.stats();
+    assert_eq!(stats.swaps, 2);
+    assert_eq!(stats.deltas_merged, 2);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(log.pending(), 0, "every delta was folded in");
+
+    // Responses only ever move forward through the generations:
+    // gen 0 serves max(1,2)=2; partial swaps serve 11 or 12; gen 2
+    // serves max(11,12)=12. A value going backwards would mean a batch
+    // tore across generations or a stale cached answer was replayed.
+    let finals: Vec<i64> = outcomes.iter().map(|o| *o.final_response()).collect();
+    assert_eq!(finals[0], 2, "starts on the initial build");
+    for w in finals.windows(2) {
+        assert!(w[1] >= w[0], "response regressed: {w:?}");
+    }
+    for f in &finals {
+        assert!([2, 11, 12].contains(f), "unexpected response {f}");
+    }
+    // Generations never regress either, and each outcome's response is
+    // consistent with its pinned generation.
+    for w in outcomes.windows(2) {
+        assert!(w[1].generation >= w[0].generation);
+    }
+    // Zero stale cache hits: every hit replays the answer of a non-hit
+    // outcome of the SAME generation — a swap in between would have
+    // invalidated the entry and forced a miss.
+    let mut last_computed: Option<&accurateml::serve::QueryOutcome<i64>> = None;
+    for o in &outcomes {
+        if o.cache_hit {
+            let prev = last_computed.expect("a hit implies an earlier computed answer");
+            assert_eq!(o.generation, prev.generation, "hit crossed a swap");
+            assert_eq!(*o.final_response(), *prev.final_response(), "stale cached answer");
+        } else {
+            last_computed = Some(o);
+        }
+    }
+    assert!(report.cache_hits > 0, "repeat traffic should hit");
+}
+
+#[test]
+fn workbench_cf_and_kmeans_refresh_replays_swap() {
+    use accurateml::coordinator::{Scale, Workbench};
+    let wb = Workbench::preset(Scale::Small).unwrap();
+    let cfg = ServeConfig {
+        batch_size: 8,
+        deadline_s: 30.0,
+        budget: RefineBudget::Fraction(0.1),
+        cache_capacity: 0,
+        refresh: RefreshPolicy { every: 12 },
+        ..ServeConfig::default()
+    };
+    let cf = wb.serve_cf_refresh(48, 10.0, &cfg, 0.25).unwrap();
+    assert_eq!(cf.queries, 48);
+    assert!(cf.refresh_swap_count >= 1, "cf: no swap landed");
+    assert!(cf.refined_accuracy.is_some());
+    assert!(!cf.per_class.is_empty(), "cf activity bands");
+
+    let km = wb.serve_kmeans_refresh(48, 20.0, &cfg, 0.25).unwrap();
+    assert_eq!(km.queries, 48);
+    assert!(km.refresh_swap_count >= 1, "kmeans: no swap landed");
+    assert!(!km.per_class.is_empty(), "kmeans cluster classes");
+}
