@@ -31,6 +31,14 @@
 //! the static p99. The batched replay's per-class anytime curves land
 //! under `per_class`.
 //!
+//! Finally, each app runs **open-loop load generation** against an
+//! in-process JSONL daemon (`serve::loadgen`): a capacity probe, then
+//! Poisson arrivals at 0.3x and 3x the measured capacity plus one
+//! bursty cell, all with Zipf-skewed hot keys. The per-app
+//! `load_curves` array carries `offered_qps`, `achieved_qps`,
+//! `p50_s`/`p99_s` (measured from *scheduled* arrival — queueing under
+//! overload is part of the number) and the shed/cache/swap counters.
+//!
 //! A machine-readable `BENCH_serving.json` is written to the working
 //! directory (path printed at the end; CI uploads it as a workflow
 //! artifact).
@@ -49,8 +57,11 @@ use accurateml::approx::algorithm1::refine_budget;
 use accurateml::coordinator::{Scale, Workbench};
 use accurateml::mapreduce::engine::Engine;
 use accurateml::model::ServableModel;
+use accurateml::refresh::Refreshable;
+use accurateml::serve::loadgen::{run_scenario, run_sweep};
 use accurateml::serve::{
-    query_log, RefineBudget, RefreshPolicy, ServeConfig, ServeReport, ShardedServer,
+    query_log, ArrivalProcess, CfWire, KmeansWire, KnnWire, LoadSpec, RefineBudget, RefreshPolicy,
+    ServeConfig, ServeReport, ShardedServer, Session, WireCodec,
 };
 use accurateml::util::json::Json;
 use accurateml::util::table::{f, Table};
@@ -224,6 +235,77 @@ fn refresh_json(report: &ServeReport) -> Json {
 /// (scalar_s, batched_s) stage-2 measurement from [`measure_refine`];
 /// `refresh` is the app's live-refresh replay report (measured by the
 /// caller against its own freshly built shards).
+/// Open-loop load curves for one app: probe capacity with a
+/// deliberately saturating burst, then Poisson cells at 0.3x and 3x
+/// the measured capacity plus one bursty cell at the low rate —
+/// bracketing the knee of the qps-vs-tail-latency curve. Runs a real
+/// [`accurateml::serve::Daemon`] over localhost TCP; shard Arcs are
+/// cheap to clone, the models are shared.
+fn load_curves<M, C>(
+    wb: &Workbench,
+    shards: Vec<Arc<M>>,
+    codec: Arc<C>,
+    key_field: &'static str,
+    users: usize,
+) -> Json
+where
+    M: Refreshable,
+    C: WireCodec<M>,
+{
+    let n = if SMOKE { 120 } else { 600 };
+    let cfg = ServeConfig::builder()
+        .batch_size(16)
+        .deadline_s(if SMOKE { 1.0 } else { 0.050 })
+        .budget(RefineBudget::Fraction(0.05))
+        .cache_capacity(1024)
+        .shed_queue_depth(4)
+        .max_batch_wait_s(0.002)
+        .build()
+        .expect("daemon config");
+    let session = Session::new(shards, cfg).expect("session");
+    let app = codec.app();
+    let base = LoadSpec {
+        offered_qps: 1e5,
+        n_queries: n,
+        users: users.max(1),
+        zipf_s: 1.1,
+        seed: wb.config.seed,
+        arrival: ArrivalProcess::Poisson,
+    };
+    let probe = run_scenario(&wb.engine, &session, Arc::clone(&codec), &base, key_field)
+        .expect("capacity probe");
+    let cap = probe.achieved_qps.max(1.0);
+    let rates = [cap * 0.3, cap * 3.0];
+    let mut cells =
+        run_sweep(&wb.engine, &session, &codec, &base, &rates, key_field).expect("rate sweep");
+    let bursty = LoadSpec {
+        offered_qps: cap * 0.3,
+        arrival: ArrivalProcess::Bursty {
+            period_s: if SMOKE { 0.2 } else { 1.0 },
+            amplitude: 0.9,
+        },
+        ..base
+    };
+    cells.push(run_scenario(&wb.engine, &session, codec, &bursty, key_field).expect("bursty cell"));
+    for c in &cells {
+        println!(
+            "{app} load ({}): offered {:.0} qps -> achieved {:.0} qps, p50 {:.3}ms p99 {:.3}ms, \
+{} shed, cache {}/{}, {} swap(s), {} error(s)",
+            c.arrival,
+            c.offered_qps,
+            c.achieved_qps,
+            c.p50_s * 1e3,
+            c.p99_s * 1e3,
+            c.shed_batches,
+            c.cache_hits,
+            c.cache_lookups,
+            c.swaps,
+            c.errors
+        );
+    }
+    Json::Arr(cells.iter().map(|c| c.to_json()).collect())
+}
+
 fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
     t: &mut Table,
     apps_json: &mut Vec<Json>,
@@ -231,6 +313,7 @@ fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
     app: &str,
     refine: (f64, f64),
     refresh: &ServeReport,
+    curves: Json,
     mut replay: F,
 ) {
     let per_query = replay(&cfgs.per_query);
@@ -254,6 +337,7 @@ fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
         ),
         ("refresh", refresh_json(refresh)),
         ("per_class", per_class_json(&batched.report)),
+        ("load_curves", curves),
     ];
     if cfgs.cache_capacity > 0 {
         let cached = replay(&cfgs.cached);
@@ -342,11 +426,28 @@ fn main() {
     let shards = wb.knn_shards(10.0, 5).expect("knn shards");
     let refine_queries = query_log::knn_query_log(&wb.knn_data, refine_batch, wb.config.seed);
     let refine = measure_refine(&shards, &refine_queries, refine_eps, refine_reps);
-    let refresh = wb
-        .serve_knn_refresh(n_queries, 5, 10.0, &refresh_cfg, delta_frac)
-        .expect("knn refresh replay");
+    let refresh = {
+        let (session, deltas) = wb
+            .knn_refresh_session(5, 10.0, &refresh_cfg, delta_frac)
+            .expect("knn refresh session");
+        let queries = query_log::knn_query_log(&wb.knn_data, n_queries, wb.config.seed);
+        session
+            .replay_with_refresh(&wb.engine, queries, deltas)
+            .expect("knn refresh replay")
+            .1
+    };
+    let curves = load_curves(
+        &wb,
+        shards.clone(),
+        Arc::new(KnnWire {
+            data: Arc::clone(&wb.knn_data),
+            seed: wb.config.seed,
+        }),
+        "test_row",
+        wb.knn_data.test.rows(),
+    );
     let server = ShardedServer::new(shards).expect("server");
-    bench_app(&mut t, &mut apps_json, &cfgs, "knn", refine, &refresh, |cfg| {
+    bench_app(&mut t, &mut apps_json, &cfgs, "knn", refine, &refresh, curves, |cfg| {
         let queries = query_log::knn_query_log(&wb.knn_data, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });
@@ -356,11 +457,28 @@ fn main() {
     let shards = wb.cf_shards(10.0).expect("cf shards");
     let refine_queries = query_log::cf_query_log(&wb.cf_split, refine_batch, wb.config.seed);
     let refine = measure_refine(&shards, &refine_queries, refine_eps, refine_reps);
-    let refresh = wb
-        .serve_cf_refresh(n_queries, 10.0, &refresh_cfg, delta_frac)
-        .expect("cf refresh replay");
+    let refresh = {
+        let (session, deltas) = wb
+            .cf_refresh_session(10.0, &refresh_cfg, delta_frac)
+            .expect("cf refresh session");
+        let queries = query_log::cf_query_log(&wb.cf_split, n_queries, wb.config.seed);
+        session
+            .replay_with_refresh(&wb.engine, queries, deltas)
+            .expect("cf refresh replay")
+            .1
+    };
+    let curves = load_curves(
+        &wb,
+        shards.clone(),
+        Arc::new(CfWire {
+            split: Arc::clone(&wb.cf_split),
+            seed: wb.config.seed,
+        }),
+        "test_row",
+        wb.cf_split.test.len(),
+    );
     let server = ShardedServer::new(shards).expect("server");
-    bench_app(&mut t, &mut apps_json, &cfgs, "cf", refine, &refresh, |cfg| {
+    bench_app(&mut t, &mut apps_json, &cfgs, "cf", refine, &refresh, curves, |cfg| {
         let queries = query_log::cf_query_log(&wb.cf_split, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });
@@ -370,11 +488,28 @@ fn main() {
     let (shards, points) = wb.kmeans_shards(20.0).expect("kmeans shards");
     let refine_queries = query_log::kmeans_query_log(&points, refine_batch, wb.config.seed);
     let refine = measure_refine(&shards, &refine_queries, refine_eps, refine_reps);
-    let refresh = wb
-        .serve_kmeans_refresh(n_queries, 20.0, &refresh_cfg, delta_frac)
-        .expect("kmeans refresh replay");
+    let refresh = {
+        let (session, pts, deltas) = wb
+            .kmeans_refresh_session(20.0, &refresh_cfg, delta_frac)
+            .expect("kmeans refresh session");
+        let queries = query_log::kmeans_query_log(&pts, n_queries, wb.config.seed);
+        session
+            .replay_with_refresh(&wb.engine, queries, deltas)
+            .expect("kmeans refresh replay")
+            .1
+    };
+    let curves = load_curves(
+        &wb,
+        shards.clone(),
+        Arc::new(KmeansWire {
+            points: Arc::clone(&points),
+            seed: wb.config.seed,
+        }),
+        "row",
+        points.rows(),
+    );
     let server = ShardedServer::new(shards).expect("server");
-    bench_app(&mut t, &mut apps_json, &cfgs, "kmeans", refine, &refresh, |cfg| {
+    bench_app(&mut t, &mut apps_json, &cfgs, "kmeans", refine, &refresh, curves, |cfg| {
         let queries = query_log::kmeans_query_log(&points, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });

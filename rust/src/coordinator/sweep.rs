@@ -1,7 +1,7 @@
 //! The workbench: datasets + engine + backend bundled, with runners for
 //! every (app × mode) combination and the paper's sweep grids.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::approx::algorithm1::RefineOrder;
 use crate::approx::ProcessingMode;
@@ -18,12 +18,10 @@ use crate::lsh::bucketizer::Grouping;
 use crate::mapreduce::engine::Engine;
 use crate::mapreduce::metrics::{JobMetrics, TaskMetrics};
 use crate::model::{CfModel, KmeansModel, KnnModel};
-use crate::refresh::{
-    slice_deltas, DeltaLog, LabeledPoint, ModelRegistry, Rebuilder, RefreshDriver, Refreshable,
-};
+use crate::refresh::LabeledPoint;
 use crate::runtime::backend::{FallbackBackend, NativeBackend, PjrtBackend, ScoreBackend};
 use crate::runtime::service::PjrtService;
-use crate::serve::{query_log, AnswerCache, ServeConfig, ServeReport, ShardedServer};
+use crate::serve::{query_log, ServeConfig, ServeReport, Session};
 
 /// The paper's sweep grid (§IV-B): compression ratios × refinement
 /// thresholds.
@@ -315,10 +313,21 @@ impl Workbench {
         Ok(shards)
     }
 
+    /// kNN serving session over [`Workbench::knn_shards`]. Accuracy
+    /// metric: 0/1 label correctness, so a replay report's mean
+    /// accuracy is classification accuracy.
+    pub fn knn_session(
+        &self,
+        k: usize,
+        compression_ratio: f64,
+        cfg: &ServeConfig,
+    ) -> Result<Session<KnnModel>> {
+        Session::new(self.knn_shards(compression_ratio, k)?, *cfg)
+    }
+
     /// Replay `n_queries` synthetic kNN queries (held-out test points)
-    /// against the sharded model. Accuracy metric: 0/1 label
-    /// correctness, so the report's mean accuracy is classification
-    /// accuracy.
+    /// against the sharded model.
+    #[deprecated(note = "use `Workbench::knn_session` + `Session::replay`")]
     pub fn serve_knn(
         &self,
         n_queries: usize,
@@ -326,10 +335,9 @@ impl Workbench {
         compression_ratio: f64,
         cfg: &ServeConfig,
     ) -> Result<ServeReport> {
-        let server = ShardedServer::new(self.knn_shards(compression_ratio, k)?)?;
+        let session = self.knn_session(k, compression_ratio, cfg)?;
         let queries = query_log::knn_query_log(&self.knn_data, n_queries, self.config.seed);
-        let (_, report) = server.serve(&self.engine, queries, cfg)?;
-        Ok(report)
+        Ok(session.replay(&self.engine, queries)?.1)
     }
 
     /// Per-partition CF shard models over the training users.
@@ -356,19 +364,28 @@ impl Workbench {
         Ok(shards)
     }
 
-    /// Replay `n_queries` synthetic CF queries (held-out ratings).
-    /// Accuracy metric: negative squared rating error, so RMSE =
+    /// CF serving session over [`Workbench::cf_shards`]. Accuracy
+    /// metric: negative squared rating error, so RMSE =
     /// `sqrt(-mean_accuracy)`.
+    pub fn cf_session(
+        &self,
+        compression_ratio: f64,
+        cfg: &ServeConfig,
+    ) -> Result<Session<CfModel>> {
+        Session::new(self.cf_shards(compression_ratio)?, *cfg)
+    }
+
+    /// Replay `n_queries` synthetic CF queries (held-out ratings).
+    #[deprecated(note = "use `Workbench::cf_session` + `Session::replay`")]
     pub fn serve_cf(
         &self,
         n_queries: usize,
         compression_ratio: f64,
         cfg: &ServeConfig,
     ) -> Result<ServeReport> {
-        let server = ShardedServer::new(self.cf_shards(compression_ratio)?)?;
+        let session = self.cf_session(compression_ratio, cfg)?;
         let queries = query_log::cf_query_log(&self.cf_split, n_queries, self.config.seed);
-        let (_, report) = server.serve(&self.engine, queries, cfg)?;
-        Ok(report)
+        Ok(session.replay(&self.engine, queries)?.1)
     }
 
     /// Per-partition k-means shard models over the kNN point set, with
@@ -417,21 +434,32 @@ impl Workbench {
         Ok((shards, points))
     }
 
+    /// k-means serving session over [`Workbench::kmeans_shards`] (also
+    /// returns the point set so callers can derive query logs from
+    /// it). Accuracy metric: negative squared distance to the chosen
+    /// representative (deterministically non-decreasing under
+    /// refinement).
+    pub fn kmeans_session(
+        &self,
+        compression_ratio: f64,
+        cfg: &ServeConfig,
+    ) -> Result<(Session<KmeansModel>, Arc<Matrix>)> {
+        let (shards, points) = self.kmeans_shards(compression_ratio)?;
+        Ok((Session::new(shards, *cfg)?, points))
+    }
+
     /// Replay `n_queries` synthetic k-means assignment queries against
-    /// shards built on centroids trained by an exact run. Accuracy
-    /// metric: negative squared distance to the chosen representative
-    /// (deterministically non-decreasing under refinement).
+    /// shards built on centroids trained by an exact run.
+    #[deprecated(note = "use `Workbench::kmeans_session` + `Session::replay`")]
     pub fn serve_kmeans(
         &self,
         n_queries: usize,
         compression_ratio: f64,
         cfg: &ServeConfig,
     ) -> Result<ServeReport> {
-        let (shards, points) = self.kmeans_shards(compression_ratio)?;
-        let server = ShardedServer::new(shards)?;
+        let (session, points) = self.kmeans_session(compression_ratio, cfg)?;
         let queries = query_log::kmeans_query_log(&points, n_queries, self.config.seed);
-        let (_, report) = server.serve(&self.engine, queries, cfg)?;
-        Ok(report)
+        Ok(session.replay(&self.engine, queries)?.1)
     }
 
     /// How many training rows the *base* shards are built from when a
@@ -442,48 +470,18 @@ impl Workbench {
         ((n as f64 * (1.0 - frac)).round() as usize).clamp(partitions.max(1).min(n), n)
     }
 
-    /// Shared refresh-replay harness: wrap the base shards in an
-    /// epoch-versioned registry with an attached answer cache, cut the
-    /// delta reserve into one ingestion slice per refresh cycle
-    /// (`cfg.refresh.every` queries apart), and replay the log with
-    /// background rebuilds + atomic hot-swaps interleaved.
-    fn serve_refresh_replay<M: Refreshable>(
+    /// kNN refresh session: shards built on the first `1 - delta_frac`
+    /// of the training rows, with the held-back remainder returned as
+    /// the labeled-point ingestion reserve. Feed the reserve to
+    /// [`Session::replay_with_refresh`] (which cuts it into one slice
+    /// per refresh cycle) or to a daemon's `ingest` stream.
+    pub fn knn_refresh_session(
         &self,
-        shards: Vec<Arc<M>>,
-        queries: Vec<M::Query>,
-        cfg: &ServeConfig,
-        deltas: Vec<M::Delta>,
-    ) -> Result<ServeReport> {
-        let registry = Arc::new(ModelRegistry::new(shards)?);
-        let cache = Arc::new(Mutex::new(AnswerCache::new(cfg.cache_capacity)));
-        registry.attach_cache(Arc::clone(&cache));
-        let log = Arc::new(DeltaLog::new(registry.n_shards()));
-        let rebuilder = Rebuilder::new(Arc::clone(&registry), log);
-        let cycles = if cfg.refresh.every > 0 {
-            queries.len().saturating_sub(1) / cfg.refresh.every
-        } else {
-            0
-        };
-        let mut driver = RefreshDriver::new(rebuilder, slice_deltas(deltas, cycles));
-        let server = ShardedServer::with_registry(registry);
-        let (_, report) =
-            server.serve_with_refresh(&self.engine, queries, cfg, &cache, &mut driver)?;
-        Ok(report)
-    }
-
-    /// Replay `n_queries` kNN queries with live refresh: shards are
-    /// built on the first `1 - delta_frac` of the training rows, the
-    /// held-back remainder is ingested as labeled-point deltas every
-    /// `cfg.refresh.every` queries, and background rebuilds hot-swap
-    /// refreshed shards in without dropping in-flight queries.
-    pub fn serve_knn_refresh(
-        &self,
-        n_queries: usize,
         k: usize,
         compression_ratio: f64,
         cfg: &ServeConfig,
         delta_frac: f64,
-    ) -> Result<ServeReport> {
+    ) -> Result<(Session<KnnModel>, Vec<LabeledPoint>)> {
         let n = self.knn_data.train.rows();
         let base = self.base_rows(n, delta_frac, self.config.n_partitions);
         let mut shards = Vec::new();
@@ -511,20 +509,36 @@ impl Workbench {
                 label: self.knn_data.train_labels[r],
             })
             .collect();
-        let queries = query_log::knn_query_log(&self.knn_data, n_queries, self.config.seed);
-        self.serve_refresh_replay(shards, queries, cfg, deltas)
+        Ok((Session::new(shards, *cfg)?, deltas))
     }
 
-    /// CF variant of [`Workbench::serve_knn_refresh`]: the held-back
-    /// training *users* are the ingestion reserve (their global row
-    /// ids are the deltas; rating rows come from the shared split).
-    pub fn serve_cf_refresh(
+    /// Replay `n_queries` kNN queries with live refresh: the
+    /// [`Workbench::knn_refresh_session`] reserve is ingested every
+    /// `cfg.refresh.every` queries, and background rebuilds hot-swap
+    /// refreshed shards in without dropping in-flight queries.
+    #[deprecated(note = "use `Workbench::knn_refresh_session` + `Session::replay_with_refresh`")]
+    pub fn serve_knn_refresh(
         &self,
         n_queries: usize,
+        k: usize,
         compression_ratio: f64,
         cfg: &ServeConfig,
         delta_frac: f64,
     ) -> Result<ServeReport> {
+        let (session, deltas) = self.knn_refresh_session(k, compression_ratio, cfg, delta_frac)?;
+        let queries = query_log::knn_query_log(&self.knn_data, n_queries, self.config.seed);
+        Ok(session.replay_with_refresh(&self.engine, queries, deltas)?.1)
+    }
+
+    /// CF variant of [`Workbench::knn_refresh_session`]: the held-back
+    /// training *users* are the ingestion reserve (their global row
+    /// ids are the deltas; rating rows come from the shared split).
+    pub fn cf_refresh_session(
+        &self,
+        compression_ratio: f64,
+        cfg: &ServeConfig,
+        delta_frac: f64,
+    ) -> Result<(Session<CfModel>, Vec<u32>)> {
         let n = self.cf_split.train.n_users();
         let base = self.base_rows(n, delta_frac, self.config.cf_partitions);
         let user_means = crate::model::cf::user_means(&self.cf_split);
@@ -547,22 +561,35 @@ impl Workbench {
             )?));
         }
         let deltas: Vec<u32> = (base..n).map(|u| u as u32).collect();
-        let queries = query_log::cf_query_log(&self.cf_split, n_queries, self.config.seed);
-        self.serve_refresh_replay(shards, queries, cfg, deltas)
+        Ok((Session::new(shards, *cfg)?, deltas))
     }
 
-    /// k-means variant of [`Workbench::serve_knn_refresh`]: centroids
-    /// are trained by an exact run over the full point set (training is
-    /// not refreshed — only the shards' aggregated buckets grow), base
-    /// shards cover the first `1 - delta_frac` of the points, and the
-    /// held-back points are the ingestion reserve.
-    pub fn serve_kmeans_refresh(
+    /// CF variant of [`Workbench::serve_knn_refresh`].
+    #[deprecated(note = "use `Workbench::cf_refresh_session` + `Session::replay_with_refresh`")]
+    pub fn serve_cf_refresh(
         &self,
         n_queries: usize,
         compression_ratio: f64,
         cfg: &ServeConfig,
         delta_frac: f64,
     ) -> Result<ServeReport> {
+        let (session, deltas) = self.cf_refresh_session(compression_ratio, cfg, delta_frac)?;
+        let queries = query_log::cf_query_log(&self.cf_split, n_queries, self.config.seed);
+        Ok(session.replay_with_refresh(&self.engine, queries, deltas)?.1)
+    }
+
+    /// k-means variant of [`Workbench::knn_refresh_session`]: centroids
+    /// are trained by an exact run over the full point set (training is
+    /// not refreshed — only the shards' aggregated buckets grow), base
+    /// shards cover the first `1 - delta_frac` of the points, and the
+    /// held-back points are the ingestion reserve. Also returns the
+    /// point set for query-log derivation.
+    pub fn kmeans_refresh_session(
+        &self,
+        compression_ratio: f64,
+        cfg: &ServeConfig,
+        delta_frac: f64,
+    ) -> Result<(Session<KmeansModel>, Arc<Matrix>, Vec<Vec<f32>>)> {
         let points = Arc::new(self.knn_data.train.clone());
         let runner = KmeansRunner::with_backend(
             KmeansConfig {
@@ -598,8 +625,24 @@ impl Workbench {
             )?));
         }
         let deltas: Vec<Vec<f32>> = (base..n).map(|r| points.row(r).to_vec()).collect();
+        Ok((Session::new(shards, *cfg)?, points, deltas))
+    }
+
+    /// k-means variant of [`Workbench::serve_knn_refresh`].
+    #[deprecated(
+        note = "use `Workbench::kmeans_refresh_session` + `Session::replay_with_refresh`"
+    )]
+    pub fn serve_kmeans_refresh(
+        &self,
+        n_queries: usize,
+        compression_ratio: f64,
+        cfg: &ServeConfig,
+        delta_frac: f64,
+    ) -> Result<ServeReport> {
+        let (session, points, deltas) =
+            self.kmeans_refresh_session(compression_ratio, cfg, delta_frac)?;
         let queries = query_log::kmeans_query_log(&points, n_queries, self.config.seed);
-        self.serve_refresh_replay(shards, queries, cfg, deltas)
+        Ok(session.replay_with_refresh(&self.engine, queries, deltas)?.1)
     }
 
     /// Sampling run whose simulated time matches `target_sim_s` (the
@@ -711,7 +754,9 @@ mod tests {
             cache_capacity: 0,
             ..ServeConfig::default()
         };
-        let report = wb.serve_knn(48, 5, 10.0, &cfg).unwrap();
+        let session = wb.knn_session(5, 10.0, &cfg).unwrap();
+        let queries = query_log::knn_query_log(&wb.knn_data, 48, wb.config.seed);
+        let (_, report) = session.replay(&wb.engine, queries).unwrap();
         assert_eq!(report.queries, 48);
         assert!(report.shards > 0);
         assert_eq!(report.refined_queries, 48);
@@ -732,7 +777,9 @@ mod tests {
             refresh: crate::serve::RefreshPolicy { every: 16 },
             ..ServeConfig::default()
         };
-        let report = wb.serve_knn_refresh(64, 5, 10.0, &cfg, 0.3).unwrap();
+        let (session, deltas) = wb.knn_refresh_session(5, 10.0, &cfg, 0.3).unwrap();
+        let queries = query_log::knn_query_log(&wb.knn_data, 64, wb.config.seed);
+        let (_, report) = session.replay_with_refresh(&wb.engine, queries, deltas).unwrap();
         // Every query answered (nothing dropped or rejected), at least
         // one atomic swap landed, and the registry generation moved.
         assert_eq!(report.queries, 64);
@@ -741,6 +788,41 @@ mod tests {
         assert!(report.initial_accuracy.is_some());
         assert!(report.refined_accuracy.is_some());
         assert!(!report.per_class.is_empty(), "kNN queries carry labels");
+    }
+
+    /// The deprecated `Workbench::serve_*` wrappers must stay
+    /// output-identical to driving a [`Session`] by hand (ISSUE 6
+    /// acceptance): same accuracies, same counters, for the plain and
+    /// refresh replays. Timing fields are excluded — wall clocks
+    /// differ run to run.
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_match_session_outputs() {
+        let wb = Workbench::preset(Scale::Small).unwrap();
+        let cfg = ServeConfig {
+            batch_size: 16,
+            deadline_s: 30.0,
+            budget: crate::serve::RefineBudget::Fraction(0.1),
+            cache_capacity: 32,
+            ..ServeConfig::default()
+        };
+        let old = wb.serve_knn(48, 5, 10.0, &cfg).unwrap();
+        let session = wb.knn_session(5, 10.0, &cfg).unwrap();
+        let queries = query_log::knn_query_log(&wb.knn_data, 48, wb.config.seed);
+        let (_, new) = session.replay(&wb.engine, queries).unwrap();
+        assert_eq!(old.queries, new.queries);
+        assert_eq!(old.shards, new.shards);
+        assert_eq!(old.refined_queries, new.refined_queries);
+        assert_eq!(old.initial_accuracy, new.initial_accuracy);
+        assert_eq!(old.refined_accuracy, new.refined_accuracy);
+        assert_eq!(old.cache_hits, new.cache_hits);
+        assert_eq!(old.cache_lookups, new.cache_lookups);
+        assert_eq!(old.per_class.len(), new.per_class.len());
+        for (a, b) in old.per_class.iter().zip(&new.per_class) {
+            assert_eq!(a.class, b.class);
+            assert_eq!(a.queries, b.queries);
+            assert_eq!(a.cache_hits, b.cache_hits);
+        }
     }
 
     #[test]

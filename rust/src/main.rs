@@ -3,7 +3,10 @@
 //! Subcommands:
 //!   run       — one (app × mode) job, printed as a result row
 //!   serve     — replay a synthetic query log against the sharded
-//!               anytime serving subsystem; prints latency/accuracy
+//!               anytime serving subsystem (or, with --daemon, run the
+//!               long-lived JSONL server over TCP or stdin/stdout)
+//!   loadgen   — open-loop timestamped load generation against an
+//!               in-process daemon; prints qps-vs-tail-latency cells
 //!   sweep     — the paper's r × ε grid for one app (Figs. 4-7 data)
 //!   compare   — equal-time AccurateML vs sampling (Figs. 8-9 data)
 //!   table1    — regenerate Table I from the algorithm census
@@ -49,7 +52,10 @@ Usage: accurateml <subcommand> [options]
 Subcommands:
   run      run one job            (--app knn|cf --mode exact|accurateml|sampling)
   serve    replay a synthetic query log (--app knn|cf|kmeans); prints
-           p50/p99 latency and initial-vs-refined accuracy
+           p50/p99 latency and initial-vs-refined accuracy; --daemon
+           runs the long-lived JSONL server instead (TCP or --stdio)
+  loadgen  open-loop load generation against an in-process daemon
+           (Poisson/bursty arrivals, Zipf keys, rate sweep)
   sweep    r × ε grid for an app  (--app knn|cf)
   compare  equal-time AccurateML vs sampling
   gen-data pre-generate and cache the synthetic datasets
@@ -70,6 +76,7 @@ fn dispatch(argv: &[String]) -> accurateml::Result<()> {
     match sub.as_str() {
         "run" => cmd_run(rest),
         "serve" => cmd_serve(rest),
+        "loadgen" => cmd_loadgen(rest),
         "sweep" => cmd_sweep(rest),
         "compare" => cmd_compare(rest),
         "gen-data" => cmd_gen_data(rest),
@@ -218,7 +225,7 @@ fn run_streaming(
 }
 
 fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
-    use accurateml::serve::{RefineBudget, RefreshPolicy, ServeConfig};
+    use accurateml::serve::{query_log, RefineBudget, ServeConfig};
 
     let cmd = common_opts(
         Command::new(
@@ -226,6 +233,12 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
             "replay a synthetic query log against the sharded anytime server",
         )
         .opt("app", "knn", "application: knn|cf|kmeans")
+        .flag(
+            "daemon",
+            "run the long-lived JSONL server instead of replaying a log",
+        )
+        .opt("port", "7878", "TCP port for --daemon (0 = pick an ephemeral port)")
+        .flag("stdio", "with --daemon: serve one JSONL session over stdin/stdout")
         .opt("queries", "1000", "queries to replay")
         .opt("batch", "64", "micro-batch size (queries grouped per shard task)")
         .opt(
@@ -275,28 +288,57 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
     let shed = args.get_usize("shed")?;
     let refresh_every = args.get_usize("refresh-every")?;
     let delta_frac = args.get_f64("delta-frac")?;
-    let cfg = ServeConfig {
-        batch_size: args.get_usize("batch")?,
-        deadline_s: args.get_f64("deadline-ms")? / 1e3,
-        budget,
-        cache_capacity: args.get_usize("cache")?,
-        shed_queue_depth: if shed == 0 { usize::MAX } else { shed },
-        max_batch_wait_s: args.get_f64("batch-wait-ms")? / 1e3,
-        refresh: RefreshPolicy {
-            every: refresh_every,
-        },
-    };
+    // The builder is the one place the "0 = off" conventions are
+    // normalized and nonsense flag combinations are rejected.
+    let cfg = ServeConfig::builder()
+        .batch_size(args.get_usize("batch")?)
+        .deadline_s(args.get_f64("deadline-ms")? / 1e3)
+        .budget(budget)
+        .cache_capacity(args.get_usize("cache")?)
+        .shed_queue_depth(shed)
+        .max_batch_wait_s(args.get_f64("batch-wait-ms")? / 1e3)
+        .refresh_every(refresh_every)
+        .build()?;
     let n = args.get_usize("queries")?;
     let ratio = args.get_f64("ratio")?;
+    let k = args.get_usize("k")?;
     let app = args.get("app").to_string();
+    if args.is_set("daemon") {
+        let port = args.get_u64("port")? as u16;
+        return run_daemon_app(&wb, &app, k, ratio, &cfg, args.is_set("stdio"), port);
+    }
     let live = refresh_every > 0;
     let report = match (app.as_str(), live) {
-        ("knn", false) => wb.serve_knn(n, args.get_usize("k")?, ratio, &cfg)?,
-        ("knn", true) => wb.serve_knn_refresh(n, args.get_usize("k")?, ratio, &cfg, delta_frac)?,
-        ("cf", false) => wb.serve_cf(n, ratio, &cfg)?,
-        ("cf", true) => wb.serve_cf_refresh(n, ratio, &cfg, delta_frac)?,
-        ("kmeans", false) => wb.serve_kmeans(n, ratio, &cfg)?,
-        ("kmeans", true) => wb.serve_kmeans_refresh(n, ratio, &cfg, delta_frac)?,
+        ("knn", false) => {
+            let session = wb.knn_session(k, ratio, &cfg)?;
+            let queries = query_log::knn_query_log(&wb.knn_data, n, wb.config.seed);
+            session.replay(&wb.engine, queries)?.1
+        }
+        ("knn", true) => {
+            let (session, deltas) = wb.knn_refresh_session(k, ratio, &cfg, delta_frac)?;
+            let queries = query_log::knn_query_log(&wb.knn_data, n, wb.config.seed);
+            session.replay_with_refresh(&wb.engine, queries, deltas)?.1
+        }
+        ("cf", false) => {
+            let session = wb.cf_session(ratio, &cfg)?;
+            let queries = query_log::cf_query_log(&wb.cf_split, n, wb.config.seed);
+            session.replay(&wb.engine, queries)?.1
+        }
+        ("cf", true) => {
+            let (session, deltas) = wb.cf_refresh_session(ratio, &cfg, delta_frac)?;
+            let queries = query_log::cf_query_log(&wb.cf_split, n, wb.config.seed);
+            session.replay_with_refresh(&wb.engine, queries, deltas)?.1
+        }
+        ("kmeans", false) => {
+            let (session, points) = wb.kmeans_session(ratio, &cfg)?;
+            let queries = query_log::kmeans_query_log(&points, n, wb.config.seed);
+            session.replay(&wb.engine, queries)?.1
+        }
+        ("kmeans", true) => {
+            let (session, points, deltas) = wb.kmeans_refresh_session(ratio, &cfg, delta_frac)?;
+            let queries = query_log::kmeans_query_log(&points, n, wb.config.seed);
+            session.replay_with_refresh(&wb.engine, queries, deltas)?.1
+        }
         (other, _) => {
             return Err(accurateml::Error::Config(format!(
                 "unknown app {other:?} (knn|cf|kmeans)"
@@ -398,6 +440,276 @@ rebuild (p99 {:.3}ms), reserve {:.0}% ingested every {refresh_every} queries",
         _ => {}
     }
     Ok(())
+}
+
+/// Build the app's session + wire codec and hand off to the daemon.
+fn run_daemon_app(
+    wb: &Workbench,
+    app: &str,
+    k: usize,
+    ratio: f64,
+    cfg: &accurateml::serve::ServeConfig,
+    stdio: bool,
+    port: u16,
+) -> accurateml::Result<()> {
+    use accurateml::serve::{CfWire, KmeansWire, KnnWire};
+    let seed = wb.config.seed;
+    match app {
+        "knn" => {
+            let session = wb.knn_session(k, ratio, cfg)?;
+            let codec = Arc::new(KnnWire {
+                data: Arc::clone(&wb.knn_data),
+                seed,
+            });
+            drive_daemon(wb, &session, codec, stdio, port)
+        }
+        "cf" => {
+            let session = wb.cf_session(ratio, cfg)?;
+            let codec = Arc::new(CfWire {
+                split: Arc::clone(&wb.cf_split),
+                seed,
+            });
+            drive_daemon(wb, &session, codec, stdio, port)
+        }
+        "kmeans" => {
+            let (session, points) = wb.kmeans_session(ratio, cfg)?;
+            let codec = Arc::new(KmeansWire { points, seed });
+            drive_daemon(wb, &session, codec, stdio, port)
+        }
+        other => Err(accurateml::Error::Config(format!(
+            "unknown app {other:?} (knn|cf|kmeans)"
+        ))),
+    }
+}
+
+/// Run the daemon over stdio or TCP and print its exit counters.
+/// Status lines go to stderr: in stdio mode stdout *is* the protocol
+/// channel.
+fn drive_daemon<M, C>(
+    wb: &Workbench,
+    session: &accurateml::serve::Session<M>,
+    codec: Arc<C>,
+    stdio: bool,
+    port: u16,
+) -> accurateml::Result<()>
+where
+    M: accurateml::refresh::Refreshable,
+    C: accurateml::serve::WireCodec<M>,
+{
+    use accurateml::serve::Daemon;
+    let daemon = Daemon::new(session, codec);
+    let report = if stdio {
+        eprintln!("serving JSONL on stdin/stdout (EOF or {{\"type\":\"shutdown\"}} stops)");
+        daemon.run_stdio(&wb.engine)?
+    } else {
+        let listener = std::net::TcpListener::bind(("127.0.0.1", port))?;
+        eprintln!(
+            "serving JSONL on {} (send {{\"type\":\"shutdown\"}} to stop)",
+            listener.local_addr()?
+        );
+        daemon.run_listener(&wb.engine, listener)?
+    };
+    eprintln!(
+        "daemon exit: served {} quer(ies), ingested {} delta(s), {} swap(s) -> generation {}, \
+{} shed batch(es), cache {}/{}",
+        report.served,
+        report.ingested,
+        report.swaps,
+        report.generation,
+        report.shed_batches,
+        report.cache_hits,
+        report.cache_lookups
+    );
+    Ok(())
+}
+
+fn cmd_loadgen(argv: &[String]) -> accurateml::Result<()> {
+    use accurateml::serve::{CfWire, KmeansWire, KnnWire, RefineBudget, ServeConfig};
+    use accurateml::util::json::Json;
+
+    let cmd = common_opts(
+        Command::new(
+            "accurateml loadgen",
+            "open-loop load generation against an in-process JSONL daemon",
+        )
+        .opt("app", "knn", "application: knn|cf|kmeans")
+        .opt(
+            "rates",
+            "auto",
+            "offered qps list (comma-separated), or auto = 0.3x/3x measured capacity",
+        )
+        .opt("queries", "400", "queries per scenario cell")
+        .opt("zipf", "1.1", "Zipf exponent for key popularity (0 = uniform)")
+        .opt("arrival", "poisson", "arrival process: poisson|bursty")
+        .opt("burst-period", "2", "seconds per bursty modulation cycle")
+        .opt("burst-amplitude", "0.9", "bursty rate swing in [0, 1]")
+        .opt("batch", "16", "micro-batch size")
+        .opt("batch-wait-ms", "2", "partial-batch flush timeout (ms)")
+        .opt("cache", "1024", "hot-query answer cache capacity (0 = off)")
+        .opt("shed", "4", "pending-batch depth before refinement is shed (0 = never)")
+        .opt("deadline-ms", "50", "per-request deadline in milliseconds")
+        .opt("eps", "0.05", "refinement threshold")
+        .opt("ratio", "10", "compression ratio of the shard models")
+        .opt("k", "5", "k for kNN")
+        .opt("out", "", "merge curves into this JSON artifact (e.g. BENCH_serving.json)"),
+    );
+    let args = cmd.parse(argv)?;
+    let wb = workbench(&args)?;
+    let cfg = ServeConfig::builder()
+        .batch_size(args.get_usize("batch")?)
+        .deadline_s(args.get_f64("deadline-ms")? / 1e3)
+        .budget(RefineBudget::Fraction(args.get_f64("eps")?))
+        .cache_capacity(args.get_usize("cache")?)
+        .shed_queue_depth(args.get_usize("shed")?)
+        .max_batch_wait_s(args.get_f64("batch-wait-ms")? / 1e3)
+        .build()?;
+    let ratio = args.get_f64("ratio")?;
+    let app = args.get("app").to_string();
+    let seed = wb.config.seed;
+    let cells = match app.as_str() {
+        "knn" => {
+            let session = wb.knn_session(args.get_usize("k")?, ratio, &cfg)?;
+            let codec = Arc::new(KnnWire {
+                data: Arc::clone(&wb.knn_data),
+                seed,
+            });
+            sweep_load(&wb, &session, &codec, "test_row", wb.knn_data.test.rows(), &args)?
+        }
+        "cf" => {
+            let session = wb.cf_session(ratio, &cfg)?;
+            let codec = Arc::new(CfWire {
+                split: Arc::clone(&wb.cf_split),
+                seed,
+            });
+            sweep_load(&wb, &session, &codec, "test_row", wb.cf_split.test.len(), &args)?
+        }
+        "kmeans" => {
+            let (session, points) = wb.kmeans_session(ratio, &cfg)?;
+            let users = points.rows();
+            let codec = Arc::new(KmeansWire { points, seed });
+            sweep_load(&wb, &session, &codec, "row", users, &args)?
+        }
+        other => {
+            return Err(accurateml::Error::Config(format!(
+                "unknown app {other:?} (knn|cf|kmeans)"
+            )))
+        }
+    };
+    let mut t = Table::new(
+        &format!("{app} open-loop load generation ({:?} scale)", wb.config.scale),
+        &[
+            "arrival",
+            "offered_qps",
+            "achieved_qps",
+            "queries",
+            "p50_ms",
+            "p99_ms",
+            "shed",
+            "cache_hit%",
+            "swaps",
+            "errors",
+        ],
+    );
+    for c in &cells {
+        let hit_rate = if c.cache_lookups > 0 {
+            c.cache_hits as f64 / c.cache_lookups as f64 * 100.0
+        } else {
+            0.0
+        };
+        t.row(vec![
+            c.arrival.to_string(),
+            f(c.offered_qps, 1),
+            f(c.achieved_qps, 1),
+            c.queries.to_string(),
+            f(c.p50_s * 1e3, 3),
+            f(c.p99_s * 1e3, 3),
+            c.shed_batches.to_string(),
+            f(hit_rate, 1),
+            c.swaps.to_string(),
+            c.errors.to_string(),
+        ]);
+    }
+    print!("{}", t.console());
+    let out = args.get("out");
+    if !out.is_empty() {
+        let path = std::path::Path::new(out);
+        let mut doc = match std::fs::read_to_string(path) {
+            Ok(text) => Json::parse(&text)?,
+            Err(_) => Json::obj(vec![]),
+        };
+        if !matches!(doc, Json::Obj(_)) {
+            doc = Json::obj(vec![]);
+        }
+        let cells_json = Json::Arr(cells.iter().map(|c| c.to_json()).collect());
+        if let Json::Obj(m) = &mut doc {
+            let curves = m
+                .entry("load_curves".to_string())
+                .or_insert_with(|| Json::obj(vec![]));
+            if !matches!(curves, Json::Obj(_)) {
+                *curves = Json::obj(vec![]);
+            }
+            if let Json::Obj(cm) = curves {
+                cm.insert(app.clone(), cells_json);
+            }
+        }
+        std::fs::write(path, doc.pretty())?;
+        println!("merged load_curves.{app} into {}", path.display());
+    }
+    Ok(())
+}
+
+/// Parse the arrival/rate flags and run the sweep for one app. `auto`
+/// rates probe capacity first with a deliberately saturating burst and
+/// then sweep below (0.3x) and above (3x) it, bracketing the knee of
+/// the latency curve.
+fn sweep_load<M, C>(
+    wb: &Workbench,
+    session: &accurateml::serve::Session<M>,
+    codec: &Arc<C>,
+    key_field: &'static str,
+    users: usize,
+    args: &accurateml::util::cli::Args,
+) -> accurateml::Result<Vec<accurateml::serve::ScenarioResult>>
+where
+    M: accurateml::refresh::Refreshable,
+    C: accurateml::serve::WireCodec<M>,
+{
+    use accurateml::serve::loadgen::{run_scenario, run_sweep};
+    use accurateml::serve::{ArrivalProcess, LoadSpec};
+    let arrival = match args.get("arrival") {
+        "poisson" => ArrivalProcess::Poisson,
+        "bursty" => ArrivalProcess::Bursty {
+            period_s: args.get_f64("burst-period")?,
+            amplitude: args.get_f64("burst-amplitude")?,
+        },
+        other => {
+            return Err(accurateml::Error::Config(format!(
+                "unknown arrival {other:?} (poisson|bursty)"
+            )))
+        }
+    };
+    let base = LoadSpec {
+        offered_qps: 1.0,
+        n_queries: args.get_usize("queries")?,
+        users: users.max(1),
+        zipf_s: args.get_f64("zipf")?,
+        seed: wb.config.seed,
+        arrival,
+    };
+    let rates = if args.get("rates") == "auto" {
+        let probe_spec = LoadSpec {
+            offered_qps: 1e5,
+            arrival: ArrivalProcess::Poisson,
+            ..base
+        };
+        let probe = run_scenario(&wb.engine, session, Arc::clone(codec), &probe_spec, key_field)?;
+        let cap = probe.achieved_qps.max(1.0);
+        eprintln!("measured capacity ~{cap:.0} qps; sweeping 0.3x and 3x");
+        vec![cap * 0.3, cap * 3.0]
+    } else {
+        args.get_f64_list("rates")?
+    };
+    run_sweep(&wb.engine, session, codec, &base, &rates, key_field)
 }
 
 fn cmd_sweep(argv: &[String]) -> accurateml::Result<()> {

@@ -1,0 +1,583 @@
+//! The long-running JSONL serving daemon.
+//!
+//! One [`Daemon`] drives a [`Session`] from *live* traffic instead of
+//! a replay log. The threading contract:
+//!
+//! * **Reader threads** — one per client connection (plus one for
+//!   stdin in [`Daemon::run_stdio`]) — parse each line into a
+//!   [`Request`], decode query/delta bodies with the shared
+//!   [`WireCodec`], and forward typed events into one mpsc channel.
+//!   Malformed lines become events too, so every byte written to a
+//!   client comes from the serving thread.
+//! * **The serving thread** pops events, probes the answer cache at
+//!   admission, micro-batches the misses, dispatches through
+//!   [`ShardedServer::serve_admitted`], ingests deltas, and publishes
+//!   finished rebuilds. Publishing on this thread keeps the swap +
+//!   cache-invalidation step atomic with respect to cache inserts
+//!   (the invariant [`ShardedServer::with_registry`] documents).
+//!
+//! Because arrivals are real, the machinery built for replays now
+//! operates on real signals: each request's queue wait (event-queue
+//! time + batcher time) is folded into its reported latencies, the
+//! shedding policy reads the live event-queue depth, and a partial
+//! batch is flushed by time ([`Daemon`] normalizes a time trigger when
+//! the config releases on size only — a daemon must not hold a partial
+//! batch hostage waiting for traffic that may never come).
+//!
+//! Shutdown semantics: on a `shutdown` request the daemon stops
+//! admitting, drains every event already queued (same-connection FIFO
+//! guarantees a client's earlier queries are all answered before its
+//! ack), flushes the partial batch, lets in-flight rebuilds land, then
+//! acks with `{"type":"shutdown","served":N}` and exits.
+
+use std::collections::{HashMap, VecDeque};
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpListener;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::mapreduce::engine::Engine;
+use crate::refresh::{DeltaLog, Rebuilder, Refreshable};
+use crate::serve::batcher::MicroBatcher;
+use crate::serve::executor::{AdmittedQuery, ServeConfig, ServeCounters};
+use crate::serve::protocol::{response_reply, Reply, Request, WireCodec};
+use crate::serve::session::Session;
+use crate::serve::stats::percentile;
+use crate::util::json::Json;
+use crate::util::timer::Stopwatch;
+
+#[cfg(doc)]
+use crate::serve::executor::ShardedServer;
+
+/// Per-connection write halves, keyed by connection id. Registered by
+/// the transport, removed when a reader sees EOF; only the serving
+/// thread writes through them.
+type Writers = Arc<Mutex<HashMap<usize, Arc<Mutex<Box<dyn Write + Send>>>>>>;
+
+/// Recent delivered latencies kept for `stats` percentiles.
+const LATENCY_WINDOW: usize = 4096;
+
+/// One typed event from a reader thread to the serving thread.
+enum Event<Q, D> {
+    /// An admitted (well-formed) query; `queued_at` starts the queue
+    /// wait clock at arrival.
+    Query {
+        conn: usize,
+        id: u64,
+        query: Arc<Q>,
+        queued_at: Stopwatch,
+    },
+    /// Decoded `ingest` deltas.
+    Ingest { conn: usize, deltas: Vec<D> },
+    /// A `stats` request.
+    Stats { conn: usize },
+    /// A `shutdown` request; begins the graceful drain.
+    Shutdown { conn: usize },
+    /// A line that failed to parse or decode; answered with an `error`
+    /// reply from the serving thread.
+    BadLine {
+        conn: usize,
+        id: Option<u64>,
+        message: String,
+    },
+    /// The connection's reader saw EOF; unregister its writer.
+    Gone { conn: usize },
+}
+
+/// A cache-missed query waiting in the micro-batcher.
+struct PendingReq<Q> {
+    conn: usize,
+    id: u64,
+    query: Arc<Q>,
+    key: Option<Vec<u8>>,
+    queued_at: Stopwatch,
+}
+
+/// Counters over one daemon run (deltas against the session's
+/// lifetime cache/registry totals, so repeated runs over one session
+/// report per-run numbers).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DaemonReport {
+    /// Queries answered (including cache hits).
+    pub served: u64,
+    /// Deltas accepted into the log via `ingest`.
+    pub ingested: usize,
+    /// Micro-batches downgraded to initial-only under queue pressure.
+    pub shed_batches: usize,
+    /// Answer-cache hits during this run.
+    pub cache_hits: usize,
+    /// Answer-cache lookups during this run.
+    pub cache_lookups: usize,
+    /// Atomic shard swaps published during this run.
+    pub swaps: usize,
+    /// Registry generation at exit.
+    pub generation: u64,
+}
+
+/// Mutable serving-loop state, bundled so the event handlers can
+/// borrow pieces of it disjointly.
+struct LoopState<M: Refreshable> {
+    batcher: MicroBatcher<PendingReq<M::Query>>,
+    counters: ServeCounters,
+    window: VecDeque<f64>,
+    served: u64,
+    ingested: usize,
+    log: Arc<DeltaLog<M::Delta>>,
+    rebuilder: Rebuilder<M>,
+}
+
+/// The long-running JSONL server over a [`Session`]; see the module
+/// docs for the threading and shutdown contracts.
+pub struct Daemon<'a, M: Refreshable, C: WireCodec<M>> {
+    session: &'a Session<M>,
+    codec: Arc<C>,
+}
+
+impl<'a, M: Refreshable, C: WireCodec<M>> Daemon<'a, M, C> {
+    /// A daemon serving `session` with `codec` translating wire bodies.
+    pub fn new(session: &'a Session<M>, codec: Arc<C>) -> Daemon<'a, M, C> {
+        Daemon { session, codec }
+    }
+
+    /// The effective time trigger for partial batches: the configured
+    /// wait when set, else a quarter of the deadline clamped to
+    /// [0.5ms, 10ms] — a daemon with a size-only batcher would starve
+    /// partial batches under sparse traffic.
+    fn batch_wait_s(config: &ServeConfig) -> f64 {
+        if config.max_batch_wait_s > 0.0 {
+            config.max_batch_wait_s
+        } else {
+            (config.deadline_s / 4.0).clamp(0.0005, 0.01)
+        }
+    }
+
+    /// Serve over TCP on `127.0.0.1:port` until a client sends
+    /// `shutdown`.
+    pub fn run_tcp(&self, engine: &Engine, port: u16) -> Result<DaemonReport> {
+        let listener = TcpListener::bind(("127.0.0.1", port)).map_err(Error::Io)?;
+        self.run_listener(engine, listener)
+    }
+
+    /// Serve over an already-bound listener (tests and the load
+    /// generator bind an ephemeral port themselves). Accepts
+    /// connections on a helper thread; each connection gets a dedicated
+    /// reader thread. Returns after the graceful shutdown drain.
+    pub fn run_listener(&self, engine: &Engine, listener: TcpListener) -> Result<DaemonReport> {
+        listener.set_nonblocking(true).map_err(Error::Io)?;
+        let (tx, rx) = mpsc::channel::<Event<M::Query, M::Delta>>();
+        let queued = Arc::new(AtomicUsize::new(0));
+        let writers: Writers = Arc::new(Mutex::new(HashMap::new()));
+        let running = Arc::new(AtomicBool::new(true));
+
+        let accept = {
+            let tx = tx.clone();
+            let queued = Arc::clone(&queued);
+            let writers = Arc::clone(&writers);
+            let running = Arc::clone(&running);
+            let codec = Arc::clone(&self.codec);
+            thread::spawn(move || {
+                let mut next_conn = 1usize;
+                while running.load(Ordering::SeqCst) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let Ok(write_half) = stream.try_clone() else {
+                                continue;
+                            };
+                            let conn = next_conn;
+                            next_conn += 1;
+                            writers.lock().unwrap().insert(
+                                conn,
+                                Arc::new(Mutex::new(Box::new(write_half) as Box<dyn Write + Send>)),
+                            );
+                            spawn_reader::<M, C>(
+                                conn,
+                                Box::new(stream),
+                                Arc::clone(&codec),
+                                tx.clone(),
+                                Arc::clone(&queued),
+                                false,
+                            );
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })
+        };
+        drop(tx);
+        let report = self.serve_events(engine, rx, &queued, &writers);
+        running.store(false, Ordering::SeqCst);
+        let _ = accept.join();
+        report
+    }
+
+    /// Serve one implicit connection over stdin/stdout (conn id 0).
+    /// EOF on stdin counts as `shutdown`, so piping a finite request
+    /// stream in exits cleanly even without an explicit shutdown line.
+    pub fn run_stdio(&self, engine: &Engine) -> Result<DaemonReport> {
+        let (tx, rx) = mpsc::channel::<Event<M::Query, M::Delta>>();
+        let queued = Arc::new(AtomicUsize::new(0));
+        let writers: Writers = Arc::new(Mutex::new(HashMap::new()));
+        writers.lock().unwrap().insert(
+            0,
+            Arc::new(Mutex::new(
+                Box::new(std::io::stdout()) as Box<dyn Write + Send>
+            )),
+        );
+        spawn_reader::<M, C>(
+            0,
+            Box::new(std::io::stdin()),
+            Arc::clone(&self.codec),
+            tx,
+            Arc::clone(&queued),
+            true,
+        );
+        self.serve_events(engine, rx, &queued, &writers)
+    }
+
+    /// The serving loop: pop events, admit, batch, dispatch, refresh.
+    fn serve_events(
+        &self,
+        engine: &Engine,
+        rx: mpsc::Receiver<Event<M::Query, M::Delta>>,
+        queued: &Arc<AtomicUsize>,
+        writers: &Writers,
+    ) -> Result<DaemonReport> {
+        let config = self.session.config();
+        let (hits0, lookups0) = {
+            let c = self.session.cache().lock().unwrap();
+            (c.hits(), c.lookups())
+        };
+        let swaps0 = self.session.registry().swap_count();
+        let log = Arc::new(DeltaLog::new(self.session.server().n_shards()));
+        let mut st = LoopState {
+            batcher: MicroBatcher::with_max_wait(config.batch_size, Self::batch_wait_s(config)),
+            counters: ServeCounters::default(),
+            window: VecDeque::with_capacity(LATENCY_WINDOW),
+            served: 0,
+            ingested: 0,
+            rebuilder: Rebuilder::new(Arc::clone(self.session.registry()), Arc::clone(&log)),
+            log,
+        };
+        // The idle tick bounds how stale a partial batch or a finished
+        // rebuild can get while no events arrive.
+        let tick = Duration::from_secs_f64(Self::batch_wait_s(config).clamp(0.0005, 0.005));
+        let mut shutdown_from = None;
+        loop {
+            // Publish finished rebuilds first (on this thread — see the
+            // module docs), so the next admission pins the freshest
+            // generation.
+            st.rebuilder.try_collect();
+            match rx.recv_timeout(tick) {
+                Ok(ev) => {
+                    if let Some(conn) = self.handle_event(engine, &mut st, ev, queued, writers)? {
+                        shutdown_from = Some(conn);
+                        break;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+            if let Some(batch) = st.batcher.flush_expired() {
+                self.dispatch(engine, &mut st, batch, queued, writers)?;
+            }
+        }
+        // Graceful drain: everything enqueued before the shutdown was
+        // processed gets answered (same-connection FIFO means all of
+        // the shutting-down client's earlier queries are in here).
+        while let Ok(ev) = rx.try_recv() {
+            if matches!(ev, Event::Shutdown { .. }) {
+                continue;
+            }
+            self.handle_event(engine, &mut st, ev, queued, writers)?;
+        }
+        if let Some(batch) = st.batcher.flush() {
+            self.dispatch(engine, &mut st, batch, queued, writers)?;
+        }
+        st.rebuilder.collect_blocking();
+        if let Some(conn) = shutdown_from {
+            write_line(writers, conn, &Reply::Shutdown { served: st.served });
+        }
+        let (hits, lookups) = {
+            let c = self.session.cache().lock().unwrap();
+            (c.hits(), c.lookups())
+        };
+        Ok(DaemonReport {
+            served: st.served,
+            ingested: st.ingested,
+            shed_batches: st.counters.shed_batches,
+            cache_hits: (hits - hits0) as usize,
+            cache_lookups: (lookups - lookups0) as usize,
+            swaps: self.session.registry().swap_count() - swaps0,
+            generation: self.session.registry().generation(),
+        })
+    }
+
+    /// Handle one event; returns the requesting connection when it was
+    /// a shutdown.
+    fn handle_event(
+        &self,
+        engine: &Engine,
+        st: &mut LoopState<M>,
+        ev: Event<M::Query, M::Delta>,
+        queued: &Arc<AtomicUsize>,
+        writers: &Writers,
+    ) -> Result<Option<usize>> {
+        match ev {
+            Event::Query {
+                conn,
+                id,
+                query,
+                queued_at,
+            } => {
+                queued.fetch_sub(1, Ordering::SeqCst);
+                let (key, hit) = self
+                    .session
+                    .server()
+                    .probe_cache(query.as_ref(), self.session.cache());
+                if let Some(mut o) = hit {
+                    // A hit's compute latencies are zero; its delivered
+                    // latency is the event-queue wait.
+                    let wait = queued_at.elapsed_s();
+                    o.initial_latency_s += wait;
+                    o.total_latency_s += wait;
+                    for tp in &mut o.trace {
+                        tp.wall_s += wait;
+                    }
+                    push_latency(&mut st.window, o.total_latency_s);
+                    st.served += 1;
+                    let codec = self.codec.as_ref();
+                    let reply = response_reply(id, wait, &o, |r| codec.response_to_json(r));
+                    write_line(writers, conn, &reply);
+                } else if let Some(batch) = st.batcher.push(PendingReq {
+                    conn,
+                    id,
+                    query,
+                    key,
+                    queued_at,
+                }) {
+                    self.dispatch(engine, st, batch, queued, writers)?;
+                }
+                Ok(None)
+            }
+            Event::Ingest { conn, deltas } => {
+                let accepted = deltas.len();
+                st.log.append_round_robin(deltas);
+                st.rebuilder.request_refresh(engine.pool());
+                st.ingested += accepted;
+                let reply = Reply::Ingested {
+                    accepted,
+                    generation: self.session.registry().generation(),
+                };
+                write_line(writers, conn, &reply);
+                Ok(None)
+            }
+            Event::Stats { conn } => {
+                let body = self.stats_json(st, queued);
+                write_line(writers, conn, &Reply::Stats { body });
+                Ok(None)
+            }
+            Event::BadLine { conn, id, message } => {
+                write_line(writers, conn, &Reply::Error { id, message });
+                Ok(None)
+            }
+            Event::Gone { conn } => {
+                writers.lock().unwrap().remove(&conn);
+                Ok(None)
+            }
+            Event::Shutdown { conn } => Ok(Some(conn)),
+        }
+    }
+
+    /// Dispatch one micro-batch through the push-mode executor and
+    /// write each response to its connection.
+    fn dispatch(
+        &self,
+        engine: &Engine,
+        st: &mut LoopState<M>,
+        batch: Vec<PendingReq<M::Query>>,
+        queued: &Arc<AtomicUsize>,
+        writers: &Writers,
+    ) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        let config = self.session.config();
+        // Live queue depth in batches: undelivered query events plus
+        // in-flight rebuilds (both compete for the worker pool) — the
+        // signal the shedding policy acts on.
+        let in_flight = st.rebuilder.in_flight();
+        let pending =
+            queued.load(Ordering::SeqCst).div_ceil(config.batch_size.max(1)) + in_flight;
+        let during_rebuild = in_flight > 0;
+        let mut routes: Vec<(usize, u64, f64)> = Vec::with_capacity(batch.len());
+        let admitted: Vec<AdmittedQuery<M>> = batch
+            .into_iter()
+            .map(|p| {
+                let wait = p.queued_at.elapsed_s();
+                let tag = routes.len() as u64;
+                routes.push((p.conn, p.id, wait));
+                AdmittedQuery {
+                    tag,
+                    query: p.query,
+                    key: p.key,
+                    queue_wait_s: wait,
+                }
+            })
+            .collect();
+        let codec = self.codec.as_ref();
+        let window = &mut st.window;
+        let served = &mut st.served;
+        let mut replies: Vec<(usize, Reply)> = Vec::with_capacity(routes.len());
+        self.session.server().serve_admitted(
+            engine,
+            admitted,
+            config,
+            pending,
+            during_rebuild,
+            self.session.cache(),
+            &mut st.counters,
+            &mut |tag, outcome| {
+                let (conn, id, wait) = routes[tag as usize];
+                push_latency(window, outcome.total_latency_s);
+                *served += 1;
+                let reply = response_reply(id, wait, &outcome, |r| codec.response_to_json(r));
+                replies.push((conn, reply));
+            },
+        )?;
+        for (conn, reply) in replies {
+            write_line(writers, conn, &reply);
+        }
+        Ok(())
+    }
+
+    /// The `stats` reply body: counters, live depth, generation, cache
+    /// state, recent latency percentiles, and the active config.
+    fn stats_json(&self, st: &LoopState<M>, queued: &Arc<AtomicUsize>) -> Json {
+        let (hits, lookups, len) = {
+            let c = self.session.cache().lock().unwrap();
+            (c.hits(), c.lookups(), c.len())
+        };
+        let mut lat: Vec<f64> = st.window.iter().copied().collect();
+        lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        Json::obj(vec![
+            ("app", self.codec.app().into()),
+            ("served", Json::Num(st.served as f64)),
+            ("queued", queued.load(Ordering::SeqCst).into()),
+            ("batcher_pending", st.batcher.pending().into()),
+            ("rebuilds_in_flight", st.rebuilder.in_flight().into()),
+            (
+                "generation",
+                Json::Num(self.session.registry().generation() as f64),
+            ),
+            ("swaps", self.session.registry().swap_count().into()),
+            ("ingested", st.ingested.into()),
+            ("shed_batches", st.counters.shed_batches.into()),
+            ("cache_hits", Json::Num(hits as f64)),
+            ("cache_lookups", Json::Num(lookups as f64)),
+            ("cache_len", len.into()),
+            ("window_p50_ms", (percentile(&lat, 0.50) * 1e3).into()),
+            ("window_p99_ms", (percentile(&lat, 0.99) * 1e3).into()),
+            ("config", self.session.config().to_json()),
+        ])
+    }
+}
+
+/// Append to the bounded latency window, evicting the oldest sample.
+fn push_latency(window: &mut VecDeque<f64>, latency_s: f64) {
+    if window.len() >= LATENCY_WINDOW {
+        window.pop_front();
+    }
+    window.push_back(latency_s);
+}
+
+/// Write one reply line to a connection (serving thread only). A gone
+/// or broken connection is ignored — the reply has nowhere to go.
+fn write_line(writers: &Writers, conn: usize, reply: &Reply) {
+    let writer = writers.lock().unwrap().get(&conn).cloned();
+    if let Some(writer) = writer {
+        let mut w = writer.lock().unwrap();
+        let _ = writeln!(w, "{}", reply.to_line());
+        let _ = w.flush();
+    }
+}
+
+/// Spawn the dedicated reader thread for one connection. Detached: it
+/// exits on EOF, a read error, or when the serving loop is gone (its
+/// sends start failing). `shutdown_on_eof` makes EOF behave like a
+/// `shutdown` request (the stdio transport).
+fn spawn_reader<M: Refreshable, C: WireCodec<M>>(
+    conn: usize,
+    stream: Box<dyn Read + Send>,
+    codec: Arc<C>,
+    tx: mpsc::Sender<Event<M::Query, M::Delta>>,
+    queued: Arc<AtomicUsize>,
+    shutdown_on_eof: bool,
+) {
+    thread::spawn(move || {
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let event = match Request::parse_line(&line) {
+                Ok(Request::Query { id, body }) => match codec.query_from_json(&body) {
+                    Ok(q) => {
+                        queued.fetch_add(1, Ordering::SeqCst);
+                        Event::Query {
+                            conn,
+                            id,
+                            query: Arc::new(q),
+                            queued_at: Stopwatch::new(),
+                        }
+                    }
+                    Err(e) => Event::BadLine {
+                        conn,
+                        id: Some(id),
+                        message: e.to_string(),
+                    },
+                },
+                Ok(Request::Ingest { body }) => match decode_deltas(codec.as_ref(), &body) {
+                    Ok(deltas) => Event::Ingest { conn, deltas },
+                    Err(e) => Event::BadLine {
+                        conn,
+                        id: None,
+                        message: e.to_string(),
+                    },
+                },
+                Ok(Request::Stats) => Event::Stats { conn },
+                Ok(Request::Shutdown) => {
+                    let _ = tx.send(Event::Shutdown { conn });
+                    return;
+                }
+                Err(e) => Event::BadLine {
+                    conn,
+                    id: None,
+                    message: e.to_string(),
+                },
+            };
+            if tx.send(event).is_err() {
+                return;
+            }
+        }
+        if shutdown_on_eof {
+            let _ = tx.send(Event::Shutdown { conn });
+        } else {
+            let _ = tx.send(Event::Gone { conn });
+        }
+    });
+}
+
+/// Decode an `ingest` body's `"deltas"` array element-wise.
+fn decode_deltas<M: Refreshable, C: WireCodec<M>>(codec: &C, body: &Json) -> Result<Vec<M::Delta>> {
+    body.arr_of("deltas")?
+        .iter()
+        .map(|d| codec.delta_from_json(d))
+        .collect()
+}

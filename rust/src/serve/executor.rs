@@ -42,6 +42,7 @@ use crate::serve::cache::AnswerCache;
 use crate::serve::stats::{
     ClassCurvePoint, ClassReport, LatencyStats, ServeReport, ServeStage, ServeTracePoint,
 };
+use crate::util::json::Json;
 use crate::util::timer::Stopwatch;
 
 /// An answer cache shared *across* `serve` calls: hand the same handle
@@ -168,6 +169,177 @@ impl Default for ServeConfig {
     }
 }
 
+impl ServeConfig {
+    /// Start a validating builder over the defaults. The builder is the
+    /// one place the "0 = off" conventions are normalized
+    /// ([`ServeConfigBuilder::shed_queue_depth`]`(0)` means never shed,
+    /// i.e. `usize::MAX`) and nonsense is rejected (batch size 0,
+    /// non-finite deadlines, out-of-range budget fractions), so CLI
+    /// flags, daemon wire configs and bench configs share one parse
+    /// path.
+    pub fn builder() -> ServeConfigBuilder {
+        ServeConfigBuilder {
+            cfg: ServeConfig::default(),
+        }
+    }
+
+    /// Serialize with the same hand-rolled codec the daemon's wire
+    /// protocol uses (`serve/protocol.rs`), for stats replies and bench
+    /// reports. `shed_queue_depth` is written in the builder's "0 =
+    /// never shed" convention.
+    pub fn to_json(&self) -> Json {
+        let (budget, eps, buckets) = match self.budget {
+            RefineBudget::Off => ("off", None, None),
+            RefineBudget::Buckets(n) => ("buckets", None, Some(n)),
+            RefineBudget::Fraction(e) => ("fraction", Some(e), None),
+            RefineBudget::All => ("all", None, None),
+            RefineBudget::Deadline => ("deadline", None, None),
+        };
+        let mut pairs = vec![
+            ("batch_size", self.batch_size.into()),
+            ("deadline_s", self.deadline_s.into()),
+            ("budget", budget.into()),
+        ];
+        if let Some(e) = eps {
+            pairs.push(("eps", e.into()));
+        }
+        if let Some(n) = buckets {
+            pairs.push(("buckets", n.into()));
+        }
+        let shed = if self.shed_queue_depth == usize::MAX {
+            0
+        } else {
+            self.shed_queue_depth
+        };
+        pairs.push(("cache_capacity", self.cache_capacity.into()));
+        pairs.push(("shed_queue_depth", shed.into()));
+        pairs.push(("max_batch_wait_s", self.max_batch_wait_s.into()));
+        pairs.push(("refresh_every", self.refresh.every.into()));
+        Json::obj(pairs)
+    }
+
+    /// Parse a config produced by [`ServeConfig::to_json`] (or written
+    /// by hand); every field is optional over the defaults. Goes
+    /// through [`ServeConfig::builder`], so wire configs get the same
+    /// validation and normalization as CLI flags.
+    pub fn from_json(v: &Json) -> Result<ServeConfig> {
+        let mut b = ServeConfig::builder();
+        if let Some(n) = v.get("batch_size") {
+            b = b.batch_size(n.as_num()? as usize);
+        }
+        if let Some(n) = v.get("deadline_s") {
+            b = b.deadline_s(n.as_num()?);
+        }
+        if let Some(s) = v.get("budget") {
+            let budget = match s.as_str()? {
+                "off" | "none" => RefineBudget::Off,
+                "all" => RefineBudget::All,
+                "deadline" => RefineBudget::Deadline,
+                "fraction" | "eps" => RefineBudget::Fraction(match v.get("eps") {
+                    Some(e) => e.as_num()?,
+                    None => 0.05,
+                }),
+                "buckets" => RefineBudget::Buckets(v.num_of("buckets")? as usize),
+                other => return Err(Error::Config(format!("unknown budget {other:?}"))),
+            };
+            b = b.budget(budget);
+        }
+        if let Some(n) = v.get("cache_capacity") {
+            b = b.cache_capacity(n.as_num()? as usize);
+        }
+        if let Some(n) = v.get("shed_queue_depth") {
+            b = b.shed_queue_depth(n.as_num()? as usize);
+        }
+        if let Some(n) = v.get("max_batch_wait_s") {
+            b = b.max_batch_wait_s(n.as_num()?);
+        }
+        if let Some(n) = v.get("refresh_every") {
+            b = b.refresh_every(n.as_num()? as usize);
+        }
+        b.build()
+    }
+}
+
+/// Validating builder for [`ServeConfig`]; see
+/// [`ServeConfig::builder`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServeConfigBuilder {
+    cfg: ServeConfig,
+}
+
+impl ServeConfigBuilder {
+    /// Queries grouped per shard task; 0 is rejected at build.
+    pub fn batch_size(mut self, n: usize) -> Self {
+        self.cfg.batch_size = n;
+        self
+    }
+
+    /// Per-request deadline in seconds; must be finite and `>= 0`.
+    pub fn deadline_s(mut self, s: f64) -> Self {
+        self.cfg.deadline_s = s;
+        self
+    }
+
+    /// Refinement budget policy. A [`RefineBudget::Fraction`] outside
+    /// `(0, 1]` is rejected at build (use [`RefineBudget::Off`] for "no
+    /// refinement" instead of a zero fraction).
+    pub fn budget(mut self, budget: RefineBudget) -> Self {
+        self.cfg.budget = budget;
+        self
+    }
+
+    /// Hot-query answer cache entries; 0 disables the cache.
+    pub fn cache_capacity(mut self, n: usize) -> Self {
+        self.cfg.cache_capacity = n;
+        self
+    }
+
+    /// Load-shed threshold in pending micro-batches; 0 means never
+    /// shed (normalized to `usize::MAX` here, in one place).
+    pub fn shed_queue_depth(mut self, depth: usize) -> Self {
+        self.cfg.shed_queue_depth = if depth == 0 { usize::MAX } else { depth };
+        self
+    }
+
+    /// Time-based micro-batch flush in seconds; `<= 0` releases on
+    /// size only.
+    pub fn max_batch_wait_s(mut self, s: f64) -> Self {
+        self.cfg.max_batch_wait_s = s;
+        self
+    }
+
+    /// Queries between refresh cycles; 0 disables periodic cycles.
+    pub fn refresh_every(mut self, every: usize) -> Self {
+        self.cfg.refresh = RefreshPolicy { every };
+        self
+    }
+
+    /// Validate and produce the config.
+    pub fn build(self) -> Result<ServeConfig> {
+        let c = self.cfg;
+        if c.batch_size == 0 {
+            return Err(Error::Config("batch_size must be at least 1".to_string()));
+        }
+        if !c.deadline_s.is_finite() || c.deadline_s < 0.0 {
+            return Err(Error::Config(format!(
+                "deadline_s must be finite and >= 0, got {}",
+                c.deadline_s
+            )));
+        }
+        if !c.max_batch_wait_s.is_finite() {
+            return Err(Error::Config("max_batch_wait_s must be finite".to_string()));
+        }
+        if let RefineBudget::Fraction(eps) = c.budget {
+            if !eps.is_finite() || eps <= 0.0 || eps > 1.0 {
+                return Err(Error::Config(format!(
+                    "budget fraction must be in (0, 1], got {eps}"
+                )));
+            }
+        }
+        Ok(c)
+    }
+}
+
 /// Everything the server did for one request.
 #[derive(Clone, Debug)]
 pub struct QueryOutcome<R> {
@@ -177,9 +349,12 @@ pub struct QueryOutcome<R> {
     /// The refined response, when any budget was spent on *this*
     /// request (always `None` for cache hits).
     pub refined: Option<R>,
-    /// Seconds from batch dispatch to the merged initial response.
+    /// Seconds to the merged initial response: batch dispatch to merge,
+    /// plus any queue wait the admitting caller reported
+    /// ([`AdmittedQuery::queue_wait_s`]; 0 in replays).
     pub initial_latency_s: f64,
-    /// Seconds from batch dispatch to the final response.
+    /// Seconds to the final response, on the same clock as
+    /// `initial_latency_s`.
     pub total_latency_s: f64,
     /// Per-query accuracy of the initial response (ground truth
     /// permitting). On a cache hit this scores the cached final
@@ -218,14 +393,37 @@ impl<R> QueryOutcome<R> {
     }
 }
 
-/// Per-replay accounting accumulated across micro-batches.
-#[derive(Default)]
-struct ReplayCounters {
+/// Accounting accumulated across micro-batches. The replay loop owns
+/// one per run; the daemon owns one per process and folds it into its
+/// stats replies and final report.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeCounters {
     /// Batches whose refinement was shed under queue pressure.
-    shed_batches: usize,
+    pub shed_batches: usize,
     /// Stage-2 bucket-groups scored (one backend call each), summed
     /// over (batch, shard).
-    stage2_bucket_groups: usize,
+    pub stage2_bucket_groups: usize,
+}
+
+/// One admitted (cache-missed) request handed to the push-mode batch
+/// primitive [`ShardedServer::serve_admitted`].
+pub struct AdmittedQuery<M: ServableModel> {
+    /// Caller-assigned tag delivered back through the sink with this
+    /// request's outcome (the input index for replays, an internal
+    /// dispatch id for the daemon).
+    pub tag: u64,
+    /// The query, individually `Arc`'d so pool tasks can share it
+    /// without cloning the payload.
+    pub query: Arc<M::Query>,
+    /// Precomputed answer-cache key, normally from
+    /// [`ShardedServer::probe_cache`] (`None` = cache off or query
+    /// uncacheable).
+    pub key: Option<Vec<u8>>,
+    /// Seconds this request queued between arrival and dispatch; folded
+    /// into the outcome's reported latencies so percentiles measure
+    /// what a client saw, not just compute time. 0 for replays, whose
+    /// arrivals are instantaneous.
+    pub queue_wait_s: f64,
 }
 
 /// A model sharded across the engine's worker pool, served from an
@@ -332,6 +530,59 @@ impl<M: ServableModel> ShardedServer<M> {
         self.serve_core(engine, queries, config, cache, Some(hook))
     }
 
+    /// Admission-side cache probe, shared by the replay loop and the
+    /// daemon: compute the query's cache key (`None` when the cache is
+    /// off or the model declines to key the query) and, on a hit, the
+    /// complete zero-compute outcome. On a miss the key is returned so
+    /// it can ride along with the admitted query
+    /// ([`AdmittedQuery::key`]) instead of being serialized a second
+    /// time at insert.
+    pub fn probe_cache(
+        &self,
+        query: &M::Query,
+        cache: &SharedAnswerCache<M::Response>,
+    ) -> (Option<Vec<u8>>, Option<QueryOutcome<M::Response>>) {
+        let pinned = self.registry.pin();
+        let merger = &pinned.shards()[0];
+        let key = if cache.lock().unwrap().capacity() > 0 {
+            merger.query_key(query)
+        } else {
+            None
+        };
+        let hit = match &key {
+            Some(k) => cache.lock().unwrap().get(k),
+            None => None,
+        };
+        let Some(response) = hit else {
+            return (key, None);
+        };
+        let accuracy = merger.accuracy(query, &response);
+        // A hit is neither a fresh stage-1 answer nor a refinement of
+        // this request: `initial` carries the response so
+        // `final_response()` works, but `initial_accuracy` is reported
+        // under the cache-hit flag (excluded from the stage-1 mean) and
+        // `refined` stays None (no budget was spent).
+        let outcome = QueryOutcome {
+            initial: response,
+            refined: None,
+            initial_latency_s: 0.0,
+            total_latency_s: 0.0,
+            initial_accuracy: accuracy,
+            refined_accuracy: accuracy,
+            refined_buckets: 0,
+            cache_hit: true,
+            generation: pinned.generation(),
+            during_rebuild: false,
+            trace: vec![ServeTracePoint {
+                stage: ServeStage::CacheHit,
+                wall_s: 0.0,
+                accuracy,
+                refined_buckets: 0,
+            }],
+        };
+        (key, Some(outcome))
+    }
+
     fn serve_core(
         &self,
         engine: &Engine,
@@ -340,19 +591,21 @@ impl<M: ServableModel> ShardedServer<M> {
         cache: &SharedAnswerCache<M::Response>,
         mut hook: Option<&mut dyn RefreshHook<M>>,
     ) -> Result<(Vec<QueryOutcome<M::Response>>, ServeReport)> {
-        let queries = Arc::new(queries);
+        // Queries are individually Arc'd so the push-mode primitive can
+        // share them into pool tasks without cloning the payloads.
+        let queries: Vec<Arc<M::Query>> = queries.into_iter().map(Arc::new).collect();
         // Outcomes are written by input index: cache hits resolve ahead
         // of still-queued misses, so a plain push would misorder them.
         let mut slots: Vec<Option<QueryOutcome<M::Response>>> =
             (0..queries.len()).map(|_| None).collect();
         // Baselines so a reused external cache (or registry) reports
         // per-replay deltas rather than lifetime totals.
-        let (hits0, lookups0, cache_on) = {
+        let (hits0, lookups0) = {
             let c = cache.lock().unwrap();
-            (c.hits(), c.lookups(), c.capacity() > 0)
+            (c.hits(), c.lookups())
         };
         let swaps0 = self.registry.swap_count();
-        let mut counters = ReplayCounters::default();
+        let mut counters = ServeCounters::default();
         let mut batcher = MicroBatcher::with_max_wait(config.batch_size, config.max_batch_wait_s);
         // The pending depth behind a batch: the hook's live reading
         // when attached, else the replay stand-in (the whole unread
@@ -361,11 +614,6 @@ impl<M: ServableModel> ShardedServer<M> {
             Some(h) => h.queue_depth(),
             None => (queries.len() - qi - 1).div_ceil(config.batch_size.max(1)),
         };
-        // Generation pin for admission-side work (cache keys, hit
-        // scoring/stamping). Publishes only land inside the hook
-        // callbacks on this same thread, so the pin is refreshed right
-        // after them — hookless replays pin exactly once.
-        let mut pinned = self.registry.pin();
         for qi in 0..queries.len() {
             if let Some(h) = hook.as_mut() {
                 // Publish finished rebuilds first, so this query is
@@ -375,7 +623,6 @@ impl<M: ServableModel> ShardedServer<M> {
                 if config.refresh.every > 0 && qi > 0 && qi % config.refresh.every == 0 {
                     h.cycle(engine)?;
                 }
-                pinned = self.registry.pin();
             }
             // Time-based flush first: a pending partial batch must not
             // outwait its window just because the admission stream is
@@ -396,45 +643,14 @@ impl<M: ServableModel> ShardedServer<M> {
                     &mut counters,
                 )?;
             }
-            let merger = &pinned.shards()[0];
             // The cache sits in front of admission: a hit serves the
             // cached final response at zero compute. The key computed
             // here rides along with the admitted index so a miss does
             // not serialize the query a second time at insert.
-            let key = if cache_on {
-                merger.query_key(&queries[qi])
-            } else {
-                None
-            };
-            if let Some(k) = &key {
-                if let Some(response) = cache.lock().unwrap().get(k) {
-                    let accuracy = merger.accuracy(&queries[qi], &response);
-                    // A hit is neither a fresh stage-1 answer nor a
-                    // refinement of this request: `initial` carries the
-                    // response so `final_response()` works, but
-                    // `initial_accuracy` is reported under the
-                    // cache-hit flag (excluded from the stage-1 mean)
-                    // and `refined` stays None (no budget was spent).
-                    slots[qi] = Some(QueryOutcome {
-                        initial: response,
-                        refined: None,
-                        initial_latency_s: 0.0,
-                        total_latency_s: 0.0,
-                        initial_accuracy: accuracy,
-                        refined_accuracy: accuracy,
-                        refined_buckets: 0,
-                        cache_hit: true,
-                        generation: pinned.generation(),
-                        during_rebuild: false,
-                        trace: vec![ServeTracePoint {
-                            stage: ServeStage::CacheHit,
-                            wall_s: 0.0,
-                            accuracy,
-                            refined_buckets: 0,
-                        }],
-                    });
-                    continue;
-                }
+            let (key, hit) = self.probe_cache(queries[qi].as_ref(), cache);
+            if let Some(outcome) = hit {
+                slots[qi] = Some(outcome);
+                continue;
             }
             let released = match batcher.push((qi, key)) {
                 Some(batch) => Some(batch),
@@ -499,35 +715,90 @@ impl<M: ServableModel> ShardedServer<M> {
         Ok((outcomes, report))
     }
 
-    /// One micro-batch through both stages, on the shard-set generation
-    /// pinned here at dispatch (swaps published while the batch runs
-    /// cannot tear it). `batch` pairs each admitted query index with
-    /// its precomputed cache key (None when the cache is off or the
-    /// query is uncacheable); `pending_batches` is the queue depth
-    /// behind this batch, which the shedding policy acts on;
-    /// `during_rebuild` marks the batch as dispatched while a
-    /// background rebuild was in flight.
+    /// Replay-path adapter over [`ShardedServer::serve_admitted`]:
+    /// wraps each admitted `(input index, cache key)` pair as an
+    /// [`AdmittedQuery`] with zero queue wait (replay arrivals are
+    /// instantaneous) and writes outcomes back into the replay's
+    /// input-order slots.
     #[allow(clippy::too_many_arguments)]
     fn serve_batch(
         &self,
         engine: &Engine,
-        queries: &Arc<Vec<M::Query>>,
+        queries: &[Arc<M::Query>],
         batch: Vec<(usize, Option<Vec<u8>>)>,
         config: &ServeConfig,
         pending_batches: usize,
         during_rebuild: bool,
         slots: &mut [Option<QueryOutcome<M::Response>>],
         cache: &SharedAnswerCache<M::Response>,
-        counters: &mut ReplayCounters,
+        counters: &mut ServeCounters,
     ) -> Result<()> {
+        let items = batch
+            .into_iter()
+            .map(|(qi, key)| AdmittedQuery {
+                tag: qi as u64,
+                query: Arc::clone(&queries[qi]),
+                key,
+                queue_wait_s: 0.0,
+            })
+            .collect();
+        self.serve_admitted(
+            engine,
+            items,
+            config,
+            pending_batches,
+            during_rebuild,
+            cache,
+            counters,
+            &mut |tag, outcome| slots[tag as usize] = Some(outcome),
+        )
+    }
+
+    /// One micro-batch of admitted (cache-missed) requests through both
+    /// stages, on the shard-set generation pinned here at dispatch
+    /// (swaps published while the batch runs cannot tear it). This is
+    /// the push-mode primitive shared by the replay paths
+    /// ([`ShardedServer::serve`] and friends) and the daemon
+    /// ([`crate::serve::daemon`]): callers admit however requests
+    /// arrive — replay order, wire arrival order — and receive each
+    /// outcome through `sink`, tagged with the [`AdmittedQuery::tag`]
+    /// they assigned. Each request's queue wait (arrival → dispatch) is
+    /// folded into its reported latencies. `pending_batches` is the
+    /// queue depth behind this batch, which the shedding policy acts
+    /// on; `during_rebuild` marks the batch as dispatched while a
+    /// background rebuild was in flight.
+    #[allow(clippy::too_many_arguments)]
+    pub fn serve_admitted(
+        &self,
+        engine: &Engine,
+        batch: Vec<AdmittedQuery<M>>,
+        config: &ServeConfig,
+        pending_batches: usize,
+        during_rebuild: bool,
+        cache: &SharedAnswerCache<M::Response>,
+        counters: &mut ServeCounters,
+        sink: &mut dyn FnMut(u64, QueryOutcome<M::Response>),
+    ) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
         // Admission-time generation pin: every task of this batch works
         // on this immutable shard set, whatever publishes meanwhile.
         let pinned = self.registry.pin();
         let shards = pinned.shards();
         let generation = pinned.generation();
         let n_shards = shards.len();
-        let (indices, mut keys): (Vec<usize>, Vec<Option<Vec<u8>>>) = batch.into_iter().unzip();
-        let batch = Arc::new(indices);
+        let mut tags = Vec::with_capacity(batch.len());
+        let mut keys = Vec::with_capacity(batch.len());
+        let mut waits = Vec::with_capacity(batch.len());
+        let mut queries: Vec<Arc<M::Query>> = Vec::with_capacity(batch.len());
+        for item in batch {
+            tags.push(item.tag);
+            keys.push(item.key);
+            waits.push(item.queue_wait_s.max(0.0));
+            queries.push(item.query);
+        }
+        let queries = Arc::new(queries);
         let sw = Stopwatch::new();
 
         // Stage 1: every shard answers the whole micro-batch in ONE
@@ -535,11 +806,10 @@ impl<M: ServableModel> ShardedServer<M> {
         // query block once per task), timing itself for the EWMA.
         let rx1 = engine.pool().stream(n_shards, |s| {
             let shard = Arc::clone(&shards[s]);
-            let queries = Arc::clone(queries);
-            let batch = Arc::clone(&batch);
+            let queries = Arc::clone(&queries);
             move || -> (Vec<InitialAnswer<M::Answer>>, f64) {
                 let task_sw = Stopwatch::new();
-                let block: Vec<&M::Query> = batch.iter().map(|&qi| &queries[qi]).collect();
+                let block: Vec<&M::Query> = queries.iter().map(|q| q.as_ref()).collect();
                 let answers = shard.answer_initial_block(&block);
                 (answers, task_sw.elapsed_s())
             }
@@ -555,20 +825,21 @@ impl<M: ServableModel> ShardedServer<M> {
         if let Some(e) = failure {
             return Err(e);
         }
-        self.update_stage1_ewma(shards, &stage1_task_s, batch.len());
+        self.update_stage1_ewma(shards, &stage1_task_s, queries.len());
 
         // Merge per query: the initial responses, always delivered.
         let merger = &shards[0];
-        let mut initial_responses: Vec<M::Response> = Vec::with_capacity(batch.len());
-        for (j, &qi) in batch.iter().enumerate() {
+        let mut initial_responses: Vec<M::Response> = Vec::with_capacity(queries.len());
+        for j in 0..queries.len() {
             let partials: Vec<M::Answer> = per_shard
                 .iter()
                 .map(|s| s.as_ref().expect("shard answer missing")[j].answer.clone())
                 .collect();
-            initial_responses.push(merger.merge(&queries[qi], &partials));
+            initial_responses.push(merger.merge(&queries[j], &partials));
         }
         // The client-visible initial-response time: stage 1 *plus* the
-        // merge that produces the deliverable answer.
+        // merge that produces the deliverable answer (queue wait is
+        // added per request below).
         let initial_latency_s = sw.elapsed_s();
 
         // Load shedding: under queue pressure the batch's budget is
@@ -577,7 +848,7 @@ impl<M: ServableModel> ShardedServer<M> {
         // resolved first so a batch whose policy already yields zero
         // (Off, Buckets(0), an expired deadline) is neither counted as
         // shed nor barred from caching — the downgrade changed nothing.
-        let mut budgets = self.resolve_budgets(shards, config, initial_latency_s, batch.len());
+        let mut budgets = self.resolve_budgets(shards, config, initial_latency_s, queries.len());
         let shed = pending_batches > config.shed_queue_depth && budgets.iter().any(|&b| b > 0);
         if shed {
             counters.shed_batches += 1;
@@ -600,31 +871,35 @@ impl<M: ServableModel> ShardedServer<M> {
         if budgets.iter().all(|&b| b == 0) {
             // Initial answers are final (and, policy permitting,
             // cacheable as such).
-            for ((j, &qi), initial) in batch.iter().enumerate().zip(initial_responses) {
-                let initial_accuracy = merger.accuracy(&queries[qi], &initial);
+            for (j, initial) in initial_responses.into_iter().enumerate() {
+                let initial_accuracy = merger.accuracy(&queries[j], &initial);
                 if cacheable {
                     if let Some(key) = keys[j].take() {
                         cache.lock().unwrap().insert(key, initial.clone());
                     }
                 }
-                slots[qi] = Some(QueryOutcome {
-                    initial,
-                    refined: None,
-                    initial_latency_s,
-                    total_latency_s: initial_latency_s,
-                    initial_accuracy,
-                    refined_accuracy: None,
-                    refined_buckets: 0,
-                    cache_hit: false,
-                    generation,
-                    during_rebuild,
-                    trace: vec![ServeTracePoint {
-                        stage: ServeStage::Initial,
-                        wall_s: initial_latency_s,
-                        accuracy: initial_accuracy,
+                let latency_s = waits[j] + initial_latency_s;
+                sink(
+                    tags[j],
+                    QueryOutcome {
+                        initial,
+                        refined: None,
+                        initial_latency_s: latency_s,
+                        total_latency_s: latency_s,
+                        initial_accuracy,
+                        refined_accuracy: None,
                         refined_buckets: 0,
-                    }],
-                });
+                        cache_hit: false,
+                        generation,
+                        during_rebuild,
+                        trace: vec![ServeTracePoint {
+                            stage: ServeStage::Initial,
+                            wall_s: latency_s,
+                            accuracy: initial_accuracy,
+                            refined_buckets: 0,
+                        }],
+                    },
+                );
             }
             return Ok(());
         }
@@ -638,13 +913,12 @@ impl<M: ServableModel> ShardedServer<M> {
         for (s, slot) in per_shard.iter_mut().enumerate() {
             let initials = slot.take().expect("shard answer missing");
             let shard = Arc::clone(&shards[s]);
-            let queries = Arc::clone(queries);
-            let batch = Arc::clone(&batch);
+            let queries = Arc::clone(&queries);
             let budget = budgets[s];
             engine
                 .pool()
                 .stream_into(&tx2, s, move || -> RefinedBlock<M::Answer> {
-                    let block: Vec<&M::Query> = batch.iter().map(|&qi| &queries[qi]).collect();
+                    let block: Vec<&M::Query> = queries.iter().map(|q| q.as_ref()).collect();
                     let per_query = vec![budget; block.len()];
                     shard.refine_block(&block, &initials, &per_query)
                 });
@@ -662,45 +936,48 @@ impl<M: ServableModel> ShardedServer<M> {
         }
         let total_latency_s = sw.elapsed_s();
 
-        for ((j, &qi), initial) in batch.iter().enumerate().zip(initial_responses) {
+        for (j, initial) in initial_responses.into_iter().enumerate() {
             let partials: Vec<M::Answer> = refined_per_shard
                 .iter()
                 .map(|s| s.as_ref().expect("shard refinement missing")[j].clone())
                 .collect();
-            let refined = merger.merge(&queries[qi], &partials);
-            let initial_accuracy = merger.accuracy(&queries[qi], &initial);
-            let refined_accuracy = merger.accuracy(&queries[qi], &refined);
+            let refined = merger.merge(&queries[j], &partials);
+            let initial_accuracy = merger.accuracy(&queries[j], &initial);
+            let refined_accuracy = merger.accuracy(&queries[j], &refined);
             if cacheable {
                 if let Some(key) = keys[j].take() {
                     cache.lock().unwrap().insert(key, refined.clone());
                 }
             }
-            slots[qi] = Some(QueryOutcome {
-                initial,
-                refined: Some(refined),
-                initial_latency_s,
-                total_latency_s,
-                initial_accuracy,
-                refined_accuracy,
-                refined_buckets,
-                cache_hit: false,
-                generation,
-                during_rebuild,
-                trace: vec![
-                    ServeTracePoint {
-                        stage: ServeStage::Initial,
-                        wall_s: initial_latency_s,
-                        accuracy: initial_accuracy,
-                        refined_buckets: 0,
-                    },
-                    ServeTracePoint {
-                        stage: ServeStage::Refined,
-                        wall_s: total_latency_s,
-                        accuracy: refined_accuracy,
-                        refined_buckets,
-                    },
-                ],
-            });
+            sink(
+                tags[j],
+                QueryOutcome {
+                    initial,
+                    refined: Some(refined),
+                    initial_latency_s: waits[j] + initial_latency_s,
+                    total_latency_s: waits[j] + total_latency_s,
+                    initial_accuracy,
+                    refined_accuracy,
+                    refined_buckets,
+                    cache_hit: false,
+                    generation,
+                    during_rebuild,
+                    trace: vec![
+                        ServeTracePoint {
+                            stage: ServeStage::Initial,
+                            wall_s: waits[j] + initial_latency_s,
+                            accuracy: initial_accuracy,
+                            refined_buckets: 0,
+                        },
+                        ServeTracePoint {
+                            stage: ServeStage::Refined,
+                            wall_s: waits[j] + total_latency_s,
+                            accuracy: refined_accuracy,
+                            refined_buckets,
+                        },
+                    ],
+                },
+            );
         }
         Ok(())
     }
@@ -785,12 +1062,12 @@ impl<M: ServableModel> ShardedServer<M> {
     #[allow(clippy::too_many_arguments)]
     fn report(
         &self,
-        queries: &Arc<Vec<M::Query>>,
+        queries: &[Arc<M::Query>],
         outcomes: &[QueryOutcome<M::Response>],
         config: &ServeConfig,
         cache_hits: usize,
         cache_lookups: usize,
-        counters: &ReplayCounters,
+        counters: &ServeCounters,
         refresh_swap_count: usize,
     ) -> ServeReport {
         let mean_of = |xs: Vec<f64>| {
@@ -861,7 +1138,7 @@ impl<M: ServableModel> ShardedServer<M> {
                     .map(|o| o.total_latency_s)
                     .collect(),
             ),
-            per_class: per_class_reports(pinned.shards()[0].as_ref(), queries.as_slice(), outcomes),
+            per_class: per_class_reports(pinned.shards()[0].as_ref(), queries, outcomes),
         }
     }
 }
@@ -871,7 +1148,7 @@ impl<M: ServableModel> ShardedServer<M> {
 /// per-class curves, sorted by class tag (deterministic output).
 fn per_class_reports<M: ServableModel>(
     merger: &M,
-    queries: &[M::Query],
+    queries: &[Arc<M::Query>],
     outcomes: &[QueryOutcome<M::Response>],
 ) -> Vec<ClassReport> {
     #[derive(Default)]
@@ -890,7 +1167,7 @@ fn per_class_reports<M: ServableModel>(
     }
     let mut classes: BTreeMap<String, ClassAccum> = BTreeMap::new();
     for (o, q) in outcomes.iter().zip(queries) {
-        let Some(class) = merger.query_class(q, o.final_response()) else {
+        let Some(class) = merger.query_class(q.as_ref(), o.final_response()) else {
             continue;
         };
         let acc = classes.entry(class).or_default();
@@ -1500,5 +1777,97 @@ mod tests {
             .serve(&engine, queries(2), &ServeConfig::default())
             .unwrap();
         assert_eq!(outcomes.len(), 2);
+    }
+
+    #[test]
+    fn builder_validates_and_normalizes() {
+        assert!(ServeConfig::builder().batch_size(0).build().is_err());
+        assert!(ServeConfig::builder().deadline_s(-1.0).build().is_err());
+        assert!(ServeConfig::builder().deadline_s(f64::NAN).build().is_err());
+        assert!(ServeConfig::builder()
+            .budget(RefineBudget::Fraction(0.0))
+            .build()
+            .is_err());
+        assert!(ServeConfig::builder()
+            .budget(RefineBudget::Fraction(1.5))
+            .build()
+            .is_err());
+        // "0 = off" conventions normalize in one place.
+        let cfg = ServeConfig::builder()
+            .batch_size(4)
+            .cache_capacity(0)
+            .shed_queue_depth(0)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.batch_size, 4);
+        assert_eq!(cfg.cache_capacity, 0);
+        assert_eq!(cfg.shed_queue_depth, usize::MAX);
+    }
+
+    #[test]
+    fn config_json_round_trips_through_the_builder() {
+        let mut cfg = ServeConfig::builder()
+            .batch_size(3)
+            .deadline_s(0.25)
+            .budget(RefineBudget::Buckets(7))
+            .cache_capacity(32)
+            .shed_queue_depth(5)
+            .max_batch_wait_s(0.002)
+            .refresh_every(40)
+            .build()
+            .unwrap();
+        let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.batch_size, cfg.batch_size);
+        assert_eq!(back.deadline_s, cfg.deadline_s);
+        assert!(matches!(back.budget, RefineBudget::Buckets(7)));
+        assert_eq!(back.cache_capacity, 32);
+        assert_eq!(back.shed_queue_depth, 5);
+        assert_eq!(back.max_batch_wait_s, cfg.max_batch_wait_s);
+        assert_eq!(back.refresh.every, 40);
+        // Disabled shedding travels as 0 on the wire and comes back as
+        // usize::MAX (0 would shed everything).
+        cfg.shed_queue_depth = usize::MAX;
+        let doc = cfg.to_json();
+        assert_eq!(doc.num_of("shed_queue_depth").unwrap(), 0.0);
+        let back = ServeConfig::from_json(&doc).unwrap();
+        assert_eq!(back.shed_queue_depth, usize::MAX);
+    }
+
+    #[test]
+    fn serve_admitted_folds_queue_wait_into_latencies() {
+        let engine = Engine::new(2);
+        let server = server(false);
+        let cache: SharedAnswerCache<i64> = Arc::new(Mutex::new(AnswerCache::new(0)));
+        let mut counters = ServeCounters::default();
+        let mut delivered: Vec<(u64, QueryOutcome<i64>)> = Vec::new();
+        let batch = vec![AdmittedQuery {
+            tag: 41,
+            query: Arc::new(ToyQuery { target: 12 }),
+            key: None,
+            queue_wait_s: 1.5,
+        }];
+        server
+            .serve_admitted(
+                &engine,
+                batch,
+                &cfg(1, 10.0, RefineBudget::All, 0),
+                0,
+                false,
+                &cache,
+                &mut counters,
+                &mut |tag, outcome| delivered.push((tag, outcome)),
+            )
+            .unwrap();
+        assert_eq!(delivered.len(), 1);
+        let (tag, o) = &delivered[0];
+        assert_eq!(*tag, 41, "caller-assigned tag round-trips");
+        assert!(
+            o.initial_latency_s >= 1.5,
+            "queue wait folds into the reported initial latency: {}",
+            o.initial_latency_s
+        );
+        assert!(o.total_latency_s >= o.initial_latency_s);
+        assert_eq!(o.final_response(), &12);
+        assert!(o.trace.iter().all(|tp| tp.wall_s >= 1.5));
     }
 }

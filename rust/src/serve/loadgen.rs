@@ -1,0 +1,424 @@
+//! Open-loop timestamped load generation against a [`Daemon`].
+//!
+//! The generator draws an arrival schedule *up front* — Poisson or
+//! sinusoidally-modulated ("bursty") inter-arrival gaps at a target
+//! offered rate, with Zipf-skewed key popularity — then a client
+//! thread paces sends against that schedule over a real TCP connection
+//! while the daemon serves on the calling thread. Each response's
+//! latency is measured from its **scheduled** arrival time, not from
+//! when the send actually went out: a server that falls behind delays
+//! subsequent sends in a closed-loop harness and hides its own
+//! queueing, whereas here the backlog lands in the latency numbers
+//! (the coordinated-omission correction open-loop benchmarks exist
+//! for).
+//!
+//! [`run_scenario`] runs one (arrival process, offered rate) cell and
+//! returns a [`ScenarioResult`]; [`run_sweep`] maps a rate list
+//! through it to produce a qps-vs-tail-latency curve.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::mapreduce::engine::Engine;
+use crate::refresh::Refreshable;
+use crate::serve::daemon::Daemon;
+use crate::serve::protocol::{Reply, Request, WireCodec};
+use crate::serve::session::Session;
+use crate::serve::stats::percentile;
+use crate::util::json::Json;
+use crate::util::rng::{Rng, Zipf};
+
+/// The inter-arrival process offered to the daemon.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ArrivalProcess {
+    /// Memoryless arrivals: exponential gaps at the offered rate.
+    Poisson,
+    /// Sinusoidally modulated rate: `offered * (1 + amplitude *
+    /// sin(2π t / period_s))`, floored at 5% of the offered rate. An
+    /// `amplitude` near 1 alternates quiet valleys with bursts at
+    /// roughly twice the offered rate — the regime that exercises
+    /// shedding and partial-batch timeouts.
+    Bursty {
+        /// Seconds per modulation cycle.
+        period_s: f64,
+        /// Fractional swing around the offered rate, clamped to [0, 1].
+        amplitude: f64,
+    },
+}
+
+impl ArrivalProcess {
+    /// Stable name for reports ("poisson" / "bursty").
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalProcess::Poisson => "poisson",
+            ArrivalProcess::Bursty { .. } => "bursty",
+        }
+    }
+
+    /// Instantaneous rate at time `t` for a target offered rate.
+    fn rate_at(&self, offered_qps: f64, t: f64) -> f64 {
+        match *self {
+            ArrivalProcess::Poisson => offered_qps,
+            ArrivalProcess::Bursty {
+                period_s,
+                amplitude,
+            } => {
+                let a = amplitude.clamp(0.0, 1.0);
+                let phase = 2.0 * std::f64::consts::PI * t / period_s.max(1e-6);
+                (offered_qps * (1.0 + a * phase.sin())).max(offered_qps * 0.05)
+            }
+        }
+    }
+}
+
+/// One load-generation cell: how many queries, at what offered rate,
+/// over how skewed a key population.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    /// Target average arrival rate (queries per second).
+    pub offered_qps: f64,
+    /// Total queries in the schedule.
+    pub n_queries: usize,
+    /// Distinct query keys (rows) the Zipf draw ranges over.
+    pub users: usize,
+    /// Zipf exponent for key popularity (0 = uniform; ~1 = web-like
+    /// skew that gives the answer cache real hits).
+    pub zipf_s: f64,
+    /// Schedule seed: same spec + seed = same schedule, bit-for-bit.
+    pub seed: u64,
+    /// Arrival process.
+    pub arrival: ArrivalProcess,
+}
+
+/// One scheduled arrival: when, and for which key.
+#[derive(Clone, Copy, Debug)]
+pub struct ArrivalEvent {
+    /// Scheduled arrival time, seconds from scenario start.
+    pub at_s: f64,
+    /// Zipf-ranked key index in `[0, users)`.
+    pub user: usize,
+}
+
+/// Measured outcome of one scenario cell, flattened for the bench
+/// artifact.
+#[derive(Clone, Copy, Debug)]
+pub struct ScenarioResult {
+    /// Arrival process name ("poisson" / "bursty").
+    pub arrival: &'static str,
+    /// The rate the schedule targeted.
+    pub offered_qps: f64,
+    /// Responses delivered per second of scenario wall time.
+    pub achieved_qps: f64,
+    /// Responses received.
+    pub queries: usize,
+    /// Median delivered latency, measured from scheduled arrival.
+    pub p50_s: f64,
+    /// 99th-percentile delivered latency.
+    pub p99_s: f64,
+    /// Micro-batches the daemon downgraded to initial-only.
+    pub shed_batches: usize,
+    /// Answer-cache hits during the scenario.
+    pub cache_hits: usize,
+    /// Answer-cache lookups during the scenario.
+    pub cache_lookups: usize,
+    /// Shard-set hot-swaps published during the scenario.
+    pub swaps: usize,
+    /// Registry generation when the daemon exited.
+    pub generation: u64,
+    /// `error` replies received (should be 0).
+    pub errors: usize,
+}
+
+impl ScenarioResult {
+    /// Flatten into the object `BENCH_serving.json` embeds per cell.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("arrival", self.arrival.into()),
+            ("offered_qps", self.offered_qps.into()),
+            ("achieved_qps", self.achieved_qps.into()),
+            ("queries", self.queries.into()),
+            ("p50_s", self.p50_s.into()),
+            ("p99_s", self.p99_s.into()),
+            ("shed_batches", self.shed_batches.into()),
+            ("cache_hits", self.cache_hits.into()),
+            ("cache_lookups", self.cache_lookups.into()),
+            ("swaps", self.swaps.into()),
+            ("generation", Json::Num(self.generation as f64)),
+            ("errors", self.errors.into()),
+        ])
+    }
+}
+
+/// Draw the full arrival schedule for a spec. Deterministic in the
+/// seed; timestamps are strictly non-decreasing.
+pub fn schedule(spec: &LoadSpec) -> Vec<ArrivalEvent> {
+    assert!(spec.offered_qps > 0.0, "offered rate must be positive");
+    assert!(spec.users > 0, "need at least one user key");
+    let mut rng = Rng::new(spec.seed);
+    let zipf = Zipf::new(spec.users, spec.zipf_s.max(0.0));
+    let mut events = Vec::with_capacity(spec.n_queries);
+    let mut t = 0.0f64;
+    for _ in 0..spec.n_queries {
+        let rate = spec.arrival.rate_at(spec.offered_qps, t);
+        // Inverse-CDF exponential gap; (1 - u) keeps ln's argument in
+        // (0, 1] since u is drawn from [0, 1).
+        let gap = -(1.0 - rng.f64()).ln() / rate;
+        t += gap;
+        events.push(ArrivalEvent {
+            at_s: t,
+            user: zipf.sample(&mut rng),
+        });
+    }
+    events
+}
+
+/// Run one scenario cell: serve a [`Daemon`] on this thread while a
+/// client thread paces the spec's schedule at it over TCP, keyed by
+/// `key_field` (`"test_row"` for knn/cf logs, `"row"` for k-means).
+///
+/// The session's answer cache is invalidated first so each cell starts
+/// cold — warmth inherited from a previous (lower-rate) cell would
+/// make tail-latency curves incomparable across rates.
+pub fn run_scenario<M: Refreshable, C: WireCodec<M>>(
+    engine: &Engine,
+    session: &Session<M>,
+    codec: Arc<C>,
+    spec: &LoadSpec,
+    key_field: &'static str,
+) -> Result<ScenarioResult> {
+    session.cache().lock().unwrap().invalidate_all();
+    let listener = TcpListener::bind(("127.0.0.1", 0)).map_err(Error::Io)?;
+    let addr = listener.local_addr().map_err(Error::Io)?;
+    let events = schedule(spec);
+
+    let client = thread::spawn(move || -> std::io::Result<(Vec<f64>, usize, f64)> {
+        // The bound listener's backlog holds this connection until the
+        // daemon's accept loop starts.
+        let stream = TcpStream::connect(addr)?;
+        let send_half = stream.try_clone()?;
+        let scheduled: Vec<f64> = events.iter().map(|e| e.at_s).collect();
+        let epoch = Instant::now();
+        let sender = thread::spawn(move || {
+            let mut w = send_half;
+            for (i, ev) in events.iter().enumerate() {
+                sleep_until(epoch, ev.at_s);
+                let req = Request::query(i as u64, vec![(key_field, ev.user.into())]);
+                if writeln!(w, "{}", req.to_line()).is_err() {
+                    return;
+                }
+            }
+            // Same-connection FIFO: the daemon answers every query
+            // above before acking this.
+            let _ = writeln!(w, "{}", Request::Shutdown.to_line());
+            let _ = w.flush();
+        });
+        let mut latencies = Vec::with_capacity(scheduled.len());
+        let mut errors = 0usize;
+        let mut makespan = 0.0f64;
+        for line in BufReader::new(stream).lines() {
+            let line = line?;
+            match Reply::parse_line(&line) {
+                Ok(Reply::Response { id, .. }) => {
+                    let now = epoch.elapsed().as_secs_f64();
+                    if let Some(&at) = scheduled.get(id as usize) {
+                        latencies.push((now - at).max(0.0));
+                    }
+                    makespan = now;
+                }
+                Ok(Reply::Shutdown { .. }) => {
+                    makespan = makespan.max(epoch.elapsed().as_secs_f64());
+                    break;
+                }
+                Ok(Reply::Error { .. }) | Err(_) => errors += 1,
+                Ok(_) => {}
+            }
+        }
+        let _ = sender.join();
+        Ok((latencies, errors, makespan))
+    });
+
+    let report = Daemon::new(session, codec).run_listener(engine, listener)?;
+    let (mut latencies, errors, makespan) = client
+        .join()
+        .map_err(|_| Error::Engine("load-generation client thread panicked".into()))?
+        .map_err(Error::Io)?;
+    latencies.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    Ok(ScenarioResult {
+        arrival: spec.arrival.name(),
+        offered_qps: spec.offered_qps,
+        achieved_qps: if makespan > 0.0 {
+            latencies.len() as f64 / makespan
+        } else {
+            0.0
+        },
+        queries: latencies.len(),
+        p50_s: percentile(&latencies, 0.50),
+        p99_s: percentile(&latencies, 0.99),
+        shed_batches: report.shed_batches,
+        cache_hits: report.cache_hits,
+        cache_lookups: report.cache_lookups,
+        swaps: report.swaps,
+        generation: report.generation,
+        errors,
+    })
+}
+
+/// Sweep one spec across `rates`, producing the qps-vs-latency curve
+/// the bench artifact plots. Each cell reuses the session (models stay
+/// warm) but starts with a cold answer cache.
+pub fn run_sweep<M: Refreshable, C: WireCodec<M>>(
+    engine: &Engine,
+    session: &Session<M>,
+    codec: &Arc<C>,
+    base: &LoadSpec,
+    rates: &[f64],
+    key_field: &'static str,
+) -> Result<Vec<ScenarioResult>> {
+    rates
+        .iter()
+        .map(|&offered_qps| {
+            let spec = LoadSpec {
+                offered_qps,
+                ..*base
+            };
+            run_scenario(engine, session, Arc::clone(codec), &spec, key_field)
+        })
+        .collect()
+}
+
+/// Sleep until `at_s` on `epoch`'s clock: coarse sleep to within half
+/// a millisecond, then spin — OS sleep alone overshoots by more than a
+/// typical inter-arrival gap at high offered rates.
+fn sleep_until(epoch: Instant, at_s: f64) {
+    loop {
+        let remain = at_s - epoch.elapsed().as_secs_f64();
+        if remain <= 0.0 {
+            return;
+        }
+        if remain > 1e-3 {
+            thread::sleep(Duration::from_secs_f64(remain - 5e-4));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(arrival: ArrivalProcess) -> LoadSpec {
+        LoadSpec {
+            offered_qps: 200.0,
+            n_queries: 4000,
+            users: 64,
+            zipf_s: 1.1,
+            seed: 7,
+            arrival,
+        }
+    }
+
+    #[test]
+    fn poisson_schedule_hits_the_offered_rate() {
+        let s = spec(ArrivalProcess::Poisson);
+        let events = schedule(&s);
+        assert_eq!(events.len(), s.n_queries);
+        let span = events.last().unwrap().at_s;
+        let achieved = s.n_queries as f64 / span;
+        // 4000 exponential gaps: the mean rate concentrates tightly.
+        assert!(
+            (achieved - s.offered_qps).abs() < s.offered_qps * 0.1,
+            "achieved {achieved} vs offered {}",
+            s.offered_qps
+        );
+    }
+
+    #[test]
+    fn schedules_are_deterministic_and_monotone() {
+        let s = spec(ArrivalProcess::Poisson);
+        let a = schedule(&s);
+        let b = schedule(&s);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_s.to_bits(), y.at_s.to_bits());
+            assert_eq!(x.user, y.user);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s);
+        }
+    }
+
+    #[test]
+    fn zipf_keys_are_head_heavy() {
+        let s = spec(ArrivalProcess::Poisson);
+        let events = schedule(&s);
+        let mut counts = vec![0usize; s.users];
+        for e in &events {
+            counts[e.user] += 1;
+        }
+        assert!(
+            counts[0] > counts[s.users - 1] * 5,
+            "head {} vs tail {}",
+            counts[0],
+            counts[s.users - 1]
+        );
+    }
+
+    #[test]
+    fn bursty_schedule_modulates_the_gap_distribution() {
+        let bursty = schedule(&spec(ArrivalProcess::Bursty {
+            period_s: 2.0,
+            amplitude: 0.9,
+        }));
+        let gaps: Vec<f64> = bursty.windows(2).map(|w| w[1].at_s - w[0].at_s).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        // Rate modulation overdisperses gaps relative to exponential
+        // (whose coefficient of variation is exactly 1).
+        let cv2 = var / (mean * mean);
+        assert!(cv2 > 1.1, "squared CV {cv2} not overdispersed");
+        for w in bursty.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s);
+        }
+    }
+
+    #[test]
+    fn scenario_result_flattens_to_the_artifact_keys() {
+        let r = ScenarioResult {
+            arrival: "poisson",
+            offered_qps: 100.0,
+            achieved_qps: 98.5,
+            queries: 400,
+            p50_s: 0.002,
+            p99_s: 0.011,
+            shed_batches: 3,
+            cache_hits: 120,
+            cache_lookups: 400,
+            swaps: 1,
+            generation: 1,
+            errors: 0,
+        };
+        let j = r.to_json();
+        for key in [
+            "arrival",
+            "offered_qps",
+            "achieved_qps",
+            "queries",
+            "p50_s",
+            "p99_s",
+            "shed_batches",
+            "cache_hits",
+            "cache_lookups",
+            "swaps",
+            "generation",
+            "errors",
+        ] {
+            assert!(j.get(key).is_some(), "missing key {key}");
+        }
+        assert_eq!(j.num_of("p99_s").unwrap(), 0.011);
+        assert_eq!(j.str_of("arrival").unwrap(), "poisson");
+    }
+}

@@ -36,6 +36,21 @@
 //! * [`query_log`] — synthetic query logs derived from the workbench
 //!   datasets, for replay by the CLI `serve` command, the e2e tests and
 //!   `benches/serving.rs`;
+//! * [`Session`] — the one serving surface over a built model set
+//!   (registry + cache + validated config), driven by replay,
+//!   refresh-replay, or daemon mode;
+//! * [`protocol`] — the line-delimited JSONL wire protocol (`query`,
+//!   `response`, `ingest`, `stats`, `shutdown` messages) plus the
+//!   per-app [`WireCodec`]s that translate wire bodies to typed
+//!   queries/deltas;
+//! * [`Daemon`] — the long-running server: reader threads per client
+//!   connection feed a single serving thread through an event queue,
+//!   so micro-batching, shedding, deadline budgets and atomic swaps
+//!   operate on real arrival times and live queue depth;
+//! * [`loadgen`] — the open-loop timestamped load generator (Poisson
+//!   and bursty arrivals, Zipf-skewed hot keys) that drives a daemon
+//!   at a sweep of offered rates and reports qps-vs-tail-latency
+//!   curves;
 //! * live refresh — the server pins one
 //!   [`crate::refresh::ModelRegistry`] generation per micro-batch at
 //!   dispatch, so shard sets rebuilt in the background
@@ -54,16 +69,24 @@
 
 pub mod batcher;
 pub mod cache;
+pub mod daemon;
 pub mod executor;
+pub mod loadgen;
+pub mod protocol;
 pub mod query_log;
+pub mod session;
 pub mod stats;
 
 pub use batcher::MicroBatcher;
 pub use cache::AnswerCache;
+pub use daemon::{Daemon, DaemonReport};
 pub use executor::{
-    QueryOutcome, RefineBudget, RefreshHook, RefreshPolicy, ServeConfig, ShardedServer,
-    SharedAnswerCache,
+    AdmittedQuery, QueryOutcome, RefineBudget, RefreshHook, RefreshPolicy, ServeConfig,
+    ServeConfigBuilder, ServeCounters, ShardedServer, SharedAnswerCache,
 };
+pub use loadgen::{ArrivalProcess, LoadSpec, ScenarioResult};
+pub use protocol::{CfWire, KmeansWire, KnnWire, Reply, Request, WireCodec};
+pub use session::Session;
 pub use stats::{
     ClassCurvePoint, ClassReport, LatencyStats, ServeReport, ServeStage, ServeTracePoint,
 };

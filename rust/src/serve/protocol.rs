@@ -1,0 +1,815 @@
+//! The JSONL wire protocol spoken by the serving daemon.
+//!
+//! One message per line, each line one compact JSON object carrying a
+//! `"type"` tag — hand-rolled over [`crate::util::json::Json`], zero
+//! external dependencies. Client→server messages are [`Request`]s
+//! (`query`, `ingest`, `stats`, `shutdown`); server→client messages are
+//! [`Reply`]s (`response`, `ingested`, `stats`, `shutdown`, `error`).
+//! Both directions round-trip through [`Request::to_line`] /
+//! [`Request::parse_line`] (and the `Reply` equivalents), which is what
+//! lets the load generator ([`crate::serve::loadgen`]) parse the
+//! daemon's output with the same code the daemon used to write it.
+//!
+//! App-specific payloads (what a kNN query *is*, what a CF delta *is*)
+//! are translated by a [`WireCodec`]: the envelope stays generic over
+//! [`Refreshable`] models while [`KnnWire`], [`CfWire`] and
+//! [`KmeansWire`] map JSON bodies to the concrete query/delta types.
+//! Codecs hold the dataset context (`Arc`s of the workbench data), so a
+//! client can address queries by held-out row index (`test_row`/`row`)
+//! — the form the Zipf-keyed load generator uses, and the one that
+//! makes repeat hot keys produce byte-identical
+//! [`query_key`](crate::model::ServableModel::query_key)s for the
+//! answer cache — or ship explicit feature vectors.
+//!
+//! Malformed input yields [`Error`]s, never panics: the daemon turns a
+//! bad line into an `error` reply and keeps serving the connection.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use crate::data::gaussian::LabeledPoints;
+use crate::data::matrix::Matrix;
+use crate::data::ratings::RatingsSplit;
+use crate::error::{Error, Result};
+use crate::model::cf::CfQuery;
+use crate::model::kmeans::{KmeansQuery, RepMatch};
+use crate::model::knn::KnnQuery;
+use crate::model::{CfModel, KmeansModel, KnnModel};
+use crate::refresh::{LabeledPoint, Refreshable};
+use crate::serve::executor::QueryOutcome;
+use crate::serve::stats::ServeTracePoint;
+use crate::util::json::Json;
+
+/// One client→server message, parsed from one line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// Answer one query. `id` is echoed on the response so clients can
+    /// pipeline; `body` is the app-specific payload (everything in the
+    /// line except the `type`/`id` envelope keys), decoded by a
+    /// [`WireCodec`].
+    Query { id: u64, body: Json },
+    /// Ingest model deltas: the body's `"deltas"` array is decoded
+    /// element-wise by [`WireCodec::delta_from_json`] and appended to
+    /// the daemon's delta log, triggering a background rebuild.
+    Ingest { body: Json },
+    /// Ask for a `stats` reply (counters, queue depth, latency
+    /// percentiles, the active [`ServeConfig`](super::ServeConfig)).
+    Stats,
+    /// Drain in-flight queries, ack with a `shutdown` reply, exit.
+    Shutdown,
+}
+
+impl Request {
+    /// Convenience constructor: a `query` whose body is built from
+    /// key/value pairs.
+    pub fn query(id: u64, body: Vec<(&str, Json)>) -> Request {
+        Request::Query {
+            id,
+            body: Json::obj(body),
+        }
+    }
+
+    /// Encode as one compact JSON line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            Request::Query { id, body } => {
+                let mut m = body_map(body);
+                m.insert("type".to_string(), Json::from("query"));
+                m.insert("id".to_string(), Json::from(*id as f64));
+                Json::Obj(m).compact()
+            }
+            Request::Ingest { body } => {
+                let mut m = body_map(body);
+                m.insert("type".to_string(), Json::from("ingest"));
+                Json::Obj(m).compact()
+            }
+            Request::Stats => Json::obj(vec![("type", "stats".into())]).compact(),
+            Request::Shutdown => Json::obj(vec![("type", "shutdown".into())]).compact(),
+        }
+    }
+
+    /// Decode one line. Unknown types, missing fields and non-object
+    /// lines are [`Error`]s, never panics.
+    pub fn parse_line(line: &str) -> Result<Request> {
+        let v = Json::parse(line.trim())?;
+        let Json::Obj(mut m) = v else {
+            return Err(wire_err("request line is not a JSON object"));
+        };
+        let ty = take_type(&mut m)?;
+        match ty.as_str() {
+            "query" => {
+                let id = take_u64(&mut m, "id")?;
+                Ok(Request::Query {
+                    id,
+                    body: Json::Obj(m),
+                })
+            }
+            "ingest" => Ok(Request::Ingest { body: Json::Obj(m) }),
+            "stats" => Ok(Request::Stats),
+            "shutdown" => Ok(Request::Shutdown),
+            other => Err(wire_err(&format!("unknown request type {other:?}"))),
+        }
+    }
+}
+
+/// One server→client message, encoded as one line.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Reply {
+    /// The answer to a `query`, echoing its `id`. Latencies are in
+    /// milliseconds; `queue_ms` is the slice spent waiting for dispatch
+    /// (already included in `initial_ms`/`total_ms`); `trace` is the
+    /// per-request anytime checkpoint array.
+    Response {
+        id: u64,
+        generation: u64,
+        cache_hit: bool,
+        during_rebuild: bool,
+        queue_ms: f64,
+        initial_ms: f64,
+        total_ms: f64,
+        initial: Json,
+        refined: Option<Json>,
+        trace: Json,
+    },
+    /// Ack for an `ingest`: deltas accepted into the log, plus the
+    /// generation serving *at ack time* (the rebuild lands later — poll
+    /// responses for the bump).
+    Ingested { accepted: usize, generation: u64 },
+    /// Counters and config snapshot.
+    Stats { body: Json },
+    /// Shutdown ack: total queries served over the daemon's life.
+    Shutdown { served: u64 },
+    /// A rejected line; `id` is present when the offending line was a
+    /// well-formed `query` envelope with a bad body.
+    Error { id: Option<u64>, message: String },
+}
+
+impl Reply {
+    /// Encode as one compact JSON line (no trailing newline).
+    pub fn to_line(&self) -> String {
+        match self {
+            Reply::Response {
+                id,
+                generation,
+                cache_hit,
+                during_rebuild,
+                queue_ms,
+                initial_ms,
+                total_ms,
+                initial,
+                refined,
+                trace,
+            } => Json::obj(vec![
+                ("type", "response".into()),
+                ("id", Json::Num(*id as f64)),
+                ("generation", Json::Num(*generation as f64)),
+                ("cache_hit", (*cache_hit).into()),
+                ("during_rebuild", (*during_rebuild).into()),
+                ("queue_ms", (*queue_ms).into()),
+                ("initial_ms", (*initial_ms).into()),
+                ("total_ms", (*total_ms).into()),
+                ("initial", initial.clone()),
+                ("refined", refined.clone().unwrap_or(Json::Null)),
+                ("trace", trace.clone()),
+            ])
+            .compact(),
+            Reply::Ingested {
+                accepted,
+                generation,
+            } => Json::obj(vec![
+                ("type", "ingested".into()),
+                ("accepted", (*accepted).into()),
+                ("generation", Json::Num(*generation as f64)),
+            ])
+            .compact(),
+            Reply::Stats { body } => {
+                let mut m = body_map(body);
+                m.insert("type".to_string(), Json::from("stats"));
+                Json::Obj(m).compact()
+            }
+            Reply::Shutdown { served } => Json::obj(vec![
+                ("type", "shutdown".into()),
+                ("served", Json::Num(*served as f64)),
+            ])
+            .compact(),
+            Reply::Error { id, message } => {
+                let mut pairs = vec![("type", Json::from("error"))];
+                if let Some(id) = id {
+                    pairs.push(("id", Json::Num(*id as f64)));
+                }
+                pairs.push(("message", Json::from(message.as_str())));
+                Json::obj(pairs).compact()
+            }
+        }
+    }
+
+    /// Decode one line (the load generator's half of the protocol).
+    pub fn parse_line(line: &str) -> Result<Reply> {
+        let v = Json::parse(line.trim())?;
+        let Json::Obj(mut m) = v else {
+            return Err(wire_err("reply line is not a JSON object"));
+        };
+        let ty = take_type(&mut m)?;
+        match ty.as_str() {
+            "response" => {
+                let v = Json::Obj(m);
+                let refined = match v.get("refined") {
+                    None | Some(Json::Null) => None,
+                    Some(r) => Some(r.clone()),
+                };
+                Ok(Reply::Response {
+                    id: u64_field(&v, "id")?,
+                    generation: u64_field(&v, "generation")?,
+                    cache_hit: bool_field(&v, "cache_hit")?,
+                    during_rebuild: bool_field(&v, "during_rebuild")?,
+                    queue_ms: v.num_of("queue_ms")?,
+                    initial_ms: v.num_of("initial_ms")?,
+                    total_ms: v.num_of("total_ms")?,
+                    initial: v
+                        .get("initial")
+                        .cloned()
+                        .ok_or_else(|| wire_err("response missing initial"))?,
+                    refined,
+                    trace: v.get("trace").cloned().unwrap_or(Json::Arr(Vec::new())),
+                })
+            }
+            "ingested" => {
+                let v = Json::Obj(m);
+                Ok(Reply::Ingested {
+                    accepted: u64_field(&v, "accepted")? as usize,
+                    generation: u64_field(&v, "generation")?,
+                })
+            }
+            "stats" => Ok(Reply::Stats { body: Json::Obj(m) }),
+            "shutdown" => {
+                let v = Json::Obj(m);
+                Ok(Reply::Shutdown {
+                    served: u64_field(&v, "served")?,
+                })
+            }
+            "error" => {
+                let v = Json::Obj(m);
+                let id = match v.get("id") {
+                    Some(n) => Some(json_u64(n, "id")?),
+                    None => None,
+                };
+                Ok(Reply::Error {
+                    id,
+                    message: v.str_of("message")?.to_string(),
+                })
+            }
+            other => Err(wire_err(&format!("unknown reply type {other:?}"))),
+        }
+    }
+}
+
+/// Build the `response` reply for a served outcome. The outcome's
+/// latencies already include `queue_wait_s` (the push-mode executor
+/// folds queue time into them); the wait is also surfaced separately
+/// as `queue_ms`.
+pub fn response_reply<R>(
+    id: u64,
+    queue_wait_s: f64,
+    outcome: &QueryOutcome<R>,
+    to_json: impl Fn(&R) -> Json,
+) -> Reply {
+    Reply::Response {
+        id,
+        generation: outcome.generation,
+        cache_hit: outcome.cache_hit,
+        during_rebuild: outcome.during_rebuild,
+        queue_ms: queue_wait_s * 1e3,
+        initial_ms: outcome.initial_latency_s * 1e3,
+        total_ms: outcome.total_latency_s * 1e3,
+        initial: to_json(&outcome.initial),
+        refined: outcome.refined.as_ref().map(&to_json),
+        trace: trace_json(&outcome.trace),
+    }
+}
+
+/// The per-request anytime checkpoints as a JSON array.
+pub fn trace_json(trace: &[ServeTracePoint]) -> Json {
+    Json::Arr(
+        trace
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("stage", t.stage.name().into()),
+                    ("wall_ms", (t.wall_s * 1e3).into()),
+                    ("accuracy", t.accuracy.map(Json::Num).unwrap_or(Json::Null)),
+                    ("refined_buckets", t.refined_buckets.into()),
+                ])
+            })
+            .collect(),
+    )
+}
+
+/// App-specific translation between wire JSON and a model's
+/// query/response/delta types. `Send + Sync + 'static` because the
+/// daemon's per-connection reader threads decode with a shared codec.
+pub trait WireCodec<M: Refreshable>: Send + Sync + 'static {
+    /// Short app tag for stats/reports ("knn", "cf", "kmeans").
+    fn app(&self) -> &'static str;
+    /// Decode a `query` body into a model query.
+    fn query_from_json(&self, body: &Json) -> Result<M::Query>;
+    /// Encode a response for the wire.
+    fn response_to_json(&self, response: &M::Response) -> Json;
+    /// Decode one element of an `ingest` body's `"deltas"` array.
+    fn delta_from_json(&self, body: &Json) -> Result<M::Delta>;
+}
+
+/// kNN codec. Queries: `{"test_row": T}` (cycles over held-out test
+/// points, exactly like [`super::query_log::knn_query_log`], so repeat
+/// keys cache-hit) or `{"features": [...], "label"?: L}`. Deltas:
+/// `{"features": [...], "label": L}`.
+#[derive(Clone)]
+pub struct KnnWire {
+    /// Workbench dataset the row-indexed form addresses into.
+    pub data: Arc<LabeledPoints>,
+    /// Base seed folded into per-query plan seeds.
+    pub seed: u64,
+}
+
+impl WireCodec<KnnModel> for KnnWire {
+    fn app(&self) -> &'static str {
+        "knn"
+    }
+
+    fn query_from_json(&self, body: &Json) -> Result<KnnQuery> {
+        if body.get("features").is_some() {
+            let features = f32_list(body, "features")?;
+            if features.len() != self.data.train.cols() {
+                return Err(wire_err(&format!(
+                    "query features have dim {}, model expects {}",
+                    features.len(),
+                    self.data.train.cols()
+                )));
+            }
+            let label = match body.get("label") {
+                Some(n) => Some(json_u64(n, "label")? as u32),
+                None => None,
+            };
+            Ok(KnnQuery {
+                features,
+                label,
+                seed: opt_seed(body, self.seed)?,
+            })
+        } else {
+            let n_test = self.data.test.rows();
+            if n_test == 0 {
+                return Err(wire_err("no held-out test rows to address"));
+            }
+            let t = u64_field(body, "test_row")? as usize % n_test;
+            Ok(KnnQuery {
+                features: self.data.test.row(t).to_vec(),
+                label: Some(self.data.test_labels[t]),
+                seed: self.seed ^ t as u64,
+            })
+        }
+    }
+
+    fn response_to_json(&self, response: &u32) -> Json {
+        Json::obj(vec![("label", (*response as usize).into())])
+    }
+
+    fn delta_from_json(&self, body: &Json) -> Result<LabeledPoint> {
+        let features = f32_list(body, "features")?;
+        if features.len() != self.data.train.cols() {
+            return Err(wire_err(&format!(
+                "delta features have dim {}, model expects {}",
+                features.len(),
+                self.data.train.cols()
+            )));
+        }
+        let label = u64_field(body, "label")? as u32;
+        Ok(LabeledPoint { features, label })
+    }
+}
+
+/// CF codec. Queries: `{"test_row": T}` addresses a held-out (user,
+/// item, rating) triplet and builds the user's centered row + mask the
+/// same way [`super::query_log::cf_query_log`] does. Deltas:
+/// `{"user": U}` — a train-matrix user row to fold into the shards
+/// (matching [`CfModel`]'s `Delta = u32`).
+#[derive(Clone)]
+pub struct CfWire {
+    /// Ratings split the row-indexed form addresses into.
+    pub split: Arc<RatingsSplit>,
+    /// Base seed folded into per-query plan seeds.
+    pub seed: u64,
+}
+
+impl WireCodec<CfModel> for CfWire {
+    fn app(&self) -> &'static str {
+        "cf"
+    }
+
+    fn query_from_json(&self, body: &Json) -> Result<CfQuery> {
+        let n_test = self.split.test.len();
+        if n_test == 0 {
+            return Err(wire_err("no held-out ratings to address"));
+        }
+        let t = u64_field(body, "test_row")? as usize % n_test;
+        let (u, item, actual) = self.split.test[t];
+        let (cu, mean) = self.split.train.centered_row(u as usize);
+        let mut mu = vec![0.0f32; self.split.train.n_items()];
+        for &it in &self.split.train.rated[u as usize] {
+            mu[it as usize] = 1.0;
+        }
+        Ok(CfQuery {
+            cu: Arc::new(cu),
+            mu: Arc::new(mu),
+            mean,
+            item,
+            exclude: Some(u),
+            actual: Some(actual),
+            seed: self.seed ^ t as u64,
+        })
+    }
+
+    fn response_to_json(&self, response: &f32) -> Json {
+        Json::obj(vec![("rating", f64::from(*response).into())])
+    }
+
+    fn delta_from_json(&self, body: &Json) -> Result<u32> {
+        let u = u64_field(body, "user")? as usize;
+        if u >= self.split.train.n_users() {
+            return Err(wire_err(&format!(
+                "delta user {u} out of range (train has {})",
+                self.split.train.n_users()
+            )));
+        }
+        Ok(u as u32)
+    }
+}
+
+/// k-means codec. Queries: `{"row": R}` (a training point, un-jittered
+/// so repeats cache-hit) or `{"point": [...]}`. Deltas:
+/// `{"point": [...]}` or `{"row": R}`.
+#[derive(Clone)]
+pub struct KmeansWire {
+    /// Point set the row-indexed form addresses into.
+    pub points: Arc<Matrix>,
+    /// Base seed folded into per-query plan seeds.
+    pub seed: u64,
+}
+
+impl KmeansWire {
+    fn point_of(&self, body: &Json) -> Result<(Vec<f32>, u64)> {
+        if body.get("point").is_some() {
+            let point = f32_list(body, "point")?;
+            if point.len() != self.points.cols() {
+                return Err(wire_err(&format!(
+                    "point has dim {}, model expects {}",
+                    point.len(),
+                    self.points.cols()
+                )));
+            }
+            Ok((point, self.seed))
+        } else {
+            let rows = self.points.rows();
+            if rows == 0 {
+                return Err(wire_err("no points to address"));
+            }
+            let r = u64_field(body, "row")? as usize % rows;
+            Ok((self.points.row(r).to_vec(), self.seed ^ r as u64))
+        }
+    }
+}
+
+impl WireCodec<KmeansModel> for KmeansWire {
+    fn app(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn query_from_json(&self, body: &Json) -> Result<KmeansQuery> {
+        let (point, seed) = self.point_of(body)?;
+        let seed = match body.get("seed") {
+            Some(n) => json_u64(n, "seed")?,
+            None => seed,
+        };
+        Ok(KmeansQuery { point, seed })
+    }
+
+    fn response_to_json(&self, response: &RepMatch) -> Json {
+        Json::obj(vec![
+            ("cluster", (response.cluster as usize).into()),
+            ("dist", f64::from(response.dist).into()),
+        ])
+    }
+
+    fn delta_from_json(&self, body: &Json) -> Result<Vec<f32>> {
+        Ok(self.point_of(body)?.0)
+    }
+}
+
+// ---- shared field helpers ------------------------------------------------
+
+fn wire_err(msg: &str) -> Error {
+    Error::Config(format!("wire: {msg}"))
+}
+
+fn body_map(body: &Json) -> BTreeMap<String, Json> {
+    match body {
+        Json::Obj(m) => m.clone(),
+        other => {
+            let mut m = BTreeMap::new();
+            m.insert("body".to_string(), other.clone());
+            m
+        }
+    }
+}
+
+fn take_type(m: &mut BTreeMap<String, Json>) -> Result<String> {
+    match m.remove("type") {
+        Some(Json::Str(s)) => Ok(s),
+        Some(_) => Err(wire_err("type is not a string")),
+        None => Err(wire_err("line has no type field")),
+    }
+}
+
+fn take_u64(m: &mut BTreeMap<String, Json>, key: &str) -> Result<u64> {
+    match m.remove(key) {
+        Some(v) => json_u64(&v, key),
+        None => Err(wire_err(&format!("missing {key}"))),
+    }
+}
+
+fn json_u64(v: &Json, key: &str) -> Result<u64> {
+    match v {
+        Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n < 1.8e19 => Ok(*n as u64),
+        _ => Err(wire_err(&format!("{key} is not a non-negative integer"))),
+    }
+}
+
+fn u64_field(v: &Json, key: &str) -> Result<u64> {
+    match v.get(key) {
+        Some(n) => json_u64(n, key),
+        None => Err(wire_err(&format!("missing {key}"))),
+    }
+}
+
+fn bool_field(v: &Json, key: &str) -> Result<bool> {
+    match v.get(key) {
+        Some(Json::Bool(b)) => Ok(*b),
+        Some(_) => Err(wire_err(&format!("{key} is not a bool"))),
+        None => Err(wire_err(&format!("missing {key}"))),
+    }
+}
+
+fn f32_list(v: &Json, key: &str) -> Result<Vec<f32>> {
+    v.arr_of(key)?
+        .iter()
+        .map(|x| x.as_num().map(|n| n as f32))
+        .collect()
+}
+
+fn opt_seed(body: &Json, default: u64) -> Result<u64> {
+    match body.get("seed") {
+        Some(n) => json_u64(n, "seed"),
+        None => Ok(default),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::gaussian::GaussianMixtureSpec;
+    use crate::data::ratings::LatentFactorSpec;
+    use crate::serve::stats::ServeStage;
+
+    fn roundtrip_request(r: Request) {
+        let line = r.to_line();
+        let back = Request::parse_line(&line).expect("request round-trip parses");
+        assert_eq!(back, r, "line was {line}");
+    }
+
+    fn roundtrip_reply(r: Reply) {
+        let line = r.to_line();
+        let back = Reply::parse_line(&line).expect("reply round-trip parses");
+        assert_eq!(back, r, "line was {line}");
+    }
+
+    #[test]
+    fn every_request_type_survives_encode_decode() {
+        roundtrip_request(Request::query(7, vec![("test_row", 42usize.into())]));
+        roundtrip_request(Request::query(
+            u64::from(u32::MAX),
+            vec![("features", Json::nums(&[1.0, -2.5, 0.25])), ("label", 3usize.into())],
+        ));
+        roundtrip_request(Request::Ingest {
+            body: Json::obj(vec![(
+                "deltas",
+                Json::Arr(vec![Json::obj(vec![("user", 9usize.into())])]),
+            )]),
+        });
+        roundtrip_request(Request::Stats);
+        roundtrip_request(Request::Shutdown);
+    }
+
+    #[test]
+    fn every_reply_type_survives_encode_decode() {
+        roundtrip_reply(Reply::Response {
+            id: 3,
+            generation: 2,
+            cache_hit: false,
+            during_rebuild: true,
+            queue_ms: 0.125,
+            initial_ms: 1.5,
+            total_ms: 4.75,
+            initial: Json::obj(vec![("label", 1usize.into())]),
+            refined: Some(Json::obj(vec![("label", 2usize.into())])),
+            trace: trace_json(&[
+                ServeTracePoint {
+                    stage: ServeStage::Initial,
+                    wall_s: 0.0015,
+                    accuracy: Some(0.0),
+                    refined_buckets: 0,
+                },
+                ServeTracePoint {
+                    stage: ServeStage::Refined,
+                    wall_s: 0.00475,
+                    accuracy: Some(1.0),
+                    refined_buckets: 4,
+                },
+            ]),
+        });
+        roundtrip_reply(Reply::Response {
+            id: 0,
+            generation: 0,
+            cache_hit: true,
+            during_rebuild: false,
+            queue_ms: 0.0,
+            initial_ms: 0.0,
+            total_ms: 0.0,
+            initial: Json::obj(vec![("rating", 3.5.into())]),
+            refined: None,
+            trace: Json::Arr(Vec::new()),
+        });
+        roundtrip_reply(Reply::Ingested {
+            accepted: 12,
+            generation: 1,
+        });
+        roundtrip_reply(Reply::Stats {
+            body: Json::obj(vec![("queries", 10usize.into()), ("p99_s", 0.004.into())]),
+        });
+        roundtrip_reply(Reply::Shutdown { served: 1234 });
+        roundtrip_reply(Reply::Error {
+            id: Some(5),
+            message: "bad \"body\"".to_string(),
+        });
+        roundtrip_reply(Reply::Error {
+            id: None,
+            message: "unparseable line".to_string(),
+        });
+    }
+
+    #[test]
+    fn malformed_lines_yield_errors_not_panics() {
+        for line in [
+            "",
+            "not json",
+            "[1,2,3]",
+            "{\"id\":1}",
+            "{\"type\":\"nope\"}",
+            "{\"type\":\"query\"}",
+            "{\"type\":\"query\",\"id\":-3}",
+            "{\"type\":\"query\",\"id\":1.5}",
+            "{\"type\":3}",
+            "{\"type\":\"response\",\"id\":1}",
+        ] {
+            assert!(
+                Request::parse_line(line).is_err() || Reply::parse_line(line).is_err(),
+                "line {line:?} should fail at least one direction"
+            );
+        }
+        assert!(Request::parse_line("{\"type\":\"nope\"}").is_err());
+        assert!(Reply::parse_line("{\"type\":\"nope\"}").is_err());
+        assert!(Reply::parse_line("{\"type\":\"response\"}").is_err());
+    }
+
+    fn knn_wire() -> KnnWire {
+        let data = GaussianMixtureSpec {
+            n_points: 200,
+            dim: 4,
+            n_classes: 2,
+            test_fraction: 0.1,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        KnnWire {
+            data: Arc::new(data),
+            seed: 7,
+        }
+    }
+
+    #[test]
+    fn knn_codec_addresses_rows_and_decodes_explicit_features() {
+        let w = knn_wire();
+        let n_test = w.data.test.rows();
+        let q = w
+            .query_from_json(&Json::obj(vec![("test_row", 3usize.into())]))
+            .unwrap();
+        assert_eq!(q.features, w.data.test.row(3 % n_test).to_vec());
+        assert!(q.label.is_some());
+        // Row addressing cycles like the replay query log, so hot keys
+        // repeat exactly (same bytes => same cache key).
+        let q2 = w
+            .query_from_json(&Json::obj(vec![("test_row", (3 + n_test).into())]))
+            .unwrap();
+        assert_eq!(q.features, q2.features);
+        assert_eq!(q.seed, q2.seed);
+
+        let explicit = w
+            .query_from_json(&Json::obj(vec![(
+                "features",
+                Json::nums(&[0.0, 1.0, 2.0, 3.0]),
+            )]))
+            .unwrap();
+        assert_eq!(explicit.features, vec![0.0, 1.0, 2.0, 3.0]);
+        assert_eq!(explicit.label, None);
+
+        assert!(w
+            .query_from_json(&Json::obj(vec![("features", Json::nums(&[1.0]))]))
+            .is_err());
+        assert!(w.query_from_json(&Json::obj(vec![])).is_err());
+    }
+
+    #[test]
+    fn knn_codec_decodes_and_validates_deltas() {
+        let w = knn_wire();
+        let d = w
+            .delta_from_json(&Json::obj(vec![
+                ("features", Json::nums(&[1.0, 2.0, 3.0, 4.0])),
+                ("label", 1usize.into()),
+            ]))
+            .unwrap();
+        assert_eq!(d.label, 1);
+        assert_eq!(d.features.len(), 4);
+        assert!(w
+            .delta_from_json(&Json::obj(vec![
+                ("features", Json::nums(&[1.0])),
+                ("label", 1usize.into()),
+            ]))
+            .is_err());
+    }
+
+    #[test]
+    fn cf_codec_builds_centered_rows_and_validates_delta_users() {
+        let m = LatentFactorSpec {
+            n_users: 60,
+            n_items: 24,
+            mean_ratings_per_user: 8,
+            ..Default::default()
+        }
+        .generate()
+        .unwrap();
+        let split = RatingsSplit::new(&m, 4, 0.2, 3).unwrap();
+        let w = CfWire {
+            split: Arc::new(split),
+            seed: 11,
+        };
+        let q = w
+            .query_from_json(&Json::obj(vec![("test_row", 0usize.into())]))
+            .unwrap();
+        let (u, item, actual) = w.split.test[0];
+        assert_eq!(q.item, item);
+        assert_eq!(q.exclude, Some(u));
+        assert_eq!(q.actual, Some(actual));
+        assert_eq!(q.mu.len(), w.split.train.n_items());
+
+        assert_eq!(
+            w.delta_from_json(&Json::obj(vec![("user", 1usize.into())]))
+                .unwrap(),
+            1
+        );
+        assert!(w
+            .delta_from_json(&Json::obj(vec![("user", 10_000usize.into())]))
+            .is_err());
+    }
+
+    #[test]
+    fn kmeans_codec_addresses_rows_and_points() {
+        let pts = Matrix::from_vec(4, 2, vec![0., 0., 1., 1., 2., 2., 3., 3.]).unwrap();
+        let w = KmeansWire {
+            points: Arc::new(pts),
+            seed: 5,
+        };
+        let q = w
+            .query_from_json(&Json::obj(vec![("row", 2usize.into())]))
+            .unwrap();
+        assert_eq!(q.point, vec![2.0, 2.0]);
+        let q2 = w
+            .query_from_json(&Json::obj(vec![("point", Json::nums(&[0.5, 0.5]))]))
+            .unwrap();
+        assert_eq!(q2.point, vec![0.5, 0.5]);
+        assert!(w
+            .query_from_json(&Json::obj(vec![("point", Json::nums(&[0.5]))]))
+            .is_err());
+        let d = w
+            .delta_from_json(&Json::obj(vec![("row", 1usize.into())]))
+            .unwrap();
+        assert_eq!(d, vec![1.0, 1.0]);
+    }
+}

@@ -1,0 +1,109 @@
+//! One serving surface over a built model set: [`Session`].
+//!
+//! A session bundles what every serving mode needs — an epoch-versioned
+//! [`ModelRegistry`] over the shards, an answer cache the registry
+//! invalidates on every swap, and a validated [`ServeConfig`] — and is
+//! built **once**, then driven by whichever mode the caller wants:
+//!
+//! - [`Session::replay`] — in-process replay of a query log (the
+//!   pre-PR-6 `Workbench::serve_*` paths);
+//! - [`Session::replay_with_refresh`] — replay with delta ingestion,
+//!   background rebuilds and atomic hot-swaps interleaved;
+//! - [`crate::serve::daemon::Daemon`] — the long-running JSONL server,
+//!   where arrivals and queue depth are real.
+//!
+//! Collapsing the six per-app `Workbench::serve_*` entry points into
+//! this one generic surface is what lets the daemon, the CLI, the
+//! benches and the tests share a single code path.
+
+use std::sync::{Arc, Mutex};
+
+use crate::error::Result;
+use crate::mapreduce::engine::Engine;
+use crate::refresh::{
+    slice_deltas, DeltaLog, ModelRegistry, Rebuilder, RefreshDriver, Refreshable,
+};
+use crate::serve::cache::AnswerCache;
+use crate::serve::executor::{
+    QueryOutcome, ServeConfig, ServeReport, ShardedServer, SharedAnswerCache,
+};
+
+/// A built, swappable model set plus the cache and config it serves
+/// with. See the module docs for the three driving modes.
+pub struct Session<M: Refreshable> {
+    server: ShardedServer<M>,
+    cache: SharedAnswerCache<M::Response>,
+    config: ServeConfig,
+}
+
+impl<M: Refreshable> Session<M> {
+    /// Wrap built shards (at least one) in a fresh registry at
+    /// generation 0, with an answer cache of `config.cache_capacity`
+    /// entries attached so every future swap invalidates it.
+    pub fn new(shards: Vec<Arc<M>>, config: ServeConfig) -> Result<Session<M>> {
+        let registry = Arc::new(ModelRegistry::new(shards)?);
+        let cache = Arc::new(Mutex::new(AnswerCache::new(config.cache_capacity)));
+        registry.attach_cache(Arc::clone(&cache));
+        Ok(Session {
+            server: ShardedServer::with_registry(registry),
+            cache,
+            config,
+        })
+    }
+
+    /// The session's validated serving config.
+    pub fn config(&self) -> &ServeConfig {
+        &self.config
+    }
+
+    /// The session-lifetime answer cache (hit/lookup counters are
+    /// lifetime totals; per-replay reports carry deltas).
+    pub fn cache(&self) -> &SharedAnswerCache<M::Response> {
+        &self.cache
+    }
+
+    /// The underlying sharded server.
+    pub fn server(&self) -> &ShardedServer<M> {
+        &self.server
+    }
+
+    /// The epoch-versioned registry rebuilds publish into.
+    pub fn registry(&self) -> &Arc<ModelRegistry<M>> {
+        self.server.registry()
+    }
+
+    /// Replay a query log against the session's cache and config.
+    /// Repeat traffic *across* replays hits the shared cache; the
+    /// report's cache counters are this replay's deltas.
+    pub fn replay(
+        &self,
+        engine: &Engine,
+        queries: Vec<M::Query>,
+    ) -> Result<(Vec<QueryOutcome<M::Response>>, ServeReport)> {
+        self.server
+            .serve_with_cache(engine, queries, &self.config, &self.cache)
+    }
+
+    /// Replay with live refresh: `deltas` are cut into one ingestion
+    /// slice per refresh cycle (`config.refresh.every` queries apart),
+    /// each cycle appends its slice to the delta log and kicks off
+    /// background rebuilds, and finished rebuilds hot-swap in between
+    /// batches without dropping in-flight queries.
+    pub fn replay_with_refresh(
+        &self,
+        engine: &Engine,
+        queries: Vec<M::Query>,
+        deltas: Vec<M::Delta>,
+    ) -> Result<(Vec<QueryOutcome<M::Response>>, ServeReport)> {
+        let log = Arc::new(DeltaLog::new(self.server.n_shards()));
+        let rebuilder = Rebuilder::new(Arc::clone(self.registry()), log);
+        let cycles = if self.config.refresh.every > 0 {
+            queries.len().saturating_sub(1) / self.config.refresh.every
+        } else {
+            0
+        };
+        let mut driver = RefreshDriver::new(rebuilder, slice_deltas(deltas, cycles));
+        self.server
+            .serve_with_refresh(engine, queries, &self.config, &self.cache, &mut driver)
+    }
+}

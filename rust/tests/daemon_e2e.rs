@@ -1,0 +1,352 @@
+//! End-to-end tests for the JSONL serving daemon over real TCP
+//! connections: same-connection FIFO ordering through the shutdown
+//! drain, concurrent clients with interleaved replies, ingest →
+//! background rebuild → generation bump with cache invalidation, and
+//! malformed-line resilience.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use accurateml::error::Result;
+use accurateml::mapreduce::engine::Engine;
+use accurateml::model::{InitialAnswer, ServableModel};
+use accurateml::refresh::Refreshable;
+use accurateml::serve::{
+    Daemon, DaemonReport, RefineBudget, Reply, Request, ServeConfig, Session, WireCodec,
+};
+use accurateml::util::json::Json;
+
+/// Toy refreshable shard whose answer is its absorbed-delta sum and
+/// whose merge is a max over shards, so swaps are observable through
+/// the wire as concrete value changes.
+struct ToyModel {
+    value: i64,
+}
+
+impl ServableModel for ToyModel {
+    type Query = u64;
+    type Answer = i64;
+    type Response = i64;
+
+    fn n_buckets(&self) -> usize {
+        1
+    }
+    fn n_originals(&self) -> usize {
+        1
+    }
+    fn answer_initial(&self, _q: &u64) -> InitialAnswer<i64> {
+        InitialAnswer {
+            answer: self.value,
+            correlations: vec![0.0],
+        }
+    }
+    fn refine(&self, _q: &u64, initial: &InitialAnswer<i64>, _budget: usize) -> i64 {
+        initial.answer
+    }
+    fn merge(&self, _q: &u64, partials: &[i64]) -> i64 {
+        partials.iter().copied().max().unwrap_or(0)
+    }
+    fn accuracy(&self, _q: &u64, _r: &i64) -> Option<f64> {
+        None
+    }
+    fn query_key(&self, q: &u64) -> Option<Vec<u8>> {
+        Some(q.to_le_bytes().to_vec())
+    }
+}
+
+impl Refreshable for ToyModel {
+    type Delta = i64;
+
+    fn merge_deltas(&self, deltas: &[i64]) -> Result<ToyModel> {
+        Ok(ToyModel {
+            value: self.value + deltas.iter().sum::<i64>(),
+        })
+    }
+
+    fn validate(&self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Wire codec for the toy: queries `{"q": N}`, responses
+/// `{"value": V}`, deltas `{"add": D}`.
+struct ToyWire;
+
+impl WireCodec<ToyModel> for ToyWire {
+    fn app(&self) -> &'static str {
+        "toy"
+    }
+    fn query_from_json(&self, body: &Json) -> Result<u64> {
+        Ok(body.num_of("q")? as u64)
+    }
+    fn response_to_json(&self, response: &i64) -> Json {
+        Json::obj(vec![("value", (*response as f64).into())])
+    }
+    fn delta_from_json(&self, body: &Json) -> Result<i64> {
+        Ok(body.num_of("add")? as i64)
+    }
+}
+
+fn config(batch_size: usize) -> ServeConfig {
+    ServeConfig::builder()
+        .batch_size(batch_size)
+        .deadline_s(30.0)
+        .budget(RefineBudget::All)
+        .cache_capacity(64)
+        .max_batch_wait_s(0.002)
+        .build()
+        .unwrap()
+}
+
+/// Start a daemon over shards `[1, 2]` on an ephemeral port. The
+/// handle's join yields the daemon's exit report.
+fn start_daemon(cfg: ServeConfig) -> (SocketAddr, thread::JoinHandle<DaemonReport>) {
+    let listener = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+    let addr = listener.local_addr().unwrap();
+    let handle = thread::spawn(move || {
+        let engine = Engine::new(2);
+        let shards = vec![Arc::new(ToyModel { value: 1 }), Arc::new(ToyModel { value: 2 })];
+        let session = Session::new(shards, cfg).unwrap();
+        Daemon::new(&session, Arc::new(ToyWire))
+            .run_listener(&engine, listener)
+            .unwrap()
+    });
+    (addr, handle)
+}
+
+fn send(stream: &mut TcpStream, line: &str) {
+    writeln!(stream, "{line}").unwrap();
+}
+
+fn read_reply(reader: &mut BufReader<TcpStream>) -> Reply {
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    Reply::parse_line(&line).unwrap()
+}
+
+#[test]
+fn queries_are_answered_before_the_shutdown_ack() {
+    let (addr, handle) = start_daemon(config(4));
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // 10 queries (two full batches plus a partial) followed by an
+    // immediate shutdown: the drain must flush the partial batch and
+    // answer everything before acking.
+    for i in 0..10u64 {
+        let q = (i as usize) % 3;
+        send(&mut stream, &Request::query(i, vec![("q", q.into())]).to_line());
+    }
+    send(&mut stream, &Request::Shutdown.to_line());
+
+    let mut ids = Vec::new();
+    loop {
+        match read_reply(&mut reader) {
+            Reply::Response {
+                id,
+                generation,
+                initial,
+                ..
+            } => {
+                assert_eq!(generation, 0, "no refresh ran");
+                assert_eq!(
+                    initial.num_of("value").unwrap(),
+                    2.0,
+                    "merge is the max over shard values 1 and 2"
+                );
+                ids.push(id);
+            }
+            Reply::Shutdown { served } => {
+                assert_eq!(served, 10, "the ack counts every query");
+                break;
+            }
+            other => panic!("unexpected reply {other:?}"),
+        }
+    }
+    ids.sort_unstable();
+    assert_eq!(
+        ids,
+        (0..10).collect::<Vec<_>>(),
+        "every query answered before the shutdown ack"
+    );
+
+    let report = handle.join().unwrap();
+    assert_eq!(report.served, 10);
+    assert!(report.cache_lookups >= 10, "every admission probes the cache");
+}
+
+#[test]
+fn concurrent_clients_get_their_own_replies() {
+    let (addr, handle) = start_daemon(config(4));
+
+    let client = |offset: u64| {
+        thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            let mut reader = BufReader::new(stream.try_clone().unwrap());
+            for i in 0..20u64 {
+                let id = offset * 100 + i;
+                let q = (offset * 1000 + i) as usize;
+                send(&mut stream, &Request::query(id, vec![("q", q.into())]).to_line());
+            }
+            let mut ids = Vec::new();
+            for _ in 0..20 {
+                match read_reply(&mut reader) {
+                    Reply::Response { id, .. } => ids.push(id),
+                    other => panic!("unexpected reply {other:?}"),
+                }
+            }
+            ids.sort_unstable();
+            let want: Vec<u64> = (0..20).map(|i| offset * 100 + i).collect();
+            assert_eq!(ids, want, "client {offset} got exactly its own replies");
+        })
+    };
+
+    let a = client(1);
+    let b = client(2);
+    a.join().unwrap();
+    b.join().unwrap();
+
+    // A third connection shuts the daemon down after both clients have
+    // read all their replies.
+    let mut ctl = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(ctl.try_clone().unwrap());
+    send(&mut ctl, &Request::Shutdown.to_line());
+    match read_reply(&mut reader) {
+        Reply::Shutdown { served } => assert_eq!(served, 40),
+        other => panic!("unexpected reply {other:?}"),
+    }
+    assert_eq!(handle.join().unwrap().served, 40);
+}
+
+#[test]
+fn ingest_triggers_rebuild_swap_and_cache_invalidation() {
+    let (addr, handle) = start_daemon(config(1));
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // Warm the cache on key 7 at generation 0: a repeat is a hit.
+    send(&mut stream, &Request::query(0, vec![("q", 7usize.into())]).to_line());
+    match read_reply(&mut reader) {
+        Reply::Response {
+            generation: 0,
+            cache_hit: false,
+            ..
+        } => {}
+        other => panic!("unexpected first reply {other:?}"),
+    }
+    send(&mut stream, &Request::query(1, vec![("q", 7usize.into())]).to_line());
+    let initial = match read_reply(&mut reader) {
+        Reply::Response {
+            cache_hit: true,
+            initial,
+            ..
+        } => initial,
+        other => panic!("expected a cache hit, got {other:?}"),
+    };
+    assert_eq!(initial.num_of("value").unwrap(), 2.0);
+
+    // Ingest +10 per shard (round-robin over two shards). After both
+    // background rebuilds publish, the answer is max(1+10, 2+10) = 12
+    // and the stale cached 2 must not survive the swaps.
+    let deltas = Json::Arr(vec![
+        Json::obj(vec![("add", 10usize.into())]),
+        Json::obj(vec![("add", 10usize.into())]),
+    ]);
+    let ingest = Request::Ingest {
+        body: Json::obj(vec![("deltas", deltas)]),
+    };
+    send(&mut stream, &ingest.to_line());
+    match read_reply(&mut reader) {
+        Reply::Ingested { accepted: 2, .. } => {}
+        other => panic!("unexpected ingest ack {other:?}"),
+    }
+
+    let mut id = 2u64;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        assert!(Instant::now() < deadline, "rebuild never published");
+        send(&mut stream, &Request::query(id, vec![("q", 7usize.into())]).to_line());
+        let (generation, initial) = match read_reply(&mut reader) {
+            Reply::Response {
+                generation,
+                initial,
+                ..
+            } => (generation, initial),
+            other => panic!("unexpected reply {other:?}"),
+        };
+        let value = initial.num_of("value").unwrap();
+        if generation >= 2 {
+            // Both swaps landed; invalidation means no stale answer.
+            assert_eq!(value, 12.0, "post-swap answers fold the deltas in");
+            break;
+        }
+        // Before both swaps land only 2 (gen 0) or a one-sided merge
+        // (11 or 12) is consistent.
+        assert!(
+            value == 2.0 || value == 11.0 || value == 12.0,
+            "inconsistent mid-refresh value {value}"
+        );
+        id += 1;
+        thread::sleep(Duration::from_millis(5));
+    }
+
+    // Stats reflect the refresh counters.
+    send(&mut stream, &Request::Stats.to_line());
+    let body = match read_reply(&mut reader) {
+        Reply::Stats { body } => body,
+        other => panic!("unexpected stats reply {other:?}"),
+    };
+    assert_eq!(body.str_of("app").unwrap(), "toy");
+    assert_eq!(body.num_of("swaps").unwrap(), 2.0);
+    assert_eq!(body.num_of("ingested").unwrap(), 2.0);
+    assert!(body.get("config").is_some(), "stats embed the live config");
+
+    send(&mut stream, &Request::Shutdown.to_line());
+    assert!(matches!(read_reply(&mut reader), Reply::Shutdown { .. }));
+    let report = handle.join().unwrap();
+    assert_eq!(report.swaps, 2);
+    assert_eq!(report.generation, 2);
+    assert_eq!(report.ingested, 2);
+}
+
+#[test]
+fn malformed_lines_get_error_replies_without_killing_the_connection() {
+    let (addr, handle) = start_daemon(config(1));
+    let mut stream = TcpStream::connect(addr).unwrap();
+    let mut reader = BufReader::new(stream.try_clone().unwrap());
+
+    // Unparseable garbage: an error with no id to echo.
+    send(&mut stream, "this is not json");
+    let garbage = read_reply(&mut reader);
+    assert!(
+        matches!(garbage, Reply::Error { id: None, .. }),
+        "unexpected reply {garbage:?}"
+    );
+
+    // A well-formed query envelope with a body the codec rejects
+    // echoes the id so the client can fail just that request.
+    send(&mut stream, "{\"type\":\"query\",\"id\":9,\"wrong\":1}");
+    let bad_body = read_reply(&mut reader);
+    assert!(
+        matches!(bad_body, Reply::Error { id: Some(9), .. }),
+        "unexpected reply {bad_body:?}"
+    );
+
+    // The connection still serves afterwards.
+    send(&mut stream, &Request::query(10, vec![("q", 1usize.into())]).to_line());
+    let ok = read_reply(&mut reader);
+    assert!(
+        matches!(ok, Reply::Response { id: 10, .. }),
+        "unexpected reply {ok:?}"
+    );
+
+    send(&mut stream, &Request::Shutdown.to_line());
+    assert!(matches!(
+        read_reply(&mut reader),
+        Reply::Shutdown { served: 1 }
+    ));
+    assert_eq!(handle.join().unwrap().served, 1);
+}

@@ -1,0 +1,219 @@
+//! Property tests for the JSONL wire protocol: randomized messages
+//! round-trip bit-exactly through `to_line`/`parse_line`, encoded
+//! lines never contain a raw newline (the JSONL framing invariant),
+//! arbitrary garbage parses to errors without panicking, and random
+//! valid `ServeConfig`s survive the JSON ⇄ builder round trip.
+
+use std::collections::BTreeMap;
+
+use accurateml::serve::{RefineBudget, Reply, Request, ServeConfig};
+use accurateml::util::json::Json;
+use accurateml::util::rng::Rng;
+
+const CASES: usize = 300;
+
+/// Strings drawn from a palette of JSON-hostile characters: quotes,
+/// backslashes, control characters, braces, multi-byte code points.
+fn rand_string(rng: &mut Rng) -> String {
+    const PALETTE: &[char] = &[
+        'a', 'B', '7', '_', '"', '\\', '/', '\n', '\t', '\r', 'é', 'λ', '中', ' ', ':', ',', '{',
+        '}', '[', ']',
+    ];
+    (0..rng.index(12))
+        .map(|_| PALETTE[rng.index(PALETTE.len())])
+        .collect()
+}
+
+/// Integers only: they print as `i64` and reparse exactly, which is
+/// what the protocol traffics in (ids, counters, row indexes).
+fn rand_num(rng: &mut Rng) -> f64 {
+    rng.below(2_000_001) as f64 - 1_000_000.0
+}
+
+fn rand_json(rng: &mut Rng, depth: usize) -> Json {
+    match rng.index(if depth == 0 { 4 } else { 6 }) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.chance(0.5)),
+        2 => Json::Num(rand_num(rng)),
+        3 => Json::Str(rand_string(rng)),
+        4 => Json::Arr(
+            (0..rng.index(4))
+                .map(|_| rand_json(rng, depth - 1))
+                .collect(),
+        ),
+        _ => rand_body(rng, depth - 1),
+    }
+}
+
+/// A random body object whose keys can never collide with the
+/// envelope keys (`type`, `id`) thanks to the `k` prefix.
+fn rand_body(rng: &mut Rng, depth: usize) -> Json {
+    let mut m = BTreeMap::new();
+    for i in 0..rng.index(5) {
+        let suffix = rand_string(rng).replace(['\n', '\r'], "");
+        m.insert(format!("k{i}_{suffix}"), rand_json(rng, depth));
+    }
+    Json::Obj(m)
+}
+
+#[test]
+fn requests_round_trip_bit_exactly() {
+    let mut rng = Rng::new(0xC0DE);
+    for case in 0..CASES {
+        let req = match rng.index(4) {
+            0 => Request::Query {
+                id: rng.below(1 << 50),
+                body: rand_body(&mut rng, 2),
+            },
+            1 => Request::Ingest {
+                body: rand_body(&mut rng, 2),
+            },
+            2 => Request::Stats,
+            _ => Request::Shutdown,
+        };
+        let line = req.to_line();
+        assert!(!line.contains('\n'), "case {case}: raw newline in {line:?}");
+        let back = Request::parse_line(&line)
+            .unwrap_or_else(|e| panic!("case {case}: {e} on {line:?}"));
+        assert_eq!(back, req, "case {case}: {line:?}");
+        // The canonical encoding is a fixed point.
+        assert_eq!(back.to_line(), line, "case {case}");
+    }
+}
+
+#[test]
+fn replies_round_trip_bit_exactly() {
+    let mut rng = Rng::new(0xFACE);
+    for case in 0..CASES {
+        let reply = match rng.index(5) {
+            0 => Reply::Response {
+                id: rng.below(1 << 50),
+                generation: rng.below(1 << 40),
+                cache_hit: rng.chance(0.5),
+                during_rebuild: rng.chance(0.5),
+                queue_ms: rand_num(&mut rng).abs(),
+                initial_ms: rand_num(&mut rng).abs(),
+                total_ms: rand_num(&mut rng).abs(),
+                initial: rand_json(&mut rng, 2),
+                // `Some(Null)` wires identically to `None`, so refined
+                // is either absent or a non-null object.
+                refined: if rng.chance(0.5) {
+                    Some(rand_body(&mut rng, 1))
+                } else {
+                    None
+                },
+                trace: Json::Arr(
+                    (0..rng.index(3))
+                        .map(|_| rand_body(&mut rng, 1))
+                        .collect(),
+                ),
+            },
+            1 => Reply::Ingested {
+                accepted: rng.index(1000),
+                generation: rng.below(1 << 40),
+            },
+            2 => Reply::Stats {
+                body: rand_body(&mut rng, 2),
+            },
+            3 => Reply::Shutdown {
+                served: rng.below(1 << 50),
+            },
+            _ => Reply::Error {
+                id: if rng.chance(0.5) {
+                    Some(rng.below(1 << 50))
+                } else {
+                    None
+                },
+                message: rand_string(&mut rng),
+            },
+        };
+        let line = reply.to_line();
+        assert!(!line.contains('\n'), "case {case}: raw newline in {line:?}");
+        let back = Reply::parse_line(&line)
+            .unwrap_or_else(|e| panic!("case {case}: {e} on {line:?}"));
+        assert_eq!(back, reply, "case {case}: {line:?}");
+        assert_eq!(back.to_line(), line, "case {case}");
+    }
+}
+
+#[test]
+fn malformed_lines_error_instead_of_panicking() {
+    let fixed = [
+        "",
+        "{",
+        "[1,2",
+        "null",
+        "42",
+        "\"str\"",
+        "{}",
+        "{\"type\":\"nope\"}",
+        "{\"type\":\"query\"}",
+        "{\"type\":\"response\"}",
+        "{\"id\":3}",
+        "{\"type\":\"query\",\"id\":\"notanum\"}",
+        "{\"type\":\"error\"}",
+    ];
+    for line in fixed {
+        assert!(Request::parse_line(line).is_err(), "request accepted {line:?}");
+        assert!(Reply::parse_line(line).is_err(), "reply accepted {line:?}");
+    }
+    // Requests ignore unknown keys (forward compatibility), so this is
+    // a valid shutdown request even though it is a malformed reply.
+    let asym = "{\"type\":\"shutdown\",\"served\":\"x\"}";
+    assert_eq!(Request::parse_line(asym).unwrap(), Request::Shutdown);
+    assert!(Reply::parse_line(asym).is_err());
+    let mut rng = Rng::new(0xBAD);
+    for _ in 0..CASES {
+        let line = rand_string(&mut rng);
+        // Must return (either way), never panic.
+        let _ = Request::parse_line(&line);
+        let _ = Reply::parse_line(&line);
+    }
+}
+
+#[test]
+fn serve_configs_round_trip_through_json_and_the_builder() {
+    let mut rng = Rng::new(0x5EED);
+    for case in 0..CASES {
+        let budget = match rng.index(5) {
+            0 => RefineBudget::Off,
+            1 => RefineBudget::All,
+            2 => RefineBudget::Deadline,
+            3 => RefineBudget::Buckets(rng.index(64) + 1),
+            // Dyadic fractions in (0, 1] survive the text round trip
+            // exactly.
+            _ => RefineBudget::Fraction((rng.index(99) + 1) as f64 / 128.0),
+        };
+        let cfg = ServeConfig::builder()
+            .batch_size(rng.index(256) + 1)
+            .deadline_s(rng.index(1000) as f64 / 64.0)
+            .budget(budget)
+            .cache_capacity(rng.index(4096))
+            .shed_queue_depth(rng.index(16))
+            .max_batch_wait_s(rng.index(64) as f64 / 256.0)
+            .refresh_every(rng.index(100))
+            .build()
+            .unwrap();
+        let back = ServeConfig::from_json(&cfg.to_json())
+            .unwrap_or_else(|e| panic!("case {case}: {e} on {}", cfg.to_json().compact()));
+        assert_eq!(back.batch_size, cfg.batch_size, "case {case}");
+        assert_eq!(back.deadline_s, cfg.deadline_s, "case {case}");
+        assert_eq!(back.cache_capacity, cfg.cache_capacity, "case {case}");
+        assert_eq!(back.shed_queue_depth, cfg.shed_queue_depth, "case {case}");
+        assert_eq!(back.max_batch_wait_s, cfg.max_batch_wait_s, "case {case}");
+        assert_eq!(back.refresh.every, cfg.refresh.every, "case {case}");
+        match (cfg.budget, back.budget) {
+            (RefineBudget::Fraction(a), RefineBudget::Fraction(b)) => {
+                assert_eq!(a, b, "case {case}")
+            }
+            (RefineBudget::Buckets(a), RefineBudget::Buckets(b)) => {
+                assert_eq!(a, b, "case {case}")
+            }
+            (a, b) => assert_eq!(
+                std::mem::discriminant(&a),
+                std::mem::discriminant(&b),
+                "case {case}: {a:?} vs {b:?}"
+            ),
+        }
+    }
+}

@@ -359,13 +359,23 @@ fn workbench_cf_and_kmeans_refresh_replays_swap() {
         refresh: RefreshPolicy { every: 12 },
         ..ServeConfig::default()
     };
-    let cf = wb.serve_cf_refresh(48, 10.0, &cfg, 0.25).unwrap();
+    let (cf_session, cf_deltas) = wb.cf_refresh_session(10.0, &cfg, 0.25).unwrap();
+    let cf_queries = accurateml::serve::query_log::cf_query_log(&wb.cf_split, 48, wb.config.seed);
+    let cf = cf_session
+        .replay_with_refresh(&wb.engine, cf_queries, cf_deltas)
+        .unwrap()
+        .1;
     assert_eq!(cf.queries, 48);
     assert!(cf.refresh_swap_count >= 1, "cf: no swap landed");
     assert!(cf.refined_accuracy.is_some());
     assert!(!cf.per_class.is_empty(), "cf activity bands");
 
-    let km = wb.serve_kmeans_refresh(48, 20.0, &cfg, 0.25).unwrap();
+    let (km_session, points, km_deltas) = wb.kmeans_refresh_session(20.0, &cfg, 0.25).unwrap();
+    let km_queries = accurateml::serve::query_log::kmeans_query_log(&points, 48, wb.config.seed);
+    let km = km_session
+        .replay_with_refresh(&wb.engine, km_queries, km_deltas)
+        .unwrap()
+        .1;
     assert_eq!(km.queries, 48);
     assert!(km.refresh_swap_count >= 1, "kmeans: no swap landed");
     assert!(!km.per_class.is_empty(), "kmeans cluster classes");
