@@ -1,15 +1,29 @@
-//! Hot-path micro-benchmarks: the three scoring contractions through
-//! the native backend and (when artifacts exist) the PJRT backend.
+//! Kernel roofline bench: the three scoring contractions per shape
+//! class, scalar reference vs the dispatched SIMD kernels.
 //!
-//! This is the §Perf instrument — run before/after each optimization
-//! and record deltas in EXPERIMENTS.md. Shapes mirror what one map task
-//! actually scores at the default scale.
+//! This is the §Perf instrument for rust/src/runtime/kernels.rs — run
+//! before/after kernel work and record deltas in EXPERIMENTS.md. Each
+//! shape class mirrors a real block the serving/batch paths score:
+//!
+//! * `stage1_dists`  — query batch × aggregated centroids (stage 1)
+//! * `stage2_rescan` — member queries × gathered bucket originals
+//!   (stage-2 `refine_block` rescans)
+//! * `knn_topk`      — full partition scan with top-k selection
+//! * `cf_weights`    — active users × partition users Pearson block
+//!
+//! Every class reports p50 for the scalar path (`ScalarBackend`) and
+//! the dispatched path (`NativeBackend`, AVX2/NEON when the CPU has
+//! it), the speedup, and the roofline coordinates: GB/s of unique
+//! operand+result traffic and Melem/s of output elements. Results land
+//! in the CSV report dir *and* in `BENCH_hotpath.json` (keys: `gbps`,
+//! `melems_per_s`, `simd_speedup`, `kernel_dispatch` — CI asserts
+//! them). Under `AML_KERNEL=scalar` both legs run the scalar path and
+//! `kernel_dispatch` documents why the speedup is ~1.
 //!
 //!     cargo bench --bench hotpath
 //!
 //! The `bench-smoke` cargo feature shrinks every shape and time budget
-//! so CI can *execute* this bench in seconds as a smoke test (compile +
-//! run) without paying for a figure-scale sweep:
+//! so CI can *execute* this bench in seconds:
 //!
 //!     cargo bench --bench hotpath --features bench-smoke
 mod common;
@@ -19,8 +33,10 @@ use std::time::Duration;
 
 use accurateml::data::matrix::Matrix;
 use accurateml::lsh::Bucketizer;
-use accurateml::runtime::backend::{NativeBackend, PjrtBackend, ScoreBackend};
+use accurateml::runtime::backend::{NativeBackend, PjrtBackend, ScalarBackend, ScoreBackend};
+use accurateml::runtime::kernels;
 use accurateml::runtime::service::PjrtService;
+use accurateml::util::json::Json;
 use accurateml::util::rng::Rng;
 use accurateml::util::table::{f, Table};
 use accurateml::util::timer::{bench_fn, fmt_duration};
@@ -40,99 +56,172 @@ fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
     m
 }
 
-fn bench_backend(name: &str, be: &dyn ScoreBackend, t: &mut Table) {
+fn masked_pair(rng: &mut Rng, rows: usize, m: usize) -> (Matrix, Matrix) {
+    let mut c = Matrix::zeros(rows, m);
+    let mut mask = Matrix::zeros(rows, m);
+    for r in 0..rows {
+        for i in 0..m {
+            if rng.chance(0.02) {
+                mask.set(r, i, 1.0);
+                c.set(r, i, rng.normal() as f32);
+            }
+        }
+    }
+    (c, mask)
+}
+
+/// One roofline shape class: a backend-polymorphic kernel call plus
+/// its traffic/work accounting.
+struct Class {
+    name: &'static str,
+    shape: String,
+    /// Unique operand + result bytes per call (roofline numerator).
+    bytes: f64,
+    /// Output elements per call.
+    elems: f64,
+    /// Arithmetic ops per call (3 per dim for distances, 6 per item
+    /// for the Pearson triple accumulation).
+    flops: f64,
+    /// Runs on the PJRT leg too (shape has an AOT artifact family)?
+    pjrt: bool,
+    run: Box<dyn Fn(&dyn ScoreBackend)>,
+}
+
+fn classes() -> Vec<Class> {
     let mut rng = Rng::new(42);
-    // One map task's exact kNN block at default scale: 640 test x 4000
-    // partition rows x 64 dims (smoke: 32 x 200 x 16).
+    let mut v = Vec::new();
+
+    // Stage 1: query batch x aggregated centroids.
+    let (nq, nc, d) = if SMOKE { (32, 40, 16) } else { (640, 400, 64) };
+    let q = rand_matrix(&mut rng, nq, d);
+    let c = rand_matrix(&mut rng, nc, d);
+    v.push(Class {
+        name: "stage1_dists",
+        shape: format!("{nq}x{nc} d{d}"),
+        bytes: (((nq + nc) * d + nq * nc) * 4) as f64,
+        elems: (nq * nc) as f64,
+        flops: (nq * nc * d * 3) as f64,
+        pjrt: true,
+        run: Box::new(move |be| {
+            be.knn_dists(&q, &c).unwrap();
+        }),
+    });
+
+    // Stage 2: member queries x one gathered bucket-group block.
+    let (nq, nb, d) = if SMOKE { (16, 64, 16) } else { (256, 640, 64) };
+    let q = rand_matrix(&mut rng, nq, d);
+    let b = rand_matrix(&mut rng, nb, d);
+    v.push(Class {
+        name: "stage2_rescan",
+        shape: format!("{nq}x{nb} d{d}"),
+        bytes: (((nq + nb) * d + nq * nb) * 4) as f64,
+        elems: (nq * nb) as f64,
+        flops: (nq * nb * d * 3) as f64,
+        pjrt: false, // no small-shape artifact family yet (ROADMAP)
+        run: Box::new(move |be| {
+            be.knn_dists(&q, &b).unwrap();
+        }),
+    });
+
+    // Full partition scan with top-k selection, k = 5.
     let (nq, nx, d) = if SMOKE { (32, 200, 16) } else { (640, 4000, 64) };
     let q = rand_matrix(&mut rng, nq, d);
     let x = rand_matrix(&mut rng, nx, d);
-    let s = bench_fn(
-        || {
+    v.push(Class {
+        name: "knn_topk",
+        shape: format!("{nq}x{nx} d{d} k5"),
+        // Top-k consumes distance rows in place of a Q x N result.
+        bytes: (((nq + nx) * d + nq * 5 * 2) * 4) as f64,
+        elems: (nq * nx) as f64,
+        flops: (nq * nx * d * 3) as f64,
+        pjrt: true,
+        run: Box::new(move |be| {
             be.knn_block_topk(&q, &x, 5).unwrap();
-        },
-        1,
-        if SMOKE { 2 } else { 5 },
-        budget(),
-    );
-    let flops = (nq * nx * d * 3) as f64; // sub+mul+add per dim
-    t.row(vec![
-        name.into(),
-        format!("knn_topk {nq}x{nx} d{d}"),
-        fmt_duration(s.p50),
-        f(flops / s.p50 / 1e9, 2),
-    ]);
+        }),
+    });
 
-    // Stage-1 distances: test points x aggregated centroids.
-    let nc = if SMOKE { 40 } else { 400 };
-    let c = rand_matrix(&mut rng, nc, d);
-    let s = bench_fn(
-        || {
-            be.knn_dists(&q, &c).unwrap();
-        },
-        1,
-        if SMOKE { 2 } else { 5 },
-        budget(),
-    );
-    let flops = (nq * nc * d * 3) as f64;
-    t.row(vec![
-        name.into(),
-        format!("knn_dists {nq}x{nc} d{d}"),
-        fmt_duration(s.p50),
-        f(flops / s.p50 / 1e9, 2),
-    ]);
-
-    // CF weights: active users x partition users x items.
+    // CF weights: active users x partition users over the item dim.
     let (na, nu, m) = if SMOKE { (8, 60, 128) } else { (50, 1200, 2048) };
-    let mk = |rng: &mut Rng, rows: usize, m: usize| {
-        let mut c = Matrix::zeros(rows, m);
-        let mut mask = Matrix::zeros(rows, m);
-        for r in 0..rows {
-            for i in 0..m {
-                if rng.chance(0.02) {
-                    mask.set(r, i, 1.0);
-                    c.set(r, i, rng.normal() as f32);
-                }
-            }
-        }
-        (c, mask)
-    };
-    let (ca, ma) = mk(&mut rng, na, m);
-    let (cu, mu) = mk(&mut rng, nu, m);
-    let s = bench_fn(
-        || {
+    let (ca, ma) = masked_pair(&mut rng, na, m);
+    let (cu, mu) = masked_pair(&mut rng, nu, m);
+    v.push(Class {
+        name: "cf_weights",
+        shape: format!("{na}x{nu} m{m}"),
+        bytes: ((2 * (na + nu) * m + na * nu) * 4) as f64,
+        elems: (na * nu) as f64,
+        flops: (na * nu * m * 6) as f64,
+        pjrt: true,
+        run: Box::new(move |be| {
             be.cf_weights(&ca, &ma, &cu, &mu).unwrap();
-        },
-        1,
-        if SMOKE { 2 } else { 3 },
-        budget(),
-    );
-    let flops = (na * nu * m * 3 * 2) as f64;
-    t.row(vec![
-        name.into(),
-        format!("cf_weights {na}x{nu} m{m}"),
-        fmt_duration(s.p50),
-        f(flops / s.p50 / 1e9, 2),
-    ]);
+        }),
+    });
+
+    v
+}
+
+fn p50(class: &Class, be: &dyn ScoreBackend) -> f64 {
+    bench_fn(|| (class.run)(be), 1, if SMOKE { 2 } else { 5 }, budget()).p50
 }
 
 fn main() {
+    let dispatch = kernels::label(kernels::dispatch());
     let mut t = Table::new(
-        "hot-path scoring kernels (p50)",
-        &["backend", "kernel", "p50", "GFLOP/s"],
+        &format!("kernel roofline (simd dispatch: {dispatch})"),
+        &["class", "shape", "scalar p50", "simd p50", "speedup", "GB/s", "Melem/s"],
     );
-    bench_backend("native", &NativeBackend, &mut t);
 
+    let classes = classes();
+    let mut rows = Vec::new();
+    for class in &classes {
+        let scalar_p50 = p50(class, &ScalarBackend);
+        let simd_p50 = p50(class, &NativeBackend);
+        let speedup = scalar_p50 / simd_p50;
+        let gbps = class.bytes / simd_p50 / 1e9;
+        let melems = class.elems / simd_p50 / 1e6;
+        t.row(vec![
+            class.name.into(),
+            class.shape.clone(),
+            fmt_duration(scalar_p50),
+            fmt_duration(simd_p50),
+            f(speedup, 2),
+            f(gbps, 2),
+            f(melems, 1),
+        ]);
+        rows.push(Json::obj(vec![
+            ("class", class.name.into()),
+            ("shape", class.shape.as_str().into()),
+            ("scalar_p50_s", scalar_p50.into()),
+            ("p50_s", simd_p50.into()),
+            ("simd_speedup", speedup.into()),
+            ("gbps", gbps.into()),
+            ("melems_per_s", melems.into()),
+            ("gflops", (class.flops / simd_p50 / 1e9).into()),
+        ]));
+    }
+
+    // PJRT legs (when AOT artifacts exist) keep the cross-backend view.
     let dir = std::path::PathBuf::from("artifacts");
     if dir.join("manifest.json").exists() {
         let svc = Arc::new(PjrtService::start(&dir).expect("pjrt service"));
         svc.warmup_all().expect("warmup");
-        bench_backend("pjrt", &PjrtBackend::new(svc), &mut t);
+        let pjrt = PjrtBackend::new(svc);
+        for class in classes.iter().filter(|c| c.pjrt) {
+            let p = p50(class, &pjrt);
+            t.row(vec![
+                format!("pjrt:{}", class.name),
+                class.shape.clone(),
+                "-".into(),
+                fmt_duration(p),
+                "-".into(),
+                f(class.bytes / p / 1e9, 2),
+                f(class.elems / p / 1e6, 1),
+            ]);
+        }
     } else {
         eprintln!("(artifacts missing — PJRT rows skipped; run `make artifacts`)");
     }
 
-    // LSH bucketizer (the map-task part-1 cost).
+    // LSH bucketizer (the map-task part-1 cost), table-only.
     let mut rng = Rng::new(7);
     let (np, d) = if SMOKE { (400, 16) } else { (4000, 64) };
     let pts = rand_matrix(&mut rng, np, d);
@@ -145,11 +234,26 @@ fn main() {
         budget(),
     );
     t.row(vec![
-        "native".into(),
-        format!("lsh_bucketize {np} d{d} r=10"),
+        "lsh_bucketize".into(),
+        format!("{np} d{d} r=10"),
+        "-".into(),
         fmt_duration(s.p50),
+        "-".into(),
+        "-".into(),
         "-".into(),
     ]);
 
     common::emit("hotpath", &t);
+
+    let doc = Json::obj(vec![
+        ("bench", "hotpath_roofline".into()),
+        ("smoke", SMOKE.into()),
+        // "scalar" here means the CPU lacks AVX2+FMA/NEON or
+        // AML_KERNEL=scalar forced the fallback — the documented
+        // reason when per-class simd_speedup reads ~1.0.
+        ("kernel_dispatch", dispatch.into()),
+        ("classes", Json::Arr(rows)),
+    ]);
+    std::fs::write("BENCH_hotpath.json", doc.pretty() + "\n").expect("write BENCH_hotpath.json");
+    println!("-> BENCH_hotpath.json");
 }

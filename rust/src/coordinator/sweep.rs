@@ -19,7 +19,9 @@ use crate::mapreduce::engine::Engine;
 use crate::mapreduce::metrics::{JobMetrics, TaskMetrics};
 use crate::model::{CfModel, KmeansModel, KnnModel};
 use crate::refresh::LabeledPoint;
-use crate::runtime::backend::{FallbackBackend, NativeBackend, PjrtBackend, ScoreBackend};
+use crate::runtime::backend::{
+    FallbackBackend, NativeBackend, PjrtBackend, ScalarBackend, ScoreBackend,
+};
 use crate::runtime::service::PjrtService;
 use crate::serve::{query_log, ServeConfig, ServeReport, Session};
 
@@ -134,6 +136,8 @@ impl Workbench {
         let (backend, service): (Arc<dyn ScoreBackend>, Option<Arc<PjrtService>>) =
             match config.backend.as_str() {
                 "native" => (Arc::new(NativeBackend), None),
+                // Forced scalar kernels (the SIMD paths' reference).
+                "native-scalar" => (Arc::new(ScalarBackend), None),
                 "pjrt" => {
                     let svc = Arc::new(PjrtService::start(&config.artifact_dir)?);
                     (Arc::new(PjrtBackend::new(svc.clone())), Some(svc))
@@ -144,7 +148,7 @@ impl Workbench {
                 }
                 other => {
                     return Err(crate::Error::Config(format!(
-                        "unknown backend {other:?} (native|pjrt|auto)"
+                        "unknown backend {other:?} (native|native-scalar|pjrt|auto)"
                     )))
                 }
             };

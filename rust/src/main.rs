@@ -108,7 +108,7 @@ fn workbench(args: &accurateml::util::cli::Args) -> accurateml::Result<Workbench
 
 fn common_opts(c: Command) -> Command {
     c.opt("scale", "small", "dataset scale: small|default|paper")
-        .opt("backend", "native", "scoring backend: native|pjrt|auto")
+        .opt("backend", "native", "scoring backend: native|native-scalar|pjrt|auto")
         .opt("artifacts", "artifacts", "artifact directory")
         .opt("data-dir", "", "dataset cache directory (empty = regenerate)")
         .opt("seed", "44257", "base RNG seed")

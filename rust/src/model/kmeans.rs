@@ -493,7 +493,7 @@ mod tests {
             Grouping::Lsh,
             RefineOrder::Correlation,
             3,
-            Arc::new(crate::runtime::backend::NativeBackend),
+            Arc::new(crate::runtime::backend::ScalarBackend),
             &mut TaskMetrics::default(),
         )
         .unwrap();

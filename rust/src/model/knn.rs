@@ -497,7 +497,7 @@ mod tests {
     use super::*;
     use crate::data::gaussian::GaussianMixtureSpec;
     use crate::data::points::split_rows;
-    use crate::runtime::backend::NativeBackend;
+    use crate::runtime::backend::ScalarBackend;
 
     fn shard() -> (KnnModel, crate::data::gaussian::LabeledPoints) {
         let data = GaussianMixtureSpec {
@@ -521,7 +521,7 @@ mod tests {
             Grouping::Lsh,
             RefineOrder::Correlation,
             7,
-            Arc::new(NativeBackend),
+            Arc::new(ScalarBackend),
             &mut TaskMetrics::default(),
         )
         .unwrap();

@@ -10,9 +10,12 @@
 //!    deltas into a *pinned* copy of the current shard via the model's
 //!    incremental-merge constructor
 //!    ([`Refreshable::merge_deltas`]) — base-aggregates ⊕ delta, not a
-//!    full rescan — and streams the candidate back on a private
-//!    channel. Serving tasks submitted later run first (the pool pops
-//!    LIFO), so a long rebuild delays the queue tail, never the head.
+//!    full rescan — and streams the candidate back on the pool's
+//!    **low-priority lane** ([`WorkerPool::stream_into_low`]): serving
+//!    tasks always pop first, and at most `WorkerPool::low_cap`
+//!    workers run rebuilds at once, so rebuild interference with the
+//!    serve path is bounded (reserved workers), not just measured via
+//!    p99-during-rebuild.
 //! 2. [`Rebuilder::try_collect`] (called from the serving thread
 //!    between query admissions) picks up finished candidates without
 //!    blocking, validates them ([`Refreshable::validate`]: non-empty
@@ -141,7 +144,7 @@ impl<M: Refreshable> Rebuilder<M> {
             self.in_flight += 1;
             self.stats.rebuilds_started += 1;
             started += 1;
-            pool.stream_into(&self.tx, s, move || {
+            pool.stream_into_low(&self.tx, s, move || {
                 let candidate = base.merge_deltas(&deltas);
                 (deltas, candidate)
             });

@@ -1,18 +1,22 @@
 //! Scoring backends: the compute interface map tasks go through.
 //!
 //! [`ScoreBackend`] abstracts the three hot contractions of the two
-//! applications. [`NativeBackend`] is the portable scalar/SIMD-unrolled
-//! Rust implementation; [`PjrtBackend`] routes blocks through the AOT
-//! Pallas/JAX artifacts (padding to artifact shapes, chunking oversize
-//! blocks, remapping indices); [`FallbackBackend`] prefers PJRT and
-//! degrades to native per call when no artifact fits (e.g. an unusual
-//! feature dimension not in the compiled shape families).
+//! applications. [`NativeBackend`] routes through the cache-blocked,
+//! runtime-SIMD-dispatched kernels in [`crate::runtime::kernels`];
+//! [`ScalarBackend`] forces their portable scalar reference path (the
+//! bit-identity anchor for the host-side refine loops); [`PjrtBackend`]
+//! routes blocks through the AOT Pallas/JAX artifacts (padding to
+//! artifact shapes, chunking oversize blocks, remapping indices);
+//! [`FallbackBackend`] prefers PJRT and degrades to native per call
+//! when no artifact fits (e.g. an unusual feature dimension not in the
+//! compiled shape families).
 
 use std::collections::BinaryHeap;
 use std::sync::Arc;
 
-use crate::data::matrix::{sq_dist, Matrix};
+use crate::data::matrix::Matrix;
 use crate::error::{Error, Result};
+use crate::runtime::kernels;
 use crate::runtime::service::{PjrtService, Tensor};
 
 /// One kNN candidate: (squared distance, local row id).
@@ -58,9 +62,23 @@ pub trait ScoreBackend: Send + Sync {
 // ---------------------------------------------------------------------------
 
 /// Portable Rust implementation (also the numerical reference for the
-/// PJRT path in integration tests).
+/// PJRT path in integration tests). Scoring goes through the
+/// cache-blocked kernels in [`crate::runtime::kernels`], with the SIMD
+/// or scalar path picked once per process by [`kernels::dispatch`]
+/// (override with `AML_KERNEL=scalar|simd`).
 #[derive(Default)]
 pub struct NativeBackend;
+
+/// Forced-scalar twin of [`NativeBackend`]: always the portable
+/// reference kernels, bit-identical per pair to the host-side
+/// `sq_dist` / [`pearson_pair`] refine loops regardless of what
+/// [`kernels::dispatch`] selects. The bit-identity pins (batched
+/// refine vs scalar refine) and the roofline bench's baseline leg run
+/// against this backend; everything else uses [`NativeBackend`] and
+/// relies on the ≤1e-4 equivalence contract in
+/// `tests/kernel_equivalence.rs`.
+#[derive(Default)]
+pub struct ScalarBackend;
 
 /// Max-heap entry so the heap evicts the *largest* distance.
 #[derive(PartialEq)]
@@ -211,53 +229,56 @@ impl ScoreBackend for NativeBackend {
         out: &mut Vec<Vec<Candidate>>,
     ) -> Result<()> {
         check_dims(q, x)?;
-        out.resize_with(q.rows(), Vec::new);
-        // One heap for the whole block: drained (not consumed) per
-        // query, so the selection pass allocates nothing per row beyond
-        // the output lists themselves — which `out` also reuses.
-        let mut topk = TopK::new(k);
-        for qi in 0..q.rows() {
-            let qr = q.row(qi);
-            for xi in 0..x.rows() {
-                let d = sq_dist(x.row(xi), qr);
-                topk.push(d, xi as u32);
-            }
-            topk.drain_sorted_into(&mut out[qi]);
-        }
+        kernels::knn_topk_into(kernels::dispatch(), q, x, k, out);
         Ok(())
     }
 
     fn knn_dists(&self, q: &Matrix, x: &Matrix) -> Result<Matrix> {
         check_dims(q, x)?;
-        let mut out = Matrix::zeros(q.rows(), x.rows());
-        for qi in 0..q.rows() {
-            let qr = q.row(qi);
-            let row = out.row_mut(qi);
-            for xi in 0..x.rows() {
-                row[xi] = sq_dist(x.row(xi), qr);
-            }
-        }
-        Ok(out)
+        Ok(kernels::sq_dists(kernels::dispatch(), q, x))
     }
 
     fn cf_weights(&self, ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Result<Matrix> {
         check_cf_dims(ca, ma, cu, mu)?;
-        let a = ca.rows();
-        let n = cu.rows();
-        let mut w = Matrix::zeros(a, n);
-        for i in 0..a {
-            let ca_row = ca.row(i);
-            let ma_row = ma.row(i);
-            let row = w.row_mut(i);
-            for j in 0..n {
-                row[j] = pearson_pair(ca_row, ma_row, cu.row(j), mu.row(j));
-            }
-        }
-        Ok(w)
+        Ok(kernels::cf_weights(kernels::dispatch(), ca, ma, cu, mu))
     }
 
     fn name(&self) -> &'static str {
         "native"
+    }
+}
+
+impl ScoreBackend for ScalarBackend {
+    fn knn_block_topk(&self, q: &Matrix, x: &Matrix, k: usize) -> Result<Vec<Vec<Candidate>>> {
+        let mut out = Vec::with_capacity(q.rows());
+        self.knn_block_topk_into(q, x, k, &mut out)?;
+        Ok(out)
+    }
+
+    fn knn_block_topk_into(
+        &self,
+        q: &Matrix,
+        x: &Matrix,
+        k: usize,
+        out: &mut Vec<Vec<Candidate>>,
+    ) -> Result<()> {
+        check_dims(q, x)?;
+        kernels::knn_topk_into(kernels::KernelMode::Scalar, q, x, k, out);
+        Ok(())
+    }
+
+    fn knn_dists(&self, q: &Matrix, x: &Matrix) -> Result<Matrix> {
+        check_dims(q, x)?;
+        Ok(kernels::sq_dists(kernels::KernelMode::Scalar, q, x))
+    }
+
+    fn cf_weights(&self, ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Result<Matrix> {
+        check_cf_dims(ca, ma, cu, mu)?;
+        Ok(kernels::cf_weights(kernels::KernelMode::Scalar, ca, ma, cu, mu))
+    }
+
+    fn name(&self) -> &'static str {
+        "native-scalar"
     }
 }
 
@@ -563,6 +584,7 @@ impl ScoreBackend for FallbackBackend {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::matrix::sq_dist;
     use crate::util::rng::Rng;
 
     fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
@@ -638,13 +660,44 @@ mod tests {
 
     #[test]
     fn native_dists_match_sqdist() {
+        // ≤1e-4: the SIMD path's equivalence contract vs the scalar
+        // reference (see rust/src/runtime/kernels.rs module docs).
         let q = rand_matrix(3, 6, 3);
         let x = rand_matrix(8, 6, 4);
         let d = NativeBackend.knn_dists(&q, &x).unwrap();
         for qi in 0..3 {
             for xi in 0..8 {
                 let expect = sq_dist(q.row(qi), x.row(xi));
-                assert!((d.get(qi, xi) - expect).abs() < 1e-5);
+                assert!((d.get(qi, xi) - expect).abs() <= 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn scalar_backend_is_bit_identical_to_host_loops() {
+        // The bit-identity anchor: ScalarBackend must reproduce the
+        // per-pair host loops exactly, whatever `dispatch()` picked.
+        let q = rand_matrix(4, 11, 21);
+        let x = rand_matrix(9, 11, 22);
+        let d = ScalarBackend.knn_dists(&q, &x).unwrap();
+        for qi in 0..4 {
+            for xi in 0..9 {
+                assert_eq!(d.get(qi, xi), sq_dist(x.row(xi), q.row(qi)));
+            }
+        }
+        assert_eq!(ScalarBackend.name(), "native-scalar");
+    }
+
+    #[test]
+    fn native_backend_matches_scalar_backend_within_contract() {
+        let q = rand_matrix(6, 18, 23);
+        let x = rand_matrix(31, 18, 24);
+        let simd = NativeBackend.knn_dists(&q, &x).unwrap();
+        let scalar = ScalarBackend.knn_dists(&q, &x).unwrap();
+        for qi in 0..6 {
+            for xi in 0..31 {
+                let (a, b) = (simd.get(qi, xi), scalar.get(qi, xi));
+                assert!((a - b).abs() <= 1e-4, "({qi},{xi}): {a} vs {b}");
             }
         }
     }

@@ -1,0 +1,787 @@
+//! Cache-blocked, runtime-dispatched SIMD scoring kernels.
+//!
+//! The three hot contractions every stage-1/stage-2 path funnels into
+//! ([`crate::runtime::backend::NativeBackend`]) live here in two
+//! implementations selected **once per process**:
+//!
+//! * **scalar** — the portable reference: exactly the per-pair
+//!   [`sq_dist`] / [`pearson_pair`] loops the backend ran before this
+//!   module existed. Bit-identical to the host-side scalar refine
+//!   paths, which is what the bit-identity pins in
+//!   `tests/batched_serving.rs` compare against (via `ScalarBackend`).
+//! * **simd** — `std::arch` microkernels (AVX2+FMA on x86_64, NEON on
+//!   aarch64; zero external deps). Squared distances use the GEMM-style
+//!   `||q||² + ||x||² − 2·q·x` form with 4-query register blocking and
+//!   L1-sized tiles of `x` rows; CF Pearson weights block the fused
+//!   triple-accumulation over the item dimension with 8-wide lanes.
+//!   Norms and top-k heaps come from a per-worker scratch arena
+//!   (thread-local, the same recycle idea as `GatherBuf`), so steady
+//!   state allocates nothing per call.
+//!
+//! Dispatch policy: [`dispatch`] probes CPU features on first use and
+//! caches the decision. `AML_KERNEL=scalar` forces the scalar path;
+//! `AML_KERNEL=simd` (or unset) auto-detects and silently falls back
+//! to scalar when the CPU lacks AVX2+FMA/NEON.
+//!
+//! ### Equivalence contract
+//!
+//! Re-associated f32 arithmetic is not bit-identical to the scalar
+//! loops, so the SIMD path promises (pinned by
+//! `tests/kernel_equivalence.rs`):
+//!
+//! 1. **max-abs-diff ≤ 1e-4** vs the scalar reference on unit-scale
+//!    data, across adversarial shapes (empty, one row, dims off the
+//!    lane width, near-duplicate rows);
+//! 2. **selection invariance**: top-k membership and `argmin` agree
+//!    with the scalar reference up to epsilon-ties;
+//! 3. **path independence**: the value produced for a pair `(q, x)`
+//!    depends only on the two rows and `d` — never on the block shape,
+//!    tile position, register-block remainder, or entry point. The
+//!    `knn_dists` and `knn_block_topk` paths share one dot-product
+//!    microkernel, and a 4-row register block computes the exact same
+//!    fma chain per pair as the single-row remainder. This is what
+//!    keeps the backend-vs-backend pins (batch1 == batchN, serving ==
+//!    batch job, barrier == streamed) exact under SIMD.
+
+use std::cell::RefCell;
+use std::sync::OnceLock;
+
+use crate::data::matrix::{sq_dist, Matrix};
+use crate::runtime::backend::{pearson_pair, Candidate, TopK};
+
+/// Which kernel implementation a call routes to.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum KernelMode {
+    /// Portable reference loops (bit-identical to `sq_dist` /
+    /// `pearson_pair` per pair).
+    Scalar,
+    /// AVX2+FMA microkernels (x86_64 only, runtime-detected).
+    #[cfg(target_arch = "x86_64")]
+    Avx2,
+    /// NEON microkernels (aarch64 baseline).
+    #[cfg(target_arch = "aarch64")]
+    Neon,
+}
+
+/// Report label for a mode (lands in bench artifacts and logs).
+pub fn label(mode: KernelMode) -> &'static str {
+    match mode {
+        KernelMode::Scalar => "scalar",
+        #[cfg(target_arch = "x86_64")]
+        KernelMode::Avx2 => "avx2+fma",
+        #[cfg(target_arch = "aarch64")]
+        KernelMode::Neon => "neon",
+    }
+}
+
+/// The process-wide mode: resolved once from `AML_KERNEL` + CPU
+/// feature detection, then cached (the serve hot path must not re-read
+/// the environment per block).
+pub fn dispatch() -> KernelMode {
+    static MODE: OnceLock<KernelMode> = OnceLock::new();
+    *MODE.get_or_init(|| select(std::env::var("AML_KERNEL").ok().as_deref()))
+}
+
+/// Resolve a requested mode (`AML_KERNEL` value) to an executable one:
+/// `scalar` forces the reference path; `simd`, unset, or anything else
+/// auto-detects with scalar fallback.
+pub fn select(request: Option<&str>) -> KernelMode {
+    match request {
+        Some("scalar") => KernelMode::Scalar,
+        _ => detect_simd().unwrap_or(KernelMode::Scalar),
+    }
+}
+
+/// Best SIMD mode this CPU supports, if any.
+fn detect_simd() -> Option<KernelMode> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") && std::arch::is_x86_feature_detected!("fma")
+        {
+            Some(KernelMode::Avx2)
+        } else {
+            None
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Some(KernelMode::Neon)
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        None
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Per-worker scratch arena
+// ---------------------------------------------------------------------------
+
+/// Thread-local scratch reused across kernel calls: precomputed row
+/// norms for the GEMM-form distances and the per-block top-k heaps.
+/// Same ownership discipline as `GatherBuf` (take, use, implicitly
+/// recycle), but thread-local because kernels run inside pool workers
+/// that each need their own scratch without locking.
+struct Arena {
+    qn: Vec<f32>,
+    xn: Vec<f32>,
+    heaps: Vec<TopK>,
+    heap_k: usize,
+}
+
+thread_local! {
+    static ARENA: RefCell<Arena> = RefCell::new(Arena {
+        qn: Vec::new(),
+        xn: Vec::new(),
+        heaps: Vec::new(),
+        heap_k: usize::MAX,
+    });
+}
+
+impl Arena {
+    /// Heaps for one register block of queries, all sized `k` and empty
+    /// (every drain leaves them empty, so only a `k` change rebuilds).
+    fn heaps_for(&mut self, k: usize) -> &mut Vec<TopK> {
+        if self.heap_k != k {
+            self.heaps.clear();
+            self.heap_k = k;
+        }
+        while self.heaps.len() < QB {
+            self.heaps.push(TopK::new(k));
+        }
+        &mut self.heaps
+    }
+}
+
+/// Query rows per register block (one SIMD accumulator each; the
+/// shared `x` row is loaded once per block instead of once per query).
+const QB: usize = 4;
+
+/// CF aggregate rows per tile: the tile's `(ca, ma)` rows stay cache
+/// resident while each `(cu, mu)` user row streams past once per tile.
+const A_TILE: usize = 16;
+
+/// Rows of `x` per distance tile, sized so one tile of f32 rows fits
+/// in half an L1d (~32 KiB) alongside the query block.
+fn x_tile_rows(d: usize) -> usize {
+    (32 * 1024 / (4 * d.max(1))).clamp(8, 512)
+}
+
+/// Assemble one squared distance from the GEMM-form terms. Clamped at
+/// zero: cancellation can drive tiny negatives, and the scalar form is
+/// non-negative by construction. Identical rows give exactly 0 because
+/// the norms and the cross term come from the same dot microkernel.
+#[inline(always)]
+fn assemble(qn: f32, xn: f32, dot: f32) -> f32 {
+    (qn + xn - 2.0 * dot).max(0.0)
+}
+
+/// The final Pearson expression — shared verbatim with
+/// [`pearson_pair`] so both paths apply the same `1e-12` guard.
+#[inline(always)]
+fn finish_pearson(sn: f32, s1: f32, s2: f32) -> f32 {
+    sn / (s1 * s2 + 1e-12).sqrt()
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points (dims validated by the backend)
+// ---------------------------------------------------------------------------
+
+/// Full `q.rows × x.rows` squared-distance matrix.
+pub fn sq_dists(mode: KernelMode, q: &Matrix, x: &Matrix) -> Matrix {
+    match mode {
+        KernelMode::Scalar => scalar_sq_dists(q, x),
+        #[cfg(target_arch = "x86_64")]
+        KernelMode::Avx2 => ARENA.with(|a| unsafe { x86::sq_dists(q, x, &mut a.borrow_mut()) }),
+        #[cfg(target_arch = "aarch64")]
+        KernelMode::Neon => ARENA.with(|a| unsafe { neon::sq_dists(q, x, &mut a.borrow_mut()) }),
+    }
+}
+
+/// Per-query k-nearest candidates, written into `out` (resized to
+/// `q.rows()`, inner buffers reused). Distances stream from the same
+/// tiled microkernel as [`sq_dists`] straight into per-row heaps — the
+/// full Q×N matrix is never materialized.
+pub fn knn_topk_into(
+    mode: KernelMode,
+    q: &Matrix,
+    x: &Matrix,
+    k: usize,
+    out: &mut Vec<Vec<Candidate>>,
+) {
+    match mode {
+        KernelMode::Scalar => scalar_topk_into(q, x, k, out),
+        #[cfg(target_arch = "x86_64")]
+        KernelMode::Avx2 => {
+            ARENA.with(|a| unsafe { x86::topk_into(q, x, k, &mut a.borrow_mut(), out) })
+        }
+        #[cfg(target_arch = "aarch64")]
+        KernelMode::Neon => {
+            ARENA.with(|a| unsafe { neon::topk_into(q, x, k, &mut a.borrow_mut(), out) })
+        }
+    }
+}
+
+/// Masked Pearson weight matrix (`ca.rows × cu.rows`).
+pub fn cf_weights(mode: KernelMode, ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Matrix {
+    match mode {
+        KernelMode::Scalar => scalar_cf_weights(ca, ma, cu, mu),
+        #[cfg(target_arch = "x86_64")]
+        KernelMode::Avx2 => unsafe { x86::cf_weights(ca, ma, cu, mu) },
+        #[cfg(target_arch = "aarch64")]
+        KernelMode::Neon => unsafe { neon::cf_weights(ca, ma, cu, mu) },
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Scalar reference (the pre-kernel NativeBackend loops, verbatim)
+// ---------------------------------------------------------------------------
+
+fn scalar_sq_dists(q: &Matrix, x: &Matrix) -> Matrix {
+    let mut out = Matrix::zeros(q.rows(), x.rows());
+    for qi in 0..q.rows() {
+        let qr = q.row(qi);
+        let row = out.row_mut(qi);
+        for xi in 0..x.rows() {
+            row[xi] = sq_dist(x.row(xi), qr);
+        }
+    }
+    out
+}
+
+fn scalar_topk_into(q: &Matrix, x: &Matrix, k: usize, out: &mut Vec<Vec<Candidate>>) {
+    out.resize_with(q.rows(), Vec::new);
+    // One heap for the whole block: drained (not consumed) per query,
+    // so the selection pass allocates nothing per row beyond the
+    // output lists themselves — which `out` also reuses.
+    let mut topk = TopK::new(k);
+    for qi in 0..q.rows() {
+        let qr = q.row(qi);
+        for xi in 0..x.rows() {
+            let d = sq_dist(x.row(xi), qr);
+            topk.push(d, xi as u32);
+        }
+        topk.drain_sorted_into(&mut out[qi]);
+    }
+}
+
+fn scalar_cf_weights(ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Matrix {
+    let a = ca.rows();
+    let n = cu.rows();
+    let mut w = Matrix::zeros(a, n);
+    for i in 0..a {
+        let ca_row = ca.row(i);
+        let ma_row = ma.row(i);
+        let row = w.row_mut(i);
+        for j in 0..n {
+            row[j] = pearson_pair(ca_row, ma_row, cu.row(j), mu.row(j));
+        }
+    }
+    w
+}
+
+// ---------------------------------------------------------------------------
+// AVX2+FMA microkernels (x86_64)
+// ---------------------------------------------------------------------------
+//
+// The two arch modules mirror each other statement for statement; a
+// change to one driver must be made to both. Per-pair results must be
+// a pure function of the two rows (see the path-independence clause of
+// the module contract), so `dot4` runs the exact fma chain of `dot`
+// per lane and both share one horizontal sum and one scalar tail.
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use super::{assemble, finish_pearson, x_tile_rows, Arena, QB};
+    use crate::data::matrix::Matrix;
+    use crate::runtime::backend::Candidate;
+
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps(v, 1);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+        _mm_cvtss_f32(s)
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 8;
+        let mut acc = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let j = c * 8;
+            let av = _mm256_loadu_ps(a.as_ptr().add(j));
+            let bv = _mm256_loadu_ps(b.as_ptr().add(j));
+            acc = _mm256_fmadd_ps(av, bv, acc);
+        }
+        let mut s = hsum(acc);
+        for j in chunks * 8..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    /// Four dot products against one shared `x` row: per pair, the
+    /// exact fma chain + horizontal sum + tail of [`dot`].
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn dot4(q: [&[f32]; QB], x: &[f32], out: &mut [f32; QB]) {
+        let n = x.len();
+        let chunks = n / 8;
+        let mut acc = [_mm256_setzero_ps(); QB];
+        for c in 0..chunks {
+            let j = c * 8;
+            let xv = _mm256_loadu_ps(x.as_ptr().add(j));
+            for (l, a) in acc.iter_mut().enumerate() {
+                let qv = _mm256_loadu_ps(q[l].as_ptr().add(j));
+                *a = _mm256_fmadd_ps(qv, xv, *a);
+            }
+        }
+        for l in 0..QB {
+            let mut s = hsum(acc[l]);
+            for j in chunks * 8..n {
+                s += q[l][j] * x[j];
+            }
+            out[l] = s;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn row_norms(m: &Matrix, out: &mut Vec<f32>) {
+        out.clear();
+        for r in 0..m.rows() {
+            let row = m.row(r);
+            out.push(dot(row, row));
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sq_dists(q: &Matrix, x: &Matrix, ar: &mut Arena) -> Matrix {
+        row_norms(q, &mut ar.qn);
+        row_norms(x, &mut ar.xn);
+        let (nq, n) = (q.rows(), x.rows());
+        let mut out = Matrix::zeros(nq, n);
+        let xt = x_tile_rows(q.cols());
+        let mut x0 = 0;
+        while x0 < n {
+            let x1 = (x0 + xt).min(n);
+            let mut q0 = 0;
+            while q0 < nq {
+                let q1 = (q0 + QB).min(nq);
+                if q1 - q0 == QB {
+                    let qr = [q.row(q0), q.row(q0 + 1), q.row(q0 + 2), q.row(q0 + 3)];
+                    let mut dots = [0.0f32; QB];
+                    for xi in x0..x1 {
+                        dot4(qr, x.row(xi), &mut dots);
+                        for (l, &dv) in dots.iter().enumerate() {
+                            out.set(q0 + l, xi, assemble(ar.qn[q0 + l], ar.xn[xi], dv));
+                        }
+                    }
+                } else {
+                    for qi in q0..q1 {
+                        let qr = q.row(qi);
+                        for xi in x0..x1 {
+                            let dv = dot(qr, x.row(xi));
+                            out.set(qi, xi, assemble(ar.qn[qi], ar.xn[xi], dv));
+                        }
+                    }
+                }
+                q0 = q1;
+            }
+            x0 = x1;
+        }
+        out
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn topk_into(
+        q: &Matrix,
+        x: &Matrix,
+        k: usize,
+        ar: &mut Arena,
+        out: &mut Vec<Vec<Candidate>>,
+    ) {
+        row_norms(q, &mut ar.qn);
+        row_norms(x, &mut ar.xn);
+        let (nq, n) = (q.rows(), x.rows());
+        out.resize_with(nq, Vec::new);
+        ar.heaps_for(k);
+        let mut q0 = 0;
+        while q0 < nq {
+            let q1 = (q0 + QB).min(nq);
+            if q1 - q0 == QB {
+                let qr = [q.row(q0), q.row(q0 + 1), q.row(q0 + 2), q.row(q0 + 3)];
+                let mut dots = [0.0f32; QB];
+                for xi in 0..n {
+                    dot4(qr, x.row(xi), &mut dots);
+                    for (l, &dv) in dots.iter().enumerate() {
+                        let d = assemble(ar.qn[q0 + l], ar.xn[xi], dv);
+                        ar.heaps[l].push(d, xi as u32);
+                    }
+                }
+            } else {
+                for qi in q0..q1 {
+                    let qr = q.row(qi);
+                    for xi in 0..n {
+                        let dv = dot(qr, x.row(xi));
+                        let d = assemble(ar.qn[qi], ar.xn[xi], dv);
+                        ar.heaps[qi - q0].push(d, xi as u32);
+                    }
+                }
+            }
+            for qi in q0..q1 {
+                ar.heaps[qi - q0].drain_sorted_into(&mut out[qi]);
+            }
+            q0 = q1;
+        }
+    }
+
+    #[inline]
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn pearson_sums(ca: &[f32], ma: &[f32], cu: &[f32], mu: &[f32]) -> (f32, f32, f32) {
+        let m = ca.len();
+        let chunks = m / 8;
+        let mut vn = _mm256_setzero_ps();
+        let mut v1 = _mm256_setzero_ps();
+        let mut v2 = _mm256_setzero_ps();
+        for c in 0..chunks {
+            let j = c * 8;
+            let a = _mm256_loadu_ps(ca.as_ptr().add(j));
+            let am = _mm256_loadu_ps(ma.as_ptr().add(j));
+            let u = _mm256_loadu_ps(cu.as_ptr().add(j));
+            let um = _mm256_loadu_ps(mu.as_ptr().add(j));
+            vn = _mm256_fmadd_ps(a, u, vn);
+            v1 = _mm256_fmadd_ps(_mm256_mul_ps(a, a), um, v1);
+            v2 = _mm256_fmadd_ps(_mm256_mul_ps(am, u), u, v2);
+        }
+        let (mut sn, mut s1, mut s2) = (hsum(vn), hsum(v1), hsum(v2));
+        for j in chunks * 8..m {
+            let (a, am, u, um) = (ca[j], ma[j], cu[j], mu[j]);
+            sn += a * u;
+            s1 += a * a * um;
+            s2 += am * u * u;
+        }
+        (sn, s1, s2)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn cf_weights(ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Matrix {
+        let (na, n) = (ca.rows(), cu.rows());
+        let mut w = Matrix::zeros(na, n);
+        let mut a0 = 0;
+        while a0 < na {
+            let a1 = (a0 + super::A_TILE).min(na);
+            for j in 0..n {
+                let (cu_row, mu_row) = (cu.row(j), mu.row(j));
+                for ai in a0..a1 {
+                    let (sn, s1, s2) = pearson_sums(ca.row(ai), ma.row(ai), cu_row, mu_row);
+                    w.set(ai, j, finish_pearson(sn, s1, s2));
+                }
+            }
+            a0 = a1;
+        }
+        w
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NEON microkernels (aarch64) — structural mirror of `x86`, 4-wide
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use std::arch::aarch64::*;
+
+    use super::{assemble, finish_pearson, x_tile_rows, Arena, QB};
+    use crate::data::matrix::Matrix;
+    use crate::runtime::backend::Candidate;
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let chunks = n / 4;
+        let mut acc = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let j = c * 4;
+            acc = vfmaq_f32(acc, vld1q_f32(a.as_ptr().add(j)), vld1q_f32(b.as_ptr().add(j)));
+        }
+        let mut s = vaddvq_f32(acc);
+        for j in chunks * 4..n {
+            s += a[j] * b[j];
+        }
+        s
+    }
+
+    /// Four dot products against one shared `x` row: per pair, the
+    /// exact fma chain + horizontal sum + tail of [`dot`].
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn dot4(q: [&[f32]; QB], x: &[f32], out: &mut [f32; QB]) {
+        let n = x.len();
+        let chunks = n / 4;
+        let mut acc = [vdupq_n_f32(0.0); QB];
+        for c in 0..chunks {
+            let j = c * 4;
+            let xv = vld1q_f32(x.as_ptr().add(j));
+            for (l, a) in acc.iter_mut().enumerate() {
+                *a = vfmaq_f32(*a, vld1q_f32(q[l].as_ptr().add(j)), xv);
+            }
+        }
+        for l in 0..QB {
+            let mut s = vaddvq_f32(acc[l]);
+            for j in chunks * 4..n {
+                s += q[l][j] * x[j];
+            }
+            out[l] = s;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn row_norms(m: &Matrix, out: &mut Vec<f32>) {
+        out.clear();
+        for r in 0..m.rows() {
+            let row = m.row(r);
+            out.push(dot(row, row));
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sq_dists(q: &Matrix, x: &Matrix, ar: &mut Arena) -> Matrix {
+        row_norms(q, &mut ar.qn);
+        row_norms(x, &mut ar.xn);
+        let (nq, n) = (q.rows(), x.rows());
+        let mut out = Matrix::zeros(nq, n);
+        let xt = x_tile_rows(q.cols());
+        let mut x0 = 0;
+        while x0 < n {
+            let x1 = (x0 + xt).min(n);
+            let mut q0 = 0;
+            while q0 < nq {
+                let q1 = (q0 + QB).min(nq);
+                if q1 - q0 == QB {
+                    let qr = [q.row(q0), q.row(q0 + 1), q.row(q0 + 2), q.row(q0 + 3)];
+                    let mut dots = [0.0f32; QB];
+                    for xi in x0..x1 {
+                        dot4(qr, x.row(xi), &mut dots);
+                        for (l, &dv) in dots.iter().enumerate() {
+                            out.set(q0 + l, xi, assemble(ar.qn[q0 + l], ar.xn[xi], dv));
+                        }
+                    }
+                } else {
+                    for qi in q0..q1 {
+                        let qr = q.row(qi);
+                        for xi in x0..x1 {
+                            let dv = dot(qr, x.row(xi));
+                            out.set(qi, xi, assemble(ar.qn[qi], ar.xn[xi], dv));
+                        }
+                    }
+                }
+                q0 = q1;
+            }
+            x0 = x1;
+        }
+        out
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn topk_into(
+        q: &Matrix,
+        x: &Matrix,
+        k: usize,
+        ar: &mut Arena,
+        out: &mut Vec<Vec<Candidate>>,
+    ) {
+        row_norms(q, &mut ar.qn);
+        row_norms(x, &mut ar.xn);
+        let (nq, n) = (q.rows(), x.rows());
+        out.resize_with(nq, Vec::new);
+        ar.heaps_for(k);
+        let mut q0 = 0;
+        while q0 < nq {
+            let q1 = (q0 + QB).min(nq);
+            if q1 - q0 == QB {
+                let qr = [q.row(q0), q.row(q0 + 1), q.row(q0 + 2), q.row(q0 + 3)];
+                let mut dots = [0.0f32; QB];
+                for xi in 0..n {
+                    dot4(qr, x.row(xi), &mut dots);
+                    for (l, &dv) in dots.iter().enumerate() {
+                        let d = assemble(ar.qn[q0 + l], ar.xn[xi], dv);
+                        ar.heaps[l].push(d, xi as u32);
+                    }
+                }
+            } else {
+                for qi in q0..q1 {
+                    let qr = q.row(qi);
+                    for xi in 0..n {
+                        let dv = dot(qr, x.row(xi));
+                        let d = assemble(ar.qn[qi], ar.xn[xi], dv);
+                        ar.heaps[qi - q0].push(d, xi as u32);
+                    }
+                }
+            }
+            for qi in q0..q1 {
+                ar.heaps[qi - q0].drain_sorted_into(&mut out[qi]);
+            }
+            q0 = q1;
+        }
+    }
+
+    #[inline]
+    #[target_feature(enable = "neon")]
+    unsafe fn pearson_sums(ca: &[f32], ma: &[f32], cu: &[f32], mu: &[f32]) -> (f32, f32, f32) {
+        let m = ca.len();
+        let chunks = m / 4;
+        let mut vn = vdupq_n_f32(0.0);
+        let mut v1 = vdupq_n_f32(0.0);
+        let mut v2 = vdupq_n_f32(0.0);
+        for c in 0..chunks {
+            let j = c * 4;
+            let a = vld1q_f32(ca.as_ptr().add(j));
+            let am = vld1q_f32(ma.as_ptr().add(j));
+            let u = vld1q_f32(cu.as_ptr().add(j));
+            let um = vld1q_f32(mu.as_ptr().add(j));
+            vn = vfmaq_f32(vn, a, u);
+            v1 = vfmaq_f32(v1, vmulq_f32(a, a), um);
+            v2 = vfmaq_f32(v2, vmulq_f32(am, u), u);
+        }
+        let (mut sn, mut s1, mut s2) = (vaddvq_f32(vn), vaddvq_f32(v1), vaddvq_f32(v2));
+        for j in chunks * 4..m {
+            let (a, am, u, um) = (ca[j], ma[j], cu[j], mu[j]);
+            sn += a * u;
+            s1 += a * a * um;
+            s2 += am * u * u;
+        }
+        (sn, s1, s2)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn cf_weights(ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Matrix {
+        let (na, n) = (ca.rows(), cu.rows());
+        let mut w = Matrix::zeros(na, n);
+        let mut a0 = 0;
+        while a0 < na {
+            let a1 = (a0 + super::A_TILE).min(na);
+            for j in 0..n {
+                let (cu_row, mu_row) = (cu.row(j), mu.row(j));
+                for ai in a0..a1 {
+                    let (sn, s1, s2) = pearson_sums(ca.row(ai), ma.row(ai), cu_row, mu_row);
+                    w.set(ai, j, finish_pearson(sn, s1, s2));
+                }
+            }
+            a0 = a1;
+        }
+        w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+        let mut rng = Rng::new(seed);
+        let mut m = Matrix::zeros(rows, cols);
+        for v in m.as_mut_slice() {
+            *v = rng.normal() as f32;
+        }
+        m
+    }
+
+    #[test]
+    fn scalar_request_forces_scalar() {
+        assert_eq!(select(Some("scalar")), KernelMode::Scalar);
+    }
+
+    #[test]
+    fn select_always_resolves_and_labels() {
+        for req in [None, Some("simd"), Some("bogus")] {
+            let mode = select(req);
+            assert!(!label(mode).is_empty());
+        }
+        // The cached process-wide decision resolves too.
+        assert!(!label(dispatch()).is_empty());
+    }
+
+    #[test]
+    fn simd_dists_match_scalar_reference() {
+        let mode = select(None);
+        let q = rand_matrix(7, 19, 1);
+        let x = rand_matrix(33, 19, 2);
+        let reference = sq_dists(KernelMode::Scalar, &q, &x);
+        let got = sq_dists(mode, &q, &x);
+        for qi in 0..7 {
+            for xi in 0..33 {
+                let (a, b) = (got.get(qi, xi), reference.get(qi, xi));
+                assert!((a - b).abs() <= 1e-4, "({qi},{xi}): {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_self_distance_is_exactly_zero() {
+        // Norms and cross terms come from the same dot microkernel, so
+        // qn + qn − 2·qn cancels exactly.
+        let mode = select(None);
+        let q = rand_matrix(9, 21, 3);
+        let d = sq_dists(mode, &q, &q);
+        for qi in 0..9 {
+            assert_eq!(d.get(qi, qi), 0.0, "self distance row {qi}");
+        }
+    }
+
+    #[test]
+    fn simd_topk_values_agree_with_dists_entry_point() {
+        // Path independence: both entry points share one microkernel,
+        // so the selected candidates carry bitwise-equal distances.
+        let mode = select(None);
+        let q = rand_matrix(6, 13, 4);
+        let x = rand_matrix(29, 13, 5);
+        let d = sq_dists(mode, &q, &x);
+        let mut topk = Vec::new();
+        knn_topk_into(mode, &q, &x, 4, &mut topk);
+        for (qi, cands) in topk.iter().enumerate() {
+            assert_eq!(cands.len(), 4);
+            for &(dist, id) in cands {
+                assert_eq!(dist, d.get(qi, id as usize), "query {qi} id {id}");
+            }
+        }
+    }
+
+    #[test]
+    fn simd_cf_weights_match_scalar_reference() {
+        let mode = select(None);
+        let mk = |rows: usize, m: usize, seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut c = Matrix::zeros(rows, m);
+            let mut mask = Matrix::zeros(rows, m);
+            for r in 0..rows {
+                for i in 0..m {
+                    if rng.chance(0.35) {
+                        mask.set(r, i, 1.0);
+                        c.set(r, i, rng.normal() as f32);
+                    }
+                }
+            }
+            (c, mask)
+        };
+        let (ca, ma) = mk(5, 37, 6);
+        let (cu, mu) = mk(11, 37, 7);
+        let reference = cf_weights(KernelMode::Scalar, &ca, &ma, &cu, &mu);
+        let got = cf_weights(mode, &ca, &ma, &cu, &mu);
+        for i in 0..5 {
+            for j in 0..11 {
+                let (a, b) = (got.get(i, j), reference.get(i, j));
+                assert!((a - b).abs() <= 1e-4, "({i},{j}): {a} vs {b}");
+            }
+        }
+    }
+}

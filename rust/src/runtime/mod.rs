@@ -14,11 +14,16 @@
 //!   score through: a native Rust implementation (portable baseline and
 //!   fallback) and the PJRT implementation that pads blocks to artifact
 //!   shapes, executes, and unpads.
+//! * [`kernels`] — the cache-blocked scoring kernels behind the native
+//!   backend: runtime-dispatched AVX2/NEON microkernels with a scalar
+//!   reference path (`AML_KERNEL=scalar|simd`), sharing a per-worker
+//!   scratch arena.
 
 pub mod backend;
+pub mod kernels;
 pub mod manifest;
 pub mod service;
 
-pub use backend::{FallbackBackend, NativeBackend, PjrtBackend, ScoreBackend};
+pub use backend::{FallbackBackend, NativeBackend, PjrtBackend, ScalarBackend, ScoreBackend};
 pub use manifest::{ArtifactMeta, Manifest};
 pub use service::{PjrtService, Tensor, TensorData};

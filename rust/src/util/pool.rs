@@ -5,6 +5,17 @@
 //! closures submitted to a shared injector queue; `scope` blocks until
 //! every task submitted within it has completed and propagates the first
 //! panic (a worker panic must fail the job, not hang it).
+//!
+//! Two lanes share the workers: the regular lane (serve/map tasks) and
+//! a **low-priority lane** ([`WorkerPool::submit_low`]) for background
+//! work like shard rebuilds. Workers always drain the regular queue
+//! first, and at most [`WorkerPool::low_cap`] workers run low-lane
+//! tasks at once (default `max(1, size/4)`), so `size - low_cap`
+//! workers are reserved for serve tasks — background interference with
+//! the serve path is *bounded*, not just measured. Low tasks are never
+//! starved forever by the cap itself (the cap is ≥ 1 and a finishing
+//! low task immediately frees its slot), though a continuously full
+//! regular queue does defer them — that is the intended priority.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -25,10 +36,16 @@ struct Shared {
     idle_cv: Condvar,
     idle_mx: Mutex<()>,
     panicked: AtomicUsize,
+    // Max workers running low-lane tasks at once (>= 1, <= size).
+    low_cap: AtomicUsize,
 }
 
 struct QueueState {
     tasks: Vec<Task>,
+    low: Vec<Task>,
+    // Workers currently inside a low-lane task; compared against
+    // `low_cap` under the queue lock before a low task is popped.
+    low_running: usize,
     shutdown: bool,
 }
 
@@ -46,6 +63,8 @@ impl WorkerPool {
         let shared = Arc::new(Shared {
             queue: Mutex::new(QueueState {
                 tasks: Vec::new(),
+                low: Vec::new(),
+                low_running: 0,
                 shutdown: false,
             }),
             cv: Condvar::new(),
@@ -53,6 +72,7 @@ impl WorkerPool {
             idle_cv: Condvar::new(),
             idle_mx: Mutex::new(()),
             panicked: AtomicUsize::new(0),
+            low_cap: AtomicUsize::new((size / 4).max(1)),
         });
         let mut handles = Vec::with_capacity(size);
         for w in 0..size {
@@ -92,6 +112,32 @@ impl WorkerPool {
             q.tasks.push(Box::new(f));
         }
         self.shared.cv.notify_one();
+    }
+
+    /// Submit a task on the low-priority lane: it runs only when no
+    /// regular task is queued and fewer than [`WorkerPool::low_cap`]
+    /// workers are already inside low-lane tasks. Counts toward
+    /// [`WorkerPool::wait_idle`] like any other task.
+    pub fn submit_low<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.inflight.fetch_add(1, Ordering::SeqCst);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.low.push(Box::new(f));
+        }
+        self.shared.cv.notify_one();
+    }
+
+    /// Max workers the low-priority lane may occupy at once.
+    pub fn low_cap(&self) -> usize {
+        self.shared.low_cap.load(Ordering::Relaxed)
+    }
+
+    /// Set the low-lane worker cap, clamped to `1..=size` (a cap of 0
+    /// would strand queued low tasks and deadlock `wait_idle`).
+    pub fn set_low_cap(&self, cap: usize) {
+        self.shared.low_cap.store(cap.clamp(1, self.size), Ordering::Relaxed);
+        // A raised cap may make queued low tasks newly eligible.
+        self.shared.cv.notify_all();
     }
 
     /// Block until every submitted task has finished. Panics if any task
@@ -160,6 +206,22 @@ impl WorkerPool {
             let _ = tx.send((index, r));
         });
     }
+
+    /// [`WorkerPool::stream_into`] on the low-priority lane: the task
+    /// waits behind every regular task and the lane's worker cap, so a
+    /// background producer (e.g. a shard rebuild) has bounded
+    /// interference with serve tasks sharing the pool.
+    pub fn stream_into_low<T, F>(&self, tx: &mpsc::Sender<StreamResult<T>>, index: usize, task: F)
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let tx = tx.clone();
+        self.submit_low(move || {
+            let r = catch_unwind(AssertUnwindSafe(task));
+            let _ = tx.send((index, r));
+        });
+    }
 }
 
 impl Drop for WorkerPool {
@@ -177,22 +239,45 @@ impl Drop for WorkerPool {
 
 fn worker_loop(sh: Arc<Shared>) {
     loop {
-        let task = {
+        let picked = {
             let mut q = sh.queue.lock().unwrap();
             loop {
+                // Regular lane first — low tasks run only on an empty
+                // regular queue, and only while under the lane cap.
                 if let Some(t) = q.tasks.pop() {
-                    break Some(t);
+                    break Some((t, false));
                 }
+                if q.low_running < sh.low_cap.load(Ordering::Relaxed) {
+                    if let Some(t) = q.low.pop() {
+                        q.low_running += 1;
+                        break Some((t, true));
+                    }
+                }
+                // Shutdown still drains both queues: reaching here
+                // means both pops declined, and low tasks can only
+                // remain when the cap is saturated (cap >= 1), i.e.
+                // another worker is inside a low task and will loop
+                // back to drain the rest.
                 if q.shutdown {
                     break None;
                 }
                 q = sh.cv.wait(q).unwrap();
             }
         };
-        let Some(task) = task else { return };
+        let Some((task, low)) = picked else { return };
         let r = catch_unwind(AssertUnwindSafe(task));
         if r.is_err() {
             sh.panicked.fetch_add(1, Ordering::SeqCst);
+        }
+        if low {
+            let more = {
+                let mut q = sh.queue.lock().unwrap();
+                q.low_running -= 1;
+                !q.low.is_empty()
+            };
+            if more {
+                sh.cv.notify_one();
+            }
         }
         if sh.inflight.fetch_sub(1, Ordering::SeqCst) == 1 {
             let _g = sh.idle_mx.lock().unwrap();
@@ -293,6 +378,110 @@ mod tests {
         for (k, (i, v)) in got.into_iter().enumerate() {
             assert_eq!((i, v), (k, k * 2));
         }
+    }
+
+    #[test]
+    fn low_tasks_run_and_count_toward_wait_idle() {
+        let pool = WorkerPool::new(2);
+        let count = Arc::new(AtomicU64::new(0));
+        for _ in 0..10 {
+            let c = Arc::clone(&count);
+            pool.submit_low(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(count.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn regular_tasks_run_before_queued_low_tasks() {
+        // One worker, held by a gate task while both lanes queue up:
+        // on release the regular task must run first even though the
+        // low task was submitted earlier.
+        let pool = WorkerPool::new(1);
+        let (gate_tx, gate_rx) = mpsc::channel::<()>();
+        pool.submit(move || {
+            gate_rx.recv().unwrap();
+        });
+        let order = Arc::new(Mutex::new(Vec::new()));
+        let o = Arc::clone(&order);
+        pool.submit_low(move || {
+            o.lock().unwrap().push("low");
+        });
+        let o = Arc::clone(&order);
+        pool.submit(move || {
+            o.lock().unwrap().push("regular");
+        });
+        gate_tx.send(()).unwrap();
+        pool.wait_idle();
+        assert_eq!(*order.lock().unwrap(), vec!["regular", "low"]);
+    }
+
+    #[test]
+    fn low_lane_concurrency_is_bounded_by_cap() {
+        // 4 workers default to a low cap of 1: 8 parallel-looking low
+        // tasks must never overlap, while 3 workers stay reserved.
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.low_cap(), 1);
+        let running = Arc::new(AtomicU64::new(0));
+        let peak = Arc::new(AtomicU64::new(0));
+        for _ in 0..8 {
+            let (r, p) = (Arc::clone(&running), Arc::clone(&peak));
+            pool.submit_low(move || {
+                let now = r.fetch_add(1, Ordering::SeqCst) + 1;
+                p.fetch_max(now, Ordering::SeqCst);
+                std::thread::sleep(std::time::Duration::from_millis(2));
+                r.fetch_sub(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(peak.load(Ordering::SeqCst), 1, "low lane exceeded its cap");
+    }
+
+    #[test]
+    fn set_low_cap_clamps_and_raises_concurrency() {
+        let pool = WorkerPool::new(2);
+        pool.set_low_cap(0);
+        assert_eq!(pool.low_cap(), 1, "cap 0 would strand low tasks");
+        pool.set_low_cap(99);
+        assert_eq!(pool.low_cap(), 2, "cap larger than the pool");
+        // With the cap at the full pool, two low tasks can meet.
+        let (tx_a, rx_a) = mpsc::channel::<()>();
+        let (tx_b, rx_b) = mpsc::channel::<()>();
+        pool.submit_low(move || {
+            tx_a.send(()).unwrap();
+            rx_b.recv().unwrap();
+        });
+        pool.submit_low(move || {
+            rx_a.recv().unwrap();
+            tx_b.send(()).unwrap();
+        });
+        pool.wait_idle(); // would deadlock if the lane were serialized
+    }
+
+    #[test]
+    fn stream_into_low_delivers_results_and_panics() {
+        let pool = WorkerPool::new(2);
+        let (tx, rx) = mpsc::channel();
+        for i in 0..4 {
+            pool.stream_into_low(&tx, i, move || {
+                if i == 2 {
+                    panic!("injected low-lane fault");
+                }
+                i * 10
+            });
+        }
+        drop(tx);
+        let (mut ok, mut failed) = (0, 0);
+        for (_, r) in rx {
+            match r {
+                Ok(_) => ok += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        assert_eq!((ok, failed), (3, 1));
+        pool.wait_idle(); // low-lane panics are caught by the stream wrapper
     }
 
     #[test]

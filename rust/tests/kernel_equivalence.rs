@@ -1,0 +1,311 @@
+//! The SIMD/scalar equivalence contract (see the module docs of
+//! rust/src/runtime/kernels.rs):
+//!
+//! 1. max-abs-diff ≤ 1e-4 vs the scalar reference on unit-scale data,
+//!    across adversarial shapes;
+//! 2. selection invariance — top-k membership and `argmin_row` agree
+//!    with the scalar reference up to epsilon-ties;
+//! 3. the scalar kernel path stays bit-identical to the host
+//!    `sq_dist` / `pearson_pair` loops.
+//!
+//! Runs meaningfully under both dispatch modes: CI executes it once
+//! with auto dispatch (the SIMD path on its runners) and once with
+//! `AML_KERNEL=scalar` (where every diff is exactly zero and the
+//! forced-scalar pin at the bottom activates).
+
+use accurateml::data::matrix::{sq_dist, Matrix};
+use accurateml::model::kmeans::argmin_row;
+use accurateml::runtime::backend::{pearson_pair, NativeBackend, ScalarBackend, ScoreBackend};
+use accurateml::runtime::kernels::{self, KernelMode};
+use accurateml::util::rng::Rng;
+
+const TOL: f32 = 1e-4;
+
+/// Adversarial (nq, nx, d) shapes: empty on either side, single rows,
+/// zero dims, and dims straddling every lane-width remainder (8-wide
+/// AVX2, 4-wide NEON, the scalar 8-lane unroll).
+const SHAPES: &[(usize, usize, usize)] = &[
+    (0, 5, 8),
+    (5, 0, 8),
+    (5, 10, 0),
+    (1, 1, 1),
+    (3, 7, 1),
+    (1, 40, 3),
+    (4, 9, 5),
+    (8, 16, 7),
+    (7, 33, 8),
+    (9, 40, 9),
+    (2, 3, 15),
+    (16, 64, 16),
+    (33, 65, 17),
+    (5, 129, 31),
+    (12, 200, 33),
+    (64, 128, 64),
+];
+
+fn rand_matrix(rows: usize, cols: usize, seed: u64) -> Matrix {
+    let mut rng = Rng::new(seed);
+    let mut m = Matrix::zeros(rows, cols);
+    for v in m.as_mut_slice() {
+        *v = rng.normal() as f32;
+    }
+    m
+}
+
+/// Every mode worth exercising in this process: the scalar reference
+/// plus the best SIMD mode when the CPU has one.
+fn modes() -> Vec<KernelMode> {
+    let mut v = vec![KernelMode::Scalar];
+    let best = kernels::select(None);
+    if best != KernelMode::Scalar {
+        v.push(best);
+    }
+    v
+}
+
+#[test]
+fn dists_match_scalar_reference_on_adversarial_shapes() {
+    for mode in modes() {
+        for &(nq, nx, d) in SHAPES {
+            let q = rand_matrix(nq, d, 1 + nq as u64);
+            let x = rand_matrix(nx, d, 100 + nx as u64);
+            let got = kernels::sq_dists(mode, &q, &x);
+            assert_eq!((got.rows(), got.cols()), (nq, nx));
+            for qi in 0..nq {
+                for xi in 0..nx {
+                    let expect = sq_dist(x.row(xi), q.row(qi));
+                    let v = got.get(qi, xi);
+                    assert!(v.is_finite() && v >= 0.0, "({qi},{xi}) = {v}");
+                    assert!(
+                        (v - expect).abs() <= TOL,
+                        "{:?} ({nq},{nx},{d}) at ({qi},{xi}): {v} vs {expect}",
+                        kernels::label(mode)
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn near_duplicate_rows_stay_within_contract() {
+    // Worst case for the ||q||²+||x||²−2qx form: the cross term nearly
+    // cancels the norms, so absolute error is dominated by the norm
+    // magnitudes, not the tiny true distance.
+    let d = 64;
+    let x = rand_matrix(20, d, 7);
+    let mut q = x.clone();
+    let mut rng = Rng::new(8);
+    for v in q.as_mut_slice() {
+        *v += (rng.normal() as f32) * 1e-3;
+    }
+    for mode in modes() {
+        let got = kernels::sq_dists(mode, &q, &x);
+        for qi in 0..20 {
+            for xi in 0..20 {
+                let expect = sq_dist(x.row(xi), q.row(qi));
+                let v = got.get(qi, xi);
+                assert!(v >= 0.0, "negative distance {v}");
+                assert!((v - expect).abs() <= TOL, "({qi},{xi}): {v} vs {expect}");
+            }
+        }
+    }
+}
+
+#[test]
+fn identical_rows_give_exactly_zero_self_distance() {
+    let q = rand_matrix(11, 37, 9);
+    for mode in modes() {
+        let dmat = kernels::sq_dists(mode, &q, &q);
+        for i in 0..11 {
+            assert_eq!(dmat.get(i, i), 0.0, "{} row {i}", kernels::label(mode));
+        }
+    }
+}
+
+#[test]
+fn topk_selection_is_invariant_up_to_epsilon_ties() {
+    for mode in modes() {
+        for &(nq, nx, d) in SHAPES {
+            for k in [1usize, 3, 5] {
+                let q = rand_matrix(nq, d, 11 + nq as u64);
+                let x = rand_matrix(nx, d, 211 + nx as u64);
+                let mut got = Vec::new();
+                kernels::knn_topk_into(mode, &q, &x, k, &mut got);
+                assert_eq!(got.len(), nq);
+                for (qi, cands) in got.iter().enumerate() {
+                    assert_eq!(cands.len(), k.min(nx), "query {qi}");
+                    // Ascending, and within-tolerance of the scalar
+                    // distance for the same id.
+                    let mut scalar: Vec<f32> =
+                        (0..nx).map(|xi| sq_dist(x.row(xi), q.row(qi))).collect();
+                    for w in cands.windows(2) {
+                        assert!(w[0].0 <= w[1].0, "query {qi} not ascending");
+                    }
+                    for &(dist, id) in cands {
+                        let sd = scalar[id as usize];
+                        assert!((dist - sd).abs() <= TOL, "query {qi} id {id}");
+                    }
+                    // Membership: every selected id must be within an
+                    // epsilon-tie of the scalar k-th best.
+                    if !scalar.is_empty() {
+                        scalar.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                        let kth = scalar[k.min(nx) - 1];
+                        for &(_, id) in cands {
+                            let sd = sq_dist(x.row(id as usize), q.row(qi));
+                            assert!(
+                                sd <= kth + TOL,
+                                "query {qi}: id {id} (scalar dist {sd}) beyond kth {kth}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn topk_entry_point_matches_dists_entry_point_bitwise() {
+    // Path independence within one mode: both entry points share one
+    // dot microkernel, so selected candidates carry bitwise-identical
+    // distances — this is what keeps exact == barrier == streamed
+    // pins true under SIMD.
+    for mode in modes() {
+        let q = rand_matrix(10, 23, 13);
+        let x = rand_matrix(57, 23, 14);
+        let dmat = kernels::sq_dists(mode, &q, &x);
+        let mut topk = Vec::new();
+        kernels::knn_topk_into(mode, &q, &x, 6, &mut topk);
+        for (qi, cands) in topk.iter().enumerate() {
+            for &(dist, id) in cands {
+                assert_eq!(dist, dmat.get(qi, id as usize), "query {qi} id {id}");
+            }
+        }
+    }
+}
+
+#[test]
+fn argmin_agrees_with_scalar_reference_and_keeps_tie_rule() {
+    // Stage-2 k-means scatters argmin over backend distance rows; the
+    // SIMD row must pick a centroid whose scalar distance ties the
+    // scalar winner within epsilon. With duplicated candidate rows the
+    // per-pair determinism of the kernels guarantees exact ties, and
+    // the strict-< scan must keep the first occurrence in both modes.
+    let q = rand_matrix(9, 12, 15);
+    let mut rows: Vec<f32> = Vec::new();
+    let base = rand_matrix(6, 12, 16);
+    for r in 0..6 {
+        rows.extend_from_slice(base.row(r));
+    }
+    for r in 0..6 {
+        rows.extend_from_slice(base.row(r)); // duplicates: forced ties
+    }
+    let x = Matrix::from_vec(12, 12, rows).unwrap();
+    for mode in modes() {
+        let dmat = kernels::sq_dists(mode, &q, &x);
+        let scalar = kernels::sq_dists(KernelMode::Scalar, &q, &x);
+        for qi in 0..9 {
+            let (ci, cd) = argmin_row(dmat.row(qi));
+            let (si, sd) = argmin_row(scalar.row(qi));
+            assert!(ci < 6, "query {qi}: tie broke to the duplicate ({ci})");
+            assert!((cd - sd).abs() <= TOL, "query {qi}");
+            // Selection may only differ inside an epsilon tie.
+            assert!(
+                ci == si || (scalar.get(qi, ci) - sd).abs() <= TOL,
+                "query {qi}: {ci} vs {si}"
+            );
+        }
+    }
+}
+
+#[test]
+fn argmin_row_stays_nan_safe_under_reordered_arithmetic() {
+    // The kernels never produce NaN from finite input, but upstream
+    // ablations can inject non-finite sentinels into distance rows;
+    // the strict-< scan must skip them regardless of kernel mode.
+    assert_eq!(argmin_row(&[f32::NAN, 3.0, f32::NAN, 1.0, f32::INFINITY]), (3, 1.0));
+    assert_eq!(argmin_row(&[f32::NAN, f32::NAN]).1, f32::INFINITY);
+    assert_eq!(argmin_row(&[]), (0, f32::INFINITY));
+    // Equal finite values: first index wins.
+    assert_eq!(argmin_row(&[2.0, 1.0, 1.0]), (1, 1.0));
+}
+
+#[test]
+fn cf_weights_match_scalar_reference_including_zero_masks() {
+    let mk = |rows: usize, m: usize, density: f64, seed: u64| {
+        let mut rng = Rng::new(seed);
+        let mut c = Matrix::zeros(rows, m);
+        let mut mask = Matrix::zeros(rows, m);
+        for r in 0..rows {
+            for i in 0..m {
+                if rng.chance(density) {
+                    mask.set(r, i, 1.0);
+                    c.set(r, i, rng.normal() as f32);
+                }
+            }
+        }
+        (c, mask)
+    };
+    for mode in modes() {
+        for &(na, nu, m) in &[(1usize, 1usize, 1usize), (3, 5, 7), (5, 11, 33), (8, 16, 128)] {
+            let (ca, ma) = mk(na, m, 0.35, 21 + m as u64);
+            let (cu, mu) = mk(nu, m, 0.35, 91 + m as u64);
+            let got = kernels::cf_weights(mode, &ca, &ma, &cu, &mu);
+            for i in 0..na {
+                for j in 0..nu {
+                    let expect = pearson_pair(ca.row(i), ma.row(i), cu.row(j), mu.row(j));
+                    let v = got.get(i, j);
+                    assert!(v.is_finite() && v.abs() <= 1.0 + TOL, "({i},{j}) = {v}");
+                    assert!((v - expect).abs() <= TOL, "({i},{j}): {v} vs {expect}");
+                }
+            }
+        }
+        // All-zero masks: the 1e-12 denominator guard must yield
+        // exactly 0.0 on every path, not NaN.
+        let z = Matrix::zeros(4, 24);
+        let w = kernels::cf_weights(mode, &z, &z, &z, &z);
+        for v in w.as_slice() {
+            assert_eq!(*v, 0.0, "{}", kernels::label(mode));
+        }
+    }
+}
+
+#[test]
+fn degenerate_shapes_agree_through_the_backend_api() {
+    // k = 0, k > n, and empty blocks through the public trait: the
+    // SIMD-dispatched backend must structurally match the scalar one.
+    let q = rand_matrix(3, 9, 31);
+    let x = rand_matrix(4, 9, 32);
+    for k in [0usize, 2, 4, 9] {
+        let a = NativeBackend.knn_block_topk(&q, &x, k).unwrap();
+        let b = ScalarBackend.knn_block_topk(&q, &x, k).unwrap();
+        assert_eq!(a.len(), b.len());
+        for (qa, qb) in a.iter().zip(&b) {
+            assert_eq!(qa.len(), qb.len(), "k={k}");
+            assert_eq!(qa.len(), k.min(4));
+            for (ca, cb) in qa.iter().zip(qb) {
+                assert_eq!(ca.1, cb.1, "k={k}");
+                assert!((ca.0 - cb.0).abs() <= TOL, "k={k}");
+            }
+        }
+    }
+    let empty = Matrix::zeros(0, 9);
+    assert_eq!(NativeBackend.knn_dists(&empty, &x).unwrap().rows(), 0);
+    assert!(NativeBackend.knn_block_topk(&q, &empty, 3).unwrap().iter().all(|c| c.is_empty()));
+}
+
+#[test]
+fn forced_scalar_env_pins_native_to_scalar_bits() {
+    // Active only in the CI job that sets AML_KERNEL=scalar: the
+    // dispatched backend must then be bit-identical to ScalarBackend.
+    if std::env::var("AML_KERNEL").as_deref() != Ok("scalar") {
+        return;
+    }
+    assert_eq!(kernels::dispatch(), KernelMode::Scalar);
+    let q = rand_matrix(6, 14, 41);
+    let x = rand_matrix(21, 14, 42);
+    let a = NativeBackend.knn_dists(&q, &x).unwrap();
+    let b = ScalarBackend.knn_dists(&q, &x).unwrap();
+    assert_eq!(a, b);
+}
