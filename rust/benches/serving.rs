@@ -29,7 +29,10 @@
 //! `refresh_swap_count` and `serve_during_rebuild_p99_s` (p99 of the
 //! queries served while a rebuild was competing for the pool) next to
 //! the static p99. The batched replay's per-class anytime curves land
-//! under `per_class`.
+//! under `per_class` in the JSON *and* as `reports/per_class.csv` (one
+//! row per (app, class, stage) curve point; dir set by
+//! `AML_REPORT_DIR`) so spreadsheet tooling gets them without a JSON
+//! walk.
 //!
 //! Finally, each app runs **open-loop load generation** against an
 //! in-process JSONL daemon (`serve::loadgen`): a capacity probe, then
@@ -50,6 +53,8 @@
 //! hot-path smoke test:
 //!
 //!     cargo bench --bench serving --features bench-smoke
+
+mod common;
 
 use std::sync::Arc;
 
@@ -210,6 +215,29 @@ fn per_class_json(report: &ServeReport) -> Json {
     )
 }
 
+/// Append one app's per-class anytime curves to the CSV table: one row
+/// per (class, stage) curve point, mirroring the JSON `per_class`
+/// entry of the batched replay.
+fn per_class_rows(t: &mut Table, app: &str, report: &ServeReport) {
+    for c in &report.per_class {
+        for p in &c.curve {
+            t.row(vec![
+                app.into(),
+                c.class.clone(),
+                c.queries.to_string(),
+                c.cache_hits.to_string(),
+                p.stage.name().into(),
+                p.queries.to_string(),
+                format!("{:.6}", p.mean_wall_s),
+                p.mean_accuracy
+                    .map(|a| format!("{a:.6}"))
+                    .unwrap_or_else(|| "-".into()),
+                format!("{:.3}", p.mean_refined_buckets),
+            ]);
+        }
+    }
+}
+
 /// The live-refresh replay's JSON entry: swap/staleness counters and
 /// the p99 of queries served while a rebuild was in flight.
 fn refresh_json(report: &ServeReport) -> Json {
@@ -306,8 +334,10 @@ where
     Json::Arr(cells.iter().map(|c| c.to_json()).collect())
 }
 
+#[allow(clippy::too_many_arguments)]
 fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
     t: &mut Table,
+    pc: &mut Table,
     apps_json: &mut Vec<Json>,
     cfgs: &Cfgs,
     app: &str,
@@ -320,6 +350,7 @@ fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
     let batched = replay(&cfgs.batched);
     push_row(t, app, "per-query", &per_query);
     push_row(t, app, "batched", &batched);
+    per_class_rows(pc, app, &batched.report);
     let (refine_scalar_s, refine_batched_s) = refine;
     let mut pairs: Vec<(&str, Json)> = vec![
         ("app", app.into()),
@@ -418,6 +449,20 @@ fn main() {
             "misses",
         ],
     );
+    let mut pc = Table::new(
+        "per-class anytime curves (batched replay)",
+        &[
+            "app",
+            "class",
+            "queries",
+            "cache_hits",
+            "stage",
+            "stage_queries",
+            "mean_wall_s",
+            "mean_accuracy",
+            "mean_refined_buckets",
+        ],
+    );
     let mut apps_json: Vec<Json> = Vec::new();
 
     // kNN: build shards untimed, measure stage-2 scalar-vs-batched on
@@ -447,7 +492,7 @@ fn main() {
         wb.knn_data.test.rows(),
     );
     let server = ShardedServer::new(shards).expect("server");
-    bench_app(&mut t, &mut apps_json, &cfgs, "knn", refine, &refresh, curves, |cfg| {
+    bench_app(&mut t, &mut pc, &mut apps_json, &cfgs, "knn", refine, &refresh, curves, |cfg| {
         let queries = query_log::knn_query_log(&wb.knn_data, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });
@@ -478,7 +523,7 @@ fn main() {
         wb.cf_split.test.len(),
     );
     let server = ShardedServer::new(shards).expect("server");
-    bench_app(&mut t, &mut apps_json, &cfgs, "cf", refine, &refresh, curves, |cfg| {
+    bench_app(&mut t, &mut pc, &mut apps_json, &cfgs, "cf", refine, &refresh, curves, |cfg| {
         let queries = query_log::cf_query_log(&wb.cf_split, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });
@@ -509,7 +554,7 @@ fn main() {
         points.rows(),
     );
     let server = ShardedServer::new(shards).expect("server");
-    bench_app(&mut t, &mut apps_json, &cfgs, "kmeans", refine, &refresh, curves, |cfg| {
+    bench_app(&mut t, &mut pc, &mut apps_json, &cfgs, "kmeans", refine, &refresh, curves, |cfg| {
         let queries = query_log::kmeans_query_log(&points, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });
@@ -519,6 +564,7 @@ fn main() {
         "(accuracy metrics: knn 0/1 correctness; cf negative squared rating error; \
 kmeans negative squared representative distance)"
     );
+    common::emit("per_class", &pc);
 
     let doc = Json::obj(vec![
         ("schema", "bench_serving_v1".into()),

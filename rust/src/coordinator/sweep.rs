@@ -22,6 +22,7 @@ use crate::refresh::LabeledPoint;
 use crate::runtime::backend::{
     FallbackBackend, NativeBackend, PjrtBackend, ScalarBackend, ScoreBackend,
 };
+use crate::runtime::parallel::ParallelBackend;
 use crate::runtime::service::PjrtService;
 use crate::serve::{query_log, ServeConfig, ServeReport, Session};
 
@@ -127,10 +128,19 @@ impl Workbench {
             config.seed ^ 0xCF,
         )?;
 
-        let engine = if config.n_workers == 0 {
+        // AML_WORKERS overrides the configured pool size (0 = machine
+        // default) — CI's pool-size matrix legs use it to pin the
+        // serial and parallel scoring paths without touching presets.
+        let n_workers = match std::env::var("AML_WORKERS") {
+            Ok(v) => v.trim().parse::<usize>().map_err(|_| {
+                crate::Error::Config(format!("AML_WORKERS={v:?} is not a worker count"))
+            })?,
+            Err(_) => config.n_workers,
+        };
+        let engine = if n_workers == 0 {
             Engine::with_default_size()
         } else {
-            Engine::new(config.n_workers)
+            Engine::new(n_workers)
         };
 
         let (backend, service): (Arc<dyn ScoreBackend>, Option<Arc<PjrtService>>) =
@@ -152,6 +162,13 @@ impl Workbench {
                     )))
                 }
             };
+        // Intra-block parallel scoring: wrap whichever backend was
+        // picked so one large scan splits across the engine's pool
+        // (AML_SPLIT=off|auto|N; `off` returns the inner backend
+        // unchanged). Every consumer — serving sessions, the batch
+        // TwoStageJob adapters, the refresh folds — clones this Arc,
+        // so the splitter rides along everywhere.
+        let backend = ParallelBackend::from_env(backend, engine.pool_arc());
 
         Ok(Workbench {
             config,

@@ -100,6 +100,19 @@ impl Matrix {
         self.data
     }
 
+    /// Copy of the contiguous row range `a..b` — row-major storage
+    /// makes this a single memcpy. The parallel scoring tiles slice
+    /// their x-row ranges with this, inside the tile task, so the copy
+    /// itself parallelizes.
+    pub fn row_range(&self, a: usize, b: usize) -> Matrix {
+        assert!(a <= b && b <= self.rows, "row range {a}..{b} of {}", self.rows);
+        Matrix {
+            rows: b - a,
+            cols: self.cols,
+            data: self.data[a * self.cols..b * self.cols].to_vec(),
+        }
+    }
+
     /// Gather a subset of rows into a new matrix.
     pub fn gather_rows(&self, idx: &[usize]) -> Matrix {
         let mut out = Matrix::zeros(idx.len(), self.cols);
@@ -236,6 +249,16 @@ mod tests {
         let s = m.vstack(&g).unwrap();
         assert_eq!(s.rows(), 5);
         assert_eq!(s.row(4), &[1., 2.]);
+    }
+
+    #[test]
+    fn row_range_slices_contiguously() {
+        let m = Matrix::from_vec(4, 2, vec![1., 2., 3., 4., 5., 6., 7., 8.]).unwrap();
+        let s = m.row_range(1, 3);
+        assert_eq!((s.rows(), s.cols()), (2, 2));
+        assert_eq!(s.as_slice(), &[3., 4., 5., 6.]);
+        assert_eq!(m.row_range(2, 2).rows(), 0);
+        assert_eq!(m.row_range(0, 4), m);
     }
 
     #[test]

@@ -126,22 +126,27 @@ pub struct JobReport<O> {
 }
 
 /// Execution engine owning a worker pool.
+///
+/// The pool is held behind an `Arc` so long-lived components that
+/// outlast a borrow — notably [`crate::runtime::ParallelBackend`],
+/// which fans single scoring scans across these same workers — can
+/// share it without tying their lifetime to the engine's.
 pub struct Engine {
-    pool: WorkerPool,
+    pool: Arc<WorkerPool>,
 }
 
 impl Engine {
     /// Engine with `n_workers` local workers.
     pub fn new(n_workers: usize) -> Engine {
         Engine {
-            pool: WorkerPool::new(n_workers),
+            pool: Arc::new(WorkerPool::new(n_workers)),
         }
     }
 
     /// Engine sized to the machine.
     pub fn with_default_size() -> Engine {
         Engine {
-            pool: WorkerPool::with_default_size(),
+            pool: Arc::new(WorkerPool::with_default_size()),
         }
     }
 
@@ -155,6 +160,12 @@ impl Engine {
     /// share one compute budget.
     pub fn pool(&self) -> &WorkerPool {
         &self.pool
+    }
+
+    /// Shared handle to the pool, for components that must own a
+    /// reference (the intra-block parallel scoring wrapper).
+    pub fn pool_arc(&self) -> Arc<WorkerPool> {
+        Arc::clone(&self.pool)
     }
 
     /// Run a job to completion (no retries — a task panic fails the job).

@@ -326,6 +326,9 @@ impl CfModel {
             let index = &self.agg.index[*b];
             let xcb = xc.gather(index.iter().map(|&l| self.cu.row(l as usize)));
             let xmb = xm.gather(index.iter().map(|&l| self.mu.row(l as usize)));
+            // The scanned side (gathered bucket originals) is the
+            // second operand pair — the axis ParallelBackend splits
+            // when a rescan block clears its size threshold.
             let w = self
                 .backend
                 .cf_weights(&qcb, &qmb, &xcb, &xmb)
@@ -486,7 +489,9 @@ impl ServableModel for CfModel {
         // call computes every (query, bucket) Pearson weight. The
         // native backend runs `pearson_pair` per pair with the same
         // argument order the pre-block per-query loop used, keeping
-        // stage-1 numerics bit-identical to PR 2's scoring.
+        // stage-1 numerics bit-identical to PR 2's scoring. The
+        // aggregates are the second (scanned) pair, so a wrapping
+        // ParallelBackend splits their rows across the pool.
         let m = self.cagg.cols();
         let mut cu = Matrix::zeros(queries.len(), m);
         let mut mu = Matrix::zeros(queries.len(), m);

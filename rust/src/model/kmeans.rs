@@ -306,7 +306,9 @@ impl ServableModel for KmeansModel {
         // Assemble the Q×d block once; ONE backend call computes every
         // (query, bucket-center) squared distance. The native backend
         // runs the same `sq_dist` the pre-block per-query loop used,
-        // keeping stage-1 numerics bit-identical to PR 2's scoring.
+        // keeping stage-1 numerics bit-identical to PR 2's scoring (a
+        // wrapping ParallelBackend splits the center rows across the
+        // pool without changing a bit of the result).
         // Proximity ranking: correlation = -distance, so a query
         // refines its *nearest* buckets first (the batch job ranks by
         // assignment margin instead — it optimizes the global result,

@@ -91,6 +91,11 @@ impl KnnModel {
     /// Dense (queries × buckets) squared-distance block against the
     /// aggregated centroids — stage 1's scoring, shared by the batch
     /// path (whole test matrix) and serving (one block per micro-batch).
+    ///
+    /// When the workbench wrapped the backend in a
+    /// [`crate::runtime::ParallelBackend`], this single call fans the
+    /// centroid rows out across the pool (bit-identical merge), so one
+    /// query batch's stage-1 latency scales with core count.
     pub fn score_block(&self, queries: &Matrix) -> Matrix {
         self.backend
             .knn_dists(queries, &self.agg.centroids)

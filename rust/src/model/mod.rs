@@ -93,6 +93,9 @@ pub(crate) fn score_distance_blocks<'a>(
         }
         let qm = qbuf.gather(members.iter().map(|&q| query_row(q)));
         let xm = xbuf.gather(index[*b].iter().map(|&l| original_row(l)));
+        // Large bucket-group rescans split across the pool when the
+        // backend is a ParallelBackend (x rows are the scanned side);
+        // small groups stay serial under its auto threshold.
         let dists = backend.knn_dists(&qm, &xm).expect("backend scoring failed");
         qbuf.recycle(qm);
         xbuf.recycle(xm);

@@ -144,6 +144,11 @@ impl<M: Refreshable> Rebuilder<M> {
             self.in_flight += 1;
             self.stats.rebuilds_started += 1;
             started += 1;
+            // Rebuild folds score one point at a time (1×d absorb
+            // routing) — far below ParallelBackend's auto split
+            // threshold, so they never fan helper tiles onto the
+            // regular lane and the low-lane reservation math holds.
+            // (AML_SPLIT=N forcing is the one debugging exception.)
             pool.stream_into_low(&self.tx, s, move || {
                 let candidate = base.merge_deltas(&deltas);
                 (deltas, candidate)

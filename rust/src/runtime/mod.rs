@@ -18,12 +18,17 @@
 //!   backend: runtime-dispatched AVX2/NEON microkernels with a scalar
 //!   reference path (`AML_KERNEL=scalar|simd`), sharing a per-worker
 //!   scratch arena.
+//! * [`parallel`] — [`parallel::ParallelBackend`], the wrapper that
+//!   splits one large scan into row tiles across the worker pool with
+//!   bit-identical tile-ordered merges (`AML_SPLIT=off|auto|N`).
 
 pub mod backend;
 pub mod kernels;
 pub mod manifest;
+pub mod parallel;
 pub mod service;
 
 pub use backend::{FallbackBackend, NativeBackend, PjrtBackend, ScalarBackend, ScoreBackend};
+pub use parallel::{ParallelBackend, SplitPolicy};
 pub use manifest::{ArtifactMeta, Manifest};
 pub use service::{PjrtService, Tensor, TensorData};

@@ -1,0 +1,421 @@
+//! Intra-block parallel scoring: split ONE large scan across the pool.
+//!
+//! Before this layer, one [`ScoreBackend`] call ran on exactly one
+//! worker — the engine parallelizes *across* partitions and batches,
+//! but the biggest single scans (stage-1 distances over all aggregated
+//! centroids, full-partition top-k, CF weight rows) serialized on one
+//! core while the rest of the pool idled. [`ParallelBackend`] wraps any
+//! backend and partitions the scanned-side rows into contiguous tiles,
+//! fans the tiles out via [`WorkerPool::run_tiles`] (regular lane —
+//! the low-priority rebuild lane's reservation math is untouched), and
+//! merges per-tile results with a fixed, tile-index-ordered reduction.
+//!
+//! # The determinism contract
+//!
+//! The parallel path is **bit-identical** to the single-worker path,
+//! for any tile count, on every backend whose per-pair values are
+//! path-independent (all of ours — see DESIGN.md §6):
+//!
+//! * `knn_dists` / `cf_weights`: each output element depends only on
+//!   its (query row, scanned row) pair, so scattering tile results
+//!   into their column ranges reproduces the serial matrix exactly —
+//!   no arithmetic crosses a tile boundary.
+//! * `knn_block_topk`: the serial scan pushes x rows in ascending id
+//!   order into a [`TopK`] whose eviction rule (evict the largest
+//!   (dist, id); replace only on strictly smaller dist) makes the
+//!   final set *the k lexicographically-smallest (dist, id) pairs* —
+//!   a push-order-free characterization, except that a push rejected
+//!   at `dist == threshold` must never be lex-smaller than a kept
+//!   same-dist entry. Re-pushing each tile's survivor list (ascending
+//!   (dist, id), ids offset by the tile's start row) in tile-index
+//!   order preserves exactly that guard: any same-dist entry already
+//!   in the heap came from an earlier tile (smaller ids by
+//!   construction) or earlier in this tile's sorted list (smaller id),
+//!   so the rejected id is always the larger one — the same decision
+//!   the serial scan makes. A tile's non-survivors are beaten by k
+//!   entries within their own tile, so dropping them loses nothing.
+//!   Hence the merged lists equal the serial lists bit for bit, for
+//!   any contiguous ascending tiling — the tile count may safely vary
+//!   with pool size. (Pinned across pool sizes {1, 2, 7} and split
+//!   modes in `tests/kernel_equivalence.rs`.)
+//!
+//! One caveat: `PjrtBackend` with `fused_topk` enabled (default off)
+//! selects candidates on-device, where tie-breaking among equal
+//! distances is the device's choice — per-tile lists may then not be
+//! the lex-smallest set, and only the *unsplit* path is pinned there.
+//!
+//! # The adaptive splitter
+//!
+//! Fan-out costs two things: task hand-off latency and a per-tile copy
+//! of the tile's x rows. Both are pure overhead on small blocks, so
+//! `SplitPolicy::Auto` splits only when the scanned side exceeds
+//! [`SPLIT_MIN_ELEMS`] elements (seeded from the roofline bench's
+//! shape classes: the full-scale `stage1_dists` class at 400×64 =
+//! 25.6k scanned elems is near break-even, so the threshold sits just
+//! above it) and never cuts tiles under [`MIN_TILE_ROWS`] rows. The
+//! per-query blocks the refresh path scores (`absorb_point` routing,
+//! 1×d) sit far below the threshold, so rebuild folds stay serial and
+//! the low-lane interference bound is preserved without special
+//! casing. `AML_SPLIT=off|auto|N` overrides the policy process-wide at
+//! workbench construction.
+
+use std::sync::{Arc, Mutex};
+
+use crate::data::matrix::Matrix;
+use crate::error::Result;
+use crate::runtime::backend::{Candidate, ScoreBackend, TopK};
+use crate::util::pool::WorkerPool;
+
+/// Minimum scanned-side elements (`rows × dim`) before `Auto` splits.
+/// Calibrated against BENCH_hotpath.json's shape classes: full-scale
+/// `stage1_dists` (400 centroids × d64 = 25.6k) is the smallest block
+/// where fan-out pays for itself on ≥ 2 workers.
+pub const SPLIT_MIN_ELEMS: usize = 24_000;
+
+/// Never cut a tile under this many scanned rows — below it the
+/// per-tile row copy and hand-off dominate the scoring work.
+pub const MIN_TILE_ROWS: usize = 32;
+
+/// How [`ParallelBackend`] decides the tile count for one call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitPolicy {
+    /// Never split — every call delegates to the inner backend.
+    Off,
+    /// Split large scans across the pool (threshold above), leave
+    /// small ones serial.
+    Auto,
+    /// Always split into this many tiles (clamped to the row count).
+    /// A debugging/testing knob — forcing splits also applies to the
+    /// tiny rebuild-path blocks `Auto` would leave serial.
+    Force(usize),
+}
+
+impl SplitPolicy {
+    /// Parse an `AML_SPLIT` value: `off`/`0`/`1` disable, `auto` (or
+    /// empty) adapts, an integer `N >= 2` forces `N` tiles. Unknown
+    /// values warn and fall back to `Auto`.
+    pub fn parse(v: &str) -> SplitPolicy {
+        match v.trim().to_ascii_lowercase().as_str() {
+            "" | "auto" => SplitPolicy::Auto,
+            "off" | "0" | "1" => SplitPolicy::Off,
+            s => match s.parse::<usize>() {
+                Ok(n) => SplitPolicy::Force(n),
+                Err(_) => {
+                    crate::log_warn!("unrecognized AML_SPLIT={s:?}, using auto");
+                    SplitPolicy::Auto
+                }
+            },
+        }
+    }
+
+    /// Policy from the `AML_SPLIT` environment variable (default
+    /// `Auto`). Read once at construction, never per call.
+    pub fn from_env() -> SplitPolicy {
+        match std::env::var("AML_SPLIT") {
+            Ok(v) => SplitPolicy::parse(&v),
+            Err(_) => SplitPolicy::Auto,
+        }
+    }
+}
+
+/// Contiguous, ascending, balanced row tiling: the first `rows % tiles`
+/// tiles get one extra row. Requires `1 <= tiles <= rows`.
+fn tile_bounds(rows: usize, tiles: usize) -> Vec<(usize, usize)> {
+    debug_assert!(tiles >= 1 && tiles <= rows);
+    let (base, rem) = (rows / tiles, rows % tiles);
+    let mut v = Vec::with_capacity(tiles);
+    let mut start = 0;
+    for t in 0..tiles {
+        let end = start + base + usize::from(t < rem);
+        v.push((start, end));
+        start = end;
+    }
+    v
+}
+
+/// A [`ScoreBackend`] wrapper that splits large scans across the
+/// worker pool with deterministic tile merges (see the module docs for
+/// the bit-identity argument). Transparent otherwise: `name()` and all
+/// error behavior come from the inner backend.
+pub struct ParallelBackend {
+    inner: Arc<dyn ScoreBackend>,
+    pool: Arc<WorkerPool>,
+    policy: SplitPolicy,
+}
+
+impl ParallelBackend {
+    /// Wrap `inner` with an explicit policy (tests use this — no env
+    /// mutation required).
+    pub fn with_policy(
+        inner: Arc<dyn ScoreBackend>,
+        pool: Arc<WorkerPool>,
+        policy: SplitPolicy,
+    ) -> ParallelBackend {
+        ParallelBackend {
+            inner,
+            pool,
+            policy,
+        }
+    }
+
+    /// Production wiring: wrap `inner` per `AML_SPLIT`. `Off` returns
+    /// the inner backend unchanged (zero wrapper overhead).
+    pub fn from_env(inner: Arc<dyn ScoreBackend>, pool: Arc<WorkerPool>) -> Arc<dyn ScoreBackend> {
+        match SplitPolicy::from_env() {
+            SplitPolicy::Off => inner,
+            policy => Arc::new(ParallelBackend::with_policy(inner, pool, policy)),
+        }
+    }
+
+    /// The active policy.
+    pub fn policy(&self) -> SplitPolicy {
+        self.policy
+    }
+
+    /// Tile count this backend would use for a scan of
+    /// `scan_rows × scan_cols` — 1 means "stay serial". Exposed so the
+    /// roofline bench can report the splitter's decision per shape
+    /// class.
+    pub fn planned_tiles(&self, scan_rows: usize, scan_cols: usize) -> usize {
+        match self.policy {
+            SplitPolicy::Off => 1,
+            SplitPolicy::Force(n) => n.min(scan_rows).max(1),
+            SplitPolicy::Auto => {
+                if scan_rows * scan_cols.max(1) < SPLIT_MIN_ELEMS {
+                    return 1;
+                }
+                // Caller participates, so one more lane than workers.
+                let lanes = self.pool.size() + 1;
+                lanes.min(scan_rows / MIN_TILE_ROWS).max(1)
+            }
+        }
+    }
+
+    /// Fan `run(a, b)` over `bounds` via the caller-participating pool
+    /// primitive; collect results in tile order (so the first error by
+    /// tile index wins deterministically).
+    fn run_split<T, F>(&self, bounds: &[(usize, usize)], run: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(usize, usize) -> Result<T> + Sync,
+    {
+        let slots: Vec<Mutex<Option<Result<T>>>> =
+            bounds.iter().map(|_| Mutex::new(None)).collect();
+        self.pool.run_tiles(bounds.len(), |t| {
+            let (a, b) = bounds[t];
+            let r = run(a, b);
+            *slots[t].lock().unwrap() = Some(r);
+        });
+        let mut out = Vec::with_capacity(bounds.len());
+        for slot in slots {
+            let r = slot
+                .into_inner()
+                .expect("tile slot lock")
+                .expect("tile produced no result");
+            out.push(r?);
+        }
+        Ok(out)
+    }
+}
+
+impl ScoreBackend for ParallelBackend {
+    fn knn_block_topk(&self, q: &Matrix, x: &Matrix, k: usize) -> Result<Vec<Vec<Candidate>>> {
+        let mut out = Vec::new();
+        self.knn_block_topk_into(q, x, k, &mut out)?;
+        Ok(out)
+    }
+
+    fn knn_block_topk_into(
+        &self,
+        q: &Matrix,
+        x: &Matrix,
+        k: usize,
+        out: &mut Vec<Vec<Candidate>>,
+    ) -> Result<()> {
+        let tiles = self.planned_tiles(x.rows(), x.cols());
+        // Delegate degenerate and invalid shapes so errors (and empty
+        // results) are byte-for-byte the inner backend's.
+        if tiles <= 1 || k == 0 || q.rows() == 0 || q.cols() != x.cols() {
+            return self.inner.knn_block_topk_into(q, x, k, out);
+        }
+        let bounds = tile_bounds(x.rows(), tiles);
+        let parts = self.run_split(&bounds, |a, b| {
+            let mut lists = self.inner.knn_block_topk(q, &x.row_range(a, b), k)?;
+            // Tile-local row ids -> partition row ids.
+            for list in &mut lists {
+                for c in list.iter_mut() {
+                    c.1 += a as u32;
+                }
+            }
+            Ok(lists)
+        })?;
+        out.resize_with(q.rows(), Vec::new);
+        let mut heap = TopK::new(k);
+        for (qi, merged) in out.iter_mut().enumerate() {
+            // Tile-index order is the determinism contract: see the
+            // module docs for why this reproduces the serial scan.
+            for part in &parts {
+                for &(d, id) in &part[qi] {
+                    heap.push(d, id);
+                }
+            }
+            heap.drain_sorted_into(merged);
+        }
+        Ok(())
+    }
+
+    fn knn_dists(&self, q: &Matrix, x: &Matrix) -> Result<Matrix> {
+        let tiles = self.planned_tiles(x.rows(), x.cols());
+        if tiles <= 1 || q.rows() == 0 || q.cols() != x.cols() {
+            return self.inner.knn_dists(q, x);
+        }
+        let bounds = tile_bounds(x.rows(), tiles);
+        let parts = self.run_split(&bounds, |a, b| self.inner.knn_dists(q, &x.row_range(a, b)))?;
+        let mut out = Matrix::zeros(q.rows(), x.rows());
+        for (&(a, b), part) in bounds.iter().zip(&parts) {
+            for r in 0..q.rows() {
+                out.row_mut(r)[a..b].copy_from_slice(part.row(r));
+            }
+        }
+        Ok(out)
+    }
+
+    fn cf_weights(&self, ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Result<Matrix> {
+        // Every call site puts the big scanned side in the second pair
+        // (stage 1 scans the aggregates, rescans scan the bucket
+        // originals, the batch job scans the partition users), so the
+        // split axis is the `(cu, mu)` rows -> output column ranges.
+        let tiles = self.planned_tiles(cu.rows(), cu.cols());
+        let shapes_ok = ca.rows() == ma.rows()
+            && ca.cols() == ma.cols()
+            && cu.rows() == mu.rows()
+            && cu.cols() == mu.cols()
+            && ca.cols() == cu.cols();
+        if tiles <= 1 || !shapes_ok || ca.rows() == 0 {
+            return self.inner.cf_weights(ca, ma, cu, mu);
+        }
+        let bounds = tile_bounds(cu.rows(), tiles);
+        let parts = self.run_split(&bounds, |a, b| {
+            self.inner
+                .cf_weights(ca, ma, &cu.row_range(a, b), &mu.row_range(a, b))
+        })?;
+        let mut out = Matrix::zeros(ca.rows(), cu.rows());
+        for (&(a, b), part) in bounds.iter().zip(&parts) {
+            for r in 0..ca.rows() {
+                out.row_mut(r)[a..b].copy_from_slice(part.row(r));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Transparent: reports keep naming the compute backend.
+    fn name(&self) -> &'static str {
+        self.inner.name()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::backend::NativeBackend;
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, rows: usize, cols: usize) -> Matrix {
+        let mut m = Matrix::zeros(rows, cols);
+        for v in m.as_mut_slice() {
+            *v = rng.normal() as f32;
+        }
+        m
+    }
+
+    fn forced(tiles: usize, workers: usize) -> ParallelBackend {
+        ParallelBackend::with_policy(
+            Arc::new(NativeBackend),
+            Arc::new(WorkerPool::new(workers)),
+            SplitPolicy::Force(tiles),
+        )
+    }
+
+    #[test]
+    fn policy_parse_matrix() {
+        assert_eq!(SplitPolicy::parse("off"), SplitPolicy::Off);
+        assert_eq!(SplitPolicy::parse("0"), SplitPolicy::Off);
+        assert_eq!(SplitPolicy::parse("1"), SplitPolicy::Off);
+        assert_eq!(SplitPolicy::parse("auto"), SplitPolicy::Auto);
+        assert_eq!(SplitPolicy::parse(""), SplitPolicy::Auto);
+        assert_eq!(SplitPolicy::parse(" Auto "), SplitPolicy::Auto);
+        assert_eq!(SplitPolicy::parse("4"), SplitPolicy::Force(4));
+        assert_eq!(SplitPolicy::parse("bogus"), SplitPolicy::Auto);
+    }
+
+    #[test]
+    fn tile_bounds_are_contiguous_ascending_and_balanced() {
+        for (rows, tiles) in [(10, 3), (7, 7), (32, 1), (5, 2)] {
+            let b = tile_bounds(rows, tiles);
+            assert_eq!(b.len(), tiles);
+            assert_eq!(b[0].0, 0);
+            assert_eq!(b[tiles - 1].1, rows);
+            for w in b.windows(2) {
+                assert_eq!(w[0].1, w[1].0, "contiguous");
+            }
+            let (min, max) = b
+                .iter()
+                .map(|(a, e)| e - a)
+                .fold((usize::MAX, 0), |(lo, hi), l| (lo.min(l), hi.max(l)));
+            assert!(max - min <= 1, "balanced: {b:?}");
+        }
+    }
+
+    #[test]
+    fn auto_policy_keeps_small_blocks_serial() {
+        let be = ParallelBackend::with_policy(
+            Arc::new(NativeBackend),
+            Arc::new(WorkerPool::new(4)),
+            SplitPolicy::Auto,
+        );
+        assert_eq!(be.planned_tiles(40, 16), 1, "below elem threshold");
+        assert_eq!(be.planned_tiles(1, 4096), 1, "one row");
+        assert_eq!(be.planned_tiles(40, 2048), 1, "too few rows to cut");
+        assert!(be.planned_tiles(4000, 64) > 1, "large scan splits");
+        assert!(be.planned_tiles(4000, 64) <= 5, "capped by lanes");
+    }
+
+    #[test]
+    fn forced_split_dists_bit_identical_to_serial() {
+        let mut rng = Rng::new(11);
+        let q = rand_matrix(&mut rng, 9, 17);
+        let x = rand_matrix(&mut rng, 53, 17);
+        let serial = NativeBackend.knn_dists(&q, &x).unwrap();
+        for tiles in [2, 3, 7, 53, 100] {
+            let par = forced(tiles, 3).knn_dists(&q, &x).unwrap();
+            assert_eq!(par, serial, "tiles={tiles}");
+        }
+    }
+
+    #[test]
+    fn forced_split_topk_bit_identical_to_serial() {
+        let mut rng = Rng::new(12);
+        let q = rand_matrix(&mut rng, 6, 9);
+        // Duplicate rows force distance ties across tile boundaries.
+        let mut x = rand_matrix(&mut rng, 30, 9);
+        for r in 15..30 {
+            let dup: Vec<f32> = x.row(r - 15).to_vec();
+            x.row_mut(r).copy_from_slice(&dup);
+        }
+        let serial = NativeBackend.knn_block_topk(&q, &x, 4).unwrap();
+        for tiles in [2, 3, 5, 30] {
+            let par = forced(tiles, 2).knn_block_topk(&q, &x, 4).unwrap();
+            assert_eq!(par, serial, "tiles={tiles}");
+        }
+    }
+
+    #[test]
+    fn split_errors_deterministically_on_bad_shapes() {
+        let q = Matrix::zeros(4, 8);
+        let x = Matrix::zeros(64, 9); // cols mismatch
+        let be = forced(4, 2);
+        let par = be.knn_dists(&q, &x).unwrap_err().to_string();
+        let ser = NativeBackend.knn_dists(&q, &x).unwrap_err().to_string();
+        assert_eq!(par, ser, "delegated error must match serial");
+    }
+}

@@ -804,6 +804,11 @@ impl<M: ServableModel> ShardedServer<M> {
         // Stage 1: every shard answers the whole micro-batch in ONE
         // backend call (`answer_initial_block` assembles the batch
         // query block once per task), timing itself for the EWMA.
+        // That call may itself fan out across this same pool when the
+        // backend is a ParallelBackend — safe even with every worker
+        // occupied by shard tasks, because `run_tiles` has the calling
+        // task claim tiles itself (no nested-wait deadlock), and a big
+        // shard scan no longer serializes on its one worker.
         let rx1 = engine.pool().stream(n_shards, |s| {
             let shard = Arc::clone(&shards[s]);
             let queries = Arc::clone(&queries);

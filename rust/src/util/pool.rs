@@ -16,10 +16,82 @@
 //! starved forever by the cap itself (the cap is ≥ 1 and a finishing
 //! low task immediately frees its slot), though a continuously full
 //! regular queue does defer them — that is the intended priority.
+//!
+//! [`WorkerPool::run_tiles`] is the third primitive: a caller-
+//! participating parallel-for over tile indices, used by
+//! [`crate::runtime::ParallelBackend`] to split one large scoring scan
+//! across the pool. Its helper tasks ride the regular lane, so the low
+//! lane's reservation math is unchanged.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex};
+
+/// Shared state of one [`WorkerPool::run_tiles`] call.
+///
+/// The closure is type-erased into a raw trait-object pointer so helper
+/// tasks (which must be `'static`) can reach a caller-stack closure.
+/// Soundness rests on two invariants, both enforced in `work`/`run_tiles`:
+///
+/// 1. `f` is dereferenced only after `next.fetch_add` returned an index
+///    `< n` — a claim. Exactly `n` claims can ever succeed.
+/// 2. `run_tiles` returns only once `done == n`, and `done` is
+///    incremented exactly once per claim, *after* the closure call for
+///    that claim returned. So when the caller unblocks (and the borrow
+///    behind `f` may die), every dereference has already completed, and
+///    any still-queued helper task will fail its claim and exit without
+///    touching `f`.
+struct TileJob {
+    /// Next unclaimed tile index; claims at `>= n` are no-ops.
+    next: AtomicUsize,
+    /// Tiles fully processed (closure returned or panicked).
+    done: AtomicUsize,
+    n: usize,
+    panicked: AtomicUsize,
+    /// Erased `&F` where `F: Fn(usize) + Sync`, called via `call`.
+    f: *const (),
+    call: unsafe fn(*const (), usize),
+    done_mx: Mutex<()>,
+    done_cv: Condvar,
+}
+
+// SAFETY: the raw closure pointer is only dereferenced under the claim
+// protocol documented on the struct, and the closure it points to is
+// `Sync`, so concurrent calls from several threads are safe.
+unsafe impl Send for TileJob {}
+unsafe impl Sync for TileJob {}
+
+/// Monomorphized trampoline restoring the erased closure's type.
+///
+/// SAFETY (caller): `p` must point to a live `F`.
+unsafe fn call_tile<F: Fn(usize) + Sync>(p: *const (), i: usize) {
+    (*p.cast::<F>())(i)
+}
+
+impl TileJob {
+    /// Claim-and-run tiles until none remain. Runs on helper workers
+    /// *and* on the calling thread.
+    fn work(&self) {
+        loop {
+            let i = self.next.fetch_add(1, Ordering::SeqCst);
+            if i >= self.n {
+                return;
+            }
+            // SAFETY: `i < n` is a successful claim (invariant 1), so
+            // the caller is still blocked and the closure still live.
+            let r = catch_unwind(AssertUnwindSafe(|| unsafe { (self.call)(self.f, i) }));
+            if r.is_err() {
+                self.panicked.fetch_add(1, Ordering::SeqCst);
+            }
+            if self.done.fetch_add(1, Ordering::SeqCst) + 1 == self.n {
+                // Lock/unlock pairs with the caller's wait so the final
+                // notify cannot slip between its check and its sleep.
+                let _g = self.done_mx.lock().unwrap();
+                self.done_cv.notify_all();
+            }
+        }
+    }
+}
 
 /// One streamed task result: the task's index plus either its value or
 /// the panic payload (see [`WorkerPool::stream`]).
@@ -205,6 +277,65 @@ impl WorkerPool {
             let r = catch_unwind(AssertUnwindSafe(task));
             let _ = tx.send((index, r));
         });
+    }
+
+    /// Run `f(0..n)` across the pool *with the calling thread
+    /// participating*: tiles are claimed from a shared counter by the
+    /// caller and up to `min(n - 1, size)` helper tasks on the regular
+    /// lane, and the call returns once every tile has run.
+    ///
+    /// Because the caller claims tiles itself, progress never depends
+    /// on pool capacity: this is safe to call from *inside* a pool task
+    /// (the serving executor's shard tasks do exactly that when a
+    /// [`crate::runtime::ParallelBackend`] splits a scan) — even if
+    /// every worker is blocked inside its own `run_tiles`, each one's
+    /// calling thread drains its own tiles. Helper tasks that start
+    /// after all tiles are claimed exit immediately.
+    ///
+    /// Tiles may run in any order and on any thread, so `f` must be
+    /// pure per index (ours write disjoint per-tile result slots).
+    /// Panics in `f` are caught per tile and re-raised on the calling
+    /// thread after all tiles finish; the pool itself stays clean.
+    pub fn run_tiles<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        if n == 1 {
+            f(0);
+            return;
+        }
+        // Erase the caller-stack closure into a thin pointer plus a
+        // monomorphized trampoline. TileJob's claim protocol (see its
+        // doc) guarantees no dereference after this function returns,
+        // which is what makes handing a non-'static borrow to 'static
+        // helper tasks sound.
+        let job = Arc::new(TileJob {
+            next: AtomicUsize::new(0),
+            done: AtomicUsize::new(0),
+            n,
+            panicked: AtomicUsize::new(0),
+            f: (&f as *const F).cast::<()>(),
+            call: call_tile::<F>,
+            done_mx: Mutex::new(()),
+            done_cv: Condvar::new(),
+        });
+        for _ in 0..(n - 1).min(self.size) {
+            let j = Arc::clone(&job);
+            self.submit(move || j.work());
+        }
+        job.work();
+        let mut g = job.done_mx.lock().unwrap();
+        while job.done.load(Ordering::SeqCst) != n {
+            g = job.done_cv.wait(g).unwrap();
+        }
+        drop(g);
+        let p = job.panicked.load(Ordering::SeqCst);
+        if p > 0 {
+            panic!("{p} tile task(s) panicked");
+        }
     }
 
     /// [`WorkerPool::stream_into`] on the low-priority lane: the task
@@ -482,6 +613,93 @@ mod tests {
         }
         assert_eq!((ok, failed), (3, 1));
         pool.wait_idle(); // low-lane panics are caught by the stream wrapper
+    }
+
+    #[test]
+    fn run_tiles_covers_every_index_exactly_once() {
+        let pool = WorkerPool::new(4);
+        let hits: Vec<AtomicU64> = (0..37).map(|_| AtomicU64::new(0)).collect();
+        pool.run_tiles(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "tile {i}");
+        }
+    }
+
+    #[test]
+    fn run_tiles_handles_degenerate_counts() {
+        let pool = WorkerPool::new(2);
+        pool.run_tiles(0, |_| panic!("no tiles should run"));
+        let one = AtomicU64::new(0);
+        pool.run_tiles(1, |i| {
+            assert_eq!(i, 0);
+            one.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(one.load(Ordering::SeqCst), 1);
+        // More tiles than workers still covers everything.
+        let n = AtomicU64::new(0);
+        pool.run_tiles(17, |_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 17);
+    }
+
+    #[test]
+    fn run_tiles_makes_progress_from_inside_pool_tasks() {
+        // Every worker enters a task that itself calls run_tiles; with
+        // no caller participation this would deadlock (all workers
+        // blocked, helper tasks never scheduled). The caller-claims
+        // protocol must complete all of them.
+        let pool = Arc::new(WorkerPool::new(2));
+        let total = Arc::new(AtomicU64::new(0));
+        let p = Arc::clone(&pool);
+        pool.scope(4, |_| {
+            let pool = Arc::clone(&p);
+            let total = Arc::clone(&total);
+            move || {
+                let local = AtomicU64::new(0);
+                pool.run_tiles(8, |i| {
+                    local.fetch_add(i as u64 + 1, Ordering::SeqCst);
+                });
+                total.fetch_add(local.load(Ordering::SeqCst), Ordering::SeqCst);
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 36);
+    }
+
+    #[test]
+    #[should_panic(expected = "tile task(s) panicked")]
+    fn run_tiles_reraises_tile_panics_on_the_caller() {
+        let pool = WorkerPool::new(2);
+        pool.run_tiles(6, |i| {
+            if i == 3 {
+                panic!("injected tile fault");
+            }
+        });
+    }
+
+    #[test]
+    fn run_tiles_panic_leaves_pool_usable() {
+        let pool = WorkerPool::new(2);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_tiles(4, |i| {
+                if i % 2 == 0 {
+                    panic!("injected");
+                }
+            });
+        }));
+        assert!(r.is_err());
+        // Tile panics are caught per tile — the pool's own accounting
+        // never sees them, so later scopes work.
+        let count = Arc::new(AtomicU64::new(0));
+        pool.scope(5, |_| {
+            let c = Arc::clone(&count);
+            move || {
+                c.fetch_add(1, Ordering::Relaxed);
+            }
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 5);
     }
 
     #[test]

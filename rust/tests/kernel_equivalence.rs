@@ -13,10 +13,14 @@
 //! `AML_KERNEL=scalar` (where every diff is exactly zero and the
 //! forced-scalar pin at the bottom activates).
 
+use std::sync::Arc;
+
 use accurateml::data::matrix::{sq_dist, Matrix};
 use accurateml::model::kmeans::argmin_row;
 use accurateml::runtime::backend::{pearson_pair, NativeBackend, ScalarBackend, ScoreBackend};
 use accurateml::runtime::kernels::{self, KernelMode};
+use accurateml::runtime::parallel::{ParallelBackend, SplitPolicy};
+use accurateml::util::pool::WorkerPool;
 use accurateml::util::rng::Rng;
 
 const TOL: f32 = 1e-4;
@@ -293,6 +297,146 @@ fn degenerate_shapes_agree_through_the_backend_api() {
     let empty = Matrix::zeros(0, 9);
     assert_eq!(NativeBackend.knn_dists(&empty, &x).unwrap().rows(), 0);
     assert!(NativeBackend.knn_block_topk(&q, &empty, 3).unwrap().iter().all(|c| c.is_empty()));
+}
+
+// ---------------------------------------------------------------------------
+// Thread-count invariance: the intra-block parallel scoring layer.
+//
+// ParallelBackend must be bit-identical to its inner backend for every
+// pool size and split mode — the tile-ordered merge contract of
+// rust/src/runtime/parallel.rs. Pool sizes {1, 2, 7} cover
+// caller-only, minimal, and oversubscribed fan-out; policies cover
+// split forced off, adaptive, and forced on (including more tiles than
+// rows). SHAPES already includes the degenerate cases the contract
+// calls out: empty blocks, single rows, and rows < tile count.
+// ---------------------------------------------------------------------------
+
+/// Pool sizes the invariance matrix pins.
+const POOL_SIZES: &[usize] = &[1, 2, 7];
+
+fn split_policies() -> Vec<SplitPolicy> {
+    vec![
+        SplitPolicy::Off,
+        SplitPolicy::Auto,
+        SplitPolicy::Force(2),
+        SplitPolicy::Force(5),
+    ]
+}
+
+fn parallel_native(workers: usize, policy: SplitPolicy) -> ParallelBackend {
+    ParallelBackend::with_policy(
+        Arc::new(NativeBackend),
+        Arc::new(WorkerPool::new(workers)),
+        policy,
+    )
+}
+
+#[test]
+fn parallel_dists_bit_identical_across_pool_sizes_and_split_modes() {
+    for &(nq, nx, d) in SHAPES {
+        let q = rand_matrix(nq, d, 301 + nq as u64);
+        let x = rand_matrix(nx, d, 401 + nx as u64);
+        let serial = NativeBackend.knn_dists(&q, &x).unwrap();
+        for &workers in POOL_SIZES {
+            for policy in split_policies() {
+                let par = parallel_native(workers, policy);
+                assert_eq!(
+                    par.knn_dists(&q, &x).unwrap(),
+                    serial,
+                    "({nq},{nx},{d}) workers={workers} policy={policy:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_topk_bit_identical_including_cross_tile_ties() {
+    // Duplicate x rows force exact distance ties that straddle tile
+    // boundaries — the case where a merge with the wrong tie order
+    // would keep the wrong ids.
+    let d = 13;
+    let q = rand_matrix(7, d, 501);
+    let base = rand_matrix(15, d, 502);
+    let mut x = Matrix::zeros(45, d);
+    for r in 0..45 {
+        x.row_mut(r).copy_from_slice(base.row(r % 15));
+    }
+    for k in [1usize, 4, 16, 50] {
+        let serial = NativeBackend.knn_block_topk(&q, &x, k).unwrap();
+        for &workers in POOL_SIZES {
+            for policy in split_policies() {
+                let par = parallel_native(workers, policy);
+                let got = par.knn_block_topk(&q, &x, k).unwrap();
+                assert_eq!(got, serial, "k={k} workers={workers} policy={policy:?}");
+                // The `_into` entry point shares the merge.
+                let mut into = vec![vec![(9.9f32, 9u32)]; 3];
+                par.knn_block_topk_into(&q, &x, k, &mut into).unwrap();
+                assert_eq!(into, serial, "_into k={k} workers={workers}");
+            }
+        }
+    }
+    // Degenerate shapes through the parallel path as well.
+    for &(nq, nx, d) in SHAPES {
+        let q = rand_matrix(nq, d, 601 + nq as u64);
+        let x = rand_matrix(nx, d, 701 + nx as u64);
+        let serial = NativeBackend.knn_block_topk(&q, &x, 3).unwrap();
+        let par = parallel_native(2, SplitPolicy::Force(5));
+        assert_eq!(par.knn_block_topk(&q, &x, 3).unwrap(), serial, "({nq},{nx},{d})");
+    }
+}
+
+#[test]
+fn parallel_cf_weights_bit_identical_across_pool_sizes_and_split_modes() {
+    let mk = |rows: usize, m: usize, seed: u64| {
+        let mut rng = Rng::new(seed);
+        let mut c = Matrix::zeros(rows, m);
+        let mut mask = Matrix::zeros(rows, m);
+        for r in 0..rows {
+            for i in 0..m {
+                if rng.chance(0.4) {
+                    mask.set(r, i, 1.0);
+                    c.set(r, i, rng.normal() as f32);
+                }
+            }
+        }
+        (c, mask)
+    };
+    for &(na, nu, m) in &[(1usize, 1usize, 6usize), (3, 2, 9), (4, 11, 33), (6, 40, 64)] {
+        let (ca, ma) = mk(na, m, 801 + m as u64);
+        let (cu, mu) = mk(nu, m, 901 + m as u64);
+        let serial = NativeBackend.cf_weights(&ca, &ma, &cu, &mu).unwrap();
+        for &workers in POOL_SIZES {
+            for policy in split_policies() {
+                let par = parallel_native(workers, policy);
+                assert_eq!(
+                    par.cf_weights(&ca, &ma, &cu, &mu).unwrap(),
+                    serial,
+                    "({na},{nu},{m}) workers={workers} policy={policy:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_wrapper_is_transparent_over_the_scalar_backend() {
+    // The wrapper must not care which backend it splits: over the
+    // forced-scalar reference it reproduces *those* bits, and reports
+    // keep the inner backend's name.
+    let q = rand_matrix(5, 11, 1001);
+    let x = rand_matrix(37, 11, 1002);
+    let par = ParallelBackend::with_policy(
+        Arc::new(ScalarBackend),
+        Arc::new(WorkerPool::new(3)),
+        SplitPolicy::Force(4),
+    );
+    assert_eq!(par.name(), ScalarBackend.name());
+    assert_eq!(par.knn_dists(&q, &x).unwrap(), ScalarBackend.knn_dists(&q, &x).unwrap());
+    assert_eq!(
+        par.knn_block_topk(&q, &x, 6).unwrap(),
+        ScalarBackend.knn_block_topk(&q, &x, 6).unwrap()
+    );
 }
 
 #[test]
