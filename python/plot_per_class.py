@@ -1,0 +1,188 @@
+"""Render the per-class anytime curves as a small-multiples SVG.
+
+Input is `reports/per_class.csv`, written by `cargo bench --bench
+serving` (one row per (app, class, stage) curve point of the batched
+replay). Output is `reports/per_class.svg`: one panel per app, one
+polyline per query class, x = mean wall seconds at that stage, y = mean
+accuracy. Stage points with no accuracy metric (the CSV writes `-`)
+are skipped; a class whose every point lacks accuracy is dropped and
+noted in the footer.
+
+Stdlib only — the SVG is assembled by hand so the script runs in the
+bare CI image (no matplotlib).
+
+Usage:
+    python3 python/plot_per_class.py [--csv reports/per_class.csv]
+                                     [--out reports/per_class.svg]
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+from collections import defaultdict
+
+PANEL_W = 320
+PANEL_H = 220
+MARGIN = 48
+GAP = 36
+PALETTE = [
+    "#1f77b4",
+    "#d62728",
+    "#2ca02c",
+    "#9467bd",
+    "#ff7f0e",
+    "#8c564b",
+    "#17becf",
+    "#7f7f7f",
+]
+
+
+def load_curves(path):
+    """Return {app: {class: [(wall_s, accuracy, stage)]}} sorted by wall_s."""
+    curves = defaultdict(lambda: defaultdict(list))
+    dropped = []
+    with open(path, newline="") as fh:
+        for row in csv.DictReader(fh):
+            acc = row["mean_accuracy"]
+            if acc == "-" or acc == "":
+                dropped.append((row["app"], row["class"], row["stage"]))
+                continue
+            curves[row["app"]][row["class"]].append(
+                (float(row["mean_wall_s"]), float(acc), row["stage"])
+            )
+    for classes in curves.values():
+        for pts in classes.values():
+            pts.sort(key=lambda p: p[0])
+    return curves, dropped
+
+
+def nice_ticks(lo, hi, n=4):
+    if hi <= lo:
+        hi = lo + 1e-9
+    step = (hi - lo) / n
+    return [lo + i * step for i in range(n + 1)]
+
+
+def fmt(v):
+    a = abs(v)
+    if a != 0 and (a < 1e-3 or a >= 1e4):
+        return f"{v:.1e}"
+    return f"{v:.4g}"
+
+
+def panel_svg(x0, y0, app, classes):
+    """One panel: axes, per-class polylines, stage markers, legend."""
+    xs = [p[0] for pts in classes.values() for p in pts]
+    ys = [p[1] for pts in classes.values() for p in pts]
+    xlo, xhi = min(xs), max(xs)
+    ylo, yhi = min(ys), max(ys)
+    if xhi <= xlo:
+        xhi = xlo + 1e-9
+    if yhi <= ylo:
+        yhi = ylo + 1e-9
+    pad_y = 0.06 * (yhi - ylo)
+    ylo, yhi = ylo - pad_y, yhi + pad_y
+
+    def sx(v):
+        return x0 + (v - xlo) / (xhi - xlo) * PANEL_W
+
+    def sy(v):
+        return y0 + PANEL_H - (v - ylo) / (yhi - ylo) * PANEL_H
+
+    out = [
+        f'<rect x="{x0}" y="{y0}" width="{PANEL_W}" height="{PANEL_H}" '
+        'fill="none" stroke="#444"/>',
+        f'<text x="{x0 + PANEL_W / 2}" y="{y0 - 10}" text-anchor="middle" '
+        f'font-size="14" font-weight="bold">{app}</text>',
+    ]
+    for t in nice_ticks(xlo, xhi):
+        out.append(
+            f'<line x1="{sx(t):.1f}" y1="{y0 + PANEL_H}" x2="{sx(t):.1f}" '
+            f'y2="{y0 + PANEL_H + 4}" stroke="#444"/>'
+            f'<text x="{sx(t):.1f}" y="{y0 + PANEL_H + 16}" '
+            f'text-anchor="middle" font-size="9">{fmt(t)}</text>'
+        )
+    for t in nice_ticks(ylo, yhi):
+        out.append(
+            f'<line x1="{x0 - 4}" y1="{sy(t):.1f}" x2="{x0}" y2="{sy(t):.1f}" '
+            'stroke="#444"/>'
+            f'<text x="{x0 - 6}" y="{sy(t):.1f}" text-anchor="end" '
+            f'dominant-baseline="middle" font-size="9">{fmt(t)}</text>'
+        )
+    out.append(
+        f'<text x="{x0 + PANEL_W / 2}" y="{y0 + PANEL_H + 32}" '
+        'text-anchor="middle" font-size="10">mean wall s</text>'
+    )
+    out.append(
+        f'<text x="{x0 - 38}" y="{y0 + PANEL_H / 2}" text-anchor="middle" '
+        f'font-size="10" transform="rotate(-90 {x0 - 38} {y0 + PANEL_H / 2})">'
+        "mean accuracy</text>"
+    )
+    for ci, (cls, pts) in enumerate(sorted(classes.items())):
+        color = PALETTE[ci % len(PALETTE)]
+        path = " ".join(f"{sx(w):.1f},{sy(a):.1f}" for w, a, _ in pts)
+        out.append(
+            f'<polyline points="{path}" fill="none" stroke="{color}" '
+            'stroke-width="1.6"/>'
+        )
+        for w, a, stage in pts:
+            out.append(
+                f'<circle cx="{sx(w):.1f}" cy="{sy(a):.1f}" r="2.6" '
+                f'fill="{color}"><title>{cls} {stage}: wall={fmt(w)}s '
+                f"acc={fmt(a)}</title></circle>"
+            )
+        ly = y0 + 12 + 13 * ci
+        out.append(
+            f'<line x1="{x0 + 8}" y1="{ly}" x2="{x0 + 26}" y2="{ly}" '
+            f'stroke="{color}" stroke-width="1.6"/>'
+            f'<text x="{x0 + 30}" y="{ly + 3}" font-size="9">{cls}</text>'
+        )
+    return out
+
+
+def render(curves, dropped):
+    apps = sorted(curves)
+    width = MARGIN * 2 + len(apps) * PANEL_W + (len(apps) - 1) * GAP
+    height = MARGIN * 2 + PANEL_H + 40
+    body = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{width}" '
+        f'height="{height}" font-family="sans-serif">',
+        f'<rect width="{width}" height="{height}" fill="white"/>',
+    ]
+    for i, app in enumerate(apps):
+        x0 = MARGIN + i * (PANEL_W + GAP)
+        body.extend(panel_svg(x0, MARGIN, app, curves[app]))
+    if dropped:
+        body.append(
+            f'<text x="{MARGIN}" y="{height - 8}" font-size="9" fill="#666">'
+            f"{len(dropped)} stage point(s) without an accuracy metric "
+            "omitted</text>"
+        )
+    body.append("</svg>")
+    return "\n".join(body)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--csv", default="reports/per_class.csv")
+    ap.add_argument("--out", default="reports/per_class.svg")
+    args = ap.parse_args(argv)
+    try:
+        curves, dropped = load_curves(args.csv)
+    except FileNotFoundError:
+        sys.exit(
+            f"{args.csv} not found — run `cargo bench --bench serving` first"
+        )
+    if not curves:
+        sys.exit(f"{args.csv} has no plottable rows")
+    svg = render(curves, dropped)
+    with open(args.out, "w") as fh:
+        fh.write(svg)
+    n_classes = sum(len(c) for c in curves.values())
+    print(f"{args.out}: {len(curves)} app panel(s), {n_classes} class curve(s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,7 +19,13 @@
 //! operand+result traffic and Melem/s of output elements. Results land
 //! in the CSV report dir *and* in `BENCH_hotpath.json` (keys: `gbps`,
 //! `melems_per_s`, `simd_speedup`, `split_speedup`, `pjrt`,
-//! `kernel_dispatch` — CI asserts them). Under `AML_KERNEL=scalar`
+//! `kernel_dispatch` — CI asserts them). The `stage2_rescan` class
+//! additionally compares the two refine paths end to end —
+//! `gather_p50_s` (copy the bucket's rows out of a bucket-major base,
+//! then score) vs `slice_p50_s` (score the contiguous range in place
+//! via `knn_dists_rows`) — and reports `slice_speedup` plus a
+//! leg-specific `slice_pjrt` marker (PJRT has no slice-native entry
+//! point; its default `*_rows` range-copies). Under `AML_KERNEL=scalar`
 //! both kernel legs run the scalar path and `kernel_dispatch`
 //! documents why that speedup is ~1; `split_note` likewise documents
 //! why `split_speedup` can read ~1 on smoke shapes or single-core
@@ -97,6 +103,17 @@ struct Class {
     scan_rows: usize,
     scan_cols: usize,
     run: Box<dyn Fn(&dyn ScoreBackend)>,
+    /// Optional rescan-path comparison (stage-2 classes): the gather
+    /// leg copies the bucket's rows out of a bucket-major base before
+    /// scoring (the pre-PR-9 refine path, member copy included), the
+    /// slice leg scores the same contiguous row range in place via the
+    /// `*_rows` backend entry points.
+    rescan: Option<RescanLegs>,
+}
+
+struct RescanLegs {
+    gather: Box<dyn Fn(&dyn ScoreBackend)>,
+    slice: Box<dyn Fn(&dyn ScoreBackend)>,
 }
 
 /// The per-class `pjrt` artifact marker: always emitted, so CI greps
@@ -129,12 +146,25 @@ fn classes() -> Vec<Class> {
         run: Box::new(move |be| {
             be.knn_dists(&q, &c).unwrap();
         }),
+        rescan: None,
     });
 
-    // Stage 2: member queries x one gathered bucket-group block.
+    // Stage 2: member queries x one bucket-group block. The kernel leg
+    // scores a pre-gathered block; the rescan legs compare the two
+    // refine paths end to end — gather (copy the bucket's rows out of
+    // a bucket-major base, then score) vs slice (score the contiguous
+    // base range in place).
     let (nq, nb, d) = if SMOKE { (16, 64, 16) } else { (256, 640, 64) };
     let q = rand_matrix(&mut rng, nq, d);
     let b = rand_matrix(&mut rng, nb, d);
+    // The bucket sits mid-base so the slice leg exercises a genuine
+    // interior row range, not a degenerate whole-matrix view.
+    let base = rand_matrix(&mut rng, nb * 2, d);
+    let r0 = nb / 2;
+    let qg = q.clone();
+    let qs = q.clone();
+    let base_s = base.clone();
+    let scratch = std::cell::RefCell::new(Matrix::zeros(nb, d));
     v.push(Class {
         name: "stage2_rescan",
         shape: format!("{nq}x{nb} d{d}"),
@@ -146,6 +176,18 @@ fn classes() -> Vec<Class> {
         scan_cols: d,
         run: Box::new(move |be| {
             be.knn_dists(&q, &b).unwrap();
+        }),
+        rescan: Some(RescanLegs {
+            gather: Box::new(move |be| {
+                let mut blk = scratch.borrow_mut();
+                for i in 0..nb {
+                    blk.row_mut(i).copy_from_slice(base.row(r0 + i));
+                }
+                be.knn_dists(&qg, &blk).unwrap();
+            }),
+            slice: Box::new(move |be| {
+                be.knn_dists_rows(&qs, &base_s, r0, r0 + nb).unwrap();
+            }),
         }),
     });
 
@@ -166,6 +208,7 @@ fn classes() -> Vec<Class> {
         run: Box::new(move |be| {
             be.knn_block_topk(&q, &x, 5).unwrap();
         }),
+        rescan: None,
     });
 
     // CF weights: active users x partition users over the item dim.
@@ -184,13 +227,18 @@ fn classes() -> Vec<Class> {
         run: Box::new(move |be| {
             be.cf_weights(&ca, &ma, &cu, &mu).unwrap();
         }),
+        rescan: None,
     });
 
     v
 }
 
 fn p50(class: &Class, be: &dyn ScoreBackend) -> f64 {
-    bench_fn(|| (class.run)(be), 1, if SMOKE { 2 } else { 5 }, budget()).p50
+    p50_fn(&*class.run, be)
+}
+
+fn p50_fn(run: &dyn Fn(&dyn ScoreBackend), be: &dyn ScoreBackend) -> f64 {
+    bench_fn(|| run(be), 1, if SMOKE { 2 } else { 5 }, budget()).p50
 }
 
 fn main() {
@@ -263,7 +311,7 @@ fn main() {
             f(gbps, 2),
             f(melems, 1),
         ]);
-        rows.push(Json::obj(vec![
+        let mut row = vec![
             ("class", class.name.into()),
             ("shape", class.shape.as_str().into()),
             ("scalar_p50_s", scalar_p50.into()),
@@ -277,7 +325,38 @@ fn main() {
             ("gbps", gbps.into()),
             ("melems_per_s", melems.into()),
             ("gflops", (class.flops / simd_p50 / 1e9).into()),
-        ]));
+        ];
+        if let Some(legs) = &class.rescan {
+            // The refine-path comparison on the dispatched kernels:
+            // gather includes the member copy the slice path deletes.
+            let gather_p50 = p50_fn(&*legs.gather, &NativeBackend);
+            let slice_p50 = p50_fn(&*legs.slice, &NativeBackend);
+            row.push(("gather_p50_s", gather_p50.into()));
+            row.push(("slice_p50_s", slice_p50.into()));
+            row.push(("slice_speedup", (gather_p50 / slice_p50).into()));
+            // The slice leg carries its own marker rather than
+            // inheriting the class-level one: PJRT has no slice-native
+            // entry point — its default `*_rows` falls back to a range
+            // copy + the dense call, so "eligible" would overstate it.
+            row.push((
+                "slice_pjrt",
+                "skipped: no slice-native artifact (default *_rows range-copies)".into(),
+            ));
+            // Table row: gather leg under "scalar p50", slice leg under
+            // "simd p50", their ratio under "speedup".
+            t.row(vec![
+                format!("{}:slice", class.name),
+                class.shape.clone(),
+                fmt_duration(gather_p50),
+                fmt_duration(slice_p50),
+                f(gather_p50 / slice_p50, 2),
+                "-".into(),
+                "-".into(),
+                f(class.bytes / slice_p50 / 1e9, 2),
+                f(class.elems / slice_p50 / 1e6, 1),
+            ]);
+        }
+        rows.push(Json::obj(row));
     }
 
     // PJRT legs (when AOT artifacts exist) keep the cross-backend view.

@@ -20,7 +20,12 @@
 //! of queries refined per shard through the per-query `refine` loop
 //! (host-side scalar rescans) and through `refine_block` (bucket-
 //! grouped backend rescans); the ratio lands in the JSON as
-//! `refine_batched_speedup` per app.
+//! `refine_batched_speedup` per app. `refine_block` is then re-timed
+//! with the shard pinned to each rescan path — `refine_gather_s` (copy
+//! every rescanned bucket's rows before scoring, the pre-bucket-major
+//! behavior) vs `refine_slice_s` (score the bucket-major row ranges in
+//! place) — and `refine_slice_speedup` records the end-to-end
+//! refine-path delta.
 //!
 //! Each app additionally runs a **live-refresh replay**: 25% of the
 //! training data is held back, ingested as deltas every quarter of the
@@ -61,7 +66,7 @@ use std::sync::Arc;
 use accurateml::approx::algorithm1::refine_budget;
 use accurateml::coordinator::{Scale, Workbench};
 use accurateml::mapreduce::engine::Engine;
-use accurateml::model::ServableModel;
+use accurateml::model::{RescanPath, ServableModel};
 use accurateml::refresh::Refreshable;
 use accurateml::serve::loadgen::{run_scenario, run_sweep};
 use accurateml::serve::{
@@ -107,19 +112,38 @@ fn measure<M: ServableModel>(
     }
 }
 
-/// Stage-2 scalar-vs-batched: refine one micro-batch per shard through
-/// the per-query `refine` loop (host-side scalar rescans) and through
-/// `refine_block` (bucket-grouped backend rescans). Returns
-/// (scalar_s, batched_s) summed over shards and reps.
+/// The stage-2 measurements of one app: the scalar-vs-batched split
+/// plus the refine-path delta (`refine_block` with the shard pinned to
+/// each [`RescanPath`] in turn — gather copies every rescanned bucket's
+/// rows, slice scores the bucket-major ranges in place).
+struct RefineMeasure {
+    scalar_s: f64,
+    batched_s: f64,
+    gather_s: f64,
+    slice_s: f64,
+}
+
+/// Stage-2 measurement: refine one micro-batch per shard through the
+/// per-query `refine` loop (host-side scalar rescans) and through
+/// `refine_block` (bucket-grouped backend rescans), then re-time
+/// `refine_block` under each rescan path. Seconds are summed over
+/// shards and reps. Needs the shard `Arc`s unshared (called before the
+/// server/load-gen clones are made) so the rescan path can be flipped
+/// in place; the env-selected default path is restored afterwards.
 fn measure_refine<M: ServableModel>(
-    shards: &[Arc<M>],
+    shards: &mut [Arc<M>],
     queries: &[M::Query],
     eps: f64,
     reps: usize,
-) -> (f64, f64) {
+) -> RefineMeasure {
     let refs: Vec<&M::Query> = queries.iter().collect();
-    let (mut scalar_s, mut batched_s) = (0.0, 0.0);
-    for shard in shards {
+    let mut m = RefineMeasure {
+        scalar_s: 0.0,
+        batched_s: 0.0,
+        gather_s: 0.0,
+        slice_s: 0.0,
+    };
+    for shard in shards.iter_mut() {
         let initials = shard.answer_initial_block(&refs);
         let budget = refine_budget(shard.n_buckets(), eps);
         let budgets = vec![budget; refs.len()];
@@ -128,13 +152,29 @@ fn measure_refine<M: ServableModel>(
             for (q, init) in refs.iter().zip(&initials) {
                 std::hint::black_box(shard.refine(q, init, budget));
             }
-            scalar_s += sw.elapsed_s();
+            m.scalar_s += sw.elapsed_s();
             let sw = Stopwatch::new();
             std::hint::black_box(shard.refine_block(&refs, &initials, &budgets));
-            batched_s += sw.elapsed_s();
+            m.batched_s += sw.elapsed_s();
         }
+        for (path, acc) in [
+            (RescanPath::Gather, &mut m.gather_s),
+            (RescanPath::Slice, &mut m.slice_s),
+        ] {
+            Arc::get_mut(shard)
+                .expect("refine bench needs unshared shard Arcs")
+                .set_rescan_path(path);
+            for _ in 0..reps {
+                let sw = Stopwatch::new();
+                std::hint::black_box(shard.refine_block(&refs, &initials, &budgets));
+                *acc += sw.elapsed_s();
+            }
+        }
+        Arc::get_mut(shard)
+            .expect("refine bench needs unshared shard Arcs")
+            .set_rescan_path(RescanPath::from_env());
     }
-    (scalar_s, batched_s)
+    m
 }
 
 fn push_row(t: &mut Table, app: &str, mode: &str, m: &Measured) {
@@ -341,7 +381,7 @@ fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
     apps_json: &mut Vec<Json>,
     cfgs: &Cfgs,
     app: &str,
-    refine: (f64, f64),
+    refine: &RefineMeasure,
     refresh: &ServeReport,
     curves: Json,
     mut replay: F,
@@ -351,7 +391,6 @@ fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
     push_row(t, app, "per-query", &per_query);
     push_row(t, app, "batched", &batched);
     per_class_rows(pc, app, &batched.report);
-    let (refine_scalar_s, refine_batched_s) = refine;
     let mut pairs: Vec<(&str, Json)> = vec![
         ("app", app.into()),
         ("per_query", run_json(&per_query, false)),
@@ -360,11 +399,17 @@ fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
             "batched_speedup",
             (batched.qps / per_query.qps.max(1e-9)).into(),
         ),
-        ("refine_scalar_s", refine_scalar_s.into()),
-        ("refine_batched_s", refine_batched_s.into()),
+        ("refine_scalar_s", refine.scalar_s.into()),
+        ("refine_batched_s", refine.batched_s.into()),
         (
             "refine_batched_speedup",
-            (refine_scalar_s / refine_batched_s.max(1e-9)).into(),
+            (refine.scalar_s / refine.batched_s.max(1e-9)).into(),
+        ),
+        ("refine_gather_s", refine.gather_s.into()),
+        ("refine_slice_s", refine.slice_s.into()),
+        (
+            "refine_slice_speedup",
+            (refine.gather_s / refine.slice_s.max(1e-9)).into(),
         ),
         ("refresh", refresh_json(refresh)),
         ("per_class", per_class_json(&batched.report)),
@@ -376,10 +421,14 @@ fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
         pairs.push(("cached", run_json(&cached, true)));
     }
     println!(
-        "{app} stage-2 refinement: scalar {:.4}s vs batched {:.4}s ({:.2}x)",
-        refine_scalar_s,
-        refine_batched_s,
-        refine_scalar_s / refine_batched_s.max(1e-9)
+        "{app} stage-2 refinement: scalar {:.4}s vs batched {:.4}s ({:.2}x); \
+rescan gather {:.4}s vs slice {:.4}s ({:.2}x)",
+        refine.scalar_s,
+        refine.batched_s,
+        refine.scalar_s / refine.batched_s.max(1e-9),
+        refine.gather_s,
+        refine.slice_s,
+        refine.gather_s / refine.slice_s.max(1e-9)
     );
     println!(
         "{app} live refresh: {} swap(s) -> generation {}, p99 during rebuild {:.3}ms \
@@ -468,9 +517,9 @@ fn main() {
     // kNN: build shards untimed, measure stage-2 scalar-vs-batched on
     // them, then replay under each config (the refresh replay builds
     // its own base shards over the non-reserve data).
-    let shards = wb.knn_shards(10.0, 5).expect("knn shards");
+    let mut shards = wb.knn_shards(10.0, 5).expect("knn shards");
     let refine_queries = query_log::knn_query_log(&wb.knn_data, refine_batch, wb.config.seed);
-    let refine = measure_refine(&shards, &refine_queries, refine_eps, refine_reps);
+    let refine = measure_refine(&mut shards, &refine_queries, refine_eps, refine_reps);
     let refresh = {
         let (session, deltas) = wb
             .knn_refresh_session(5, 10.0, &refresh_cfg, delta_frac)
@@ -492,16 +541,16 @@ fn main() {
         wb.knn_data.test.rows(),
     );
     let server = ShardedServer::new(shards).expect("server");
-    bench_app(&mut t, &mut pc, &mut apps_json, &cfgs, "knn", refine, &refresh, curves, |cfg| {
+    bench_app(&mut t, &mut pc, &mut apps_json, &cfgs, "knn", &refine, &refresh, curves, |cfg| {
         let queries = query_log::knn_query_log(&wb.knn_data, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });
     drop(server);
 
     // CF.
-    let shards = wb.cf_shards(10.0).expect("cf shards");
+    let mut shards = wb.cf_shards(10.0).expect("cf shards");
     let refine_queries = query_log::cf_query_log(&wb.cf_split, refine_batch, wb.config.seed);
-    let refine = measure_refine(&shards, &refine_queries, refine_eps, refine_reps);
+    let refine = measure_refine(&mut shards, &refine_queries, refine_eps, refine_reps);
     let refresh = {
         let (session, deltas) = wb
             .cf_refresh_session(10.0, &refresh_cfg, delta_frac)
@@ -523,16 +572,16 @@ fn main() {
         wb.cf_split.test.len(),
     );
     let server = ShardedServer::new(shards).expect("server");
-    bench_app(&mut t, &mut pc, &mut apps_json, &cfgs, "cf", refine, &refresh, curves, |cfg| {
+    bench_app(&mut t, &mut pc, &mut apps_json, &cfgs, "cf", &refine, &refresh, curves, |cfg| {
         let queries = query_log::cf_query_log(&wb.cf_split, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });
     drop(server);
 
     // k-means (training + shard build untimed).
-    let (shards, points) = wb.kmeans_shards(20.0).expect("kmeans shards");
+    let (mut shards, points) = wb.kmeans_shards(20.0).expect("kmeans shards");
     let refine_queries = query_log::kmeans_query_log(&points, refine_batch, wb.config.seed);
-    let refine = measure_refine(&shards, &refine_queries, refine_eps, refine_reps);
+    let refine = measure_refine(&mut shards, &refine_queries, refine_eps, refine_reps);
     let refresh = {
         let (session, pts, deltas) = wb
             .kmeans_refresh_session(20.0, &refresh_cfg, delta_frac)
@@ -554,7 +603,7 @@ fn main() {
         points.rows(),
     );
     let server = ShardedServer::new(shards).expect("server");
-    bench_app(&mut t, &mut pc, &mut apps_json, &cfgs, "kmeans", refine, &refresh, curves, |cfg| {
+    bench_app(&mut t, &mut pc, &mut apps_json, &cfgs, "kmeans", &refine, &refresh, curves, |cfg| {
         let queries = query_log::kmeans_query_log(&points, n_queries, wb.config.seed);
         measure(&server, &wb.engine, queries, cfg)
     });

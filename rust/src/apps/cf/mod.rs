@@ -373,11 +373,11 @@ impl CfJob {
                 // blocks.
                 let self_id = self.split.active_users[ai] as usize;
                 for (j, &b) in plans[local].iter().enumerate() {
-                    let wrow = blocks[b].as_ref().expect("scored bucket group");
-                    let wrow = wrow.row(grouped.slots[local][j]);
+                    let block = blocks[b].as_ref().expect("scored bucket group");
+                    let (head, tail) = block.parts(grouped.slots[local][j]);
                     carry
                         .model
-                        .for_each_original_weighted(b, wrow, Some(self_id), |v, w| {
+                        .for_each_original_weighted(b, head, tail, Some(self_id), |v, w| {
                             let vmean = self.user_means[v];
                             let mut deviations = Vec::new();
                             for &i in witems {

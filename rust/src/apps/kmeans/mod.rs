@@ -31,6 +31,7 @@ use std::sync::Arc;
 use crate::approx::algorithm1::{stage2_selection, RefineOrder};
 use crate::approx::sampling::sample_rows;
 use crate::approx::ProcessingMode;
+use crate::data::bucket_major::{BucketLayout, BucketRows};
 use crate::data::matrix::{sq_dist, Matrix};
 use crate::data::points::{split_rows, RowRange};
 use crate::error::Result;
@@ -38,6 +39,7 @@ use crate::lsh::bucketizer::Grouping;
 use crate::mapreduce::engine::{Engine, MapReduceJob, TwoStageJob};
 use crate::mapreduce::metrics::{JobMetrics, TaskMetrics};
 use crate::model::kmeans::{argmin_row, build_partition_agg, nearest_centroid};
+use crate::model::RescanPath;
 use crate::runtime::backend::{GatherBuf, NativeBackend, ScoreBackend};
 use crate::util::rng::Rng;
 use crate::util::timer::Stopwatch;
@@ -92,6 +94,14 @@ struct PartitionAgg {
     centers: Matrix,
     /// Bucket → local member rows.
     index: Vec<Vec<u32>>,
+    /// Bucket-major permutation of the partition's member rows: bucket
+    /// `b`'s points occupy base rows `layout.base_range(b)`, so a
+    /// stage-2 re-assignment scores each refined bucket as a contiguous
+    /// slice instead of gathering its members every iteration. Built
+    /// once alongside the aggregation; the copy amortizes across all
+    /// Lloyd rounds.
+    layout: BucketLayout,
+    rows: BucketRows,
 }
 
 /// One Lloyd iteration as a MapReduce job.
@@ -106,6 +116,9 @@ struct KmeansIterJob {
     /// scalar stage-1 assignment stays host-side — it runs once per
     /// aggregated point, not per original).
     backend: Arc<dyn ScoreBackend>,
+    /// Stage-2 rescan path: score bucket-major slices in place, or
+    /// gather member blocks (the bit-identity reference).
+    rescan: RescanPath,
     /// Aggregations per partition (AccurateML mode only). The Option is
     /// None on the first iteration *before* generation — the job then
     /// builds and returns timing through metrics; the runner caches.
@@ -200,12 +213,20 @@ impl KmeansIterJob {
 
     /// AccurateML stage 2: re-assign the chosen boundary buckets'
     /// members, replacing their aggregate contribution. Each refined
-    /// bucket's member points are gathered into one block and their
-    /// centroid distances computed in ONE backend call per bucket
-    /// (gather → score → scatter, PJRT-routed when the backend is);
-    /// the scatter replays the scalar strict-< nearest-centroid scan
-    /// in member order, so the partial sums are bit-identical to the
-    /// old per-point loop on the native backend.
+    /// bucket's centroid distances are computed in ONE backend call per
+    /// bucket (PJRT-routed when the backend is). On
+    /// [`RescanPath::Slice`] the bucket's rows are never copied: the
+    /// bucket-major base segment is scored in place via
+    /// [`ScoreBackend::knn_dists_rows`] with the centroids as the query
+    /// side (k × members). On [`RescanPath::Gather`] the members are
+    /// gathered into a dense block and scored members × k — the
+    /// pre-bucket-major behavior, kept as the bit-identity reference.
+    /// The per-pair squared distance is operand-symmetric at the bit
+    /// level (the kernel contract: `qn + xn − 2·dot` with the dot
+    /// accumulated in dimension order, and f32 addition commutes), and
+    /// both scatters replay the scalar strict-< first-min
+    /// nearest-centroid scan in member order, so the partial sums are
+    /// identical on every path.
     fn refine_partials(
         &self,
         part_id: usize,
@@ -216,6 +237,7 @@ impl KmeansIterJob {
     ) -> ClusterPartials {
         let range = self.partitions[part_id];
         let agg = &self.agg.as_ref().expect("aggregation not built")[part_id];
+        let k = self.centroids.rows();
         let mut sw = Stopwatch::new();
         let mut buf = GatherBuf::default();
         for &b in chosen {
@@ -231,24 +253,56 @@ impl KmeansIterJob {
             if members.is_empty() {
                 continue; // nothing to re-assign (defensive; buckets are non-empty)
             }
-            let block = buf.gather(
-                members
-                    .iter()
-                    .map(|&i| self.points.row(range.start + i as usize)),
-            );
-            let dists = self
-                .backend
-                .knn_dists(&block, &self.centroids)
-                .expect("backend scoring failed");
-            buf.recycle(block);
-            for (r, &i) in members.iter().enumerate() {
-                let p = self.points.row(range.start + i as usize);
-                let (c, _) = argmin_row(dists.row(r));
-                let (sum, w) = &mut partials[c];
-                for (s, &x) in sum.iter_mut().zip(p) {
-                    *s += x;
+            match self.rescan {
+                RescanPath::Gather => {
+                    let block = buf.gather(
+                        members
+                            .iter()
+                            .map(|&i| self.points.row(range.start + i as usize)),
+                    );
+                    let dists = self
+                        .backend
+                        .knn_dists(&block, &self.centroids)
+                        .expect("backend scoring failed");
+                    buf.recycle(block);
+                    for (r, &i) in members.iter().enumerate() {
+                        let p = self.points.row(range.start + i as usize);
+                        let (c, _) = argmin_row(dists.row(r));
+                        let (sum, w) = &mut partials[c];
+                        for (s, &x) in sum.iter_mut().zip(p) {
+                            *s += x;
+                        }
+                        *w += 1.0;
+                    }
                 }
-                *w += 1.0;
+                RescanPath::Slice => {
+                    // Column j is base row b0+j == members[j] (the
+                    // batch layout has no tail segments — it is built
+                    // once and never refreshed).
+                    let (b0, b1) = agg.layout.base_range(b);
+                    debug_assert_eq!(b1 - b0, members.len());
+                    let dists = self
+                        .backend
+                        .knn_dists_rows(&self.centroids, agg.rows.base(), b0, b1)
+                        .expect("backend scoring failed");
+                    for (j, &i) in members.iter().enumerate() {
+                        let p = self.points.row(range.start + i as usize);
+                        let mut c = 0usize;
+                        let mut best = dists.get(0, j);
+                        for cc in 1..k {
+                            let dv = dists.get(cc, j);
+                            if dv < best {
+                                best = dv;
+                                c = cc;
+                            }
+                        }
+                        let (sum, w) = &mut partials[c];
+                        for (s, &x) in sum.iter_mut().zip(p) {
+                            *s += x;
+                        }
+                        *w += 1.0;
+                    }
+                }
             }
         }
         metrics.refine_s += sw.lap_s();
@@ -453,7 +507,16 @@ impl KmeansRunner {
                         cfg.seed,
                         &mut gen_metrics,
                     )?;
-                    parts.push(PartitionAgg { centers, index });
+                    let layout = BucketLayout::build(&index, range.len())?;
+                    let rows = BucketRows::build(&layout, self.points.cols(), |l| {
+                        self.points.row(range.start + l as usize)
+                    });
+                    parts.push(PartitionAgg {
+                        centers,
+                        index,
+                        layout,
+                        rows,
+                    });
                 }
                 Some(Arc::new(parts))
             }
@@ -471,6 +534,7 @@ impl KmeansRunner {
                 seed: cfg.seed,
                 refine_order: cfg.refine_order,
                 backend: Arc::clone(&self.backend),
+                rescan: RescanPath::from_env(),
                 agg: agg.clone(),
             };
             // Each round's trace restarts its clock; shift onto the

@@ -1,0 +1,441 @@
+//! Bucket-major physical layout for a shard's original rows.
+//!
+//! The paper's stage-2 refinement rescans the original points behind
+//! the buckets most related to accuracy. With the originals stored in
+//! dataset order, every rescan first *gathers* the bucket's member
+//! rows into a dense block — so the hot path pays a memcpy per
+//! (bucket-group, micro-batch) before any arithmetic runs. This module
+//! stores the originals physically grouped by bucket instead: one
+//! contiguous base matrix where bucket `b`'s members occupy rows
+//! `offsets[b]..offsets[b+1]`, built once at partition time with a
+//! stable permutation, so a rescan scores a borrowed row-range slice
+//! of the base matrix in place.
+//!
+//! Two invariants make the slice path *bit-identical* to the gather
+//! path (and are checked by [`BucketLayout::validate`]):
+//!
+//! 1. **Order preservation.** The base rows of bucket `b` appear in
+//!    exactly the order of the shard's index file `index[b]`:
+//!    `perm[offsets[b] + j] == index[b][j]`. Original (old) local ids
+//!    are never renumbered — labels, user tables and cluster maps stay
+//!    indexed by old id, and scatters translate positions back through
+//!    the permutation, pushing the same (value, id) pairs in the same
+//!    order a gathered block would.
+//! 2. **Append accounting.** The refresh layer appends absorbed rows
+//!    to a per-bucket *tail segment* (old ids keep growing past the
+//!    base): after `index[b]`'s first `base_len(b)` entries, member
+//!    `j` lives at tail row `j - base_len(b)`. A rescan therefore
+//!    scores at most two contiguous pieces per bucket — base slice
+//!    plus tail — and the per-pair purity of the kernels (equivalence
+//!    contract clause 3 of `runtime/kernels.rs`) keeps the two-piece
+//!    scoring bit-equal to one gathered call. Tails are folded back
+//!    into the base by [`compaction`](BucketLayout::needs_compaction)
+//!    during `Rebuilder` rebuilds, amortizing the copy.
+
+use crate::data::matrix::Matrix;
+use crate::error::{Error, Result};
+
+/// Where one original row physically lives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RowLoc {
+    /// Position in the bucket-major base matrix.
+    Base(u32),
+    /// Row of bucket `bucket`'s tail segment (refresh appends).
+    Tail { bucket: u32, row: u32 },
+}
+
+/// The bucket-major placement of a shard's original rows: offsets into
+/// the base matrix, the base-position → old-id permutation, and the
+/// old-id → location map (base or tail). Payload-free — one layout can
+/// drive several parallel payload matrices (CF shares one layout
+/// across its centered-ratings and mask matrices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BucketLayout {
+    /// `n_buckets + 1` monotone offsets; bucket `b`'s base rows are
+    /// `offsets[b]..offsets[b+1]`.
+    offsets: Vec<usize>,
+    /// Base position → old local id (the stable permutation).
+    perm: Vec<u32>,
+    /// Old local id → current physical location.
+    loc: Vec<RowLoc>,
+    /// Per-bucket tail segment length.
+    tail_len: Vec<u32>,
+}
+
+impl BucketLayout {
+    /// Build the layout for an index file covering `n_rows` originals.
+    /// Every local id in `0..n_rows` must appear exactly once across
+    /// the buckets (the index files produced by bucketization are
+    /// partitions, so this only fails on corrupted inputs).
+    pub fn build(index: &[Vec<u32>], n_rows: usize) -> Result<BucketLayout> {
+        let mut offsets = Vec::with_capacity(index.len() + 1);
+        offsets.push(0usize);
+        let mut perm = Vec::with_capacity(n_rows);
+        let mut loc = vec![None; n_rows];
+        for members in index {
+            for &old in members {
+                let pos = perm.len() as u32;
+                let slot = loc.get_mut(old as usize).ok_or_else(|| {
+                    Error::Data(format!("bucket-major: id {old} >= {n_rows} rows"))
+                })?;
+                if slot.replace(RowLoc::Base(pos)).is_some() {
+                    return Err(Error::Data(format!(
+                        "bucket-major: id {old} appears in two buckets"
+                    )));
+                }
+                perm.push(old);
+            }
+            offsets.push(perm.len());
+        }
+        if perm.len() != n_rows {
+            return Err(Error::Data(format!(
+                "bucket-major: index covers {} of {n_rows} rows",
+                perm.len()
+            )));
+        }
+        let loc = loc.into_iter().map(|s| s.expect("all ids placed")).collect();
+        Ok(BucketLayout {
+            offsets,
+            perm,
+            loc,
+            tail_len: vec![0; index.len()],
+        })
+    }
+
+    /// Number of buckets.
+    #[inline]
+    pub fn n_buckets(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Total rows tracked (base + all tails) — the old-id space.
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.loc.len()
+    }
+
+    /// Rows in the base matrix.
+    #[inline]
+    pub fn base_rows(&self) -> usize {
+        self.perm.len()
+    }
+
+    /// Bucket `b`'s base row range `offsets[b]..offsets[b+1]`.
+    #[inline]
+    pub fn base_range(&self, b: usize) -> (usize, usize) {
+        (self.offsets[b], self.offsets[b + 1])
+    }
+
+    /// Bucket `b`'s base member count.
+    #[inline]
+    pub fn base_len(&self, b: usize) -> usize {
+        self.offsets[b + 1] - self.offsets[b]
+    }
+
+    /// Bucket `b`'s tail segment length.
+    #[inline]
+    pub fn tail_len(&self, b: usize) -> usize {
+        self.tail_len[b] as usize
+    }
+
+    /// Rows appended since the last compaction, across all buckets.
+    pub fn total_tail_rows(&self) -> usize {
+        self.loc.len() - self.perm.len()
+    }
+
+    /// Whether enough tail rows accumulated that a rebuild should fold
+    /// them back into the base (amortized: tails ≥ 1/8 of the base).
+    pub fn needs_compaction(&self) -> bool {
+        self.total_tail_rows() * 8 >= self.base_rows().max(1)
+    }
+
+    /// Physical location of an old local id.
+    #[inline]
+    pub fn loc(&self, old: u32) -> RowLoc {
+        self.loc[old as usize]
+    }
+
+    /// The base-position → old-id permutation.
+    #[inline]
+    pub fn perm(&self) -> &[u32] {
+        &self.perm
+    }
+
+    /// Register the next old local id (== current `n_rows`) as an
+    /// append to bucket `b`'s tail. Returns the assigned id; the
+    /// caller must push the same id onto `index[b]` (absorb order ==
+    /// tail order, which is what keeps index order == physical order).
+    pub fn append(&mut self, b: usize) -> u32 {
+        let old = self.loc.len() as u32;
+        self.loc.push(RowLoc::Tail {
+            bucket: b as u32,
+            row: self.tail_len[b],
+        });
+        self.tail_len[b] += 1;
+        old
+    }
+
+    /// Check the full offsets/permutation accounting against the index
+    /// file: monotone offsets covering the base, every base member at
+    /// its permuted position, every post-base member at its tail slot,
+    /// and the id space exactly `base + tails`.
+    pub fn validate(&self, index: &[Vec<u32>]) -> Result<()> {
+        let fail = |msg: String| Err(Error::Data(format!("bucket-major layout: {msg}")));
+        if self.offsets.len() != index.len() + 1 || self.tail_len.len() != index.len() {
+            return fail(format!("{} buckets vs index {}", self.n_buckets(), index.len()));
+        }
+        if self.offsets[0] != 0 || *self.offsets.last().unwrap() != self.perm.len() {
+            return fail("offsets do not span the base".into());
+        }
+        let tails: usize = self.tail_len.iter().map(|&t| t as usize).sum();
+        if self.loc.len() != self.perm.len() + tails {
+            return fail(format!(
+                "{} ids != {} base + {tails} tail",
+                self.loc.len(),
+                self.perm.len()
+            ));
+        }
+        for (b, members) in index.iter().enumerate() {
+            let (b0, b1) = self.base_range(b);
+            if b1 < b0 {
+                return fail(format!("bucket {b} offsets not monotone"));
+            }
+            let base_len = b1 - b0;
+            if members.len() != base_len + self.tail_len(b) {
+                return fail(format!(
+                    "bucket {b}: {} members != {base_len} base + {} tail",
+                    members.len(),
+                    self.tail_len(b)
+                ));
+            }
+            for (j, &old) in members.iter().enumerate() {
+                if old as usize >= self.loc.len() {
+                    return fail(format!("bucket {b}: id {old} out of range"));
+                }
+                let expect = if j < base_len {
+                    if self.perm[b0 + j] != old {
+                        return fail(format!(
+                            "bucket {b} pos {j}: perm says {} not {old}",
+                            self.perm[b0 + j]
+                        ));
+                    }
+                    RowLoc::Base((b0 + j) as u32)
+                } else {
+                    RowLoc::Tail {
+                        bucket: b as u32,
+                        row: (j - base_len) as u32,
+                    }
+                };
+                if self.loc(old) != expect {
+                    return fail(format!(
+                        "bucket {b} member {old}: loc {:?} != {expect:?}",
+                        self.loc(old)
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One payload stored under a [`BucketLayout`]: the bucket-major base
+/// matrix plus per-bucket tail segments. Row *values* are copied from
+/// the original storage exactly once (at build / compaction), so reads
+/// return the same bytes the dataset-ordered storage held.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BucketRows {
+    base: Matrix,
+    tails: Vec<Matrix>,
+}
+
+impl BucketRows {
+    /// Materialize a payload for `layout`, reading each old id's row
+    /// through `row_of` (the dataset-ordered source at build time, or
+    /// the previous bucket-major store during compaction).
+    pub fn build<'a>(
+        layout: &BucketLayout,
+        cols: usize,
+        row_of: impl Fn(u32) -> &'a [f32],
+    ) -> BucketRows {
+        let mut base = Matrix::zeros(layout.base_rows(), cols);
+        for (pos, &old) in layout.perm().iter().enumerate() {
+            base.row_mut(pos).copy_from_slice(row_of(old));
+        }
+        let mut tails: Vec<Matrix> = (0..layout.n_buckets()).map(|_| Matrix::zeros(0, cols)).collect();
+        // Tail rows (non-empty only when rebuilding from an appended
+        // store without compacting) go back in tail order.
+        for old in layout.base_rows()..layout.n_rows() {
+            if let RowLoc::Tail { bucket, .. } = layout.loc(old as u32) {
+                tails[bucket as usize].push_row(row_of(old as u32));
+            }
+        }
+        BucketRows { base, tails }
+    }
+
+    /// The bucket-major base matrix.
+    #[inline]
+    pub fn base(&self) -> &Matrix {
+        &self.base
+    }
+
+    /// Bucket `b`'s tail segment (0 rows unless refresh appended).
+    #[inline]
+    pub fn tail(&self, b: usize) -> &Matrix {
+        &self.tails[b]
+    }
+
+    /// Row width.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.base.cols()
+    }
+
+    /// Borrow an old id's row through the layout.
+    #[inline]
+    pub fn row(&self, layout: &BucketLayout, old: u32) -> &[f32] {
+        match layout.loc(old) {
+            RowLoc::Base(pos) => self.base.row(pos as usize),
+            RowLoc::Tail { bucket, row } => self.tails[bucket as usize].row(row as usize),
+        }
+    }
+
+    /// Append one row to bucket `b`'s tail; pair with
+    /// [`BucketLayout::append`].
+    pub fn push_tail(&mut self, b: usize, row: &[f32]) {
+        self.tails[b].push_row(row);
+    }
+
+    /// Check that the payload shape matches the layout's accounting.
+    pub fn validate(&self, layout: &BucketLayout) -> Result<()> {
+        if self.base.rows() != layout.base_rows() || self.tails.len() != layout.n_buckets() {
+            return Err(Error::Data(format!(
+                "bucket-major payload: base {} / {} tails vs layout {} / {}",
+                self.base.rows(),
+                self.tails.len(),
+                layout.base_rows(),
+                layout.n_buckets()
+            )));
+        }
+        for b in 0..layout.n_buckets() {
+            if self.tails[b].rows() != layout.tail_len(b) {
+                return Err(Error::Data(format!(
+                    "bucket-major payload: bucket {b} tail {} vs layout {}",
+                    self.tails[b].rows(),
+                    layout.tail_len(b)
+                )));
+            }
+            if self.tails[b].cols() != self.base.cols() && self.tails[b].rows() > 0 {
+                return Err(Error::Data(format!("bucket-major payload: bucket {b} cols mismatch")));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_index() -> Vec<Vec<u32>> {
+        // Includes an empty bucket and a single-member bucket.
+        vec![vec![3, 0], vec![], vec![4], vec![1, 2, 5]]
+    }
+
+    fn demo_matrix(rows: usize) -> Matrix {
+        let mut m = Matrix::zeros(rows, 2);
+        for r in 0..rows {
+            m.set(r, 0, r as f32);
+            m.set(r, 1, 10.0 + r as f32);
+        }
+        m
+    }
+
+    #[test]
+    fn build_permutes_stably_and_validates() {
+        let index = demo_index();
+        let layout = BucketLayout::build(&index, 6).unwrap();
+        assert_eq!(layout.n_buckets(), 4);
+        assert_eq!(layout.base_rows(), 6);
+        assert_eq!(layout.perm(), &[3, 0, 4, 1, 2, 5]);
+        assert_eq!(layout.base_range(0), (0, 2));
+        assert_eq!(layout.base_range(1), (2, 2)); // empty bucket
+        assert_eq!(layout.base_range(2), (2, 3)); // single member
+        assert_eq!(layout.base_range(3), (3, 6));
+        assert_eq!(layout.loc(3), RowLoc::Base(0));
+        assert_eq!(layout.loc(5), RowLoc::Base(5));
+        layout.validate(&index).unwrap();
+
+        let src = demo_matrix(6);
+        let rows = BucketRows::build(&layout, 2, |l| src.row(l as usize));
+        rows.validate(&layout).unwrap();
+        // Base rows are the members in index order, and id reads round-trip.
+        assert_eq!(rows.base().row(0), src.row(3));
+        assert_eq!(rows.base().row(1), src.row(0));
+        for old in 0..6u32 {
+            assert_eq!(rows.row(&layout, old), src.row(old as usize));
+        }
+        // The bucket's base slice is exactly its gathered members.
+        let (b0, b1) = layout.base_range(3);
+        let slice = rows.base().rows_view(b0, b1).to_matrix();
+        let gathered = src.gather_rows(&[1, 2, 5]);
+        assert_eq!(slice, gathered);
+    }
+
+    #[test]
+    fn build_rejects_bad_accounting() {
+        assert!(BucketLayout::build(&[vec![0, 1]], 3).is_err()); // uncovered id
+        assert!(BucketLayout::build(&[vec![0, 0]], 2).is_err()); // duplicate
+        assert!(BucketLayout::build(&[vec![0, 7]], 2).is_err()); // out of range
+    }
+
+    #[test]
+    fn appends_land_in_tail_segments_and_compaction_rebuilds_base() {
+        let mut index = demo_index();
+        let mut layout = BucketLayout::build(&index, 6).unwrap();
+        let src = demo_matrix(6);
+        let mut rows = BucketRows::build(&layout, 2, |l| src.row(l as usize));
+
+        // Absorb two rows into bucket 2 and one into the empty bucket 1.
+        for (b, row) in [(2usize, [6.0f32, 16.0]), (1, [7.0, 17.0]), (2, [8.0, 18.0])] {
+            let old = layout.append(b);
+            index[b].push(old);
+            rows.push_tail(b, &row);
+        }
+        assert_eq!(layout.n_rows(), 9);
+        assert_eq!(layout.total_tail_rows(), 3);
+        assert_eq!(layout.tail_len(2), 2);
+        assert_eq!(layout.loc(6), RowLoc::Tail { bucket: 2, row: 0 });
+        assert_eq!(layout.loc(8), RowLoc::Tail { bucket: 2, row: 1 });
+        layout.validate(&index).unwrap();
+        rows.validate(&layout).unwrap();
+        assert_eq!(rows.row(&layout, 8), &[8.0, 18.0]);
+        assert!(layout.needs_compaction()); // 3 * 8 >= 6
+
+        // Compaction: rebuild everything into the base, reading rows
+        // through the old store. Old ids keep their values.
+        let compacted = BucketLayout::build(&index, layout.n_rows()).unwrap();
+        let crows = BucketRows::build(&compacted, 2, |l| rows.row(&layout, l));
+        compacted.validate(&index).unwrap();
+        crows.validate(&compacted).unwrap();
+        assert_eq!(compacted.total_tail_rows(), 0);
+        assert_eq!(compacted.base_len(2), 3);
+        for old in 0..9u32 {
+            assert_eq!(crows.row(&compacted, old), rows.row(&layout, old));
+        }
+        // Bucket 2's base slice now holds [4, 6, 8] in index order.
+        let (b0, b1) = compacted.base_range(2);
+        assert_eq!(crows.base().rows_view(b0, b1).row(1), &[6.0, 16.0]);
+    }
+
+    #[test]
+    fn validate_catches_index_drift() {
+        let index = demo_index();
+        let layout = BucketLayout::build(&index, 6).unwrap();
+        let mut drifted = index.clone();
+        drifted[3].swap(0, 2); // reorder members without re-permuting
+        assert!(layout.validate(&drifted).is_err());
+        let mut extra = index;
+        extra[0].push(3); // member now in two buckets
+        assert!(layout.validate(&extra).is_err());
+    }
+}

@@ -101,9 +101,9 @@ impl Matrix {
     }
 
     /// Copy of the contiguous row range `a..b` — row-major storage
-    /// makes this a single memcpy. The parallel scoring tiles slice
-    /// their x-row ranges with this, inside the tile task, so the copy
-    /// itself parallelizes.
+    /// makes this a single memcpy. Fallback for callers that need an
+    /// owned block (e.g. the PJRT literal path); the native scoring
+    /// paths use the zero-copy [`Matrix::rows_view`] instead.
     pub fn row_range(&self, a: usize, b: usize) -> Matrix {
         assert!(a <= b && b <= self.rows, "row range {a}..{b} of {}", self.rows);
         Matrix {
@@ -111,6 +111,38 @@ impl Matrix {
             cols: self.cols,
             data: self.data[a * self.cols..b * self.cols].to_vec(),
         }
+    }
+
+    /// Borrowed view of the whole matrix (zero-copy).
+    #[inline]
+    pub fn view(&self) -> MatView<'_> {
+        MatView {
+            rows: self.rows,
+            cols: self.cols,
+            data: &self.data,
+        }
+    }
+
+    /// Borrowed view of the contiguous row range `a..b` (zero-copy) —
+    /// what the bucket-major stage-2 rescans and the parallel scoring
+    /// tiles hand to the kernels instead of a [`Matrix::row_range`]
+    /// copy.
+    #[inline]
+    pub fn rows_view(&self, a: usize, b: usize) -> MatView<'_> {
+        assert!(a <= b && b <= self.rows, "row view {a}..{b} of {}", self.rows);
+        MatView {
+            rows: b - a,
+            cols: self.cols,
+            data: &self.data[a * self.cols..b * self.cols],
+        }
+    }
+
+    /// Append one row (len must equal `cols`). Amortized O(cols) — the
+    /// bucket-major tail segments grow with this on delta absorption.
+    pub fn push_row(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.cols, "push_row len {} != cols {}", row.len(), self.cols);
+        self.data.extend_from_slice(row);
+        self.rows += 1;
     }
 
     /// Gather a subset of rows into a new matrix.
@@ -171,6 +203,61 @@ impl Matrix {
     /// Bytes this matrix occupies (shuffle accounting).
     pub fn size_bytes(&self) -> u64 {
         (self.data.len() * std::mem::size_of::<f32>()) as u64
+    }
+}
+
+/// Borrowed row-major view of a contiguous row range of a [`Matrix`]
+/// (possibly the whole matrix). `Copy`, so kernel entry points take it
+/// by value; the accessors mirror [`Matrix`] so code is generic over
+/// owned vs borrowed operands by method name alone. A view is always
+/// contiguous — `data.len() == rows * cols` — which is what lets the
+/// cache-blocked kernels tile it exactly like an owned matrix.
+#[derive(Clone, Copy, Debug)]
+pub struct MatView<'a> {
+    rows: usize,
+    cols: usize,
+    data: &'a [f32],
+}
+
+impl<'a> MatView<'a> {
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Borrow one row (lives as long as the underlying matrix).
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [f32] {
+        debug_assert!(r < self.rows);
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Element access.
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// The viewed buffer.
+    #[inline]
+    pub fn as_slice(&self) -> &'a [f32] {
+        self.data
+    }
+
+    /// Owned copy of the viewed rows.
+    pub fn to_matrix(&self) -> Matrix {
+        Matrix {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.to_vec(),
+        }
     }
 }
 
@@ -259,6 +346,26 @@ mod tests {
         assert_eq!(s.as_slice(), &[3., 4., 5., 6.]);
         assert_eq!(m.row_range(2, 2).rows(), 0);
         assert_eq!(m.row_range(0, 4), m);
+    }
+
+    #[test]
+    fn views_alias_the_owned_rows() {
+        let mut m = Matrix::from_vec(4, 2, vec![1., 2., 3., 4., 5., 6., 7., 8.]).unwrap();
+        let v = m.view();
+        assert_eq!((v.rows(), v.cols()), (4, 2));
+        assert_eq!(v.row(2), m.row(2));
+        assert_eq!(v.get(3, 1), 8.0);
+        let s = m.rows_view(1, 3);
+        assert_eq!((s.rows(), s.cols()), (2, 2));
+        assert_eq!(s.as_slice(), &[3., 4., 5., 6.]);
+        assert_eq!(s.to_matrix(), m.row_range(1, 3));
+        assert_eq!(m.rows_view(2, 2).rows(), 0);
+        m.push_row(&[9., 10.]);
+        assert_eq!(m.rows(), 5);
+        assert_eq!(m.row(4), &[9., 10.]);
+        let mut empty = Matrix::zeros(0, 3);
+        empty.push_row(&[1., 2., 3.]);
+        assert_eq!(empty.rows(), 1);
     }
 
     #[test]

@@ -9,12 +9,14 @@
 //! popularity-skewed ratings) drives the same code paths — see DESIGN.md
 //! §3 for the substitution argument.
 
+pub mod bucket_major;
 pub mod gaussian;
 pub mod io;
 pub mod matrix;
 pub mod points;
 pub mod ratings;
 
+pub use bucket_major::{BucketLayout, BucketRows, RowLoc};
 pub use gaussian::{GaussianMixtureSpec, LabeledPoints};
-pub use matrix::Matrix;
+pub use matrix::{MatView, Matrix};
 pub use ratings::{LatentFactorSpec, RatingMatrix, RatingsSplit};

@@ -10,6 +10,7 @@ use crate::aggregate::AggregatedUsers;
 use crate::approx::algorithm1::{
     group_plans_by_bucket, refinement_selection, BucketGroups, RefineOrder,
 };
+use crate::data::bucket_major::{BucketLayout, BucketRows};
 use crate::data::matrix::Matrix;
 use crate::data::points::RowRange;
 use crate::data::ratings::RatingsSplit;
@@ -17,7 +18,7 @@ use crate::error::Result;
 use crate::lsh::bucketizer::Grouping;
 use crate::lsh::Bucketizer;
 use crate::mapreduce::metrics::TaskMetrics;
-use crate::model::{InitialAnswer, RefinedBlock, ServableModel};
+use crate::model::{InitialAnswer, RefinedBlock, RescanPath, ScoredBlock, ServableModel};
 use crate::runtime::backend::{pearson_pair, GatherBuf, ScoreBackend};
 use crate::util::timer::Stopwatch;
 
@@ -82,19 +83,25 @@ pub fn user_block(split: &RatingsSplit, users: &[usize]) -> (Matrix, Matrix) {
     (cu, mu)
 }
 
-/// One CF shard: the partition's users (centered rows + masks), their
-/// aggregation, and the centered aggregated rows stage 1 scores
-/// against.
+/// One CF shard: the partition's users (centered rows + masks, stored
+/// bucket-major so stage 2 can score each bucket's originals as a
+/// contiguous slice), their aggregation, and the centered aggregated
+/// rows stage 1 scores against. `layout` is shared between the two
+/// payloads (`cu_rows`, `mu_rows`) — both are permuted by the same
+/// bucket order, so one offsets/permutation table resolves rows in
+/// either.
 pub struct CfModel {
     split: Arc<RatingsSplit>,
     user_means: Arc<Vec<f32>>,
     users: Vec<usize>,
-    cu: Matrix,
-    mu: Matrix,
+    layout: BucketLayout,
+    cu_rows: BucketRows,
+    mu_rows: BucketRows,
     agg: AggregatedUsers,
     cagg: Matrix,
     agg_means: Vec<f32>,
     refine_order: RefineOrder,
+    rescan: RescanPath,
     backend: Arc<dyn ScoreBackend>,
 }
 
@@ -164,16 +171,24 @@ impl CfModel {
         }
         metrics.aggregate_s += sw.lap_s();
 
+        // Part 3: permute the originals into bucket-major order. One
+        // layout serves both payloads — cu and mu rows share local ids.
+        let layout = BucketLayout::build(&agg.index, users.len())?;
+        let cu_rows = BucketRows::build(&layout, m, |l| cu.row(l as usize));
+        let mu_rows = BucketRows::build(&layout, m, |l| mu.row(l as usize));
+
         Ok(CfModel {
             split: Arc::clone(split),
             user_means: Arc::clone(user_means),
             users,
-            cu,
-            mu,
+            layout,
+            cu_rows,
+            mu_rows,
             agg,
             cagg,
             agg_means,
             refine_order,
+            rescan: RescanPath::from_env(),
             backend,
         })
     }
@@ -205,6 +220,16 @@ impl CfModel {
         &self.users
     }
 
+    /// The centered row + mask of partition-local user `local`,
+    /// resolved through the bucket-major layout (base or tail
+    /// segment).
+    pub fn original_rows(&self, local: u32) -> (&[f32], &[f32]) {
+        (
+            self.cu_rows.row(&self.layout, local),
+            self.mu_rows.row(&self.layout, local),
+        )
+    }
+
     /// Visit every original user of `bucket` with their Pearson weight
     /// against the given centered query row, skipping `exclude` and
     /// zero/non-finite weights — the inner loop shared by batch stage 2
@@ -225,12 +250,8 @@ impl CfModel {
             if exclude == Some(v) {
                 continue;
             }
-            let w = pearson_pair(
-                q_cu,
-                q_mu,
-                self.cu.row(local as usize),
-                self.mu.row(local as usize),
-            );
+            let (crow, mrow) = self.original_rows(local);
+            let w = pearson_pair(q_cu, q_mu, crow, mrow);
             if w == 0.0 || !w.is_finite() {
                 continue;
             }
@@ -239,25 +260,28 @@ impl CfModel {
     }
 
     /// [`CfModel::for_each_original`] with the weights already scored:
-    /// `wrow` is parallel to the bucket's index (one weight per
-    /// original user), as produced by
-    /// [`CfModel::rescan_weight_blocks`]. The excluded user's weight is
-    /// present in the row but skipped here, so the accumulated
+    /// `head` + `tail` concatenated are parallel to the bucket's index
+    /// (one weight per original user), as produced by
+    /// [`CfModel::rescan_weight_blocks`] — `head` covers the bucket's
+    /// base-segment members, `tail` its refresh-appended members (empty
+    /// on the gather path and on never-refreshed shards). The excluded
+    /// user's weight is present but skipped here, so the accumulated
     /// evidence is identical to the compute-on-the-fly visitor.
     pub fn for_each_original_weighted(
         &self,
         bucket: usize,
-        wrow: &[f32],
+        head: &[f32],
+        tail: &[f32],
         exclude: Option<usize>,
         mut f: impl FnMut(usize, f32),
     ) {
-        debug_assert_eq!(wrow.len(), self.agg.index[bucket].len());
-        for (j, &local) in self.agg.index[bucket].iter().enumerate() {
+        debug_assert_eq!(head.len() + tail.len(), self.agg.index[bucket].len());
+        let weights = head.iter().chain(tail.iter());
+        for (&local, &w) in self.agg.index[bucket].iter().zip(weights) {
             let v = self.users[local as usize];
             if exclude == Some(v) {
                 continue;
             }
-            let w = wrow[j];
             if w == 0.0 || !w.is_finite() {
                 continue;
             }
@@ -294,28 +318,35 @@ impl CfModel {
     ///
     /// the per-query `plans` are grouped by bucket
     /// ([`group_plans_by_bucket`]); for each bucket refined by at least
-    /// one query, the member queries' centered rows + masks and the
-    /// bucket's original users' rows + masks are gathered into dense
-    /// blocks and every pairwise Pearson weight is computed in ONE
-    /// [`ScoreBackend::cf_weights`] call per bucket-group (PJRT-routed
-    /// whenever the shard's backend is). The native backend runs
-    /// `pearson_pair` with the same argument order as the scalar
-    /// visitor, keeping the weights bit-identical.
+    /// one query, the member queries' centered rows + masks are
+    /// gathered into dense blocks and every pairwise Pearson weight is
+    /// computed block-wise per bucket-group (PJRT-routed whenever the
+    /// shard's backend is). On the [`RescanPath::Slice`] path the
+    /// bucket's originals are never copied: the base segment is scored
+    /// in place via [`ScoreBackend::cf_weights_rows`] over the shared
+    /// bucket-major layout's row range, and refresh-appended tail
+    /// segments get one extra [`ScoreBackend::cf_weights`] call. On
+    /// [`RescanPath::Gather`] the originals are gathered into dense
+    /// blocks first (the pre-bucket-major behavior, kept as the
+    /// bit-identity reference). The native backend runs `pearson_pair`
+    /// with the same argument order as the scalar visitor, keeping the
+    /// weights bit-identical — and because every weight depends only on
+    /// its own row pair, the two paths produce byte-equal blocks.
     ///
     /// Returns the per-bucket blocks (indexed by bucket id; row
-    /// `slots[q][j]` of block `plans[q][j]` is query `q`'s weight row)
-    /// and the grouping.
+    /// `slots[q][j]` of block `plans[q][j]` is query `q`'s weight row,
+    /// split head/tail by storage segment) and the grouping.
     pub fn rescan_weight_blocks(
         &self,
         q_cu: &[&[f32]],
         q_mu: &[&[f32]],
         plans: &[Vec<usize>],
-    ) -> (Vec<Option<Matrix>>, BucketGroups) {
+    ) -> (Vec<Option<ScoredBlock>>, BucketGroups) {
         debug_assert_eq!(q_cu.len(), q_mu.len());
         debug_assert_eq!(q_cu.len(), plans.len());
         let n_buckets = self.agg.len();
         let grouped = group_plans_by_bucket(plans, n_buckets);
-        let mut blocks: Vec<Option<Matrix>> = vec![None; n_buckets];
+        let mut blocks: Vec<Option<ScoredBlock>> = vec![None; n_buckets];
         let mut qc = GatherBuf::default();
         let mut qm = GatherBuf::default();
         let mut xc = GatherBuf::default();
@@ -323,21 +354,47 @@ impl CfModel {
         for (b, members) in &grouped.groups {
             let qcb = qc.gather(members.iter().map(|&q| q_cu[q]));
             let qmb = qm.gather(members.iter().map(|&q| q_mu[q]));
-            let index = &self.agg.index[*b];
-            let xcb = xc.gather(index.iter().map(|&l| self.cu.row(l as usize)));
-            let xmb = xm.gather(index.iter().map(|&l| self.mu.row(l as usize)));
-            // The scanned side (gathered bucket originals) is the
-            // second operand pair — the axis ParallelBackend splits
-            // when a rescan block clears its size threshold.
-            let w = self
-                .backend
-                .cf_weights(&qcb, &qmb, &xcb, &xmb)
-                .expect("backend cf_weights failed");
+            let block = match self.rescan {
+                RescanPath::Gather => {
+                    let index = &self.agg.index[*b];
+                    let xcb = xc.gather(index.iter().map(|&l| self.cu_rows.row(&self.layout, l)));
+                    let xmb = xm.gather(index.iter().map(|&l| self.mu_rows.row(&self.layout, l)));
+                    // The scanned side (gathered bucket originals) is
+                    // the second operand pair — the axis
+                    // ParallelBackend splits when a rescan block clears
+                    // its size threshold.
+                    let w = self
+                        .backend
+                        .cf_weights(&qcb, &qmb, &xcb, &xmb)
+                        .expect("backend cf_weights failed");
+                    xc.recycle(xcb);
+                    xm.recycle(xmb);
+                    ScoredBlock::solid(w)
+                }
+                RescanPath::Slice => {
+                    let (b0, b1) = self.layout.base_range(*b);
+                    let head = if b1 > b0 {
+                        self.backend
+                            .cf_weights_rows(&qcb, &qmb, self.cu_rows.base(), self.mu_rows.base(), b0, b1)
+                            .expect("backend cf_weights_rows failed")
+                    } else {
+                        Matrix::zeros(qcb.rows(), 0)
+                    };
+                    let ct = self.cu_rows.tail(*b);
+                    if ct.rows() > 0 {
+                        let t = self
+                            .backend
+                            .cf_weights(&qcb, &qmb, ct, self.mu_rows.tail(*b))
+                            .expect("backend cf_weights failed");
+                        ScoredBlock::split(head, t)
+                    } else {
+                        ScoredBlock::solid(head)
+                    }
+                }
+            };
             qc.recycle(qcb);
             qm.recycle(qmb);
-            xc.recycle(xcb);
-            xm.recycle(xmb);
-            blocks[*b] = Some(w);
+            blocks[*b] = Some(block);
         }
         (blocks, grouped)
     }
@@ -368,8 +425,9 @@ impl CfModel {
         }
         let new_users: Vec<usize> = deltas.iter().map(|&u| u as usize).collect();
         let (dcu, dmu) = user_block(&self.split, &new_users);
-        let cu = self.cu.vstack(&dcu)?;
-        let mu = self.mu.vstack(&dmu)?;
+        let mut layout = self.layout.clone();
+        let mut cu_rows = self.cu_rows.clone();
+        let mut mu_rows = self.mu_rows.clone();
         let mut users = self.users.clone();
         let mut agg = self.agg.clone();
         let mut cagg = self.cagg.clone();
@@ -411,17 +469,26 @@ impl CfModel {
             cagg.row_mut(b).copy_from_slice(&crow);
             agg_means[b] = mean;
             users.push(u);
+            // Bucket-major storage: the new user's rows land in bucket
+            // b's tail segments (both payloads share the one layout),
+            // at the same local id the aggregation index recorded.
+            let assigned = layout.append(b);
+            debug_assert_eq!(assigned, local);
+            cu_rows.push_tail(b, dcu.row(i));
+            mu_rows.push_tail(b, dmu.row(i));
         }
         Ok(CfModel {
             split: Arc::clone(&self.split),
             user_means: Arc::clone(&self.user_means),
             users,
-            cu,
-            mu,
+            layout,
+            cu_rows,
+            mu_rows,
             agg,
             cagg,
             agg_means,
             refine_order: self.refine_order,
+            rescan: self.rescan,
             backend: Arc::clone(&self.backend),
         })
     }
@@ -434,6 +501,21 @@ impl crate::refresh::Refreshable for CfModel {
         CfModel::merge_deltas(self, deltas)
     }
 
+    fn compact(mut self) -> Result<CfModel> {
+        if self.layout.needs_compaction() {
+            let m = self.split.train.n_items();
+            let layout = BucketLayout::build(&self.agg.index, self.users.len())?;
+            let cu_rows =
+                BucketRows::build(&layout, m, |l| self.cu_rows.row(&self.layout, l));
+            let mu_rows =
+                BucketRows::build(&layout, m, |l| self.mu_rows.row(&self.layout, l));
+            self.layout = layout;
+            self.cu_rows = cu_rows;
+            self.mu_rows = mu_rows;
+        }
+        Ok(self)
+    }
+
     fn validate(&self) -> Result<()> {
         use crate::error::Error;
         if self.agg.is_empty() {
@@ -443,12 +525,12 @@ impl crate::refresh::Refreshable for CfModel {
             return Err(Error::Data(format!("candidate CF shard bucket {b} is empty")));
         }
         let originals: usize = self.agg.index.iter().map(Vec::len).sum();
-        if originals != self.users.len()
-            || self.users.len() != self.cu.rows()
-            || self.users.len() != self.mu.rows()
-        {
+        if originals != self.users.len() || self.users.len() != self.layout.n_rows() {
             return Err(Error::Data("candidate CF shard index accounting broken".into()));
         }
+        self.layout.validate(&self.agg.index)?;
+        self.cu_rows.validate(&self.layout)?;
+        self.mu_rows.validate(&self.layout)?;
         if !self.cagg.as_slice().iter().all(|v| v.is_finite())
             || !self.agg_means.iter().all(|v| v.is_finite())
         {
@@ -469,6 +551,10 @@ impl ServableModel for CfModel {
 
     fn n_originals(&self) -> usize {
         self.users.len()
+    }
+
+    fn set_rescan_path(&mut self, path: RescanPath) {
+        self.rescan = path;
     }
 
     fn answer_initial(&self, query: &Self::Query) -> InitialAnswer<Self::Answer> {
@@ -603,9 +689,9 @@ impl ServableModel for CfModel {
                 let mut partial = initials[qi].answer;
                 for (j, &b) in plans[qi].iter().enumerate() {
                     self.withdraw_aggregated(b, initials[qi].correlations[b], item, &mut partial);
-                    let wrow = blocks[b].as_ref().expect("scored bucket group");
-                    let wrow = wrow.row(grouped.slots[qi][j]);
-                    self.for_each_original_weighted(b, wrow, exclude, |v, wv| {
+                    let block = blocks[b].as_ref().expect("scored bucket group");
+                    let (head, tail) = block.parts(grouped.slots[qi][j]);
+                    self.for_each_original_weighted(b, head, tail, exclude, |v, wv| {
                         self.fold_original(v, wv, item, &mut partial);
                     });
                 }
@@ -780,12 +866,8 @@ mod tests {
                 if Some(v) == q.exclude.map(|u| u as usize) {
                     continue;
                 }
-                let w = pearson_pair(
-                    q.cu.as_slice(),
-                    q.mu.as_slice(),
-                    model.cu.row(local),
-                    model.mu.row(local),
-                );
+                let (crow, mrow) = model.original_rows(local as u32);
+                let w = pearson_pair(q.cu.as_slice(), q.mu.as_slice(), crow, mrow);
                 if w == 0.0 || !w.is_finite() {
                     continue;
                 }
@@ -834,6 +916,11 @@ mod tests {
         assert_eq!(one_shot.agg_means, stepped.agg_means);
         assert_eq!(one_shot.users, stepped.users);
         assert_eq!(one_shot.users.len(), 200);
+        // The bucket-major storage folds identically too — physical
+        // equality, not just answer equality.
+        assert_eq!(one_shot.layout, stepped.layout);
+        assert_eq!(one_shot.cu_rows, stepped.cu_rows);
+        assert_eq!(one_shot.mu_rows, stepped.mu_rows);
         Refreshable::validate(&one_shot).unwrap();
         // Out-of-range users are rejected.
         assert!(base.merge_deltas(&[200]).is_err());
@@ -841,6 +928,51 @@ mod tests {
         let q = query_for(&split, 0, 1);
         let init = one_shot.answer_initial(&q);
         assert_eq!(init.correlations.len(), one_shot.n_buckets());
+    }
+
+    #[test]
+    fn slice_rescan_is_bit_identical_to_gather_rescan() {
+        use crate::refresh::Refreshable;
+        let (split, user_means, _) = setup();
+        // Two identically-built shards grown by the same deltas (build
+        // and merge are deterministic), one per rescan path — the
+        // grown tails exercise the head/tail split leg.
+        let build = || {
+            CfModel::build(
+                &split,
+                &user_means,
+                RowRange { start: 0, end: 160 },
+                10.0,
+                Grouping::Lsh,
+                RefineOrder::Correlation,
+                3,
+                Arc::new(crate::runtime::backend::ScalarBackend),
+                &mut TaskMetrics::default(),
+            )
+            .unwrap()
+        };
+        let deltas: Vec<u32> = (160..200).collect();
+        let mut gather = build().merge_deltas(&deltas).unwrap();
+        let mut slice = build().merge_deltas(&deltas).unwrap();
+        gather.set_rescan_path(RescanPath::Gather);
+        slice.set_rescan_path(RescanPath::Slice);
+        let queries: Vec<CfQuery> =
+            (0..split.test.len().min(12)).map(|i| query_for(&split, i, i as u64)).collect();
+        let refs: Vec<&CfQuery> = queries.iter().collect();
+        let initials = gather.answer_initial_block(&refs);
+        let budgets: Vec<usize> = (0..refs.len()).map(|i| i % 5).collect();
+        let g = gather.refine_block(&refs, &initials, &budgets);
+        let s = slice.refine_block(&refs, &initials, &budgets);
+        assert_eq!(g.answers, s.answers);
+        assert_eq!(g.bucket_groups, s.bucket_groups);
+        // Compaction (40 tail rows against a 160-row base clears the
+        // threshold) folds the tails into a fresh base without changing
+        // any answer, and the result still validates.
+        let compacted = slice.compact().unwrap();
+        assert_eq!(compacted.layout.total_tail_rows(), 0);
+        Refreshable::validate(&compacted).unwrap();
+        let c = compacted.refine_block(&refs, &initials, &budgets);
+        assert_eq!(g.answers, c.answers);
     }
 
     #[test]

@@ -13,11 +13,12 @@ use crate::aggregate::IndexFile;
 use crate::approx::algorithm1::{group_plans_by_bucket, refinement_selection, RefineOrder};
 use crate::data::matrix::{sq_dist, Matrix};
 use crate::data::points::RowRange;
+use crate::data::{BucketLayout, BucketRows};
 use crate::error::Result;
 use crate::lsh::bucketizer::Grouping;
 use crate::lsh::Bucketizer;
 use crate::mapreduce::metrics::TaskMetrics;
-use crate::model::{InitialAnswer, RefinedBlock, ServableModel};
+use crate::model::{InitialAnswer, RefinedBlock, RescanPath, ServableModel};
 use crate::runtime::backend::ScoreBackend;
 use crate::util::timer::Stopwatch;
 
@@ -128,11 +129,14 @@ pub fn build_partition_agg(
     Ok((slice, centers, bucketing.buckets))
 }
 
-/// One k-means shard: the partition's points, their aggregation, and
-/// the cluster assignment of every point and bucket center under the
-/// trained centroids.
+/// One k-means shard: the partition's points stored bucket-major
+/// (each bucket's members contiguous — see
+/// [`crate::data::bucket_major`]; `point_cluster` stays indexed by the
+/// original local ids), their aggregation, and the cluster assignment
+/// of every point and bucket center under the trained centroids.
 pub struct KmeansModel {
-    points: Matrix,
+    layout: BucketLayout,
+    rows: BucketRows,
     centers: Matrix,
     index: IndexFile,
     /// The trained k-means centroids (kept so delta ingestion can
@@ -142,6 +146,7 @@ pub struct KmeansModel {
     center_cluster: Vec<u32>,
     refine_order: RefineOrder,
     backend: Arc<dyn ScoreBackend>,
+    rescan: RescanPath,
 }
 
 impl KmeansModel {
@@ -172,8 +177,14 @@ impl KmeansModel {
         let center_cluster: Vec<u32> = (0..centers.rows())
             .map(|b| nearest_centroid(centroids, centers.row(b)).0 as u32)
             .collect();
+        // Bucket-major permutation of the partition rows so stage-2
+        // rescans score contiguous slices; `point_cluster` keeps the
+        // original local-id indexing the index file carries.
+        let layout = BucketLayout::build(&index, part.rows())?;
+        let rows = BucketRows::build(&layout, part.cols(), |l| part.row(l as usize));
         Ok(KmeansModel {
-            points: part,
+            layout,
+            rows,
             centers,
             index,
             centroids: centroids.clone(),
@@ -181,7 +192,14 @@ impl KmeansModel {
             center_cluster,
             refine_order,
             backend,
+            rescan: RescanPath::from_env(),
         })
+    }
+
+    /// An original partition row by its local id, resolved through the
+    /// bucket-major permutation.
+    pub fn original_row(&self, local: u32) -> &[f32] {
+        self.rows.row(&self.layout, local)
     }
 
     /// The aggregated bucket centers — read-only, for the refresh
@@ -207,7 +225,7 @@ impl KmeansModel {
     /// across calls.
     pub fn merge_deltas(&self, deltas: &[Vec<f32>]) -> Result<KmeansModel> {
         use crate::error::Error;
-        let d = self.points.cols();
+        let d = self.rows.cols();
         for p in deltas {
             if p.len() != d {
                 return Err(Error::Data(format!(
@@ -219,23 +237,25 @@ impl KmeansModel {
         if self.index.is_empty() {
             return Err(Error::Data("cannot merge deltas into a bucketless shard".into()));
         }
-        let mut dm = Matrix::zeros(deltas.len(), d);
-        for (i, p) in deltas.iter().enumerate() {
-            dm.row_mut(i).copy_from_slice(p);
-        }
-        let points = self.points.vstack(&dm)?;
+        let mut layout = self.layout.clone();
+        let mut rows = self.rows.clone();
         let mut centers = self.centers.clone();
         let mut index = self.index.clone();
         let mut point_cluster = self.point_cluster.clone();
         let mut center_cluster = self.center_cluster.clone();
         for (i, p) in deltas.iter().enumerate() {
-            let local = (self.points.rows() + i) as u32;
+            let local = (self.layout.n_rows() + i) as u32;
             let b = absorb_point(&mut centers, &mut index, p, local);
             center_cluster[b] = nearest_centroid(&self.centroids, centers.row(b)).0 as u32;
             point_cluster.push(nearest_centroid(&self.centroids, p).0 as u32);
+            // Tail append order == absorb order == index order.
+            let assigned = layout.append(b);
+            debug_assert_eq!(assigned, local);
+            rows.push_tail(b, p);
         }
         Ok(KmeansModel {
-            points,
+            layout,
+            rows,
             centers,
             index,
             centroids: self.centroids.clone(),
@@ -243,6 +263,7 @@ impl KmeansModel {
             center_cluster,
             refine_order: self.refine_order,
             backend: Arc::clone(&self.backend),
+            rescan: self.rescan,
         })
     }
 }
@@ -254,6 +275,21 @@ impl crate::refresh::Refreshable for KmeansModel {
         KmeansModel::merge_deltas(self, deltas)
     }
 
+    fn compact(self) -> Result<KmeansModel> {
+        if !self.layout.needs_compaction() {
+            return Ok(self);
+        }
+        let layout = BucketLayout::build(&self.index, self.layout.n_rows())?;
+        let rows = BucketRows::build(&layout, self.rows.cols(), |l| {
+            self.rows.row(&self.layout, l)
+        });
+        Ok(KmeansModel {
+            layout,
+            rows,
+            ..self
+        })
+    }
+
     fn validate(&self) -> Result<()> {
         use crate::error::Error;
         if self.index.is_empty() {
@@ -263,7 +299,8 @@ impl crate::refresh::Refreshable for KmeansModel {
             return Err(Error::Data(format!("candidate k-means shard bucket {b} is empty")));
         }
         let originals: usize = self.index.iter().map(Vec::len).sum();
-        if originals != self.points.rows() || self.point_cluster.len() != self.points.rows() {
+        if originals != self.layout.n_rows() || self.point_cluster.len() != self.layout.n_rows()
+        {
             return Err(Error::Data("candidate k-means shard index accounting broken".into()));
         }
         if self.center_cluster.len() != self.centers.rows() {
@@ -272,6 +309,10 @@ impl crate::refresh::Refreshable for KmeansModel {
         if !self.centers.as_slice().iter().all(|v| v.is_finite()) {
             return Err(Error::Data("candidate k-means shard has non-finite centers".into()));
         }
+        // Bucket-major accounting: offsets/permutation/tails must agree
+        // with the index file, and the payload rows with the layout.
+        self.layout.validate(&self.index)?;
+        self.rows.validate(&self.layout)?;
         Ok(())
     }
 }
@@ -286,7 +327,11 @@ impl ServableModel for KmeansModel {
     }
 
     fn n_originals(&self) -> usize {
-        self.points.rows()
+        self.layout.n_rows()
+    }
+
+    fn set_rescan_path(&mut self, path: RescanPath) {
+        self.rescan = path;
     }
 
     fn answer_initial(&self, query: &Self::Query) -> InitialAnswer<Self::Answer> {
@@ -373,7 +418,7 @@ impl ServableModel for KmeansModel {
         let mut best = initial.answer;
         for &b in &chosen {
             for &local in &self.index[b] {
-                let d = sq_dist(self.points.row(local as usize), &query.point);
+                let d = sq_dist(self.original_row(local), &query.point);
                 if d < best.dist {
                     best = RepMatch {
                         dist: d,
@@ -407,14 +452,18 @@ impl ServableModel for KmeansModel {
             self.backend.as_ref(),
             &grouped,
             &self.index,
+            &self.layout,
+            &self.rows,
+            self.rescan,
             |q| queries[q].point.as_slice(),
-            |l| self.points.row(l as usize),
         );
         // Scatter: the scalar strict-< scan per query, in plan order,
         // reading the shared scored rows — so the chosen representative
         // (ties included) matches `refine` bit-for-bit on the native
-        // backend: `argmin_row` keeps the row's first strict minimum,
-        // exactly where the sequential scan would have stopped.
+        // backend: `argmin_row` keeps the head's first strict minimum
+        // and the tail continuation only replaces it on strictly
+        // smaller, exactly where the sequential scan would have
+        // stopped.
         let answers = plans
             .iter()
             .enumerate()
@@ -424,7 +473,14 @@ impl ServableModel for KmeansModel {
                     let Some(block) = blocks[b].as_ref() else {
                         continue; // empty bucket: no originals to rescan
                     };
-                    let (jj, d) = argmin_row(block.row(grouped.slots[qi][j]));
+                    let (head, tail) = block.parts(grouped.slots[qi][j]);
+                    let (mut jj, mut d) = argmin_row(head);
+                    for (t, &dv) in tail.iter().enumerate() {
+                        if dv < d {
+                            d = dv;
+                            jj = head.len() + t;
+                        }
+                    }
                     if d < best.dist {
                         best = RepMatch {
                             dist: d,
@@ -612,7 +668,8 @@ mod tests {
             .unwrap();
         assert_eq!(one_shot.centers, stepped.centers);
         assert_eq!(one_shot.index, stepped.index);
-        assert_eq!(one_shot.points, stepped.points);
+        assert_eq!(one_shot.layout, stepped.layout);
+        assert_eq!(one_shot.rows, stepped.rows);
         assert_eq!(one_shot.point_cluster, stepped.point_cluster);
         assert_eq!(one_shot.center_cluster, stepped.center_cluster);
         assert_eq!(
@@ -630,6 +687,33 @@ mod tests {
         let init = one_shot.answer_initial(&q);
         let refined = one_shot.refine(&q, &init, ServableModel::n_buckets(&one_shot));
         assert!(refined.dist <= 1e-12);
+    }
+
+    #[test]
+    fn slice_rescan_is_bit_identical_to_gather_rescan() {
+        let (model, pts) = shard();
+        let grown = model.merge_deltas(
+            &(0..7).map(|i| pts.row(i * 11).to_vec()).collect::<Vec<_>>(),
+        )
+        .unwrap();
+        for mut m in [model, grown] {
+            let queries: Vec<KmeansQuery> = (0..pts.rows())
+                .step_by(41)
+                .map(|r| KmeansQuery {
+                    point: pts.row(r).to_vec(),
+                    seed: r as u64,
+                })
+                .collect();
+            let refs: Vec<&KmeansQuery> = queries.iter().collect();
+            let initials = m.answer_initial_block(&refs);
+            let budgets: Vec<usize> = (0..refs.len()).map(|i| i % 4).collect();
+            m.set_rescan_path(RescanPath::Gather);
+            let g = m.refine_block(&refs, &initials, &budgets);
+            m.set_rescan_path(RescanPath::Slice);
+            let s = m.refine_block(&refs, &initials, &budgets);
+            assert_eq!(g.answers, s.answers);
+            assert_eq!(g.bucket_groups, s.bucket_groups);
+        }
     }
 
     #[test]

@@ -13,11 +13,12 @@ use crate::approx::algorithm1::{
 use crate::apps::knn::classify::{majority_vote, merge_candidates, LabeledCandidate};
 use crate::data::matrix::{sq_dist, Matrix};
 use crate::data::points::RowRange;
+use crate::data::{BucketLayout, BucketRows};
 use crate::error::Result;
 use crate::lsh::bucketizer::Grouping;
 use crate::lsh::Bucketizer;
 use crate::mapreduce::metrics::TaskMetrics;
-use crate::model::{InitialAnswer, RefinedBlock, ServableModel};
+use crate::model::{InitialAnswer, RefinedBlock, RescanPath, ServableModel};
 use crate::runtime::backend::{ScoreBackend, TopK};
 use crate::util::timer::Stopwatch;
 
@@ -31,16 +32,20 @@ pub struct KnnQuery {
     pub seed: u64,
 }
 
-/// One kNN shard: the gathered partition rows, their labels, and the
+/// One kNN shard: the partition rows stored bucket-major (each
+/// bucket's members contiguous — see [`crate::data::bucket_major`]),
+/// their labels (still indexed by the original local ids), and the
 /// aggregation (Fig. 2b parts 1-2), plus the scoring backend. Built
 /// once; every query is answered against it.
 pub struct KnnModel {
-    part: Matrix,
+    layout: BucketLayout,
+    rows: BucketRows,
     labels: Vec<u32>,
     agg: AggregatedPoints,
     k: usize,
     refine_order: RefineOrder,
     backend: Arc<dyn ScoreBackend>,
+    rescan: RescanPath,
 }
 
 impl KnnModel {
@@ -76,16 +81,32 @@ impl KnnModel {
 
         // Part 2: information aggregation of original data points.
         let agg = AggregatedPoints::build(&part, &labels, &bucketing)?;
+        // Bucket-major permutation of the partition rows: each bucket's
+        // members become one contiguous row range, so stage-2 rescans
+        // can score slices instead of gathering copies. Labels stay
+        // indexed by the original local ids (the ids `agg.index` and
+        // every candidate list carry).
+        let layout = BucketLayout::build(&agg.index, part.rows())?;
+        let rows = BucketRows::build(&layout, part.cols(), |l| part.row(l as usize));
         metrics.aggregate_s += sw.lap_s();
 
         Ok(KnnModel {
-            part,
+            layout,
+            rows,
             labels,
             agg,
             k,
             refine_order,
             backend,
+            rescan: RescanPath::from_env(),
         })
+    }
+
+    /// An original partition row by its local id (the id candidate
+    /// lists and `agg.index` carry), resolved through the bucket-major
+    /// permutation.
+    pub fn original_row(&self, local: u32) -> &[f32] {
+        self.rows.row(&self.layout, local)
     }
 
     /// Dense (queries × buckets) squared-distance block against the
@@ -155,7 +176,7 @@ impl KnnModel {
         // Refined buckets contribute their original points...
         for &b in chosen {
             for &local in &self.agg.index[b] {
-                let d = sq_dist(self.part.row(local as usize), q);
+                let d = sq_dist(self.original_row(local), q);
                 topk.push(d, local);
             }
         }
@@ -186,16 +207,19 @@ impl KnnModel {
     /// stage-2 adapter (gather → score → scatter):
     ///
     /// 1. **gather** — the per-query plans are grouped by bucket
-    ///    ([`group_plans_by_bucket`]); each refined bucket's original
-    ///    rows and its member queries' rows are gathered into dense
-    ///    blocks once, however many queries share the bucket;
-    /// 2. **score** — each block pair is scored in ONE
-    ///    [`ScoreBackend::knn_dists`] call per bucket-group (so rescans
-    ///    route through PJRT whenever the shard's backend does);
+    ///    ([`group_plans_by_bucket`]); each bucket-group's member
+    ///    queries' rows are gathered into a dense block once, however
+    ///    many queries share the bucket (queries are the small side);
+    /// 2. **score** — the bucket's original rows are scored zero-copy
+    ///    as a contiguous slice of the bucket-major shard matrix
+    ///    (plus its refresh-appended tail segment), or as one gathered
+    ///    copy under [`RescanPath::Gather`] — see
+    ///    [`crate::model::score_distance_blocks`];
     /// 3. **scatter** — per query, the scored rows are replayed in the
     ///    plan's Algorithm-1 order into the same top-k/merge sequence
     ///    the scalar path runs, so results are bit-identical to
-    ///    `refine_query` on the native backend.
+    ///    `refine_query` on the native backend (and across the two
+    ///    rescan paths).
     ///
     /// `queries[i]`/`drows[i]`/`plans[i]` describe query `i` (feature
     /// row, aggregated-centroid distance row, ranked buckets). Returns
@@ -215,8 +239,10 @@ impl KnnModel {
             self.backend.as_ref(),
             &grouped,
             &self.agg.index,
+            &self.layout,
+            &self.rows,
+            self.rescan,
             |q| queries[q],
-            |l| self.part.row(l as usize),
         );
 
         // Scatter: the same selection/merge sequence as `refine_query`,
@@ -234,9 +260,10 @@ impl KnnModel {
                 let Some(block) = blocks[b].as_ref() else {
                     continue; // empty bucket: no originals to rescan
                 };
-                let row = block.row(grouped.slots[q][j]);
-                for (jj, &local) in self.agg.index[b].iter().enumerate() {
-                    topk.push(row[jj], local);
+                let (head, tail) = block.parts(grouped.slots[q][j]);
+                debug_assert_eq!(head.len() + tail.len(), self.agg.index[b].len());
+                for (&local, &d) in self.agg.index[b].iter().zip(head.iter().chain(tail)) {
+                    topk.push(d, local);
                 }
             }
             let mut cands: Vec<LabeledCandidate> = topk
@@ -286,10 +313,13 @@ impl KnnModel {
     /// and the bucket's majority label is recomputed under the same
     /// tie-break the batch aggregation uses. Points are absorbed
     /// sequentially, so folding a log in one call is bit-identical to
-    /// folding it split across calls.
+    /// folding it split across calls. Absorbed rows land in the chosen
+    /// bucket's *tail segment* (the bucket-major base matrix is
+    /// immutable here); [`crate::refresh::Refreshable::compact`]
+    /// re-permutes them into the base during rebuilds.
     pub fn merge_deltas(&self, deltas: &[crate::refresh::LabeledPoint]) -> Result<KnnModel> {
         use crate::error::Error;
-        let d = self.part.cols();
+        let d = self.rows.cols();
         for p in deltas {
             if p.features.len() != d {
                 return Err(Error::Data(format!(
@@ -301,16 +331,13 @@ impl KnnModel {
         if self.agg.is_empty() {
             return Err(Error::Data("cannot merge deltas into a bucketless shard".into()));
         }
-        let mut dm = Matrix::zeros(deltas.len(), d);
-        for (i, p) in deltas.iter().enumerate() {
-            dm.row_mut(i).copy_from_slice(&p.features);
-        }
-        let part = self.part.vstack(&dm)?;
+        let mut layout = self.layout.clone();
+        let mut rows = self.rows.clone();
         let mut labels = self.labels.clone();
         labels.extend(deltas.iter().map(|p| p.label));
         let mut agg = self.agg.clone();
         for (i, p) in deltas.iter().enumerate() {
-            let local = (self.part.rows() + i) as u32;
+            let local = (self.layout.n_rows() + i) as u32;
             let b = crate::model::kmeans::absorb_point(
                 &mut agg.centroids,
                 &mut agg.index,
@@ -320,14 +347,21 @@ impl KnnModel {
             agg.labels[b] = crate::aggregate::majority_label_of(
                 agg.index[b].iter().map(|&l| labels[l as usize]),
             );
+            // Tail append order == absorb order == index order, so the
+            // slice path's head+tail chain keeps matching `index[b]`.
+            let assigned = layout.append(b);
+            debug_assert_eq!(assigned, local);
+            rows.push_tail(b, &p.features);
         }
         Ok(KnnModel {
-            part,
+            layout,
+            rows,
             labels,
             agg,
             k: self.k,
             refine_order: self.refine_order,
             backend: Arc::clone(&self.backend),
+            rescan: self.rescan,
         })
     }
 }
@@ -337,6 +371,25 @@ impl crate::refresh::Refreshable for KnnModel {
 
     fn merge_deltas(&self, deltas: &[Self::Delta]) -> Result<KnnModel> {
         KnnModel::merge_deltas(self, deltas)
+    }
+
+    fn compact(self) -> Result<KnnModel> {
+        if !self.layout.needs_compaction() {
+            return Ok(self);
+        }
+        // Re-permute the accumulated tail segments into a fresh
+        // bucket-major base. Row *content* per local id is unchanged,
+        // so scoring stays bit-identical — only the physical order
+        // (and thus the slice path's base coverage) improves.
+        let layout = BucketLayout::build(&self.agg.index, self.layout.n_rows())?;
+        let rows = BucketRows::build(&layout, self.rows.cols(), |l| {
+            self.rows.row(&self.layout, l)
+        });
+        Ok(KnnModel {
+            layout,
+            rows,
+            ..self
+        })
     }
 
     fn validate(&self) -> Result<()> {
@@ -350,14 +403,18 @@ impl crate::refresh::Refreshable for KnnModel {
         if let Some(b) = self.agg.index.iter().position(Vec::is_empty) {
             return Err(Error::Data(format!("candidate kNN shard bucket {b} is empty")));
         }
-        if self.agg.total_originals() != self.part.rows()
-            || self.labels.len() != self.part.rows()
+        if self.agg.total_originals() != self.layout.n_rows()
+            || self.labels.len() != self.layout.n_rows()
         {
             return Err(Error::Data("candidate kNN shard index accounting broken".into()));
         }
         if !self.agg.centroids.as_slice().iter().all(|v| v.is_finite()) {
             return Err(Error::Data("candidate kNN shard has non-finite centroids".into()));
         }
+        // Bucket-major accounting: offsets/permutation/tails must agree
+        // with the index file, and the payload rows with the layout.
+        self.layout.validate(&self.agg.index)?;
+        self.rows.validate(&self.layout)?;
         Ok(())
     }
 }
@@ -372,7 +429,11 @@ impl ServableModel for KnnModel {
     }
 
     fn n_originals(&self) -> usize {
-        self.part.rows()
+        self.layout.n_rows()
+    }
+
+    fn set_rescan_path(&mut self, path: RescanPath) {
+        self.rescan = path;
     }
 
     fn answer_initial(&self, query: &Self::Query) -> InitialAnswer<Self::Answer> {
@@ -655,8 +716,8 @@ mod tests {
             let init = model.answer_initial(&q);
             let refined = model.refine(&q, &init, model.n_buckets());
             let mut topk = TopK::new(model.k());
-            for r in 0..model.part.rows() {
-                topk.push(sq_dist(model.part.row(r), &q.features), r as u32);
+            for r in 0..ServableModel::n_originals(&model) {
+                topk.push(sq_dist(model.original_row(r as u32), &q.features), r as u32);
             }
             let exact: Vec<LabeledCandidate> = topk
                 .into_sorted()
@@ -690,7 +751,8 @@ mod tests {
         assert_eq!(one_shot.agg.centroids, stepped.agg.centroids);
         assert_eq!(one_shot.agg.index, stepped.agg.index);
         assert_eq!(one_shot.agg.labels, stepped.agg.labels);
-        assert_eq!(one_shot.part, stepped.part);
+        assert_eq!(one_shot.layout, stepped.layout);
+        assert_eq!(one_shot.rows, stepped.rows);
         assert_eq!(one_shot.labels, stepped.labels);
         assert_eq!(
             ServableModel::n_originals(&one_shot),
@@ -713,6 +775,60 @@ mod tests {
         let init = one_shot.answer_initial(&q);
         let refined = one_shot.refine(&q, &init, one_shot.n_buckets());
         assert!(refined[0].0 <= 1e-12, "the query itself was ingested");
+    }
+
+    #[test]
+    fn slice_rescan_is_bit_identical_to_gather_rescan() {
+        // The tentpole invariant at model granularity: both rescan
+        // paths produce byte-equal candidate lists, before and after
+        // refresh appends grow tail segments.
+        use crate::refresh::{LabeledPoint, Refreshable};
+        let (model, data) = shard();
+        let deltas: Vec<LabeledPoint> = (0..9)
+            .map(|i| {
+                let t = i % data.test.rows();
+                LabeledPoint {
+                    features: data.test.row(t).to_vec(),
+                    label: data.test_labels[t],
+                }
+            })
+            .collect();
+        let grown = model.merge_deltas(&deltas).unwrap();
+        for base in [model, grown] {
+            let mut gather = base;
+            gather.set_rescan_path(RescanPath::Gather);
+            let mut slice = KnnModel {
+                layout: gather.layout.clone(),
+                rows: gather.rows.clone(),
+                labels: gather.labels.clone(),
+                agg: gather.agg.clone(),
+                k: gather.k,
+                refine_order: gather.refine_order,
+                backend: Arc::clone(&gather.backend),
+                rescan: gather.rescan,
+            };
+            slice.set_rescan_path(RescanPath::Slice);
+            let queries: Vec<KnnQuery> = (0..data.test.rows())
+                .map(|t| KnnQuery {
+                    features: data.test.row(t).to_vec(),
+                    label: None,
+                    seed: t as u64,
+                })
+                .collect();
+            let refs: Vec<&KnnQuery> = queries.iter().collect();
+            let initials = gather.answer_initial_block(&refs);
+            let budgets: Vec<usize> = (0..refs.len()).map(|i| i % 4).collect();
+            let g = gather.refine_block(&refs, &initials, &budgets);
+            let s = slice.refine_block(&refs, &initials, &budgets);
+            assert_eq!(g.answers, s.answers);
+            assert_eq!(g.bucket_groups, s.bucket_groups);
+            // Compaction preserves answers too (content per id is
+            // unchanged; only physical order moves).
+            let compacted = slice.compact().unwrap();
+            let c = compacted.refine_block(&refs, &initials, &budgets);
+            assert_eq!(g.answers, c.answers);
+            Refreshable::validate(&compacted).unwrap();
+        }
     }
 
     #[test]

@@ -26,11 +26,82 @@ pub mod knn;
 
 use crate::approx::algorithm1::{refinement_selection, BucketGroups, RefineOrder};
 use crate::data::matrix::Matrix;
+use crate::data::{BucketLayout, BucketRows};
 use crate::runtime::backend::{GatherBuf, ScoreBackend};
 
 pub use cf::{CfModel, CfPartial, CfQuery};
 pub use kmeans::{KmeansModel, KmeansQuery, RepMatch};
 pub use knn::{KnnModel, KnnQuery};
+
+/// How stage-2 rescans feed original rows to the backend.
+///
+/// Shards store originals bucket-major (see
+/// [`crate::data::bucket_major`]), so a bucket's built-time members are
+/// one contiguous row range of the shard matrix. `Slice` scores that
+/// range in place via [`ScoreBackend::knn_dists_rows`] /
+/// [`ScoreBackend::cf_weights_rows`] (plus one call over the bucket's
+/// refresh-appended tail segment when non-empty); `Gather` keeps the
+/// pre-bucket-major behavior — copy the bucket's rows into a
+/// [`GatherBuf`] block and score the copy. Both paths produce
+/// bit-identical [`RefinedBlock`]s (pinned in
+/// `tests/kernel_equivalence.rs`): per-pair kernel values depend only
+/// on the two rows, and the scatter walks the same ids in the same
+/// order. `Gather` survives as the bench baseline and bit-identity
+/// reference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RescanPath {
+    /// Copy bucket rows into a dense block before scoring.
+    Gather,
+    /// Score the bucket's contiguous row range in place (default).
+    Slice,
+}
+
+impl RescanPath {
+    /// Path from the `AML_RESCAN` environment variable: `gather` picks
+    /// the copying reference path, anything else (including unset) the
+    /// zero-copy slice path. Read once at model construction.
+    pub fn from_env() -> RescanPath {
+        match std::env::var("AML_RESCAN") {
+            Ok(v) if v.trim().eq_ignore_ascii_case("gather") => RescanPath::Gather,
+            _ => RescanPath::Slice,
+        }
+    }
+}
+
+/// One bucket-group's scored rescan block. `head` covers the bucket's
+/// built-time members (columns follow `index[b]` order, i.e. base-row
+/// order); `tail`, when present, covers the refresh-appended members in
+/// append order. Chained per member-query row, the two segments are
+/// column-for-column the block the gather path scores in one piece.
+#[derive(Clone, Debug)]
+pub struct ScoredBlock {
+    head: Matrix,
+    tail: Option<Matrix>,
+}
+
+impl ScoredBlock {
+    /// A block scored in one piece (gather path, or slice path with an
+    /// empty tail segment).
+    pub(crate) fn solid(head: Matrix) -> ScoredBlock {
+        ScoredBlock { head, tail: None }
+    }
+
+    /// A block scored as base slice + appended tail.
+    pub(crate) fn split(head: Matrix, tail: Matrix) -> ScoredBlock {
+        ScoredBlock {
+            head,
+            tail: Some(tail),
+        }
+    }
+
+    /// The scored values for one member query of the group: the base
+    /// segment and the tail segment. `head.chain(tail)` enumerates the
+    /// bucket's members in `index[b]` order.
+    pub fn parts(&self, member: usize) -> (&[f32], &[f32]) {
+        let tail = self.tail.as_ref().map(|t| t.row(member)).unwrap_or(&[]);
+        (self.head.row(member), tail)
+    }
+}
 
 /// Stage-1 product for one query against one shard: the answer derived
 /// from aggregated points only, plus one correlation per bucket
@@ -69,21 +140,27 @@ pub(crate) fn plan_block<A>(
         .collect()
 }
 
-/// The gather + score half of a distance-based block rescan (kNN rows,
-/// k-means points), shared by the two `knn_dists`-scoring models: per
-/// bucket-group, gather the member queries' rows and the bucket's
-/// original rows (allocation-reusing [`GatherBuf`]s) and score them in
-/// ONE [`ScoreBackend::knn_dists`] call. Returns the per-bucket
-/// distance blocks (indexed by bucket id) and the number of groups
-/// scored (== backend calls; empty buckets are skipped defensively).
+/// The score half of a distance-based block rescan (kNN rows, k-means
+/// points), shared by the two `knn_dists`-scoring models: per
+/// bucket-group, gather the member queries' rows (allocation-reusing
+/// [`GatherBuf`]; queries are the small side) and score them against
+/// the bucket's original rows — zero-copy on the scanned side under
+/// [`RescanPath::Slice`] (the bucket's base rows are one contiguous
+/// range of the bucket-major shard matrix), or via a gathered copy
+/// under [`RescanPath::Gather`]. Returns the per-bucket scored blocks
+/// (indexed by bucket id, columns in `index[b]` order either way) and
+/// the number of distinct groups scored (empty buckets are skipped
+/// defensively).
 pub(crate) fn score_distance_blocks<'a>(
     backend: &dyn ScoreBackend,
     grouped: &BucketGroups,
     index: &[Vec<u32>],
+    layout: &BucketLayout,
+    rows: &BucketRows,
+    path: RescanPath,
     query_row: impl Fn(usize) -> &'a [f32],
-    original_row: impl Fn(u32) -> &'a [f32],
-) -> (Vec<Option<Matrix>>, usize) {
-    let mut blocks: Vec<Option<Matrix>> = vec![None; index.len()];
+) -> (Vec<Option<ScoredBlock>>, usize) {
+    let mut blocks: Vec<Option<ScoredBlock>> = vec![None; index.len()];
     let mut scored_groups = 0;
     let mut qbuf = GatherBuf::default();
     let mut xbuf = GatherBuf::default();
@@ -92,14 +169,39 @@ pub(crate) fn score_distance_blocks<'a>(
             continue; // nothing to rescan (defensive; buckets are non-empty)
         }
         let qm = qbuf.gather(members.iter().map(|&q| query_row(q)));
-        let xm = xbuf.gather(index[*b].iter().map(|&l| original_row(l)));
         // Large bucket-group rescans split across the pool when the
-        // backend is a ParallelBackend (x rows are the scanned side);
-        // small groups stay serial under its auto threshold.
-        let dists = backend.knn_dists(&qm, &xm).expect("backend scoring failed");
+        // backend is a ParallelBackend (scanned rows are the split
+        // axis); small groups stay serial under its auto threshold.
+        let block = match path {
+            RescanPath::Gather => {
+                let xm = xbuf.gather(index[*b].iter().map(|&l| rows.row(layout, l)));
+                let dists = backend.knn_dists(&qm, &xm).expect("backend scoring failed");
+                xbuf.recycle(xm);
+                ScoredBlock::solid(dists)
+            }
+            RescanPath::Slice => {
+                let (b0, b1) = layout.base_range(*b);
+                let head = if b1 > b0 {
+                    backend
+                        .knn_dists_rows(&qm, rows.base(), b0, b1)
+                        .expect("backend scoring failed")
+                } else {
+                    // Every built-time member was appended post-build
+                    // (possible only for buckets born empty) — nothing
+                    // to slice.
+                    Matrix::zeros(qm.rows(), 0)
+                };
+                let tail = rows.tail(*b);
+                if tail.rows() > 0 {
+                    let t = backend.knn_dists(&qm, tail).expect("backend scoring failed");
+                    ScoredBlock::split(head, t)
+                } else {
+                    ScoredBlock::solid(head)
+                }
+            }
+        };
         qbuf.recycle(qm);
-        xbuf.recycle(xm);
-        blocks[*b] = Some(dists);
+        blocks[*b] = Some(block);
         scored_groups += 1;
     }
     (blocks, scored_groups)
@@ -137,6 +239,13 @@ pub trait ServableModel: Send + Sync + 'static {
     /// Original data points behind this shard's buckets (used by the
     /// deadline-adaptive budget estimator in [`crate::serve`]).
     fn n_originals(&self) -> usize;
+
+    /// Switch the stage-2 rescan path (bucket-major models override;
+    /// the default is a no-op for fixtures without original-row
+    /// storage). Benches use this to pit [`RescanPath::Gather`]
+    /// against [`RescanPath::Slice`] on the same shard; production
+    /// shards read [`RescanPath::from_env`] once at build time.
+    fn set_rescan_path(&mut self, _path: RescanPath) {}
 
     /// Stage 1 for one query: the answer from aggregated points plus
     /// the per-bucket correlations that rank refinement.

@@ -59,7 +59,23 @@ pub trait Refreshable: ServableModel + Sized {
     /// Fold `deltas` in order into a candidate replacement shard.
     fn merge_deltas(&self, deltas: &[Self::Delta]) -> Result<Self>;
 
+    /// Amortized housekeeping after a fold, run by the [`Rebuilder`]
+    /// between `merge_deltas` and `validate`. Models with bucket-major
+    /// storage ([`crate::data::bucket_major`]) re-permute
+    /// refresh-appended tail segments into a fresh contiguous base
+    /// once the tails grow past the layout's threshold
+    /// (`BucketLayout::needs_compaction`); the result must answer
+    /// queries bit-identically to the uncompacted shard (row content
+    /// per id is unchanged — only physical order moves). Kept separate
+    /// from `merge_deltas` so the fold itself stays batch-associative
+    /// at physical equality. The default is a no-op.
+    fn compact(self) -> Result<Self> {
+        Ok(self)
+    }
+
     /// Check a candidate before it may be swapped in: non-empty
-    /// buckets, finite aggregates, consistent index accounting.
+    /// buckets, finite aggregates, consistent index accounting (for
+    /// bucket-major models, also the offsets/permutation/tail
+    /// accounting).
     fn validate(&self) -> Result<()>;
 }

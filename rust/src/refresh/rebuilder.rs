@@ -149,8 +149,11 @@ impl<M: Refreshable> Rebuilder<M> {
             // threshold, so they never fan helper tiles onto the
             // regular lane and the low-lane reservation math holds.
             // (AML_SPLIT=N forcing is the one debugging exception.)
+            // Fold, then amortized compaction (bucket-major models
+            // re-permute overgrown tail segments into a fresh base
+            // here — off the serving path, on the low lane).
             pool.stream_into_low(&self.tx, s, move || {
-                let candidate = base.merge_deltas(&deltas);
+                let candidate = base.merge_deltas(&deltas).and_then(Refreshable::compact);
                 (deltas, candidate)
             });
         }
@@ -313,9 +316,11 @@ mod tests {
 
     /// Toy refreshable shard: the answer is a running sum of absorbed
     /// deltas; negative deltas poison the merge (to exercise failure
-    /// requeue) and a sum above 1000 fails validation.
+    /// requeue) and a sum above 1000 fails validation. `compacted`
+    /// records that the rebuilder ran the post-fold compaction hook.
     struct SumModel {
         sum: i64,
+        compacted: bool,
     }
 
     impl ServableModel for SumModel {
@@ -355,6 +360,14 @@ mod tests {
             }
             Ok(SumModel {
                 sum: self.sum + deltas.iter().sum::<i64>(),
+                compacted: false,
+            })
+        }
+
+        fn compact(self) -> Result<SumModel> {
+            Ok(SumModel {
+                compacted: true,
+                ..self
             })
         }
 
@@ -367,7 +380,14 @@ mod tests {
     }
 
     fn setup(n_shards: usize) -> (Arc<ModelRegistry<SumModel>>, Rebuilder<SumModel>) {
-        let shards = (0..n_shards).map(|_| Arc::new(SumModel { sum: 0 })).collect();
+        let shards = (0..n_shards)
+            .map(|_| {
+                Arc::new(SumModel {
+                    sum: 0,
+                    compacted: false,
+                })
+            })
+            .collect();
         let registry = Arc::new(ModelRegistry::new(shards).unwrap());
         let log = Arc::new(DeltaLog::new(n_shards));
         let rebuilder = Rebuilder::new(Arc::clone(&registry), log);
@@ -388,6 +408,7 @@ mod tests {
         let pinned = registry.pin();
         assert_eq!(pinned.shards()[0].sum, 12);
         assert_eq!(pinned.shards()[1].sum, 11);
+        assert!(pinned.shards()[0].compacted, "rebuild runs the compaction hook");
         assert_eq!(registry.swap_count(), 2);
         let stats = rb.stats();
         assert_eq!(stats.swaps, 2);

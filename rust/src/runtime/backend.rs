@@ -48,10 +48,40 @@ pub trait ScoreBackend: Send + Sync {
     /// Full (q.rows × x.rows) squared-distance matrix.
     fn knn_dists(&self, q: &Matrix, x: &Matrix) -> Result<Matrix>;
 
+    /// Squared distances against the contiguous row slice
+    /// `x[x0..x1]`: same values in the same order as
+    /// `knn_dists(q, &x.row_range(x0, x1))`. The default performs that
+    /// copy, so every backend (including PJRT, whose artifacts want
+    /// owned padded blocks anyway) is correct out of the box; the
+    /// kernel-backed backends override it to score the borrowed view
+    /// zero-copy — the bucket-major stage-2 rescan path.
+    fn knn_dists_rows(&self, q: &Matrix, x: &Matrix, x0: usize, x1: usize) -> Result<Matrix> {
+        check_row_range(x, x0, x1)?;
+        self.knn_dists(q, &x.row_range(x0, x1))
+    }
+
     /// Masked Pearson weights: (a.rows × u.rows). Inputs are centered,
     /// mask-zeroed rating rows + masks (see `python/compile/kernels/
     /// similarity.py` for the formulation).
     fn cf_weights(&self, ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Result<Matrix>;
+
+    /// [`ScoreBackend::cf_weights`] against the contiguous user slice
+    /// `cu[u0..u1]` / `mu[u0..u1]` — the CF twin of
+    /// [`ScoreBackend::knn_dists_rows`], with the same
+    /// default-copies / kernels-borrow split.
+    fn cf_weights_rows(
+        &self,
+        ca: &Matrix,
+        ma: &Matrix,
+        cu: &Matrix,
+        mu: &Matrix,
+        u0: usize,
+        u1: usize,
+    ) -> Result<Matrix> {
+        check_row_range(cu, u0, u1)?;
+        check_row_range(mu, u0, u1)?;
+        self.cf_weights(ca, ma, &cu.row_range(u0, u1), &mu.row_range(u0, u1))
+    }
 
     /// Backend label for reports.
     fn name(&self) -> &'static str;
@@ -229,18 +259,51 @@ impl ScoreBackend for NativeBackend {
         out: &mut Vec<Vec<Candidate>>,
     ) -> Result<()> {
         check_dims(q, x)?;
-        kernels::knn_topk_into(kernels::dispatch(), q, x, k, out);
+        kernels::knn_topk_into(kernels::dispatch(), q.view(), x.view(), k, out);
         Ok(())
     }
 
     fn knn_dists(&self, q: &Matrix, x: &Matrix) -> Result<Matrix> {
         check_dims(q, x)?;
-        Ok(kernels::sq_dists(kernels::dispatch(), q, x))
+        Ok(kernels::sq_dists(kernels::dispatch(), q.view(), x.view()))
+    }
+
+    fn knn_dists_rows(&self, q: &Matrix, x: &Matrix, x0: usize, x1: usize) -> Result<Matrix> {
+        check_dims(q, x)?;
+        check_row_range(x, x0, x1)?;
+        Ok(kernels::sq_dists(kernels::dispatch(), q.view(), x.rows_view(x0, x1)))
     }
 
     fn cf_weights(&self, ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Result<Matrix> {
         check_cf_dims(ca, ma, cu, mu)?;
-        Ok(kernels::cf_weights(kernels::dispatch(), ca, ma, cu, mu))
+        Ok(kernels::cf_weights(
+            kernels::dispatch(),
+            ca.view(),
+            ma.view(),
+            cu.view(),
+            mu.view(),
+        ))
+    }
+
+    fn cf_weights_rows(
+        &self,
+        ca: &Matrix,
+        ma: &Matrix,
+        cu: &Matrix,
+        mu: &Matrix,
+        u0: usize,
+        u1: usize,
+    ) -> Result<Matrix> {
+        check_cf_dims(ca, ma, cu, mu)?;
+        check_row_range(cu, u0, u1)?;
+        check_row_range(mu, u0, u1)?;
+        Ok(kernels::cf_weights(
+            kernels::dispatch(),
+            ca.view(),
+            ma.view(),
+            cu.rows_view(u0, u1),
+            mu.rows_view(u0, u1),
+        ))
     }
 
     fn name(&self) -> &'static str {
@@ -263,18 +326,55 @@ impl ScoreBackend for ScalarBackend {
         out: &mut Vec<Vec<Candidate>>,
     ) -> Result<()> {
         check_dims(q, x)?;
-        kernels::knn_topk_into(kernels::KernelMode::Scalar, q, x, k, out);
+        kernels::knn_topk_into(kernels::KernelMode::Scalar, q.view(), x.view(), k, out);
         Ok(())
     }
 
     fn knn_dists(&self, q: &Matrix, x: &Matrix) -> Result<Matrix> {
         check_dims(q, x)?;
-        Ok(kernels::sq_dists(kernels::KernelMode::Scalar, q, x))
+        Ok(kernels::sq_dists(kernels::KernelMode::Scalar, q.view(), x.view()))
+    }
+
+    fn knn_dists_rows(&self, q: &Matrix, x: &Matrix, x0: usize, x1: usize) -> Result<Matrix> {
+        check_dims(q, x)?;
+        check_row_range(x, x0, x1)?;
+        Ok(kernels::sq_dists(
+            kernels::KernelMode::Scalar,
+            q.view(),
+            x.rows_view(x0, x1),
+        ))
     }
 
     fn cf_weights(&self, ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Result<Matrix> {
         check_cf_dims(ca, ma, cu, mu)?;
-        Ok(kernels::cf_weights(kernels::KernelMode::Scalar, ca, ma, cu, mu))
+        Ok(kernels::cf_weights(
+            kernels::KernelMode::Scalar,
+            ca.view(),
+            ma.view(),
+            cu.view(),
+            mu.view(),
+        ))
+    }
+
+    fn cf_weights_rows(
+        &self,
+        ca: &Matrix,
+        ma: &Matrix,
+        cu: &Matrix,
+        mu: &Matrix,
+        u0: usize,
+        u1: usize,
+    ) -> Result<Matrix> {
+        check_cf_dims(ca, ma, cu, mu)?;
+        check_row_range(cu, u0, u1)?;
+        check_row_range(mu, u0, u1)?;
+        Ok(kernels::cf_weights(
+            kernels::KernelMode::Scalar,
+            ca.view(),
+            ma.view(),
+            cu.rows_view(u0, u1),
+            mu.rows_view(u0, u1),
+        ))
     }
 
     fn name(&self) -> &'static str {
@@ -324,6 +424,16 @@ fn check_dims(q: &Matrix, x: &Matrix) -> Result<()> {
             "query dim {} != points dim {}",
             q.cols(),
             x.cols()
+        )));
+    }
+    Ok(())
+}
+
+fn check_row_range(x: &Matrix, a: usize, b: usize) -> Result<()> {
+    if a > b || b > x.rows() {
+        return Err(Error::Shape(format!(
+            "row range {a}..{b} out of bounds for {} rows",
+            x.rows()
         )));
     }
     Ok(())
@@ -750,6 +860,37 @@ mod tests {
         buf.recycle(g);
         let empty = buf.gather(std::iter::empty::<&[f32]>());
         assert_eq!(empty.rows(), 0);
+    }
+
+    #[test]
+    fn row_slice_scoring_is_bit_identical_to_range_copies() {
+        // The zero-copy overrides must reproduce the copying default
+        // exactly: per-pair kernel values depend only on the two rows,
+        // never on which matrix owns them (kernels.rs contract §3).
+        let q = rand_matrix(3, 13, 31);
+        let x = rand_matrix(20, 13, 32);
+        for (a, b) in [(0usize, 20usize), (4, 4), (7, 19), (0, 1)] {
+            let copy = NativeBackend.knn_dists(&q, &x.row_range(a, b)).unwrap();
+            let sliced = NativeBackend.knn_dists_rows(&q, &x, a, b).unwrap();
+            assert_eq!(copy, sliced, "native range {a}..{b}");
+            let copy = ScalarBackend.knn_dists(&q, &x.row_range(a, b)).unwrap();
+            let sliced = ScalarBackend.knn_dists_rows(&q, &x, a, b).unwrap();
+            assert_eq!(copy, sliced, "scalar range {a}..{b}");
+        }
+        let ca = rand_matrix(2, 16, 33);
+        let ma = rand_matrix(2, 16, 34);
+        let cu = rand_matrix(9, 16, 35);
+        let mu = rand_matrix(9, 16, 36);
+        for (a, b) in [(0usize, 9usize), (3, 3), (2, 8)] {
+            let copy = NativeBackend
+                .cf_weights(&ca, &ma, &cu.row_range(a, b), &mu.row_range(a, b))
+                .unwrap();
+            let sliced = NativeBackend.cf_weights_rows(&ca, &ma, &cu, &mu, a, b).unwrap();
+            assert_eq!(copy, sliced, "cf range {a}..{b}");
+        }
+        // Bad ranges are shape errors, not panics.
+        assert!(NativeBackend.knn_dists_rows(&q, &x, 5, 3).is_err());
+        assert!(NativeBackend.knn_dists_rows(&q, &x, 0, 21).is_err());
     }
 
     #[test]

@@ -46,7 +46,7 @@
 use std::cell::RefCell;
 use std::sync::OnceLock;
 
-use crate::data::matrix::{sq_dist, Matrix};
+use crate::data::matrix::{sq_dist, MatView, Matrix};
 use crate::runtime::backend::{pearson_pair, Candidate, TopK};
 
 /// Which kernel implementation a call routes to.
@@ -186,9 +186,15 @@ fn finish_pearson(sn: f32, s1: f32, s2: f32) -> f32 {
 // ---------------------------------------------------------------------------
 // Public entry points (dims validated by the backend)
 // ---------------------------------------------------------------------------
+//
+// Operands are borrowed [`MatView`]s so callers can score a contiguous
+// row range of a larger matrix in place — the bucket-major stage-2
+// rescans and the parallel tiles never copy the scanned side. A view
+// of the whole matrix (`m.view()`) recovers the old owned-operand
+// behavior bit for bit: the kernels only ever touch rows/cols/row.
 
 /// Full `q.rows × x.rows` squared-distance matrix.
-pub fn sq_dists(mode: KernelMode, q: &Matrix, x: &Matrix) -> Matrix {
+pub fn sq_dists(mode: KernelMode, q: MatView<'_>, x: MatView<'_>) -> Matrix {
     match mode {
         KernelMode::Scalar => scalar_sq_dists(q, x),
         #[cfg(target_arch = "x86_64")]
@@ -204,8 +210,8 @@ pub fn sq_dists(mode: KernelMode, q: &Matrix, x: &Matrix) -> Matrix {
 /// full Q×N matrix is never materialized.
 pub fn knn_topk_into(
     mode: KernelMode,
-    q: &Matrix,
-    x: &Matrix,
+    q: MatView<'_>,
+    x: MatView<'_>,
     k: usize,
     out: &mut Vec<Vec<Candidate>>,
 ) {
@@ -223,7 +229,13 @@ pub fn knn_topk_into(
 }
 
 /// Masked Pearson weight matrix (`ca.rows × cu.rows`).
-pub fn cf_weights(mode: KernelMode, ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Matrix {
+pub fn cf_weights(
+    mode: KernelMode,
+    ca: MatView<'_>,
+    ma: MatView<'_>,
+    cu: MatView<'_>,
+    mu: MatView<'_>,
+) -> Matrix {
     match mode {
         KernelMode::Scalar => scalar_cf_weights(ca, ma, cu, mu),
         #[cfg(target_arch = "x86_64")]
@@ -237,7 +249,7 @@ pub fn cf_weights(mode: KernelMode, ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &
 // Scalar reference (the pre-kernel NativeBackend loops, verbatim)
 // ---------------------------------------------------------------------------
 
-fn scalar_sq_dists(q: &Matrix, x: &Matrix) -> Matrix {
+fn scalar_sq_dists(q: MatView<'_>, x: MatView<'_>) -> Matrix {
     let mut out = Matrix::zeros(q.rows(), x.rows());
     for qi in 0..q.rows() {
         let qr = q.row(qi);
@@ -249,7 +261,7 @@ fn scalar_sq_dists(q: &Matrix, x: &Matrix) -> Matrix {
     out
 }
 
-fn scalar_topk_into(q: &Matrix, x: &Matrix, k: usize, out: &mut Vec<Vec<Candidate>>) {
+fn scalar_topk_into(q: MatView<'_>, x: MatView<'_>, k: usize, out: &mut Vec<Vec<Candidate>>) {
     out.resize_with(q.rows(), Vec::new);
     // One heap for the whole block: drained (not consumed) per query,
     // so the selection pass allocates nothing per row beyond the
@@ -265,7 +277,12 @@ fn scalar_topk_into(q: &Matrix, x: &Matrix, k: usize, out: &mut Vec<Vec<Candidat
     }
 }
 
-fn scalar_cf_weights(ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Matrix {
+fn scalar_cf_weights(
+    ca: MatView<'_>,
+    ma: MatView<'_>,
+    cu: MatView<'_>,
+    mu: MatView<'_>,
+) -> Matrix {
     let a = ca.rows();
     let n = cu.rows();
     let mut w = Matrix::zeros(a, n);
@@ -295,7 +312,7 @@ mod x86 {
     use std::arch::x86_64::*;
 
     use super::{assemble, finish_pearson, x_tile_rows, Arena, QB};
-    use crate::data::matrix::Matrix;
+    use crate::data::matrix::{MatView, Matrix};
     use crate::runtime::backend::Candidate;
 
     #[inline]
@@ -354,7 +371,7 @@ mod x86 {
     }
 
     #[target_feature(enable = "avx2,fma")]
-    unsafe fn row_norms(m: &Matrix, out: &mut Vec<f32>) {
+    unsafe fn row_norms(m: MatView<'_>, out: &mut Vec<f32>) {
         out.clear();
         for r in 0..m.rows() {
             let row = m.row(r);
@@ -363,7 +380,7 @@ mod x86 {
     }
 
     #[target_feature(enable = "avx2,fma")]
-    pub unsafe fn sq_dists(q: &Matrix, x: &Matrix, ar: &mut Arena) -> Matrix {
+    pub unsafe fn sq_dists(q: MatView<'_>, x: MatView<'_>, ar: &mut Arena) -> Matrix {
         row_norms(q, &mut ar.qn);
         row_norms(x, &mut ar.xn);
         let (nq, n) = (q.rows(), x.rows());
@@ -402,8 +419,8 @@ mod x86 {
 
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn topk_into(
-        q: &Matrix,
-        x: &Matrix,
+        q: MatView<'_>,
+        x: MatView<'_>,
         k: usize,
         ar: &mut Arena,
         out: &mut Vec<Vec<Candidate>>,
@@ -472,7 +489,12 @@ mod x86 {
     }
 
     #[target_feature(enable = "avx2,fma")]
-    pub unsafe fn cf_weights(ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Matrix {
+    pub unsafe fn cf_weights(
+        ca: MatView<'_>,
+        ma: MatView<'_>,
+        cu: MatView<'_>,
+        mu: MatView<'_>,
+    ) -> Matrix {
         let (na, n) = (ca.rows(), cu.rows());
         let mut w = Matrix::zeros(na, n);
         let mut a0 = 0;
@@ -500,7 +522,7 @@ mod neon {
     use std::arch::aarch64::*;
 
     use super::{assemble, finish_pearson, x_tile_rows, Arena, QB};
-    use crate::data::matrix::Matrix;
+    use crate::data::matrix::{MatView, Matrix};
     use crate::runtime::backend::Candidate;
 
     #[inline]
@@ -545,7 +567,7 @@ mod neon {
     }
 
     #[target_feature(enable = "neon")]
-    unsafe fn row_norms(m: &Matrix, out: &mut Vec<f32>) {
+    unsafe fn row_norms(m: MatView<'_>, out: &mut Vec<f32>) {
         out.clear();
         for r in 0..m.rows() {
             let row = m.row(r);
@@ -554,7 +576,7 @@ mod neon {
     }
 
     #[target_feature(enable = "neon")]
-    pub unsafe fn sq_dists(q: &Matrix, x: &Matrix, ar: &mut Arena) -> Matrix {
+    pub unsafe fn sq_dists(q: MatView<'_>, x: MatView<'_>, ar: &mut Arena) -> Matrix {
         row_norms(q, &mut ar.qn);
         row_norms(x, &mut ar.xn);
         let (nq, n) = (q.rows(), x.rows());
@@ -593,8 +615,8 @@ mod neon {
 
     #[target_feature(enable = "neon")]
     pub unsafe fn topk_into(
-        q: &Matrix,
-        x: &Matrix,
+        q: MatView<'_>,
+        x: MatView<'_>,
         k: usize,
         ar: &mut Arena,
         out: &mut Vec<Vec<Candidate>>,
@@ -663,7 +685,12 @@ mod neon {
     }
 
     #[target_feature(enable = "neon")]
-    pub unsafe fn cf_weights(ca: &Matrix, ma: &Matrix, cu: &Matrix, mu: &Matrix) -> Matrix {
+    pub unsafe fn cf_weights(
+        ca: MatView<'_>,
+        ma: MatView<'_>,
+        cu: MatView<'_>,
+        mu: MatView<'_>,
+    ) -> Matrix {
         let (na, n) = (ca.rows(), cu.rows());
         let mut w = Matrix::zeros(na, n);
         let mut a0 = 0;
@@ -716,8 +743,8 @@ mod tests {
         let mode = select(None);
         let q = rand_matrix(7, 19, 1);
         let x = rand_matrix(33, 19, 2);
-        let reference = sq_dists(KernelMode::Scalar, &q, &x);
-        let got = sq_dists(mode, &q, &x);
+        let reference = sq_dists(KernelMode::Scalar, q.view(), x.view());
+        let got = sq_dists(mode, q.view(), x.view());
         for qi in 0..7 {
             for xi in 0..33 {
                 let (a, b) = (got.get(qi, xi), reference.get(qi, xi));
@@ -732,7 +759,7 @@ mod tests {
         // qn + qn − 2·qn cancels exactly.
         let mode = select(None);
         let q = rand_matrix(9, 21, 3);
-        let d = sq_dists(mode, &q, &q);
+        let d = sq_dists(mode, q.view(), q.view());
         for qi in 0..9 {
             assert_eq!(d.get(qi, qi), 0.0, "self distance row {qi}");
         }
@@ -745,9 +772,9 @@ mod tests {
         let mode = select(None);
         let q = rand_matrix(6, 13, 4);
         let x = rand_matrix(29, 13, 5);
-        let d = sq_dists(mode, &q, &x);
+        let d = sq_dists(mode, q.view(), x.view());
         let mut topk = Vec::new();
-        knn_topk_into(mode, &q, &x, 4, &mut topk);
+        knn_topk_into(mode, q.view(), x.view(), 4, &mut topk);
         for (qi, cands) in topk.iter().enumerate() {
             assert_eq!(cands.len(), 4);
             for &(dist, id) in cands {
@@ -775,8 +802,8 @@ mod tests {
         };
         let (ca, ma) = mk(5, 37, 6);
         let (cu, mu) = mk(11, 37, 7);
-        let reference = cf_weights(KernelMode::Scalar, &ca, &ma, &cu, &mu);
-        let got = cf_weights(mode, &ca, &ma, &cu, &mu);
+        let reference = cf_weights(KernelMode::Scalar, ca.view(), ma.view(), cu.view(), mu.view());
+        let got = cf_weights(mode, ca.view(), ma.view(), cu.view(), mu.view());
         for i in 0..5 {
             for j in 0..11 {
                 let (a, b) = (got.get(i, j), reference.get(i, j));

@@ -270,8 +270,32 @@ impl ScoreBackend for ParallelBackend {
             return self.inner.knn_dists(q, x);
         }
         let bounds = tile_bounds(x.rows(), tiles);
-        let parts = self.run_split(&bounds, |a, b| self.inner.knn_dists(q, &x.row_range(a, b)))?;
+        // Tiles go through the slice entry point: kernel-backed inner
+        // backends score the borrowed range without the per-tile row
+        // copy this layer used to pay.
+        let parts = self.run_split(&bounds, |a, b| self.inner.knn_dists_rows(q, x, a, b))?;
         let mut out = Matrix::zeros(q.rows(), x.rows());
+        for (&(a, b), part) in bounds.iter().zip(&parts) {
+            for r in 0..q.rows() {
+                out.row_mut(r)[a..b].copy_from_slice(part.row(r));
+            }
+        }
+        Ok(out)
+    }
+
+    fn knn_dists_rows(&self, q: &Matrix, x: &Matrix, x0: usize, x1: usize) -> Result<Matrix> {
+        let range_ok = x0 <= x1 && x1 <= x.rows();
+        let rows = if range_ok { x1 - x0 } else { 0 };
+        let tiles = self.planned_tiles(rows, x.cols());
+        if tiles <= 1 || !range_ok || q.rows() == 0 || q.cols() != x.cols() {
+            return self.inner.knn_dists_rows(q, x, x0, x1);
+        }
+        // Sub-tile the requested range: each tile is itself a
+        // contiguous slice of x, so no copies appear at any depth.
+        let bounds = tile_bounds(rows, tiles);
+        let parts =
+            self.run_split(&bounds, |a, b| self.inner.knn_dists_rows(q, x, x0 + a, x0 + b))?;
+        let mut out = Matrix::zeros(q.rows(), rows);
         for (&(a, b), part) in bounds.iter().zip(&parts) {
             for r in 0..q.rows() {
                 out.row_mut(r)[a..b].copy_from_slice(part.row(r));
@@ -295,11 +319,42 @@ impl ScoreBackend for ParallelBackend {
             return self.inner.cf_weights(ca, ma, cu, mu);
         }
         let bounds = tile_bounds(cu.rows(), tiles);
-        let parts = self.run_split(&bounds, |a, b| {
-            self.inner
-                .cf_weights(ca, ma, &cu.row_range(a, b), &mu.row_range(a, b))
-        })?;
+        let parts =
+            self.run_split(&bounds, |a, b| self.inner.cf_weights_rows(ca, ma, cu, mu, a, b))?;
         let mut out = Matrix::zeros(ca.rows(), cu.rows());
+        for (&(a, b), part) in bounds.iter().zip(&parts) {
+            for r in 0..ca.rows() {
+                out.row_mut(r)[a..b].copy_from_slice(part.row(r));
+            }
+        }
+        Ok(out)
+    }
+
+    fn cf_weights_rows(
+        &self,
+        ca: &Matrix,
+        ma: &Matrix,
+        cu: &Matrix,
+        mu: &Matrix,
+        u0: usize,
+        u1: usize,
+    ) -> Result<Matrix> {
+        let range_ok = u0 <= u1 && u1 <= cu.rows() && u1 <= mu.rows();
+        let rows = if range_ok { u1 - u0 } else { 0 };
+        let tiles = self.planned_tiles(rows, cu.cols());
+        let shapes_ok = ca.rows() == ma.rows()
+            && ca.cols() == ma.cols()
+            && cu.rows() == mu.rows()
+            && cu.cols() == mu.cols()
+            && ca.cols() == cu.cols();
+        if tiles <= 1 || !range_ok || !shapes_ok || ca.rows() == 0 {
+            return self.inner.cf_weights_rows(ca, ma, cu, mu, u0, u1);
+        }
+        let bounds = tile_bounds(rows, tiles);
+        let parts = self.run_split(&bounds, |a, b| {
+            self.inner.cf_weights_rows(ca, ma, cu, mu, u0 + a, u0 + b)
+        })?;
+        let mut out = Matrix::zeros(ca.rows(), rows);
         for (&(a, b), part) in bounds.iter().zip(&parts) {
             for r in 0..ca.rows() {
                 out.row_mut(r)[a..b].copy_from_slice(part.row(r));
@@ -407,6 +462,33 @@ mod tests {
             let par = forced(tiles, 2).knn_block_topk(&q, &x, 4).unwrap();
             assert_eq!(par, serial, "tiles={tiles}");
         }
+    }
+
+    #[test]
+    fn forced_split_row_slices_bit_identical_to_serial() {
+        let mut rng = Rng::new(13);
+        let q = rand_matrix(&mut rng, 5, 12);
+        let x = rand_matrix(&mut rng, 61, 12);
+        for (x0, x1) in [(0usize, 61usize), (9, 48), (20, 20), (60, 61)] {
+            let serial = NativeBackend.knn_dists_rows(&q, &x, x0, x1).unwrap();
+            for tiles in [2, 5, 41] {
+                let par = forced(tiles, 3).knn_dists_rows(&q, &x, x0, x1).unwrap();
+                assert_eq!(par, serial, "range {x0}..{x1} tiles={tiles}");
+            }
+        }
+        let ca = rand_matrix(&mut rng, 3, 15);
+        let ma = rand_matrix(&mut rng, 3, 15);
+        let cu = rand_matrix(&mut rng, 44, 15);
+        let mu = rand_matrix(&mut rng, 44, 15);
+        for (u0, u1) in [(0usize, 44usize), (6, 39)] {
+            let serial = NativeBackend.cf_weights_rows(&ca, &ma, &cu, &mu, u0, u1).unwrap();
+            for tiles in [2, 7] {
+                let par = forced(tiles, 2).cf_weights_rows(&ca, &ma, &cu, &mu, u0, u1).unwrap();
+                assert_eq!(par, serial, "range {u0}..{u1} tiles={tiles}");
+            }
+        }
+        // Bad ranges delegate so the error is the inner backend's.
+        assert!(forced(4, 2).knn_dists_rows(&q, &x, 50, 10).is_err());
     }
 
     #[test]
