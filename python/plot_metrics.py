@@ -1,0 +1,221 @@
+"""Render a daemon metrics snapshot as latency-histogram + stage-time SVG.
+
+Input is the JSON snapshot the observability registry exposes: either a
+raw `{"type":"metrics", ...}` reply line saved from the daemon, the
+object embedded under `"metrics"` in a `stats` reply, or the bare
+snapshot (`accurateml::obs::snapshot_json()` shape — `counters`,
+`gauges`, `histograms`, `flight_recorder`). Output is one SVG with a
+log-x latency histogram panel per selected histogram plus a horizontal
+stage-time breakdown (mean seconds per recorded stage).
+
+Stdlib only — the SVG is assembled by hand so the script runs in the
+bare CI image (no matplotlib).
+
+Usage:
+    python3 python/plot_metrics.py [--json reports/metrics.json]
+                                   [--out reports/metrics.svg]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+PANEL_W = 320
+PANEL_H = 220
+MARGIN = 52
+GAP = 40
+BAR_COLOR = "#1f77b4"
+STAGE_COLOR = "#d62728"
+
+# Histograms drawn as bucket bar charts, in panel order.
+LATENCY_HISTS = [
+    ("aml_serve_initial_seconds", "initial-response latency"),
+    ("aml_serve_total_seconds", "total latency"),
+]
+
+# Stage histograms folded into the mean-seconds breakdown, in pipeline
+# order (daemon edges first, then the executor's batch stages).
+STAGES = [
+    ("aml_admission_wait_seconds", "admission wait"),
+    ("aml_cache_probe_seconds", "cache probe"),
+    ("aml_batcher_wait_seconds", "batcher wait"),
+    ("aml_stage1_seconds", "stage 1"),
+    ("aml_merge_seconds", "merge"),
+    ("aml_refine_plan_seconds", "refine plan"),
+    ("aml_stage2_seconds", "stage 2"),
+    ("aml_scatter_seconds", "scatter"),
+    ("aml_socket_write_seconds", "socket write"),
+]
+
+
+def load_snapshot(path):
+    """Return the snapshot object holding the `histograms` map."""
+    with open(path) as fh:
+        doc = json.load(fh)
+    if "histograms" in doc:
+        return doc
+    if isinstance(doc.get("metrics"), dict) and "histograms" in doc["metrics"]:
+        return doc["metrics"]
+    raise ValueError(f"{path} holds no metrics snapshot (no 'histograms' key)")
+
+
+def fmt(v):
+    a = abs(v)
+    if a != 0 and (a < 1e-3 or a >= 1e4):
+        return f"{v:.1e}"
+    return f"{v:.4g}"
+
+
+def hist_panel(x0, y0, title, hist):
+    """One log-x latency histogram panel: bucket counts as bars."""
+    buckets = hist.get("buckets", [])
+    out = [
+        f'<rect x="{x0}" y="{y0}" width="{PANEL_W}" height="{PANEL_H}" '
+        'fill="none" stroke="#444"/>',
+        f'<text x="{x0 + PANEL_W / 2}" y="{y0 - 10}" text-anchor="middle" '
+        f'font-size="14" font-weight="bold">{title}</text>',
+    ]
+    if not buckets:
+        out.append(
+            f'<text x="{x0 + PANEL_W / 2}" y="{y0 + PANEL_H / 2}" '
+            'text-anchor="middle" font-size="11" fill="#666">no samples</text>'
+        )
+        return out
+    xs = [math.log10(b["le_s"]) for b in buckets]
+    ns = [b["n"] for b in buckets]
+    xlo, xhi = min(xs), max(xs)
+    if xhi <= xlo:
+        xlo, xhi = xlo - 0.5, xhi + 0.5
+    nhi = max(ns)
+    bw = PANEL_W / (len(buckets) + 1)
+
+    def sx(v):
+        return x0 + (v - xlo) / (xhi - xlo) * (PANEL_W - bw)
+
+    for lx, n in zip(xs, ns):
+        h = n / nhi * (PANEL_H - 12)
+        out.append(
+            f'<rect x="{sx(lx):.1f}" y="{y0 + PANEL_H - h:.1f}" '
+            f'width="{bw * 0.85:.1f}" height="{h:.1f}" fill="{BAR_COLOR}">'
+            f"<title>le {fmt(10 ** lx)}s: {n}</title></rect>"
+        )
+    for lx in (xlo, (xlo + xhi) / 2, xhi):
+        out.append(
+            f'<line x1="{sx(lx):.1f}" y1="{y0 + PANEL_H}" x2="{sx(lx):.1f}" '
+            f'y2="{y0 + PANEL_H + 4}" stroke="#444"/>'
+            f'<text x="{sx(lx):.1f}" y="{y0 + PANEL_H + 16}" '
+            f'text-anchor="middle" font-size="9">{fmt(10 ** lx)}</text>'
+        )
+    out.append(
+        f'<text x="{x0 + PANEL_W / 2}" y="{y0 + PANEL_H + 32}" '
+        'text-anchor="middle" font-size="10">bucket bound (s, log scale)</text>'
+    )
+    label = (
+        f"n={hist.get('count', 0)}  p50={fmt(hist.get('p50_s', 0))}s  "
+        f"p99={fmt(hist.get('p99_s', 0))}s"
+    )
+    out.append(
+        f'<text x="{x0 + 6}" y="{y0 + 14}" font-size="9" fill="#333">{label}</text>'
+    )
+    return out
+
+
+def stage_panel(x0, y0, stages):
+    """Horizontal mean-seconds bars, one per recorded stage."""
+    out = [
+        f'<rect x="{x0}" y="{y0}" width="{PANEL_W}" height="{PANEL_H}" '
+        'fill="none" stroke="#444"/>',
+        f'<text x="{x0 + PANEL_W / 2}" y="{y0 - 10}" text-anchor="middle" '
+        'font-size="14" font-weight="bold">stage-time breakdown</text>',
+    ]
+    if not stages:
+        out.append(
+            f'<text x="{x0 + PANEL_W / 2}" y="{y0 + PANEL_H / 2}" '
+            'text-anchor="middle" font-size="11" fill="#666">no samples</text>'
+        )
+        return out
+    vhi = max(mean for _, mean, _ in stages)
+    row_h = PANEL_H / len(stages)
+    label_w = 92
+    for i, (label, mean, count) in enumerate(stages):
+        yy = y0 + i * row_h
+        w = mean / vhi * (PANEL_W - label_w - 10)
+        out.append(
+            f'<text x="{x0 + label_w - 4}" y="{yy + row_h / 2 + 3}" '
+            f'text-anchor="end" font-size="9">{label}</text>'
+            f'<rect x="{x0 + label_w}" y="{yy + row_h * 0.2:.1f}" '
+            f'width="{w:.1f}" height="{row_h * 0.6:.1f}" fill="{STAGE_COLOR}">'
+            f"<title>{label}: mean {fmt(mean)}s over {count}</title></rect>"
+            f'<text x="{x0 + label_w + w + 4:.1f}" y="{yy + row_h / 2 + 3}" '
+            f'font-size="8" fill="#333">{fmt(mean * 1e3)}ms</text>'
+        )
+    return out
+
+
+def render(snap):
+    hists = snap.get("histograms", {})
+    panels = []
+    for name, title in LATENCY_HISTS:
+        panels.append(("hist", title, hists.get(name, {})))
+    stages = []
+    for name, label in STAGES:
+        h = hists.get(name, {})
+        count = h.get("count", 0)
+        if count > 0:
+            stages.append((label, h.get("sum_s", 0.0) / count, count))
+    panels.append(("stages", None, stages))
+
+    width = MARGIN * 2 + len(panels) * PANEL_W + (len(panels) - 1) * GAP
+    height = MARGIN * 2 + PANEL_H + 40
+    body = [
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{width}" '
+        f'height="{height}" font-family="sans-serif">',
+        f'<rect width="{width}" height="{height}" fill="white"/>',
+    ]
+    for i, (kind, title, payload) in enumerate(panels):
+        x0 = MARGIN + i * (PANEL_W + GAP)
+        if kind == "hist":
+            body.extend(hist_panel(x0, MARGIN, title, payload))
+        else:
+            body.extend(stage_panel(x0, MARGIN, payload))
+    flights = snap.get("flight_recorder", [])
+    if flights:
+        slowest = max(f.get("total_ms", 0.0) for f in flights)
+        body.append(
+            f'<text x="{MARGIN}" y="{height - 8}" font-size="9" fill="#666">'
+            f"flight recorder: {len(flights)} slow quer(ies), "
+            f"slowest {fmt(slowest)}ms</text>"
+        )
+    body.append("</svg>")
+    return "\n".join(body)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", default="reports/metrics.json")
+    ap.add_argument("--out", default="reports/metrics.svg")
+    args = ap.parse_args(argv)
+    try:
+        snap = load_snapshot(args.json)
+    except FileNotFoundError:
+        sys.exit(
+            f"{args.json} not found — save a daemon `metrics` reply "
+            "(or a `stats` reply) there first"
+        )
+    except ValueError as e:
+        sys.exit(str(e))
+    svg = render(snap)
+    with open(args.out, "w") as fh:
+        fh.write(svg)
+    n_hists = sum(
+        1 for name, _ in LATENCY_HISTS
+        if snap.get("histograms", {}).get(name, {}).get("count", 0)
+    )
+    print(f"{args.out}: {n_hists} latency histogram(s) + stage breakdown")
+
+
+if __name__ == "__main__":
+    main()

@@ -47,6 +47,12 @@
 //! `p50_s`/`p99_s` (measured from *scheduled* arrival — queueing under
 //! overload is part of the number) and the shed/cache/swap counters.
 //!
+//! The bench also quantifies the observability stack's own cost: the
+//! batched kNN replay is re-run with metric recording on and off
+//! (`obs::set_enabled`), and the JSON's top-level `obs` entry carries
+//! `p50_on_s` / `p50_off_s` / `obs_overhead_pct` (target < 2% p50
+//! regression; CI greps the key).
+//!
 //! A machine-readable `BENCH_serving.json` is written to the working
 //! directory (path printed at the end; CI uploads it as a workflow
 //! artifact).
@@ -374,6 +380,50 @@ where
     Json::Arr(cells.iter().map(|c| c.to_json()).collect())
 }
 
+/// The observability stack's self-cost: replay the batched kNN config
+/// with recording on and with it off (`obs::set_enabled`, which wins
+/// over `AML_OBS`), interleaved across reps so drift hits both legs
+/// equally, and report the median-of-reps p50 regression percent. The
+/// target is < 2%; CI greps the key and applies a loose sanity bound
+/// (smoke-scale runs are noisy). Recording is left ON afterwards.
+fn measure_obs_overhead(wb: &Workbench, cfg: &ServeConfig, n_queries: usize) -> Json {
+    let shards = wb.knn_shards(10.0, 5).expect("knn shards (obs leg)");
+    let server = ShardedServer::new(shards).expect("server (obs leg)");
+    let reps = if SMOKE { 1 } else { 3 };
+    let mut p50_on: Vec<f64> = Vec::with_capacity(reps);
+    let mut p50_off: Vec<f64> = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        for on in [true, false] {
+            accurateml::obs::set_enabled(on);
+            let queries = query_log::knn_query_log(&wb.knn_data, n_queries, wb.config.seed);
+            let m = measure(&server, &wb.engine, queries, cfg);
+            if on {
+                p50_on.push(m.report.total.p50_s);
+            } else {
+                p50_off.push(m.report.total.p50_s);
+            }
+        }
+    }
+    accurateml::obs::set_enabled(true);
+    let median = |xs: &mut Vec<f64>| {
+        xs.sort_by(|a, b| a.total_cmp(b));
+        xs[xs.len() / 2]
+    };
+    let on_s = median(&mut p50_on);
+    let off_s = median(&mut p50_off);
+    let overhead_pct = (on_s - off_s) / off_s.max(1e-12) * 100.0;
+    println!(
+        "obs overhead: p50 on {:.4}ms vs off {:.4}ms -> {overhead_pct:+.2}% (target < 2%)",
+        on_s * 1e3,
+        off_s * 1e3
+    );
+    Json::obj(vec![
+        ("p50_on_s", on_s.into()),
+        ("p50_off_s", off_s.into()),
+        ("obs_overhead_pct", overhead_pct.into()),
+    ])
+}
+
 #[allow(clippy::too_many_arguments)]
 fn bench_app<F: FnMut(&ServeConfig) -> Measured>(
     t: &mut Table,
@@ -615,6 +665,8 @@ kmeans negative squared representative distance)"
     );
     common::emit("per_class", &pc);
 
+    let obs = measure_obs_overhead(&wb, &cfgs.batched, n_queries);
+
     let doc = Json::obj(vec![
         ("schema", "bench_serving_v1".into()),
         ("scale", format!("{scale:?}").as_str().into()),
@@ -624,6 +676,7 @@ kmeans negative squared representative distance)"
         ("cache_capacity", cache_capacity.into()),
         ("refresh_every", refresh_cfg.refresh.every.into()),
         ("delta_frac", delta_frac.into()),
+        ("obs", obs),
         ("apps", Json::Arr(apps_json)),
     ]);
     let path = std::path::Path::new("BENCH_serving.json");

@@ -30,6 +30,11 @@
 //! * [`serve`] — the sharded anytime serving subsystem: request
 //!   batcher, deadline-aware executor over the worker pool, and
 //!   latency/accuracy reporting.
+//! * [`obs`] — zero-dependency observability: process-global sharded
+//!   metrics registry (counters/gauges/log-bucketed histograms), span
+//!   stage timing with trace-level `key=value` lines, and a bounded
+//!   slow-query flight recorder; scraped via the daemon's `metrics`
+//!   request or `--metrics-text`.
 //! * [`refresh`] — live model refresh: epoch-versioned shard registry,
 //!   delta ingestion log, and background rebuilds with atomic hot-swap
 //!   (aggregation is associative, so a refresh is base ⊕ delta, not a
@@ -51,6 +56,7 @@ pub mod error;
 pub mod lsh;
 pub mod mapreduce;
 pub mod model;
+pub mod obs;
 pub mod refresh;
 pub mod runtime;
 pub mod serve;

@@ -270,6 +270,10 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
             "delta-frac",
             "0.2",
             "fraction of the training data held back as the live-ingestion reserve (with --refresh-every)",
+        )
+        .flag(
+            "metrics-text",
+            "print a Prometheus-style text dump of the metrics registry on exit",
         ),
     );
     let args = cmd.parse(argv)?;
@@ -303,9 +307,14 @@ fn cmd_serve(argv: &[String]) -> accurateml::Result<()> {
     let ratio = args.get_f64("ratio")?;
     let k = args.get_usize("k")?;
     let app = args.get("app").to_string();
+    let metrics_text = args.is_set("metrics-text");
     if args.is_set("daemon") {
         let port = args.get_u64("port")? as u16;
-        return run_daemon_app(&wb, &app, k, ratio, &cfg, args.is_set("stdio"), port);
+        run_daemon_app(&wb, &app, k, ratio, &cfg, args.is_set("stdio"), port)?;
+        if metrics_text {
+            print!("{}", accurateml::obs::prometheus_text());
+        }
+        return Ok(());
     }
     let live = refresh_every > 0;
     let report = match (app.as_str(), live) {
@@ -439,6 +448,9 @@ rebuild (p99 {:.3}ms), reserve {:.0}% ingested every {refresh_every} queries",
         }
         _ => {}
     }
+    if metrics_text {
+        print!("{}", accurateml::obs::prometheus_text());
+    }
     Ok(())
 }
 
@@ -551,7 +563,11 @@ fn cmd_loadgen(argv: &[String]) -> accurateml::Result<()> {
         .opt("eps", "0.05", "refinement threshold")
         .opt("ratio", "10", "compression ratio of the shard models")
         .opt("k", "5", "k for kNN")
-        .opt("out", "", "merge curves into this JSON artifact (e.g. BENCH_serving.json)"),
+        .opt("out", "", "merge curves into this JSON artifact (e.g. BENCH_serving.json)")
+        .flag(
+            "metrics-text",
+            "print a Prometheus-style text dump of the metrics registry on exit",
+        ),
     );
     let args = cmd.parse(argv)?;
     let wb = workbench(&args)?;
@@ -654,6 +670,9 @@ fn cmd_loadgen(argv: &[String]) -> accurateml::Result<()> {
         }
         std::fs::write(path, doc.pretty())?;
         println!("merged load_curves.{app} into {}", path.display());
+    }
+    if args.is_set("metrics-text") {
+        print!("{}", accurateml::obs::prometheus_text());
     }
     Ok(())
 }

@@ -354,6 +354,10 @@ impl CfModel {
         for (b, members) in &grouped.groups {
             let qcb = qc.gather(members.iter().map(|&q| q_cu[q]));
             let qmb = qm.gather(members.iter().map(|&q| q_mu[q]));
+            match self.rescan {
+                RescanPath::Gather => crate::obs::metrics().rescan_gather.inc(),
+                RescanPath::Slice => crate::obs::metrics().rescan_slice.inc(),
+            }
             let block = match self.rescan {
                 RescanPath::Gather => {
                     let index = &self.agg.index[*b];

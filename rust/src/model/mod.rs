@@ -172,6 +172,10 @@ pub(crate) fn score_distance_blocks<'a>(
         // Large bucket-group rescans split across the pool when the
         // backend is a ParallelBackend (scanned rows are the split
         // axis); small groups stay serial under its auto threshold.
+        match path {
+            RescanPath::Gather => crate::obs::metrics().rescan_gather.inc(),
+            RescanPath::Slice => crate::obs::metrics().rescan_slice.inc(),
+        }
         let block = match path {
             RescanPath::Gather => {
                 let xm = xbuf.gather(index[*b].iter().map(|&l| rows.row(layout, l)));

@@ -1,0 +1,264 @@
+//! Zero-dependency observability: a process-global metrics registry,
+//! span-style stage timing, and a slow-query flight recorder.
+//!
+//! Everything the serving stack records funnels through the closed
+//! [`Metrics`] struct returned by [`metrics`] — counters, gauges, and
+//! log-bucketed histograms with lock-free sharded hot paths
+//! ([`registry`]) — plus the process [`FlightRecorder`] ([`recorder`])
+//! keeping the span lists of recent slow queries. Scrapes fold the
+//! shards into [`snapshot_json`] (the daemon's `metrics` wire reply
+//! and embedded `stats` snapshot) or [`prometheus_text`] (the CLI's
+//! `--metrics-text` exposition).
+//!
+//! # Gating
+//!
+//! Recording is ON by default and disabled by `AML_OBS=off|0|false`,
+//! read lazily on the first record. The gate is one relaxed atomic
+//! load on every record path, and recording NEVER touches compute:
+//! with the gate off every record call is a no-op and scoring outputs
+//! are bit-identical (CI pins this by running the kernel-equivalence
+//! contract under `AML_OBS=off`). [`set_enabled`] overrides the env in
+//! process — `benches/serving.rs` uses it to measure its own obs-on vs
+//! obs-off overhead (`obs_overhead_pct` in `BENCH_serving.json`).
+//!
+//! `AML_OBS_SLOW_MS` (default 100) sets the flight-recorder admission
+//! threshold; `AML_LOG=trace` additionally emits one structured
+//! `key=value` log line per span segment.
+
+pub mod recorder;
+pub mod registry;
+pub mod span;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+pub use recorder::{FlightRecorder, QueryRecord};
+pub use registry::{Counter, Gauge, Histogram, HistogramSnapshot, Metrics};
+pub use span::{Span, SpanList};
+
+use crate::util::json::Json;
+
+/// Ring capacity of the process flight recorder.
+pub const FLIGHT_CAP: usize = 32;
+
+/// Recording gate: 0 = uninitialized (read `AML_OBS` lazily),
+/// 1 = on, 2 = off.
+static ENABLED: AtomicU8 = AtomicU8::new(0);
+
+/// Whether recording is on (one relaxed load on the hot path; the env
+/// is consulted once, on the first call).
+pub fn enabled() -> bool {
+    match ENABLED.load(Ordering::Relaxed) {
+        1 => true,
+        2 => false,
+        _ => {
+            let on = match std::env::var("AML_OBS") {
+                Ok(v) => {
+                    let v = v.trim().to_ascii_lowercase();
+                    !(v == "off" || v == "0" || v == "false")
+                }
+                Err(_) => true,
+            };
+            ENABLED.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+            on
+        }
+    }
+}
+
+/// Override the recording gate in process (wins over `AML_OBS`). The
+/// serving bench uses this to time an obs-on and an obs-off leg in one
+/// run; tests use it to make recording deterministic.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(if on { 1 } else { 2 }, Ordering::Relaxed);
+}
+
+/// Serialize tests that flip the process-global gate or assert on
+/// recorded totals — `cargo test` runs tests concurrently in one
+/// process, so an unguarded [`set_enabled`] would race recordings in
+/// sibling tests.
+#[cfg(test)]
+pub(crate) fn test_gate_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+/// The process-global metric set.
+pub fn metrics() -> &'static Metrics {
+    static METRICS: OnceLock<Metrics> = OnceLock::new();
+    METRICS.get_or_init(Metrics::new)
+}
+
+/// The process-global flight recorder ([`FLIGHT_CAP`] slots, threshold
+/// from `AML_OBS_SLOW_MS`, default 100ms).
+pub fn recorder() -> &'static FlightRecorder {
+    static REC: OnceLock<FlightRecorder> = OnceLock::new();
+    REC.get_or_init(|| {
+        let threshold_s = std::env::var("AML_OBS_SLOW_MS")
+            .ok()
+            .and_then(|v| v.trim().parse::<f64>().ok())
+            .filter(|ms| ms.is_finite() && *ms >= 0.0)
+            .map(|ms| ms / 1e3)
+            .unwrap_or(0.1);
+        FlightRecorder::new(FLIGHT_CAP, threshold_s)
+    })
+}
+
+/// One histogram's snapshot JSON: count, sum, quantile estimates, and
+/// the non-empty buckets as `(le_s, n)` pairs.
+fn histogram_json(s: &HistogramSnapshot) -> Json {
+    let buckets: Vec<Json> = s
+        .buckets
+        .iter()
+        .enumerate()
+        .filter(|(_, &n)| n > 0)
+        .map(|(i, &n)| {
+            Json::obj(vec![
+                ("le_s", registry::bucket_bound(i).into()),
+                ("n", (n as usize).into()),
+            ])
+        })
+        .collect();
+    let q = |p: f64| s.quantile(p).map(Json::from).unwrap_or(Json::Null);
+    Json::obj(vec![
+        ("count", (s.count() as usize).into()),
+        ("sum_s", s.sum.into()),
+        ("p50_s", q(0.5)),
+        ("p90_s", q(0.9)),
+        ("p99_s", q(0.99)),
+        ("buckets", Json::Arr(buckets)),
+    ])
+}
+
+/// Scrape the whole registry (plus the flight recorder) into the JSON
+/// snapshot served by the daemon's `metrics` request and embedded in
+/// its `stats` reply.
+pub fn snapshot_json() -> Json {
+    let m = metrics();
+    let counters = m
+        .counters()
+        .into_iter()
+        .map(|(name, c)| (name, Json::from(c.value() as usize)))
+        .collect();
+    let gauges = m
+        .gauges()
+        .into_iter()
+        .map(|(name, g)| (name, Json::from(g.value() as f64)))
+        .collect();
+    let histograms = m
+        .histograms()
+        .into_iter()
+        .map(|(name, h)| (name, histogram_json(&h.snapshot())))
+        .collect();
+    Json::obj(vec![
+        ("enabled", enabled().into()),
+        ("counters", Json::obj(counters)),
+        ("gauges", Json::obj(gauges)),
+        ("histograms", Json::obj(histograms)),
+        ("flight_recorder", recorder().to_json()),
+    ])
+}
+
+/// Scrape the registry into Prometheus-style text exposition (the
+/// CLI's `--metrics-text` mode). Histogram buckets are cumulative
+/// `_bucket{le="..."}` lines, truncated after the last non-empty
+/// bucket with the conventional `+Inf` terminator.
+pub fn prometheus_text() -> String {
+    use std::fmt::Write as _;
+    let m = metrics();
+    let mut out = String::new();
+    for (name, c) in m.counters() {
+        let _ = writeln!(out, "# TYPE {name} counter\n{name} {}", c.value());
+    }
+    for (name, g) in m.gauges() {
+        let _ = writeln!(out, "# TYPE {name} gauge\n{name} {}", g.value());
+    }
+    for (name, h) in m.histograms() {
+        let s = h.snapshot();
+        let _ = writeln!(out, "# TYPE {name} histogram");
+        let last = s.buckets.iter().rposition(|&n| n > 0);
+        let mut cum = 0u64;
+        if let Some(last) = last {
+            for (i, &n) in s.buckets.iter().enumerate().take(last + 1) {
+                cum += n;
+                let _ = writeln!(
+                    out,
+                    "{name}_bucket{{le=\"{bound:.9}\"}} {cum}",
+                    bound = registry::bucket_bound(i)
+                );
+            }
+        }
+        let _ = writeln!(out, "{name}_bucket{{le=\"+Inf\"}} {cum}");
+        let _ = writeln!(out, "{name}_sum {}", s.sum);
+        let _ = writeln!(out, "{name}_count {cum}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gate_override_wins_and_disables_recording() {
+        let _g = test_gate_guard();
+        set_enabled(true);
+        assert!(enabled());
+        let c = Counter::new();
+        c.inc();
+        assert_eq!(c.value(), 1);
+        set_enabled(false);
+        assert!(!enabled());
+        c.inc();
+        assert_eq!(c.value(), 1, "disabled recording is a no-op");
+        let h = Histogram::new();
+        h.observe(0.5);
+        assert_eq!(h.snapshot().count(), 0);
+        let g = Gauge::new();
+        g.set(9);
+        assert_eq!(g.value(), 0);
+        set_enabled(true);
+    }
+
+    #[test]
+    fn snapshot_covers_every_named_metric() {
+        let _g = test_gate_guard();
+        set_enabled(true);
+        metrics().queries.inc();
+        let j = snapshot_json();
+        let m = metrics();
+        for (name, _) in m.counters() {
+            assert!(j.get("counters").unwrap().get(name).is_some(), "{name}");
+        }
+        for (name, _) in m.gauges() {
+            assert!(j.get("gauges").unwrap().get(name).is_some(), "{name}");
+        }
+        for (name, _) in m.histograms() {
+            let h = j.get("histograms").unwrap().get(name).expect(name);
+            assert!(h.get("count").is_some() && h.get("buckets").is_some(), "{name}");
+        }
+        assert!(j.get("flight_recorder").is_some());
+        // The snapshot round-trips through the wire codec.
+        let reparsed = Json::parse(&j.compact()).unwrap();
+        assert_eq!(reparsed, j);
+    }
+
+    #[test]
+    fn prometheus_text_is_well_formed() {
+        let _g = test_gate_guard();
+        set_enabled(true);
+        metrics().queries.inc();
+        metrics().serve_total.observe(0.0123);
+        let text = prometheus_text();
+        assert!(text.contains("# TYPE aml_queries_total counter"));
+        assert!(text.contains("# TYPE aml_queue_depth gauge"));
+        assert!(text.contains("# TYPE aml_serve_total_seconds histogram"));
+        assert!(text.contains("aml_serve_total_seconds_bucket{le=\"+Inf\"}"));
+        assert!(text.contains("aml_serve_total_seconds_sum"));
+        for line in text.lines() {
+            assert!(
+                line.starts_with("# TYPE ") || line.starts_with("aml_"),
+                "unexpected line {line:?}"
+            );
+        }
+    }
+}

@@ -1,0 +1,175 @@
+//! Per-query flight recorder: a bounded ring of the most recent
+//! *slow* queries with their full span lists, so a p99 outlier can be
+//! explained after the fact without having had tracing enabled.
+//!
+//! Admission is by total latency: a query slower than the recorder's
+//! threshold (`AML_OBS_SLOW_MS` for the process-global instance,
+//! default 100ms) is pushed, and once the ring holds its capacity the
+//! oldest record is dropped — bounded memory regardless of traffic.
+//! The ring is a plain mutex: it is touched only for queries that
+//! already took ≥ the threshold, so contention on it is negligible by
+//! construction.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::obs::span::Span;
+use crate::util::json::Json;
+
+/// One recorded slow query: its span id, total latency, and the
+/// measured stage segments.
+#[derive(Clone, Debug)]
+pub struct QueryRecord {
+    /// The dispatch's span id (correlates with trace log lines).
+    pub span_id: u64,
+    /// Admission-to-final-answer latency, seconds.
+    pub total_s: f64,
+    /// Measured stage segments, in pipeline order.
+    pub spans: Vec<Span>,
+}
+
+impl QueryRecord {
+    /// Snapshot JSON shape (milliseconds-denominated, like spans).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("span_id", (self.span_id as usize).into()),
+            ("total_ms", (self.total_s * 1e3).into()),
+            ("spans", Json::Arr(self.spans.iter().map(Span::to_json).collect())),
+        ])
+    }
+}
+
+/// Bounded ring of recent slow-query records (see the module docs).
+pub struct FlightRecorder {
+    cap: usize,
+    threshold_s: f64,
+    ring: Mutex<VecDeque<QueryRecord>>,
+}
+
+impl FlightRecorder {
+    /// Recorder keeping at most `cap` records of queries whose total
+    /// latency reached `threshold_s` (cap 0 disables it).
+    pub fn new(cap: usize, threshold_s: f64) -> FlightRecorder {
+        FlightRecorder {
+            cap,
+            threshold_s,
+            ring: Mutex::new(VecDeque::with_capacity(cap.min(1024))),
+        }
+    }
+
+    /// The admission threshold, seconds.
+    pub fn threshold_s(&self) -> f64 {
+        self.threshold_s
+    }
+
+    /// Ring capacity.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Offer one query record; returns whether it was admitted (fast
+    /// queries and a zero-capacity ring are rejected without locking).
+    pub fn record(&self, rec: QueryRecord) -> bool {
+        if self.cap == 0 || !(rec.total_s >= self.threshold_s) {
+            return false;
+        }
+        let mut ring = self.ring.lock().unwrap();
+        while ring.len() >= self.cap {
+            ring.pop_front();
+        }
+        ring.push_back(rec);
+        true
+    }
+
+    /// Records currently held.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().len()
+    }
+
+    /// No records held.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Copy the current records, oldest first.
+    pub fn snapshot(&self) -> Vec<QueryRecord> {
+        self.ring.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Drop every record (tests and explicit resets).
+    pub fn clear(&self) {
+        self.ring.lock().unwrap().clear();
+    }
+
+    /// JSON array of the current records, oldest first.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.snapshot().iter().map(QueryRecord::to_json).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(id: u64, total_s: f64) -> QueryRecord {
+        QueryRecord {
+            span_id: id,
+            total_s,
+            spans: vec![Span {
+                name: "stage1",
+                start_s: 0.0,
+                dur_s: total_s,
+            }],
+        }
+    }
+
+    #[test]
+    fn fast_queries_are_rejected_slow_ones_kept() {
+        let r = FlightRecorder::new(4, 0.010);
+        assert!(!r.record(rec(1, 0.001)));
+        assert!(r.record(rec(2, 0.010)), "threshold is inclusive");
+        assert!(r.record(rec(3, 0.500)));
+        assert_eq!(r.len(), 2);
+        let snap = r.snapshot();
+        assert_eq!(snap[0].span_id, 2);
+        assert_eq!(snap[1].span_id, 3);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_drops_oldest() {
+        let r = FlightRecorder::new(3, 0.0);
+        for i in 0..10 {
+            assert!(r.record(rec(i, 1.0)));
+            assert!(r.len() <= 3);
+        }
+        let ids: Vec<u64> = r.snapshot().iter().map(|q| q.span_id).collect();
+        assert_eq!(ids, vec![7, 8, 9], "oldest dropped first");
+    }
+
+    #[test]
+    fn zero_capacity_disables_recording() {
+        let r = FlightRecorder::new(0, 0.0);
+        assert!(!r.record(rec(1, 9.0)));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn nan_totals_never_admit() {
+        let r = FlightRecorder::new(2, 0.0);
+        assert!(!r.record(rec(1, f64::NAN)));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn json_shape_carries_spans() {
+        let r = FlightRecorder::new(2, 0.0);
+        r.record(rec(5, 0.25));
+        let j = r.to_json();
+        let arr = j.as_arr().expect("array");
+        assert_eq!(arr.len(), 1);
+        assert!((arr[0].num_of("total_ms").unwrap() - 250.0).abs() < 1e-9);
+        assert_eq!(arr[0].arr_of("spans").unwrap().len(), 1);
+        r.clear();
+        assert!(r.is_empty());
+    }
+}

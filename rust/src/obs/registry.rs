@@ -1,0 +1,671 @@
+//! Metric primitives: sharded counters, gauges, and log-bucketed
+//! histograms, plus the closed [`Metrics`] struct naming every metric
+//! the crate exports.
+//!
+//! # Sharding and the fold contract
+//!
+//! The hot path must never contend: each recording thread is assigned a
+//! home shard once (round-robin over [`N_SHARDS`]), every record is one
+//! relaxed atomic RMW on a cache-line-padded cell of that shard, and a
+//! *scrape* folds the shards — counter folds are sums, histogram folds
+//! are element-wise bucket sums. Folding is associative and
+//! commutative on the u64 bucket/counter cells (exact integer sums), so
+//! any shard order and any snapshot merge tree yields the same
+//! counts — pinned by the merge-associativity test below. Scrapes are
+//! racy-but-monotone: a snapshot taken mid-record may miss in-flight
+//! increments but never invents them.
+//!
+//! # Histogram boundaries
+//!
+//! Buckets are FIXED log-spaced bounds (no adaptive resizing): bucket
+//! `i` covers `(HIST_MIN·√2^(i-1), HIST_MIN·√2^i]` seconds, bucket 0
+//! everything at or below [`HIST_MIN`], the last bucket everything
+//! above. Quantile estimates return the geometric midpoint of the
+//! selected bucket, so any in-range recorded value is estimated within
+//! one bucket's relative error (a factor of `√2^(1/2) ≈ 1.19`) —
+//! deterministic and unit-testable against exact sorts.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, AtomicUsize, Ordering};
+
+use crate::obs::enabled;
+
+/// Per-metric shard count. Eight padded cells keep typical pool sizes
+/// contention-free while a fold stays a trivial 8-way sum.
+pub const N_SHARDS: usize = 8;
+
+/// Histogram bucket count. 64 √2-spaced buckets from [`HIST_MIN`]
+/// cover 1µs .. ~3000s — the whole serving latency range.
+pub const N_BUCKETS: usize = 64;
+
+/// Upper bound of histogram bucket 0, in seconds.
+pub const HIST_MIN: f64 = 1e-6;
+
+/// Geometric bucket growth factor (two buckets per octave).
+pub const GROWTH: f64 = std::f64::consts::SQRT_2;
+
+/// Round-robin source for thread home shards.
+static NEXT_SHARD: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    /// Each recording thread's home shard, assigned on first record so
+    /// concurrent writers usually touch distinct cache lines.
+    static SHARD: usize = NEXT_SHARD.fetch_add(1, Ordering::Relaxed) % N_SHARDS;
+}
+
+fn shard() -> usize {
+    SHARD.with(|s| *s)
+}
+
+/// One atomic cell alone on its cache line (padding defeats false
+/// sharing between shards of the same metric).
+#[repr(align(64))]
+#[derive(Default)]
+struct PaddedCell(AtomicU64);
+
+/// CAS-loop f64 accumulation on an `AtomicU64` bit pattern — the
+/// lock-free way to sum seconds without an atomic float type.
+fn add_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let next = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(seen) => cur = seen,
+        }
+    }
+}
+
+/// Monotone event counter (folded sum over per-thread shards).
+pub struct Counter {
+    shards: [PaddedCell; N_SHARDS],
+}
+
+impl Counter {
+    /// A zeroed counter.
+    pub fn new() -> Counter {
+        Counter {
+            shards: std::array::from_fn(|_| PaddedCell::default()),
+        }
+    }
+
+    /// Add `n` events (no-op while recording is disabled).
+    pub fn add(&self, n: u64) {
+        if enabled() {
+            self.shards[shard()].0.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Count one event.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Folded total.
+    pub fn value(&self) -> u64 {
+        self.shards.iter().map(|c| c.0.load(Ordering::Relaxed)).sum()
+    }
+}
+
+impl Default for Counter {
+    fn default() -> Counter {
+        Counter::new()
+    }
+}
+
+/// Point-in-time level (queue depths, occupancy, generation). One cell:
+/// gauges are written from the structure that owns the level, so the
+/// last writer wins by design.
+pub struct Gauge {
+    cell: AtomicI64,
+}
+
+impl Gauge {
+    /// A zeroed gauge.
+    pub fn new() -> Gauge {
+        Gauge {
+            cell: AtomicI64::new(0),
+        }
+    }
+
+    /// Set the level (no-op while recording is disabled).
+    pub fn set(&self, v: i64) {
+        if enabled() {
+            self.cell.store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Adjust the level by `d`.
+    pub fn add(&self, d: i64) {
+        if enabled() {
+            self.cell.fetch_add(d, Ordering::Relaxed);
+        }
+    }
+
+    /// Current level.
+    pub fn value(&self) -> i64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Gauge {
+    fn default() -> Gauge {
+        Gauge::new()
+    }
+}
+
+/// Bucket index for a value in seconds: 0 at or below [`HIST_MIN`]
+/// (also NaN/negative, defensively), the last bucket for anything
+/// beyond the covered range.
+pub fn bucket_index(v: f64) -> usize {
+    if !(v > HIST_MIN) {
+        return 0;
+    }
+    let i = ((v / HIST_MIN).ln() / GROWTH.ln()).ceil() as usize;
+    i.min(N_BUCKETS - 1)
+}
+
+/// Inclusive upper bound of bucket `i`, in seconds (the last bucket is
+/// effectively unbounded — values beyond it are clamped in).
+pub fn bucket_bound(i: usize) -> f64 {
+    HIST_MIN * GROWTH.powi(i as i32)
+}
+
+/// Geometric midpoint of bucket `i`'s bounds — the histogram's point
+/// estimate for values inside it (within one bucket's relative error,
+/// a factor of `GROWTH^(1/2)`, of any in-range recorded value).
+pub fn bucket_mid(i: usize) -> f64 {
+    let hi = bucket_bound(i);
+    let lo = if i == 0 { hi / GROWTH } else { bucket_bound(i - 1) };
+    (lo * hi).sqrt()
+}
+
+/// One shard of a histogram: per-bucket counts plus an f64 sum of the
+/// recorded seconds (CAS accumulation, see [`add_f64`]).
+struct HistShard {
+    buckets: [AtomicU64; N_BUCKETS],
+    sum_bits: AtomicU64,
+}
+
+impl Default for HistShard {
+    fn default() -> HistShard {
+        HistShard {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_bits: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Log-bucketed latency histogram (seconds). Lock-free recording into
+/// the caller's home shard; [`Histogram::snapshot`] folds the shards.
+pub struct Histogram {
+    shards: [HistShard; N_SHARDS],
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub fn new() -> Histogram {
+        Histogram {
+            shards: std::array::from_fn(|_| HistShard::default()),
+        }
+    }
+
+    /// Record one value in seconds (no-op while recording is disabled;
+    /// non-finite values are dropped, negatives clamp to bucket 0).
+    pub fn observe(&self, v_s: f64) {
+        if !enabled() || !v_s.is_finite() {
+            return;
+        }
+        let sh = &self.shards[shard()];
+        sh.buckets[bucket_index(v_s)].fetch_add(1, Ordering::Relaxed);
+        add_f64(&sh.sum_bits, v_s.max(0.0));
+    }
+
+    /// Fold the shards into an owned snapshot. Concurrent records may
+    /// land between bucket reads — the snapshot is a consistent lower
+    /// bound per bucket, never an overcount.
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut buckets = vec![0u64; N_BUCKETS];
+        let mut sum = 0.0;
+        for sh in &self.shards {
+            for (b, cell) in buckets.iter_mut().zip(&sh.buckets) {
+                *b += cell.load(Ordering::Relaxed);
+            }
+            sum += f64::from_bits(sh.sum_bits.load(Ordering::Relaxed));
+        }
+        HistogramSnapshot { buckets, sum }
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+/// A folded histogram: plain counts, mergeable and serializable.
+#[derive(Clone, Debug, PartialEq)]
+pub struct HistogramSnapshot {
+    /// Per-bucket counts (length [`N_BUCKETS`]).
+    pub buckets: Vec<u64>,
+    /// Sum of recorded seconds.
+    pub sum: f64,
+}
+
+impl HistogramSnapshot {
+    /// An empty snapshot (the merge identity).
+    pub fn empty() -> HistogramSnapshot {
+        HistogramSnapshot {
+            buckets: vec![0; N_BUCKETS],
+            sum: 0.0,
+        }
+    }
+
+    /// Total recorded values.
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Fold another snapshot in (element-wise bucket sums — exact on
+    /// the u64 cells, so merging is associative and commutative).
+    pub fn merge(&mut self, other: &HistogramSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.sum += other.sum;
+    }
+
+    /// Mean recorded value in seconds (`None` when empty).
+    pub fn mean(&self) -> Option<f64> {
+        let n = self.count();
+        if n == 0 {
+            None
+        } else {
+            Some(self.sum / n as f64)
+        }
+    }
+
+    /// The `q`-quantile estimate in seconds (`None` when empty):
+    /// nearest-rank over the bucket counts, estimating with the
+    /// selected bucket's geometric midpoint.
+    pub fn quantile(&self, q: f64) -> Option<f64> {
+        let total = self.count();
+        if total == 0 {
+            return None;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &n) in self.buckets.iter().enumerate() {
+            seen += n;
+            if seen >= rank {
+                return Some(bucket_mid(i));
+            }
+        }
+        None // unreachable: seen reaches total by construction
+    }
+}
+
+/// Every metric the crate records, as one closed struct: a record site
+/// is a single field access plus one atomic op, and the scrape
+/// enumerates the fields through the name tables below — so a metric
+/// cannot exist without a name, and the exported set is greppable in
+/// one place. Names follow the Prometheus convention
+/// (`aml_<what>_total` counters, `aml_<what>_seconds` histograms).
+pub struct Metrics {
+    /// Queries admitted by the executor (cache hits included).
+    pub queries: Counter,
+    /// Replies written by the daemon (responses, stats, errors, acks).
+    pub replies: Counter,
+    /// Answer-cache lookups that hit.
+    pub cache_hits: Counter,
+    /// Answer-cache lookups that missed.
+    pub cache_misses: Counter,
+    /// Answer-cache entries evicted by capacity.
+    pub cache_evictions: Counter,
+    /// Micro-batches whose refinement was shed under queue pressure.
+    pub shed_batches: Counter,
+    /// Stage-2 bucket-group rescans (one backend call each).
+    pub stage2_bucket_groups: Counter,
+    /// Bucket-group rescans scored via the copying gather path.
+    pub rescan_gather: Counter,
+    /// Bucket-group rescans scored via the zero-copy slice path.
+    pub rescan_slice: Counter,
+    /// Delta records ingested into the delta log.
+    pub ingested_deltas: Counter,
+    /// Background shard rebuilds started.
+    pub rebuilds: Counter,
+    /// Rebuilt shard generations atomically swapped in.
+    pub swaps: Counter,
+    /// Wire lines that failed to parse into a request.
+    pub wire_errors: Counter,
+    /// Tiles fanned out by the intra-block splitter.
+    pub split_tiles: Counter,
+
+    /// Queries admitted but not yet dispatched (daemon).
+    pub queue_depth: Gauge,
+    /// Queries waiting in the micro-batcher.
+    pub batcher_pending: Gauge,
+    /// Tasks waiting on the worker pool's regular lane.
+    pub pool_queue_depth: Gauge,
+    /// Tasks waiting on the worker pool's low-priority lane.
+    pub pool_low_pending: Gauge,
+    /// Workers currently inside low-priority tasks.
+    pub pool_low_running: Gauge,
+    /// Current model registry generation.
+    pub generation: Gauge,
+
+    /// Socket arrival to admission into the serving thread.
+    pub admission_wait: Histogram,
+    /// Answer-cache probe duration.
+    pub cache_probe: Histogram,
+    /// Admission to batch dispatch (batcher residency).
+    pub batcher_wait: Histogram,
+    /// Stage-1 block scoring per (shard, batch) task.
+    pub stage1: Histogram,
+    /// Per-batch initial-answer merge across shards.
+    pub merge: Histogram,
+    /// Budget resolution + shed decision per batch.
+    pub refine_plan: Histogram,
+    /// Stage-2 refine_block per (shard, batch) task.
+    pub stage2: Histogram,
+    /// Per-batch refined-answer merge, cache insert and sink delivery.
+    pub scatter: Histogram,
+    /// One reply line written to a client socket.
+    pub socket_write: Histogram,
+    /// Admission to initial answer, per query.
+    pub serve_initial: Histogram,
+    /// Admission to final answer, per query.
+    pub serve_total: Histogram,
+    /// Delta fold (merge_deltas) per background rebuild.
+    pub rebuild: Histogram,
+    /// Post-fold compaction per background rebuild.
+    pub compact: Histogram,
+    /// Validate + publish (atomic swap) per accepted candidate.
+    pub swap: Histogram,
+}
+
+impl Metrics {
+    /// A zeroed metric set (the process global lives in
+    /// [`crate::obs::metrics`]).
+    pub fn new() -> Metrics {
+        Metrics {
+            queries: Counter::new(),
+            replies: Counter::new(),
+            cache_hits: Counter::new(),
+            cache_misses: Counter::new(),
+            cache_evictions: Counter::new(),
+            shed_batches: Counter::new(),
+            stage2_bucket_groups: Counter::new(),
+            rescan_gather: Counter::new(),
+            rescan_slice: Counter::new(),
+            ingested_deltas: Counter::new(),
+            rebuilds: Counter::new(),
+            swaps: Counter::new(),
+            wire_errors: Counter::new(),
+            split_tiles: Counter::new(),
+            queue_depth: Gauge::new(),
+            batcher_pending: Gauge::new(),
+            pool_queue_depth: Gauge::new(),
+            pool_low_pending: Gauge::new(),
+            pool_low_running: Gauge::new(),
+            generation: Gauge::new(),
+            admission_wait: Histogram::new(),
+            cache_probe: Histogram::new(),
+            batcher_wait: Histogram::new(),
+            stage1: Histogram::new(),
+            merge: Histogram::new(),
+            refine_plan: Histogram::new(),
+            stage2: Histogram::new(),
+            scatter: Histogram::new(),
+            socket_write: Histogram::new(),
+            serve_initial: Histogram::new(),
+            serve_total: Histogram::new(),
+            rebuild: Histogram::new(),
+            compact: Histogram::new(),
+            swap: Histogram::new(),
+        }
+    }
+
+    /// Name table of every counter (the scrape surface — keep in sync
+    /// with the rust/README.md metric table).
+    pub fn counters(&self) -> Vec<(&'static str, &Counter)> {
+        vec![
+            ("aml_queries_total", &self.queries),
+            ("aml_replies_total", &self.replies),
+            ("aml_cache_hits_total", &self.cache_hits),
+            ("aml_cache_misses_total", &self.cache_misses),
+            ("aml_cache_evictions_total", &self.cache_evictions),
+            ("aml_shed_batches_total", &self.shed_batches),
+            ("aml_stage2_bucket_groups_total", &self.stage2_bucket_groups),
+            ("aml_rescan_gather_groups_total", &self.rescan_gather),
+            ("aml_rescan_slice_groups_total", &self.rescan_slice),
+            ("aml_ingested_deltas_total", &self.ingested_deltas),
+            ("aml_rebuilds_total", &self.rebuilds),
+            ("aml_swaps_total", &self.swaps),
+            ("aml_wire_errors_total", &self.wire_errors),
+            ("aml_split_tiles_total", &self.split_tiles),
+        ]
+    }
+
+    /// Name table of every gauge.
+    pub fn gauges(&self) -> Vec<(&'static str, &Gauge)> {
+        vec![
+            ("aml_queue_depth", &self.queue_depth),
+            ("aml_batcher_pending", &self.batcher_pending),
+            ("aml_pool_queue_depth", &self.pool_queue_depth),
+            ("aml_pool_low_pending", &self.pool_low_pending),
+            ("aml_pool_low_running", &self.pool_low_running),
+            ("aml_generation", &self.generation),
+        ]
+    }
+
+    /// Name table of every histogram.
+    pub fn histograms(&self) -> Vec<(&'static str, &Histogram)> {
+        vec![
+            ("aml_admission_wait_seconds", &self.admission_wait),
+            ("aml_cache_probe_seconds", &self.cache_probe),
+            ("aml_batcher_wait_seconds", &self.batcher_wait),
+            ("aml_stage1_seconds", &self.stage1),
+            ("aml_merge_seconds", &self.merge),
+            ("aml_refine_plan_seconds", &self.refine_plan),
+            ("aml_stage2_seconds", &self.stage2),
+            ("aml_scatter_seconds", &self.scatter),
+            ("aml_socket_write_seconds", &self.socket_write),
+            ("aml_serve_initial_seconds", &self.serve_initial),
+            ("aml_serve_total_seconds", &self.serve_total),
+            ("aml_rebuild_seconds", &self.rebuild),
+            ("aml_compact_seconds", &self.compact),
+            ("aml_swap_seconds", &self.swap),
+        ]
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Exact-sort nearest-rank quantile, the reference the histogram
+    /// estimate is checked against.
+    fn exact_quantile(sorted: &[f64], q: f64) -> f64 {
+        let rank = ((q * sorted.len() as f64).ceil() as usize).clamp(1, sorted.len());
+        sorted[rank - 1]
+    }
+
+    fn record_all(h: &Histogram, vs: &[f64]) {
+        for &v in vs {
+            h.observe(v);
+        }
+    }
+
+    /// Seeded value sets spanning the bucket range: uniform-in-log,
+    /// heavy-tailed, and a near-constant cluster.
+    fn distributions(seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        let uniform_log: Vec<f64> =
+            (0..4000).map(|_| 1e-5 * (1000.0f64).powf(rng.f64())).collect();
+        let heavy: Vec<f64> = (0..4000)
+            .map(|_| {
+                let u = rng.f64().max(1e-12);
+                (1e-4 / u.powf(1.5)).min(100.0)
+            })
+            .collect();
+        let cluster: Vec<f64> =
+            (0..1000).map(|_| 3e-3 * (1.0 + 0.01 * rng.normal())).collect();
+        vec![uniform_log, heavy, cluster]
+    }
+
+    #[test]
+    fn quantiles_match_exact_sort_within_one_bucket() {
+        let _g = crate::obs::test_gate_guard();
+        crate::obs::set_enabled(true);
+        for (d, vs) in distributions(42).into_iter().enumerate() {
+            let h = Histogram::new();
+            record_all(&h, &vs);
+            let snap = h.snapshot();
+            assert_eq!(snap.count(), vs.len() as u64, "dist {d}");
+            let mut sorted = vs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            for q in [0.5, 0.9, 0.99] {
+                let exact = exact_quantile(&sorted, q);
+                let est = snap.quantile(q).unwrap();
+                // One bucket's relative error: the estimate is the
+                // geometric midpoint of a √2-wide bucket, and the
+                // nearest-rank value lives in a bucket adjacent to the
+                // estimate's at worst (equal-rank ties on boundaries),
+                // so a full factor of GROWTH bounds the ratio.
+                let ratio = est / exact;
+                assert!(
+                    (1.0 / GROWTH..=GROWTH).contains(&ratio),
+                    "dist {d} q{q}: est {est} vs exact {exact} (ratio {ratio})"
+                );
+            }
+            let mean = snap.mean().unwrap();
+            let exact_mean = vs.iter().sum::<f64>() / vs.len() as f64;
+            assert!((mean - exact_mean).abs() <= 1e-9 * exact_mean.max(1.0), "sum is exact");
+        }
+    }
+
+    #[test]
+    fn shard_folds_merge_associatively() {
+        let _g = crate::obs::test_gate_guard();
+        crate::obs::set_enabled(true);
+        // Three independent histograms stand in for three shards; all
+        // counts are u64 so any merge tree must agree exactly. Values
+        // are powers of two, so even the f64 sums are exact.
+        let parts: Vec<HistogramSnapshot> = (0..3)
+            .map(|i| {
+                let h = Histogram::new();
+                let mut rng = Rng::new(7 + i);
+                for _ in 0..500 {
+                    let e = (rng.f64() * 20.0) as i32 - 18;
+                    h.observe(2.0f64.powi(e));
+                }
+                h.snapshot()
+            })
+            .collect();
+        let mut left = HistogramSnapshot::empty(); // ((a ⊕ b) ⊕ c)
+        left.merge(&parts[0]);
+        left.merge(&parts[1]);
+        left.merge(&parts[2]);
+        let mut bc = parts[1].clone(); // (a ⊕ (b ⊕ c))
+        bc.merge(&parts[2]);
+        let mut right = parts[0].clone();
+        right.merge(&bc);
+        assert_eq!(left, right);
+        assert_eq!(left.count(), 1500);
+        let mut cab = parts[2].clone(); // commuted order
+        cab.merge(&parts[0]);
+        cab.merge(&parts[1]);
+        assert_eq!(left, cab);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing_across_pool_sizes() {
+        let _g = crate::obs::test_gate_guard();
+        crate::obs::set_enabled(true);
+        for workers in [1usize, 2, 7] {
+            let pool = crate::util::pool::WorkerPool::new(workers);
+            let c = std::sync::Arc::new(Counter::new());
+            let h = std::sync::Arc::new(Histogram::new());
+            let per_task = 1000;
+            let tasks = 16;
+            for t in 0..tasks {
+                let c = std::sync::Arc::clone(&c);
+                let h = std::sync::Arc::clone(&h);
+                pool.submit(move || {
+                    for i in 0..per_task {
+                        c.inc();
+                        h.observe(1e-4 * ((t * per_task + i) % 97 + 1) as f64);
+                    }
+                });
+            }
+            pool.wait_idle();
+            assert_eq!(c.value(), (tasks * per_task) as u64, "workers={workers}");
+            assert_eq!(h.snapshot().count(), (tasks * per_task) as u64, "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn bucket_index_is_monotone_and_clamped() {
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-1.0), 0);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(HIST_MIN), 0);
+        assert_eq!(bucket_index(1e9), N_BUCKETS - 1);
+        let mut prev = 0;
+        for i in 0..200 {
+            let v = 1e-6 * 1.3f64.powi(i);
+            let b = bucket_index(v);
+            assert!(b >= prev, "monotone at {v}");
+            prev = b;
+        }
+        for i in 1..N_BUCKETS {
+            assert!(bucket_bound(i) > bucket_bound(i - 1));
+            let mid = bucket_mid(i);
+            assert!(mid > bucket_bound(i - 1) && mid < bucket_bound(i));
+        }
+    }
+
+    #[test]
+    fn gauges_track_last_write() {
+        let _g = crate::obs::test_gate_guard();
+        crate::obs::set_enabled(true);
+        let g = Gauge::new();
+        g.set(5);
+        g.add(-2);
+        assert_eq!(g.value(), 3);
+        g.set(0);
+        assert_eq!(g.value(), 0);
+    }
+
+    #[test]
+    fn empty_snapshot_yields_no_quantiles() {
+        let s = Histogram::new().snapshot();
+        assert_eq!(s.count(), 0);
+        assert!(s.quantile(0.5).is_none());
+        assert!(s.mean().is_none());
+    }
+
+    #[test]
+    fn metric_name_tables_are_unique_and_prefixed() {
+        let m = Metrics::new();
+        let mut names: Vec<&str> = m
+            .counters()
+            .iter()
+            .map(|(n, _)| *n)
+            .chain(m.gauges().iter().map(|(n, _)| *n))
+            .chain(m.histograms().iter().map(|(n, _)| *n))
+            .collect();
+        assert!(names.iter().all(|n| n.starts_with("aml_")));
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "duplicate metric name");
+    }
+}

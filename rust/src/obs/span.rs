@@ -1,0 +1,148 @@
+//! Span-style stage timing: named, timed segments of one dispatch,
+//! correlated by a process-unique span id.
+//!
+//! The serving hot path is a fixed pipeline, so spans are *measured
+//! segments*, not a dynamic tree: the executor stamps each stage of a
+//! micro-batch (stage-1 block, merge, refine plan, stage-2 rescan,
+//! scatter) against the batch's admission-relative clock, the daemon
+//! adds the per-query edges (admission wait, cache probe, batcher
+//! wait, socket write), and the whole list rides into the
+//! [`crate::obs::recorder::FlightRecorder`] when the query was slow.
+//! Each pushed span also emits a structured `key=value` trace line
+//! (level `trace`, `AML_LOG=trace`) carrying the span id, so live logs
+//! can be grepped per dispatch.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::json::Json;
+
+/// Process-global span id source (ids start at 1; 0 means "no span").
+static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+
+/// A fresh process-unique span id for log correlation.
+pub fn next_span_id() -> u64 {
+    NEXT_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One named, timed segment: `start_s` is the offset from the owning
+/// dispatch's admission, `dur_s` the measured duration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Span {
+    /// Stage name (fixed taxonomy — see the module docs).
+    pub name: &'static str,
+    /// Start offset from the dispatch clock, seconds.
+    pub start_s: f64,
+    /// Measured duration, seconds.
+    pub dur_s: f64,
+}
+
+impl Span {
+    /// Milliseconds-denominated JSON shape for snapshots.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", self.name.into()),
+            ("start_ms", (self.start_s * 1e3).into()),
+            ("dur_ms", (self.dur_s * 1e3).into()),
+        ])
+    }
+}
+
+/// Emit the structured trace line for one span segment.
+pub fn trace_span(span_id: u64, name: &str, start_s: f64, dur_s: f64) {
+    crate::log_trace!(
+        "span={span_id} stage={name} start_us={:.0} dur_us={:.1}",
+        start_s * 1e6,
+        dur_s * 1e6
+    );
+}
+
+/// The measured segments of one dispatch, under one span id. Pushing a
+/// segment also emits its trace line; the collected list feeds the
+/// flight recorder.
+#[derive(Debug)]
+pub struct SpanList {
+    id: u64,
+    spans: Vec<Span>,
+}
+
+impl SpanList {
+    /// An empty list under a fresh span id.
+    pub fn new() -> SpanList {
+        SpanList {
+            id: next_span_id(),
+            spans: Vec::new(),
+        }
+    }
+
+    /// This dispatch's span id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Record one measured segment (and emit its trace line).
+    pub fn push(&mut self, name: &'static str, start_s: f64, dur_s: f64) {
+        trace_span(self.id, name, start_s, dur_s);
+        self.spans.push(Span {
+            name,
+            start_s,
+            dur_s,
+        });
+    }
+
+    /// The segments recorded so far.
+    pub fn spans(&self) -> &[Span] {
+        &self.spans
+    }
+
+    /// Consume into the raw segment list.
+    pub fn into_spans(self) -> Vec<Span> {
+        self.spans
+    }
+}
+
+impl Default for SpanList {
+    fn default() -> SpanList {
+        SpanList::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_ids_are_unique_and_nonzero() {
+        let a = next_span_id();
+        let b = next_span_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn span_list_collects_segments_in_order() {
+        let mut l = SpanList::new();
+        assert!(l.spans().is_empty());
+        l.push("stage1", 0.0, 0.5e-3);
+        l.push("stage2", 0.6e-3, 1.2e-3);
+        let id = l.id();
+        assert_ne!(id, 0);
+        let spans = l.into_spans();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "stage1");
+        assert_eq!(spans[1].name, "stage2");
+        assert!(spans[1].start_s > spans[0].start_s);
+    }
+
+    #[test]
+    fn span_json_uses_milliseconds() {
+        let s = Span {
+            name: "merge",
+            start_s: 0.002,
+            dur_s: 0.001,
+        };
+        let j = s.to_json();
+        assert_eq!(j.str_of("name").unwrap(), "merge");
+        assert!((j.num_of("start_ms").unwrap() - 2.0).abs() < 1e-9);
+        assert!((j.num_of("dur_ms").unwrap() - 1.0).abs() < 1e-9);
+    }
+}

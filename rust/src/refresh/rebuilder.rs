@@ -143,6 +143,8 @@ impl<M: Refreshable> Rebuilder<M> {
             self.busy[s] = true;
             self.in_flight += 1;
             self.stats.rebuilds_started += 1;
+            crate::obs::metrics().rebuilds.inc();
+            crate::obs::metrics().ingested_deltas.add(deltas.len() as u64);
             started += 1;
             // Rebuild folds score one point at a time (1×d absorb
             // routing) — far below ParallelBackend's auto split
@@ -153,7 +155,13 @@ impl<M: Refreshable> Rebuilder<M> {
             // re-permute overgrown tail segments into a fresh base
             // here — off the serving path, on the low lane).
             pool.stream_into_low(&self.tx, s, move || {
-                let candidate = base.merge_deltas(&deltas).and_then(Refreshable::compact);
+                let m = crate::obs::metrics();
+                let t0 = std::time::Instant::now();
+                let merged = base.merge_deltas(&deltas);
+                m.rebuild.observe(t0.elapsed().as_secs_f64());
+                let t1 = std::time::Instant::now();
+                let candidate = merged.and_then(Refreshable::compact);
+                m.compact.observe(t1.elapsed().as_secs_f64());
                 (deltas, candidate)
             });
         }
@@ -191,12 +199,15 @@ impl<M: Refreshable> Rebuilder<M> {
         }
         match payload {
             Ok((deltas, Ok(candidate))) => {
+                let t0 = std::time::Instant::now();
                 let published = candidate
                     .validate()
                     .and_then(|_| self.registry.publish_shard(shard, Arc::new(candidate)));
+                crate::obs::metrics().swap.observe(t0.elapsed().as_secs_f64());
                 match published {
                     Ok(_generation) => {
                         self.stats.swaps += 1;
+                        crate::obs::metrics().swaps.inc();
                         self.stats.deltas_merged += deltas.len();
                         true
                     }

@@ -128,7 +128,7 @@ impl<M: ServableModel> ModelRegistry<M> {
             *cur = Arc::new(ShardSet { generation, shards });
             generation
         };
-        self.after_publish();
+        self.after_publish(generation);
         Ok(generation)
     }
 
@@ -144,12 +144,13 @@ impl<M: ServableModel> ModelRegistry<M> {
             *cur = Arc::new(ShardSet { generation, shards });
             generation
         };
-        self.after_publish();
+        self.after_publish(generation);
         Ok(generation)
     }
 
-    fn after_publish(&self) {
+    fn after_publish(&self, generation: u64) {
         self.swap_count.fetch_add(1, Ordering::SeqCst);
+        crate::obs::metrics().generation.set(generation as i64);
         if let Some(cache) = self.cache.lock().unwrap().as_ref() {
             cache.lock().unwrap().invalidate_all();
         }

@@ -199,6 +199,7 @@ impl ParallelBackend {
         T: Send,
         F: Fn(usize, usize) -> Result<T> + Sync,
     {
+        crate::obs::metrics().split_tiles.add(bounds.len() as u64);
         let slots: Vec<Mutex<Option<Result<T>>>> =
             bounds.iter().map(|_| Mutex::new(None)).collect();
         self.pool.run_tiles(bounds.len(), |t| {

@@ -33,6 +33,7 @@ pub struct AnswerCache<V> {
     tick: u64,
     hits: u64,
     lookups: u64,
+    evictions: u64,
 }
 
 impl<V: Clone> AnswerCache<V> {
@@ -46,6 +47,7 @@ impl<V: Clone> AnswerCache<V> {
             tick: 0,
             hits: 0,
             lookups: 0,
+            evictions: 0,
         }
     }
 
@@ -72,6 +74,12 @@ impl<V: Clone> AnswerCache<V> {
     /// Lookups that hit.
     pub fn hits(&self) -> u64 {
         self.hits
+    }
+
+    /// Entries evicted by capacity pressure (reinsert refreshes and
+    /// [`AnswerCache::invalidate_all`] do not count).
+    pub fn evictions(&self) -> u64 {
+        self.evictions
     }
 
     /// Fraction of lookups that hit (0 when none were made).
@@ -102,10 +110,12 @@ impl<V: Clone> AnswerCache<V> {
         if let Some(slot) = self.map.get_mut(key) {
             slot.stamp = tick;
             self.hits += 1;
+            crate::obs::metrics().cache_hits.inc();
             let value = slot.value.clone();
             self.touch(key.to_vec(), tick);
             return Some(value);
         }
+        crate::obs::metrics().cache_misses.inc();
         None
     }
 
@@ -132,6 +142,8 @@ impl<V: Clone> AnswerCache<V> {
                     // earlier touches are skipped.
                     if self.map.get(&k).is_some_and(|s| s.stamp == stamp) {
                         self.map.remove(&k);
+                        self.evictions += 1;
+                        crate::obs::metrics().cache_evictions.inc();
                     }
                 }
                 None => break,
@@ -183,6 +195,7 @@ mod tests {
         assert!(c.get(&k(2)).is_none(), "LRU entry evicted");
         assert_eq!(c.get(&k(1)), Some(1));
         assert_eq!(c.get(&k(3)), Some(3));
+        assert_eq!(c.evictions(), 1, "capacity eviction is counted");
     }
 
     #[test]

@@ -74,6 +74,8 @@ enum Event<Q, D> {
     Ingest { conn: usize, deltas: Vec<D> },
     /// A `stats` request.
     Stats { conn: usize },
+    /// A `metrics` request (observability registry snapshot).
+    Metrics { conn: usize },
     /// A `shutdown` request; begins the graceful drain.
     Shutdown { conn: usize },
     /// A line that failed to parse or decode; answered with an `error`
@@ -117,6 +119,17 @@ pub struct DaemonReport {
     pub generation: u64,
 }
 
+/// Per-connection accounting surfaced by the `stats` reply.
+#[derive(Clone, Copy, Debug, Default)]
+struct ConnCounters {
+    /// Well-formed queries received on this connection.
+    queries: u64,
+    /// Error replies written to this connection.
+    errors: u64,
+    /// Reply bytes written to this connection (including newlines).
+    bytes: u64,
+}
+
 /// Mutable serving-loop state, bundled so the event handlers can
 /// borrow pieces of it disjointly.
 struct LoopState<M: Refreshable> {
@@ -127,6 +140,7 @@ struct LoopState<M: Refreshable> {
     ingested: usize,
     log: Arc<DeltaLog<M::Delta>>,
     rebuilder: Rebuilder<M>,
+    conns: HashMap<usize, ConnCounters>,
 }
 
 /// The long-running JSONL server over a [`Session`]; see the module
@@ -263,6 +277,7 @@ impl<'a, M: Refreshable, C: WireCodec<M>> Daemon<'a, M, C> {
             ingested: 0,
             rebuilder: Rebuilder::new(Arc::clone(self.session.registry()), Arc::clone(&log)),
             log,
+            conns: HashMap::new(),
         };
         // The idle tick bounds how stale a partial batch or a finished
         // rebuild can get while no events arrive.
@@ -301,7 +316,8 @@ impl<'a, M: Refreshable, C: WireCodec<M>> Daemon<'a, M, C> {
         }
         st.rebuilder.collect_blocking();
         if let Some(conn) = shutdown_from {
-            write_line(writers, conn, &Reply::Shutdown { served: st.served });
+            let n = write_line(writers, conn, &Reply::Shutdown { served: st.served });
+            st.conns.entry(conn).or_default().bytes += n;
         }
         let (hits, lookups) = {
             let c = self.session.cache().lock().unwrap();
@@ -336,6 +352,10 @@ impl<'a, M: Refreshable, C: WireCodec<M>> Daemon<'a, M, C> {
                 queued_at,
             } => {
                 queued.fetch_sub(1, Ordering::SeqCst);
+                let m = crate::obs::metrics();
+                m.queue_depth.set(queued.load(Ordering::SeqCst) as i64);
+                m.admission_wait.observe(queued_at.elapsed_s());
+                st.conns.entry(conn).or_default().queries += 1;
                 let (key, hit) = self
                     .session
                     .server()
@@ -349,11 +369,15 @@ impl<'a, M: Refreshable, C: WireCodec<M>> Daemon<'a, M, C> {
                     for tp in &mut o.trace {
                         tp.wall_s += wait;
                     }
+                    m.queries.inc();
+                    m.serve_initial.observe(o.initial_latency_s);
+                    m.serve_total.observe(o.total_latency_s);
                     push_latency(&mut st.window, o.total_latency_s);
                     st.served += 1;
                     let codec = self.codec.as_ref();
                     let reply = response_reply(id, wait, &o, |r| codec.response_to_json(r));
-                    write_line(writers, conn, &reply);
+                    let n = write_line(writers, conn, &reply);
+                    st.conns.entry(conn).or_default().bytes += n;
                 } else if let Some(batch) = st.batcher.push(PendingReq {
                     conn,
                     id,
@@ -363,6 +387,7 @@ impl<'a, M: Refreshable, C: WireCodec<M>> Daemon<'a, M, C> {
                 }) {
                     self.dispatch(engine, st, batch, queued, writers)?;
                 }
+                m.batcher_pending.set(st.batcher.pending() as i64);
                 Ok(None)
             }
             Event::Ingest { conn, deltas } => {
@@ -374,16 +399,28 @@ impl<'a, M: Refreshable, C: WireCodec<M>> Daemon<'a, M, C> {
                     accepted,
                     generation: self.session.registry().generation(),
                 };
-                write_line(writers, conn, &reply);
+                let n = write_line(writers, conn, &reply);
+                st.conns.entry(conn).or_default().bytes += n;
                 Ok(None)
             }
             Event::Stats { conn } => {
                 let body = self.stats_json(st, queued);
-                write_line(writers, conn, &Reply::Stats { body });
+                let n = write_line(writers, conn, &Reply::Stats { body });
+                st.conns.entry(conn).or_default().bytes += n;
+                Ok(None)
+            }
+            Event::Metrics { conn } => {
+                let body = crate::obs::snapshot_json();
+                let n = write_line(writers, conn, &Reply::Metrics { body });
+                st.conns.entry(conn).or_default().bytes += n;
                 Ok(None)
             }
             Event::BadLine { conn, id, message } => {
-                write_line(writers, conn, &Reply::Error { id, message });
+                crate::obs::metrics().wire_errors.inc();
+                let n = write_line(writers, conn, &Reply::Error { id, message });
+                let c = st.conns.entry(conn).or_default();
+                c.errors += 1;
+                c.bytes += n;
                 Ok(None)
             }
             Event::Gone { conn } => {
@@ -451,13 +488,15 @@ impl<'a, M: Refreshable, C: WireCodec<M>> Daemon<'a, M, C> {
             },
         )?;
         for (conn, reply) in replies {
-            write_line(writers, conn, &reply);
+            let n = write_line(writers, conn, &reply);
+            st.conns.entry(conn).or_default().bytes += n;
         }
         Ok(())
     }
 
     /// The `stats` reply body: counters, live depth, generation, cache
-    /// state, recent latency percentiles, and the active config.
+    /// state, recent latency percentiles, per-connection accounting,
+    /// the live observability registry snapshot, and the active config.
     fn stats_json(&self, st: &LoopState<M>, queued: &Arc<AtomicUsize>) -> Json {
         let (hits, lookups, len) = {
             let c = self.session.cache().lock().unwrap();
@@ -465,6 +504,21 @@ impl<'a, M: Refreshable, C: WireCodec<M>> Daemon<'a, M, C> {
         };
         let mut lat: Vec<f64> = st.window.iter().copied().collect();
         lat.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+        let connections = Json::Obj(
+            st.conns
+                .iter()
+                .map(|(conn, c)| {
+                    (
+                        conn.to_string(),
+                        Json::obj(vec![
+                            ("queries", Json::Num(c.queries as f64)),
+                            ("errors", Json::Num(c.errors as f64)),
+                            ("bytes", Json::Num(c.bytes as f64)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
         Json::obj(vec![
             ("app", self.codec.app().into()),
             ("served", Json::Num(st.served as f64)),
@@ -483,6 +537,8 @@ impl<'a, M: Refreshable, C: WireCodec<M>> Daemon<'a, M, C> {
             ("cache_len", len.into()),
             ("window_p50_ms", (percentile(&lat, 0.50) * 1e3).into()),
             ("window_p99_ms", (percentile(&lat, 0.99) * 1e3).into()),
+            ("connections", connections),
+            ("metrics", crate::obs::snapshot_json()),
             ("config", self.session.config().to_json()),
         ])
     }
@@ -498,13 +554,21 @@ fn push_latency(window: &mut VecDeque<f64>, latency_s: f64) {
 
 /// Write one reply line to a connection (serving thread only). A gone
 /// or broken connection is ignored — the reply has nowhere to go.
-fn write_line(writers: &Writers, conn: usize, reply: &Reply) {
+/// Returns the bytes written (line plus newline; 0 when dropped).
+fn write_line(writers: &Writers, conn: usize, reply: &Reply) -> u64 {
     let writer = writers.lock().unwrap().get(&conn).cloned();
-    if let Some(writer) = writer {
+    let Some(writer) = writer else { return 0 };
+    let line = reply.to_line();
+    let t0 = std::time::Instant::now();
+    {
         let mut w = writer.lock().unwrap();
-        let _ = writeln!(w, "{}", reply.to_line());
+        let _ = writeln!(w, "{line}");
         let _ = w.flush();
     }
+    let m = crate::obs::metrics();
+    m.socket_write.observe(t0.elapsed().as_secs_f64());
+    m.replies.inc();
+    (line.len() + 1) as u64
 }
 
 /// Spawn the dedicated reader thread for one connection. Detached: it
@@ -552,6 +616,7 @@ fn spawn_reader<M: Refreshable, C: WireCodec<M>>(
                     },
                 },
                 Ok(Request::Stats) => Event::Stats { conn },
+                Ok(Request::Metrics) => Event::Metrics { conn },
                 Ok(Request::Shutdown) => {
                     let _ = tx.send(Event::Shutdown { conn });
                     return;

@@ -542,6 +542,7 @@ impl<M: ServableModel> ShardedServer<M> {
         query: &M::Query,
         cache: &SharedAnswerCache<M::Response>,
     ) -> (Option<Vec<u8>>, Option<QueryOutcome<M::Response>>) {
+        let probe_sw = Stopwatch::new();
         let pinned = self.registry.pin();
         let merger = &pinned.shards()[0];
         let key = if cache.lock().unwrap().capacity() > 0 {
@@ -553,6 +554,7 @@ impl<M: ServableModel> ShardedServer<M> {
             Some(k) => cache.lock().unwrap().get(k),
             None => None,
         };
+        crate::obs::metrics().cache_probe.observe(probe_sw.elapsed_s());
         let Some(response) = hit else {
             return (key, None);
         };
@@ -800,6 +802,15 @@ impl<M: ServableModel> ShardedServer<M> {
         }
         let queries = Arc::new(queries);
         let sw = Stopwatch::new();
+        // One span list per micro-batch: the pipeline stages below are
+        // batch-granular, so every query of the batch shares the same
+        // measured segments (its own queue wait is what differs).
+        let metrics = crate::obs::metrics();
+        let mut spans = crate::obs::SpanList::new();
+        metrics.queries.add(tags.len() as u64);
+        for &w in &waits {
+            metrics.batcher_wait.observe(w);
+        }
 
         // Stage 1: every shard answers the whole micro-batch in ONE
         // backend call (`answer_initial_block` assembles the batch
@@ -831,6 +842,9 @@ impl<M: ServableModel> ShardedServer<M> {
             return Err(e);
         }
         self.update_stage1_ewma(shards, &stage1_task_s, queries.len());
+        let stage1_s = sw.elapsed_s();
+        spans.push("stage1", 0.0, stage1_s);
+        metrics.stage1.observe(stage1_s);
 
         // Merge per query: the initial responses, always delivered.
         let merger = &shards[0];
@@ -846,6 +860,8 @@ impl<M: ServableModel> ShardedServer<M> {
         // merge that produces the deliverable answer (queue wait is
         // added per request below).
         let initial_latency_s = sw.elapsed_s();
+        spans.push("merge", stage1_s, initial_latency_s - stage1_s);
+        metrics.merge.observe(initial_latency_s - stage1_s);
 
         // Load shedding: under queue pressure the batch's budget is
         // downgraded to Off — initial answers only — degrading quality
@@ -857,6 +873,7 @@ impl<M: ServableModel> ShardedServer<M> {
         let shed = pending_batches > config.shed_queue_depth && budgets.iter().any(|&b| b > 0);
         if shed {
             counters.shed_batches += 1;
+            metrics.shed_batches.inc();
             budgets.iter_mut().for_each(|b| *b = 0);
         }
         let refined_buckets: usize = budgets
@@ -864,6 +881,9 @@ impl<M: ServableModel> ShardedServer<M> {
             .enumerate()
             .map(|(s, &b)| b.min(shards[s].n_buckets()))
             .sum();
+        let plan_end_s = sw.elapsed_s();
+        spans.push("refine_plan", initial_latency_s, plan_end_s - initial_latency_s);
+        metrics.refine_plan.observe(plan_end_s - initial_latency_s);
 
         // Deadline budgets vary batch to batch with measured load, so
         // whatever quality a loaded batch produced (initial-only or
@@ -876,6 +896,7 @@ impl<M: ServableModel> ShardedServer<M> {
         if budgets.iter().all(|&b| b == 0) {
             // Initial answers are final (and, policy permitting,
             // cacheable as such).
+            let mut totals = Vec::with_capacity(queries.len());
             for (j, initial) in initial_responses.into_iter().enumerate() {
                 let initial_accuracy = merger.accuracy(&queries[j], &initial);
                 if cacheable {
@@ -884,6 +905,9 @@ impl<M: ServableModel> ShardedServer<M> {
                     }
                 }
                 let latency_s = waits[j] + initial_latency_s;
+                metrics.serve_initial.observe(latency_s);
+                metrics.serve_total.observe(latency_s);
+                totals.push(latency_s);
                 sink(
                     tags[j],
                     QueryOutcome {
@@ -906,6 +930,10 @@ impl<M: ServableModel> ShardedServer<M> {
                     },
                 );
             }
+            let end_s = sw.elapsed_s();
+            spans.push("scatter", plan_end_s, end_s - plan_end_s);
+            metrics.scatter.observe(end_s - plan_end_s);
+            record_slow_queries(&spans, &totals);
             return Ok(());
         }
 
@@ -934,13 +962,17 @@ impl<M: ServableModel> ShardedServer<M> {
         let mut failure: Option<Error> = None;
         drain_stream(rx2, "serving stage-2", &mut failure, |s, rb, _| {
             counters.stage2_bucket_groups += rb.bucket_groups;
+            metrics.stage2_bucket_groups.add(rb.bucket_groups as u64);
             refined_per_shard[s] = Some(rb.answers);
         });
         if let Some(e) = failure {
             return Err(e);
         }
         let total_latency_s = sw.elapsed_s();
+        spans.push("stage2", plan_end_s, total_latency_s - plan_end_s);
+        metrics.stage2.observe(total_latency_s - plan_end_s);
 
+        let mut totals = Vec::with_capacity(queries.len());
         for (j, initial) in initial_responses.into_iter().enumerate() {
             let partials: Vec<M::Answer> = refined_per_shard
                 .iter()
@@ -954,6 +986,9 @@ impl<M: ServableModel> ShardedServer<M> {
                     cache.lock().unwrap().insert(key, refined.clone());
                 }
             }
+            metrics.serve_initial.observe(waits[j] + initial_latency_s);
+            metrics.serve_total.observe(waits[j] + total_latency_s);
+            totals.push(waits[j] + total_latency_s);
             sink(
                 tags[j],
                 QueryOutcome {
@@ -984,6 +1019,10 @@ impl<M: ServableModel> ShardedServer<M> {
                 },
             );
         }
+        let end_s = sw.elapsed_s();
+        spans.push("scatter", total_latency_s, end_s - total_latency_s);
+        metrics.scatter.observe(end_s - total_latency_s);
+        record_slow_queries(&spans, &totals);
         Ok(())
     }
 
@@ -1144,6 +1183,31 @@ impl<M: ServableModel> ShardedServer<M> {
                     .collect(),
             ),
             per_class: per_class_reports(pinned.shards()[0].as_ref(), queries, outcomes),
+        }
+    }
+}
+
+/// Offer every slow query of one micro-batch to the process flight
+/// recorder: one record per query whose total latency (queue wait
+/// included) reached the threshold, each carrying the batch's measured
+/// stage segments under the batch's span id. The threshold is checked
+/// here, before cloning the segment list, so fast batches never
+/// allocate.
+fn record_slow_queries(spans: &crate::obs::SpanList, totals: &[f64]) {
+    if !crate::obs::enabled() {
+        return;
+    }
+    let rec = crate::obs::recorder();
+    if rec.capacity() == 0 {
+        return;
+    }
+    for &total_s in totals {
+        if total_s >= rec.threshold_s() {
+            rec.record(crate::obs::QueryRecord {
+                span_id: spans.id(),
+                total_s,
+                spans: spans.spans().to_vec(),
+            });
         }
     }
 }

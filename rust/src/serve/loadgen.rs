@@ -129,8 +129,12 @@ pub struct ScenarioResult {
     pub swaps: usize,
     /// Registry generation when the daemon exited.
     pub generation: u64,
-    /// `error` replies received (should be 0).
+    /// Total error replies plus unparseable lines (should be 0).
     pub errors: usize,
+    /// Well-formed `error` replies from the daemon (wire errors).
+    pub error_wire: usize,
+    /// Reply lines the client could not parse at all.
+    pub error_parse: usize,
 }
 
 impl ScenarioResult {
@@ -149,6 +153,13 @@ impl ScenarioResult {
             ("swaps", self.swaps.into()),
             ("generation", Json::Num(self.generation as f64)),
             ("errors", self.errors.into()),
+            (
+                "error_kinds",
+                Json::obj(vec![
+                    ("wire", self.error_wire.into()),
+                    ("parse", self.error_parse.into()),
+                ]),
+            ),
         ])
     }
 }
@@ -195,7 +206,7 @@ pub fn run_scenario<M: Refreshable, C: WireCodec<M>>(
     let addr = listener.local_addr().map_err(Error::Io)?;
     let events = schedule(spec);
 
-    let client = thread::spawn(move || -> std::io::Result<(Vec<f64>, usize, f64)> {
+    let client = thread::spawn(move || -> std::io::Result<(Vec<f64>, usize, usize, f64)> {
         // The bound listener's backlog holds this connection until the
         // daemon's accept loop starts.
         let stream = TcpStream::connect(addr)?;
@@ -217,7 +228,8 @@ pub fn run_scenario<M: Refreshable, C: WireCodec<M>>(
             let _ = w.flush();
         });
         let mut latencies = Vec::with_capacity(scheduled.len());
-        let mut errors = 0usize;
+        let mut wire_errors = 0usize;
+        let mut parse_errors = 0usize;
         let mut makespan = 0.0f64;
         for line in BufReader::new(stream).lines() {
             let line = line?;
@@ -233,16 +245,17 @@ pub fn run_scenario<M: Refreshable, C: WireCodec<M>>(
                     makespan = makespan.max(epoch.elapsed().as_secs_f64());
                     break;
                 }
-                Ok(Reply::Error { .. }) | Err(_) => errors += 1,
+                Ok(Reply::Error { .. }) => wire_errors += 1,
+                Err(_) => parse_errors += 1,
                 Ok(_) => {}
             }
         }
         let _ = sender.join();
-        Ok((latencies, errors, makespan))
+        Ok((latencies, wire_errors, parse_errors, makespan))
     });
 
     let report = Daemon::new(session, codec).run_listener(engine, listener)?;
-    let (mut latencies, errors, makespan) = client
+    let (mut latencies, error_wire, error_parse, makespan) = client
         .join()
         .map_err(|_| Error::Engine("load-generation client thread panicked".into()))?
         .map_err(Error::Io)?;
@@ -263,7 +276,9 @@ pub fn run_scenario<M: Refreshable, C: WireCodec<M>>(
         cache_lookups: report.cache_lookups,
         swaps: report.swaps,
         generation: report.generation,
-        errors,
+        errors: error_wire + error_parse,
+        error_wire,
+        error_parse,
     })
 }
 
@@ -399,7 +414,9 @@ mod tests {
             cache_lookups: 400,
             swaps: 1,
             generation: 1,
-            errors: 0,
+            errors: 2,
+            error_wire: 1,
+            error_parse: 1,
         };
         let j = r.to_json();
         for key in [
@@ -415,10 +432,14 @@ mod tests {
             "swaps",
             "generation",
             "errors",
+            "error_kinds",
         ] {
             assert!(j.get(key).is_some(), "missing key {key}");
         }
         assert_eq!(j.num_of("p99_s").unwrap(), 0.011);
         assert_eq!(j.str_of("arrival").unwrap(), "poisson");
+        let kinds = j.get("error_kinds").unwrap();
+        assert_eq!(kinds.num_of("wire").unwrap(), 1.0);
+        assert_eq!(kinds.num_of("parse").unwrap(), 1.0);
     }
 }

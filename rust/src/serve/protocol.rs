@@ -3,8 +3,9 @@
 //! One message per line, each line one compact JSON object carrying a
 //! `"type"` tag — hand-rolled over [`crate::util::json::Json`], zero
 //! external dependencies. Client→server messages are [`Request`]s
-//! (`query`, `ingest`, `stats`, `shutdown`); server→client messages are
-//! [`Reply`]s (`response`, `ingested`, `stats`, `shutdown`, `error`).
+//! (`query`, `ingest`, `stats`, `metrics`, `shutdown`); server→client
+//! messages are [`Reply`]s (`response`, `ingested`, `stats`, `metrics`,
+//! `shutdown`, `error`).
 //! Both directions round-trip through [`Request::to_line`] /
 //! [`Request::parse_line`] (and the `Reply` equivalents), which is what
 //! lets the load generator ([`crate::serve::loadgen`]) parse the
@@ -55,6 +56,9 @@ pub enum Request {
     /// Ask for a `stats` reply (counters, queue depth, latency
     /// percentiles, the active [`ServeConfig`](super::ServeConfig)).
     Stats,
+    /// Ask for a `metrics` reply: the live observability registry
+    /// snapshot ([`crate::obs::snapshot_json`]).
+    Metrics,
     /// Drain in-flight queries, ack with a `shutdown` reply, exit.
     Shutdown,
 }
@@ -84,6 +88,7 @@ impl Request {
                 Json::Obj(m).compact()
             }
             Request::Stats => Json::obj(vec![("type", "stats".into())]).compact(),
+            Request::Metrics => Json::obj(vec![("type", "metrics".into())]).compact(),
             Request::Shutdown => Json::obj(vec![("type", "shutdown".into())]).compact(),
         }
     }
@@ -106,6 +111,7 @@ impl Request {
             }
             "ingest" => Ok(Request::Ingest { body: Json::Obj(m) }),
             "stats" => Ok(Request::Stats),
+            "metrics" => Ok(Request::Metrics),
             "shutdown" => Ok(Request::Shutdown),
             other => Err(wire_err(&format!("unknown request type {other:?}"))),
         }
@@ -137,6 +143,9 @@ pub enum Reply {
     Ingested { accepted: usize, generation: u64 },
     /// Counters and config snapshot.
     Stats { body: Json },
+    /// Live observability registry snapshot (counters, gauges,
+    /// histograms, flight recorder — see [`crate::obs::snapshot_json`]).
+    Metrics { body: Json },
     /// Shutdown ack: total queries served over the daemon's life.
     Shutdown { served: u64 },
     /// A rejected line; `id` is present when the offending line was a
@@ -185,6 +194,11 @@ impl Reply {
             Reply::Stats { body } => {
                 let mut m = body_map(body);
                 m.insert("type".to_string(), Json::from("stats"));
+                Json::Obj(m).compact()
+            }
+            Reply::Metrics { body } => {
+                let mut m = body_map(body);
+                m.insert("type".to_string(), Json::from("metrics"));
                 Json::Obj(m).compact()
             }
             Reply::Shutdown { served } => Json::obj(vec![
@@ -241,6 +255,7 @@ impl Reply {
                 })
             }
             "stats" => Ok(Reply::Stats { body: Json::Obj(m) }),
+            "metrics" => Ok(Reply::Metrics { body: Json::Obj(m) }),
             "shutdown" => {
                 let v = Json::Obj(m);
                 Ok(Reply::Shutdown {
@@ -604,6 +619,7 @@ mod tests {
             )]),
         });
         roundtrip_request(Request::Stats);
+        roundtrip_request(Request::Metrics);
         roundtrip_request(Request::Shutdown);
     }
 
@@ -652,6 +668,12 @@ mod tests {
         });
         roundtrip_reply(Reply::Stats {
             body: Json::obj(vec![("queries", 10usize.into()), ("p99_s", 0.004.into())]),
+        });
+        roundtrip_reply(Reply::Metrics {
+            body: Json::obj(vec![(
+                "counters",
+                Json::obj(vec![("aml_queries_total", 3usize.into())]),
+            )]),
         });
         roundtrip_reply(Reply::Shutdown { served: 1234 });
         roundtrip_reply(Reply::Error {

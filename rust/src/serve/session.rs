@@ -15,6 +15,13 @@
 //! Collapsing the six per-app `Workbench::serve_*` entry points into
 //! this one generic surface is what lets the daemon, the CLI, the
 //! benches and the tests share a single code path.
+//!
+//! Every driving mode records into the process-global observability
+//! registry ([`crate::obs`]): the executor stamps per-batch stage
+//! spans and latency histograms on all three paths, and the daemon
+//! additionally exposes the snapshot over the wire (`metrics`
+//! requests, `stats` embedding). `AML_OBS=off` disables recording
+//! without touching any serving output.
 
 use std::sync::{Arc, Mutex};
 

@@ -115,6 +115,19 @@ macro_rules! log_debug {
     };
 }
 
+/// Log at trace level (structured `key=value` span lines — see
+/// [`crate::obs::span`]).
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logger::log(
+            $crate::util::logger::Level::Trace,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

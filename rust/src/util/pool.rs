@@ -182,6 +182,7 @@ impl WorkerPool {
         {
             let mut q = self.shared.queue.lock().unwrap();
             q.tasks.push(Box::new(f));
+            crate::obs::metrics().pool_queue_depth.set(q.tasks.len() as i64);
         }
         self.shared.cv.notify_one();
     }
@@ -195,6 +196,7 @@ impl WorkerPool {
         {
             let mut q = self.shared.queue.lock().unwrap();
             q.low.push(Box::new(f));
+            crate::obs::metrics().pool_low_pending.set(q.low.len() as i64);
         }
         self.shared.cv.notify_one();
     }
@@ -376,11 +378,15 @@ fn worker_loop(sh: Arc<Shared>) {
                 // Regular lane first — low tasks run only on an empty
                 // regular queue, and only while under the lane cap.
                 if let Some(t) = q.tasks.pop() {
+                    crate::obs::metrics().pool_queue_depth.set(q.tasks.len() as i64);
                     break Some((t, false));
                 }
                 if q.low_running < sh.low_cap.load(Ordering::Relaxed) {
                     if let Some(t) = q.low.pop() {
                         q.low_running += 1;
+                        let m = crate::obs::metrics();
+                        m.pool_low_pending.set(q.low.len() as i64);
+                        m.pool_low_running.set(q.low_running as i64);
                         break Some((t, true));
                     }
                 }
@@ -404,6 +410,7 @@ fn worker_loop(sh: Arc<Shared>) {
             let more = {
                 let mut q = sh.queue.lock().unwrap();
                 q.low_running -= 1;
+                crate::obs::metrics().pool_low_running.set(q.low_running as i64);
                 !q.low.is_empty()
             };
             if more {

@@ -60,7 +60,7 @@ fn rand_body(rng: &mut Rng, depth: usize) -> Json {
 fn requests_round_trip_bit_exactly() {
     let mut rng = Rng::new(0xC0DE);
     for case in 0..CASES {
-        let req = match rng.index(4) {
+        let req = match rng.index(5) {
             0 => Request::Query {
                 id: rng.below(1 << 50),
                 body: rand_body(&mut rng, 2),
@@ -69,6 +69,7 @@ fn requests_round_trip_bit_exactly() {
                 body: rand_body(&mut rng, 2),
             },
             2 => Request::Stats,
+            3 => Request::Metrics,
             _ => Request::Shutdown,
         };
         let line = req.to_line();
@@ -85,7 +86,7 @@ fn requests_round_trip_bit_exactly() {
 fn replies_round_trip_bit_exactly() {
     let mut rng = Rng::new(0xFACE);
     for case in 0..CASES {
-        let reply = match rng.index(5) {
+        let reply = match rng.index(6) {
             0 => Reply::Response {
                 id: rng.below(1 << 50),
                 generation: rng.below(1 << 40),
@@ -115,7 +116,10 @@ fn replies_round_trip_bit_exactly() {
             2 => Reply::Stats {
                 body: rand_body(&mut rng, 2),
             },
-            3 => Reply::Shutdown {
+            3 => Reply::Metrics {
+                body: rand_body(&mut rng, 2),
+            },
+            4 => Reply::Shutdown {
                 served: rng.below(1 << 50),
             },
             _ => Reply::Error {
